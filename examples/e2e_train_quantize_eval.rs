@@ -1,0 +1,97 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation):
+//! train the tiny transformer on synthwiki via the AOT `train_step`
+//! artifact, log the loss curve, run few-shot calibration, AllocateBits,
+//! RaBitQ-H at several average bit-widths, evaluate perplexity against the
+//! f32 reference, and cross-check the Rust dequant path against the Pallas
+//! `qmatmul` artifact. Results for the recorded run live in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make e2e      # or ./target/release/examples/e2e_train_quantize_eval
+//! ```
+
+use anyhow::Result;
+use raana::calib::CalibMode;
+use raana::cli::Args;
+use raana::experiments::{raana_quantize, Env};
+use raana::model::artifacts_root;
+use raana::quant::TrickConfig;
+use raana::rabitq::{QuantizedMatrix, ScaleMode};
+use raana::rng::Rng;
+use raana::runtime::{lit_f32, to_vec_f32, Runtime};
+use raana::tensor::Matrix;
+use raana::util::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.opt_or("model", "tiny");
+    let timer = Timer::start();
+
+    // ------------------------------------------------ 1. train (or load)
+    // Env::load trains via the train_step artifact when no checkpoint
+    // exists and logs the loss curve (see EXPERIMENTS.md §E2E).
+    let env = Env::load(model)?;
+    let ppl_fp = env.perplexity(&env.params, &env.wiki, 32)?;
+    println!("[e2e] fp32 reference ppl(synthwiki) = {ppl_fp:.3}");
+
+    // ------------------------------------- 2. quantize at several widths
+    for &target in &[2.1, 3.1, 4.1] {
+        let (qparams, report) = raana_quantize(
+            &env,
+            &CalibMode::FewShot(5),
+            target,
+            &(1..=8).collect::<Vec<u8>>(),
+            &TrickConfig::default(),
+            7,
+            0,
+        )?;
+        let ppl_q = env.perplexity(&qparams, &env.wiki, 32)?;
+        println!(
+            "[e2e] RaanA@{target}: actual {:.3} avg bits, ppl {:.3} \
+             (x{:.3} vs fp32), quant {:.2}s",
+            report.avg_bits,
+            ppl_q,
+            ppl_q / ppl_fp,
+            report.secs.2
+        );
+    }
+
+    // --------------------- 3. cross-check Rust dequant vs Pallas qmatmul
+    // The kernels/qmatmul artifact implements paper Alg. 3 on the L1
+    // Pallas path; the Rust QuantizedMatrix implements it natively. Both
+    // must agree to float tolerance on the same codes.
+    let (n, d, c, bits) = (128usize, 256usize, 256usize, 4u8);
+    let rt = Runtime::cpu()?;
+    let art = rt.load(&artifacts_root().join("kernels").join(format!(
+        "qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt"
+    )))?;
+    let mut rng = Rng::new(3);
+    let v = Matrix::from_vec(d, c, rng.gaussian_vec(d * c));
+    let x = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    // MaxAbs mode matches the Pallas kernel's (search-free) scale choice.
+    let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, 0);
+    let rust_est = qm.matmul_est(&x);
+
+    let codes_f32: Vec<f32> = {
+        // column-major codes -> row-major (d, c) array for the artifact
+        let unpacked = qm.codes.unpack();
+        let mut out = vec![0f32; d * c];
+        for j in 0..c {
+            for i in 0..d {
+                out[i * c + j] = unpacked[j * d + i] as f32;
+            }
+        }
+        out
+    };
+    let outs = art.run(&[
+        lit_f32(&x.data, &[n, d])?,
+        lit_f32(&codes_f32, &[d, c])?,
+        lit_f32(&qm.r, &[c])?,
+    ])?;
+    let pallas_est = Matrix::from_vec(n, c, to_vec_f32(&outs[0])?);
+    let rel = pallas_est.rel_err(&rust_est);
+    println!("[e2e] qmatmul cross-check (Rust vs Pallas artifact): rel err {rel:.2e}");
+    anyhow::ensure!(rel < 1e-4, "qmatmul paths disagree: {rel}");
+
+    println!("[e2e] done in {:.1}s", timer.secs());
+    Ok(())
+}

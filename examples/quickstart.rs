@@ -1,0 +1,54 @@
+//! Quickstart: quantize a trained model with RaanA and measure perplexity.
+//!
+//! ```sh
+//! make artifacts && cargo build --release --offline
+//! ./target/release/examples/quickstart [--model micro] [--avg-bits 3.1]
+//! ```
+//!
+//! Uses (or trains, on first run) the checkpoint under artifacts/<model>/.
+
+use anyhow::Result;
+use raana::calib::CalibMode;
+use raana::cli::Args;
+use raana::experiments::{raana_quantize, Env};
+use raana::quant::TrickConfig;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.opt_or("model", "micro");
+    let avg_bits = args.opt_f64("avg-bits", 3.1)?;
+
+    // 1. environment: AOT artifacts + corpora + trained weights
+    let env = Env::load(model)?;
+    println!(
+        "model '{model}': {} params, {} quantizable linear layers",
+        env.mrt.manifest.total_params(),
+        env.mrt.manifest.linears.len()
+    );
+
+    // 2. the RaanA pipeline (paper Alg. 1): few-shot calibration (5
+    //    sequences), AllocateBits DP, RaBitQ-H per layer
+    let (qparams, report) = raana_quantize(
+        &env,
+        &CalibMode::FewShot(5),
+        avg_bits,
+        &(1..=8).collect::<Vec<u8>>(),
+        &TrickConfig::default(),
+        /*seed=*/ 42,
+        /*threads=*/ 0,
+    )?;
+    println!(
+        "quantized to {:.3} avg bits (calib {:.2}s, alloc {:.3}s, quant {:.2}s)",
+        report.avg_bits, report.secs.0, report.secs.1, report.secs.2
+    );
+    println!(
+        "bit allocation: {:?}",
+        report.layers.iter().map(|l| l.bits).collect::<Vec<_>>()
+    );
+
+    // 3. evaluate both models on the synthwiki test split
+    let ppl_fp = env.perplexity(&env.params, &env.wiki, 16)?;
+    let ppl_q = env.perplexity(&qparams, &env.wiki, 16)?;
+    println!("perplexity: fp32 {ppl_fp:.3} -> RaanA@{avg_bits} {ppl_q:.3}");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Serving example: batched token generation over RaanA-quantized weights.
+//!
+//! Demonstrates the L3 request path (DESIGN.md): a batching server drains a
+//! request queue into fixed-shape `fwd_logits` executions — continuous
+//! batching over the model's context window — and reports latency
+//! percentiles, throughput, and batch occupancy.
+//!
+//! ```sh
+//! ./target/release/examples/serve_quantized [--model micro] [--requests 24]
+//! ```
+
+use anyhow::Result;
+use raana::calib::CalibMode;
+use raana::cli::Args;
+use raana::data::{detokenize, tokenize};
+use raana::experiments::{raana_quantize, Env};
+use raana::model::artifacts_root;
+use raana::quant::TrickConfig;
+use raana::runtime::{ModelRuntime, Runtime};
+use raana::serve::Server;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.opt_or("model", "micro").to_string();
+    let n_req = args.opt_usize("requests", 24)?;
+    let new_tokens = args.opt_usize("tokens", 12)?;
+    let avg_bits = args.opt_f64("avg-bits", 4.1)?;
+
+    let env = Env::load(&model)?;
+    let (qparams, report) = raana_quantize(
+        &env,
+        &CalibMode::FewShot(5),
+        avg_bits,
+        &(1..=8).collect::<Vec<u8>>(),
+        &TrickConfig::default(),
+        11,
+        0,
+    )?;
+    println!(
+        "serving '{model}' quantized to {:.2} avg bits ({} linear layers)",
+        report.avg_bits,
+        report.layers.len()
+    );
+    let batch = env.mrt.manifest.eval_batch;
+    drop(env); // the server thread builds its own (non-Send) runtime
+
+    let m2 = model.clone();
+    let server = Server::start(
+        move || {
+            let rt = Runtime::cpu()?;
+            ModelRuntime::load(&rt, &artifacts_root(), &m2)
+        },
+        qparams,
+    );
+
+    // fan in a burst of prompts from multiple submitter threads
+    let prompts: Vec<String> = (0..n_req)
+        .map(|i| format!("The {i} curious fox leaped over the "))
+        .collect();
+    let mut rxs = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (id, rx) = server.submit(tokenize(p), new_tokens, 0.8, i as u64);
+        rxs.push((id, rx));
+    }
+    for (id, rx) in rxs {
+        let c = rx.recv()?;
+        println!(
+            "  req {id:>3}  {:>6.1} ms  {:?}",
+            c.latency_secs * 1e3,
+            detokenize(&c.tokens)
+        );
+    }
+    let stats = server.shutdown()?;
+    println!(
+        "throughput {:.1} tok/s | occupancy {:.2} | p50 {:.0} ms | p95 {:.0} ms | {} batch steps",
+        stats.throughput_tok_s(),
+        stats.mean_batch_occupancy(batch),
+        stats.p50_latency() * 1e3,
+        stats.p95_latency() * 1e3,
+        stats.batch_steps
+    );
+    Ok(())
+}

@@ -1,0 +1,173 @@
+"""AOT lowering: JAX entry points -> HLO **text** artifacts + manifest.
+
+Run once at build time (`make artifacts`); Python never appears on the Rust
+request path.  HLO text (NOT `lowered.compile()`/`.serialize()`) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly.
+
+Layout:
+    artifacts/<model>/{init_params,train_step,fwd_loss,fwd_logits,
+                       calib_grads,calib_capture}.hlo.txt
+    artifacts/<model>/manifest.json     — shapes/orders the Rust side wires
+    artifacts/kernels/qmatmul_*.hlo.txt — standalone Alg.-3 kernel
+    artifacts/kernels/hadamard_*.hlo.txt
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.hadamard import rht_pallas
+from .kernels.qmatmul import qmatmul_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_model(cfg: M.ModelConfig, outdir: str):
+    print(f"[aot] model '{cfg.name}' -> {outdir}")
+    specs = M.param_specs(cfg)
+    pspecs = [_spec(s) for _, s in specs]
+    tok_train = _spec((cfg.train_batch, cfg.seq_len), jnp.int32)
+    tok_eval = _spec((cfg.eval_batch, cfg.seq_len), jnp.int32)
+    tok_calib = _spec((cfg.calib_batch, cfg.seq_len), jnp.int32)
+
+    # init_params(seed) -> params
+    lowered = jax.jit(lambda seed: tuple(M.init_params(cfg, seed))).lower(
+        _spec((), jnp.int32))
+    _write(f"{outdir}/init_params.hlo.txt", to_hlo_text(lowered))
+
+    # train_step(params.., m.., v.., step, lr, tokens) -> (params.., m.., v.., loss)
+    def _train(*args):
+        n = len(pspecs)
+        p, m, v = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        step, lr, tokens = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        np_, nm, nv, loss = M.train_step(cfg, p, m, v, step, lr, tokens)
+        return np_ + nm + nv + (loss,)
+
+    lowered = jax.jit(_train).lower(
+        *pspecs, *pspecs, *pspecs, _spec((), jnp.int32), _spec(()),
+        tok_train)
+    _write(f"{outdir}/train_step.hlo.txt", to_hlo_text(lowered))
+
+    # fwd_loss(params.., tokens) -> per-token nll (B, S-1)
+    lowered = jax.jit(
+        lambda *a: (M.fwd_loss(cfg, a[:-1], a[-1]),)
+    ).lower(*pspecs, tok_eval)
+    _write(f"{outdir}/fwd_loss.hlo.txt", to_hlo_text(lowered))
+
+    # fwd_logits(params.., tokens) -> last-position logits (B, V)
+    lowered = jax.jit(
+        lambda *a: (M.fwd_logits(cfg, a[:-1], a[-1]),)
+    ).lower(*pspecs, tok_eval)
+    _write(f"{outdir}/fwd_logits.hlo.txt", to_hlo_text(lowered))
+
+    # calib_grads(params.., tokens) -> (gnorms (L,), xnorms (L,))
+    lowered = jax.jit(
+        lambda *a: M.calib_grads(cfg, a[:-1], a[-1])
+    ).lower(*pspecs, tok_calib)
+    _write(f"{outdir}/calib_grads.hlo.txt", to_hlo_text(lowered))
+
+    # calib_capture(params.., tokens) -> per-layer X_k
+    lowered = jax.jit(
+        lambda *a: M.calib_capture(cfg, a[:-1], a[-1])
+    ).lower(*pspecs, tok_calib)
+    _write(f"{outdir}/calib_capture.hlo.txt", to_hlo_text(lowered))
+
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "train_batch": cfg.train_batch, "eval_batch": cfg.eval_batch,
+            "calib_batch": cfg.calib_batch,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        "linears": M.linear_registry(cfg),
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS,
+                 "wd": M.ADAM_WD},
+        "artifacts": {
+            "init_params": {"inputs": ["seed:i32"], "outputs": ["params"]},
+            "train_step": {"inputs": ["params", "m", "v", "step:i32",
+                                      "lr:f32", "tokens:train"],
+                           "outputs": ["params", "m", "v", "loss:f32"]},
+            "fwd_loss": {"inputs": ["params", "tokens:eval"],
+                         "outputs": ["nll:(B,S-1)"]},
+            "fwd_logits": {"inputs": ["params", "tokens:eval"],
+                           "outputs": ["last_logits:(B,V)"]},
+            "calib_grads": {"inputs": ["params", "tokens:calib"],
+                            "outputs": ["gnorms:(L,)", "xnorms:(L,)"]},
+            "calib_capture": {"inputs": ["params", "tokens:calib"],
+                              "outputs": ["x_k per linear"]},
+        },
+    }
+    _write(f"{outdir}/manifest.json", json.dumps(manifest, indent=1))
+
+
+# Kernel artifact shapes: (n, d, c, bits) for qmatmul, (n, d) for hadamard.
+QMATMUL_SHAPES = [
+    (128, 256, 256, 2), (128, 256, 256, 3), (128, 256, 256, 4),
+    (128, 1024, 256, 4), (128, 512, 512, 4),
+]
+HADAMARD_SHAPES = [(128, 256), (128, 512), (128, 1024), (128, 4096)]
+
+
+def lower_kernels(outdir: str):
+    print(f"[aot] kernels -> {outdir}")
+    for n, d, c, bits in QMATMUL_SHAPES:
+        fn = functools.partial(qmatmul_pallas, bits=bits)
+        lowered = jax.jit(lambda x, cd, r: (fn(x, cd, r),)).lower(
+            _spec((n, d)), _spec((d, c)), _spec((c,)))
+        _write(f"{outdir}/qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt",
+               to_hlo_text(lowered))
+    for n, d in HADAMARD_SHAPES:
+        lowered = jax.jit(lambda x, s: (rht_pallas(x, s),)).lower(
+            _spec((n, d)), _spec((d,)))
+        _write(f"{outdir}/hadamard_{n}x{d}.hlo.txt", to_hlo_text(lowered))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output root")
+    ap.add_argument("--models", default="tiny",
+                    help="comma-separated model configs (tiny,small,micro)")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = M.CONFIGS[name]
+        lower_model(cfg, os.path.join(args.out, name))
+    if not args.skip_kernels:
+        lower_kernels(os.path.join(args.out, "kernels"))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: in-VMEM fast Walsh-Hadamard transform (FWHT).
+
+The paper's RaBitQ-H replaces RaBitQ's O(d^2) random rotation with a
+Randomized Hadamard Transform computed by a fast kernel (HadaCore-style on
+GPU).  TPU re-think (DESIGN.md section "Hardware adaptation"): instead of
+staging the butterfly through 48 KiB of shared memory per threadblock, each
+Pallas grid step holds a (block_rows, d) tile in VMEM and runs all log2(d)
+butterfly stages in-register before writing back — for d <= 4096 whole rows
+fit, so there is no inter-block exchange at all.
+
+The stage loop is a Python while (d is static), so the lowered HLO is a
+flat chain of reshape/add/sub — fuses into one elementwise pass per stage.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_rows(y, d):
+    """Apply the unnormalized FWHT butterfly to each row of y (r, d)."""
+    h = 1
+    while h < d:
+        y = y.reshape(-1, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(-1, d)
+        h *= 2
+    return y
+
+
+def _fwht_kernel(x_ref, o_ref, *, d):
+    y = _fwht_rows(x_ref[...], d)
+    o_ref[...] = y * (1.0 / jnp.sqrt(jnp.asarray(d, o_ref.dtype)))
+
+
+def _rht_kernel(x_ref, sign_ref, o_ref, *, d):
+    y = _fwht_rows(x_ref[...] * sign_ref[...], d)
+    o_ref[...] = y * (1.0 / jnp.sqrt(jnp.asarray(d, o_ref.dtype)))
+
+
+def _pick_rows(n_rows, d, budget_floats=1 << 20):
+    """Block row count: fit two (rows, d) tiles in a ~8 MiB VMEM budget."""
+    rows = max(1, budget_floats // (2 * d))
+    b = 1
+    while b * 2 <= min(rows, n_rows) and n_rows % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def fwht_pallas(x):
+    """Normalized FWHT along the last axis of x (..., d); d power of 2."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT needs power-of-2 dim, got {d}"
+    shape = x.shape
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    br = _pick_rows(n, d)
+    out = pl.pallas_call(
+        lambda x_ref, o_ref: _fwht_kernel(x_ref, o_ref, d=d),
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x2)
+    return out.reshape(shape)
+
+
+def rht_pallas(x, sign):
+    """Randomized Hadamard transform FWHT(x * sign) along the last axis.
+
+    sign: (d,) Rademacher +-1 vector (the diagonal D of the paper's Alg. 2).
+    Fused into the same kernel so the sign flip never round-trips to HBM.
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"RHT needs power-of-2 dim, got {d}"
+    assert sign.shape == (d,)
+    shape = x.shape
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    br = _pick_rows(n, d)
+    out = pl.pallas_call(
+        lambda x_ref, s_ref, o_ref: _rht_kernel(x_ref, s_ref, o_ref, d=d),
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x2, sign)
+    return out.reshape(shape)

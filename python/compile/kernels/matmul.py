@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: MXU-tiled blocked matmul.
+
+Used by the L2 model (python/compile/model.py) for every registered linear
+layer, wrapped in a custom_vjp so training/calibration gradients flow
+through a plain-jnp backward while the forward lowers to this kernel.
+
+TPU mapping: each grid step holds an (bm, K) x (K, bn) tile pair in VMEM
+and feeds the MXU with a single dot; the grid expresses the HBM->VMEM
+schedule that a CUDA kernel would express with threadblocks.  K is kept
+un-tiled because every model dimension in this repo fits VMEM (d <= 4096:
+bm*K + K*bn + bm*bn floats < 4 MiB for bm=bn=128).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the AOT HLO artifacts must run on the Rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_block(n, pref=128):
+    """Largest power-of-2 block <= pref that divides n."""
+    b = 1
+    while b * 2 <= min(n, pref) and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def matmul_pallas(x, w, *, bm=128, bn=128):
+    """(m, k) @ (k, n) -> (m, n) via the Pallas kernel.
+
+    Arbitrary shapes are supported by shrinking block sizes to divisors;
+    shapes in this repo are powers of 2 so blocks stay MXU-aligned 128x128.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {w.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def linear_matmul(x, w):
+    """Differentiable linear-layer matmul: Pallas forward, jnp backward."""
+    return matmul_pallas(x, w)
+
+
+def _linear_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    return jnp.matmul(g, w.T), jnp.matmul(x.T, g)
+
+
+linear_matmul.defvjp(_linear_fwd, _linear_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_jit(x, w, bm=128, bn=128):
+    return matmul_pallas(x, w, bm=bm, bn=bn)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused Algorithm-3 dequant-matmul (paper Alg. 3).
+
+Computes  Y = (X' @ (codes - c_b)) * r  =  (X' @ codes - z) * r,
+z = c_b * X' @ 1, without ever materializing the dequantized weight matrix:
+codes stay in their storage dtype in HBM, are upcast inside the kernel
+block, centered by c_b, fed to the MXU, and the per-column rescale r is
+applied on the VPU epilogue.  This is the TPU analog of RaBitQ's
+"compute on codes without decompression".
+
+The row-sum term z is computed from the same X' tile already resident in
+VMEM, so the fusion saves one full pass over X'.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmatmul_kernel(x_ref, c_ref, r_ref, o_ref, *, cb):
+    x = x_ref[...]
+    codes = c_ref[...].astype(x.dtype)
+    acc = jnp.dot(x, codes, preferred_element_type=o_ref.dtype)
+    z = cb * jnp.sum(x, axis=1, keepdims=True)
+    o_ref[...] = (acc - z) * r_ref[...][None, :]
+
+
+def _pick_block(n, pref=128):
+    b = 1
+    while b * 2 <= min(n, pref) and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def qmatmul_pallas(x, codes, r, *, bits, bm=128, bn=128):
+    """Estimate X @ W_hat from RaBitQ-H codes.
+
+    x:     (n, d) RHT-rotated activations X' (float)
+    codes: (d, c) quantization codes (any numeric dtype; values in
+           [0, 2^bits - 1])
+    r:     (c,)   per-column rescale factors (float)
+    """
+    n, d = x.shape
+    d2, c = codes.shape
+    assert d == d2 and r.shape == (c,)
+    cb = (2.0**bits - 1.0) / 2.0
+    bm = _pick_block(n, bm)
+    bn = _pick_block(c, bn)
+    grid = (n // bm, c // bn)
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, cb=cb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=True,
+    )(x, codes, r)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def qmatmul_jit(x, codes, r, bits):
+    return qmatmul_pallas(x, codes, r, bits=bits)

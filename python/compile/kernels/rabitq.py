@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: RaBitQ grid quantization of RHT-rotated weight columns.
+
+Per column v of the rotated weight block (paper Alg. 2 inner step):
+  t      = max|v| / c_b                      (grid scale)
+  codes  = clip(round(v / t + c_b), 0, 2^b-1)
+  r      = <v, q> / <q, q>,  q = codes - c_b (least-squares rescale)
+
+so that v ~= r * (codes - c_b) and Algorithm 3's estimator is the
+least-squares-optimal collinear reconstruction.  The Rust hot path
+(rust/src/rabitq/) implements the same procedure plus an optional scale
+*search*; this kernel is the max-abs (search-free) variant and both are
+cross-checked against kernels.ref.ref_rabitq_quantize.
+
+Grid: one step per column block; the whole d-row column strip lives in
+VMEM (d <= 4096 -> d * bc * 4 bytes <= 2 MiB for bc = 128).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rabitq_kernel(v_ref, codes_ref, r_ref, *, bits):
+    v = v_ref[...]
+    cb = (2.0**bits - 1.0) / 2.0
+    maxabs = jnp.max(jnp.abs(v), axis=0)
+    t = jnp.where(maxabs > 0, maxabs / cb, 1.0)
+    codes = jnp.clip(jnp.round(v / t[None, :] + cb), 0.0, 2.0**bits - 1.0)
+    q = codes - cb
+    num = jnp.sum(v * q, axis=0)
+    den = jnp.sum(q * q, axis=0)
+    codes_ref[...] = codes.astype(codes_ref.dtype)
+    r_ref[...] = jnp.where(den > 0, num / den, 0.0).astype(r_ref.dtype)
+
+
+def _pick_block(n, pref=128):
+    b = 1
+    while b * 2 <= min(n, pref) and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def rabitq_quantize_pallas(v, *, bits, bc=128):
+    """Quantize columns of v (d, c) to `bits`-bit codes plus rescales r."""
+    d, c = v.shape
+    bc = _pick_block(c, bc)
+    grid = (c // bc,)
+    return pl.pallas_call(
+        functools.partial(_rabitq_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((d, bc), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((d, bc), lambda j: (0, j)),
+            pl.BlockSpec((bc,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, c), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(v)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def rabitq_quantize_jit(v, bits):
+    return rabitq_quantize_pallas(v, bits=bits)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) checks the Pallas outputs against these with hypothesis
+shape/dtype sweeps, and the Rust side's golden tests are generated from the
+same functions.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w):
+    """Plain matmul oracle for kernels.matmul."""
+    return jnp.matmul(x, w)
+
+
+def ref_fwht(x):
+    """Normalized fast Walsh-Hadamard transform along the last axis.
+
+    x: (..., d) with d a power of 2.  Equivalent to x @ H_d / sqrt(d) with
+    the Sylvester-ordered Hadamard matrix H_d (H is symmetric so left/right
+    application coincide for row vectors).
+    """
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"FWHT needs power-of-2 dim, got {d}"
+    orig_shape = x.shape
+    y = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        y = y.reshape(-1, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(-1, d)
+        h *= 2
+    return (y / jnp.sqrt(jnp.asarray(d, x.dtype))).reshape(orig_shape)
+
+
+def ref_rht(x, sign):
+    """Randomized Hadamard transform: FWHT(x * sign) along last axis.
+
+    sign: (d,) vector of +-1 Rademacher samples (the diagonal D).
+    """
+    return ref_fwht(x * sign)
+
+
+def ref_rabitq_quantize(v, bits):
+    """RaBitQ grid quantization of columns of v (d, c) -> (codes, r).
+
+    Matches kernels.rabitq: per-column max-abs scale, round to the b-bit
+    unsigned grid, then per-column least-squares rescale r so that
+    v[:, j] ~= r[j] * (codes[:, j] - c_b).
+
+    Returns codes as float32 carrying integers in [0, 2^bits - 1] and
+    r (c,) float32.
+    """
+    cb = (2.0**bits - 1.0) / 2.0
+    maxabs = jnp.max(jnp.abs(v), axis=0)  # (c,)
+    t = jnp.where(maxabs > 0, maxabs / cb, 1.0)
+    codes = jnp.clip(jnp.round(v / t + cb), 0.0, 2.0**bits - 1.0)
+    q = codes - cb
+    num = jnp.sum(v * q, axis=0)
+    den = jnp.sum(q * q, axis=0)
+    r = jnp.where(den > 0, num / den, 0.0)
+    return codes.astype(jnp.float32), r.astype(jnp.float32)
+
+
+def ref_qmatmul(x, codes, r, bits):
+    """Algorithm 3 (paper): estimate X @ W from quantized codes.
+
+    x:     (n, d) already-RHT-rotated inputs  X' = Hadamard(D X^T)^T
+    codes: (d, c) integer codes (stored as float32)
+    r:     (c,)   per-column rescale factors
+    Returns (n, c): per column j, y_j = r_j * (X' @ codes_j - c_b * X' @ 1).
+    """
+    cb = (2.0**bits - 1.0) / 2.0
+    z = cb * jnp.sum(x, axis=1, keepdims=True)  # (n, 1) = c_b * X 1
+    return (jnp.matmul(x, codes) - z) * r[None, :]
+
+
+def ref_dequantize(codes, r, bits):
+    """Reconstruct the effective (rotated-space) weight matrix r*(codes-c_b)."""
+    cb = (2.0**bits - 1.0) / 2.0
+    return (codes - cb) * r[None, :]

@@ -1,0 +1,297 @@
+"""L2: GPT-style byte-level transformer in JAX, calling the L1 Pallas kernels.
+
+This is the model the Rust coordinator trains, calibrates, quantizes, and
+serves.  Every registered linear layer (attention q/k/v/o and MLP fc1/fc2)
+routes through kernels.matmul.linear_matmul — Pallas forward, jnp backward —
+so the same kernel lowers into every AOT artifact while gradients still flow
+for training and for the paper's calibration quantities (eq. 23):
+
+    alpha_k = (1/sqrt(d_k)) * ||dL/dH^(k)||_F * ||X^(k)||_F * ||W^(k)||_F
+
+`loss_with_dummies` injects a zero dummy into each linear-layer output so a
+single jax.grad call yields all dL/dH^(k) at once; `calib_grads` reduces
+them to the Frobenius norms the Rust side consumes.
+
+Entry points lowered by aot.py (all shapes static per ModelConfig):
+    init_params   (seed)                        -> params
+    train_step    (params, m, v, step, lr, tok) -> (params, m, v, loss)
+    fwd_loss      (params, tok)                 -> per-token loss (B, S-1)
+    fwd_logits    (params, tok)                 -> last-position logits (B, V)
+    calib_grads   (params, tok)                 -> (gnorms (L,), xnorms (L,))
+    calib_capture (params, tok)                 -> per-layer inputs X_k
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import linear_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+    train_batch: int = 8
+    eval_batch: int = 8
+    calib_batch: int = 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "tiny": ModelConfig(name="tiny", d_model=256, n_layers=4, n_heads=4,
+                        d_ff=1024),
+    "small": ModelConfig(name="small", d_model=512, n_layers=6, n_heads=8,
+                         d_ff=2048),
+    # Micro config for fast pytest of the full artifact path.
+    "micro": ModelConfig(name="micro", d_model=64, n_layers=2, n_heads=2,
+                         d_ff=256, seq_len=32, train_batch=2, eval_batch=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic flat (name, shape) list — the artifact input order."""
+    d, dff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"blk{i}."
+        specs += [
+            (p + "ln1.scale", (d,)), (p + "ln1.bias", (d,)),
+            (p + "attn.wq", (d, d)), (p + "attn.wq.b", (d,)),
+            (p + "attn.wk", (d, d)), (p + "attn.wk.b", (d,)),
+            (p + "attn.wv", (d, d)), (p + "attn.wv.b", (d,)),
+            (p + "attn.wo", (d, d)), (p + "attn.wo.b", (d,)),
+            (p + "ln2.scale", (d,)), (p + "ln2.bias", (d,)),
+            (p + "mlp.fc1", (d, dff)), (p + "mlp.fc1.b", (dff,)),
+            (p + "mlp.fc2", (dff, d)), (p + "mlp.fc2.b", (d,)),
+        ]
+    specs += [("ln_f.scale", (d,)), ("ln_f.bias", (d,)), ("lm_head", (d, v))]
+    return specs
+
+
+def linear_registry(cfg: ModelConfig) -> List[Dict]:
+    """The L quantization targets, in forward order (paper's k = 1..L).
+
+    Embeddings, LayerNorms and lm_head stay full precision (standard PTQ
+    practice and what the paper's LLaMA setup does for non-linear params).
+    """
+    regs = []
+    for i in range(cfg.n_layers):
+        for nm, din, dout in [
+            ("attn.wq", cfg.d_model, cfg.d_model),
+            ("attn.wk", cfg.d_model, cfg.d_model),
+            ("attn.wv", cfg.d_model, cfg.d_model),
+            ("attn.wo", cfg.d_model, cfg.d_model),
+            ("mlp.fc1", cfg.d_model, cfg.d_ff),
+            ("mlp.fc2", cfg.d_ff, cfg.d_model),
+        ]:
+            regs.append({
+                "name": f"blk{i}.{nm}",
+                "param": f"blk{i}.{nm}",
+                # Linear-layer biases exist so the paper's centralization
+                # trick (App. C.3) can fold its rank-1 correction term
+                # (W - W_hat)^T s_hat into the bias at dequantization time.
+                "bias": f"blk{i}.{nm}.b",
+                "d": din,
+                "c": dout,
+                "m": din * dout,
+            })
+    return regs
+
+
+def init_params(cfg: ModelConfig, seed) -> List[jnp.ndarray]:
+    """GPT-2-style init; returns params in param_specs order."""
+    key = jax.random.PRNGKey(seed)
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for (name, shape), k in zip(specs, keys):
+        if name.endswith(".scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".bias") or name.endswith(".b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = 0.02 if "emb" in name else 1.0 / jnp.sqrt(fan_in)
+            # Residual-branch projections get the GPT-2 depth scaling.
+            if name.endswith("attn.wo") or name.endswith("mlp.fc2"):
+                std = std / jnp.sqrt(2.0 * cfg.n_layers)
+            out.append(std * jax.random.normal(k, shape, jnp.float32))
+    return out
+
+
+def params_dict(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def forward(cfg: ModelConfig, p: Dict[str, jnp.ndarray], tokens,
+            dummies=None, capture=None):
+    """Token logits.  tokens: (B, S) int32.
+
+    dummies: optional list of L arrays added to each registered linear
+      output H_k (all-zero at evaluation; jax.grad w.r.t. them gives
+      dL/dH_k for the paper's sensitivity estimate).
+    capture: optional list that receives each linear input X_k (B*S, d_k).
+    """
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :S, :]
+    li = 0  # linear-layer index into the registry order
+
+    def lin(x2d, wname):
+        nonlocal li
+        if capture is not None:
+            capture.append(x2d)
+        out = linear_matmul(x2d, p[wname]) + p[wname + ".b"][None, :]
+        if dummies is not None:
+            out = out + dummies[li]
+        li += 1
+        return out
+
+    mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        x = _layer_norm(h, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        x2 = x.reshape(B * S, d)
+        q = lin(x2, pre + "attn.wq").reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = lin(x2, pre + "attn.wk").reshape(B, S, cfg.n_heads, cfg.head_dim)
+        v = lin(x2, pre + "attn.wv").reshape(B, S, cfg.n_heads, cfg.head_dim)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.asarray(cfg.head_dim, jnp.float32))
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * S, d)
+        h = h + lin(o, pre + "attn.wo").reshape(B, S, d)
+
+        x = _layer_norm(h, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        y = lin(x.reshape(B * S, d), pre + "mlp.fc1")
+        y = jax.nn.gelu(y)
+        h = h + lin(y, pre + "mlp.fc2").reshape(B, S, d)
+
+    h = _layer_norm(h, p["ln_f.scale"], p["ln_f.bias"])
+    logits = jnp.matmul(h, p["lm_head"])  # (B, S, V) — lm_head stays fp
+    return logits
+
+
+def token_losses(cfg: ModelConfig, p, tokens, dummies=None, capture=None):
+    """Per-token next-token cross-entropy, (B, S-1)."""
+    logits = forward(cfg, p, tokens, dummies=dummies, capture=capture)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll
+
+
+def mean_loss(cfg: ModelConfig, flat_params, tokens):
+    p = params_dict(cfg, flat_params)
+    return jnp.mean(token_losses(cfg, p, tokens))
+
+
+# ---------------------------------------------------------------------------
+# Entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def make_dummies(cfg: ModelConfig, batch: int):
+    """Zero arrays shaped like each registered linear output H_k."""
+    n = batch * cfg.seq_len
+    return [jnp.zeros((n, reg["c"]), jnp.float32)
+            for reg in linear_registry(cfg)]
+
+
+def loss_with_dummies(cfg: ModelConfig, flat_params, dummies, tokens):
+    p = params_dict(cfg, flat_params)
+    capture: list = []
+    nll = token_losses(cfg, p, tokens, dummies=dummies, capture=capture)
+    xnorms = jnp.stack([jnp.linalg.norm(x) for x in capture])
+    return jnp.mean(nll), xnorms
+
+
+def calib_grads(cfg: ModelConfig, flat_params, tokens):
+    """(gnorms, xnorms): ||dL/dH_k||_F and ||X_k||_F for every linear k."""
+    dummies = make_dummies(cfg, tokens.shape[0])
+    grad_fn = jax.grad(lambda dm: loss_with_dummies(cfg, flat_params, dm,
+                                                    tokens)[0])
+    grads = grad_fn(dummies)
+    gnorms = jnp.stack([jnp.linalg.norm(g) for g in grads])
+    _, xnorms = loss_with_dummies(cfg, flat_params, dummies, tokens)
+    return gnorms, xnorms
+
+
+def calib_capture(cfg: ModelConfig, flat_params, tokens):
+    """(loss, X_1, ..., X_L) — per-layer linear inputs; the GPTQ baseline
+    builds X^T X from these.
+
+    The loss is returned (not just computed) so every parameter stays live
+    in the lowered HLO: XLA prunes unused entry parameters at compile time,
+    which would otherwise shrink the artifact's input arity (lm_head, final
+    LayerNorm and the last block's fc2 don't influence the captures).
+    """
+    p = params_dict(cfg, flat_params)
+    capture: list = []
+    nll = token_losses(cfg, p, tokens, capture=capture)
+    return (jnp.mean(nll),) + tuple(capture)
+
+
+def fwd_loss(cfg: ModelConfig, flat_params, tokens):
+    p = params_dict(cfg, flat_params)
+    return token_losses(cfg, p, tokens)
+
+
+def fwd_logits(cfg: ModelConfig, flat_params, tokens):
+    p = params_dict(cfg, flat_params)
+    logits = forward(cfg, p, tokens)
+    return logits[:, -1, :]  # (B, V) — the generation step only needs last
+
+
+# AdamW (decoupled weight decay); betas/eps/wd baked, lr a runtime scalar.
+ADAM_B1, ADAM_B2, ADAM_EPS, ADAM_WD = 0.9, 0.999, 1e-8, 0.01
+
+
+def train_step(cfg: ModelConfig, flat_params, flat_m, flat_v, step, lr,
+               tokens):
+    """One AdamW step.  Returns (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda fp: mean_loss(cfg, fp, tokens))(flat_params)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    specs = param_specs(cfg)
+    new_p, new_m, new_v = [], [], []
+    for (name, _), pth, g, m, v in zip(specs, flat_params, grads, flat_m,
+                                       flat_v):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+        decay = 0.0 if (name.endswith(".bias") or name.endswith(".scale")
+                        or name.endswith(".b") or "emb" in name) else ADAM_WD
+        new_p.append(pth - lr * (upd + decay * pth))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p), tuple(new_m), tuple(new_v), loss

@@ -1,0 +1,92 @@
+"""AOT lowering round-trip: every artifact must lower to parseable HLO text
+and report the declared I/O arity in its ENTRY signature."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+CFG = M.CONFIGS["micro"]
+
+
+def _entry_params(hlo_text):
+    """Parameter instructions of the ENTRY computation.
+
+    HLO text from this XLA version puts the signature in
+    `entry_computation_layout=...` and opens ENTRY with `ENTRY main.N {`;
+    we count `parameter(i)` instructions inside the ENTRY block.
+    """
+    m = re.search(r"^ENTRY .*\{", hlo_text, flags=re.M)
+    assert m, "no ENTRY found"
+    body = hlo_text[m.end():]
+    return re.findall(r"parameter\(\d+\)", body)
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.lower_model(CFG, str(out / CFG.name))
+    return out / CFG.name
+
+
+def test_all_artifacts_written(artifacts):
+    for name in ("init_params", "train_step", "fwd_loss", "fwd_logits",
+                 "calib_grads", "calib_capture"):
+        path = artifacts / f"{name}.hlo.txt"
+        assert path.exists(), name
+        text = path.read_text()
+        assert text.startswith("HloModule"), name
+
+
+def test_manifest_schema(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert man["model"]["name"] == CFG.name
+    assert len(man["params"]) == len(M.param_specs(CFG))
+    assert len(man["linears"]) == 6 * CFG.n_layers
+    for p, (name, shape) in zip(man["params"], M.param_specs(CFG)):
+        assert p["name"] == name and tuple(p["shape"]) == tuple(shape)
+
+
+def test_init_params_arity(artifacts):
+    text = (artifacts / "init_params.hlo.txt").read_text()
+    assert len(_entry_params(text)) == 1  # seed
+
+
+def test_train_step_arity(artifacts):
+    text = (artifacts / "train_step.hlo.txt").read_text()
+    n = len(M.param_specs(CFG))
+    assert len(_entry_params(text)) == 3 * n + 3
+
+
+def test_fwd_loss_arity(artifacts):
+    text = (artifacts / "fwd_loss.hlo.txt").read_text()
+    n = len(M.param_specs(CFG))
+    assert len(_entry_params(text)) == n + 1
+
+
+def test_calib_grads_arity(artifacts):
+    text = (artifacts / "calib_grads.hlo.txt").read_text()
+    n = len(M.param_specs(CFG))
+    assert len(_entry_params(text)) == n + 1
+
+
+def test_hlo_has_no_serialized_proto_markers(artifacts):
+    """Guard the text-interchange invariant (DESIGN.md): artifacts must be
+    HLO text, parseable by xla_extension 0.5.1."""
+    text = (artifacts / "fwd_loss.hlo.txt").read_text()
+    assert "HloModule" in text.splitlines()[0]
+
+
+def test_kernel_artifact_lowering(tmp_path):
+    aot.lower_kernels(str(tmp_path))
+    files = os.listdir(tmp_path)
+    for n, d, c, bits in aot.QMATMUL_SHAPES:
+        assert f"qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt" in files
+    for n, d in aot.HADAMARD_SHAPES:
+        assert f"hadamard_{n}x{d}.hlo.txt" in files

@@ -1,0 +1,149 @@
+"""L2 model invariants on the micro config (fast enough for CI)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+CFG = M.CONFIGS["micro"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tuple(M.init_params(CFG, 0))
+
+
+def _tokens(seed, batch=None, seq=None):
+    rng = np.random.default_rng(seed)
+    b = batch or CFG.eval_batch
+    s = seq or CFG.seq_len
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)),
+                       dtype=jnp.int32)
+
+
+def test_param_specs_cover_init(params):
+    specs = M.param_specs(CFG)
+    assert len(specs) == len(params)
+    for (name, shape), arr in zip(specs, params):
+        assert tuple(arr.shape) == tuple(shape), name
+
+
+def test_param_count_micro():
+    n = sum(int(np.prod(s)) for _, s in M.param_specs(CFG))
+    # micro: d=64, 2 blocks, dff=256, vocab=256, seq=32
+    assert n == sum(int(np.prod(a.shape))
+                    for a in M.init_params(CFG, 1))
+    assert 100_000 < n < 1_000_000
+
+
+def test_linear_registry_matches_specs():
+    specs = dict(M.param_specs(CFG))
+    regs = M.linear_registry(CFG)
+    assert len(regs) == 6 * CFG.n_layers
+    for reg in regs:
+        assert specs[reg["param"]] == (reg["d"], reg["c"])
+        assert reg["m"] == reg["d"] * reg["c"]
+
+
+def test_fwd_loss_shape_and_range(params):
+    nll = M.fwd_loss(CFG, params, _tokens(0))
+    assert nll.shape == (CFG.eval_batch, CFG.seq_len - 1)
+    # untrained byte-level model: near-uniform, loss ~ ln(256) = 5.55
+    assert 4.0 < float(nll.mean()) < 8.0
+    assert np.all(np.asarray(nll) >= 0.0)
+
+
+def test_forward_is_causal(params):
+    """Changing a future token must not change past losses."""
+    t1 = _tokens(1)
+    t2 = np.asarray(t1).copy()
+    t2[:, -1] = (t2[:, -1] + 1) % CFG.vocab
+    n1 = np.asarray(M.fwd_loss(CFG, params, t1))
+    n2 = np.asarray(M.fwd_loss(CFG, params, jnp.asarray(t2)))
+    # last position's loss may change (its target changed); earlier must not
+    np.testing.assert_allclose(n1[:, :-1], n2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_fwd_logits_matches_forward(params):
+    tok = _tokens(2)
+    last = M.fwd_logits(CFG, params, tok)
+    assert last.shape == (CFG.eval_batch, CFG.vocab)
+    p = M.params_dict(CFG, list(params))
+    full = M.forward(CFG, p, tok)
+    np.testing.assert_allclose(last, full[:, -1, :], rtol=1e-5, atol=1e-5)
+
+
+def test_calib_grads_shapes_and_positivity(params):
+    tok = _tokens(3, batch=CFG.calib_batch)
+    g, xn = M.calib_grads(CFG, params, tok)
+    L = len(M.linear_registry(CFG))
+    assert g.shape == (L,) and xn.shape == (L,)
+    assert np.all(np.asarray(g) > 0)
+    assert np.all(np.asarray(xn) > 0)
+
+
+def test_calib_capture_shapes(params):
+    tok = _tokens(4, batch=CFG.calib_batch)
+    outs = M.calib_capture(CFG, params, tok)
+    regs = M.linear_registry(CFG)
+    # output 0 is the loss (keeps all params live in the lowered HLO)
+    assert len(outs) == len(regs) + 1
+    assert outs[0].shape == ()
+    n = CFG.calib_batch * CFG.seq_len
+    for cap, reg in zip(outs[1:], regs):
+        assert cap.shape == (n, reg["d"]), reg["name"]
+
+
+def test_calib_capture_consistent_with_xnorms(params):
+    tok = _tokens(5, batch=CFG.calib_batch)
+    outs = M.calib_capture(CFG, params, tok)
+    _, xn = M.calib_grads(CFG, params, tok)
+    want = np.array([float(jnp.linalg.norm(c)) for c in outs[1:]])
+    np.testing.assert_allclose(np.asarray(xn), want, rtol=1e-4)
+
+
+def test_dummy_injection_is_zero_at_eval(params):
+    """Zero dummies must not change the forward pass."""
+    tok = _tokens(6, batch=CFG.calib_batch)
+    base = M.fwd_loss(CFG, params, tok)
+    dm = M.make_dummies(CFG, CFG.calib_batch)
+    p = M.params_dict(CFG, list(params))
+    with_dm = M.token_losses(CFG, p, tok, dummies=dm)
+    np.testing.assert_allclose(base, with_dm, rtol=1e-6, atol=1e-6)
+
+
+def test_train_step_reduces_loss_on_repeated_batch(params):
+    tok = _tokens(7, batch=CFG.train_batch)
+    p = params
+    m = tuple(jnp.zeros_like(a) for a in p)
+    v = tuple(jnp.zeros_like(a) for a in p)
+    losses = []
+    for step in range(8):
+        p, m, v, loss = M.train_step(
+            CFG, p, m, v, jnp.asarray(step, jnp.int32),
+            jnp.asarray(3e-3, jnp.float32), tok)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_train_step_preserves_shapes(params):
+    tok = _tokens(8, batch=CFG.train_batch)
+    m = tuple(jnp.zeros_like(a) for a in params)
+    p2, m2, v2, _ = M.train_step(CFG, params, m, m,
+                                 jnp.asarray(0, jnp.int32),
+                                 jnp.asarray(1e-3, jnp.float32), tok)
+    for a, b in zip(params, p2):
+        assert a.shape == b.shape
+    assert len(p2) == len(m2) == len(v2) == len(params)
+
+
+def test_init_is_deterministic():
+    a = M.init_params(CFG, 42)
+    b = M.init_params(CFG, 42)
+    c = M.init_params(CFG, 43)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))

@@ -1,0 +1,18 @@
+//! Ablation A2 (paper App. C.3): centralization and column-outlier
+//! excluding, on/off, at 2.3 and 3.3 average bits.
+
+use raana::experiments::tables::ablate_tricks;
+use raana::experiments::Env;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("RAANA_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let cap = std::env::var("RAANA_BENCH_EVAL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let env = Env::load(&model)?;
+    println!("=== Ablation: quantization tricks (paper App. C.3, model {model}) ===");
+    let t = ablate_tricks(&env, cap)?;
+    println!("{}", t.render());
+    Ok(())
+}

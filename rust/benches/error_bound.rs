@@ -1,0 +1,50 @@
+//! Ablation A3: the RaBitQ error bound (paper eq. 11 / Assumption 4.1).
+//!
+//! Empirically measures max and p99 of |<x,w> - est| / (||x|| ||w||) across
+//! dimensions d and bit-widths b, against the paper's c_err/(sqrt(d) 2^b)
+//! envelope with c_err = 5.75. The observed error must scale as 2^-b and
+//! 1/sqrt(d) — the scaling Assumption 4.1 feeds into AllocateBits.
+
+use raana::benchlib::Table;
+use raana::hadamard::PracticalRht;
+use raana::rabitq::{estimate_ip, quantize_column, ScaleMode, C_ERROR};
+use raana::rng::Rng;
+use raana::tensor::{dot, norm};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== RaBitQ-H empirical error vs paper eq. (11) bound ===");
+    let mut table = Table::new(&[
+        "d", "bits", "p50 err", "p99 err", "max err", "bound 5.75/(sqrt(d) 2^b)",
+    ]);
+    let trials = 400;
+    for &d in &[128usize, 512, 2048] {
+        for &bits in &[2u8, 4, 6] {
+            let mut rng = Rng::new(d as u64 * 31 + bits as u64);
+            let rot = PracticalRht::sample(d, &mut rng);
+            let mut errs = Vec::with_capacity(trials);
+            for t in 0..trials {
+                let mut w = Rng::new(1000 + t as u64).gaussian_vec(d);
+                let mut x = Rng::new(9000 + t as u64).gaussian_vec(d);
+                rot.apply(&mut w);
+                rot.apply(&mut x);
+                let (codes, r) = quantize_column(&w, bits, ScaleMode::default());
+                let est = estimate_ip(&x, &codes, r, bits);
+                let exact = dot(&x, &w);
+                errs.push((est - exact).abs() / (norm(&x) * norm(&w)));
+            }
+            errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let bound = C_ERROR / ((d as f64).sqrt() * 2f64.powi(bits as i32));
+            table.row(vec![
+                d.to_string(),
+                bits.to_string(),
+                format!("{:.2e}", errs[trials / 2]),
+                format!("{:.2e}", errs[trials * 99 / 100]),
+                format!("{:.2e}", errs[trials - 1]),
+                format!("{bound:.2e}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("expected: errors scale ~2^-b (rows) and ~1/sqrt(d) (groups), max <= bound");
+    Ok(())
+}

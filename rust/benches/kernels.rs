@@ -1,0 +1,112 @@
+//! Ablation A4 (paper §6.3 device-independence): kernel micro-benchmarks.
+//!
+//! * Rust FWHT throughput across dimensions (the quantization hot path).
+//! * RaBitQ column quantization throughput (weights/s — compare the
+//!   paper's ~21 M weights/s for a 70B model in ~3300 s on 2x EPYC).
+//! * Rust Algorithm-3 estimator vs the Pallas `qmatmul` HLO artifact and
+//!   vs the dense dequantized matmul.
+
+use raana::benchlib::{bench, Table};
+use raana::hadamard::{fwht, PracticalRht};
+use raana::model::artifacts_root;
+use raana::rabitq::{QuantizedMatrix, ScaleMode};
+use raana::rng::Rng;
+use raana::runtime::{lit_f32, Runtime};
+use raana::tensor::Matrix;
+use raana::threadpool::default_threads;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Kernel micro-benchmarks ===");
+
+    // FWHT throughput
+    let mut t = Table::new(&["FWHT d", "rows", "median", "GB/s"]);
+    for &d in &[256usize, 1024, 4096] {
+        let rows = (1 << 22) / d; // ~16 MiB working set
+        let mut data = Rng::new(1).gaussian_vec(rows * d);
+        let r = bench(&format!("fwht_{d}"), 2, 8, || {
+            for row in data.chunks_mut(d) {
+                fwht(row);
+            }
+        });
+        let bytes = (rows * d * 4) as f64;
+        t.row(vec![
+            d.to_string(),
+            rows.to_string(),
+            format!("{:.2} ms", r.median() * 1e3),
+            format!("{:.2}", bytes / r.median() / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // RaBitQ quantization throughput
+    let mut t = Table::new(&["RaBitQ d x c", "bits", "mode", "median", "Mweights/s"]);
+    let threads = default_threads();
+    for &(d, c) in &[(1024usize, 1024usize)] {
+        let w = Matrix::from_vec(d, c, Rng::new(2).gaussian_vec(d * c));
+        for (mode, name) in [(ScaleMode::MaxAbs, "maxabs"), (ScaleMode::Search(8), "search8")] {
+            for bits in [2u8, 4] {
+                let r = bench(&format!("rabitq_{name}_{bits}"), 1, 5, || {
+                    std::hint::black_box(QuantizedMatrix::quantize(&w, bits, mode, threads));
+                });
+                t.row(vec![
+                    format!("{d}x{c}"),
+                    bits.to_string(),
+                    name.into(),
+                    format!("{:.1} ms", r.median() * 1e3),
+                    format!("{:.1}", (d * c) as f64 / r.median() / 1e6),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // Algorithm-3 estimator paths
+    let (n, d, c, bits) = (128usize, 256usize, 256usize, 4u8);
+    let v = Matrix::from_vec(d, c, Rng::new(3).gaussian_vec(d * c));
+    let x = Matrix::from_vec(n, d, Rng::new(4).gaussian_vec(n * d));
+    let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, threads);
+    let dense = qm.dequantize();
+
+    let mut t = Table::new(&["Alg.3 path", "median", "note"]);
+    let r = bench("rust_stream", 2, 10, || {
+        std::hint::black_box(qm.matmul_est(&x));
+    });
+    t.row(vec!["Rust streaming codes".into(), format!("{:.2} ms", r.median() * 1e3),
+               "no dequant materialization".into()]);
+    let r = bench("rust_dense", 2, 10, || {
+        std::hint::black_box(x.matmul(&dense));
+    });
+    t.row(vec!["Rust dense dequant".into(), format!("{:.2} ms", r.median() * 1e3),
+               "after one-time dequant".into()]);
+
+    if let Ok(rt) = Runtime::cpu() {
+        let path = artifacts_root()
+            .join("kernels")
+            .join(format!("qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt"));
+        if path.exists() {
+            let art = rt.load(&path)?;
+            let unpacked = qm.codes.unpack();
+            let mut codes_f32 = vec![0f32; d * c];
+            for j in 0..c {
+                for i in 0..d {
+                    codes_f32[i * c + j] = unpacked[j * d + i] as f32;
+                }
+            }
+            let inputs = [
+                lit_f32(&x.data, &[n, d])?,
+                lit_f32(&codes_f32, &[d, c])?,
+                lit_f32(&qm.r, &[c])?,
+            ];
+            let r = bench("pallas_artifact", 2, 10, || {
+                std::hint::black_box(art.run(&inputs).unwrap());
+            });
+            t.row(vec![
+                "Pallas qmatmul artifact (PJRT)".into(),
+                format!("{:.2} ms", r.median() * 1e3),
+                "fused L1 kernel via XLA".into(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Paper Table 1: perplexity on the wikitext2 analog, methods x bits.
+//! Regenerates the same rows (fp reference, grouped baselines at 2+/3+/4+
+//! bits, RaanA at x+0.1 / x+0.3) on the tiny model.
+
+use raana::experiments::tables::{method_grid, Dataset};
+use raana::experiments::Env;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("RAANA_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let cap = std::env::var("RAANA_BENCH_EVAL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let env = Env::load(&model)?;
+    println!("=== Table 1: perplexity on {} (model {model}) ===",
+             Dataset::SynthWiki.name());
+    let t = method_grid(&env, Dataset::SynthWiki, cap)?;
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Paper Table 2: zero-shot vs few-shot calibration on the wikitext2
+//! analog (RaanA-few = 5 sequences, RaanA-zero = the synthetic sentence).
+
+use raana::experiments::tables::{calib_comparison, Dataset};
+use raana::experiments::Env;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("RAANA_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let cap = std::env::var("RAANA_BENCH_EVAL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let env = Env::load(&model)?;
+    println!("=== Table 2: calibration comparison on {} (model {model}) ===",
+             Dataset::SynthWiki.name());
+    let t = calib_comparison(&env, Dataset::SynthWiki, cap)?;
+    println!("{}", t.render());
+    Ok(())
+}

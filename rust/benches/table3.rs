@@ -1,0 +1,16 @@
+//! Paper Table 3: quantization wall-clock time vs model size (RaanA @2.1,
+//! few-shot), with the calibration / allocation / RaBitQ-H phase split the
+//! paper discusses in §6.3 (CPU-bound RaBitQ; calibration is the only part
+//! needing the model runtime).
+
+use raana::experiments::tables::quant_time;
+
+fn main() -> anyhow::Result<()> {
+    let models_env =
+        std::env::var("RAANA_BENCH_MODELS").unwrap_or_else(|_| "micro,tiny".into());
+    let models: Vec<&str> = models_env.split(',').filter(|s| !s.is_empty()).collect();
+    println!("=== Table 3: quantization time (RaanA @2.1 avg bits) ===");
+    let t = quant_time(&models)?;
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Paper Table 4: perplexity on the c4 analog (out-of-distribution for the
+//! synthwiki-trained model), methods x bits.
+
+use raana::experiments::tables::{method_grid, Dataset};
+use raana::experiments::Env;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("RAANA_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let cap = std::env::var("RAANA_BENCH_EVAL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let env = Env::load(&model)?;
+    println!("=== Table 4: perplexity on {} (model {model}) ===",
+             Dataset::SynthC4.name());
+    let t = method_grid(&env, Dataset::SynthC4, cap)?;
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Paper Table 5: zero-shot vs few-shot calibration on the c4 analog.
+
+use raana::experiments::tables::{calib_comparison, Dataset};
+use raana::experiments::Env;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("RAANA_BENCH_MODEL").unwrap_or_else(|_| "tiny".into());
+    let cap = std::env::var("RAANA_BENCH_EVAL_CAP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let env = Env::load(&model)?;
+    println!("=== Table 5: calibration comparison on {} (model {model}) ===",
+             Dataset::SynthC4.name());
+    let t = calib_comparison(&env, Dataset::SynthC4, cap)?;
+    println!("{}", t.render());
+    Ok(())
+}

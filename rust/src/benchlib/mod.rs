@@ -1,0 +1,174 @@
+//! Benchmark harness substrate (no criterion in the offline vendor set).
+//!
+//! Warmup + timed iterations with median/p95 reporting, plus a tiny table
+//! printer used by the paper-table benches to emit the same rows the paper
+//! reports.
+
+use std::time::Instant;
+
+use crate::util::{human_secs, mean, percentile};
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        percentile(&self.secs, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.secs, 95.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.secs)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} median {:>12} mean {:>12} p95  ({} iters)",
+            self.name,
+            human_secs(self.median()),
+            human_secs(self.mean()),
+            human_secs(self.p95()),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        secs.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, secs }
+}
+
+/// Time a single run of `f` (for long end-to-end benches).
+pub fn bench_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (BenchResult, R) {
+    let t = Instant::now();
+    let r = f();
+    let el = t.elapsed().as_secs_f64();
+    (
+        BenchResult { name: name.to_string(), iters: 1, secs: vec![el] },
+        r,
+    )
+}
+
+/// Fixed-width text table, used to print paper-style result tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a perplexity / number cell the way the paper does.
+pub fn fmt_ppl(v: f64) -> String {
+    if !v.is_finite() {
+        "NAN".into()
+    } else if v >= 1e4 {
+        format!("{:.1e}", v)
+    } else if v >= 100.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.secs.len(), 5);
+        assert!(r.median() >= 0.0);
+        assert!(r.p95() >= r.median());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "bits", "ppl"]);
+        t.row(vec!["fp16".into(), "16".into(), "5.68".into()]);
+        t.row(vec!["RaanA".into(), "2.1".into(), "13.70".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[0].contains("Method"));
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(5.678), "5.68");
+        assert_eq!(fmt_ppl(123.4), "123.4");
+        assert_eq!(fmt_ppl(260_000.0), "2.6e5");
+        assert_eq!(fmt_ppl(f64::NAN), "NAN");
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (r, v) = bench_once("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+}

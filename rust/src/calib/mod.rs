@@ -1,0 +1,183 @@
+//! Calibration (paper §4.2): estimate per-layer sensitivities α_k and the
+//! activation statistics consumed by the tricks and the GPTQ baseline.
+//!
+//! * **Few-shot** — `n_c` training sequences (the paper uses 5).
+//! * **Zero-shot** — the single synthetic sentence from the paper, repeated
+//!   100 times; no real data touched.
+//!
+//! Per calibration sample the AOT `calib_grads` artifact returns
+//! `(||dL/dH_k||_F, ||X_k||_F)` for every registered linear layer in one
+//! backward pass, and `calib_capture` returns the raw layer inputs `X_k`
+//! from which we accumulate mean rows, column norms (tricks) and Gram
+//! matrices `X^T X` (GPTQ baseline).
+
+use anyhow::Result;
+
+use crate::allocate::alpha_from_calib;
+use crate::data;
+use crate::model::ModelParams;
+use crate::quant::LayerCalib;
+use crate::runtime::{lit_i32, to_vec_f32, ModelRuntime};
+use crate::tensor::Matrix;
+
+/// Which calibration data to use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CalibMode {
+    /// `n` sequences from the training split (paper default n = 5).
+    FewShot(usize),
+    /// The paper's single synthetic sentence.
+    ZeroShot,
+}
+
+/// Everything downstream passes need from calibration.
+pub struct CalibResult {
+    /// α_k per registered linear layer (paper eq. 23).
+    pub alphas: Vec<f64>,
+    /// Activation statistics per layer (tricks).
+    pub layer_stats: Vec<LayerCalib>,
+    /// Gram matrices X^T X per layer (GPTQ baseline).
+    pub hessians: Vec<Matrix>,
+    /// Per-channel mean |X| per layer (AWQ baseline).
+    pub act_mean_abs: Vec<Vec<f64>>,
+    /// Number of calibration sequences used.
+    pub n_samples: usize,
+}
+
+/// Build the calibration token sequences for a mode.
+pub fn calib_sequences(
+    mode: &CalibMode,
+    corpus: &data::Corpus,
+    seq_len: usize,
+) -> Vec<Vec<i32>> {
+    match mode {
+        CalibMode::FewShot(n) => (0..*n)
+            .map(|i| corpus.train_seq(i * 7).to_vec()) // spread over the split
+            .collect(),
+        CalibMode::ZeroShot => {
+            let toks = data::tokenize(&data::zero_shot_text());
+            vec![toks[..seq_len].to_vec()]
+        }
+    }
+}
+
+/// Run calibration for `params` with the given mode.
+pub fn calibrate(
+    mrt: &ModelRuntime,
+    params: &ModelParams,
+    mode: &CalibMode,
+    corpus: &data::Corpus,
+) -> Result<CalibResult> {
+    let m = &mrt.manifest;
+    let seqs = calib_sequences(mode, corpus, m.seq_len);
+    anyhow::ensure!(!seqs.is_empty(), "no calibration sequences");
+    anyhow::ensure!(m.calib_batch == 1, "calib artifacts are lowered at B=1");
+
+    let nl = m.linears.len();
+    let mut gnorm_acc = vec![0f64; nl];
+    let mut xnorm_acc = vec![0f64; nl];
+    let mut mean_acc: Vec<Vec<f64>> =
+        m.linears.iter().map(|l| vec![0.0; l.d]).collect();
+    let mut sq_acc: Vec<Vec<f64>> =
+        m.linears.iter().map(|l| vec![0.0; l.d]).collect();
+    let mut abs_acc: Vec<Vec<f64>> =
+        m.linears.iter().map(|l| vec![0.0; l.d]).collect();
+    let mut gram: Vec<Matrix> =
+        m.linears.iter().map(|l| Matrix::zeros(l.d, l.d)).collect();
+    let mut rows_seen = vec![0usize; nl];
+
+    let param_lits = mrt.param_literals(params)?;
+    for seq in &seqs {
+        anyhow::ensure!(seq.len() == m.seq_len, "calib sequence length");
+        let tok = lit_i32(seq, &[1, m.seq_len])?;
+
+        // gradients + norms
+        let mut inputs = param_lits.clone();
+        inputs.push(tok.clone());
+        let outs = mrt.calib_grads.run(&inputs)?;
+        let gnorms = to_vec_f32(&outs[0])?;
+        let xnorms = to_vec_f32(&outs[1])?;
+        anyhow::ensure!(gnorms.len() == nl && xnorms.len() == nl, "calib arity");
+        for k in 0..nl {
+            gnorm_acc[k] += gnorms[k] as f64;
+            xnorm_acc[k] += xnorms[k] as f64;
+        }
+
+        // raw activations
+        let mut inputs = param_lits.clone();
+        inputs.push(tok);
+        let caps = mrt.calib_capture.run(&inputs)?;
+        // output 0 is the loss (kept to stop XLA pruning params); 1.. = X_k
+        anyhow::ensure!(caps.len() == nl + 1, "capture arity");
+        for (k, cap) in caps.iter().skip(1).enumerate() {
+            let d = m.linears[k].d;
+            let flat = to_vec_f32(cap)?;
+            let rows = flat.len() / d;
+            let x = Matrix::from_vec(rows, d, flat);
+            for i in 0..rows {
+                let r = x.row(i);
+                for (j, &v) in r.iter().enumerate() {
+                    mean_acc[k][j] += v as f64;
+                    sq_acc[k][j] += (v as f64) * (v as f64);
+                    abs_acc[k][j] += (v as f64).abs();
+                }
+            }
+            // Gram accumulate: X^T X
+            gram[k].add_assign(&x.transpose().matmul(&x));
+            rows_seen[k] += rows;
+        }
+    }
+
+    let n = seqs.len() as f64;
+    let mut alphas = Vec::with_capacity(nl);
+    let mut layer_stats = Vec::with_capacity(nl);
+    let mut act_mean_abs = Vec::with_capacity(nl);
+    for (k, lin) in m.linears.iter().enumerate() {
+        let wnorm = params.frobenius(&lin.param)?;
+        alphas.push(alpha_from_calib(
+            lin.d,
+            gnorm_acc[k] / n,
+            xnorm_acc[k] / n,
+            wnorm,
+        ));
+        let rows = rows_seen[k].max(1) as f64;
+        let mean_input: Vec<f32> =
+            mean_acc[k].iter().map(|&s| (s / rows) as f32).collect();
+        let col_norms: Vec<f64> = sq_acc[k].iter().map(|&s| s.sqrt()).collect();
+        layer_stats.push(LayerCalib { mean_input, col_norms });
+        act_mean_abs.push(abs_acc[k].iter().map(|&s| s / rows).collect());
+    }
+
+    Ok(CalibResult {
+        alphas,
+        layer_stats,
+        hessians: gram,
+        act_mean_abs,
+        n_samples: seqs.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Corpus;
+
+    #[test]
+    fn zero_shot_sequence_is_single_and_trimmed() {
+        let corpus = Corpus::from_text(&data::synthwiki(128 * 20, 1), 128, 0.2);
+        let seqs = calib_sequences(&CalibMode::ZeroShot, &corpus, 128);
+        assert_eq!(seqs.len(), 1);
+        assert_eq!(seqs[0].len(), 128);
+        let s = data::detokenize(&seqs[0]);
+        assert!(s.starts_with("The curious fox"));
+    }
+
+    #[test]
+    fn few_shot_sequences_count_and_spread() {
+        let corpus = Corpus::from_text(&data::synthwiki(128 * 100, 2), 128, 0.2);
+        let seqs = calib_sequences(&CalibMode::FewShot(5), &corpus, 128);
+        assert_eq!(seqs.len(), 5);
+        assert!(seqs.iter().all(|s| s.len() == 128));
+        // the 5 sequences should not all be identical
+        assert!(seqs.windows(2).any(|w| w[0] != w[1]));
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser substrate (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list(&self, name: &str, default: &str) -> Vec<String> {
+        self.opt(name)
+            .unwrap_or(default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["train", "--steps", "100", "--lr=0.001", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt_f64("lr", 0.0).unwrap(), 0.001);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_or("mode", "x"), "x");
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.opt_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--bits", "2.1,3.1, 4.1"]);
+        assert_eq!(a.opt_list("bits", ""), vec!["2.1", "3.1", "4.1"]);
+        assert_eq!(a.opt_list("other", "a,b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--fast", "--check"]);
+        assert!(a.flag("fast") && a.flag("check"));
+        assert!(a.options.is_empty());
+    }
+}

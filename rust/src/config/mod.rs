@@ -1,0 +1,150 @@
+//! Typed run configuration, loadable from JSON files / CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json;
+use crate::quant::TrickConfig;
+use crate::rabitq::ScaleMode;
+
+/// Top-level configuration for quantization runs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Model name (artifacts/<model>/).
+    pub model: String,
+    /// Target average bits per quantizable parameter (incl. overheads).
+    pub avg_bits: f64,
+    /// Candidate bit-widths B for AllocateBits.
+    pub bit_choices: Vec<u8>,
+    /// Calibration: "few:<n>" or "zero".
+    pub calib: String,
+    pub tricks: TrickConfig,
+    pub seed: u64,
+    pub threads: usize,
+    /// Max test sequences for perplexity (0 = all).
+    pub eval_cap: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            avg_bits: 3.1,
+            bit_choices: (1..=8).collect(),
+            calib: "few:5".into(),
+            tricks: TrickConfig::default(),
+            seed: 1234,
+            threads: crate::threadpool::default_threads(),
+            eval_cap: 64,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a JSON config file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(m) = v.get("model").and_then(|x| x.as_str()) {
+            cfg.model = m.to_string();
+        }
+        if let Some(b) = v.get("avg_bits").and_then(|x| x.as_f64()) {
+            cfg.avg_bits = b;
+        }
+        if let Some(bits) = v.get("bit_choices").and_then(|x| x.as_arr()) {
+            cfg.bit_choices = bits
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|b| b as u8)
+                .collect();
+        }
+        if let Some(c) = v.get("calib").and_then(|x| x.as_str()) {
+            cfg.calib = c.to_string();
+        }
+        if let Some(s) = v.get("seed").and_then(|x| x.as_f64()) {
+            cfg.seed = s as u64;
+        }
+        if let Some(t) = v.get("threads").and_then(|x| x.as_f64()) {
+            cfg.threads = t as usize;
+        }
+        if let Some(e) = v.get("eval_cap").and_then(|x| x.as_f64()) {
+            cfg.eval_cap = e as usize;
+        }
+        if let Some(t) = v.get("tricks") {
+            if let Some(c) = t.get("centralization").and_then(|x| x.as_bool()) {
+                cfg.tricks.centralization = c;
+            }
+            if let Some(f) = t.get("col_outlier_frac").and_then(|x| x.as_f64()) {
+                cfg.tricks.col_outlier_frac = f;
+            }
+            if let Some(n) = t.get("scale_search").and_then(|x| x.as_f64()) {
+                cfg.tricks.scale_mode = if n as usize == 0 {
+                    ScaleMode::MaxAbs
+                } else {
+                    ScaleMode::Search(n as usize)
+                };
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Parse the calibration spec string.
+    pub fn calib_mode(&self) -> Result<crate::calib::CalibMode> {
+        if self.calib == "zero" {
+            Ok(crate::calib::CalibMode::ZeroShot)
+        } else if let Some(n) = self.calib.strip_prefix("few:") {
+            Ok(crate::calib::CalibMode::FewShot(n.parse()?))
+        } else {
+            anyhow::bail!("calib must be 'zero' or 'few:<n>', got '{}'", self.calib)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = RunConfig::default();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.bit_choices, (1..=8).collect::<Vec<u8>>());
+        assert!(matches!(
+            c.calib_mode().unwrap(),
+            crate::calib::CalibMode::FewShot(5)
+        ));
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let c = RunConfig::from_json(
+            r#"{"model":"small","avg_bits":2.3,"bit_choices":[2,3,4],
+                "calib":"zero","seed":7,
+                "tricks":{"centralization":false,"col_outlier_frac":0.01,
+                          "scale_search":0}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.avg_bits, 2.3);
+        assert_eq!(c.bit_choices, vec![2, 3, 4]);
+        assert!(matches!(c.calib_mode().unwrap(), crate::calib::CalibMode::ZeroShot));
+        assert!(!c.tricks.centralization);
+        assert_eq!(c.tricks.scale_mode, ScaleMode::MaxAbs);
+    }
+
+    #[test]
+    fn bad_calib_spec_errors() {
+        let mut c = RunConfig::default();
+        c.calib = "sometimes".into();
+        assert!(c.calib_mode().is_err());
+        c.calib = "few:x".into();
+        assert!(c.calib_mode().is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! Synthetic corpus substrate: byte-level tokenizer + two deterministic
+//! text generators standing in for the paper's datasets (see DESIGN.md
+//! §Substitutions):
+//!
+//! * [`synthwiki`] — the wikitext2 analog: headed articles, Zipfian
+//!   vocabulary of synthetic words, repeated entities within an article.
+//! * [`synthc4`] — the c4 analog: noisier, web-flavored text from a
+//!   *different* word distribution (mixed case, URLs, fragments), so
+//!   evaluating a synthwiki-trained model on it mirrors the paper's
+//!   in-distribution vs broader-distribution pair of tables.
+//!
+//! Both are pure functions of a seed — every experiment is reproducible.
+
+use crate::rng::Rng;
+
+/// Byte-level tokenizer: tokens are raw bytes (vocab 256, matching the
+/// model's embedding table).
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Synthetic word list: `n` pronounceable words from syllables, Zipf-ranked.
+fn word_list(n: usize, rng: &mut Rng) -> Vec<String> {
+    const ONSETS: [&str; 16] = [
+        "b", "ch", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t",
+        "th", "v", "w",
+    ];
+    const NUCLEI: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ea"];
+    const CODAS: [&str; 8] = ["", "n", "r", "s", "t", "l", "nd", "ck"];
+    let mut words = Vec::with_capacity(n);
+    let mut seen = std::collections::BTreeSet::new();
+    while words.len() < n {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(ONSETS[rng.below(ONSETS.len())]);
+            w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+            w.push_str(CODAS[rng.below(CODAS.len())]);
+        }
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// Zipf cumulative weights over ranks 1..=n (exponent ~1).
+fn zipf_cumulative(n: usize) -> Vec<f64> {
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for k in 1..=n {
+        acc += 1.0 / k as f64;
+        cum.push(acc);
+    }
+    cum
+}
+
+/// wikitext2-analog generator: returns ~`target_bytes` of text.
+pub fn synthwiki(target_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let vocab = word_list(2000, &mut rng);
+    let cum = zipf_cumulative(vocab.len());
+    let mut out = String::with_capacity(target_bytes + 256);
+    let mut article = 0usize;
+    while out.len() < target_bytes {
+        article += 1;
+        // heading
+        let title = format!(
+            " = {} {} = \n\n",
+            cap(&vocab[rng.sample_cumulative(&cum)]),
+            cap(&vocab[rng.sample_cumulative(&cum)])
+        );
+        out.push_str(&title);
+        // articles repeat a couple of "entities" (wiki-like redundancy)
+        let ents: Vec<String> = (0..2 + rng.below(3))
+            .map(|_| cap(&vocab[rng.sample_cumulative(&cum)]))
+            .collect();
+        let paragraphs = 2 + rng.below(4);
+        for _ in 0..paragraphs {
+            let sentences = 3 + rng.below(5);
+            for _ in 0..sentences {
+                let words = 6 + rng.below(12);
+                for wi in 0..words {
+                    if wi > 0 {
+                        out.push(' ');
+                    }
+                    if rng.below(8) == 0 {
+                        out.push_str(&ents[rng.below(ents.len())]);
+                    } else {
+                        out.push_str(&vocab[rng.sample_cumulative(&cum)]);
+                    }
+                    if wi + 1 < words && rng.below(12) == 0 {
+                        out.push(',');
+                    }
+                }
+                out.push_str(". ");
+            }
+            out.push_str("\n\n");
+        }
+        if article > 100_000 {
+            break; // safety against tiny targets
+        }
+    }
+    out.truncate(target_bytes);
+    out
+}
+
+/// c4-analog generator: noisier web text from a different distribution.
+pub fn synthc4(target_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ 0xC4C4_C4C4);
+    let vocab = word_list(3500, &mut rng);
+    let cum = zipf_cumulative(vocab.len());
+    let mut out = String::with_capacity(target_bytes + 256);
+    while out.len() < target_bytes {
+        match rng.below(10) {
+            0 => {
+                // fake URL line
+                out.push_str(&format!(
+                    "http://www.{}{}.com/{} \n",
+                    vocab[rng.sample_cumulative(&cum)],
+                    rng.below(100),
+                    vocab[rng.sample_cumulative(&cum)]
+                ));
+            }
+            1 => {
+                // shouty fragment
+                let w = &vocab[rng.sample_cumulative(&cum)];
+                out.push_str(&format!("{} - {}! ", w.to_uppercase(), rng.below(2030)));
+            }
+            _ => {
+                let words = 4 + rng.below(18);
+                for wi in 0..words {
+                    if wi > 0 {
+                        out.push(' ');
+                    }
+                    let w = &vocab[rng.sample_cumulative(&cum)];
+                    if rng.below(6) == 0 {
+                        out.push_str(&cap(w));
+                    } else {
+                        out.push_str(w);
+                    }
+                }
+                out.push_str(match rng.below(5) {
+                    0 => "? ",
+                    1 => "... ",
+                    2 => ".\n",
+                    _ => ". ",
+                });
+            }
+        }
+    }
+    out.truncate(target_bytes);
+    out
+}
+
+fn cap(w: &str) -> String {
+    let mut c = w.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+/// The paper's zero-shot calibration sentence (§4.2), repeated 100 times.
+pub const ZERO_SHOT_SENTENCE: &str = "The curious fox leaped over the quiet \
+stream, its reflection rippling in the golden afternoon light.";
+
+pub fn zero_shot_text() -> String {
+    let mut s = String::with_capacity(ZERO_SHOT_SENTENCE.len() * 100 + 100);
+    for _ in 0..100 {
+        s.push_str(ZERO_SHOT_SENTENCE);
+        s.push(' ');
+    }
+    s
+}
+
+/// A tokenized corpus with train/test splits cut into fixed sequences.
+pub struct Corpus {
+    pub tokens: Vec<i32>,
+    pub seq_len: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Corpus {
+    /// Split `text` into train/test sequences of `seq_len` tokens
+    /// (paper §6: "split the test sets into sequences of length 2048").
+    pub fn from_text(text: &str, seq_len: usize, test_frac: f64) -> Corpus {
+        let tokens = tokenize(text);
+        let n_seq = tokens.len() / seq_len;
+        let n_test = ((n_seq as f64 * test_frac).round() as usize).clamp(1, n_seq - 1);
+        Corpus { tokens, seq_len, n_train: n_seq - n_test, n_test }
+    }
+
+    pub fn train_seq(&self, i: usize) -> &[i32] {
+        let i = i % self.n_train.max(1);
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    pub fn test_seq(&self, i: usize) -> &[i32] {
+        assert!(i < self.n_test);
+        let off = (self.n_train + i) * self.seq_len;
+        &self.tokens[off..off + self.seq_len]
+    }
+
+    /// Sample a random training batch of `batch` sequences, flattened.
+    pub fn train_batch(&self, batch: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            out.extend_from_slice(self.train_seq(rng.below(self.n_train.max(1))));
+        }
+        out
+    }
+
+    /// Deterministic test batches of `batch` sequences (last one padded by
+    /// repeating the final sequence); returns (flattened batch, how many
+    /// rows are real).
+    pub fn test_batches(&self, batch: usize) -> Vec<(Vec<i32>, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.n_test {
+            let real = (self.n_test - i).min(batch);
+            let mut flat = Vec::with_capacity(batch * self.seq_len);
+            for k in 0..batch {
+                let idx = if k < real { i + k } else { self.n_test - 1 };
+                flat.extend_from_slice(self.test_seq(idx));
+            }
+            out.push((flat, real));
+            i += real;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_roundtrip_ascii() {
+        let s = "Hello, world! 123";
+        assert_eq!(detokenize(&tokenize(s)), s);
+        assert!(tokenize(s).iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        assert_eq!(synthwiki(5000, 7), synthwiki(5000, 7));
+        assert_ne!(synthwiki(5000, 7), synthwiki(5000, 8));
+        assert_eq!(synthc4(5000, 7), synthc4(5000, 7));
+    }
+
+    #[test]
+    fn generators_hit_target_size() {
+        for n in [1000usize, 50_000] {
+            assert_eq!(synthwiki(n, 1).len(), n);
+            assert_eq!(synthc4(n, 1).len(), n);
+        }
+    }
+
+    #[test]
+    fn synthwiki_has_wiki_structure() {
+        let text = synthwiki(20_000, 3);
+        assert!(text.contains(" = "), "headings");
+        assert!(text.contains(". "), "sentences");
+        assert!(text.contains("\n\n"), "paragraphs");
+    }
+
+    #[test]
+    fn distributions_differ() {
+        // c4-analog should contain URLs; wiki-analog should not
+        let wiki = synthwiki(50_000, 5);
+        let c4 = synthc4(50_000, 5);
+        assert!(!wiki.contains("http://"));
+        assert!(c4.contains("http://"));
+    }
+
+    #[test]
+    fn zero_shot_text_repeats_100x() {
+        let z = zero_shot_text();
+        assert_eq!(z.matches("curious fox").count(), 100);
+    }
+
+    #[test]
+    fn corpus_splits() {
+        let text = synthwiki(64 * 100, 9);
+        let c = Corpus::from_text(&text, 64, 0.2);
+        assert_eq!(c.n_train + c.n_test, 100);
+        assert_eq!(c.n_test, 20);
+        assert_eq!(c.train_seq(0).len(), 64);
+        assert_eq!(c.test_seq(19).len(), 64);
+    }
+
+    #[test]
+    fn train_and_test_do_not_overlap() {
+        let text = synthwiki(32 * 10, 11);
+        let c = Corpus::from_text(&text, 32, 0.3);
+        let train_end = c.n_train * 32;
+        // test_seq(0) starts exactly at the train/test boundary
+        assert_eq!(c.test_seq(0), &c.tokens[train_end..train_end + 32]);
+    }
+
+    #[test]
+    fn test_batches_cover_everything_once() {
+        let text = synthwiki(16 * 11, 13);
+        let c = Corpus::from_text(&text, 16, 0.5); // 5 test seqs (11*0.5 round = 6? check)
+        let batches = c.test_batches(4);
+        let total_real: usize = batches.iter().map(|(_, r)| r).sum();
+        assert_eq!(total_real, c.n_test);
+        for (flat, _) in &batches {
+            assert_eq!(flat.len(), 4 * 16);
+        }
+    }
+
+    #[test]
+    fn train_batch_shape() {
+        let text = synthwiki(32 * 20, 15);
+        let c = Corpus::from_text(&text, 32, 0.25);
+        let mut rng = Rng::new(1);
+        let b = c.train_batch(8, &mut rng);
+        assert_eq!(b.len(), 8 * 32);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

@@ -1,0 +1,65 @@
+//! Perplexity evaluation (paper §6 "Datasets"): split the test set into
+//! fixed-length sequences and report `exp(mean per-token NLL)` through the
+//! AOT `fwd_loss` artifact.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::ModelParams;
+use crate::runtime::ModelRuntime;
+
+/// Perplexity of `params` on the corpus test split.
+///
+/// `max_sequences` caps evaluation cost (the paper caps c4 at 500 samples);
+/// 0 = evaluate everything.
+pub fn perplexity(
+    mrt: &ModelRuntime,
+    params: &ModelParams,
+    corpus: &Corpus,
+    max_sequences: usize,
+) -> Result<f64> {
+    let m = &mrt.manifest;
+    anyhow::ensure!(corpus.seq_len == m.seq_len, "corpus/model seq_len mismatch");
+    let mut total_nll = 0f64;
+    let mut total_tok = 0usize;
+    let mut seqs_done = 0usize;
+    for (flat, real) in corpus.test_batches(m.eval_batch) {
+        let real = if max_sequences > 0 {
+            real.min(max_sequences - seqs_done)
+        } else {
+            real
+        };
+        if real == 0 {
+            break;
+        }
+        let nll = mrt.token_nll(params, &flat)?;
+        let per_seq = m.seq_len - 1;
+        anyhow::ensure!(nll.len() == m.eval_batch * per_seq, "nll arity");
+        for row in 0..real {
+            for t in 0..per_seq {
+                total_nll += nll[row * per_seq + t] as f64;
+            }
+            total_tok += per_seq;
+        }
+        seqs_done += real;
+        if max_sequences > 0 && seqs_done >= max_sequences {
+            break;
+        }
+    }
+    anyhow::ensure!(total_tok > 0, "no test tokens evaluated");
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+/// Bits-per-byte from perplexity (byte-level tokens): log2(ppl).
+pub fn bits_per_byte(ppl: f64) -> f64 {
+    ppl.log2()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bpb_sanity() {
+        assert!((super::bits_per_byte(2.0) - 1.0).abs() < 1e-12);
+        assert!((super::bits_per_byte(256.0) - 8.0).abs() < 1e-12);
+    }
+}

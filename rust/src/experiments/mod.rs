@@ -1,0 +1,299 @@
+//! Experiment orchestration shared by the CLI, the examples, and every
+//! paper-table bench: environment setup (artifacts + corpora + trained
+//! checkpoint), the full RaanA pipeline, and baseline application.
+
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::allocate::AllocProblem;
+use crate::baselines;
+use crate::calib::{calibrate, CalibMode, CalibResult};
+use crate::data::{synthc4, synthwiki, Corpus};
+use crate::eval::perplexity;
+use crate::model::{artifacts_root, ModelParams};
+use crate::quant::{LayerCalib, QuantizedLinear, TrickConfig};
+use crate::rng::Rng;
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::train::{train, TrainConfig};
+use crate::util::Timer;
+
+/// A ready-to-experiment environment: runtime + corpora + trained weights.
+pub struct Env {
+    pub rt: Runtime,
+    pub mrt: ModelRuntime,
+    pub wiki: Corpus,
+    pub c4: Corpus,
+    pub params: ModelParams,
+    pub ckpt_path: PathBuf,
+}
+
+/// Corpus sizing: enough test sequences to be meaningful, small enough for
+/// CPU evaluation. Overridable via env for quick runs.
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+impl Env {
+    /// Load model artifacts, build corpora, and train (or load) weights.
+    pub fn load(model: &str) -> Result<Self> {
+        let root = artifacts_root();
+        let rt = Runtime::cpu()?;
+        let mrt = ModelRuntime::load(&rt, &root, model)
+            .with_context(|| format!("loading model '{model}'"))?;
+        let seq = mrt.manifest.seq_len;
+
+        let train_seqs = env_usize("RAANA_TRAIN_SEQS", 2000);
+        let test_seqs = env_usize("RAANA_TEST_SEQS", 64);
+        let total = (train_seqs + test_seqs) * seq;
+        let wiki = Corpus::from_text(
+            &synthwiki(total, 42),
+            seq,
+            test_seqs as f64 / (train_seqs + test_seqs) as f64,
+        );
+        // c4-analog: test-only usage, but keep a small train split for
+        // its few-shot calibration variant.
+        let c4 = Corpus::from_text(&synthc4((256 + test_seqs) * seq, 43), seq,
+            test_seqs as f64 / (256 + test_seqs) as f64);
+
+        let ckpt_path = root.join(model).join("trained.rkpt");
+        let params = if ckpt_path.exists() {
+            crate::info!("loading checkpoint {}", ckpt_path.display());
+            ModelParams::load(&ckpt_path)?
+        } else {
+            let mut params = mrt.init(7)?;
+            let steps = env_usize("RAANA_TRAIN_STEPS", 300);
+            crate::info!("no checkpoint; training {steps} steps");
+            let cfg = TrainConfig { steps, ..Default::default() };
+            train(&mrt, &mut params, &wiki, &cfg)?;
+            params.save(&ckpt_path)?;
+            params
+        };
+        Ok(Env { rt, mrt, wiki, c4, params, ckpt_path })
+    }
+
+    pub fn perplexity(&self, params: &ModelParams, corpus: &Corpus, cap: usize) -> Result<f64> {
+        perplexity(&self.mrt, params, corpus, cap)
+    }
+}
+
+/// Per-layer record in a quantization report.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub bits: u8,
+    pub avg_bits: f64,
+    pub recon_rel_err: f64,
+}
+
+/// Outcome of quantizing a whole model.
+pub struct QuantReport {
+    pub layers: Vec<LayerReport>,
+    /// Weighted average stored bits per quantizable parameter.
+    pub avg_bits: f64,
+    /// Wall-clock seconds: (calibration, allocation, quantization).
+    pub secs: (f64, f64, f64),
+    pub alloc_cost: f64,
+}
+
+/// Analytic per-layer side-payload estimate (bits per parameter) so the DP
+/// budget can target the *total* average the tables report.
+pub fn overhead_bits_per_param(d: usize, c: usize, tricks: &TrickConfig) -> f64 {
+    let m = (d * c) as f64;
+    let mut bits = c as f64 * 16.0; // rescale r per column (fp16)
+    bits += d as f64; // RHT signs (~1 bit per dim; Alg. 5 uses <= 2*d_hat)
+    let n_out = (tricks.col_outlier_frac * d as f64).ceil();
+    bits += n_out * (c as f64 * 16.0 + 16.0); // fp16 rows + indices
+    if tricks.centralization {
+        bits += (d + c) as f64 * 16.0; // s_hat + bias correction (fp16)
+    }
+    bits / m
+}
+
+/// The full RaanA pipeline (paper Alg. 1): calibrate -> AllocateBits ->
+/// RaBitQ-H each layer -> fold reconstructions back into a param set.
+pub fn raana_quantize(
+    env: &Env,
+    mode: &CalibMode,
+    target_avg_bits: f64,
+    bit_choices: &[u8],
+    tricks: &TrickConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<(ModelParams, QuantReport)> {
+    let m = &env.mrt.manifest;
+
+    let t0 = Timer::start();
+    let calib = calibrate(&env.mrt, &env.params, mode, &env.wiki)?;
+    let calib_secs = t0.secs();
+
+    let (qparams, mut report) = raana_quantize_with_calib(
+        env, &calib, target_avg_bits, bit_choices, tricks, seed, threads,
+    )?;
+    report.secs.0 = calib_secs;
+    let _ = m;
+    Ok((qparams, report))
+}
+
+/// Pipeline minus calibration (reuse a [`CalibResult`] across bit targets).
+pub fn raana_quantize_with_calib(
+    env: &Env,
+    calib: &CalibResult,
+    target_avg_bits: f64,
+    bit_choices: &[u8],
+    tricks: &TrickConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<(ModelParams, QuantReport)> {
+    let m = &env.mrt.manifest;
+    let linears = &m.linears;
+
+    // AllocateBits: budget the *code* bits = target minus analytic overhead.
+    let t1 = Timer::start();
+    let total_m: usize = linears.iter().map(|l| l.m).sum();
+    let mean_overhead: f64 = linears
+        .iter()
+        .map(|l| overhead_bits_per_param(l.d, l.c, tricks) * l.m as f64)
+        .sum::<f64>()
+        / total_m as f64;
+    let code_budget_avg = (target_avg_bits - mean_overhead).max(1.0);
+    let problem = AllocProblem {
+        alphas: calib.alphas.clone(),
+        m: linears.iter().map(|l| l.m).collect(),
+        bit_choices: bit_choices.to_vec(),
+        budget: AllocProblem::budget_for_avg_bits(
+            &linears.iter().map(|l| l.m).collect::<Vec<_>>(),
+            code_budget_avg,
+        ),
+    };
+    let alloc = problem.solve()?;
+    let alloc_secs = t1.secs();
+
+    // Quantize each layer and fold back.
+    let t2 = Timer::start();
+    let mut qparams = env.params.clone();
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::with_capacity(linears.len());
+    let mut bits_acc = 0f64;
+    for (k, lin) in linears.iter().enumerate() {
+        let w = env.params.matrix(&lin.param)?;
+        let stats: &LayerCalib = &calib.layer_stats[k];
+        let ql = QuantizedLinear::quantize(
+            &lin.name,
+            &w,
+            alloc.bits[k],
+            stats,
+            tricks,
+            &mut rng,
+            threads,
+        )?;
+        let (w_hat, corr) = ql.reconstruct();
+        qparams.set_matrix(&lin.param, &w_hat)?;
+        let bias = qparams.get_mut(&lin.bias)?;
+        for (b, c) in bias.iter_mut().zip(&corr) {
+            *b += c;
+        }
+        bits_acc += ql.avg_bits() * lin.m as f64;
+        layers.push(LayerReport {
+            name: lin.name.clone(),
+            bits: alloc.bits[k],
+            avg_bits: ql.avg_bits(),
+            recon_rel_err: ql.recon_rel_err(&w),
+        });
+    }
+    let quant_secs = t2.secs();
+
+    Ok((
+        qparams,
+        QuantReport {
+            layers,
+            avg_bits: bits_acc / total_m as f64,
+            secs: (0.0, alloc_secs, quant_secs),
+            alloc_cost: alloc.cost,
+        },
+    ))
+}
+
+/// Baseline method selector for the table benches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Baseline {
+    Rtn,
+    Gptq,
+    Awq,
+    EasyQuant,
+}
+
+impl Baseline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::Rtn => "RTN",
+            Baseline::Gptq => "GPTQ",
+            Baseline::Awq => "AWQ",
+            Baseline::EasyQuant => "EasyQuant",
+        }
+    }
+}
+
+/// Apply a baseline uniformly at `bits` to every registered linear layer.
+pub fn baseline_quantize(
+    env: &Env,
+    calib: &CalibResult,
+    method: Baseline,
+    bits: u8,
+) -> Result<(ModelParams, f64)> {
+    let m = &env.mrt.manifest;
+    let group = 128.min(m.d_model);
+    let mut qparams = env.params.clone();
+    let mut bits_acc = 0f64;
+    let mut total_m = 0usize;
+    for (k, lin) in m.linears.iter().enumerate() {
+        let w = env.params.matrix(&lin.param)?;
+        let res = match method {
+            Baseline::Rtn => baselines::rtn_quantize(&w, bits, group),
+            Baseline::Gptq => {
+                baselines::gptq_quantize(&w, bits, group, &calib.hessians[k])?
+            }
+            Baseline::Awq => baselines::awq_quantize(
+                &w,
+                bits,
+                group,
+                &calib.act_mean_abs[k],
+                0.5,
+            ),
+            Baseline::EasyQuant => {
+                baselines::easyquant_quantize(&w, bits, group, 0.003)
+            }
+        };
+        qparams.set_matrix(&lin.param, &res.w_hat)?;
+        bits_acc += res.avg_bits * lin.m as f64;
+        total_m += lin.m;
+    }
+    Ok((qparams, bits_acc / total_m as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_estimate_is_small() {
+        let tricks = TrickConfig::default();
+        let o = overhead_bits_per_param(256, 256, &tricks);
+        assert!(o > 0.0 && o < 0.35, "overhead {o}");
+        let o_none = overhead_bits_per_param(256, 256, &TrickConfig::none());
+        assert!(o_none < o);
+    }
+
+    #[test]
+    fn overhead_shrinks_with_layer_size() {
+        let tricks = TrickConfig::default();
+        let small = overhead_bits_per_param(64, 64, &tricks);
+        let large = overhead_bits_per_param(1024, 1024, &tricks);
+        assert!(large < small);
+    }
+}

@@ -1,0 +1,362 @@
+//! Fast Walsh–Hadamard transform + practical RHT (paper Alg. 5).
+//!
+//! The quantization hot path: RaBitQ-H rotates every weight column with a
+//! Randomized Hadamard Transform before grid quantization. This module is
+//! the Rust (CPU) implementation the paper itself uses for the quantization
+//! phase; the Pallas kernel (python/compile/kernels/hadamard.py) is the
+//! inference-path twin and both are property-tested against each other via
+//! golden vectors.
+//!
+//! `fwht` is in-place, O(d log d), with the first two butterfly stages
+//! unrolled pairwise to cut loop overhead (see EXPERIMENTS.md §Perf).
+
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Is n a power of two (n >= 1)?
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Largest power of two <= n.
+#[inline]
+pub fn floor_pow2(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// In-place unnormalized FWHT over a power-of-2-length slice.
+///
+/// After the call, `x` holds `H_d @ x` with the Sylvester Hadamard matrix.
+/// Multiply by 1/sqrt(d) for the orthonormal version.
+pub fn fwht_unnormalized(x: &mut [f32]) {
+    let d = x.len();
+    debug_assert!(is_pow2(d), "FWHT needs power-of-2 length, got {d}");
+    let mut h = 1;
+    // stage 1 (h=1) unrolled: adjacent pairs
+    if d >= 2 {
+        let mut i = 0;
+        while i < d {
+            let a = x[i];
+            let b = x[i + 1];
+            x[i] = a + b;
+            x[i + 1] = a - b;
+            i += 2;
+        }
+        h = 2;
+    }
+    // stage 2 (h=2) unrolled
+    if d >= 4 {
+        let mut i = 0;
+        while i < d {
+            let (a0, a1, b0, b1) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            x[i] = a0 + b0;
+            x[i + 1] = a1 + b1;
+            x[i + 2] = a0 - b0;
+            x[i + 3] = a1 - b1;
+            i += 4;
+        }
+        h = 4;
+    }
+    while h < d {
+        let mut i = 0;
+        while i < d {
+            let (lo, hi) = x[i..i + 2 * h].split_at_mut(h);
+            for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                let t = *a;
+                *a = t + *b;
+                *b = t - *b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// In-place orthonormal FWHT: x <- H_d x / sqrt(d).
+pub fn fwht(x: &mut [f32]) {
+    fwht_unnormalized(x);
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// In-place RHT: x <- H D x / sqrt(d), with D = diag(signs).
+pub fn rht(x: &mut [f32], signs: &[f32]) {
+    debug_assert_eq!(x.len(), signs.len());
+    for (v, &s) in x.iter_mut().zip(signs) {
+        *v *= s;
+    }
+    fwht(x);
+}
+
+/// In-place inverse RHT: x <- D H x / sqrt(d) (H symmetric, D^2 = I).
+pub fn rht_inverse(x: &mut [f32], signs: &[f32]) {
+    fwht(x);
+    for (v, &s) in x.iter_mut().zip(signs) {
+        *v *= s;
+    }
+}
+
+/// Practical RHT for arbitrary dimension d (paper Alg. 5).
+///
+/// Finds d_hat = 2^floor(log2 d) and applies an independent RHT to the
+/// first d_hat entries and then to the last d_hat entries (the two windows
+/// overlap when d is not a power of 2). The composition is orthonormal, so
+/// inner products are preserved and the inverse is the reverse composition.
+#[derive(Clone, Debug)]
+pub struct PracticalRht {
+    pub d: usize,
+    pub d_hat: usize,
+    /// Signs for the first window [0, d_hat).
+    pub signs1: Vec<f32>,
+    /// Signs for the second window [d - d_hat, d); empty if d is a power of 2.
+    pub signs2: Vec<f32>,
+}
+
+impl PracticalRht {
+    /// Sample fresh Rademacher diagonals from `rng`.
+    pub fn sample(d: usize, rng: &mut Rng) -> Self {
+        assert!(d >= 1);
+        let d_hat = floor_pow2(d);
+        let signs1 = rng.rademacher_vec(d_hat);
+        let signs2 = if d_hat == d { Vec::new() } else { rng.rademacher_vec(d_hat) };
+        PracticalRht { d, d_hat, signs1, signs2 }
+    }
+
+    /// Stored-bit cost: one Rademacher bit per sign.
+    pub fn stored_bits(&self) -> usize {
+        self.signs1.len() + self.signs2.len()
+    }
+
+    /// Apply in place to a d-length vector.
+    pub fn apply(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.d);
+        rht(&mut x[..self.d_hat], &self.signs1);
+        if !self.signs2.is_empty() {
+            let start = self.d - self.d_hat;
+            rht(&mut x[start..], &self.signs2);
+        }
+    }
+
+    /// Apply the inverse in place (reverse order of the two windows).
+    pub fn apply_inverse(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.d);
+        if !self.signs2.is_empty() {
+            let start = self.d - self.d_hat;
+            rht_inverse(&mut x[start..], &self.signs2);
+        }
+        rht_inverse(&mut x[..self.d_hat], &self.signs1);
+    }
+
+    /// Apply to every column of a (d x c) matrix.
+    pub fn apply_columns(&self, m: &mut Matrix) {
+        assert_eq!(m.rows, self.d);
+        let mut buf = vec![0f32; self.d];
+        for j in 0..m.cols {
+            for i in 0..self.d {
+                buf[i] = m.at(i, j);
+            }
+            self.apply(&mut buf);
+            m.set_col(j, &buf);
+        }
+    }
+
+    /// Apply the inverse to every column of a (d x c) matrix.
+    pub fn apply_inverse_columns(&self, m: &mut Matrix) {
+        assert_eq!(m.rows, self.d);
+        let mut buf = vec![0f32; self.d];
+        for j in 0..m.cols {
+            for i in 0..self.d {
+                buf[i] = m.at(i, j);
+            }
+            self.apply_inverse(&mut buf);
+            m.set_col(j, &buf);
+        }
+    }
+
+    /// Apply to every row of an (n x d) matrix (the inference-side
+    /// transform of activations in paper Alg. 3).
+    pub fn apply_rows(&self, m: &mut Matrix) {
+        assert_eq!(m.cols, self.d);
+        for i in 0..m.rows {
+            self.apply(m.row_mut(i));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).gaussian_vec(n)
+    }
+
+    #[test]
+    fn fwht_matches_explicit_matrix() {
+        // H_4 explicit
+        let h4: [[f32; 4]; 4] = [
+            [1.0, 1.0, 1.0, 1.0],
+            [1.0, -1.0, 1.0, -1.0],
+            [1.0, 1.0, -1.0, -1.0],
+            [1.0, -1.0, -1.0, 1.0],
+        ];
+        let x = [0.5f32, -1.0, 2.0, 3.0];
+        let mut got = x;
+        fwht_unnormalized(&mut got);
+        for i in 0..4 {
+            let want: f32 = (0..4).map(|j| h4[i][j] * x[j]).sum();
+            assert!((got[i] - want).abs() < 1e-5, "{i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn fwht_is_involution() {
+        for logd in [0, 1, 3, 6, 10] {
+            let d = 1 << logd;
+            let x = randvec(d, 42 + logd as u64);
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-3, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_norm() {
+        let x = randvec(512, 7);
+        let n0 = tensor::norm(&x);
+        let mut y = x;
+        fwht(&mut y);
+        assert!((tensor::norm(&y) - n0).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn rht_preserves_inner_products() {
+        let mut rng = Rng::new(3);
+        let signs = rng.rademacher_vec(256);
+        let a = randvec(256, 1);
+        let b = randvec(256, 2);
+        let ip0 = tensor::dot(&a, &b);
+        let (mut ra, mut rb) = (a, b);
+        rht(&mut ra, &signs);
+        rht(&mut rb, &signs);
+        let ip1 = tensor::dot(&ra, &rb);
+        assert!((ip0 - ip1).abs() < 1e-3 * ip0.abs().max(1.0));
+    }
+
+    #[test]
+    fn rht_inverse_roundtrip() {
+        let mut rng = Rng::new(9);
+        let signs = rng.rademacher_vec(128);
+        let x = randvec(128, 4);
+        let mut y = x.clone();
+        rht(&mut y, &signs);
+        rht_inverse(&mut y, &signs);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn practical_rht_pow2_equals_plain() {
+        let mut rng = Rng::new(5);
+        let p = PracticalRht::sample(64, &mut rng);
+        assert!(p.signs2.is_empty());
+        let x = randvec(64, 6);
+        let mut a = x.clone();
+        p.apply(&mut a);
+        let mut b = x;
+        rht(&mut b, &p.signs1);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn practical_rht_arbitrary_dims_roundtrip_and_norm() {
+        for d in [3usize, 5, 12, 100, 192, 300, 1000] {
+            let mut rng = Rng::new(d as u64);
+            let p = PracticalRht::sample(d, &mut rng);
+            let x = randvec(d, d as u64 + 1);
+            let n0 = tensor::norm(&x);
+            let mut y = x.clone();
+            p.apply(&mut y);
+            assert!((tensor::norm(&y) - n0).abs() / n0 < 1e-4, "norm d={d}");
+            p.apply_inverse(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-3, "roundtrip d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn practical_rht_preserves_inner_products_nonpow2() {
+        let d = 300;
+        let mut rng = Rng::new(17);
+        let p = PracticalRht::sample(d, &mut rng);
+        let a = randvec(d, 1);
+        let b = randvec(d, 2);
+        let ip0 = tensor::dot(&a, &b);
+        let (mut ra, mut rb) = (a, b);
+        p.apply(&mut ra);
+        p.apply(&mut rb);
+        assert!((tensor::dot(&ra, &rb) - ip0).abs() < 1e-3 * ip0.abs().max(1.0));
+    }
+
+    #[test]
+    fn columns_and_rows_agree_with_vector_apply() {
+        let d = 96;
+        let mut rng = Rng::new(23);
+        let p = PracticalRht::sample(d, &mut rng);
+        let mut m = Matrix::from_vec(d, 3, randvec(d * 3, 8));
+        let col0: Vec<f32> = m.col(0);
+        p.apply_columns(&mut m);
+        let mut want = col0;
+        p.apply(&mut want);
+        for (a, b) in m.col(0).iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+
+        let mut mr = Matrix::from_vec(2, d, randvec(2 * d, 9));
+        let row1: Vec<f32> = mr.row(1).to_vec();
+        p.apply_rows(&mut mr);
+        let mut wr = row1;
+        p.apply(&mut wr);
+        for (a, b) in mr.row(1).iter().zip(&wr) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn inverse_columns_roundtrip_matrix() {
+        let d = 192; // non-power-of-2
+        let mut rng = Rng::new(31);
+        let p = PracticalRht::sample(d, &mut rng);
+        let m0 = Matrix::from_vec(d, 5, randvec(d * 5, 10));
+        let mut m = m0.clone();
+        p.apply_columns(&mut m);
+        p.apply_inverse_columns(&mut m);
+        assert!(m.rel_err(&m0) < 1e-4);
+    }
+
+    #[test]
+    fn rotation_flattens_coordinates() {
+        // After RHT a spiky vector spreads out: max |coord| shrinks toward
+        // ||x||/sqrt(d) — the property RaBitQ's grid quantizer relies on.
+        let d = 1024;
+        let mut x = vec![0f32; d];
+        x[7] = 10.0;
+        let mut rng = Rng::new(77);
+        let p = PracticalRht::sample(d, &mut rng);
+        p.apply(&mut x);
+        let maxabs = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(maxabs < 1.0, "max {maxabs} should be ~10/sqrt(1024)=0.31");
+    }
+}

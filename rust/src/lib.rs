@@ -1,0 +1,44 @@
+//! # RaanA — fast, flexible, data-efficient post-training quantization
+//!
+//! A reproduction of *"RaanA: A Fast, Flexible, and Data-Efficient
+//! Post-Training Quantization Algorithm"* (Yang, Gao, Hu; 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the RaBitQ-H quantizer
+//!   ([`rabitq`], [`quant`]), the AllocateBits bit-width optimizer
+//!   ([`allocate`]), calibration ([`calib`]), baselines ([`baselines`]),
+//!   perplexity evaluation ([`eval`]), training driver ([`train`]), a
+//!   batching inference server ([`serve`]), and the synthetic-corpus
+//!   substrate ([`data`]).
+//! * **L2/L1 (python/compile)** — a JAX transformer whose linear layers
+//!   call Pallas kernels, AOT-lowered once to HLO-text artifacts that the
+//!   [`runtime`] module loads and executes via PJRT. Python never runs on
+//!   the request path.
+//!
+//! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
+//! examples under `examples/`.
+
+pub mod allocate;
+pub mod baselines;
+pub mod benchlib;
+pub mod calib;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod hadamard;
+pub mod json;
+pub mod model;
+pub mod quant;
+pub mod rabitq;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod threadpool;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,239 @@
+//! `raana` — CLI for the RaanA reproduction.
+//!
+//! Subcommands:
+//!   info                         platform + artifact summary
+//!   train    [--model tiny --steps N]
+//!   quantize [--model tiny --avg-bits 3.1 --calib few:5|zero ...]
+//!   eval     [--model tiny --dataset wiki|c4]
+//!   table    --n 1..5            regenerate a paper table
+//!   serve    [--model tiny --requests N]   batching-server demo
+
+use anyhow::{bail, Result};
+
+use raana::calib::CalibMode;
+use raana::cli::Args;
+use raana::experiments::{baseline_quantize, raana_quantize, Baseline, Env};
+use raana::model::artifacts_root;
+use raana::quant::TrickConfig;
+use raana::runtime::Runtime;
+use raana::util::Timer;
+use raana::{benchlib, info};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(&args),
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "table" => cmd_table(&args),
+        "help" | _ => {
+            println!(
+                "raana — RaanA post-training quantization (paper reproduction)\n\
+                 usage: raana <info|train|quantize|eval|serve> [--options]\n\
+                 see README.md; tables are regenerated via `cargo bench`"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(), rt.client.device_count());
+    let root = artifacts_root();
+    println!("artifacts root: {}", root.display());
+    for model in ["micro", "tiny", "small"] {
+        let dir = root.join(model);
+        if dir.join("manifest.json").exists() {
+            let m = raana::model::Manifest::load(&dir)?;
+            println!(
+                "  model {model}: d={} layers={} params={} linears={} ({} quantizable)",
+                m.d_model,
+                m.n_layers,
+                m.total_params(),
+                m.linears.len(),
+                m.total_linear_params()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let steps = args.opt_usize("steps", 300)?;
+    std::env::set_var("RAANA_TRAIN_STEPS", steps.to_string());
+    // Env::load trains when no checkpoint exists; --force retrains.
+    let root = artifacts_root();
+    let ckpt = root.join(model).join("trained.rkpt");
+    if args.flag("force") && ckpt.exists() {
+        std::fs::remove_file(&ckpt)?;
+    }
+    let mut env = Env::load(model)?;
+    // --more N: warm-resume N additional steps from the checkpoint
+    let more = args.opt_usize("more", 0)?;
+    if more > 0 {
+        let cfg = raana::train::TrainConfig {
+            steps: more,
+            lr: args.opt_f64("lr", 1e-3)?,
+            warmup: 10,
+            ..Default::default()
+        };
+        raana::train::train(&env.mrt, &mut env.params, &env.wiki, &cfg)?;
+        env.params.save(&env.ckpt_path)?;
+    }
+    let ppl = env.perplexity(&env.params, &env.wiki, 32)?;
+    info!("trained model ppl(synthwiki) = {ppl:.3}");
+    println!("checkpoint: {}", env.ckpt_path.display());
+    Ok(())
+}
+
+fn tricks_from_args(args: &Args) -> TrickConfig {
+    let mut t = TrickConfig::default();
+    if args.flag("no-tricks") {
+        t = TrickConfig::none();
+    }
+    t
+}
+
+fn calib_from_args(args: &Args) -> Result<CalibMode> {
+    match args.opt_or("calib", "few:5") {
+        "zero" => Ok(CalibMode::ZeroShot),
+        s if s.starts_with("few:") => Ok(CalibMode::FewShot(s[4..].parse()?)),
+        s => bail!("bad --calib '{s}'"),
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let avg_bits = args.opt_f64("avg-bits", 3.1)?;
+    let env = Env::load(model)?;
+    let mode = calib_from_args(args)?;
+    let tricks = tricks_from_args(args);
+    let timer = Timer::start();
+    let (qparams, report) =
+        raana_quantize(&env, &mode, avg_bits, &(1..=8).collect::<Vec<u8>>(), &tricks, 99, 0)?;
+    println!(
+        "quantized {} layers to avg {:.3} bits in {:.2}s (calib {:.2}s, alloc {:.3}s, quant {:.2}s)",
+        report.layers.len(),
+        report.avg_bits,
+        timer.secs(),
+        report.secs.0,
+        report.secs.1,
+        report.secs.2
+    );
+    for l in &report.layers {
+        println!(
+            "  {:<16} {} bits  avg {:.3}  recon rel err {:.4}",
+            l.name, l.bits, l.avg_bits, l.recon_rel_err
+        );
+    }
+    let cap = args.opt_usize("eval-cap", 32)?;
+    let ppl_fp = env.perplexity(&env.params, &env.wiki, cap)?;
+    let ppl_q = env.perplexity(&qparams, &env.wiki, cap)?;
+    println!("ppl fp32 {ppl_fp:.3} -> quantized {ppl_q:.3}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let env = Env::load(model)?;
+    let corpus = match args.opt_or("dataset", "wiki") {
+        "c4" => &env.c4,
+        _ => &env.wiki,
+    };
+    let cap = args.opt_usize("eval-cap", 64)?;
+    // optional uniform baseline comparison
+    if let Some(method) = args.opt("baseline") {
+        let bits = args.opt_usize("bits", 4)? as u8;
+        let mode = calib_from_args(args)?;
+        let calib = raana::calib::calibrate(&env.mrt, &env.params, &mode, &env.wiki)?;
+        let b = match method {
+            "rtn" => Baseline::Rtn,
+            "gptq" => Baseline::Gptq,
+            "awq" => Baseline::Awq,
+            "easyquant" => Baseline::EasyQuant,
+            _ => bail!("unknown baseline '{method}'"),
+        };
+        let (qp, avg) = baseline_quantize(&env, &calib, b, bits)?;
+        let ppl = env.perplexity(&qp, corpus, cap)?;
+        println!("{} @ {:.2} avg bits: ppl {}", b.name(), avg, benchlib::fmt_ppl(ppl));
+        return Ok(());
+    }
+    let ppl = env.perplexity(&env.params, corpus, cap)?;
+    println!("fp32 ppl: {}", benchlib::fmt_ppl(ppl));
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    use raana::experiments::tables::{calib_comparison, method_grid, quant_time, Dataset};
+    let n = args.opt_usize("n", 1)?;
+    let model = args.opt_or("model", "tiny");
+    let cap = args.opt_usize("eval-cap", 16)?;
+    let table = match n {
+        1 => method_grid(&Env::load(model)?, Dataset::SynthWiki, cap)?,
+        2 => calib_comparison(&Env::load(model)?, Dataset::SynthWiki, cap)?,
+        3 => quant_time(&["micro", model])?,
+        4 => method_grid(&Env::load(model)?, Dataset::SynthC4, cap)?,
+        5 => calib_comparison(&Env::load(model)?, Dataset::SynthC4, cap)?,
+        _ => bail!("--n must be 1..=5 (paper tables)"),
+    };
+    println!("=== Paper Table {n} (model {model}) ===\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let n_req = args.opt_usize("requests", 16)?;
+    let new_tokens = args.opt_usize("tokens", 16)?;
+    let env = Env::load(model)?;
+
+    // serve over RaanA-quantized weights at 4.1 bits
+    let (qparams, report) = raana_quantize(
+        &env,
+        &CalibMode::FewShot(5),
+        args.opt_f64("avg-bits", 4.1)?,
+        &(1..=8).collect::<Vec<u8>>(),
+        &TrickConfig::default(),
+        7,
+        0,
+    )?;
+    info!("serving quantized model at avg {:.2} bits", report.avg_bits);
+
+    let model_name = model.to_string();
+    let server = raana::serve::Server::start(
+        move || {
+            let rt = Runtime::cpu()?;
+            raana::runtime::ModelRuntime::load(&rt, &artifacts_root(), &model_name)
+        },
+        qparams,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let prompt = raana::data::tokenize(&format!("The {i} quick brown fox "));
+        let (_, rx) = server.submit(prompt, new_tokens, 0.8, i as u64);
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let c = rx.recv()?;
+        println!(
+            "req {:>3}: {:>5.1} ms  '{}'",
+            c.id,
+            c.latency_secs * 1e3,
+            raana::data::detokenize(&c.tokens).escape_debug()
+        );
+    }
+    let stats = server.shutdown()?;
+    println!(
+        "served {} completions, {:.1} tok/s, occupancy {:.2}, p50 {:.1} ms p95 {:.1} ms",
+        stats.completions,
+        stats.throughput_tok_s(),
+        stats.mean_batch_occupancy(env.mrt.manifest.eval_batch),
+        stats.p50_latency() * 1e3,
+        stats.p95_latency() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,408 @@
+//! Model metadata (from the AOT manifest) + parameter store + checkpoints.
+//!
+//! The manifest JSON written by `python/compile/aot.py` is the single
+//! source of truth for parameter order and shapes — the Rust side never
+//! hardcodes the model architecture. Checkpoints use a simple
+//! magic/header/raw-f32 container (`.rkpt`).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::tensor::Matrix;
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub calib_batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub linears: Vec<LinearSpec>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A registered (quantizable) linear layer.
+#[derive(Clone, Debug)]
+pub struct LinearSpec {
+    pub name: String,
+    pub param: String,
+    pub bias: String,
+    pub d: usize,
+    pub c: usize,
+    pub m: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let model = v.req("model")?;
+        let params = v
+            .req("params")?
+            .as_arr()
+            .context("params not array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape not array")?
+                        .iter()
+                        .map(|x| x.as_usize().context("shape entry"))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let linears = v
+            .req("linears")?
+            .as_arr()
+            .context("linears not array")?
+            .iter()
+            .map(|l| {
+                Ok(LinearSpec {
+                    name: l.req_str("name")?.to_string(),
+                    param: l.req_str("param")?.to_string(),
+                    bias: l.req_str("bias")?.to_string(),
+                    d: l.req_usize("d")?,
+                    c: l.req_usize("c")?,
+                    m: l.req_usize("m")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            name: model.req_str("name")?.to_string(),
+            vocab: model.req_usize("vocab")?,
+            d_model: model.req_usize("d_model")?,
+            n_layers: model.req_usize("n_layers")?,
+            n_heads: model.req_usize("n_heads")?,
+            d_ff: model.req_usize("d_ff")?,
+            seq_len: model.req_usize("seq_len")?,
+            train_batch: model.req_usize("train_batch")?,
+            eval_batch: model.req_usize("eval_batch")?,
+            calib_batch: model.req_usize("calib_batch")?,
+            params,
+            linears,
+        })
+    }
+
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("unknown param '{name}'"))
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Total quantizable parameter count (the paper's Σ m_k).
+    pub fn total_linear_params(&self) -> usize {
+        self.linears.iter().map(|l| l.m).sum()
+    }
+}
+
+/// Flat parameter store, tensors in manifest order.
+#[derive(Clone)]
+pub struct ModelParams {
+    pub specs: Vec<ParamSpec>,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ModelParams {
+    pub fn zeros(manifest: &Manifest) -> Self {
+        ModelParams {
+            specs: manifest.params.clone(),
+            tensors: manifest.params.iter().map(|p| vec![0.0; p.numel()]).collect(),
+        }
+    }
+
+    pub fn from_tensors(manifest: &Manifest, tensors: Vec<Vec<f32>>) -> Result<Self> {
+        anyhow::ensure!(tensors.len() == manifest.params.len(), "tensor count");
+        for (t, s) in tensors.iter().zip(&manifest.params) {
+            anyhow::ensure!(t.len() == s.numel(), "size mismatch for {}", s.name);
+        }
+        Ok(ModelParams { specs: manifest.params.clone(), tensors })
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.specs
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("unknown param '{name}'"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Vec<f32>> {
+        let i = self.index_of(name)?;
+        Ok(&mut self.tensors[i])
+    }
+
+    /// View a 2-D parameter as a Matrix (copies).
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        let i = self.index_of(name)?;
+        let spec = &self.specs[i];
+        anyhow::ensure!(spec.shape.len() == 2, "{name} is not 2-D");
+        Ok(Matrix::from_vec(spec.shape[0], spec.shape[1], self.tensors[i].clone()))
+    }
+
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let i = self.index_of(name)?;
+        let spec = &self.specs[i];
+        anyhow::ensure!(
+            spec.shape == vec![m.rows, m.cols],
+            "shape mismatch writing {name}"
+        );
+        self.tensors[i].copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// Frobenius norm of a parameter.
+    pub fn frobenius(&self, name: &str) -> Result<f64> {
+        Ok(self
+            .get(name)?
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    // -------------------------------------------------------------- .rkpt
+
+    const MAGIC: &'static [u8; 8] = b"RKPT\x01\x00\x00\x00";
+
+    /// Save to the simple binary checkpoint format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let header = Value::Arr(
+            self.specs
+                .iter()
+                .map(|p| {
+                    json::obj(vec![
+                        ("name", json::s(&p.name)),
+                        (
+                            "shape",
+                            Value::Arr(
+                                p.shape.iter().map(|&x| json::num(x as f64)).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+        .to_json();
+        let mut f = fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in &self.tensors {
+            // SAFETY-free: serialize via to_le_bytes per chunk
+            let mut buf = Vec::with_capacity(t.len() * 4);
+            for &v in t {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by [`ModelParams::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{} is not a .rkpt checkpoint", path.display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?)?;
+        let specs: Vec<ParamSpec> = header
+            .as_arr()
+            .context("header not array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().context("shape entry"))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let n = spec.numel();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)
+                .with_context(|| format!("reading tensor {}", spec.name))?;
+            let mut t = Vec::with_capacity(n);
+            for ch in buf.chunks_exact(4) {
+                t.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            tensors.push(t);
+        }
+        Ok(ModelParams { specs, tensors })
+    }
+}
+
+/// Standard artifact-directory layout helpers.
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn new(root: &Path, model: &str) -> Self {
+        ArtifactPaths { dir: root.join(model) }
+    }
+
+    pub fn hlo(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+
+    pub fn manifest(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+}
+
+/// Locate the artifacts root: $RAANA_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("RAANA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_MANIFEST: &str = r#"{
+        "model": {"name":"t","vocab":256,"d_model":8,"n_layers":1,
+                  "n_heads":2,"d_ff":16,"seq_len":4,"train_batch":2,
+                  "eval_batch":2,"calib_batch":1},
+        "params": [
+            {"name":"w1","shape":[8,16]},
+            {"name":"w1.b","shape":[16]},
+            {"name":"v","shape":[4]}
+        ],
+        "linears": [
+            {"name":"w1","param":"w1","bias":"w1.b","d":8,"c":16,"m":128}
+        ]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.d_model, 8);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.linears[0].m, 128);
+        assert_eq!(m.total_params(), 8 * 16 + 16 + 4);
+        assert_eq!(m.total_linear_params(), 128);
+        assert_eq!(m.param_index("v").unwrap(), 2);
+        assert!(m.param_index("nope").is_err());
+    }
+
+    #[test]
+    fn params_get_set_matrix() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        let mut p = ModelParams::zeros(&m);
+        let mat = Matrix::from_fn(8, 16, |i, j| (i * 16 + j) as f32);
+        p.set_matrix("w1", &mat).unwrap();
+        assert_eq!(p.matrix("w1").unwrap().data, mat.data);
+        assert!(p.matrix("v").is_err()); // 1-D
+        assert!(p.set_matrix("w1", &Matrix::zeros(4, 4)).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        let mut p = ModelParams::zeros(&m);
+        for (i, t) in p.tensors.iter_mut().enumerate() {
+            for (j, v) in t.iter_mut().enumerate() {
+                *v = (i * 1000 + j) as f32 * 0.5 - 3.0;
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("raana_test_{}", std::process::id()));
+        let path = dir.join("ckpt.rkpt");
+        p.save(&path).unwrap();
+        let q = ModelParams::load(&path).unwrap();
+        assert_eq!(p.specs, q.specs);
+        assert_eq!(p.tensors, q.tensors);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("raana_test_bad_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.rkpt");
+        fs::write(&path, b"NOTRKPT_blah").unwrap();
+        assert!(ModelParams::load(&path).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn frobenius_norm() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        let mut p = ModelParams::zeros(&m);
+        p.get_mut("v").unwrap().copy_from_slice(&[3.0, 4.0, 0.0, 0.0]);
+        assert!((p.frobenius("v").unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let a = ArtifactPaths::new(Path::new("artifacts"), "tiny");
+        assert_eq!(a.hlo("fwd_loss"), PathBuf::from("artifacts/tiny/fwd_loss.hlo.txt"));
+        assert_eq!(a.manifest(), PathBuf::from("artifacts/tiny/manifest.json"));
+    }
+}

@@ -1,0 +1,487 @@
+//! RaanA quantization pipeline: RaBitQ-H per layer + tricks (paper App. C.3).
+//!
+//! Per registered linear layer W (d x c):
+//!
+//! 1. **Column outlier excluding** — the top `frac` input dimensions by
+//!    calibration-activation column norm keep their weight *rows* in full
+//!    precision (their products are computed exactly at inference).
+//! 2. **Practical RHT** (paper Alg. 5) rotates the remaining rows'
+//!    columns — works for any d, not just powers of two.
+//! 3. **RaBitQ** grid-quantizes each rotated column at the layer's
+//!    AllocateBits-assigned bit-width, with a least-squares rescale.
+//! 4. **Centralization** — the rank-1 correction `1 s_hat^T (W - W_hat)`
+//!    (s_hat = calibration mean input row) is exact and folds into the
+//!    layer bias at dequantization, removing the quantization error along
+//!    the mean-input direction.
+//!
+//! [`QuantizedLinear::reconstruct`] produces the effective weight + bias
+//! the evaluation path feeds to the AOT `fwd_loss` artifact; the
+//! Algorithm-3 streaming path ([`QuantizedLinear::forward_est`]) is the
+//! serving-time estimator and is property-tested to agree with the
+//! reconstruction exactly.
+
+use anyhow::Result;
+
+use crate::hadamard::PracticalRht;
+use crate::rabitq::{QuantizedMatrix, ScaleMode};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Trick configuration (paper App. C.3; defaults = the paper's setting:
+/// Centralization + Column Outlier Excluding at 0.3%).
+#[derive(Clone, Copy, Debug)]
+pub struct TrickConfig {
+    pub centralization: bool,
+    /// Fraction of input dimensions kept full-precision (paper: 0.003).
+    pub col_outlier_frac: f64,
+    /// Scale-selection mode for the RaBitQ grid.
+    pub scale_mode: ScaleMode,
+}
+
+impl Default for TrickConfig {
+    fn default() -> Self {
+        TrickConfig {
+            centralization: true,
+            col_outlier_frac: 0.003,
+            scale_mode: ScaleMode::default(),
+        }
+    }
+}
+
+impl TrickConfig {
+    /// No tricks (for the ablation bench).
+    pub fn none() -> Self {
+        TrickConfig {
+            centralization: false,
+            col_outlier_frac: 0.0,
+            scale_mode: ScaleMode::default(),
+        }
+    }
+}
+
+/// Per-layer calibration statistics consumed by the tricks.
+#[derive(Clone, Debug)]
+pub struct LayerCalib {
+    /// Mean input row s(X) over calibration tokens (d,).
+    pub mean_input: Vec<f32>,
+    /// Per-input-dimension activation column norms (d,).
+    pub col_norms: Vec<f64>,
+}
+
+impl LayerCalib {
+    pub fn from_activations(x: &Matrix) -> Self {
+        LayerCalib { mean_input: x.col_means(), col_norms: x.col_norms() }
+    }
+
+    /// Zero stats (calibration-free operation: tricks become inert).
+    pub fn zeros(d: usize) -> Self {
+        LayerCalib { mean_input: vec![0.0; d], col_norms: vec![0.0; d] }
+    }
+}
+
+/// A RaBitQ-H-quantized linear layer.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub name: String,
+    pub d: usize,
+    pub c: usize,
+    pub bits: u8,
+    /// Input dimensions whose weight rows stay full precision, sorted.
+    pub outlier_idx: Vec<u32>,
+    /// Full-precision rows for the outlier dims (|O| x c).
+    pub outlier_rows: Matrix,
+    /// RHT over the remaining d_rest dims.
+    pub rot: PracticalRht,
+    /// RaBitQ codes of the rotated remaining rows (d_rest x c).
+    pub qm: QuantizedMatrix,
+    /// Calibration mean input (d,) — the centralization anchor.
+    pub shat: Vec<f32>,
+    /// Rank-1 centralization correction folded into the bias (c,).
+    pub bias_corr: Vec<f32>,
+}
+
+impl QuantizedLinear {
+    /// Quantize `w` (d x c) at `bits`, using calibration stats for tricks.
+    pub fn quantize(
+        name: &str,
+        w: &Matrix,
+        bits: u8,
+        calib: &LayerCalib,
+        tricks: &TrickConfig,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> Result<Self> {
+        let (d, c) = (w.rows, w.cols);
+        anyhow::ensure!(calib.mean_input.len() == d, "calib dim mismatch");
+
+        // 1. column-outlier selection on calibration activation norms
+        let n_out = ((tricks.col_outlier_frac * d as f64).ceil() as usize).min(d.saturating_sub(2));
+        let mut outlier_idx: Vec<u32> = if n_out > 0 {
+            let mut order: Vec<usize> = (0..d).collect();
+            order.sort_by(|&a, &b| {
+                calib.col_norms[b].partial_cmp(&calib.col_norms[a]).unwrap()
+            });
+            let mut sel: Vec<u32> = order[..n_out].iter().map(|&i| i as u32).collect();
+            sel.sort_unstable();
+            sel
+        } else {
+            Vec::new()
+        };
+        // If calibration stats are all-zero the selection is arbitrary noise
+        // — drop it (zero-shot-without-capture / tricks-off path).
+        if calib.col_norms.iter().all(|&n| n == 0.0) {
+            outlier_idx.clear();
+        }
+
+        let is_outlier = {
+            let mut mask = vec![false; d];
+            for &i in &outlier_idx {
+                mask[i as usize] = true;
+            }
+            mask
+        };
+        let rest_idx: Vec<usize> = (0..d).filter(|&i| !is_outlier[i]).collect();
+        let d_rest = rest_idx.len();
+
+        let mut outlier_rows = Matrix::zeros(outlier_idx.len(), c);
+        for (oi, &i) in outlier_idx.iter().enumerate() {
+            outlier_rows.row_mut(oi).copy_from_slice(w.row(i as usize));
+        }
+
+        // 2. practical RHT over remaining rows
+        let rot = PracticalRht::sample(d_rest, rng);
+        let mut v = Matrix::zeros(d_rest, c);
+        for (ri, &i) in rest_idx.iter().enumerate() {
+            v.row_mut(ri).copy_from_slice(w.row(i));
+        }
+        rot.apply_columns(&mut v);
+
+        // 3. RaBitQ grid quantization, parallel across columns
+        let qm = QuantizedMatrix::quantize(&v, bits, tricks.scale_mode, threads);
+
+        let mut ql = QuantizedLinear {
+            name: name.to_string(),
+            d,
+            c,
+            bits,
+            outlier_idx,
+            outlier_rows,
+            rot,
+            qm,
+            shat: if tricks.centralization {
+                calib.mean_input.clone()
+            } else {
+                vec![0.0; d]
+            },
+            bias_corr: vec![0.0; c],
+        };
+
+        // 4. centralization: bias correction (W - W_hat)^T s_hat
+        if tricks.centralization {
+            let w_hat = ql.effective_weight();
+            let diff = w.sub(&w_hat);
+            let mut corr = vec![0f32; c];
+            for i in 0..d {
+                let s = ql.shat[i];
+                if s == 0.0 {
+                    continue;
+                }
+                for (j, &dv) in diff.row(i).iter().enumerate() {
+                    corr[j] += s * dv;
+                }
+            }
+            ql.bias_corr = corr;
+        }
+        Ok(ql)
+    }
+
+    /// Indices of the non-outlier input dims, in order.
+    fn rest_idx(&self) -> Vec<usize> {
+        let mut mask = vec![false; self.d];
+        for &i in &self.outlier_idx {
+            mask[i as usize] = true;
+        }
+        (0..self.d).filter(|&i| !mask[i]).collect()
+    }
+
+    /// The dense effective weight matrix W_hat (d x c): outlier rows exact,
+    /// remaining rows = R^-1 dequantize(codes).
+    pub fn effective_weight(&self) -> Matrix {
+        let mut v_hat = self.qm.dequantize();
+        self.rot.apply_inverse_columns(&mut v_hat);
+        let mut out = Matrix::zeros(self.d, self.c);
+        for (ri, &i) in self.rest_idx().iter().enumerate() {
+            out.row_mut(i).copy_from_slice(v_hat.row(ri));
+        }
+        for (oi, &i) in self.outlier_idx.iter().enumerate() {
+            out.row_mut(i as usize).copy_from_slice(self.outlier_rows.row(oi));
+        }
+        out
+    }
+
+    /// Reconstruct (effective weight, effective extra bias): the evaluation
+    /// path replaces the layer's (W, b) with (W_hat, b + bias_corr).
+    pub fn reconstruct(&self) -> (Matrix, Vec<f32>) {
+        (self.effective_weight(), self.bias_corr.clone())
+    }
+
+    /// Serving-path estimator (paper Alg. 3 + tricks): estimate X @ W + corr
+    /// directly from codes.  X is (n x d) *unrotated* activations.
+    ///
+    /// Exactly equals `X @ effective_weight() + 1 bias_corr^T` (tested).
+    pub fn forward_est(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.d);
+        let rest = self.rest_idx();
+        let n = x.rows;
+
+        // centered, gathered, rotated activations
+        let mut xr = Matrix::zeros(n, rest.len());
+        for i in 0..n {
+            let xrow = x.row(i);
+            for (rj, &j) in rest.iter().enumerate() {
+                *xr.at_mut(i, rj) = xrow[j] - self.shat[j];
+            }
+        }
+        self.rot.apply_rows(&mut xr);
+
+        // quantized product on centered-rotated activations
+        let mut y = self.qm.matmul_est(&xr);
+
+        // exact outlier product (also centered)
+        for i in 0..n {
+            let xrow = x.row(i);
+            for (oi, &j) in self.outlier_idx.iter().enumerate() {
+                let xv = xrow[j as usize] - self.shat[j as usize];
+                if xv == 0.0 {
+                    continue;
+                }
+                let orow = self.outlier_rows.row(oi);
+                for (jj, &wv) in orow.iter().enumerate() {
+                    *y.at_mut(i, jj) += xv * wv;
+                }
+            }
+        }
+
+        // add back the exact mean-row product s_hat^T W (stored at
+        // quantization time inside bias_corr + s_hat^T W_hat identity):
+        //   X W_hat + 1 s_hat^T (W - W_hat)
+        // = (X - 1 s_hat^T) W_hat + 1 s_hat^T W
+        // so here we add 1 * (s_hat^T W_hat + bias_corr).
+        let w_hat = self.effective_weight();
+        let mut mean_term = vec![0f32; self.c];
+        for i in 0..self.d {
+            let s = self.shat[i];
+            if s == 0.0 {
+                continue;
+            }
+            for (j, &wv) in w_hat.row(i).iter().enumerate() {
+                mean_term[j] += s * wv;
+            }
+        }
+        for i in 0..n {
+            for j in 0..self.c {
+                *y.at_mut(i, j) += mean_term[j] + self.bias_corr[j];
+            }
+        }
+        y
+    }
+
+    /// Total stored bits including every side payload the paper's "avg
+    /// bits" accounting would have to count: codes, rescales, RHT signs,
+    /// outlier rows + indices, centering vector, bias correction. Side
+    /// scalars are counted at fp16 (how a deployment stores them; the fp32
+    /// in-memory copies here are a simulator convenience).
+    pub fn stored_bits(&self) -> usize {
+        let mut bits = self.qm.codes.stored_bits();
+        bits += self.c * 16; // rescale r per column, fp16
+        bits += self.rot.stored_bits(); // 1 bit per Rademacher sign
+        bits += self.outlier_rows.rows * self.c * 16;
+        bits += self.outlier_idx.len() * 16; // d < 2^16 always here
+        if self.shat.iter().any(|&s| s != 0.0) {
+            bits += self.d * 16; // s_hat
+            bits += self.c * 16; // bias_corr
+        }
+        bits
+    }
+
+    /// Average bits per original weight parameter.
+    pub fn avg_bits(&self) -> f64 {
+        self.stored_bits() as f64 / (self.d * self.c) as f64
+    }
+
+    /// Relative Frobenius reconstruction error vs the original weights.
+    pub fn recon_rel_err(&self, w: &Matrix) -> f64 {
+        self.effective_weight().rel_err(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_w(d: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::from_vec(d, c, Rng::new(seed).gaussian_vec(d * c))
+    }
+
+    fn random_calib(d: usize, n: usize, seed: u64) -> LayerCalib {
+        let x = Matrix::from_vec(n, d, Rng::new(seed).gaussian_vec(n * d));
+        LayerCalib::from_activations(&x)
+    }
+
+    #[test]
+    fn quantize_reconstruct_error_scales_with_bits() {
+        let w = random_w(128, 64, 1);
+        let calib = random_calib(128, 32, 2);
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 6, 8] {
+            let mut rng = Rng::new(3);
+            let ql = QuantizedLinear::quantize(
+                "t", &w, bits, &calib, &TrickConfig::default(), &mut rng, 2,
+            )
+            .unwrap();
+            let err = ql.recon_rel_err(&w);
+            assert!(err < prev, "bits={bits}: {err} !< {prev}");
+            assert!(err < 3.0 * 2f64.powi(-(bits as i32)), "bits={bits} err={err}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn outlier_rows_are_exact() {
+        let w = random_w(100, 16, 4);
+        let mut calib = random_calib(100, 8, 5);
+        // force dims 7 and 42 to be the outliers
+        for n in calib.col_norms.iter_mut() {
+            *n = 1.0;
+        }
+        calib.col_norms[7] = 100.0;
+        calib.col_norms[42] = 90.0;
+        let mut tricks = TrickConfig::default();
+        tricks.col_outlier_frac = 0.02; // ceil(2) = 2 outliers
+        let mut rng = Rng::new(6);
+        let ql = QuantizedLinear::quantize("t", &w, 2, &calib, &tricks, &mut rng, 1).unwrap();
+        assert_eq!(ql.outlier_idx, vec![7, 42]);
+        let w_hat = ql.effective_weight();
+        for &i in &[7usize, 42] {
+            for j in 0..16 {
+                assert_eq!(w_hat.at(i, j), w.at(i, j), "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_est_equals_reconstructed_matmul() {
+        let d = 96; // non-power-of-2 exercises practical RHT
+        let w = random_w(d, 32, 7);
+        let calib = random_calib(d, 16, 8);
+        let mut rng = Rng::new(9);
+        let ql = QuantizedLinear::quantize(
+            "t", &w, 4, &calib, &TrickConfig::default(), &mut rng, 2,
+        )
+        .unwrap();
+        let x = Matrix::from_vec(8, d, Rng::new(10).gaussian_vec(8 * d));
+        let est = ql.forward_est(&x);
+        let (w_hat, corr) = ql.reconstruct();
+        let mut want = x.matmul(&w_hat);
+        for i in 0..want.rows {
+            for j in 0..want.cols {
+                *want.at_mut(i, j) += corr[j];
+            }
+        }
+        assert!(est.rel_err(&want) < 1e-3, "rel {}", est.rel_err(&want));
+    }
+
+    #[test]
+    fn centralization_removes_mean_direction_error() {
+        // with x == s_hat exactly, the quantized layer output must be exact
+        let d = 64;
+        let w = random_w(d, 16, 11);
+        let calib = random_calib(d, 32, 12);
+        let mut rng = Rng::new(13);
+        let ql = QuantizedLinear::quantize(
+            "t", &w, 2, &calib, &TrickConfig::default(), &mut rng, 1,
+        )
+        .unwrap();
+        let mut x = Matrix::zeros(1, d);
+        x.row_mut(0).copy_from_slice(&calib.mean_input);
+        let est = ql.forward_est(&x);
+        let want = x.matmul(&w);
+        assert!(
+            est.rel_err(&want) < 1e-4,
+            "centered input should be exact: {}",
+            est.rel_err(&want)
+        );
+    }
+
+    #[test]
+    fn tricks_off_means_no_side_payload() {
+        let w = random_w(64, 16, 14);
+        let calib = LayerCalib::zeros(64);
+        let mut rng = Rng::new(15);
+        let ql = QuantizedLinear::quantize(
+            "t", &w, 3, &calib, &TrickConfig::none(), &mut rng, 1,
+        )
+        .unwrap();
+        assert!(ql.outlier_idx.is_empty());
+        assert!(ql.bias_corr.iter().all(|&b| b == 0.0));
+        // avg bits = 3 + rescale/sign overhead only: 16*c + d bits over d*c
+        let overhead = ql.avg_bits() - 3.0;
+        let expected = (16.0 * 16.0 + 64.0) / (64.0 * 16.0);
+        assert!((overhead - expected).abs() < 1e-9, "overhead {overhead}");
+    }
+
+    #[test]
+    fn avg_bits_accounting_with_tricks() {
+        let w = random_w(256, 128, 16);
+        let calib = random_calib(256, 32, 17);
+        let mut rng = Rng::new(18);
+        let ql = QuantizedLinear::quantize(
+            "t", &w, 2, &calib, &TrickConfig::default(), &mut rng, 2,
+        )
+        .unwrap();
+        let avg = ql.avg_bits();
+        // 2-bit codes + tricks: overhead in the paper's 0.1-0.3 band for
+        // realistic layer sizes (256x128 here is on the small side)
+        assert!(avg > 2.0 && avg < 2.45, "avg {avg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = random_w(64, 8, 19);
+        let calib = random_calib(64, 8, 20);
+        let q = |seed| {
+            let mut rng = Rng::new(seed);
+            QuantizedLinear::quantize(
+                "t", &w, 3, &calib, &TrickConfig::default(), &mut rng, 4,
+            )
+            .unwrap()
+            .effective_weight()
+        };
+        assert_eq!(q(7).data, q(7).data);
+        assert_ne!(q(7).data, q(8).data); // different RHT signs
+    }
+
+    #[test]
+    fn quantize_rejects_dim_mismatch() {
+        let w = random_w(32, 8, 21);
+        let calib = LayerCalib::zeros(16);
+        let mut rng = Rng::new(22);
+        assert!(QuantizedLinear::quantize(
+            "t", &w, 3, &calib, &TrickConfig::default(), &mut rng, 1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn one_bit_quantization_works() {
+        let w = random_w(128, 16, 23);
+        let calib = random_calib(128, 16, 24);
+        let mut rng = Rng::new(25);
+        let ql = QuantizedLinear::quantize(
+            "t", &w, 1, &calib, &TrickConfig::default(), &mut rng, 1,
+        )
+        .unwrap();
+        let err = ql.recon_rel_err(&w);
+        assert!(err < 1.0, "1-bit err {err}"); // sign quantization: still informative
+    }
+}

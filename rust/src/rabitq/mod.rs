@@ -1,0 +1,477 @@
+//! RaBitQ multi-bit grid quantization (Gao & Long 2024; Gao et al. 2024),
+//! the vector-quantization core of the paper's RaBitQ-H.
+//!
+//! Given an (already RHT-rotated) column v in R^d and a bit-width b:
+//!
+//! ```text
+//! t      = scale (max-abs grid, optionally refined by a 1-D search)
+//! codes  = clip(round(v / t + c_b), 0, 2^b - 1),   c_b = (2^b - 1)/2
+//! r      = <v, q> / <q, q>,  q = codes - c_b       (least-squares rescale)
+//! ```
+//!
+//! so that `v ~= r * (codes - c_b)` and the paper's Algorithm-3 estimator
+//! `y_j = r_j * (X' codes_j - c_b X' 1)` is the least-squares-optimal
+//! collinear reconstruction. The error obeys the empirical bound of paper
+//! eq. (11): `|<x,w> - est| < c_err/(sqrt(d) 2^b) ||x|| ||w||` whp after
+//! random rotation — property-tested in this module and exercised by
+//! `benches/error_bound.rs`.
+//!
+//! Codes are bit-packed ([`PackedCodes`]) — b bits per weight, the format
+//! whose size the paper's "avg bits" accounting counts.
+
+use crate::tensor::Matrix;
+use crate::threadpool;
+
+/// Grid midpoint c_b = (2^b - 1) / 2.
+#[inline]
+pub fn grid_center(bits: u8) -> f32 {
+    ((1u32 << bits) - 1) as f32 / 2.0
+}
+
+/// Empirical error-bound constant from the RaBitQ paper (eq. 11).
+pub const C_ERROR: f64 = 5.75;
+
+/// Scale-selection strategy for the grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleMode {
+    /// t = max|v| / c_b — one pass, what the Pallas kernel implements.
+    MaxAbs,
+    /// 1-D search over `n` candidate shrink factors of the max-abs scale,
+    /// picking the reconstruction-error minimizer (extended RaBitQ's
+    /// scalar search). Slightly better codes at ~n x the quantization cost.
+    Search(usize),
+}
+
+impl Default for ScaleMode {
+    fn default() -> Self {
+        ScaleMode::Search(8)
+    }
+}
+
+/// Quantize one column. Returns (codes, r) with codes in [0, 2^bits - 1].
+pub fn quantize_column(v: &[f32], bits: u8, mode: ScaleMode) -> (Vec<u8>, f32) {
+    assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+    let cb = grid_center(bits);
+    let maxv = (1u32 << bits) - 1;
+    let maxabs = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+    if maxabs == 0.0 {
+        return (vec![(cb.floor()) as u8; v.len()], 0.0);
+    }
+    let base_t = maxabs / cb;
+
+    // Hot path notes (EXPERIMENTS.md §Perf): the per-element division was
+    // the dominant cost (fp div has ~14-cycle latency and does not
+    // pipeline in this scalar loop) — we multiply by 1/t instead; the
+    // search loop scores candidates without materializing code vectors
+    // (only <v,q> and <q,q> are needed for the LS error) and quantizes
+    // once at the winning scale.
+    let quant_into = |t: f32, out: &mut Vec<u8>| -> (f64, f64) {
+        out.clear();
+        let inv_t = 1.0 / t;
+        let mut vq = 0f64;
+        let mut qq = 0f64;
+        for &x in v {
+            let code = (x * inv_t + cb).round().clamp(0.0, maxv as f32);
+            let q = code - cb;
+            vq += (x as f64) * (q as f64);
+            qq += (q as f64) * (q as f64);
+            out.push(code as u8);
+        }
+        (vq, qq)
+    };
+    // Candidate scoring subsamples long columns (>=512 dims): the LS error
+    // is an average over near-iid rotated coordinates, so a ~256-element
+    // stratified sample ranks scales reliably at a fraction of the cost.
+    let stride = (v.len() / 256).max(1);
+    let score_only = |t: f32| -> f64 {
+        let inv_t = 1.0 / t;
+        let mut vq = 0f64;
+        let mut qq = 0f64;
+        let mut vv = 0f64;
+        let mut k = 0;
+        while k < v.len() {
+            let x = v[k];
+            let code = (x * inv_t + cb).round().clamp(0.0, maxv as f32);
+            let q = code - cb;
+            vq += (x as f64) * (q as f64);
+            qq += (q as f64) * (q as f64);
+            vv += (x as f64) * (x as f64);
+            k += stride;
+        }
+        // sampled ||v - r q||^2 at the LS-optimal r
+        vv - if qq > 0.0 { vq * vq / qq } else { 0.0 }
+    };
+
+    let mut codes = Vec::with_capacity(v.len());
+    match mode {
+        ScaleMode::MaxAbs => {
+            let (vq, qq) = quant_into(base_t, &mut codes);
+            let r = if qq > 0.0 { (vq / qq) as f32 } else { 0.0 };
+            (codes, r)
+        }
+        ScaleMode::Search(n) => {
+            // Shrinking the grid clips tails but refines the bulk; after a
+            // random rotation coordinates are near-Gaussian so the optimum
+            // is typically at 60-100% of the max-abs scale.
+            let n = n.max(1);
+            let mut best_t = base_t;
+            let mut best_err = f64::INFINITY;
+            for i in 0..=n {
+                let factor = if i == n { 1.0 } else { 0.55 + 0.45 * (i as f32 / n as f32) };
+                let t = base_t * factor;
+                let err = score_only(t);
+                if err < best_err {
+                    best_err = err;
+                    best_t = t;
+                }
+            }
+            let (vq, qq) = quant_into(best_t, &mut codes);
+            let r = if qq > 0.0 { (vq / qq) as f32 } else { 0.0 };
+            (codes, r)
+        }
+    }
+}
+
+/// Reconstruct a column from its codes: v_hat = r * (codes - c_b).
+pub fn dequantize_column(codes: &[u8], r: f32, bits: u8, out: &mut [f32]) {
+    let cb = grid_center(bits);
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = r * (c as f32 - cb);
+    }
+}
+
+/// Estimate <x, v> from codes without dequantizing (paper Alg. 3 for one
+/// column): r * (<x, codes> - c_b * sum(x)).
+pub fn estimate_ip(x: &[f32], codes: &[u8], r: f32, bits: u8) -> f64 {
+    debug_assert_eq!(x.len(), codes.len());
+    let cb = grid_center(bits) as f64;
+    let mut xc = 0f64;
+    let mut xs = 0f64;
+    for (&xi, &ci) in x.iter().zip(codes) {
+        xc += xi as f64 * ci as f64;
+        xs += xi as f64;
+    }
+    r as f64 * (xc - cb * xs)
+}
+
+/// Bit-packed code storage: `bits` bits per entry, column-major
+/// (column j occupies entries [j*d, (j+1)*d)).
+#[derive(Clone, Debug)]
+pub struct PackedCodes {
+    pub bits: u8,
+    pub len: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedCodes {
+    pub fn pack(values: &[u8], bits: u8) -> Self {
+        assert!((1..=8).contains(&bits));
+        let total_bits = values.len() * bits as usize;
+        let mut data = vec![0u8; total_bits.div_ceil(8)];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(v < (1u16 << bits) as u8 || bits == 8);
+            let bit0 = i * bits as usize;
+            let byte0 = bit0 / 8;
+            let off = bit0 % 8;
+            let w = (v as u16) << off;
+            data[byte0] |= (w & 0xFF) as u8;
+            if off + bits as usize > 8 {
+                data[byte0 + 1] |= (w >> 8) as u8;
+            }
+        }
+        PackedCodes { bits, len: values.len(), data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        let bits = self.bits as usize;
+        let bit0 = i * bits;
+        let byte0 = bit0 / 8;
+        let off = bit0 % 8;
+        let mut w = self.data[byte0] as u16;
+        if off + bits > 8 {
+            w |= (self.data[byte0 + 1] as u16) << 8;
+        }
+        ((w >> off) & ((1u16 << bits) - 1)) as u8
+    }
+
+    pub fn unpack(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Stored size in bits (payload only).
+    pub fn stored_bits(&self) -> usize {
+        self.len * self.bits as usize
+    }
+}
+
+/// Quantized matrix: all columns of a (d x c) matrix at a shared bit-width.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub d: usize,
+    pub c: usize,
+    pub bits: u8,
+    pub codes: PackedCodes,
+    /// Per-column least-squares rescale factors.
+    pub r: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize every column of `m`, parallel across columns.
+    pub fn quantize(m: &Matrix, bits: u8, mode: ScaleMode, threads: usize) -> Self {
+        let (d, c) = (m.rows, m.cols);
+        let cols: Vec<usize> = (0..c).collect();
+        let results = threadpool::parallel_map(&cols, threads, |_, &j| {
+            let col = m.col(j);
+            quantize_column(&col, bits, mode)
+        });
+        let mut all = Vec::with_capacity(d * c);
+        let mut r = Vec::with_capacity(c);
+        for (codes, rj) in results {
+            all.extend_from_slice(&codes);
+            r.push(rj);
+        }
+        QuantizedMatrix { d, c, bits, codes: PackedCodes::pack(&all, bits), r }
+    }
+
+    /// Dequantize back to a dense (d x c) matrix.
+    pub fn dequantize(&self) -> Matrix {
+        let cb = grid_center(self.bits);
+        let mut out = Matrix::zeros(self.d, self.c);
+        for j in 0..self.c {
+            let rj = self.r[j];
+            for i in 0..self.d {
+                let code = self.codes.get(j * self.d + i);
+                *out.at_mut(i, j) = rj * (code as f32 - cb);
+            }
+        }
+        out
+    }
+
+    /// Algorithm-3 matmul estimation: given X' (n x d) rotated activations,
+    /// estimate X' @ V.  Streams codes without materializing V in float.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): each column's codes are bit-unpacked
+    /// once into a stack buffer and reused across all n activation rows
+    /// (the first version unpacked per (row, col, k) triple — 128x more
+    /// unpack work at n = 128).
+    pub fn matmul_est(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.d);
+        let cb = grid_center(self.bits);
+        let mut out = Matrix::zeros(x.rows, self.c);
+        let row_sums: Vec<f32> = (0..x.rows)
+            .map(|i| x.row(i).iter().sum::<f32>())
+            .collect();
+        let mut col = vec![0f32; self.d];
+        for j in 0..self.c {
+            let base = j * self.d;
+            for (k, slot) in col.iter_mut().enumerate() {
+                *slot = self.codes.get(base + k) as f32;
+            }
+            let rj = self.r[j];
+            for i in 0..x.rows {
+                let xc = crate::tensor::dot(x.row(i), &col) as f32;
+                *out.at_mut(i, j) = rj * (xc - cb * row_sums[i]);
+            }
+        }
+        out
+    }
+
+    /// Payload size in bits: codes + one f32 rescale per column.
+    pub fn stored_bits(&self) -> usize {
+        self.codes.stored_bits() + self.c * 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::dot;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).gaussian_vec(n)
+    }
+
+    #[test]
+    fn grid_center_values() {
+        assert_eq!(grid_center(1), 0.5);
+        assert_eq!(grid_center(2), 1.5);
+        assert_eq!(grid_center(4), 7.5);
+        assert_eq!(grid_center(8), 127.5);
+    }
+
+    #[test]
+    fn codes_in_range_all_bits() {
+        let v = randvec(256, 1);
+        for bits in 1..=8u8 {
+            for mode in [ScaleMode::MaxAbs, ScaleMode::Search(6)] {
+                let (codes, _) = quantize_column(&v, bits, mode);
+                let max = (1u32 << bits) - 1;
+                assert!(codes.iter().all(|&c| (c as u32) <= max), "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_gives_zero_r() {
+        let v = vec![0f32; 64];
+        let (_, r) = quantize_column(&v, 4, ScaleMode::default());
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn reconstruction_error_decays_with_bits() {
+        let v = randvec(512, 3);
+        let vnorm = crate::tensor::norm(&v);
+        let mut prev = f64::INFINITY;
+        for bits in 1..=8u8 {
+            let (codes, r) = quantize_column(&v, bits, ScaleMode::default());
+            let mut rec = vec![0f32; v.len()];
+            dequantize_column(&codes, r, bits, &mut rec);
+            let err: f64 = v
+                .iter()
+                .zip(&rec)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / vnorm;
+            assert!(err < prev * 1.05, "bits={bits}: {err} !< {prev}");
+            // Assumption 4.1 scaling: err ~ 2^-b (generous constant)
+            assert!(err < 3.0 * 2f64.powi(-(bits as i32)), "bits={bits} err={err}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn search_never_worse_than_maxabs() {
+        for seed in 0..10u64 {
+            let v = randvec(256, seed);
+            let vnorm2 = dot(&v, &v);
+            let err_of = |mode| {
+                let (codes, r) = quantize_column(&v, 3, mode);
+                let mut rec = vec![0f32; v.len()];
+                dequantize_column(&codes, r, 3, &mut rec);
+                v.iter()
+                    .zip(&rec)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    / vnorm2
+            };
+            let e_max = err_of(ScaleMode::MaxAbs);
+            let e_search = err_of(ScaleMode::Search(8));
+            assert!(e_search <= e_max + 1e-9, "seed={seed}: {e_search} > {e_max}");
+        }
+    }
+
+    #[test]
+    fn least_squares_rescale_is_optimal() {
+        // perturbing r in either direction must not reduce the error
+        let v = randvec(128, 5);
+        let (codes, r) = quantize_column(&v, 4, ScaleMode::MaxAbs);
+        let err_with = |rr: f32| {
+            let mut rec = vec![0f32; v.len()];
+            dequantize_column(&codes, rr, 4, &mut rec);
+            v.iter().zip(&rec).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        let e0 = err_with(r);
+        assert!(e0 <= err_with(r * 1.01) + 1e-9);
+        assert!(e0 <= err_with(r * 0.99) + 1e-9);
+    }
+
+    #[test]
+    fn estimate_ip_matches_dequantized_product() {
+        let v = randvec(200, 6);
+        let x = randvec(200, 7);
+        let (codes, r) = quantize_column(&v, 4, ScaleMode::default());
+        let est = estimate_ip(&x, &codes, r, 4);
+        let mut rec = vec![0f32; v.len()];
+        dequantize_column(&codes, r, 4, &mut rec);
+        let direct = dot(&x, &rec);
+        assert!((est - direct).abs() < 1e-3 * direct.abs().max(1.0));
+    }
+
+    #[test]
+    fn error_bound_eq11_after_rotation() {
+        // |<x,v> - est| < 3*c_err/(sqrt(d) 2^b) ||x|| ||v|| for >=98% of
+        // random pairs, after RHT rotation (the bound's precondition).
+        use crate::hadamard::PracticalRht;
+        let d = 512;
+        let mut rng = Rng::new(11);
+        let rot = PracticalRht::sample(d, &mut rng);
+        let mut violations = 0;
+        let trials = 200;
+        for s in 0..trials {
+            let mut v = randvec(d, 100 + s);
+            let mut x = randvec(d, 500 + s);
+            rot.apply(&mut v);
+            rot.apply(&mut x);
+            for bits in [3u8, 5] {
+                let (codes, r) = quantize_column(&v, bits, ScaleMode::default());
+                let est = estimate_ip(&x, &codes, r, bits);
+                let exact = dot(&x, &v);
+                let bound = 3.0 * C_ERROR / ((d as f64).sqrt() * 2f64.powi(bits as i32))
+                    * crate::tensor::norm(&x)
+                    * crate::tensor::norm(&v);
+                if (est - exact).abs() > bound {
+                    violations += 1;
+                }
+            }
+        }
+        assert!(violations <= 2 * trials / 50, "violations={violations}");
+    }
+
+    #[test]
+    fn packed_codes_roundtrip_all_bits() {
+        let mut rng = Rng::new(13);
+        for bits in 1..=8u8 {
+            let max = (1u32 << bits) - 1;
+            let values: Vec<u8> = (0..1000).map(|_| (rng.below(max as usize + 1)) as u8).collect();
+            let packed = PackedCodes::pack(&values, bits);
+            assert_eq!(packed.unpack(), values, "bits={bits}");
+            assert_eq!(packed.stored_bits(), 1000 * bits as usize);
+            assert!(packed.data.len() <= 1000 * bits as usize / 8 + 1);
+        }
+    }
+
+    #[test]
+    fn packed_get_random_access() {
+        let values: Vec<u8> = (0..97).map(|i| (i % 8) as u8).collect();
+        let packed = PackedCodes::pack(&values, 3);
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(packed.get(i), v, "i={i}");
+        }
+    }
+
+    #[test]
+    fn quantized_matrix_roundtrip_and_est() {
+        let mut rng = Rng::new(21);
+        let m = Matrix::from_vec(64, 16, rng.gaussian_vec(64 * 16));
+        let qm = QuantizedMatrix::quantize(&m, 6, ScaleMode::default(), 2);
+        let rec = qm.dequantize();
+        assert!(rec.rel_err(&m) < 0.1);
+        // matmul_est == X @ dequantize
+        let x = Matrix::from_vec(8, 64, rng.gaussian_vec(8 * 64));
+        let est = qm.matmul_est(&x);
+        let direct = x.matmul(&rec);
+        assert!(est.rel_err(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn quantized_matrix_threads_agree() {
+        let mut rng = Rng::new(22);
+        let m = Matrix::from_vec(32, 24, rng.gaussian_vec(32 * 24));
+        let a = QuantizedMatrix::quantize(&m, 3, ScaleMode::Search(4), 1);
+        let b = QuantizedMatrix::quantize(&m, 3, ScaleMode::Search(4), 8);
+        assert_eq!(a.codes.unpack(), b.codes.unpack());
+        assert_eq!(a.r, b.r);
+    }
+
+    #[test]
+    fn stored_bits_accounting() {
+        let mut rng = Rng::new(23);
+        let m = Matrix::from_vec(128, 4, rng.gaussian_vec(128 * 4));
+        let qm = QuantizedMatrix::quantize(&m, 2, ScaleMode::MaxAbs, 1);
+        assert_eq!(qm.stored_bits(), 128 * 4 * 2 + 4 * 32);
+    }
+}

@@ -1,0 +1,228 @@
+//! Deterministic PRNG substrate (the environment vendors no `rand` crate).
+//!
+//! `SplitMix64` seeds `Xoshiro256**`; Gaussian sampling via Box–Muller and
+//! Rademacher sampling for the RHT diagonal (paper Alg. 2). All generators
+//! are seedable and reproducible across runs — every experiment in
+//! EXPERIMENTS.md records its seed.
+
+/// SplitMix64 — used to expand a single u64 seed into a full state.
+#[derive(Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — the main generator (fast, high quality, tiny state).
+#[derive(Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller sample.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Rng {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free is overkill here; modulo bias is
+        // negligible for n << 2^64.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi > lo);
+        lo + (self.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    /// Rademacher sample: +1.0 or -1.0 with equal probability.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Vector of Rademacher +-1 samples (the RHT diagonal D).
+    pub fn rademacher_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rademacher()).collect()
+    }
+
+    /// Vector of standard normal f32 samples.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.gaussian() as f32).collect()
+    }
+
+    /// Sample from a discrete distribution given cumulative weights.
+    pub fn sample_cumulative(&mut self, cum: &[f64]) -> usize {
+        let total = *cum.last().expect("empty cumulative");
+        let x = self.next_f64() * total;
+        match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cum.len() - 1),
+            Err(i) => i.min(cum.len() - 1),
+        }
+    }
+
+    /// Fork a child generator (for parallel workers) — distinct stream.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(3);
+        let m: f64 = (0..50_000).map(|_| r.next_f64()).sum::<f64>() / 50_000.0;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::new(5);
+        let v = r.rademacher_vec(100_000);
+        let pos = v.iter().filter(|&&x| x > 0.0).count();
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!((pos as f64 / 100_000.0 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_in_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn forked_streams_distinct() {
+        let mut r = Rng::new(1);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn sample_cumulative_respects_weights() {
+        let mut r = Rng::new(13);
+        let cum = [1.0, 1.0, 2.0]; // item1 has zero mass
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.sample_cumulative(&cum)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[0] > 4_000 && counts[2] > 4_000);
+    }
+}

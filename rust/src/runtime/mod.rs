@@ -1,0 +1,214 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`. HLO **text** is the interchange
+//! format (jax ≥ 0.5 serialized protos are rejected by xla_extension
+//! 0.5.1 — see DESIGN.md). All entry points were lowered with
+//! `return_tuple=True`, so outputs arrive as a single tuple literal that
+//! we decompose.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::{ArtifactPaths, Manifest, ModelParams};
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Artifact {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+/// A compiled executable artifact.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+}
+
+// ------------------------------------------------------------ literal glue
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32 shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32 shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+// ------------------------------------------------------- model-level glue
+
+/// A loaded model: manifest + the compiled entry points used everywhere.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub init_params: Artifact,
+    pub train_step: Artifact,
+    pub fwd_loss: Artifact,
+    pub fwd_logits: Artifact,
+    pub calib_grads: Artifact,
+    pub calib_capture: Artifact,
+}
+
+impl ModelRuntime {
+    /// Load every entry point for `model` from the artifacts root.
+    pub fn load(rt: &Runtime, root: &Path, model: &str) -> Result<Self> {
+        let paths = ArtifactPaths::new(root, model);
+        let manifest = Manifest::load(&paths.dir)
+            .with_context(|| format!("run `make artifacts` first (model {model})"))?;
+        Ok(ModelRuntime {
+            manifest,
+            init_params: rt.load(&paths.hlo("init_params"))?,
+            train_step: rt.load(&paths.hlo("train_step"))?,
+            fwd_loss: rt.load(&paths.hlo("fwd_loss"))?,
+            fwd_logits: rt.load(&paths.hlo("fwd_logits"))?,
+            calib_grads: rt.load(&paths.hlo("calib_grads"))?,
+            calib_capture: rt.load(&paths.hlo("calib_capture"))?,
+        })
+    }
+
+    /// Initialize parameters via the AOT init artifact.
+    pub fn init(&self, seed: i32) -> Result<ModelParams> {
+        let outs = self.init_params.run(&[lit_scalar_i32(seed)])?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.params.len(),
+            "init output arity {} != {}",
+            outs.len(),
+            self.manifest.params.len()
+        );
+        let tensors = outs
+            .iter()
+            .map(to_vec_f32)
+            .collect::<Result<Vec<_>>>()?;
+        ModelParams::from_tensors(&self.manifest, tensors)
+    }
+
+    /// Literal list for the current params (shared prefix of most calls).
+    pub fn param_literals(&self, params: &ModelParams) -> Result<Vec<xla::Literal>> {
+        params
+            .specs
+            .iter()
+            .zip(&params.tensors)
+            .map(|(spec, t)| lit_f32(t, &spec.shape))
+            .collect()
+    }
+
+    /// Per-token negative log likelihood for a (B, S) token batch.
+    pub fn token_nll(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            tokens.len() == m.eval_batch * m.seq_len,
+            "token batch must be eval_batch x seq_len"
+        );
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(lit_i32(tokens, &[m.eval_batch, m.seq_len])?);
+        let outs = self.fwd_loss.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+
+    /// Last-position logits for a (B, S) token batch -> (B, vocab).
+    pub fn last_logits(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(lit_i32(tokens, &[m.eval_batch, m.seq_len])?);
+        let outs = self.fwd_logits.run(&inputs)?;
+        to_vec_f32(&outs[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ (integration);
+    // here we only cover the literal glue.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = lit_scalar_f32(7.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 7.5);
+        let v = lit_f32(&[1.0, 2.0], &[2]).unwrap();
+        assert!(to_scalar_f32(&v).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Batching inference server: the L3 request path over quantized weights.
+//!
+//! Architecture (vLLM-router-style, scaled to this repo): callers submit
+//! [`Request`]s to a [`Server`] handle; a batcher thread drains the queue,
+//! packs up to `eval_batch` prompts into one fixed-shape `fwd_logits`
+//! execution, samples one token per sequence, and re-queues unfinished
+//! sequences — continuous batching over a fixed window. Python is never on
+//! this path; the weights are the (de)quantized parameters.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::ModelParams;
+use crate::runtime::ModelRuntime;
+use crate::util::percentile;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Greedy if 0.0, else temperature sampling with this temperature.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_secs: f64,
+    /// Number of batch steps this request rode in.
+    pub steps: usize,
+}
+
+struct Active {
+    req: Request,
+    generated: Vec<i32>,
+    submitted: Instant,
+    steps: usize,
+    done_tx: mpsc::Sender<Completion>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Active>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Server handle. Dropping it stops the batcher thread.
+pub struct Server {
+    shared: Arc<Shared>,
+    worker: Option<thread::JoinHandle<Result<ServerStats>>>,
+    next_id: Mutex<u64>,
+}
+
+/// Aggregate metrics reported on shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub completions: usize,
+    pub batch_steps: usize,
+    pub total_rows: usize,
+    pub tokens_generated: usize,
+    pub latencies: Vec<f64>,
+    pub wall_secs: f64,
+}
+
+impl ServerStats {
+    pub fn mean_batch_occupancy(&self, batch: usize) -> f64 {
+        if self.batch_steps == 0 {
+            return 0.0;
+        }
+        self.total_rows as f64 / (self.batch_steps * batch) as f64
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_secs
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        percentile(&self.latencies, 50.0)
+    }
+
+    pub fn p95_latency(&self) -> f64 {
+        percentile(&self.latencies, 95.0)
+    }
+}
+
+fn softmax_sample(logits: &[f32], temperature: f32, seed: u64, step: usize) -> i32 {
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+    }
+    let mut rng = crate::rng::Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37));
+    let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let exps: Vec<f64> = logits
+        .iter()
+        .map(|&x| (((x - maxl) / temperature) as f64).exp())
+        .collect();
+    let mut cum = Vec::with_capacity(exps.len());
+    let mut acc = 0.0;
+    for e in exps {
+        acc += e;
+        cum.push(acc);
+    }
+    rng.sample_cumulative(&cum) as i32
+}
+
+impl Server {
+    /// Start a server over `params` (typically quantized weights).
+    ///
+    /// PJRT handles are not `Send`, so the batcher thread constructs its
+    /// own runtime via `factory` (e.g. `|| ModelRuntime::load(...)` with a
+    /// fresh `Runtime::cpu()`); `params` moves into the thread. The fixed
+    /// window is the model's `seq_len` and the batch is `eval_batch`.
+    pub fn start<F>(factory: F, params: ModelParams) -> Server
+    where
+        F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
+    {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let s2 = Arc::clone(&shared);
+        let worker = thread::spawn(move || {
+            let mrt = factory()?;
+            batcher_loop(s2, mrt, params)
+        });
+        Server { shared, worker: Some(worker), next_id: Mutex::new(1) }
+    }
+
+    /// Submit a request; returns a receiver for the completion.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> (u64, mpsc::Receiver<Completion>) {
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            let id = *g;
+            *g += 1;
+            id
+        };
+        let (tx, rx) = mpsc::channel();
+        let act = Active {
+            req: Request { id, prompt, max_new_tokens, temperature, seed },
+            generated: Vec::new(),
+            submitted: Instant::now(),
+            steps: 0,
+            done_tx: tx,
+        };
+        self.shared.queue.lock().unwrap().push_back(act);
+        self.shared.cv.notify_one();
+        (id, rx)
+    }
+
+    /// Stop the batcher (after draining) and collect stats.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        {
+            let mut s = self.shared.shutdown.lock().unwrap();
+            *s = true;
+        }
+        self.shared.cv.notify_all();
+        let handle = self.worker.take().expect("not yet shut down");
+        handle.join().map_err(|_| anyhow::anyhow!("batcher panicked"))?
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.worker.is_some() {
+            {
+                let mut s = self.shared.shutdown.lock().unwrap();
+                *s = true;
+            }
+            self.shared.cv.notify_all();
+            if let Some(h) = self.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn batcher_loop(
+    shared: Arc<Shared>,
+    mrt: ModelRuntime,
+    params: ModelParams,
+) -> Result<ServerStats> {
+    let m = &mrt.manifest;
+    let (batch, seq) = (m.eval_batch, m.seq_len);
+    let mut stats = ServerStats::default();
+    let start = Instant::now();
+
+    loop {
+        // grab up to `batch` active requests
+        let mut work: Vec<Active> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    stats.wall_secs = start.elapsed().as_secs_f64();
+                    return Ok(stats);
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, std::time::Duration::from_millis(20))
+                    .unwrap();
+                q = guard;
+            }
+            let take = q.len().min(batch);
+            q.drain(..take).collect()
+        };
+
+        // pack the fixed-shape window: right-align (prompt + generated),
+        // left-pad with zeros, last real token at position seq-1
+        let mut tokens = vec![0i32; batch * seq];
+        for (row, act) in work.iter().enumerate() {
+            let mut ctx: Vec<i32> = act
+                .req
+                .prompt
+                .iter()
+                .chain(act.generated.iter())
+                .copied()
+                .collect();
+            if ctx.len() > seq {
+                ctx.drain(..ctx.len() - seq);
+            }
+            let off = row * seq + (seq - ctx.len());
+            tokens[off..row * seq + seq].copy_from_slice(&ctx);
+        }
+
+        let logits = mrt.last_logits(&params, &tokens)?;
+        let vocab = m.vocab;
+        stats.batch_steps += 1;
+        stats.total_rows += work.len();
+
+        // sample, update, re-queue or complete
+        for (row, mut act) in work.drain(..).enumerate() {
+            let l = &logits[row * vocab..(row + 1) * vocab];
+            let tok = softmax_sample(l, act.req.temperature, act.req.seed, act.steps);
+            act.generated.push(tok);
+            act.steps += 1;
+            stats.tokens_generated += 1;
+            if act.generated.len() >= act.req.max_new_tokens {
+                let latency = act.submitted.elapsed().as_secs_f64();
+                stats.latencies.push(latency);
+                stats.completions += 1;
+                let _ = act.done_tx.send(Completion {
+                    id: act.req.id,
+                    tokens: act.generated,
+                    latency_secs: latency,
+                    steps: act.steps,
+                });
+            } else {
+                shared.queue.lock().unwrap().push_back(act);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let logits = vec![0.1f32, 2.0, -1.0, 1.9];
+        assert_eq!(softmax_sample(&logits, 0.0, 0, 0), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_in_range_and_seeded() {
+        let logits = vec![0.0f32; 16];
+        let a = softmax_sample(&logits, 1.0, 42, 3);
+        let b = softmax_sample(&logits, 1.0, 42, 3);
+        assert_eq!(a, b);
+        assert!((0..16).contains(&a));
+    }
+
+    #[test]
+    fn stats_math() {
+        let s = ServerStats {
+            completions: 2,
+            batch_steps: 4,
+            total_rows: 12,
+            tokens_generated: 40,
+            latencies: vec![0.1, 0.2],
+            wall_secs: 2.0,
+        };
+        assert!((s.mean_batch_occupancy(4) - 0.75).abs() < 1e-12);
+        assert!((s.throughput_tok_s() - 20.0).abs() < 1e-12);
+        assert!(s.p95_latency() >= s.p50_latency());
+    }
+}

@@ -1,0 +1,370 @@
+//! Dense f32 tensor substrate (no ndarray crate in the offline vendor set).
+//!
+//! Row-major [`Matrix`] plus the linear algebra the quantizers need:
+//! matmul (naive + cache-blocked), transpose, Frobenius/row/column norms,
+//! Cholesky decomposition and SPD inversion (for the GPTQ baseline's
+//! Hessian), and simple elementwise helpers.
+
+use std::fmt;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column j (strided gather).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other`, cache-blocked ikj loop.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ v` for a vector.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i).iter().zip(v).map(|(a, b)| a * b).sum::<f32>()
+            })
+            .collect()
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// L2 norm of each column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let mut acc = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                acc[j] += (x as f64) * (x as f64);
+            }
+        }
+        acc.into_iter().map(f64::sqrt).collect()
+    }
+
+    /// L2 norm of each row.
+    pub fn row_norms(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| {
+                self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+            })
+            .collect()
+    }
+
+    /// Mean of each column.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut acc = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                acc[j] += x as f64;
+            }
+        }
+        acc.into_iter().map(|s| (s / self.rows as f64) as f32).collect()
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Relative Frobenius error ||self - other||_F / ||other||_F.
+    pub fn rel_err(&self, other: &Matrix) -> f64 {
+        let denom = other.frobenius_norm().max(1e-30);
+        self.sub(other).frobenius_norm() / denom
+    }
+}
+
+/// Cholesky decomposition of a symmetric positive-definite matrix: A = L L^T.
+/// Returns the lower-triangular L, or None if A is not SPD (within jitter).
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= (l.at(i, k) as f64) * (l.at(j, k) as f64);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky (A^-1 = L^-T L^-1).
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    // Solve L X = I column by column (forward substitution), then L^T A^-1 = X.
+    let mut inv = Matrix::zeros(n, n);
+    for col in 0..n {
+        // forward: L y = e_col
+        let mut y = vec![0f64; n];
+        for i in 0..n {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for k in 0..i {
+                s -= (l.at(i, k) as f64) * y[k];
+            }
+            y[i] = s / l.at(i, i) as f64;
+        }
+        // backward: L^T x = y
+        let mut x = vec![0f64; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= (l.at(k, i) as f64) * x[k];
+            }
+            x[i] = s / l.at(i, i) as f64;
+        }
+        for i in 0..n {
+            *inv.at_mut(i, col) = x[i] as f32;
+        }
+    }
+    Some(inv)
+}
+
+/// Dot product of two f32 slices in f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+}
+
+/// L2 norm of an f32 slice in f64 accumulation.
+#[inline]
+pub fn norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(r, c, rng.gaussian_vec(r * c))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = random_matrix(5, 5, 1);
+        let i = Matrix::eye(5);
+        assert!(a.matmul(&i).rel_err(&a) < 1e-6);
+        assert!(i.matmul(&a).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_associative_with_transpose() {
+        let a = random_matrix(7, 4, 2);
+        let b = random_matrix(4, 9, 3);
+        let c = a.matmul(&b);
+        let ct = b.transpose().matmul(&a.transpose());
+        assert!(c.transpose().rel_err(&ct) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = random_matrix(13, 7, 4);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = random_matrix(6, 8, 5);
+        let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let got = a.matvec(&v);
+        let vm = Matrix::from_vec(8, 1, v);
+        let want = a.matmul(&vm);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((a.frobenius_norm() - 5.0).abs() < 1e-9);
+        let cn = a.col_norms();
+        assert!((cn[0] - 3.0).abs() < 1e-9 && (cn[1] - 4.0).abs() < 1e-9);
+        let rn = a.row_norms();
+        assert!((rn[0] - 3.0).abs() < 1e-9 && (rn[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn col_means_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 10.0, 3.0, 30.0]);
+        let m = a.col_means();
+        assert!((m[0] - 2.0).abs() < 1e-6 && (m[1] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B B^T + n*I is SPD
+        let b = random_matrix(8, 8, 6);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..8 {
+            *a.at_mut(i, i) += 8.0;
+        }
+        let l = cholesky(&a).expect("SPD");
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.rel_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let b = random_matrix(6, 6, 7);
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..6 {
+            *a.at_mut(i, i) += 6.0;
+        }
+        let inv = spd_inverse(&a).expect("SPD");
+        let prod = a.matmul(&inv);
+        assert!(prod.rel_err(&Matrix::eye(6)) < 1e-3);
+    }
+
+    #[test]
+    fn set_col_roundtrip() {
+        let mut a = Matrix::zeros(4, 3);
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        a.set_col(1, &v);
+        assert_eq!(a.col(1), v);
+        assert_eq!(a.col(0), vec![0.0; 4]);
+    }
+}

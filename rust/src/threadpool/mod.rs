@@ -1,0 +1,208 @@
+//! Thread-parallel helpers (no rayon in the offline vendor set).
+//!
+//! [`parallel_chunks`] is the quantizer hot-path primitive: it splits a
+//! mutable slice of work items across `std::thread::scope` workers.
+//! [`Pool`] is a long-lived task pool used by the serving coordinator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use (env `RAANA_THREADS` overrides).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RAANA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(index, item)` over all items, work-stealing via an atomic cursor.
+pub fn parallel_for<T: Sync, F: Fn(usize, &T) + Sync>(items: &[T], threads: usize, f: F) {
+    if items.is_empty() {
+        return;
+    }
+    let threads = threads.clamp(1, items.len());
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                f(i, &items[i]);
+            });
+        }
+    });
+}
+
+/// Map `f` over items in parallel preserving order.
+pub fn parallel_map<T: Sync, R: Send, F: Fn(usize, &T) -> R + Sync>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    let cursor = AtomicUsize::new(0);
+    let threads = threads.clamp(1, items.len().max(1));
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // SAFETY-free approach: short lock to place the result.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("worker filled slot")).collect()
+}
+
+/// Split a mutable slice into chunks processed by separate threads.
+pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk: usize,
+    threads: usize,
+    f: F,
+) {
+    if data.is_empty() {
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let cursor = AtomicUsize::new(0);
+    let chunks = Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
+    let n = {
+        let g = chunks.lock().unwrap();
+        g.len()
+    };
+    let threads = threads.clamp(1, n);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let taken = {
+                    let mut g = chunks.lock().unwrap();
+                    g[i].take()
+                };
+                if let Some((idx, slice)) = taken {
+                    f(idx, slice);
+                }
+            });
+        }
+    });
+}
+
+/// A long-lived FIFO task pool (used by the serving coordinator).
+pub struct Pool {
+    tx: Option<mpsc::Sender<Box<dyn FnOnce() + Send>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Box<dyn FnOnce() + Send>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Pool { tx: Some(tx), workers }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool closed")
+            .send(Box::new(f))
+            .expect("pool workers alive");
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_all() {
+        let items: Vec<usize> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        parallel_for(&items, 8, |_, &x| {
+            sum.fetch_add(x as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, 7, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_chunks_mut_writes_disjoint() {
+        let mut data = vec![0u32; 1003];
+        parallel_chunks_mut(&mut data, 100, 4, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx as u32 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[1002], 11);
+    }
+
+    #[test]
+    fn pool_runs_tasks() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn empty_inputs_ok() {
+        let items: Vec<u8> = vec![];
+        parallel_for(&items, 4, |_, _| panic!("should not run"));
+        let out: Vec<u8> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! Training driver: loops the AOT `train_step` artifact (AdamW fwd+bwd+
+//! update fused into one HLO executable) from Rust. Python never runs here.
+
+use anyhow::Result;
+
+use crate::data::Corpus;
+use crate::model::ModelParams;
+use crate::rng::Rng;
+use crate::runtime::{
+    lit_i32, lit_scalar_f32, lit_scalar_i32, to_scalar_f32, to_vec_f32, ModelRuntime,
+};
+use crate::util::Timer;
+
+/// Training hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    /// Linear warmup steps before cosine decay to `lr * 0.1`.
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, lr: 3e-3, warmup: 20, seed: 1234, log_every: 20 }
+    }
+}
+
+/// Loss-curve entry.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f64,
+    pub secs: f64,
+}
+
+fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
+    if step < cfg.warmup {
+        cfg.lr * (step + 1) as f64 / cfg.warmup as f64
+    } else {
+        let t = (step - cfg.warmup) as f64 / (cfg.steps - cfg.warmup).max(1) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        cfg.lr * (0.1 + 0.9 * cos)
+    }
+}
+
+/// Train `params` in place; returns the loss curve.
+pub fn train(
+    mrt: &ModelRuntime,
+    params: &mut ModelParams,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+) -> Result<Vec<TrainLog>> {
+    let m = &mrt.manifest;
+    let np = m.params.len();
+    let mut rng = Rng::new(cfg.seed);
+    let timer = Timer::start();
+
+    // Adam state starts at zero.
+    let mut mstate: Vec<Vec<f32>> =
+        params.tensors.iter().map(|t| vec![0.0; t.len()]).collect();
+    let mut vstate = mstate.clone();
+
+    let mut logs = Vec::new();
+    for step in 0..cfg.steps {
+        let lr = lr_at(cfg, step);
+        let batch = corpus.train_batch(m.train_batch, &mut rng);
+
+        let mut inputs = Vec::with_capacity(3 * np + 3);
+        for (spec, t) in params.specs.iter().zip(&params.tensors) {
+            inputs.push(crate::runtime::lit_f32(t, &spec.shape)?);
+        }
+        for (spec, t) in params.specs.iter().zip(&mstate) {
+            inputs.push(crate::runtime::lit_f32(t, &spec.shape)?);
+        }
+        for (spec, t) in params.specs.iter().zip(&vstate) {
+            inputs.push(crate::runtime::lit_f32(t, &spec.shape)?);
+        }
+        inputs.push(lit_scalar_i32(step as i32));
+        inputs.push(lit_scalar_f32(lr as f32));
+        inputs.push(lit_i32(&batch, &[m.train_batch, m.seq_len])?);
+
+        let outs = mrt.train_step.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 3 * np + 1, "train_step arity");
+        for (i, t) in params.tensors.iter_mut().enumerate() {
+            *t = to_vec_f32(&outs[i])?;
+        }
+        for (i, t) in mstate.iter_mut().enumerate() {
+            *t = to_vec_f32(&outs[np + i])?;
+        }
+        for (i, t) in vstate.iter_mut().enumerate() {
+            *t = to_vec_f32(&outs[2 * np + i])?;
+        }
+        let loss = to_scalar_f32(&outs[3 * np])?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            crate::info!(
+                "train step {step:>5} loss {loss:.4} lr {lr:.2e} ({:.1}s)",
+                timer.secs()
+            );
+            logs.push(TrainLog { step, loss, lr, secs: timer.secs() });
+        }
+    }
+    Ok(logs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, lr: 1e-2, warmup: 10, ..Default::default() };
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 9)); // warming up
+        assert!((lr_at(&cfg, 9) - 1e-2).abs() < 1.1e-3); // near peak
+        assert!(lr_at(&cfg, 99) < lr_at(&cfg, 50)); // decaying
+        assert!(lr_at(&cfg, 99) >= 0.1 * 1e-2 - 1e-9); // floor
+    }
+}

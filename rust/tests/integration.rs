@@ -1,0 +1,397 @@
+//! Integration tests over the real AOT artifacts (micro model).
+//!
+//! Requires `make artifacts` (MODELS includes `micro`). Every test shares
+//! one PJRT client + compiled artifact set via a process-global lazy Env —
+//! compiling the HLO once keeps the suite fast.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use raana::calib::{calibrate, CalibMode};
+use raana::data::{detokenize, tokenize, Corpus};
+use raana::experiments::{
+    baseline_quantize, raana_quantize, raana_quantize_with_calib, Baseline, Env,
+};
+use raana::model::{artifacts_root, ModelParams};
+use raana::quant::TrickConfig;
+use raana::runtime::{lit_f32, to_vec_f32, ModelRuntime, Runtime};
+use raana::train::{train, TrainConfig};
+
+fn artifacts_available() -> bool {
+    artifacts_root().join("micro").join("manifest.json").exists()
+}
+
+/// PJRT handles are neither Send nor Sync, so each test builds its own Env
+/// (micro artifacts compile in well under a second each). A global lock
+/// serializes tests so the first one trains + writes the shared checkpoint
+/// without races; later Envs just load it.
+struct EnvGuard {
+    _lock: MutexGuard<'static, ()>,
+    env: Env,
+}
+
+impl std::ops::Deref for EnvGuard {
+    type Target = Env;
+    fn deref(&self) -> &Env {
+        &self.env
+    }
+}
+
+fn env() -> EnvGuard {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let lock = LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner());
+    std::env::set_var("RAANA_TRAIN_STEPS", "40");
+    std::env::set_var("RAANA_TRAIN_SEQS", "400");
+    std::env::set_var("RAANA_TEST_SEQS", "16");
+    EnvGuard {
+        _lock: lock,
+        env: Env::load("micro").expect("run `make artifacts` first"),
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/micro missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn init_params_match_manifest_shapes() {
+    require_artifacts!();
+    let e = env();
+    let p = e.mrt.init(123).unwrap();
+    assert_eq!(p.specs.len(), e.mrt.manifest.params.len());
+    for (spec, t) in p.specs.iter().zip(&p.tensors) {
+        assert_eq!(spec.numel(), t.len(), "{}", spec.name);
+    }
+    // embeddings should be non-trivial, biases zero
+    let emb = p.get("tok_emb").unwrap();
+    assert!(emb.iter().any(|&x| x != 0.0));
+    let b = p.get("blk0.attn.wq.b").unwrap();
+    assert!(b.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    require_artifacts!();
+    let e = env();
+    let a = e.mrt.init(5).unwrap();
+    let b = e.mrt.init(5).unwrap();
+    let c = e.mrt.init(6).unwrap();
+    assert_eq!(a.tensors, b.tensors);
+    assert_ne!(a.tensors, c.tensors);
+}
+
+#[test]
+fn training_reduces_loss() {
+    require_artifacts!();
+    let e = env();
+    let mut params = e.mrt.init(9).unwrap();
+    let cfg = TrainConfig { steps: 25, log_every: 5, ..Default::default() };
+    let logs = train(&e.mrt, &mut params, &e.wiki, &cfg).unwrap();
+    assert!(logs.len() >= 2);
+    let first = logs.first().unwrap().loss;
+    let last = logs.last().unwrap().loss;
+    assert!(
+        last < first - 0.3,
+        "training should reduce loss: {first} -> {last}"
+    );
+}
+
+#[test]
+fn env_checkpoint_roundtrips_through_disk() {
+    require_artifacts!();
+    let e = env();
+    let reloaded = ModelParams::load(&e.ckpt_path).unwrap();
+    assert_eq!(reloaded.tensors, e.params.tensors);
+}
+
+#[test]
+fn perplexity_sane_and_deterministic() {
+    require_artifacts!();
+    let e = env();
+    let p1 = e.perplexity(&e.params, &e.wiki, 8).unwrap();
+    let p2 = e.perplexity(&e.params, &e.wiki, 8).unwrap();
+    assert_eq!(p1, p2);
+    // trained 40 steps on bytes: far better than uniform (256), worse than 1.5
+    assert!(p1 > 1.5 && p1 < 200.0, "ppl {p1}");
+}
+
+#[test]
+fn calibration_produces_positive_stable_alphas() {
+    require_artifacts!();
+    let e = env();
+    let few = calibrate(&e.mrt, &e.params, &CalibMode::FewShot(3), &e.wiki).unwrap();
+    let zero = calibrate(&e.mrt, &e.params, &CalibMode::ZeroShot, &e.wiki).unwrap();
+    let nl = e.mrt.manifest.linears.len();
+    assert_eq!(few.alphas.len(), nl);
+    assert_eq!(zero.alphas.len(), nl);
+    assert!(few.alphas.iter().all(|&a| a > 0.0 && a.is_finite()));
+    assert!(zero.alphas.iter().all(|&a| a > 0.0 && a.is_finite()));
+    // zero-shot alphas should correlate with few-shot (paper section 4.2):
+    // same argsort on at least the top layer
+    let top_few = few
+        .alphas
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let rank_zero = {
+        let mut idx: Vec<usize> = (0..nl).collect();
+        idx.sort_by(|&a, &b| zero.alphas[b].partial_cmp(&zero.alphas[a]).unwrap());
+        idx.iter().position(|&i| i == top_few).unwrap()
+    };
+    assert!(rank_zero < nl / 2, "few-shot top layer ranked {rank_zero} by zero-shot");
+}
+
+#[test]
+fn calibration_hessians_are_gram_matrices() {
+    require_artifacts!();
+    let e = env();
+    let c = calibrate(&e.mrt, &e.params, &CalibMode::FewShot(2), &e.wiki).unwrap();
+    for (h, lin) in c.hessians.iter().zip(&e.mrt.manifest.linears) {
+        assert_eq!((h.rows, h.cols), (lin.d, lin.d));
+        // symmetric PSD-ish: diagonal non-negative, h[i][j] == h[j][i]
+        for i in 0..lin.d.min(8) {
+            assert!(h.at(i, i) >= 0.0);
+            for j in 0..i {
+                assert!((h.at(i, j) - h.at(j, i)).abs() < 1e-2);
+            }
+        }
+    }
+}
+
+#[test]
+fn raana_ppl_improves_with_bits_and_stays_close_at_4() {
+    require_artifacts!();
+    let e = env();
+    let ppl_fp = e.perplexity(&e.params, &e.wiki, 8).unwrap();
+    let calib = calibrate(&e.mrt, &e.params, &CalibMode::FewShot(5), &e.wiki).unwrap();
+    let mut ppls = Vec::new();
+    for target in [2.1f64, 3.1, 4.1] {
+        let (qp, report) = raana_quantize_with_calib(
+            &e, &calib, target, &(1..=8).collect::<Vec<u8>>(),
+            &TrickConfig::default(), 7, 0,
+        )
+        .unwrap();
+        // honest accounting: actual avg bits within 0.5 of target
+        assert!(
+            (report.avg_bits - target).abs() < 0.5,
+            "target {target} actual {}",
+            report.avg_bits
+        );
+        ppls.push(e.perplexity(&qp, &e.wiki, 8).unwrap());
+    }
+    assert!(ppls[2] <= ppls[0] * 1.05, "4-bit should beat 2-bit: {ppls:?}");
+    assert!(
+        ppls[2] < ppl_fp * 1.10,
+        "4-bit RaanA within 10% of fp32: {} vs {ppl_fp}",
+        ppls[2]
+    );
+}
+
+#[test]
+fn zero_shot_calibration_works_end_to_end() {
+    require_artifacts!();
+    let e = env();
+    let (qp, report) = raana_quantize(
+        &e, &CalibMode::ZeroShot, 4.1, &(1..=8).collect::<Vec<u8>>(),
+        &TrickConfig::default(), 7, 0,
+    )
+    .unwrap();
+    let ppl_fp = e.perplexity(&e.params, &e.wiki, 8).unwrap();
+    let ppl_q = e.perplexity(&qp, &e.wiki, 8).unwrap();
+    assert!(
+        ppl_q < ppl_fp * 1.15,
+        "zero-shot 4-bit ppl {ppl_q} vs fp {ppl_fp}"
+    );
+    assert!(report.avg_bits < 5.5);
+}
+
+#[test]
+fn baselines_run_and_rank_sanely() {
+    require_artifacts!();
+    let e = env();
+    let calib = calibrate(&e.mrt, &e.params, &CalibMode::FewShot(5), &e.wiki).unwrap();
+    let ppl_fp = e.perplexity(&e.params, &e.wiki, 8).unwrap();
+    for method in [Baseline::Rtn, Baseline::Gptq, Baseline::Awq, Baseline::EasyQuant] {
+        let (qp, avg) = baseline_quantize(&e, &calib, method, 4).unwrap();
+        let ppl = e.perplexity(&qp, &e.wiki, 8).unwrap();
+        assert!(
+            ppl < ppl_fp * 1.25,
+            "{} 4-bit ppl {ppl} vs fp {ppl_fp}",
+            method.name()
+        );
+        // micro layers are 64-256 dims, so per-group/outlier side payloads
+        // dominate (realistic layers land near the paper's +0.25)
+        assert!(avg >= 4.0 && avg < 5.5, "{} avg {avg}", method.name());
+    }
+}
+
+#[test]
+fn fwd_logits_agree_with_fwd_loss_distribution() {
+    require_artifacts!();
+    let e = env();
+    let m = &e.mrt.manifest;
+    // build a batch whose next token is highly predictable: repeated text
+    let text = "abcabcabc".repeat(40);
+    let toks = tokenize(&text);
+    let mut batch = Vec::new();
+    for _ in 0..m.eval_batch {
+        batch.extend_from_slice(&toks[..m.seq_len]);
+    }
+    let logits = e.mrt.last_logits(&e.params, &batch).unwrap();
+    assert_eq!(logits.len(), m.eval_batch * m.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn qmatmul_artifact_matches_rust_estimator() {
+    require_artifacts!();
+    let _e = env(); // ensure artifacts tree exists
+    let path = artifacts_root()
+        .join("kernels")
+        .join("qmatmul_128x256x256_b4.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: kernel artifacts missing");
+        return;
+    }
+    use raana::rabitq::{QuantizedMatrix, ScaleMode};
+    use raana::rng::Rng;
+    use raana::tensor::Matrix;
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load(&path).unwrap();
+    let (n, d, c, bits) = (128usize, 256usize, 256usize, 4u8);
+    let v = Matrix::from_vec(d, c, Rng::new(1).gaussian_vec(d * c));
+    let x = Matrix::from_vec(n, d, Rng::new(2).gaussian_vec(n * d));
+    let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, 2);
+    let want = qm.matmul_est(&x);
+    let unpacked = qm.codes.unpack();
+    let mut codes_f32 = vec![0f32; d * c];
+    for j in 0..c {
+        for i in 0..d {
+            codes_f32[i * c + j] = unpacked[j * d + i] as f32;
+        }
+    }
+    let outs = art
+        .run(&[
+            lit_f32(&x.data, &[n, d]).unwrap(),
+            lit_f32(&codes_f32, &[d, c]).unwrap(),
+            lit_f32(&qm.r, &[c]).unwrap(),
+        ])
+        .unwrap();
+    let got = Matrix::from_vec(n, c, to_vec_f32(&outs[0]).unwrap());
+    assert!(got.rel_err(&want) < 1e-4, "rel err {}", got.rel_err(&want));
+}
+
+#[test]
+fn hadamard_artifact_matches_rust_rht() {
+    require_artifacts!();
+    let _e = env();
+    let path = artifacts_root().join("kernels").join("hadamard_128x256.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: kernel artifacts missing");
+        return;
+    }
+    use raana::hadamard::rht;
+    use raana::rng::Rng;
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load(&path).unwrap();
+    let (n, d) = (128usize, 256usize);
+    let mut rng = Rng::new(3);
+    let x = rng.gaussian_vec(n * d);
+    let signs = rng.rademacher_vec(d);
+    let outs = art
+        .run(&[
+            lit_f32(&x, &[n, d]).unwrap(),
+            lit_f32(&signs, &[d]).unwrap(),
+        ])
+        .unwrap();
+    let got = to_vec_f32(&outs[0]).unwrap();
+    // Rust applies the same transform row by row
+    let mut want = x;
+    for row in want.chunks_mut(d) {
+        rht(row, &signs);
+    }
+    let err: f64 = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let norm: f64 = want.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(err / norm < 1e-4, "rel err {}", err / norm);
+}
+
+#[test]
+fn server_round_trip_over_quantized_weights() {
+    require_artifacts!();
+    let qparams = {
+        let e = env();
+        let (qp, _) = raana_quantize(
+            &e, &CalibMode::FewShot(3), 4.1, &(1..=8).collect::<Vec<u8>>(),
+            &TrickConfig::default(), 7, 0,
+        )
+        .unwrap();
+        qp
+    }; // env lock released before the server spawns its own runtime
+
+    let server = raana::serve::Server::start(
+        move || {
+            let rt = Runtime::cpu()?;
+            ModelRuntime::load(&rt, &artifacts_root(), "micro")
+        },
+        qparams,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        let (_, rx) = server.submit(tokenize("the fox "), 6, 0.0, i);
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let c = rx.recv().unwrap();
+        assert_eq!(c.tokens.len(), 6);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        let _ = detokenize(&c.tokens);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.completions, 5);
+    assert!(stats.tokens_generated >= 30);
+    assert!(stats.batch_steps >= 6, "greedy same-prompt batch: >= 6 steps");
+}
+
+#[test]
+fn quantized_checkpoint_roundtrip_preserves_ppl() {
+    require_artifacts!();
+    let e = env();
+    let (qp, _) = raana_quantize(
+        &e, &CalibMode::FewShot(2), 3.1, &(1..=8).collect::<Vec<u8>>(),
+        &TrickConfig::default(), 7, 0,
+    )
+    .unwrap();
+    let dir: PathBuf = std::env::temp_dir().join(format!("raana_it_{}", std::process::id()));
+    let path = dir.join("q.rkpt");
+    qp.save(&path).unwrap();
+    let qp2 = ModelParams::load(&path).unwrap();
+    let a = e.perplexity(&qp, &e.wiki, 4).unwrap();
+    let b = e.perplexity(&qp2, &e.wiki, 4).unwrap();
+    assert_eq!(a, b);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corpus_respects_model_seq_len() {
+    require_artifacts!();
+    let e = env();
+    assert_eq!(e.wiki.seq_len, e.mrt.manifest.seq_len);
+    assert!(e.wiki.n_test >= 8);
+    let c = Corpus::from_text("x", 4, 0.5);
+    assert!(e.perplexity(&e.params, &c, 4).is_err(), "seq_len mismatch must error");
+}
