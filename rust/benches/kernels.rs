@@ -1,46 +1,80 @@
-//! Ablation A4 (paper §6.3 device-independence): kernel micro-benchmarks.
+//! Kernel micro-benchmarks (EXPERIMENTS.md §Perf): the fused packed-code
+//! serving stack vs the pre-kernel paths.
 //!
-//! * Rust FWHT throughput across dimensions (the quantization hot path).
+//! * FWHT: single-thread loop vs the batched parallel `fwht_batch`.
 //! * RaBitQ column quantization throughput (weights/s — compare the
 //!   paper's ~21 M weights/s for a 70B model in ~3300 s on 2x EPYC).
-//! * Rust Algorithm-3 estimator vs the Pallas `qmatmul` HLO artifact and
-//!   vs the dense dequantized matmul.
+//! * Algorithm-3 estimator: the old serial `matmul_est_serial` vs the
+//!   fused `qgemm` vs a dense matmul over pre-dequantized weights (and the
+//!   Pallas `qmatmul` HLO artifact when PJRT is available).
+//! * Serve loop: native `fwd_logits` tokens/s, dense weights vs resident
+//!   packed codes.
+//!
+//! Results print as tables and land in `BENCH_kernels.json` so future PRs
+//! can diff the perf trajectory mechanically. Dimensions honor
+//! `RAANA_BENCH_QGEMM_DIM` (default 2048) and threads honor
+//! `RAANA_THREADS`.
 
-use raana::benchlib::{bench, Table};
-use raana::hadamard::{fwht, PracticalRht};
-use raana::model::artifacts_root;
+use raana::benchlib::{bench, bench_json, write_json_report, Table};
+use raana::hadamard::{fwht, fwht_batch};
+use raana::json::{self, Value};
+use raana::kernels::qgemm;
+use raana::model::{artifacts_root, synthetic_manifest};
+use raana::quant::{LayerCalib, TrickConfig};
 use raana::rabitq::{QuantizedMatrix, ScaleMode};
 use raana::rng::Rng;
-use raana::runtime::{lit_f32, Runtime};
+use raana::runtime::{lit_f32, native_init, ModelRuntime, PackedLayers, Runtime};
 use raana::tensor::Matrix;
 use raana::threadpool::default_threads;
 
+fn env_dim(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 fn main() -> anyhow::Result<()> {
     println!("=== Kernel micro-benchmarks ===");
+    let threads = default_threads();
+    let mut report: Vec<(&str, Value)> = vec![
+        ("bench", json::s("kernels")),
+        ("threads", json::num(threads as f64)),
+    ];
 
-    // FWHT throughput
-    let mut t = Table::new(&["FWHT d", "rows", "median", "GB/s"]);
-    for &d in &[256usize, 1024, 4096] {
+    // ------------------------------------------------------ FWHT throughput
+    let mut t = Table::new(&["FWHT d", "rows", "serial", "batched", "GB/s (batched)"]);
+    let mut fwht_entries: Vec<(&str, Value)> = Vec::new();
+    for (key, d) in [("d256", 256usize), ("d1024", 1024), ("d4096", 4096)] {
         let rows = (1 << 22) / d; // ~16 MiB working set
         let mut data = Rng::new(1).gaussian_vec(rows * d);
-        let r = bench(&format!("fwht_{d}"), 2, 8, || {
+        let serial = bench(&format!("fwht_{d}_serial"), 2, 8, || {
             for row in data.chunks_mut(d) {
                 fwht(row);
             }
+        });
+        let batched = bench(&format!("fwht_{d}_batch"), 2, 8, || {
+            fwht_batch(&mut data, d, threads);
         });
         let bytes = (rows * d * 4) as f64;
         t.row(vec![
             d.to_string(),
             rows.to_string(),
-            format!("{:.2} ms", r.median() * 1e3),
-            format!("{:.2}", bytes / r.median() / 1e9),
+            format!("{:.2} ms", serial.median() * 1e3),
+            format!("{:.2} ms", batched.median() * 1e3),
+            format!("{:.2}", bytes / batched.median() / 1e9),
         ]);
+        fwht_entries.push((
+            key,
+            json::obj(vec![
+                ("serial", bench_json(&serial)),
+                ("batched", bench_json(&batched)),
+            ]),
+        ));
     }
     println!("{}", t.render());
+    report.push(("fwht", json::obj(fwht_entries)));
 
-    // RaBitQ quantization throughput
+    // --------------------------------------- RaBitQ quantization throughput
     let mut t = Table::new(&["RaBitQ d x c", "bits", "mode", "median", "Mweights/s"]);
-    let threads = default_threads();
+    let mut quant_entries: Vec<(&str, Value)> = Vec::new();
     for &(d, c) in &[(1024usize, 1024usize)] {
         let w = Matrix::from_vec(d, c, Rng::new(2).gaussian_vec(d * c));
         for (mode, name) in [(ScaleMode::MaxAbs, "maxabs"), (ScaleMode::Search(8), "search8")] {
@@ -55,58 +89,162 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.1} ms", r.median() * 1e3),
                     format!("{:.1}", (d * c) as f64 / r.median() / 1e6),
                 ]);
-            }
-        }
-    }
-    println!("{}", t.render());
-
-    // Algorithm-3 estimator paths
-    let (n, d, c, bits) = (128usize, 256usize, 256usize, 4u8);
-    let v = Matrix::from_vec(d, c, Rng::new(3).gaussian_vec(d * c));
-    let x = Matrix::from_vec(n, d, Rng::new(4).gaussian_vec(n * d));
-    let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, threads);
-    let dense = qm.dequantize();
-
-    let mut t = Table::new(&["Alg.3 path", "median", "note"]);
-    let r = bench("rust_stream", 2, 10, || {
-        std::hint::black_box(qm.matmul_est(&x));
-    });
-    t.row(vec!["Rust streaming codes".into(), format!("{:.2} ms", r.median() * 1e3),
-               "no dequant materialization".into()]);
-    let r = bench("rust_dense", 2, 10, || {
-        std::hint::black_box(x.matmul(&dense));
-    });
-    t.row(vec!["Rust dense dequant".into(), format!("{:.2} ms", r.median() * 1e3),
-               "after one-time dequant".into()]);
-
-    if let Ok(rt) = Runtime::cpu() {
-        let path = artifacts_root()
-            .join("kernels")
-            .join(format!("qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt"));
-        if path.exists() {
-            let art = rt.load(&path)?;
-            let unpacked = qm.codes.unpack();
-            let mut codes_f32 = vec![0f32; d * c];
-            for j in 0..c {
-                for i in 0..d {
-                    codes_f32[i * c + j] = unpacked[j * d + i] as f32;
+                if name == "maxabs" && bits == 4 {
+                    quant_entries.push(("maxabs_b4_1024", bench_json(&r)));
                 }
             }
-            let inputs = [
-                lit_f32(&x.data, &[n, d])?,
-                lit_f32(&codes_f32, &[d, c])?,
-                lit_f32(&qm.r, &[c])?,
-            ];
-            let r = bench("pallas_artifact", 2, 10, || {
-                std::hint::black_box(art.run(&inputs).unwrap());
-            });
-            t.row(vec![
-                "Pallas qmatmul artifact (PJRT)".into(),
-                format!("{:.2} ms", r.median() * 1e3),
-                "fused L1 kernel via XLA".into(),
-            ]);
         }
     }
     println!("{}", t.render());
+    report.push(("rabitq_quantize", json::obj(quant_entries)));
+
+    // ------------------------------------------- Algorithm-3 estimator paths
+    // the ISSUE 1 acceptance shape: d = c = 2048, n = 128, 4-bit codes
+    let big = env_dim("RAANA_BENCH_QGEMM_DIM", 2048);
+    let mut qgemm_entries: Vec<(&str, Value)> = Vec::new();
+    for (key, n, d, c, bits) in [
+        ("n128_d256_c256_b4", 128usize, 256usize, 256usize, 4u8),
+        ("n128_big_b4", 128, big, big, 4),
+    ] {
+        let v = Matrix::from_vec(d, c, Rng::new(3).gaussian_vec(d * c));
+        let x = Matrix::from_vec(n, d, Rng::new(4).gaussian_vec(n * d));
+        let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, threads);
+        let dense = qm.dequantize();
+
+        let title = format!("Alg.3 path (n={n} d={d} c={c} b={bits})");
+        let mut t = Table::new(&[title.as_str(), "median", "note"]);
+        let serial = bench("est_serial", 1, 3, || {
+            std::hint::black_box(qm.matmul_est_serial(&x));
+        });
+        t.row(vec![
+            "old serial matmul_est".into(),
+            format!("{:.2} ms", serial.median() * 1e3),
+            "per-column unpack, f64 dots, 1 thread".into(),
+        ]);
+        let fused = bench("qgemm", 2, 8, || {
+            std::hint::black_box(qgemm(&x, &qm, threads));
+        });
+        t.row(vec![
+            "fused qgemm".into(),
+            format!("{:.2} ms", fused.median() * 1e3),
+            format!("tiled decode, {threads} threads"),
+        ]);
+        let dense_mm = bench("dense", 2, 8, || {
+            std::hint::black_box(x.matmul(&dense));
+        });
+        t.row(vec![
+            "dense matmul (pre-dequantized)".into(),
+            format!("{:.2} ms", dense_mm.median() * 1e3),
+            "excludes the dequantize cost".into(),
+        ]);
+        let speedup = serial.median() / fused.median().max(1e-12);
+        t.row(vec![
+            "qgemm speedup vs serial".into(),
+            format!("{speedup:.1}x"),
+            "acceptance: >= 3x at d=c=2048, n=128".into(),
+        ]);
+        println!("{}", t.render());
+
+        qgemm_entries.push((
+            key,
+            json::obj(vec![
+                ("n", json::num(n as f64)),
+                ("d", json::num(d as f64)),
+                ("c", json::num(c as f64)),
+                ("bits", json::num(bits as f64)),
+                ("serial", bench_json(&serial)),
+                ("qgemm", bench_json(&fused)),
+                ("dense", bench_json(&dense_mm)),
+                ("speedup_vs_serial", json::num(speedup)),
+            ]),
+        ));
+
+        // Pallas qmatmul HLO artifact comparison (PJRT builds only)
+        if n == 128 && d == 256 {
+            if let Ok(rt) = Runtime::cpu() {
+                let path = artifacts_root()
+                    .join("kernels")
+                    .join(format!("qmatmul_{n}x{d}x{c}_b{bits}.hlo.txt"));
+                if path.exists() {
+                    let art = rt.load(&path)?;
+                    let unpacked = qm.codes.unpack();
+                    let mut codes_f32 = vec![0f32; d * c];
+                    for j in 0..c {
+                        for i in 0..d {
+                            codes_f32[i * c + j] = unpacked[j * d + i] as f32;
+                        }
+                    }
+                    let inputs = [
+                        lit_f32(&x.data, &[n, d])?,
+                        lit_f32(&codes_f32, &[d, c])?,
+                        lit_f32(&qm.r, &[c])?,
+                    ];
+                    let r = bench("pallas_artifact", 2, 10, || {
+                        std::hint::black_box(art.run(&inputs).unwrap());
+                    });
+                    println!(
+                        "Pallas qmatmul artifact (PJRT): {:.2} ms median",
+                        r.median() * 1e3
+                    );
+                }
+            }
+        }
+    }
+    report.push(("qgemm", json::obj(qgemm_entries)));
+
+    // ------------------------------------------------- serve-loop tokens/s
+    // native fwd_logits over a tiny-sized model: dense weights vs resident
+    // packed codes — the request path the batching server runs.
+    let manifest = synthetic_manifest("bench-serve", 256, 4, 4, 1024, 128, 256, 8);
+    let params = native_init(&manifest, 7);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::none(), 7, threads,
+    )?;
+    let batch = manifest.eval_batch;
+    let tokens: Vec<i32> = (0..batch * manifest.seq_len)
+        .map(|i| (i * 31 % 256) as i32)
+        .collect();
+
+    let mrt_dense = ModelRuntime::native(manifest.clone())?;
+    let dense_r = bench("serve_dense", 1, 4, || {
+        std::hint::black_box(mrt_dense.last_logits(&params, &tokens).unwrap());
+    });
+    let mut mrt_packed = ModelRuntime::native(manifest.clone())?;
+    mrt_packed.attach_packed(packed)?;
+    let packed_r = bench("serve_packed", 1, 4, || {
+        std::hint::black_box(mrt_packed.last_logits(&params, &tokens).unwrap());
+    });
+    let dense_tok_s = batch as f64 / dense_r.median();
+    let packed_tok_s = batch as f64 / packed_r.median();
+    let mut t = Table::new(&["Serve fwd_logits (B=8, S=128, tiny dims)", "median", "tok/s"]);
+    t.row(vec![
+        "native dense weights".into(),
+        format!("{:.1} ms", dense_r.median() * 1e3),
+        format!("{dense_tok_s:.1}"),
+    ]);
+    t.row(vec![
+        "native packed codes (qgemm)".into(),
+        format!("{:.1} ms", packed_r.median() * 1e3),
+        format!("{packed_tok_s:.1}"),
+    ]);
+    println!("{}", t.render());
+    report.push((
+        "serve",
+        json::obj(vec![
+            ("batch", json::num(batch as f64)),
+            ("seq_len", json::num(manifest.seq_len as f64)),
+            ("dense", bench_json(&dense_r)),
+            ("packed", bench_json(&packed_r)),
+            ("dense_tok_s", json::num(dense_tok_s)),
+            ("packed_tok_s", json::num(packed_tok_s)),
+        ]),
+    ));
+
+    let out = std::path::Path::new("BENCH_kernels.json");
+    write_json_report(out, &json::obj(report))?;
+    println!("wrote {}", out.display());
     Ok(())
 }

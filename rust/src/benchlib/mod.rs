@@ -4,8 +4,10 @@
 //! printer used by the paper-table benches to emit the same rows the paper
 //! reports.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::json::{self, Value};
 use crate::util::{human_secs, mean, percentile};
 
 /// Result of a timed benchmark.
@@ -117,6 +119,24 @@ impl Table {
     }
 }
 
+/// JSON value for a [`BenchResult`] (milliseconds) — the machine-readable
+/// form the `BENCH_*.json` files record so the perf trajectory is
+/// comparable across PRs.
+pub fn bench_json(r: &BenchResult) -> Value {
+    json::obj(vec![
+        ("median_ms", json::num(r.median() * 1e3)),
+        ("mean_ms", json::num(r.mean() * 1e3)),
+        ("p95_ms", json::num(r.p95() * 1e3)),
+        ("iters", json::num(r.iters as f64)),
+    ])
+}
+
+/// Write a JSON report to `path` (pretty-enough single-line rendering).
+pub fn write_json_report(path: &Path, v: &Value) -> anyhow::Result<()> {
+    std::fs::write(path, v.to_json())?;
+    Ok(())
+}
+
 /// Format a perplexity / number cell the way the paper does.
 pub fn fmt_ppl(v: f64) -> String {
     if !v.is_finite() {
@@ -170,5 +190,27 @@ mod tests {
         let (r, v) = bench_once("x", || 42);
         assert_eq!(v, 42);
         assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_parser() {
+        let r = BenchResult { name: "k".into(), iters: 3, secs: vec![0.001, 0.002, 0.003] };
+        let v = bench_json(&r);
+        let parsed = json::parse(&v.to_json()).unwrap();
+        assert_eq!(parsed.req_usize("iters").unwrap(), 3);
+        assert!(parsed.req("median_ms").unwrap().as_f64().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn json_report_written_to_disk() {
+        let dir = std::env::temp_dir().join(format!("raana_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let v = json::obj(vec![("bench", json::s("kernels")), ("threads", json::num(8.0))]);
+        write_json_report(&path, &v).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.req_str("bench").unwrap(), "kernels");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -93,7 +93,7 @@ pub fn calibrate(
         // gradients + norms
         let mut inputs = param_lits.clone();
         inputs.push(tok.clone());
-        let outs = mrt.calib_grads.run(&inputs)?;
+        let outs = mrt.calib_grads_art()?.run(&inputs)?;
         let gnorms = to_vec_f32(&outs[0])?;
         let xnorms = to_vec_f32(&outs[1])?;
         anyhow::ensure!(gnorms.len() == nl && xnorms.len() == nl, "calib arity");
@@ -105,7 +105,7 @@ pub fn calibrate(
         // raw activations
         let mut inputs = param_lits.clone();
         inputs.push(tok);
-        let caps = mrt.calib_capture.run(&inputs)?;
+        let caps = mrt.calib_capture_art()?.run(&inputs)?;
         // output 0 is the loss (kept to stop XLA pruning params); 1.. = X_k
         anyhow::ensure!(caps.len() == nl + 1, "capture arity");
         for (k, cap) in caps.iter().skip(1).enumerate() {

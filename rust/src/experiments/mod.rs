@@ -8,15 +8,14 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::allocate::AllocProblem;
+use crate::allocate::{AllocProblem, Allocation};
 use crate::baselines;
 use crate::calib::{calibrate, CalibMode, CalibResult};
 use crate::data::{synthc4, synthwiki, Corpus};
 use crate::eval::perplexity;
 use crate::model::{artifacts_root, ModelParams};
-use crate::quant::{LayerCalib, QuantizedLinear, TrickConfig};
-use crate::rng::Rng;
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::quant::TrickConfig;
+use crate::runtime::{ModelRuntime, PackedLayers, Runtime};
 use crate::train::{train, TrainConfig};
 use crate::util::Timer;
 
@@ -126,8 +125,6 @@ pub fn raana_quantize(
     seed: u64,
     threads: usize,
 ) -> Result<(ModelParams, QuantReport)> {
-    let m = &env.mrt.manifest;
-
     let t0 = Timer::start();
     let calib = calibrate(&env.mrt, &env.params, mode, &env.wiki)?;
     let calib_secs = t0.secs();
@@ -136,25 +133,19 @@ pub fn raana_quantize(
         env, &calib, target_avg_bits, bit_choices, tricks, seed, threads,
     )?;
     report.secs.0 = calib_secs;
-    let _ = m;
     Ok((qparams, report))
 }
 
-/// Pipeline minus calibration (reuse a [`CalibResult`] across bit targets).
-pub fn raana_quantize_with_calib(
+/// AllocateBits over the calibration alphas: budget the *code* bits =
+/// target minus the analytic side-payload overhead, then solve the DP.
+fn allocate_layer_bits(
     env: &Env,
     calib: &CalibResult,
     target_avg_bits: f64,
     bit_choices: &[u8],
     tricks: &TrickConfig,
-    seed: u64,
-    threads: usize,
-) -> Result<(ModelParams, QuantReport)> {
-    let m = &env.mrt.manifest;
-    let linears = &m.linears;
-
-    // AllocateBits: budget the *code* bits = target minus analytic overhead.
-    let t1 = Timer::start();
+) -> Result<Allocation> {
+    let linears = &env.mrt.manifest.linears;
     let total_m: usize = linears.iter().map(|l| l.m).sum();
     let mean_overhead: f64 = linears
         .iter()
@@ -171,33 +162,76 @@ pub fn raana_quantize_with_calib(
             code_budget_avg,
         ),
     };
-    let alloc = problem.solve()?;
-    let alloc_secs = t1.secs();
+    problem.solve()
+}
 
-    // Quantize each layer and fold back.
-    let t2 = Timer::start();
+/// Pipeline minus calibration (reuse a [`CalibResult`] across bit targets).
+///
+/// Folds every layer's dense reconstruction back into a parameter set —
+/// the evaluation path. The serving path keeps codes packed instead: see
+/// [`raana_quantize_packed_with_calib`].
+pub fn raana_quantize_with_calib(
+    env: &Env,
+    calib: &CalibResult,
+    target_avg_bits: f64,
+    bit_choices: &[u8],
+    tricks: &TrickConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<(ModelParams, QuantReport)> {
+    let (packed, report) = raana_quantize_packed_with_calib(
+        env, calib, target_avg_bits, bit_choices, tricks, seed, threads,
+    )?;
+    let linears = &env.mrt.manifest.linears;
     let mut qparams = env.params.clone();
-    let mut rng = Rng::new(seed);
-    let mut layers = Vec::with_capacity(linears.len());
-    let mut bits_acc = 0f64;
-    for (k, lin) in linears.iter().enumerate() {
-        let w = env.params.matrix(&lin.param)?;
-        let stats: &LayerCalib = &calib.layer_stats[k];
-        let ql = QuantizedLinear::quantize(
-            &lin.name,
-            &w,
-            alloc.bits[k],
-            stats,
-            tricks,
-            &mut rng,
-            threads,
-        )?;
+    for (ql, lin) in packed.layers.iter().zip(linears) {
         let (w_hat, corr) = ql.reconstruct();
         qparams.set_matrix(&lin.param, &w_hat)?;
         let bias = qparams.get_mut(&lin.bias)?;
         for (b, c) in bias.iter_mut().zip(&corr) {
             *b += c;
         }
+    }
+    Ok((qparams, report))
+}
+
+/// Pipeline minus calibration, ending in **resident packed weights**:
+/// AllocateBits -> RaBitQ-H per layer, with codes kept bit-packed for
+/// `ModelRuntime::attach_packed` / `Server::start_native_packed`. The
+/// original `env.params` stay untouched (biases included — the packed
+/// forward adds its own rank-1 correction), so serving needs no dense
+/// dequantized weight copy at all.
+pub fn raana_quantize_packed_with_calib(
+    env: &Env,
+    calib: &CalibResult,
+    target_avg_bits: f64,
+    bit_choices: &[u8],
+    tricks: &TrickConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<(PackedLayers, QuantReport)> {
+    let m = &env.mrt.manifest;
+    let linears = &m.linears;
+    let total_m: usize = linears.iter().map(|l| l.m).sum();
+
+    let t1 = Timer::start();
+    let alloc = allocate_layer_bits(env, calib, target_avg_bits, bit_choices, tricks)?;
+    let alloc_secs = t1.secs();
+
+    let t2 = Timer::start();
+    let packed = PackedLayers::quantize(
+        m,
+        &env.params,
+        &alloc.bits,
+        &calib.layer_stats,
+        tricks,
+        seed,
+        threads,
+    )?;
+    let mut layers = Vec::with_capacity(linears.len());
+    let mut bits_acc = 0f64;
+    for (k, (ql, lin)) in packed.layers.iter().zip(linears).enumerate() {
+        let w = env.params.matrix(&lin.param)?;
         bits_acc += ql.avg_bits() * lin.m as f64;
         layers.push(LayerReport {
             name: lin.name.clone(),
@@ -209,7 +243,7 @@ pub fn raana_quantize_with_calib(
     let quant_secs = t2.secs();
 
     Ok((
-        qparams,
+        packed,
         QuantReport {
             layers,
             avg_bits: bits_acc / total_m as f64,
@@ -217,6 +251,28 @@ pub fn raana_quantize_with_calib(
             alloc_cost: alloc.cost,
         },
     ))
+}
+
+/// The full packed pipeline (paper Alg. 1, serving form): calibrate ->
+/// AllocateBits -> RaBitQ-H, returning bit-packed layers for the request
+/// path.
+pub fn raana_quantize_packed(
+    env: &Env,
+    mode: &CalibMode,
+    target_avg_bits: f64,
+    bit_choices: &[u8],
+    tricks: &TrickConfig,
+    seed: u64,
+    threads: usize,
+) -> Result<(PackedLayers, QuantReport)> {
+    let t0 = Timer::start();
+    let calib = calibrate(&env.mrt, &env.params, mode, &env.wiki)?;
+    let calib_secs = t0.secs();
+    let (packed, mut report) = raana_quantize_packed_with_calib(
+        env, &calib, target_avg_bits, bit_choices, tricks, seed, threads,
+    )?;
+    report.secs.0 = calib_secs;
+    Ok((packed, report))
 }
 
 /// Baseline method selector for the table benches.

@@ -83,6 +83,35 @@ pub fn fwht(x: &mut [f32]) {
     }
 }
 
+/// Batched orthonormal FWHT: treat `data` as `data.len() / d` contiguous
+/// rows of length `d` and transform every row in one parallel,
+/// cache-blocked pass (each worker streams whole rows, so a row's butterfly
+/// stages run while it is L1/L2-resident). `threads == 0` means
+/// [`crate::threadpool::default_threads`] (`RAANA_THREADS` applies).
+/// Bit-deterministic in the thread count — rows are independent.
+pub fn fwht_batch(data: &mut [f32], d: usize, threads: usize) {
+    assert!(is_pow2(d), "fwht_batch needs power-of-2 row length, got {d}");
+    assert_eq!(data.len() % d, 0, "data length must be a multiple of d");
+    let rows = data.len() / d;
+    let threads = if threads == 0 {
+        crate::threadpool::default_threads()
+    } else {
+        threads
+    };
+    if rows <= 1 || threads <= 1 {
+        for row in data.chunks_mut(d) {
+            fwht(row);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(threads * 2).max(1);
+    crate::threadpool::parallel_chunks_mut(data, rows_per * d, threads, |_, chunk| {
+        for row in chunk.chunks_mut(d) {
+            fwht(row);
+        }
+    });
+}
+
 /// In-place RHT: x <- H D x / sqrt(d), with D = diag(signs).
 pub fn rht(x: &mut [f32], signs: &[f32]) {
     debug_assert_eq!(x.len(), signs.len());
@@ -156,9 +185,7 @@ impl PracticalRht {
         assert_eq!(m.rows, self.d);
         let mut buf = vec![0f32; self.d];
         for j in 0..m.cols {
-            for i in 0..self.d {
-                buf[i] = m.at(i, j);
-            }
+            m.col_view(j).copy_into(&mut buf);
             self.apply(&mut buf);
             m.set_col(j, &buf);
         }
@@ -169,21 +196,42 @@ impl PracticalRht {
         assert_eq!(m.rows, self.d);
         let mut buf = vec![0f32; self.d];
         for j in 0..m.cols {
-            for i in 0..self.d {
-                buf[i] = m.at(i, j);
-            }
+            m.col_view(j).copy_into(&mut buf);
             self.apply_inverse(&mut buf);
             m.set_col(j, &buf);
         }
     }
 
     /// Apply to every row of an (n x d) matrix (the inference-side
-    /// transform of activations in paper Alg. 3).
+    /// transform of activations in paper Alg. 3), in one parallel batch.
     pub fn apply_rows(&self, m: &mut Matrix) {
+        self.apply_rows_threaded(m, 0);
+    }
+
+    /// [`PracticalRht::apply_rows`] with an explicit thread count
+    /// (0 = default). Rows are independent, so the result is
+    /// bit-deterministic in `threads`.
+    pub fn apply_rows_threaded(&self, m: &mut Matrix, threads: usize) {
         assert_eq!(m.cols, self.d);
-        for i in 0..m.rows {
-            self.apply(m.row_mut(i));
+        let d = self.d;
+        let rows = m.rows;
+        let threads = if threads == 0 {
+            crate::threadpool::default_threads()
+        } else {
+            threads
+        };
+        if rows <= 1 || threads <= 1 {
+            for i in 0..rows {
+                self.apply(m.row_mut(i));
+            }
+            return;
         }
+        let rows_per = rows.div_ceil(threads * 2).max(1);
+        crate::threadpool::parallel_chunks_mut(&mut m.data, rows_per * d, threads, |_, chunk| {
+            for row in chunk.chunks_mut(d) {
+                self.apply(row);
+            }
+        });
     }
 }
 
@@ -344,6 +392,44 @@ mod tests {
         p.apply_columns(&mut m);
         p.apply_inverse_columns(&mut m);
         assert!(m.rel_err(&m0) < 1e-4);
+    }
+
+    #[test]
+    fn fwht_batch_matches_per_row_fwht() {
+        for (rows, d) in [(1usize, 64usize), (7, 128), (33, 256), (4, 1)] {
+            let data = randvec(rows * d, (rows * d) as u64);
+            let mut batch = data.clone();
+            fwht_batch(&mut batch, d, 4);
+            let mut golden = data;
+            for row in golden.chunks_mut(d) {
+                fwht(row);
+            }
+            assert_eq!(batch, golden, "rows={rows} d={d}");
+        }
+    }
+
+    #[test]
+    fn fwht_batch_thread_counts_agree() {
+        let d = 128;
+        let data = randvec(19 * d, 99);
+        let mut a = data.clone();
+        let mut b = data;
+        fwht_batch(&mut a, d, 1);
+        fwht_batch(&mut b, d, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn apply_rows_threaded_matches_serial() {
+        let d = 300; // non-power-of-2: both RHT windows exercised
+        let mut rng = Rng::new(41);
+        let p = PracticalRht::sample(d, &mut rng);
+        let data = randvec(9 * d, 43);
+        let mut a = Matrix::from_vec(9, d, data.clone());
+        let mut b = Matrix::from_vec(9, d, data);
+        p.apply_rows_threaded(&mut a, 1);
+        p.apply_rows_threaded(&mut b, 8);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Fused CPU inference kernels: the hot-path compute layer the serving
+//! stack routes through (EXPERIMENTS.md §Perf).
+//!
+//! * [`qgemm`] — packed-code GEMM: estimates `X @ V` directly from RaBitQ
+//!   bit-packed codes (paper Alg. 3), cache-blocked and thread-parallel.
+//!   Codes are decoded once per (depth-block × column-block) tile into a
+//!   per-task scratch buffer and reused across every activation row, so
+//!   the bit-unpacking cost is amortized `n`-fold and the working set
+//!   (tile + accumulator) stays cache-resident.
+//! * [`gemm`] — dense f32 GEMM with a 4-row register-tiled microkernel and
+//!   row-block parallelism; backs `Matrix::matmul` (calibration, baselines,
+//!   and the native model's full-precision layers).
+//! * [`decode_codes_into`] — the shared bit decoder: unrolled byte-aligned
+//!   fast paths for 1/2/4/8-bit codes, a streaming bit-window decoder for
+//!   3/5/6/7.
+//!
+//! Threading: `threads == 0` means [`threadpool::default_threads`] (the
+//! `RAANA_THREADS` override applies). All kernels are bit-deterministic in
+//! the thread count — every output element is produced by exactly one task
+//! with a fixed reduction order.
+
+use crate::rabitq::{grid_center, PackedCodes, QuantizedMatrix};
+use crate::tensor::Matrix;
+use crate::threadpool;
+
+/// Output-column block width of [`qgemm`] (accumulator panel width).
+pub const COL_BLOCK: usize = 32;
+
+/// Depth (inner-dimension) block of [`qgemm`]: the decoded tile holds
+/// `DEPTH_BLOCK * COL_BLOCK` f32 values (32 KiB) — sized for L2 residency.
+pub const DEPTH_BLOCK: usize = 256;
+
+#[inline]
+fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        threadpool::default_threads()
+    } else {
+        threads
+    }
+}
+
+// ------------------------------------------------------------ bit decoding
+
+/// Decode `out.len()` codes starting at element index `start` into f32.
+///
+/// Layout contract: codes are packed LSB-first at `bits` bits per element
+/// (see [`PackedCodes::pack`]). Equivalent to `out[i] = codes.get(start+i)
+/// as f32`, but byte-at-a-time instead of per-element bit arithmetic.
+pub fn decode_codes_into(codes: &PackedCodes, start: usize, out: &mut [f32]) {
+    let len = out.len();
+    if len == 0 {
+        return;
+    }
+    debug_assert!(start + len <= codes.len, "decode range out of bounds");
+    let bits = codes.bits as usize;
+    let data = &codes.data[..];
+    let mask: u32 = (1u32 << bits) - 1;
+    let mut bitpos = start * bits;
+
+    if bits == 1 || bits == 2 || bits == 4 || bits == 8 {
+        let mut i = 0;
+        // prologue to a byte boundary (reads never straddle bytes here
+        // because off is a multiple of bits when bits divides 8)
+        while bitpos % 8 != 0 && i < len {
+            let w = data[bitpos >> 3] as u32;
+            out[i] = ((w >> (bitpos & 7)) & mask) as f32;
+            i += 1;
+            bitpos += bits;
+        }
+        let per_byte = 8 / bits;
+        let mut byte = bitpos >> 3;
+        while len - i >= per_byte {
+            let w = data[byte] as u32;
+            match bits {
+                8 => out[i] = w as f32,
+                4 => {
+                    out[i] = (w & 15) as f32;
+                    out[i + 1] = (w >> 4) as f32;
+                }
+                2 => {
+                    out[i] = (w & 3) as f32;
+                    out[i + 1] = ((w >> 2) & 3) as f32;
+                    out[i + 2] = ((w >> 4) & 3) as f32;
+                    out[i + 3] = (w >> 6) as f32;
+                }
+                _ => {
+                    for t in 0..8 {
+                        out[i + t] = ((w >> t) & 1) as f32;
+                    }
+                }
+            }
+            i += per_byte;
+            byte += 1;
+        }
+        bitpos = byte * 8;
+        while i < len {
+            let w = data[bitpos >> 3] as u32;
+            out[i] = ((w >> (bitpos & 7)) & mask) as f32;
+            i += 1;
+            bitpos += bits;
+        }
+        return;
+    }
+
+    // streaming bit-window decoder for 3/5/6/7-bit codes
+    let mut byte = bitpos >> 3;
+    let off = bitpos & 7;
+    let mut acc: u32 = (data[byte] as u32) >> off;
+    let mut navail = 8 - off;
+    byte += 1;
+    for o in out.iter_mut() {
+        while navail < bits {
+            acc |= (data[byte] as u32) << navail;
+            byte += 1;
+            navail += 8;
+        }
+        *o = (acc & mask) as f32;
+        acc >>= bits;
+        navail -= bits;
+    }
+}
+
+// ------------------------------------------------------------------- qgemm
+
+/// Packed-code GEMM (paper Alg. 3): estimate `X @ V` where `V` is held as
+/// RaBitQ codes, without materializing `V` in float.
+///
+/// `X` is `(n × d)` rotated activations, `qm` holds a `(d × c)` quantized
+/// matrix; the result is `(n × c)` with
+/// `out[i][j] = r_j * (<x_i, codes_j> - c_b * sum(x_i))`.
+///
+/// Parallel over output-column blocks; each task decodes its code tile
+/// once per depth block and reuses it across all `n` rows. Deterministic
+/// in `threads` (0 = default).
+pub fn qgemm(x: &Matrix, qm: &QuantizedMatrix, threads: usize) -> Matrix {
+    assert_eq!(x.cols, qm.d, "qgemm shape mismatch");
+    let (n, c) = (x.rows, qm.c);
+    let mut out = Matrix::zeros(n, c);
+    if n == 0 || c == 0 {
+        return out;
+    }
+    let threads = effective_threads(threads);
+    let cb = grid_center(qm.bits);
+    let row_sums: Vec<f32> = (0..n).map(|i| x.row(i).iter().sum()).collect();
+
+    let blocks: Vec<usize> = (0..c).step_by(COL_BLOCK).collect();
+    let results = threadpool::parallel_map(&blocks, threads, |_, &j0| {
+        qgemm_block(x, qm, cb, &row_sums, j0, (j0 + COL_BLOCK).min(c))
+    });
+
+    // stitch the per-block (n × jb) panels into the row-major output
+    for (bi, block) in results.iter().enumerate() {
+        let j0 = bi * COL_BLOCK;
+        let jb = (j0 + COL_BLOCK).min(c) - j0;
+        for i in 0..n {
+            out.row_mut(i)[j0..j0 + jb].copy_from_slice(&block[i * jb..(i + 1) * jb]);
+        }
+    }
+    out
+}
+
+/// One column block of [`qgemm`]: returns the finalized `(n × jb)` panel.
+fn qgemm_block(
+    x: &Matrix,
+    qm: &QuantizedMatrix,
+    cb: f32,
+    row_sums: &[f32],
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
+    let (n, d) = (x.rows, qm.d);
+    let jb = j1 - j0;
+    let mut acc = vec![0f32; n * jb];
+    let mut tile = vec![0f32; DEPTH_BLOCK * jb];
+    let mut colbuf = vec![0f32; DEPTH_BLOCK];
+
+    let mut k0 = 0;
+    while k0 < d {
+        let klen = DEPTH_BLOCK.min(d - k0);
+        // decode the (klen × jb) tile once; column j's codes live at
+        // element range [j*d + k0, j*d + k0 + klen)
+        for jj in 0..jb {
+            decode_codes_into(&qm.codes, (j0 + jj) * d + k0, &mut colbuf[..klen]);
+            for (kk, &v) in colbuf[..klen].iter().enumerate() {
+                tile[kk * jb + jj] = v;
+            }
+        }
+        // accumulate: every activation row reuses the decoded tile
+        for i in 0..n {
+            let xrow = &x.row(i)[k0..k0 + klen];
+            let accrow = &mut acc[i * jb..(i + 1) * jb];
+            for (kk, &a) in xrow.iter().enumerate() {
+                let trow = &tile[kk * jb..kk * jb + jb];
+                for (o, &t) in accrow.iter_mut().zip(trow) {
+                    *o += a * t;
+                }
+            }
+        }
+        k0 += klen;
+    }
+
+    // finalize: out = r_j * (acc - c_b * row_sum)
+    for i in 0..n {
+        let rs = cb * row_sums[i];
+        let accrow = &mut acc[i * jb..(i + 1) * jb];
+        for (jj, o) in accrow.iter_mut().enumerate() {
+            *o = qm.r[j0 + jj] * (*o - rs);
+        }
+    }
+    acc
+}
+
+// -------------------------------------------------------------- dense gemm
+
+/// Dense f32 GEMM: `out += A (m×k) @ B (k×n)`, row-major slices.
+///
+/// 4-row register-tiled microkernel, parallel over row blocks. Callers
+/// pass a zeroed `out` for a plain product. Deterministic in `threads`
+/// (0 = default); small problems run serially to skip thread-spawn cost.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], threads: usize) {
+    assert_eq!(a.len(), m * k, "gemm: A size");
+    assert_eq!(b.len(), k * n, "gemm: B size");
+    assert_eq!(out.len(), m * n, "gemm: out size");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = effective_threads(threads);
+    let flops = m as u128 * n as u128 * k as u128;
+    if threads <= 1 || flops < (1u128 << 16) || m < 8 {
+        gemm_rows(a, k, n, b, out);
+        return;
+    }
+    // rows per task, rounded to the microkernel height
+    let per = {
+        let p = m.div_ceil(threads * 2);
+        ((p + 3) / 4) * 4
+    };
+    threadpool::parallel_chunks_mut(out, per * n, threads, |idx, chunk| {
+        let row0 = idx * per;
+        let rows = chunk.len() / n;
+        gemm_rows(&a[row0 * k..(row0 + rows) * k], k, n, b, chunk);
+    });
+}
+
+/// Serial kernel over a row panel: `out (r×n) += A (r×k) @ B (k×n)`.
+fn gemm_rows(a: &[f32], k: usize, n: usize, b: &[f32], out: &mut [f32]) {
+    let r = out.len() / n;
+    debug_assert_eq!(a.len(), r * k);
+    let mut rows: Vec<&mut [f32]> = out.chunks_mut(n).collect();
+    let mut i = 0;
+    while i + 4 <= r {
+        let quad = &mut rows[i..i + 4];
+        micro4(&a[i * k..(i + 4) * k], k, n, b, quad);
+        i += 4;
+    }
+    while i < r {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow: &mut [f32] = &mut rows[i];
+        for (kk, &x) in arow.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let bv = &b[kk * n..kk * n + n];
+            for (o, &bj) in orow.iter_mut().zip(bv) {
+                *o += x * bj;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// 4-row microkernel: each B row is loaded once and reused by 4 A rows
+/// held in registers (4× memory-traffic reduction over the scalar loop).
+fn micro4(a: &[f32], k: usize, n: usize, b: &[f32], rows: &mut [&mut [f32]]) {
+    let (a0, rest) = a.split_at(k);
+    let (a1, rest) = rest.split_at(k);
+    let (a2, a3) = rest.split_at(k);
+    let (r0, rest) = rows.split_first_mut().expect("4 rows");
+    let (r1, rest) = rest.split_first_mut().expect("4 rows");
+    let (r2, rest) = rest.split_first_mut().expect("4 rows");
+    let (r3, _) = rest.split_first_mut().expect("4 rows");
+    let r0 = &mut r0[..n];
+    let r1 = &mut r1[..n];
+    let r2 = &mut r2[..n];
+    let r3 = &mut r3[..n];
+    for kk in 0..k {
+        let bv = &b[kk * n..kk * n + n];
+        let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+        for j in 0..n {
+            let bj = bv[j];
+            r0[j] += x0 * bj;
+            r1[j] += x1 * bj;
+            r2[j] += x2 * bj;
+            r3[j] += x3 * bj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rabitq::ScaleMode;
+    use crate::rng::Rng;
+
+    fn random_matrix(r: usize, c: usize, seed: u64) -> Matrix {
+        Matrix::from_vec(r, c, Rng::new(seed).gaussian_vec(r * c))
+    }
+
+    #[test]
+    fn decode_matches_packed_get_all_bits() {
+        let mut rng = Rng::new(11);
+        for bits in 1..=8u8 {
+            let maxv = (1u32 << bits) as usize;
+            let values: Vec<u8> = (0..1237).map(|_| rng.below(maxv) as u8).collect();
+            let packed = PackedCodes::pack(&values, bits);
+            // whole-range and random sub-range decodes
+            for (start, len) in [(0usize, 1237usize), (1, 700), (513, 724), (1236, 1), (7, 0)] {
+                let mut out = vec![0f32; len];
+                decode_codes_into(&packed, start, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    assert_eq!(o, values[start + i] as f32, "bits={bits} start={start} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_dense_reference_all_bits() {
+        // odd / non-pow2 shapes on purpose
+        for (n, d, c) in [(5usize, 97usize, 33usize), (3, 64, 1), (8, 300, 40)] {
+            for bits in 1..=8u8 {
+                let v = random_matrix(d, c, 100 + bits as u64);
+                let x = random_matrix(n, d, 200 + bits as u64);
+                let qm = QuantizedMatrix::quantize(&v, bits, ScaleMode::MaxAbs, 2);
+                let got = qgemm(&x, &qm, 3);
+                let want = x.matmul(&qm.dequantize());
+                let rel = got.rel_err(&want);
+                assert!(rel < 1e-4, "bits={bits} n={n} d={d} c={c} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_empty_batch_and_single_column() {
+        let v = random_matrix(48, 1, 1);
+        let qm = QuantizedMatrix::quantize(&v, 4, ScaleMode::MaxAbs, 1);
+        let x0 = Matrix::zeros(0, 48);
+        let y0 = qgemm(&x0, &qm, 4);
+        assert_eq!((y0.rows, y0.cols), (0, 1));
+        let x1 = random_matrix(2, 48, 2);
+        let y1 = qgemm(&x1, &qm, 4);
+        let want = x1.matmul(&qm.dequantize());
+        assert!(y1.rel_err(&want) < 1e-4);
+    }
+
+    #[test]
+    fn qgemm_deterministic_across_thread_counts() {
+        let v = random_matrix(130, 70, 3);
+        let x = random_matrix(9, 130, 4);
+        let qm = QuantizedMatrix::quantize(&v, 3, ScaleMode::MaxAbs, 1);
+        let a = qgemm(&x, &qm, 1);
+        let b = qgemm(&x, &qm, 8);
+        assert_eq!(a.data, b.data, "qgemm must be bit-deterministic in threads");
+    }
+
+    #[test]
+    fn qgemm_spans_column_blocks() {
+        // c > COL_BLOCK exercises the block stitch
+        let c = COL_BLOCK * 2 + 5;
+        let v = random_matrix(64, c, 5);
+        let x = random_matrix(4, 64, 6);
+        let qm = QuantizedMatrix::quantize(&v, 5, ScaleMode::MaxAbs, 2);
+        let got = qgemm(&x, &qm, 4);
+        let want = x.matmul(&qm.dequantize());
+        assert!(got.rel_err(&want) < 1e-4);
+    }
+
+    #[test]
+    fn qgemm_spans_depth_blocks() {
+        // d > DEPTH_BLOCK exercises tile accumulation across k blocks
+        let d = DEPTH_BLOCK + 37;
+        let v = random_matrix(d, 10, 7);
+        let x = random_matrix(3, d, 8);
+        let qm = QuantizedMatrix::quantize(&v, 6, ScaleMode::MaxAbs, 2);
+        let got = qgemm(&x, &qm, 2);
+        let want = x.matmul(&qm.dequantize());
+        assert!(got.rel_err(&want) < 1e-4);
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0f32;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_matches_naive_odd_shapes() {
+        for (m, k, n) in [(1usize, 1usize, 1usize), (5, 7, 3), (13, 32, 17), (64, 50, 33)] {
+            let a = random_matrix(m, k, (m * 100 + k) as u64);
+            let b = random_matrix(k, n, (k * 100 + n) as u64);
+            let mut out = vec![0f32; m * n];
+            gemm(m, k, n, &a.data, &b.data, &mut out, 4);
+            let want = naive_matmul(&a, &b);
+            let got = Matrix::from_vec(m, n, out);
+            assert!(got.rel_err(&want) < 1e-4, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_deterministic_across_thread_counts() {
+        let a = random_matrix(37, 29, 21);
+        let b = random_matrix(29, 41, 22);
+        let mut o1 = vec![0f32; 37 * 41];
+        let mut o8 = vec![0f32; 37 * 41];
+        gemm(37, 29, 41, &a.data, &b.data, &mut o1, 1);
+        gemm(37, 29, 41, &a.data, &b.data, &mut o8, 8);
+        assert_eq!(o1, o8);
+    }
+
+    #[test]
+    fn gemm_degenerate_dims() {
+        let mut out = vec![0f32; 0];
+        gemm(0, 4, 0, &[], &[0.0; 0], &mut out, 2);
+        let a = vec![1.0f32, 2.0];
+        let mut o = vec![0f32; 2];
+        // k == 0: out unchanged
+        gemm(2, 0, 1, &[], &[], &mut o, 2);
+        assert_eq!(o, vec![0.0, 0.0]);
+        let _ = a;
+    }
+}

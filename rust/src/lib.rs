@@ -14,6 +14,13 @@
 //!   call Pallas kernels, AOT-lowered once to HLO-text artifacts that the
 //!   [`runtime`] module loads and executes via PJRT. Python never runs on
 //!   the request path.
+//! * **Fused CPU kernels** ([`kernels`]) — the serving hot path: a
+//!   cache-blocked, thread-parallel packed-code GEMM (`qgemm`) plus a
+//!   register-tiled dense GEMM. [`runtime::ModelRuntime`] keeps RaBitQ
+//!   codes resident ([`runtime::PackedLayers`]) and computes `fwd_logits`
+//!   straight from them — zero full-matrix dequantization per forward,
+//!   with a pure-Rust transformer forward standing in when PJRT artifacts
+//!   are absent.
 //!
 //! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
 //! examples under `examples/`.
@@ -29,6 +36,7 @@ pub mod eval;
 pub mod experiments;
 pub mod hadamard;
 pub mod json;
+pub mod kernels;
 pub mod model;
 pub mod quant;
 pub mod rabitq;

@@ -41,8 +41,14 @@ fn main() -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    let rt = Runtime::cpu()?;
-    println!("platform: {} ({} devices)", rt.client.platform_name(), rt.client.device_count());
+    match Runtime::cpu() {
+        Ok(rt) => println!(
+            "platform: {} ({} devices)",
+            rt.client.platform_name(),
+            rt.client.device_count()
+        ),
+        Err(_) => println!("platform: PJRT unavailable — native CPU backend (fused kernels)"),
+    }
     let root = artifacts_root();
     println!("artifacts root: {}", root.display());
     for model in ["micro", "tiny", "small"] {
@@ -189,10 +195,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "tiny");
     let n_req = args.opt_usize("requests", 16)?;
     let new_tokens = args.opt_usize("tokens", 16)?;
-    let env = Env::load(model)?;
 
-    // serve over RaanA-quantized weights at 4.1 bits
-    let (qparams, report) = raana_quantize(
+    // Artifact-free path: serve a native-initialized model straight from
+    // packed codes (demonstrates the request path without `make artifacts`).
+    let have_artifacts = artifacts_root().join(model).join("manifest.json").exists();
+    if args.flag("native") || !have_artifacts {
+        if !have_artifacts {
+            info!("artifacts/{model} missing — native packed-serving demo (untrained weights)");
+        }
+        return serve_native_demo(args, n_req, new_tokens);
+    }
+
+    let env = Env::load(model)?;
+    // quantize, keeping the codes bit-packed: the server's fwd_logits
+    // computes on them via qgemm, with zero dequantization per forward
+    let (packed, report) = raana::experiments::raana_quantize_packed(
         &env,
         &CalibMode::FewShot(5),
         args.opt_f64("avg-bits", 4.1)?,
@@ -201,16 +218,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
         7,
         0,
     )?;
-    info!("serving quantized model at avg {:.2} bits", report.avg_bits);
-
-    let model_name = model.to_string();
-    let server = raana::serve::Server::start(
-        move || {
-            let rt = Runtime::cpu()?;
-            raana::runtime::ModelRuntime::load(&rt, &artifacts_root(), &model_name)
-        },
-        qparams,
+    info!(
+        "serving packed model at avg {:.2} bits ({} KiB of codes resident)",
+        report.avg_bits,
+        packed.stored_bits() / 8 / 1024
     );
+    let manifest = env.mrt.manifest.clone();
+    let batch = manifest.eval_batch;
+    let params = env.params.clone();
+    drop(env); // the server thread owns its own (native) runtime
+    let server = raana::serve::Server::start_native_packed(manifest, params, packed);
+    run_requests(server, n_req, new_tokens, batch)
+}
+
+fn serve_native_demo(args: &Args, n_req: usize, new_tokens: usize) -> Result<()> {
+    use raana::model::synthetic_manifest;
+    use raana::runtime::{native_init, ModelRuntime, PackedLayers};
+
+    let bits_raw = args.opt_usize("bits", 4)?;
+    if !(1..=8).contains(&bits_raw) {
+        bail!("--bits must be in 1..=8, got {bits_raw}");
+    }
+    let bits = bits_raw as u8;
+    let d = args.opt_usize("d-model", 256)?;
+    let layers = args.opt_usize("layers", 4)?;
+    let manifest = synthetic_manifest("native-demo", d, layers, 4, 4 * d, 128, 256, 8);
+    let params = native_init(&manifest, 7);
+
+    // calibration statistics from one native capture forward
+    let probe = ModelRuntime::native(manifest.clone())?;
+    let calib_tokens: Vec<i32> = raana::data::tokenize(&raana::data::zero_shot_text())
+        .into_iter()
+        .cycle()
+        .take(manifest.eval_batch * manifest.seq_len)
+        .collect();
+    let stats = probe
+        .native_model
+        .capture_layer_stats(&manifest, &params, &calib_tokens, 0)?;
+    let packed = PackedLayers::quantize(
+        &manifest,
+        &params,
+        &vec![bits; manifest.linears.len()],
+        &stats,
+        &TrickConfig::default(),
+        7,
+        0,
+    )?;
+    info!(
+        "packed {} linears at {bits} bits (avg {:.2} incl. side payloads)",
+        manifest.linears.len(),
+        packed.avg_bits()
+    );
+    let batch = manifest.eval_batch;
+    let server = raana::serve::Server::start_native_packed(manifest, params, packed);
+    run_requests(server, n_req, new_tokens, batch)
+}
+
+fn run_requests(
+    server: raana::serve::Server,
+    n_req: usize,
+    new_tokens: usize,
+    batch: usize,
+) -> Result<()> {
     let mut rxs = Vec::new();
     for i in 0..n_req {
         let prompt = raana::data::tokenize(&format!("The {i} quick brown fox "));
@@ -231,7 +300,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "served {} completions, {:.1} tok/s, occupancy {:.2}, p50 {:.1} ms p95 {:.1} ms",
         stats.completions,
         stats.throughput_tok_s(),
-        stats.mean_batch_occupancy(env.mrt.manifest.eval_batch),
+        stats.mean_batch_occupancy(batch),
         stats.p50_latency() * 1e3,
         stats.p95_latency() * 1e3
     );

@@ -133,6 +133,83 @@ impl Manifest {
     }
 }
 
+/// Build a manifest programmatically, mirroring `param_specs` /
+/// `linear_registry` in python/compile/model.py exactly. Lets the native
+/// backend, tests, and benches run without the AOT artifact tree.
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_manifest(
+    name: &str,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    seq_len: usize,
+    vocab: usize,
+    eval_batch: usize,
+) -> Manifest {
+    let mut params = vec![
+        ParamSpec { name: "tok_emb".into(), shape: vec![vocab, d_model] },
+        ParamSpec { name: "pos_emb".into(), shape: vec![seq_len, d_model] },
+    ];
+    let mut linears = Vec::new();
+    for i in 0..n_layers {
+        let p = format!("blk{i}.");
+        let mut push = |n: &str, shape: Vec<usize>| {
+            params.push(ParamSpec { name: format!("{p}{n}"), shape });
+        };
+        push("ln1.scale", vec![d_model]);
+        push("ln1.bias", vec![d_model]);
+        push("attn.wq", vec![d_model, d_model]);
+        push("attn.wq.b", vec![d_model]);
+        push("attn.wk", vec![d_model, d_model]);
+        push("attn.wk.b", vec![d_model]);
+        push("attn.wv", vec![d_model, d_model]);
+        push("attn.wv.b", vec![d_model]);
+        push("attn.wo", vec![d_model, d_model]);
+        push("attn.wo.b", vec![d_model]);
+        push("ln2.scale", vec![d_model]);
+        push("ln2.bias", vec![d_model]);
+        push("mlp.fc1", vec![d_model, d_ff]);
+        push("mlp.fc1.b", vec![d_ff]);
+        push("mlp.fc2", vec![d_ff, d_model]);
+        push("mlp.fc2.b", vec![d_model]);
+        for (nm, din, dout) in [
+            ("attn.wq", d_model, d_model),
+            ("attn.wk", d_model, d_model),
+            ("attn.wv", d_model, d_model),
+            ("attn.wo", d_model, d_model),
+            ("mlp.fc1", d_model, d_ff),
+            ("mlp.fc2", d_ff, d_model),
+        ] {
+            linears.push(LinearSpec {
+                name: format!("blk{i}.{nm}"),
+                param: format!("blk{i}.{nm}"),
+                bias: format!("blk{i}.{nm}.b"),
+                d: din,
+                c: dout,
+                m: din * dout,
+            });
+        }
+    }
+    params.push(ParamSpec { name: "ln_f.scale".into(), shape: vec![d_model] });
+    params.push(ParamSpec { name: "ln_f.bias".into(), shape: vec![d_model] });
+    params.push(ParamSpec { name: "lm_head".into(), shape: vec![d_model, vocab] });
+    Manifest {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        seq_len,
+        train_batch: eval_batch,
+        eval_batch,
+        calib_batch: 1,
+        params,
+        linears,
+    }
+}
+
 /// Flat parameter store, tensors in manifest order.
 #[derive(Clone)]
 pub struct ModelParams {
@@ -397,6 +474,28 @@ mod tests {
         let mut p = ModelParams::zeros(&m);
         p.get_mut("v").unwrap().copy_from_slice(&[3.0, 4.0, 0.0, 0.0]);
         assert!((p.frobenius("v").unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_python_schema() {
+        let m = synthetic_manifest("syn", 64, 2, 2, 256, 32, 256, 2);
+        // 2 embeddings + 16 per block + final LN pair + lm_head
+        assert_eq!(m.params.len(), 2 + 16 * 2 + 3);
+        assert_eq!(m.linears.len(), 6 * 2);
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.params[0].shape, vec![256, 64]);
+        assert_eq!(m.linears[5].param, "blk0.mlp.fc2");
+        assert_eq!((m.linears[5].d, m.linears[5].c), (256, 64));
+        assert_eq!(m.linears[5].bias, "blk0.mlp.fc2.b");
+        assert_eq!(m.total_linear_params(), 2 * (4 * 64 * 64 + 2 * 64 * 256));
+        // every linear's param and bias exist in the param list
+        for lin in &m.linears {
+            assert!(m.param_index(&lin.param).is_ok(), "{}", lin.param);
+            assert!(m.param_index(&lin.bias).is_ok(), "{}", lin.bias);
+        }
+        // params load as a zeroed store without error
+        let p = ModelParams::zeros(&m);
+        assert_eq!(p.total_params(), m.total_params());
     }
 
     #[test]

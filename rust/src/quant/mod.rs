@@ -98,6 +98,11 @@ pub struct QuantizedLinear {
     pub shat: Vec<f32>,
     /// Rank-1 centralization correction folded into the bias (c,).
     pub bias_corr: Vec<f32>,
+    /// Precomputed serving constant `s_hat^T W_hat + bias_corr` (c,).
+    /// Folding this at quantization time is what lets
+    /// [`QuantizedLinear::forward_est`] run with zero full-matrix
+    /// dequantization per forward (ISSUE 1 acceptance criterion).
+    pub fold_const: Vec<f32>,
 }
 
 impl QuantizedLinear {
@@ -174,22 +179,29 @@ impl QuantizedLinear {
                 vec![0.0; d]
             },
             bias_corr: vec![0.0; c],
+            fold_const: vec![0.0; c],
         };
 
-        // 4. centralization: bias correction (W - W_hat)^T s_hat
+        // 4. centralization: bias correction (W - W_hat)^T s_hat, plus the
+        // serving constant s_hat^T W_hat + bias_corr. Both come from one
+        // dense reconstruction here, at quantization time — the serving
+        // path then never dequantizes.
         if tricks.centralization {
             let w_hat = ql.effective_weight();
             let diff = w.sub(&w_hat);
             let mut corr = vec![0f32; c];
+            let mut mean_term = vec![0f32; c];
             for i in 0..d {
                 let s = ql.shat[i];
                 if s == 0.0 {
                     continue;
                 }
-                for (j, &dv) in diff.row(i).iter().enumerate() {
+                for (j, (&dv, &wv)) in diff.row(i).iter().zip(w_hat.row(i)).enumerate() {
                     corr[j] += s * dv;
+                    mean_term[j] += s * wv;
                 }
             }
+            ql.fold_const = corr.iter().zip(&mean_term).map(|(a, b)| a + b).collect();
             ql.bias_corr = corr;
         }
         Ok(ql)
@@ -228,8 +240,18 @@ impl QuantizedLinear {
     /// Serving-path estimator (paper Alg. 3 + tricks): estimate X @ W + corr
     /// directly from codes.  X is (n x d) *unrotated* activations.
     ///
-    /// Exactly equals `X @ effective_weight() + 1 bias_corr^T` (tested).
+    /// Exactly equals `X @ effective_weight() + 1 bias_corr^T` (tested),
+    /// but performs **zero full-matrix dequantization**: the quantized
+    /// product runs on packed codes via [`crate::kernels::qgemm`] and the
+    /// mean-direction constant is the precomputed
+    /// [`QuantizedLinear::fold_const`].
     pub fn forward_est(&self, x: &Matrix) -> Matrix {
+        self.forward_est_threaded(x, 0)
+    }
+
+    /// [`QuantizedLinear::forward_est`] with an explicit thread count
+    /// (0 = default / `RAANA_THREADS`). Bit-deterministic in `threads`.
+    pub fn forward_est_threaded(&self, x: &Matrix, threads: usize) -> Matrix {
         assert_eq!(x.cols, self.d);
         let rest = self.rest_idx();
         let n = x.rows;
@@ -238,14 +260,15 @@ impl QuantizedLinear {
         let mut xr = Matrix::zeros(n, rest.len());
         for i in 0..n {
             let xrow = x.row(i);
+            let xrrow = xr.row_mut(i);
             for (rj, &j) in rest.iter().enumerate() {
-                *xr.at_mut(i, rj) = xrow[j] - self.shat[j];
+                xrrow[rj] = xrow[j] - self.shat[j];
             }
         }
-        self.rot.apply_rows(&mut xr);
+        self.rot.apply_rows_threaded(&mut xr, threads);
 
-        // quantized product on centered-rotated activations
-        let mut y = self.qm.matmul_est(&xr);
+        // fused packed-code product on centered-rotated activations
+        let mut y = crate::kernels::qgemm(&xr, &self.qm, threads);
 
         // exact outlier product (also centered)
         for i in 0..n {
@@ -256,31 +279,19 @@ impl QuantizedLinear {
                     continue;
                 }
                 let orow = self.outlier_rows.row(oi);
-                for (jj, &wv) in orow.iter().enumerate() {
-                    *y.at_mut(i, jj) += xv * wv;
+                let yrow = y.row_mut(i);
+                for (o, &wv) in yrow.iter_mut().zip(orow) {
+                    *o += xv * wv;
                 }
             }
         }
 
-        // add back the exact mean-row product s_hat^T W (stored at
-        // quantization time inside bias_corr + s_hat^T W_hat identity):
-        //   X W_hat + 1 s_hat^T (W - W_hat)
-        // = (X - 1 s_hat^T) W_hat + 1 s_hat^T W
-        // so here we add 1 * (s_hat^T W_hat + bias_corr).
-        let w_hat = self.effective_weight();
-        let mut mean_term = vec![0f32; self.c];
-        for i in 0..self.d {
-            let s = self.shat[i];
-            if s == 0.0 {
-                continue;
-            }
-            for (j, &wv) in w_hat.row(i).iter().enumerate() {
-                mean_term[j] += s * wv;
-            }
-        }
+        // mean-direction constant: X W_hat + 1 s_hat^T (W - W_hat)
+        //   = (X - 1 s_hat^T) W_hat + 1 (s_hat^T W_hat + bias_corr),
+        // with the second term precomputed at quantization time.
         for i in 0..n {
-            for j in 0..self.c {
-                *y.at_mut(i, j) += mean_term[j] + self.bias_corr[j];
+            for (o, &fc) in y.row_mut(i).iter_mut().zip(&self.fold_const) {
+                *o += fc;
             }
         }
         y

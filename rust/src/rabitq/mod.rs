@@ -19,8 +19,21 @@
 //! Codes are bit-packed ([`PackedCodes`]) — b bits per weight, the format
 //! whose size the paper's "avg bits" accounting counts.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::tensor::Matrix;
 use crate::threadpool;
+
+/// Process-wide count of full-matrix dequantizations
+/// ([`QuantizedMatrix::dequantize`] calls). The packed serving path must
+/// not dequantize per forward — tests assert this counter stays flat
+/// across `ModelRuntime` forwards (ISSUE 1 acceptance criterion).
+static DEQUANT_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// Read the full-matrix dequantization counter.
+pub fn dequant_calls() -> usize {
+    DEQUANT_CALLS.load(Ordering::Relaxed)
+}
 
 /// Grid midpoint c_b = (2^b - 1) / 2.
 #[inline]
@@ -50,12 +63,23 @@ impl Default for ScaleMode {
 
 /// Quantize one column. Returns (codes, r) with codes in [0, 2^bits - 1].
 pub fn quantize_column(v: &[f32], bits: u8, mode: ScaleMode) -> (Vec<u8>, f32) {
+    let mut codes = Vec::with_capacity(v.len());
+    let r = quantize_column_into(v, bits, mode, &mut codes);
+    (codes, r)
+}
+
+/// Quantize one column into a caller-owned buffer (cleared first) and
+/// return the least-squares rescale r — the allocation-free variant the
+/// block-parallel [`QuantizedMatrix::quantize`] hot loop uses.
+pub fn quantize_column_into(v: &[f32], bits: u8, mode: ScaleMode, codes: &mut Vec<u8>) -> f32 {
     assert!((1..=8).contains(&bits), "bits must be in 1..=8");
     let cb = grid_center(bits);
     let maxv = (1u32 << bits) - 1;
     let maxabs = v.iter().fold(0f32, |m, x| m.max(x.abs()));
     if maxabs == 0.0 {
-        return (vec![(cb.floor()) as u8; v.len()], 0.0);
+        codes.clear();
+        codes.resize(v.len(), cb.floor() as u8);
+        return 0.0;
     }
     let base_t = maxabs / cb;
 
@@ -102,12 +126,10 @@ pub fn quantize_column(v: &[f32], bits: u8, mode: ScaleMode) -> (Vec<u8>, f32) {
         vv - if qq > 0.0 { vq * vq / qq } else { 0.0 }
     };
 
-    let mut codes = Vec::with_capacity(v.len());
     match mode {
         ScaleMode::MaxAbs => {
-            let (vq, qq) = quant_into(base_t, &mut codes);
-            let r = if qq > 0.0 { (vq / qq) as f32 } else { 0.0 };
-            (codes, r)
+            let (vq, qq) = quant_into(base_t, codes);
+            if qq > 0.0 { (vq / qq) as f32 } else { 0.0 }
         }
         ScaleMode::Search(n) => {
             // Shrinking the grid clips tails but refines the bulk; after a
@@ -125,9 +147,8 @@ pub fn quantize_column(v: &[f32], bits: u8, mode: ScaleMode) -> (Vec<u8>, f32) {
                     best_t = t;
                 }
             }
-            let (vq, qq) = quant_into(best_t, &mut codes);
-            let r = if qq > 0.0 { (vq / qq) as f32 } else { 0.0 };
-            (codes, r)
+            let (vq, qq) = quant_into(best_t, codes);
+            if qq > 0.0 { (vq / qq) as f32 } else { 0.0 }
         }
     }
 }
@@ -217,45 +238,67 @@ pub struct QuantizedMatrix {
 }
 
 impl QuantizedMatrix {
-    /// Quantize every column of `m`, parallel across columns.
+    /// Quantize every column of `m`, parallel across column blocks. Each
+    /// worker reuses one gather buffer and one code buffer for its whole
+    /// block (no per-column allocation — see [`crate::tensor::Col`]).
     pub fn quantize(m: &Matrix, bits: u8, mode: ScaleMode, threads: usize) -> Self {
+        const BLOCK: usize = 16;
         let (d, c) = (m.rows, m.cols);
-        let cols: Vec<usize> = (0..c).collect();
-        let results = threadpool::parallel_map(&cols, threads, |_, &j| {
-            let col = m.col(j);
-            quantize_column(&col, bits, mode)
+        let blocks: Vec<usize> = (0..c).step_by(BLOCK).collect();
+        let results = threadpool::parallel_map(&blocks, threads, |_, &j0| {
+            let jend = (j0 + BLOCK).min(c);
+            let mut gather = vec![0f32; d];
+            let mut colcodes: Vec<u8> = Vec::with_capacity(d);
+            let mut codes = Vec::with_capacity(d * (jend - j0));
+            let mut rs = Vec::with_capacity(jend - j0);
+            for j in j0..jend {
+                m.col_view(j).copy_into(&mut gather);
+                rs.push(quantize_column_into(&gather, bits, mode, &mut colcodes));
+                codes.extend_from_slice(&colcodes);
+            }
+            (codes, rs)
         });
         let mut all = Vec::with_capacity(d * c);
         let mut r = Vec::with_capacity(c);
-        for (codes, rj) in results {
+        for (codes, rs) in results {
             all.extend_from_slice(&codes);
-            r.push(rj);
+            r.extend_from_slice(&rs);
         }
         QuantizedMatrix { d, c, bits, codes: PackedCodes::pack(&all, bits), r }
     }
 
     /// Dequantize back to a dense (d x c) matrix.
+    ///
+    /// Counted by [`dequant_calls`]: the packed serving path must never
+    /// reach this per forward.
     pub fn dequantize(&self) -> Matrix {
+        DEQUANT_CALLS.fetch_add(1, Ordering::Relaxed);
         let cb = grid_center(self.bits);
         let mut out = Matrix::zeros(self.d, self.c);
+        let mut col = vec![0f32; self.d];
         for j in 0..self.c {
+            crate::kernels::decode_codes_into(&self.codes, j * self.d, &mut col);
             let rj = self.r[j];
             for i in 0..self.d {
-                let code = self.codes.get(j * self.d + i);
-                *out.at_mut(i, j) = rj * (code as f32 - cb);
+                *out.at_mut(i, j) = rj * (col[i] - cb);
             }
         }
         out
     }
 
     /// Algorithm-3 matmul estimation: given X' (n x d) rotated activations,
-    /// estimate X' @ V.  Streams codes without materializing V in float.
-    ///
-    /// Perf (EXPERIMENTS.md §Perf): each column's codes are bit-unpacked
-    /// once into a stack buffer and reused across all n activation rows
-    /// (the first version unpacked per (row, col, k) triple — 128x more
-    /// unpack work at n = 128).
+    /// estimate X' @ V. Routed through the fused packed-code kernel
+    /// [`crate::kernels::qgemm`] — cache-blocked, thread-parallel
+    /// (`RAANA_THREADS`), decoding each code tile once and reusing it
+    /// across all n activation rows. Bit-deterministic in the thread count.
     pub fn matmul_est(&self, x: &Matrix) -> Matrix {
+        crate::kernels::qgemm(x, self, 0)
+    }
+
+    /// The pre-kernel serial reference path (one column decoded at a time,
+    /// f64 dots, single thread). Kept for `benches/kernels.rs` to measure
+    /// the fused kernel against, and as a correctness oracle.
+    pub fn matmul_est_serial(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.d);
         let cb = grid_center(self.bits);
         let mut out = Matrix::zeros(x.rows, self.c);
@@ -465,6 +508,37 @@ mod tests {
         let b = QuantizedMatrix::quantize(&m, 3, ScaleMode::Search(4), 8);
         assert_eq!(a.codes.unpack(), b.codes.unpack());
         assert_eq!(a.r, b.r);
+    }
+
+    #[test]
+    fn matmul_est_agrees_with_serial_reference() {
+        let mut rng = Rng::new(31);
+        for bits in [1u8, 3, 5, 8] {
+            let m = Matrix::from_vec(90, 41, rng.gaussian_vec(90 * 41));
+            let x = Matrix::from_vec(7, 90, rng.gaussian_vec(7 * 90));
+            let qm = QuantizedMatrix::quantize(&m, bits, ScaleMode::MaxAbs, 2);
+            let fused = qm.matmul_est(&x);
+            let serial = qm.matmul_est_serial(&x);
+            assert!(
+                fused.rel_err(&serial) < 1e-4,
+                "bits={bits} rel {}",
+                fused.rel_err(&serial)
+            );
+        }
+    }
+
+    #[test]
+    fn dequant_counter_increments() {
+        // counter is process-global and unit tests run concurrently, so
+        // only monotonic lower bounds are asserted here; the exact
+        // zero-dequant-per-forward property is pinned down under a lock in
+        // rust/tests/integration.rs.
+        let mut rng = Rng::new(32);
+        let m = Matrix::from_vec(16, 4, rng.gaussian_vec(64));
+        let qm = QuantizedMatrix::quantize(&m, 4, ScaleMode::MaxAbs, 1);
+        let before = dequant_calls();
+        let _ = qm.dequantize();
+        assert!(dequant_calls() >= before + 1);
     }
 
     #[test]

@@ -1,15 +1,28 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Model runtime: AOT PJRT artifacts when available, native CPU kernels
+//! always — and resident packed weights for the serving path.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → `compile` → `execute`. HLO **text** is the interchange
-//! format (jax ≥ 0.5 serialized protos are rejected by xla_extension
-//! 0.5.1 — see DESIGN.md). All entry points were lowered with
-//! `return_tuple=True`, so outputs arrive as a single tuple literal that
-//! we decompose.
+//! The PJRT half wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO **text**
+//! is the interchange format (jax ≥ 0.5 serialized protos are rejected by
+//! xla_extension 0.5.1 — see DESIGN.md). All entry points were lowered
+//! with `return_tuple=True`, so outputs arrive as a single tuple literal
+//! that we decompose.
+//!
+//! The native half ([`native`]) runs the same transformer forward on the
+//! fused CPU kernels ([`crate::kernels`]). [`ModelRuntime`] dispatches:
+//! when packed weights are attached ([`ModelRuntime::attach_packed`]),
+//! `fwd_logits`/`fwd_loss` compute **directly on RaBitQ codes** via
+//! `qgemm` — zero full-matrix dequantization on the request path; else
+//! PJRT artifacts are used when loaded, and the dense native forward
+//! otherwise.
+
+pub mod native;
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+pub use native::{native_init, NativeModel, PackedLayers};
 
 use crate::model::{ArtifactPaths, Manifest, ModelParams};
 
@@ -73,7 +86,7 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     anyhow::ensure!(n == data.len(), "lit_f32 shape/data mismatch");
     let flat = xla::Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
-    Ok(flat.reshape(&dims)?)
+    flat.reshape(&dims).context("reshaping f32 literal")
 }
 
 /// Build an i32 literal of the given shape.
@@ -82,7 +95,7 @@ pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     anyhow::ensure!(n == data.len(), "lit_i32 shape/data mismatch");
     let flat = xla::Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
-    Ok(flat.reshape(&dims)?)
+    flat.reshape(&dims).context("reshaping i32 literal")
 }
 
 pub fn lit_scalar_i32(v: i32) -> xla::Literal {
@@ -95,21 +108,20 @@ pub fn lit_scalar_f32(v: f32) -> xla::Literal {
 
 /// Extract an f32 vector from a literal.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    lit.to_vec::<f32>().context("extracting f32 literal")
 }
 
 /// Extract a scalar f32.
 pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
+    let v = lit.to_vec::<f32>().context("extracting f32 literal")?;
     anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
     Ok(v[0])
 }
 
 // ------------------------------------------------------- model-level glue
 
-/// A loaded model: manifest + the compiled entry points used everywhere.
-pub struct ModelRuntime {
-    pub manifest: Manifest,
+/// The six PJRT-compiled entry points of a model.
+pub struct PjrtEntries {
     pub init_params: Artifact,
     pub train_step: Artifact,
     pub fwd_loss: Artifact,
@@ -118,26 +130,108 @@ pub struct ModelRuntime {
     pub calib_capture: Artifact,
 }
 
+/// A loaded model: manifest + backends.
+///
+/// * `pjrt` — the AOT entry points (None on the artifact-free native
+///   backend; training and gradient calibration require them).
+/// * `native_model` — the kernel-backed CPU forward, always available.
+/// * packed weights — when attached, `fwd_logits` / `fwd_loss` serve
+///   straight from bit-packed codes via [`crate::kernels::qgemm`]; the
+///   dense parameters' linear weights are never touched on that path.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub pjrt: Option<PjrtEntries>,
+    pub native_model: NativeModel,
+    packed: Option<PackedLayers>,
+}
+
 impl ModelRuntime {
-    /// Load every entry point for `model` from the artifacts root.
+    /// Load every PJRT entry point for `model` from the artifacts root.
     pub fn load(rt: &Runtime, root: &Path, model: &str) -> Result<Self> {
         let paths = ArtifactPaths::new(root, model);
         let manifest = Manifest::load(&paths.dir)
             .with_context(|| format!("run `make artifacts` first (model {model})"))?;
-        Ok(ModelRuntime {
-            manifest,
+        let pjrt = PjrtEntries {
             init_params: rt.load(&paths.hlo("init_params"))?,
             train_step: rt.load(&paths.hlo("train_step"))?,
             fwd_loss: rt.load(&paths.hlo("fwd_loss"))?,
             fwd_logits: rt.load(&paths.hlo("fwd_logits"))?,
             calib_grads: rt.load(&paths.hlo("calib_grads"))?,
             calib_capture: rt.load(&paths.hlo("calib_capture"))?,
-        })
+        };
+        let native_model = NativeModel::new(&manifest)?;
+        Ok(ModelRuntime { manifest, pjrt: Some(pjrt), native_model, packed: None })
     }
 
-    /// Initialize parameters via the AOT init artifact.
+    /// Artifact-free runtime over the native CPU backend.
+    pub fn native(manifest: Manifest) -> Result<Self> {
+        let native_model = NativeModel::new(&manifest)?;
+        Ok(ModelRuntime { manifest, pjrt: None, native_model, packed: None })
+    }
+
+    /// Keep packed (RaBitQ-coded) weights resident; subsequent forwards
+    /// compute on codes. Layers must match the manifest's linear registry.
+    pub fn attach_packed(&mut self, packed: PackedLayers) -> Result<()> {
+        anyhow::ensure!(
+            packed.layers.len() == self.manifest.linears.len(),
+            "packed layer count {} != {} registered linears",
+            packed.layers.len(),
+            self.manifest.linears.len()
+        );
+        for (ql, lin) in packed.layers.iter().zip(&self.manifest.linears) {
+            anyhow::ensure!(
+                ql.d == lin.d && ql.c == lin.c,
+                "packed layer '{}' shape {}x{} != manifest {}x{}",
+                ql.name,
+                ql.d,
+                ql.c,
+                lin.d,
+                lin.c
+            );
+        }
+        self.packed = Some(packed);
+        Ok(())
+    }
+
+    /// Drop the resident packed weights (back to dense/PJRT dispatch).
+    pub fn detach_packed(&mut self) -> Option<PackedLayers> {
+        self.packed.take()
+    }
+
+    /// Resident packed weights, if attached.
+    pub fn packed(&self) -> Option<&PackedLayers> {
+        self.packed.as_ref()
+    }
+
+    fn entries(&self) -> Result<&PjrtEntries> {
+        self.pjrt
+            .as_ref()
+            .context("PJRT artifacts not loaded (native backend); this path needs `make artifacts`")
+    }
+
+    /// The AOT training step (PJRT only).
+    pub fn train_step_art(&self) -> Result<&Artifact> {
+        Ok(&self.entries()?.train_step)
+    }
+
+    /// The AOT calibration-gradient entry point (PJRT only).
+    pub fn calib_grads_art(&self) -> Result<&Artifact> {
+        Ok(&self.entries()?.calib_grads)
+    }
+
+    /// The AOT activation-capture entry point (PJRT only).
+    pub fn calib_capture_art(&self) -> Result<&Artifact> {
+        Ok(&self.entries()?.calib_capture)
+    }
+
+    /// Initialize parameters: AOT init artifact when loaded, otherwise the
+    /// native GPT-2-style init (same law, different RNG stream).
     pub fn init(&self, seed: i32) -> Result<ModelParams> {
-        let outs = self.init_params.run(&[lit_scalar_i32(seed)])?;
+        let entries = match &self.pjrt {
+            Some(e) => e,
+            None => return Ok(native_init(&self.manifest, seed as u64)),
+        };
+        let outs = entries.init_params.run(&[lit_scalar_i32(seed)])?;
         anyhow::ensure!(
             outs.len() == self.manifest.params.len(),
             "init output arity {} != {}",
@@ -151,7 +245,7 @@ impl ModelRuntime {
         ModelParams::from_tensors(&self.manifest, tensors)
     }
 
-    /// Literal list for the current params (shared prefix of most calls).
+    /// Literal list for the current params (shared prefix of PJRT calls).
     pub fn param_literals(&self, params: &ModelParams) -> Result<Vec<xla::Literal>> {
         params
             .specs
@@ -162,7 +256,19 @@ impl ModelRuntime {
     }
 
     /// Per-token negative log likelihood for a (B, S) token batch.
+    ///
+    /// Packed weights resident → native forward on codes; else the AOT
+    /// `fwd_loss` artifact (fixed eval_batch); else dense native forward.
     pub fn token_nll(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        if self.packed.is_some() || self.pjrt.is_none() {
+            return self.native_model.token_nll(
+                &self.manifest,
+                params,
+                self.packed.as_ref(),
+                tokens,
+                0,
+            );
+        }
         let m = &self.manifest;
         anyhow::ensure!(
             tokens.len() == m.eval_batch * m.seq_len,
@@ -170,16 +276,29 @@ impl ModelRuntime {
         );
         let mut inputs = self.param_literals(params)?;
         inputs.push(lit_i32(tokens, &[m.eval_batch, m.seq_len])?);
-        let outs = self.fwd_loss.run(&inputs)?;
+        let outs = self.entries()?.fwd_loss.run(&inputs)?;
         to_vec_f32(&outs[0])
     }
 
     /// Last-position logits for a (B, S) token batch -> (B, vocab).
+    ///
+    /// The serving hot path: with packed weights resident this runs the
+    /// native forward whose linear layers call `qgemm` on bit-packed
+    /// codes — no dense weight is read and nothing is dequantized.
     pub fn last_logits(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        if self.packed.is_some() || self.pjrt.is_none() {
+            return self.native_model.last_logits(
+                &self.manifest,
+                params,
+                self.packed.as_ref(),
+                tokens,
+                0,
+            );
+        }
         let m = &self.manifest;
         let mut inputs = self.param_literals(params)?;
         inputs.push(lit_i32(tokens, &[m.eval_batch, m.seq_len])?);
-        let outs = self.fwd_logits.run(&inputs)?;
+        let outs = self.entries()?.fwd_logits.run(&inputs)?;
         to_vec_f32(&outs[0])
     }
 }
@@ -187,9 +306,10 @@ impl ModelRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::synthetic_manifest;
 
     // Runtime tests that need artifacts live in rust/tests/ (integration);
-    // here we only cover the literal glue.
+    // here we cover the literal glue and the native dispatch.
 
     #[test]
     fn literal_roundtrip_f32() {
@@ -210,5 +330,49 @@ mod tests {
         assert_eq!(to_scalar_f32(&lit).unwrap(), 7.5);
         let v = lit_f32(&[1.0, 2.0], &[2]).unwrap();
         assert!(to_scalar_f32(&v).is_err());
+    }
+
+    #[test]
+    fn native_runtime_dispatches_without_artifacts() {
+        let manifest = synthetic_manifest("rt-native", 32, 1, 2, 64, 8, 256, 2);
+        let mrt = ModelRuntime::native(manifest).unwrap();
+        let params = mrt.init(3).unwrap();
+        let tokens: Vec<i32> = (0..2 * 8).map(|i| (i % 250) as i32).collect();
+        let logits = mrt.last_logits(&params, &tokens).unwrap();
+        assert_eq!(logits.len(), 2 * 256);
+        let nll = mrt.token_nll(&params, &tokens).unwrap();
+        assert_eq!(nll.len(), 2 * 7);
+        // PJRT-only entry points refuse cleanly
+        assert!(mrt.train_step_art().is_err());
+        assert!(mrt.calib_grads_art().is_err());
+    }
+
+    #[test]
+    fn attach_packed_validates_shapes() {
+        use crate::quant::{LayerCalib, TrickConfig};
+        let manifest = synthetic_manifest("rt-packed", 16, 1, 2, 32, 8, 64, 1);
+        let mut mrt = ModelRuntime::native(manifest.clone()).unwrap();
+        let params = mrt.init(1).unwrap();
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; manifest.linears.len()];
+        let packed = PackedLayers::quantize(
+            &manifest, &params, &bits, &stats, &TrickConfig::none(), 2, 1,
+        )
+        .unwrap();
+        // wrong arity rejected
+        let mut truncated = packed.clone();
+        truncated.layers.pop();
+        assert!(mrt.attach_packed(truncated).is_err());
+        assert!(mrt.packed().is_none());
+        // correct one accepted and used
+        mrt.attach_packed(packed).unwrap();
+        assert!(mrt.packed().is_some());
+        let tokens: Vec<i32> = (0..8).map(|i| i as i32).collect();
+        let logits = mrt.last_logits(&params, &tokens).unwrap();
+        assert_eq!(logits.len(), 64);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert!(mrt.detach_packed().is_some());
+        assert!(mrt.packed().is_none());
     }
 }

@@ -1,0 +1,542 @@
+//! Native CPU backend: the GPT-style forward pass (python/compile/model.py)
+//! implemented directly over the fused kernels, plus the packed-weight
+//! serving state.
+//!
+//! Two weight representations drive the same forward:
+//!
+//! * **dense** — full-precision parameters out of [`ModelParams`], linear
+//!   layers via [`crate::kernels::gemm`];
+//! * **packed** ([`PackedLayers`]) — every registered linear held as a
+//!   RaBitQ-H [`QuantizedLinear`] (bit-packed codes + RHT signs + outlier
+//!   rows), applied via [`crate::kernels::qgemm`] with **zero full-matrix
+//!   dequantization per forward** — the request path computes on codes.
+//!
+//! The architecture mirrors `python/compile/model.py` exactly (pre-LN
+//! blocks, causal attention, tanh-approximate GELU, weight-tied nothing,
+//! fp lm_head), so when the PJRT artifacts are available the two backends
+//! are interchangeable; when they are not (offline vendor stub), this is
+//! the serving path.
+
+use anyhow::{Context, Result};
+
+use crate::kernels;
+use crate::model::{Manifest, ModelParams};
+use crate::quant::{LayerCalib, QuantizedLinear, TrickConfig};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+/// Validated model dimensions for the native forward.
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl NativeModel {
+    pub fn new(m: &Manifest) -> Result<Self> {
+        anyhow::ensure!(m.n_heads > 0 && m.d_model % m.n_heads == 0, "d_model % n_heads != 0");
+        anyhow::ensure!(m.seq_len >= 2, "seq_len must be >= 2");
+        Ok(NativeModel {
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.d_model / m.n_heads,
+            d_ff: m.d_ff,
+            seq_len: m.seq_len,
+            vocab: m.vocab,
+        })
+    }
+
+    /// Last-position logits, (B, vocab) row-major. `tokens` is any whole
+    /// number of sequences (B*S); the artifact path's fixed eval_batch
+    /// does not bind here.
+    pub fn last_logits(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let hid = self.forward_hidden(m, params, packed, tokens, threads, None)?;
+        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
+        let b = hid.rows / s;
+        let lm = params.get("lm_head")?;
+        let mut last = Matrix::zeros(b, d);
+        for bi in 0..b {
+            last.row_mut(bi).copy_from_slice(hid.row(bi * s + s - 1));
+        }
+        let mut out = Matrix::zeros(b, v);
+        kernels::gemm(b, d, v, &last.data, lm, &mut out.data, threads);
+        Ok(out.data)
+    }
+
+    /// Per-token next-token NLL, (B, S-1) row-major — matches the
+    /// `fwd_loss` artifact's output layout.
+    pub fn token_nll(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let hid = self.forward_hidden(m, params, packed, tokens, threads, None)?;
+        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
+        let b = hid.rows / s;
+        let lm = params.get("lm_head")?;
+        let mut logits = Matrix::zeros(b * s, v);
+        kernels::gemm(b * s, d, v, &hid.data, lm, &mut logits.data, threads);
+        let mut nll = Vec::with_capacity(b * (s - 1));
+        for bi in 0..b {
+            for t in 0..s - 1 {
+                let row = logits.row(bi * s + t);
+                let tgt = tokens[bi * s + t + 1] as usize;
+                let maxl = row.iter().fold(f32::NEG_INFINITY, |mx, &x| mx.max(x));
+                let lse = maxl
+                    + row
+                        .iter()
+                        .map(|&x| ((x - maxl) as f64).exp())
+                        .sum::<f64>()
+                        .ln() as f32;
+                nll.push(lse - row[tgt]);
+            }
+        }
+        Ok(nll)
+    }
+
+    /// Run a forward capturing each registered linear layer's input
+    /// statistics (calibration without the PJRT `calib_capture` artifact).
+    /// Stats are reduced in place per capture point — no activation matrix
+    /// is retained. Returns per-layer stats in manifest linear order.
+    pub fn capture_layer_stats(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<LayerCalib>> {
+        let mut captures: Vec<LayerCalib> = Vec::with_capacity(m.linears.len());
+        let _ = self.forward_hidden(m, params, None, tokens, threads, Some(&mut captures))?;
+        anyhow::ensure!(captures.len() == m.linears.len(), "capture arity");
+        Ok(captures)
+    }
+
+    /// Full forward through every block and the final LayerNorm; returns
+    /// the (B*S, d_model) hidden states ready for the lm_head projection.
+    fn forward_hidden(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        threads: usize,
+        mut capture: Option<&mut Vec<LayerCalib>>,
+    ) -> Result<Matrix> {
+        let (s, d) = (self.seq_len, self.d_model);
+        anyhow::ensure!(
+            !tokens.is_empty() && tokens.len() % s == 0,
+            "token batch must be a whole number of seq_len={s} sequences"
+        );
+        let b = tokens.len() / s;
+        if let Some(p) = packed {
+            anyhow::ensure!(p.layers.len() == m.linears.len(), "packed layer arity");
+        }
+
+        // embeddings
+        let tok_emb = params.get("tok_emb")?;
+        let pos_emb = params.get("pos_emb")?;
+        let mut h = Matrix::zeros(b * s, d);
+        for bi in 0..b {
+            for si in 0..s {
+                let t = tokens[bi * s + si];
+                anyhow::ensure!(
+                    t >= 0 && (t as usize) < self.vocab,
+                    "token {t} out of vocab range"
+                );
+                let te = &tok_emb[(t as usize) * d..(t as usize + 1) * d];
+                let pe = &pos_emb[si * d..(si + 1) * d];
+                let row = h.row_mut(bi * s + si);
+                for ((o, &a), &p) in row.iter_mut().zip(te).zip(pe) {
+                    *o = a + p;
+                }
+            }
+        }
+
+        for layer in 0..self.n_layers {
+            let pre = format!("blk{layer}.");
+
+            // attention sub-block (pre-LN)
+            let x = layer_norm(
+                &h,
+                params.get(&format!("{pre}ln1.scale"))?,
+                params.get(&format!("{pre}ln1.bias"))?,
+            );
+            let lin = |nm: &str, inp: &Matrix, cap: Option<&mut Vec<LayerCalib>>| {
+                self.linear(m, params, packed, &format!("{pre}{nm}"), inp, threads, cap)
+            };
+            let q = lin("attn.wq", &x, capture.as_deref_mut())?;
+            let k = lin("attn.wk", &x, capture.as_deref_mut())?;
+            let v = lin("attn.wv", &x, capture.as_deref_mut())?;
+            let att = self.attention(&q, &k, &v);
+            let proj = lin("attn.wo", &att, capture.as_deref_mut())?;
+            h.add_assign(&proj);
+
+            // MLP sub-block (pre-LN)
+            let x = layer_norm(
+                &h,
+                params.get(&format!("{pre}ln2.scale"))?,
+                params.get(&format!("{pre}ln2.bias"))?,
+            );
+            let lin = |nm: &str, inp: &Matrix, cap: Option<&mut Vec<LayerCalib>>| {
+                self.linear(m, params, packed, &format!("{pre}{nm}"), inp, threads, cap)
+            };
+            let mut y = lin("mlp.fc1", &x, capture.as_deref_mut())?;
+            for v in y.data.iter_mut() {
+                *v = gelu(*v);
+            }
+            let y = lin("mlp.fc2", &y, capture.as_deref_mut())?;
+            h.add_assign(&y);
+        }
+
+        Ok(layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?))
+    }
+
+    /// One registered linear layer: packed (qgemm on codes) or dense
+    /// (full-precision gemm), plus the layer bias. `capture`, when set,
+    /// receives the layer input (forward order = manifest linear order).
+    #[allow(clippy::too_many_arguments)]
+    fn linear(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        name: &str,
+        x: &Matrix,
+        threads: usize,
+        capture: Option<&mut Vec<LayerCalib>>,
+    ) -> Result<Matrix> {
+        let k = m
+            .linears
+            .iter()
+            .position(|l| l.param == name)
+            .with_context(|| format!("linear '{name}' not registered in manifest"))?;
+        let lin = &m.linears[k];
+        anyhow::ensure!(x.cols == lin.d, "linear '{name}' input dim");
+        if let Some(c) = capture {
+            c.push(LayerCalib::from_activations(x));
+        }
+        let mut y = match packed {
+            Some(p) => p.layers[k].forward_est_threaded(x, threads),
+            None => {
+                let w = params.get(&lin.param)?;
+                let mut out = Matrix::zeros(x.rows, lin.c);
+                kernels::gemm(x.rows, lin.d, lin.c, &x.data, w, &mut out.data, threads);
+                out
+            }
+        };
+        let bias = params.get(&lin.bias)?;
+        for i in 0..y.rows {
+            for (o, &bv) in y.row_mut(i).iter_mut().zip(bias) {
+                *o += bv;
+            }
+        }
+        Ok(y)
+    }
+
+    /// Causal multi-head attention over (B*S, d) q/k/v; returns (B*S, d).
+    fn attention(&self, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
+        let (s, hn, hd) = (self.seq_len, self.n_heads, self.head_dim);
+        let b = q.rows / s;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut o = Matrix::zeros(q.rows, self.d_model);
+        let mut scores = vec![0f32; s];
+        for bi in 0..b {
+            for head in 0..hn {
+                let hoff = head * hd;
+                for qi in 0..s {
+                    let qrow = &q.row(bi * s + qi)[hoff..hoff + hd];
+                    let mut maxs = f32::NEG_INFINITY;
+                    for (ki, sc) in scores[..=qi].iter_mut().enumerate() {
+                        let krow = &k.row(bi * s + ki)[hoff..hoff + hd];
+                        let mut dp = 0f32;
+                        for t in 0..hd {
+                            dp += qrow[t] * krow[t];
+                        }
+                        *sc = dp * scale;
+                        maxs = maxs.max(*sc);
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores[..=qi].iter_mut() {
+                        *sc = (*sc - maxs).exp();
+                        denom += *sc;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut o.row_mut(bi * s + qi)[hoff..hoff + hd];
+                    for (ki, &sc) in scores[..=qi].iter().enumerate() {
+                        let w = sc * inv;
+                        let vrow = &v.row(bi * s + ki)[hoff..hoff + hd];
+                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                            *ov += w * vv;
+                        }
+                    }
+                }
+            }
+        }
+        o
+    }
+}
+
+/// Per-token LayerNorm (population variance, eps 1e-5 — matches
+/// `_layer_norm` in python/compile/model.py).
+fn layer_norm(h: &Matrix, scale: &[f32], bias: &[f32]) -> Matrix {
+    let d = h.cols;
+    let mut out = Matrix::zeros(h.rows, d);
+    for i in 0..h.rows {
+        let row = h.row(i);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = (row[j] - mean) * inv * scale[j] + bias[j];
+        }
+    }
+    out
+}
+
+/// Tanh-approximate GELU (jax.nn.gelu's default).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+// ----------------------------------------------------------- packed layers
+
+/// Resident packed weights for serving: every registered linear layer as a
+/// [`QuantizedLinear`], in manifest linear order. This is what
+/// `ModelRuntime` keeps hot so `fwd_logits` computes on codes.
+#[derive(Clone, Debug)]
+pub struct PackedLayers {
+    pub layers: Vec<QuantizedLinear>,
+}
+
+impl PackedLayers {
+    /// Quantize every registered linear of `params` at the per-layer
+    /// bit-widths (AllocateBits output order). `stats` supplies the
+    /// calibration statistics per layer (use [`LayerCalib::zeros`] for the
+    /// calibration-free path).
+    pub fn quantize(
+        m: &Manifest,
+        params: &ModelParams,
+        bits: &[u8],
+        stats: &[LayerCalib],
+        tricks: &TrickConfig,
+        seed: u64,
+        threads: usize,
+    ) -> Result<PackedLayers> {
+        anyhow::ensure!(bits.len() == m.linears.len(), "bits/linears arity");
+        anyhow::ensure!(stats.len() == m.linears.len(), "stats/linears arity");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(m.linears.len());
+        for (k, lin) in m.linears.iter().enumerate() {
+            let w = params.matrix(&lin.param)?;
+            layers.push(QuantizedLinear::quantize(
+                &lin.name, &w, bits[k], &stats[k], tricks, &mut rng, threads,
+            )?);
+        }
+        Ok(PackedLayers { layers })
+    }
+
+    /// Total stored payload bits across all layers.
+    pub fn stored_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.stored_bits()).sum()
+    }
+
+    /// Average stored bits per quantizable parameter.
+    pub fn avg_bits(&self) -> f64 {
+        let m: usize = self.layers.iter().map(|l| l.d * l.c).sum();
+        if m == 0 {
+            return 0.0;
+        }
+        self.stored_bits() as f64 / m as f64
+    }
+}
+
+/// GPT-2-style parameter init mirroring `init_params` in
+/// python/compile/model.py (different RNG stream than JAX, same law):
+/// ones for LN scales, zeros for biases, N(0, std) elsewhere with
+/// std = 0.02 for embeddings, 1/sqrt(fan_in) for projections, and the
+/// GPT-2 depth scaling on residual-branch outputs.
+pub fn native_init(m: &Manifest, seed: u64) -> ModelParams {
+    let mut rng = Rng::new(seed);
+    let mut tensors = Vec::with_capacity(m.params.len());
+    for spec in &m.params {
+        let n = spec.numel();
+        let t = if spec.name.ends_with(".scale") {
+            vec![1.0; n]
+        } else if spec.name.ends_with(".bias") || spec.name.ends_with(".b") {
+            vec![0.0; n]
+        } else {
+            let fan_in = if spec.shape.len() == 2 {
+                spec.shape[0]
+            } else {
+                *spec.shape.last().unwrap_or(&1)
+            };
+            let mut std = if spec.name.contains("emb") {
+                0.02
+            } else {
+                1.0 / (fan_in as f32).sqrt()
+            };
+            if spec.name.ends_with("attn.wo") || spec.name.ends_with("mlp.fc2") {
+                std /= (2.0 * m.n_layers as f32).sqrt();
+            }
+            let mut v = rng.gaussian_vec(n);
+            for x in v.iter_mut() {
+                *x *= std;
+            }
+            v
+        };
+        tensors.push(t);
+    }
+    ModelParams { specs: m.params.clone(), tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_manifest;
+
+    fn tiny_setup() -> (Manifest, NativeModel, ModelParams, Vec<i32>) {
+        let m = synthetic_manifest("nat-test", 32, 2, 2, 64, 16, 256, 2);
+        let model = NativeModel::new(&m).unwrap();
+        let params = native_init(&m, 5);
+        let tokens: Vec<i32> = (0..2 * 16).map(|i| (i * 7 % 256) as i32).collect();
+        (m, model, params, tokens)
+    }
+
+    #[test]
+    fn dense_forward_shapes_and_finite() {
+        let (m, model, params, tokens) = tiny_setup();
+        let logits = model.last_logits(&m, &params, None, &tokens, 2).unwrap();
+        assert_eq!(logits.len(), 2 * 256);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        let nll = model.token_nll(&m, &params, None, &tokens, 2).unwrap();
+        assert_eq!(nll.len(), 2 * 15);
+        assert!(nll.iter().all(|x| x.is_finite() && *x > 0.0));
+        // untrained byte model: mean NLL near ln(256)
+        let mean = nll.iter().sum::<f32>() / nll.len() as f32;
+        assert!(mean > 2.0 && mean < 9.0, "mean nll {mean}");
+    }
+
+    #[test]
+    fn forward_rejects_bad_batches() {
+        let (m, model, params, _) = tiny_setup();
+        assert!(model.last_logits(&m, &params, None, &[0i32; 17], 1).is_err());
+        assert!(model.last_logits(&m, &params, None, &[], 1).is_err());
+        assert!(model.last_logits(&m, &params, None, &[300i32; 16], 1).is_err());
+    }
+
+    #[test]
+    fn forward_deterministic_across_thread_counts() {
+        let (m, model, params, tokens) = tiny_setup();
+        let a = model.last_logits(&m, &params, None, &tokens, 1).unwrap();
+        let b = model.last_logits(&m, &params, None, &tokens, 8).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packed_forward_matches_dense_reconstruction() {
+        let (m, model, params, tokens) = tiny_setup();
+        let nl = m.linears.len();
+        let stats: Vec<LayerCalib> =
+            m.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![8u8; nl];
+        let packed = PackedLayers::quantize(
+            &m, &params, &bits, &stats, &TrickConfig::none(), 11, 2,
+        )
+        .unwrap();
+
+        // dense reference: fold each layer's reconstruction into params
+        let mut dense = params.clone();
+        for (ql, lin) in packed.layers.iter().zip(&m.linears) {
+            let (w_hat, corr) = ql.reconstruct();
+            dense.set_matrix(&lin.param, &w_hat).unwrap();
+            let bias = dense.get_mut(&lin.bias).unwrap();
+            for (b, c) in bias.iter_mut().zip(&corr) {
+                *b += c;
+            }
+        }
+        let got = model.last_logits(&m, &params, Some(&packed), &tokens, 2).unwrap();
+        let want = model.last_logits(&m, &dense, None, &tokens, 2).unwrap();
+        let num: f64 = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = want.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(num / den < 0.05, "packed vs dense logits rel err {}", num / den);
+    }
+
+    #[test]
+    fn packed_forward_deterministic_across_thread_counts() {
+        let (m, model, params, tokens) = tiny_setup();
+        let stats: Vec<LayerCalib> =
+            m.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; m.linears.len()];
+        let packed = PackedLayers::quantize(
+            &m, &params, &bits, &stats, &TrickConfig::none(), 3, 1,
+        )
+        .unwrap();
+        let a = model.last_logits(&m, &params, Some(&packed), &tokens, 1).unwrap();
+        let b = model.last_logits(&m, &params, Some(&packed), &tokens, 8).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn capture_stats_cover_every_linear() {
+        let (m, model, params, tokens) = tiny_setup();
+        let stats = model.capture_layer_stats(&m, &params, &tokens, 2).unwrap();
+        assert_eq!(stats.len(), m.linears.len());
+        for (st, lin) in stats.iter().zip(&m.linears) {
+            assert_eq!(st.mean_input.len(), lin.d);
+            assert_eq!(st.col_norms.len(), lin.d);
+            assert!(st.col_norms.iter().any(|&n| n > 0.0));
+        }
+    }
+
+    #[test]
+    fn native_init_follows_spec_rules() {
+        let m = synthetic_manifest("init-test", 16, 1, 2, 32, 8, 64, 1);
+        let p = native_init(&m, 1);
+        assert!(p.get("blk0.ln1.scale").unwrap().iter().all(|&x| x == 1.0));
+        assert!(p.get("blk0.attn.wq.b").unwrap().iter().all(|&x| x == 0.0));
+        assert!(p.get("tok_emb").unwrap().iter().any(|&x| x != 0.0));
+        // deterministic in the seed
+        let q = native_init(&m, 1);
+        assert_eq!(p.tensors, q.tensors);
+        let r = native_init(&m, 2);
+        assert_ne!(p.tensors, r.tensors);
+    }
+
+    #[test]
+    fn packed_avg_bits_sane() {
+        let (m, _model, params, _tokens) = tiny_setup();
+        let stats: Vec<LayerCalib> =
+            m.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![3u8; m.linears.len()];
+        let packed = PackedLayers::quantize(
+            &m, &params, &bits, &stats, &TrickConfig::none(), 1, 1,
+        )
+        .unwrap();
+        let avg = packed.avg_bits();
+        assert!(avg > 3.0 && avg < 4.5, "avg bits {avg}");
+    }
+}

@@ -15,8 +15,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::ModelParams;
-use crate::runtime::ModelRuntime;
+use crate::model::{Manifest, ModelParams};
+use crate::runtime::{ModelRuntime, PackedLayers};
 use crate::util::percentile;
 
 /// A generation request.
@@ -142,6 +142,25 @@ impl Server {
             batcher_loop(s2, mrt, params)
         });
         Server { shared, worker: Some(worker), next_id: Mutex::new(1) }
+    }
+
+    /// Serve from resident packed weights on the native backend: the
+    /// batcher's `fwd_logits` computes directly on RaBitQ codes via
+    /// `qgemm` — no AOT artifacts, no dense weight reads, zero
+    /// dequantization on the request path.
+    pub fn start_native_packed(
+        manifest: Manifest,
+        params: ModelParams,
+        packed: PackedLayers,
+    ) -> Server {
+        Server::start(
+            move || {
+                let mut mrt = ModelRuntime::native(manifest)?;
+                mrt.attach_packed(packed)?;
+                Ok(mrt)
+            },
+            params,
+        )
     }
 
     /// Submit a request; returns a receiver for the completion.
@@ -294,6 +313,31 @@ mod tests {
         let b = softmax_sample(&logits, 1.0, 42, 3);
         assert_eq!(a, b);
         assert!((0..16).contains(&a));
+    }
+
+    #[test]
+    fn native_packed_server_generates_tokens() {
+        use crate::model::synthetic_manifest;
+        use crate::quant::{LayerCalib, TrickConfig};
+        use crate::runtime::{native_init, PackedLayers};
+
+        let manifest = synthetic_manifest("serve-native", 32, 1, 2, 64, 8, 256, 2);
+        let params = native_init(&manifest, 17);
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; manifest.linears.len()];
+        let packed = PackedLayers::quantize(
+            &manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1,
+        )
+        .unwrap();
+        let server = Server::start_native_packed(manifest, params, packed);
+        let (_, rx) = server.submit(vec![1, 2, 3], 4, 0.0, 0);
+        let c = rx.recv().unwrap();
+        assert_eq!(c.tokens.len(), 4);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completions, 1);
+        assert_eq!(stats.tokens_generated, 4);
     }
 
     #[test]

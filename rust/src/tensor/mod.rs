@@ -67,7 +67,22 @@ impl Matrix {
 
     /// Copy of column j (strided gather).
     pub fn col(&self, j: usize) -> Vec<f32> {
-        (0..self.rows).map(|i| self.at(i, j)).collect()
+        self.col_view(j).to_vec()
+    }
+
+    /// Borrowing strided view of column j — no allocation. The quantizer
+    /// hot loops gather columns through this into reused buffers instead
+    /// of calling [`Matrix::col`] per column.
+    #[inline]
+    pub fn col_view(&self, j: usize) -> Col<'_> {
+        assert!(j < self.cols, "column {j} out of bounds ({})", self.cols);
+        Col { data: &self.data, cols: self.cols, rows: self.rows, j }
+    }
+
+    /// Iterator over column j's elements (top to bottom).
+    #[inline]
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
+        self.col_view(j).iter()
     }
 
     pub fn set_col(&mut self, j: usize, v: &[f32]) {
@@ -93,24 +108,19 @@ impl Matrix {
         out
     }
 
-    /// `self @ other`, cache-blocked ikj loop.
+    /// `self @ other` via the register-tiled parallel kernel
+    /// ([`crate::kernels::gemm`]); `RAANA_THREADS` bounds the worker count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        self.matmul_threaded(other, 0)
+    }
+
+    /// `self @ other` with an explicit thread count (0 = default). The
+    /// result is bit-deterministic in `threads`.
+    pub fn matmul_threaded(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            let arow = &self.data[i * k..(i + 1) * k];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        crate::kernels::gemm(m, k, n, &self.data, &other.data, &mut out.data, threads);
         out
     }
 
@@ -185,6 +195,60 @@ impl Matrix {
     pub fn rel_err(&self, other: &Matrix) -> f64 {
         let denom = other.frobenius_norm().max(1e-30);
         self.sub(other).frobenius_norm() / denom
+    }
+}
+
+/// Borrowing strided column view into a row-major [`Matrix`].
+///
+/// Created by [`Matrix::col_view`]; replaces per-call `Vec` gathers in the
+/// quantizer hot loops (`rabitq`, `hadamard`) — callers copy into a reused
+/// buffer via [`Col::copy_into`] or stream via [`Col::iter`].
+#[derive(Clone, Copy)]
+pub struct Col<'a> {
+    data: &'a [f32],
+    cols: usize,
+    rows: usize,
+    j: usize,
+}
+
+impl<'a> Col<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Element i of the column.
+    #[inline]
+    pub fn at(&self, i: usize) -> f32 {
+        self.data[i * self.cols + self.j]
+    }
+
+    /// Iterate the column top to bottom.
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = f32> + 'a {
+        let (data, cols, j) = (self.data, self.cols, self.j);
+        (0..self.rows).map(move |i| data[i * cols + j])
+    }
+
+    /// Copy the column into `out[..len]` (the reused-buffer hot path).
+    pub fn copy_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows, "column copy length mismatch");
+        let (cols, j) = (self.cols, self.j);
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.data[i * cols + j];
+        }
+    }
+
+    /// Owned copy (what [`Matrix::col`] returns).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut v = vec![0f32; self.rows];
+        self.copy_into(&mut v);
+        v
     }
 }
 
@@ -357,6 +421,51 @@ mod tests {
         let inv = spd_inverse(&a).expect("SPD");
         let prod = a.matmul(&inv);
         assert!(prod.rel_err(&Matrix::eye(6)) < 1e-3);
+    }
+
+    #[test]
+    fn col_view_matches_col() {
+        let a = random_matrix(7, 5, 9);
+        for j in 0..5 {
+            let v = a.col(j);
+            let cv = a.col_view(j);
+            assert_eq!(cv.len(), 7);
+            assert!(!cv.is_empty());
+            for i in 0..7 {
+                assert_eq!(cv.at(i), v[i]);
+            }
+            let streamed: Vec<f32> = a.col_iter(j).collect();
+            assert_eq!(streamed, v);
+            let mut buf = vec![0f32; 7];
+            cv.copy_into(&mut buf);
+            assert_eq!(buf, v);
+        }
+    }
+
+    #[test]
+    fn col_view_empty_matrix() {
+        let a = Matrix::zeros(0, 3);
+        let cv = a.col_view(1);
+        assert_eq!(cv.len(), 0);
+        assert!(cv.is_empty());
+        assert_eq!(cv.to_vec(), Vec::<f32>::new());
+        assert_eq!(a.col_iter(2).count(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn col_view_out_of_bounds_panics() {
+        let a = Matrix::zeros(2, 2);
+        let _ = a.col_view(2);
+    }
+
+    #[test]
+    fn matmul_threaded_deterministic() {
+        let a = random_matrix(33, 21, 10);
+        let b = random_matrix(21, 19, 11);
+        let c1 = a.matmul_threaded(&b, 1);
+        let c8 = a.matmul_threaded(&b, 8);
+        assert_eq!(c1.data, c8.data);
     }
 
     #[test]

@@ -83,7 +83,7 @@ pub fn train(
         inputs.push(lit_scalar_f32(lr as f32));
         inputs.push(lit_i32(&batch, &[m.train_batch, m.seq_len])?);
 
-        let outs = mrt.train_step.run(&inputs)?;
+        let outs = mrt.train_step_art()?.run(&inputs)?;
         anyhow::ensure!(outs.len() == 3 * np + 1, "train_step arity");
         for (i, t) in params.tensors.iter_mut().enumerate() {
             *t = to_vec_f32(&outs[i])?;

@@ -1,0 +1,230 @@
+//! Offline vendor shim for the `anyhow` crate: the exact API subset this
+//! workspace uses (`Error`, `Result`, `Context`, `anyhow!`, `bail!`,
+//! `ensure!`), implemented without any dependencies.
+//!
+//! Differences from upstream are deliberate simplifications: the error
+//! chain is stored as rendered strings (no backtraces, no downcasting of
+//! sources), and `Error` implements `std::error::Error` directly so one
+//! blanket `Context` impl covers both std errors and `anyhow::Result`.
+
+use std::any::{Any, TypeId};
+use std::fmt::{self, Debug, Display};
+
+/// Error type: an outermost message plus a rendered cause chain.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context (new outermost message).
+    pub fn context<C: Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The rendered cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Convert any std error into `Error`, preserving an existing `Error`'s
+/// chain when the source already is one (checked via `TypeId`).
+fn into_error<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+    if TypeId::of::<E>() == TypeId::of::<Error>() {
+        let boxed: Box<dyn Any> = Box::new(e);
+        return *boxed.downcast::<Error>().expect("TypeId checked");
+    }
+    let mut chain = vec![e.to_string()];
+    let mut src = e.source();
+    while let Some(s) = src {
+        chain.push(s.to_string());
+        src = s.source();
+    }
+    Error { chain }
+}
+
+macro_rules! impl_from {
+    ($($ty:ty),* $(,)?) => {
+        $(impl From<$ty> for Error {
+            fn from(e: $ty) -> Error {
+                into_error(e)
+            }
+        })*
+    };
+}
+
+impl_from!(
+    std::io::Error,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    std::char::ParseCharError,
+    std::fmt::Error,
+    std::env::VarError,
+    std::time::SystemTimeError,
+    std::sync::mpsc::RecvError,
+    std::sync::mpsc::RecvTimeoutError,
+    std::sync::mpsc::TryRecvError,
+    std::array::TryFromSliceError,
+);
+
+/// `anyhow::Result<T>`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, turning them into `anyhow::Result`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| into_error(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| into_error(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_io_and_context_chain() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_preserves_chain() {
+        let inner: Result<()> = Err(anyhow!("inner"));
+        let e = inner.context("middle").context("outer").unwrap_err();
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "middle", "inner"]);
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(1).context("missing").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+    }
+}

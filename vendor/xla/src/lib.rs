@@ -1,0 +1,252 @@
+//! Offline vendor stub for the `xla` (xla_extension) crate.
+//!
+//! The build environment has no XLA/PJRT shared library, so this stub
+//! keeps the L3 coordinator compiling against the same interface while
+//! reporting the PJRT backend as unavailable at runtime:
+//!
+//! * [`Literal`] is fully functional (host-side tensor container) — the
+//!   literal glue in `raana::runtime` and its unit tests work unchanged.
+//! * [`PjRtClient::cpu`] returns an error; every code path that would
+//!   execute a compiled HLO artifact therefore falls back (or errors)
+//!   cleanly, and the native CPU backend serves in its place.
+//!
+//! When the real `xla_extension` 0.5.1 is restored in the vendor set, this
+//! path dependency can be swapped back without touching the coordinator.
+
+use std::fmt;
+
+/// XLA error type (mirrors the real crate's string-carrying error).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: the offline vendor set \
+     ships an interface stub (no libxla_extension). Use the native CPU \
+     backend (raana::runtime::ModelRuntime::native) instead.";
+
+// ------------------------------------------------------------------ literal
+
+/// Element types a [`Literal`] can hold.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal (the only fully functional part of the stub).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+/// Sealed-ish conversion trait for supported element types.
+pub trait NativeType: Copy {
+    fn store(v: Vec<Self>) -> LiteralData;
+    fn extract(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn extract(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn extract(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { data: T::store(data.to_vec()), dims }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::store(vec![v]), dims: Vec::new() }
+    }
+
+    /// Tuple literal (what `return_tuple=True` entry points produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: LiteralData::Tuple(parts), dims: Vec::new() }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Flattened element vector (type must match the stored one).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data).ok_or_else(|| Error::new("literal element type mismatch"))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+// --------------------------------------------------------------- PJRT stubs
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Parsed HLO module proto. Parsing requires the real library.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable. Cannot be constructed by the stub.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1.5f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.clone().to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
