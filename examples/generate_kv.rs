@@ -1,0 +1,96 @@
+//! KV-cached incremental decoding, artifact-free: quantize a demo model
+//! to packed RaBitQ codes, prefill a prompt once, then generate one token
+//! per `decode_step` — and verify against the full-recompute reference.
+//!
+//! ```sh
+//! ./target/release/examples/generate_kv [--tokens 48] [--bits 4] \
+//!     [--prompt "the quick brown fox "] [--check]
+//! ```
+//!
+//! `--check` recomputes every step's logits from scratch and asserts the
+//! two paths are bit-identical (the ISSUE 2 acceptance property, live).
+
+use std::time::Instant;
+
+use anyhow::Result;
+use raana::cli::Args;
+use raana::data::{detokenize, tokenize};
+use raana::experiments::native_demo_packed;
+use raana::runtime::ModelRuntime;
+
+fn argmax(logits: &[f32]) -> i32 {
+    raana::util::argmax(logits) as i32
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let new_tokens = args.opt_usize("tokens", 48)?;
+    let bits_raw = args.opt_usize("bits", 4)?;
+    anyhow::ensure!((1..=8).contains(&bits_raw), "--bits must be in 1..=8, got {bits_raw}");
+    let bits = bits_raw as u8;
+    let prompt_text = args.opt_or("prompt", "the quick brown fox ").to_string();
+    let check = args.flag("check");
+
+    let (manifest, params, packed) = native_demo_packed("generate-kv", 256, 4, bits, 11)?;
+    println!(
+        "demo model: d={} layers={} seq_len={} | {} linears packed at {bits} bits \
+         (avg {:.2} incl. side payloads)",
+        manifest.d_model,
+        manifest.n_layers,
+        manifest.seq_len,
+        packed.layers.len(),
+        packed.avg_bits()
+    );
+    let seq = manifest.seq_len;
+    let mut mrt = ModelRuntime::native(manifest)?;
+    mrt.attach_packed(packed)?;
+
+    let mut cache = mrt.new_kv_cache(1);
+    println!(
+        "kv cache: 1 slot x {} positions x {} layers ({} KiB resident)",
+        cache.capacity(),
+        mrt.manifest.n_layers,
+        cache.mem_bytes() / 1024
+    );
+
+    let mut ctx = tokenize(&prompt_text);
+    if ctx.len() > seq {
+        ctx.drain(..ctx.len() - seq);
+    }
+    let t0 = Instant::now();
+    let mut logits = mrt.prefill(&params, &mut cache, 0, &ctx)?;
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t1 = Instant::now();
+    let mut generated = Vec::with_capacity(new_tokens);
+    for _ in 0..new_tokens {
+        if check {
+            // `logits` belong to the current (truncated) context — they
+            // must match a from-scratch forward bit-for-bit
+            let lo = ctx.len().saturating_sub(seq);
+            let want = mrt.last_logits_ctx(&params, &ctx[lo..])?;
+            assert_eq!(logits, want, "KV logits must equal full recompute");
+        }
+        let tok = argmax(&logits);
+        generated.push(tok);
+        ctx.push(tok);
+        if cache.is_full(0) {
+            // window slide: absolute positions shift, so re-prefill
+            let lo = ctx.len().saturating_sub(seq);
+            logits = mrt.prefill(&params, &mut cache, 0, &ctx[lo..])?;
+        } else {
+            logits = mrt.decode_step(&params, &mut cache, &[0], &[tok])?;
+        }
+    }
+    let decode_secs = t1.elapsed().as_secs_f64();
+
+    println!(
+        "prefill {} tokens in {prefill_ms:.1} ms; generated {new_tokens} tokens \
+         at {:.1} tok/s{}",
+        ctx.len() - new_tokens,
+        new_tokens as f64 / decode_secs,
+        if check { " (bit-exactness checked every step)" } else { "" }
+    );
+    println!("---\n{}{}", prompt_text, detokenize(&generated).escape_debug());
+    Ok(())
+}

@@ -59,7 +59,7 @@ fn main() -> Result<()> {
         .collect();
     let mut rxs = Vec::new();
     for (i, p) in prompts.iter().enumerate() {
-        let (id, rx) = server.submit(tokenize(p), new_tokens, 0.8, i as u64);
+        let (id, rx) = server.submit(tokenize(p), new_tokens, 0.8, i as u64)?;
         rxs.push((id, rx));
     }
     for (id, rx) in rxs {

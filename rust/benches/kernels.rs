@@ -9,6 +9,9 @@
 //!   Pallas `qmatmul` HLO artifact when PJRT is available).
 //! * Serve loop: native `fwd_logits` tokens/s, dense weights vs resident
 //!   packed codes.
+//! * Generation: KV-cached `prefill` + `decode_step` vs full-recompute
+//!   per token at generation length 64 (`serve_kv` vs `serve_recompute`
+//!   in the JSON; acceptance: >= 2x tokens/s).
 //!
 //! Results print as tables and land in `BENCH_kernels.json` so future PRs
 //! can diff the perf trajectory mechanically. Dimensions honor
@@ -19,11 +22,10 @@ use raana::benchlib::{bench, bench_json, write_json_report, Table};
 use raana::hadamard::{fwht, fwht_batch};
 use raana::json::{self, Value};
 use raana::kernels::qgemm;
-use raana::model::{artifacts_root, synthetic_manifest};
-use raana::quant::{LayerCalib, TrickConfig};
+use raana::model::artifacts_root;
 use raana::rabitq::{QuantizedMatrix, ScaleMode};
 use raana::rng::Rng;
-use raana::runtime::{lit_f32, native_init, ModelRuntime, PackedLayers, Runtime};
+use raana::runtime::{lit_f32, ModelRuntime, Runtime};
 use raana::tensor::Matrix;
 use raana::threadpool::default_threads;
 
@@ -195,14 +197,8 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------- serve-loop tokens/s
     // native fwd_logits over a tiny-sized model: dense weights vs resident
     // packed codes — the request path the batching server runs.
-    let manifest = synthetic_manifest("bench-serve", 256, 4, 4, 1024, 128, 256, 8);
-    let params = native_init(&manifest, 7);
-    let stats: Vec<LayerCalib> =
-        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
-    let bits = vec![4u8; manifest.linears.len()];
-    let packed = PackedLayers::quantize(
-        &manifest, &params, &bits, &stats, &TrickConfig::none(), 7, threads,
-    )?;
+    let (manifest, params, packed) =
+        raana::experiments::native_demo_packed("bench-serve", 256, 4, 4, 7)?;
     let batch = manifest.eval_batch;
     let tokens: Vec<i32> = (0..batch * manifest.seq_len)
         .map(|i| (i * 31 % 256) as i32)
@@ -240,6 +236,80 @@ fn main() -> anyhow::Result<()> {
             ("packed", bench_json(&packed_r)),
             ("dense_tok_s", json::num(dense_tok_s)),
             ("packed_tok_s", json::num(packed_tok_s)),
+        ]),
+    ));
+
+    // ------------------------------ KV-cached generation vs recompute
+    // single-stream generation on the demo model: prefill + decode_step
+    // (cached K/V, one row per token) vs recomputing the whole window per
+    // token — the per-token serve cost before this existed. Greedy
+    // sampling so both paths walk the identical token sequence.
+    fn argmax(logits: &[f32]) -> i32 {
+        raana::util::argmax(logits) as i32
+    }
+    let (gen_len, prompt_len) = (64usize, 32usize);
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| (i * 17 % 256) as i32).collect();
+    let mut cache = mrt_packed.new_kv_cache(1);
+    let kv_r = bench("serve_kv", 1, 4, || {
+        let mut logits = mrt_packed.prefill(&params, &mut cache, 0, &prompt).unwrap();
+        for _ in 0..gen_len - 1 {
+            let tok = argmax(&logits);
+            logits = mrt_packed
+                .decode_step(&params, &mut cache, &[0], &[tok])
+                .unwrap();
+        }
+        std::hint::black_box(&logits);
+    });
+    let rec_r = bench("serve_recompute", 1, 4, || {
+        let mut ctx = prompt.clone();
+        let mut logits = mrt_packed.last_logits_ctx(&params, &ctx).unwrap();
+        for _ in 0..gen_len - 1 {
+            ctx.push(argmax(&logits));
+            logits = mrt_packed.last_logits_ctx(&params, &ctx).unwrap();
+        }
+        std::hint::black_box(&logits);
+    });
+    let kv_tok_s = gen_len as f64 / kv_r.median();
+    let rec_tok_s = gen_len as f64 / rec_r.median();
+    let kv_speedup = rec_r.median() / kv_r.median().max(1e-12);
+    let mut t = Table::new(&[
+        "Generation (prompt=32, gen=64, packed demo model)",
+        "median",
+        "tok/s",
+    ]);
+    t.row(vec![
+        "recompute per token (last_logits_ctx)".into(),
+        format!("{:.1} ms", rec_r.median() * 1e3),
+        format!("{rec_tok_s:.1}"),
+    ]);
+    t.row(vec![
+        "KV cached (prefill + decode_step)".into(),
+        format!("{:.1} ms", kv_r.median() * 1e3),
+        format!("{kv_tok_s:.1}"),
+    ]);
+    t.row(vec![
+        "serve_kv speedup".into(),
+        format!("{kv_speedup:.1}x"),
+        "acceptance: >= 2x at gen length 64".into(),
+    ]);
+    println!("{}", t.render());
+    report.push((
+        "serve_recompute",
+        json::obj(vec![
+            ("prompt_len", json::num(prompt_len as f64)),
+            ("gen_len", json::num(gen_len as f64)),
+            ("gen", bench_json(&rec_r)),
+            ("tok_s", json::num(rec_tok_s)),
+        ]),
+    ));
+    report.push((
+        "serve_kv",
+        json::obj(vec![
+            ("prompt_len", json::num(prompt_len as f64)),
+            ("gen_len", json::num(gen_len as f64)),
+            ("gen", bench_json(&kv_r)),
+            ("tok_s", json::num(kv_tok_s)),
+            ("speedup_vs_recompute", json::num(kv_speedup)),
         ]),
     ));
 

@@ -275,6 +275,51 @@ pub fn raana_quantize_packed(
     Ok((packed, report))
 }
 
+/// Artifact-free packed-serving fixture shared by the CLI demo
+/// (`raana serve` without artifacts), the `generate_kv` example, and
+/// `benches/kernels.rs`: a synthetic GPT-2-style manifest (`seq_len` 128,
+/// byte vocab, `eval_batch` 8), natively initialized weights, calibration
+/// statistics captured with one native forward, and every registered
+/// linear RaBitQ-quantized at `bits` with the paper's default tricks.
+///
+/// `d_model` must be divisible by 4 (the fixture's head count).
+pub fn native_demo_packed(
+    name: &str,
+    d_model: usize,
+    n_layers: usize,
+    bits: u8,
+    seed: u64,
+) -> Result<(crate::model::Manifest, ModelParams, PackedLayers)> {
+    use crate::model::synthetic_manifest;
+    use crate::runtime::native_init;
+
+    anyhow::ensure!((1..=8).contains(&bits), "bits must be in 1..=8, got {bits}");
+    let manifest = synthetic_manifest(name, d_model, n_layers, 4, 4 * d_model, 128, 256, 8);
+    let params = native_init(&manifest, seed);
+
+    // calibration statistics from one native capture forward, so the
+    // packed layers exercise outliers + centralization like a real run
+    let probe = ModelRuntime::native(manifest.clone())?;
+    let calib_tokens: Vec<i32> = crate::data::tokenize(&crate::data::zero_shot_text())
+        .into_iter()
+        .cycle()
+        .take(manifest.eval_batch * manifest.seq_len)
+        .collect();
+    let stats = probe
+        .native_model
+        .capture_layer_stats(&manifest, &params, &calib_tokens, 0)?;
+    let packed = PackedLayers::quantize(
+        &manifest,
+        &params,
+        &vec![bits; manifest.linears.len()],
+        &stats,
+        &TrickConfig::default(),
+        seed,
+        0,
+    )?;
+    Ok((manifest, params, packed))
+}
+
 /// Baseline method selector for the table benches.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Baseline {

@@ -14,10 +14,20 @@
 //!   fast paths for 1/2/4/8-bit codes, a streaming bit-window decoder for
 //!   3/5/6/7.
 //!
+//! * [`attend_cached`] — single-query multi-head attention over a
+//!   contiguous K/V row window. Both the full causal forward and the
+//!   KV-cached `decode_step` route through this one kernel, which is what
+//!   makes incremental decoding **bit-identical** to full recompute.
+//!
 //! Threading: `threads == 0` means [`threadpool::default_threads`] (the
 //! `RAANA_THREADS` override applies). All kernels are bit-deterministic in
 //! the thread count — every output element is produced by exactly one task
-//! with a fixed reduction order.
+//! with a fixed reduction order. A second, stricter contract backs the KV
+//! cache: every kernel computes each output **row** with a reduction order
+//! that does not depend on how many rows are in the batch, so a 1-row
+//! decode step reproduces the corresponding row of an n-row prefill
+//! bit-for-bit.
+#![deny(missing_docs)]
 
 use crate::rabitq::{grid_center, PackedCodes, QuantizedMatrix};
 use crate::tensor::Matrix;
@@ -46,6 +56,18 @@ fn effective_threads(threads: usize) -> usize {
 /// Layout contract: codes are packed LSB-first at `bits` bits per element
 /// (see [`PackedCodes::pack`]). Equivalent to `out[i] = codes.get(start+i)
 /// as f32`, but byte-at-a-time instead of per-element bit arithmetic.
+///
+/// # Examples
+///
+/// ```
+/// use raana::kernels::decode_codes_into;
+/// use raana::rabitq::PackedCodes;
+///
+/// let packed = PackedCodes::pack(&[3, 0, 7, 5, 1], 3);
+/// let mut out = vec![0.0f32; 3];
+/// decode_codes_into(&packed, 1, &mut out);
+/// assert_eq!(out, vec![0.0, 7.0, 5.0]);
+/// ```
 pub fn decode_codes_into(codes: &PackedCodes, start: usize, out: &mut [f32]) {
     let len = out.len();
     if len == 0 {
@@ -210,6 +232,71 @@ fn qgemm_block(
     acc
 }
 
+// -------------------------------------------------------- cached attention
+
+/// Single-query multi-head attention over a contiguous K/V row window —
+/// the gather path the KV cache serves (`ctx` cached rows, one query).
+///
+/// `q` is one (d,) query row with `d = n_heads * head_dim`; `k_rows` /
+/// `v_rows` hold `ctx` rows of length `d` back to back (either the
+/// in-forward K/V matrices of a full causal pass or a
+/// [`crate::runtime::KvCache`] slot's filled prefix). Per head: scaled
+/// dot-product scores against all `ctx` keys, a max-shifted softmax, and
+/// the weighted value sum **accumulated into** `out[head window]` (callers
+/// pass a zeroed `out`). `scores` is caller-owned scratch of length
+/// `>= ctx` so batch loops allocate nothing per query.
+///
+/// This is the single implementation of attention arithmetic in the crate:
+/// the full forward calls it once per (batch row, query position) and
+/// `decode_step` once per active slot, so cached decoding is bit-identical
+/// to full recompute by construction (same reduction order per row).
+pub fn attend_cached(
+    q: &[f32],
+    k_rows: &[f32],
+    v_rows: &[f32],
+    ctx: usize,
+    n_heads: usize,
+    head_dim: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = n_heads * head_dim;
+    debug_assert!(ctx >= 1, "attention needs at least one cached row");
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert!(k_rows.len() >= ctx * d && v_rows.len() >= ctx * d);
+    debug_assert!(scores.len() >= ctx);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    for head in 0..n_heads {
+        let hoff = head * head_dim;
+        let qrow = &q[hoff..hoff + head_dim];
+        let mut maxs = f32::NEG_INFINITY;
+        for (ki, sc) in scores[..ctx].iter_mut().enumerate() {
+            let krow = &k_rows[ki * d + hoff..ki * d + hoff + head_dim];
+            let mut dp = 0f32;
+            for t in 0..head_dim {
+                dp += qrow[t] * krow[t];
+            }
+            *sc = dp * scale;
+            maxs = maxs.max(*sc);
+        }
+        let mut denom = 0f32;
+        for sc in scores[..ctx].iter_mut() {
+            *sc = (*sc - maxs).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let orow = &mut out[hoff..hoff + head_dim];
+        for (ki, &sc) in scores[..ctx].iter().enumerate() {
+            let w = sc * inv;
+            let vrow = &v_rows[ki * d + hoff..ki * d + hoff + head_dim];
+            for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                *ov += w * vv;
+            }
+        }
+    }
+}
+
 // -------------------------------------------------------------- dense gemm
 
 /// Dense f32 GEMM: `out += A (m×k) @ B (k×n)`, row-major slices.
@@ -256,10 +343,11 @@ fn gemm_rows(a: &[f32], k: usize, n: usize, b: &[f32], out: &mut [f32]) {
     while i < r {
         let arow = &a[i * k..(i + 1) * k];
         let orow: &mut [f32] = &mut rows[i];
+        // No zero-skip here: a row must reduce in the exact same order
+        // whether it lands in this remainder loop or in `micro4`, so that
+        // per-row results are independent of the batch's row grouping (the
+        // KV-decode bit-exactness contract).
         for (kk, &x) in arow.iter().enumerate() {
-            if x == 0.0 {
-                continue;
-            }
             let bv = &b[kk * n..kk * n + n];
             for (o, &bj) in orow.iter_mut().zip(bv) {
                 *o += x * bj;
@@ -385,6 +473,90 @@ mod tests {
         let got = qgemm(&x, &qm, 2);
         let want = x.matmul(&qm.dequantize());
         assert!(got.rel_err(&want) < 1e-4);
+    }
+
+    #[test]
+    fn attend_cached_matches_naive_softmax_attention() {
+        let (hn, hd, ctx) = (2usize, 4usize, 5usize);
+        let d = hn * hd;
+        let q = Rng::new(50).gaussian_vec(d);
+        let k = Rng::new(51).gaussian_vec(ctx * d);
+        let v = Rng::new(52).gaussian_vec(ctx * d);
+        let mut scores = vec![0f32; ctx];
+        let mut out = vec![0f32; d];
+        attend_cached(&q, &k, &v, ctx, hn, hd, &mut scores, &mut out);
+
+        // f64 reference, per head
+        for head in 0..hn {
+            let hoff = head * hd;
+            let mut sc: Vec<f64> = (0..ctx)
+                .map(|ki| {
+                    (0..hd)
+                        .map(|t| q[hoff + t] as f64 * k[ki * d + hoff + t] as f64)
+                        .sum::<f64>()
+                        / (hd as f64).sqrt()
+                })
+                .collect();
+            let maxs = sc.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let denom: f64 = sc.iter().map(|s| (s - maxs).exp()).sum();
+            for s in sc.iter_mut() {
+                *s = (*s - maxs).exp() / denom;
+            }
+            for t in 0..hd {
+                let want: f64 = (0..ctx)
+                    .map(|ki| sc[ki] * v[ki * d + hoff + t] as f64)
+                    .sum();
+                assert!(
+                    (out[hoff + t] as f64 - want).abs() < 1e-4,
+                    "head {head} t {t}: {} vs {want}",
+                    out[hoff + t]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attend_cached_single_row_is_value_passthrough() {
+        // ctx == 1: softmax over one key is 1, so out == v row exactly
+        let (hn, hd) = (2usize, 8usize);
+        let d = hn * hd;
+        let q = Rng::new(53).gaussian_vec(d);
+        let k = Rng::new(54).gaussian_vec(d);
+        let v = Rng::new(55).gaussian_vec(d);
+        let mut scores = vec![0f32; 1];
+        let mut out = vec![0f32; d];
+        attend_cached(&q, &k, &v, 1, hn, hd, &mut scores, &mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn gemm_rows_bit_identical_across_batch_grouping() {
+        // the KV-decode contract: row i of an m-row product must equal the
+        // same row computed alone (micro4 vs remainder path, any threads)
+        let (m, k, n) = (11usize, 40usize, 24usize);
+        let a = random_matrix(m, k, 60);
+        let b = random_matrix(k, n, 61);
+        let mut full = vec![0f32; m * n];
+        gemm(m, k, n, &a.data, &b.data, &mut full, 4);
+        for i in 0..m {
+            let mut single = vec![0f32; n];
+            gemm(1, k, n, a.row(i), &b.data, &mut single, 1);
+            assert_eq!(&full[i * n..(i + 1) * n], &single[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn qgemm_bit_identical_across_batch_grouping() {
+        let (d, c) = (96usize, 40usize);
+        let v = random_matrix(d, c, 62);
+        let x = random_matrix(6, d, 63);
+        let qm = QuantizedMatrix::quantize(&v, 5, ScaleMode::MaxAbs, 2);
+        let full = qgemm(&x, &qm, 4);
+        for i in 0..x.rows {
+            let xi = Matrix::from_vec(1, d, x.row(i).to_vec());
+            let single = qgemm(&xi, &qm, 1);
+            assert_eq!(full.row(i), single.row(0), "row {i}");
+        }
     }
 
     fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {

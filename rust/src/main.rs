@@ -232,9 +232,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn serve_native_demo(args: &Args, n_req: usize, new_tokens: usize) -> Result<()> {
-    use raana::model::synthetic_manifest;
-    use raana::runtime::{native_init, ModelRuntime, PackedLayers};
-
     let bits_raw = args.opt_usize("bits", 4)?;
     if !(1..=8).contains(&bits_raw) {
         bail!("--bits must be in 1..=8, got {bits_raw}");
@@ -242,28 +239,8 @@ fn serve_native_demo(args: &Args, n_req: usize, new_tokens: usize) -> Result<()>
     let bits = bits_raw as u8;
     let d = args.opt_usize("d-model", 256)?;
     let layers = args.opt_usize("layers", 4)?;
-    let manifest = synthetic_manifest("native-demo", d, layers, 4, 4 * d, 128, 256, 8);
-    let params = native_init(&manifest, 7);
-
-    // calibration statistics from one native capture forward
-    let probe = ModelRuntime::native(manifest.clone())?;
-    let calib_tokens: Vec<i32> = raana::data::tokenize(&raana::data::zero_shot_text())
-        .into_iter()
-        .cycle()
-        .take(manifest.eval_batch * manifest.seq_len)
-        .collect();
-    let stats = probe
-        .native_model
-        .capture_layer_stats(&manifest, &params, &calib_tokens, 0)?;
-    let packed = PackedLayers::quantize(
-        &manifest,
-        &params,
-        &vec![bits; manifest.linears.len()],
-        &stats,
-        &TrickConfig::default(),
-        7,
-        0,
-    )?;
+    let (manifest, params, packed) =
+        raana::experiments::native_demo_packed("native-demo", d, layers, bits, 7)?;
     info!(
         "packed {} linears at {bits} bits (avg {:.2} incl. side payloads)",
         manifest.linears.len(),
@@ -283,7 +260,7 @@ fn run_requests(
     let mut rxs = Vec::new();
     for i in 0..n_req {
         let prompt = raana::data::tokenize(&format!("The {i} quick brown fox "));
-        let (_, rx) = server.submit(prompt, new_tokens, 0.8, i as u64);
+        let (_, rx) = server.submit(prompt, new_tokens, 0.8, i as u64)?;
         rxs.push(rx);
     }
     for rx in rxs {
@@ -297,12 +274,16 @@ fn run_requests(
     }
     let stats = server.shutdown()?;
     println!(
-        "served {} completions, {:.1} tok/s, occupancy {:.2}, p50 {:.1} ms p95 {:.1} ms",
+        "served {} completions, {:.1} tok/s, occupancy {:.2}, p50 {:.1} ms p95 {:.1} ms \
+         ({} prefill tokens, {} decode steps, {} window slides)",
         stats.completions,
         stats.throughput_tok_s(),
         stats.mean_batch_occupancy(batch),
         stats.p50_latency() * 1e3,
-        stats.p95_latency() * 1e3
+        stats.p95_latency() * 1e3,
+        stats.prefill_tokens,
+        stats.decode_steps,
+        stats.window_slides
     );
     Ok(())
 }

@@ -18,6 +18,7 @@
 //!
 //! Codes are bit-packed ([`PackedCodes`]) — b bits per weight, the format
 //! whose size the paper's "avg bits" accounting counts.
+#![deny(missing_docs)]
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -62,6 +63,21 @@ impl Default for ScaleMode {
 }
 
 /// Quantize one column. Returns (codes, r) with codes in [0, 2^bits - 1].
+///
+/// # Examples
+///
+/// ```
+/// use raana::rabitq::{dequantize_column, quantize_column, ScaleMode};
+///
+/// let v = vec![0.9f32, -0.4, 0.1, -1.0];
+/// let (codes, r) = quantize_column(&v, 4, ScaleMode::MaxAbs);
+/// assert!(codes.iter().all(|&c| c < 16)); // 4-bit grid
+/// let mut rec = vec![0.0; 4];
+/// dequantize_column(&codes, r, 4, &mut rec);
+/// for (a, b) in v.iter().zip(&rec) {
+///     assert!((a - b).abs() < 0.2, "v ~= r * (codes - c_b)");
+/// }
+/// ```
 pub fn quantize_column(v: &[f32], bits: u8, mode: ScaleMode) -> (Vec<u8>, f32) {
     let mut codes = Vec::with_capacity(v.len());
     let r = quantize_column_into(v, bits, mode, &mut codes);
@@ -179,12 +195,17 @@ pub fn estimate_ip(x: &[f32], codes: &[u8], r: f32, bits: u8) -> f64 {
 /// (column j occupies entries [j*d, (j+1)*d)).
 #[derive(Clone, Debug)]
 pub struct PackedCodes {
+    /// Bits per element (1..=8).
     pub bits: u8,
+    /// Number of packed elements.
     pub len: usize,
+    /// LSB-first packed payload, `ceil(len * bits / 8)` bytes.
     pub data: Vec<u8>,
 }
 
 impl PackedCodes {
+    /// Pack `values` (each `< 2^bits`) at `bits` bits per element,
+    /// LSB-first within each byte.
     pub fn pack(values: &[u8], bits: u8) -> Self {
         assert!((1..=8).contains(&bits));
         let total_bits = values.len() * bits as usize;
@@ -203,6 +224,8 @@ impl PackedCodes {
         PackedCodes { bits, len: values.len(), data }
     }
 
+    /// Read element `i` (random access; the bulk path is
+    /// [`crate::kernels::decode_codes_into`]).
     #[inline]
     pub fn get(&self, i: usize) -> u8 {
         let bits = self.bits as usize;
@@ -216,6 +239,7 @@ impl PackedCodes {
         ((w >> off) & ((1u16 << bits) - 1)) as u8
     }
 
+    /// Unpack every element back to one byte each.
     pub fn unpack(&self) -> Vec<u8> {
         (0..self.len).map(|i| self.get(i)).collect()
     }
@@ -229,9 +253,13 @@ impl PackedCodes {
 /// Quantized matrix: all columns of a (d x c) matrix at a shared bit-width.
 #[derive(Clone, Debug)]
 pub struct QuantizedMatrix {
+    /// Rows (input dimension) of the original matrix.
     pub d: usize,
+    /// Columns of the original matrix.
     pub c: usize,
+    /// Bits per code.
     pub bits: u8,
+    /// Bit-packed codes, column-major (column j at elements `j*d..(j+1)*d`).
     pub codes: PackedCodes,
     /// Per-column least-squares rescale factors.
     pub r: Vec<f32>,

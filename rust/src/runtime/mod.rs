@@ -22,7 +22,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-pub use native::{native_init, NativeModel, PackedLayers};
+pub use native::{native_init, KvCache, NativeModel, PackedLayers};
 
 use crate::model::{ArtifactPaths, Manifest, ModelParams};
 
@@ -301,6 +301,91 @@ impl ModelRuntime {
         let outs = self.entries()?.fwd_logits.run(&inputs)?;
         to_vec_f32(&outs[0])
     }
+
+    // --------------------------------------------- KV-cached generation
+
+    /// Allocate a [`KvCache`] for this model: `slots` request lanes, each
+    /// with `capacity = seq_len` positions per layer. One cache is meant
+    /// to live as long as the runtime and be recycled across requests.
+    ///
+    /// Incremental decoding always runs on the native backend (packed
+    /// codes when attached, dense otherwise) — the AOT artifacts have no
+    /// incremental entry point.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use raana::model::synthetic_manifest;
+    /// use raana::runtime::ModelRuntime;
+    ///
+    /// let m = synthetic_manifest("kv-doc", 32, 1, 2, 64, 8, 256, 1);
+    /// let mrt = ModelRuntime::native(m).unwrap();
+    /// let params = mrt.init(1).unwrap();
+    /// let mut cache = mrt.new_kv_cache(1);
+    /// // run the prompt once, then extend one token per decode step
+    /// let logits = mrt.prefill(&params, &mut cache, 0, &[10, 11, 12]).unwrap();
+    /// assert_eq!(logits.len(), 256);
+    /// let next = mrt.decode_step(&params, &mut cache, &[0], &[13]).unwrap();
+    /// assert_eq!(next.len(), 256);
+    /// assert_eq!(cache.len(0), 4);
+    /// ```
+    pub fn new_kv_cache(&self, slots: usize) -> KvCache {
+        self.native_model.kv_cache(slots)
+    }
+
+    /// Run a prompt once, filling cache `slot`; returns last-token logits
+    /// `(vocab,)`. See [`NativeModel::prefill`].
+    pub fn prefill(
+        &self,
+        params: &ModelParams,
+        cache: &mut KvCache,
+        slot: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.native_model.prefill(
+            &self.manifest,
+            params,
+            self.packed.as_ref(),
+            tokens,
+            cache,
+            slot,
+            0,
+        )
+    }
+
+    /// One batched KV-cached generation step over `slots`; returns
+    /// `(slots.len() * vocab)` row-major logits and advances each slot.
+    /// See [`NativeModel::decode_step`].
+    pub fn decode_step(
+        &self,
+        params: &ModelParams,
+        cache: &mut KvCache,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.native_model.decode_step(
+            &self.manifest,
+            params,
+            self.packed.as_ref(),
+            cache,
+            slots,
+            tokens,
+            0,
+        )
+    }
+
+    /// Full-recompute last-token logits for one variable-length context —
+    /// the reference the KV path is bit-identical to, and the per-token
+    /// cost recompute serving pays. See [`NativeModel::last_logits_ctx`].
+    pub fn last_logits_ctx(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.native_model.last_logits_ctx(
+            &self.manifest,
+            params,
+            self.packed.as_ref(),
+            tokens,
+            0,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -374,5 +459,36 @@ mod tests {
         assert!(logits.iter().all(|x| x.is_finite()));
         assert!(mrt.detach_packed().is_some());
         assert!(mrt.packed().is_none());
+    }
+
+    #[test]
+    fn kv_decode_matches_recompute_over_packed_weights() {
+        use crate::quant::{LayerCalib, TrickConfig};
+        let manifest = synthetic_manifest("rt-kv", 32, 2, 2, 64, 12, 256, 2);
+        let mut mrt = ModelRuntime::native(manifest.clone()).unwrap();
+        let params = mrt.init(5).unwrap();
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![5u8; manifest.linears.len()];
+        let packed = PackedLayers::quantize(
+            &manifest, &params, &bits, &stats, &TrickConfig::none(), 4, 1,
+        )
+        .unwrap();
+        mrt.attach_packed(packed).unwrap();
+
+        let mut cache = mrt.new_kv_cache(1);
+        let mut ctx: Vec<i32> = vec![3, 1, 4, 1, 5];
+        let mut logits = mrt.prefill(&params, &mut cache, 0, &ctx).unwrap();
+        assert_eq!(logits, mrt.last_logits_ctx(&params, &ctx).unwrap());
+        for _ in 0..4 {
+            let tok = crate::util::argmax(&logits) as i32;
+            logits = mrt.decode_step(&params, &mut cache, &[0], &[tok]).unwrap();
+            ctx.push(tok);
+            assert_eq!(
+                logits,
+                mrt.last_logits_ctx(&params, &ctx).unwrap(),
+                "packed KV decode must match packed recompute bit-for-bit"
+            );
+        }
     }
 }

@@ -16,6 +16,19 @@
 //! fp lm_head), so when the PJRT artifacts are available the two backends
 //! are interchangeable; when they are not (offline vendor stub), this is
 //! the serving path.
+//!
+//! Generation runs incrementally: [`NativeModel::prefill`] executes a
+//! prompt once at positions `0..L` and deposits every layer's K/V rows
+//! into a [`KvCache`] slot; [`NativeModel::decode_step`] then extends any
+//! batch of slots by one token each, attending over the cached rows via
+//! [`crate::kernels::attend_cached`] instead of recomputing the window.
+//! Every kernel on the path reduces each output row in a batch-size-
+//! independent order, so prefill + decode steps reproduce the
+//! full-recompute logits ([`NativeModel::last_logits_ctx`]) **bit for
+//! bit** — property-tested in `rust/tests/integration.rs`. When a slot's
+//! window fills, callers slide it by re-prefilling the last `capacity`
+//! tokens (absolute position embeddings invalidate shifted K/V rows, so
+//! this is the only recompute left on the path).
 
 use anyhow::{Context, Result};
 
@@ -64,15 +77,53 @@ impl NativeModel {
         threads: usize,
     ) -> Result<Vec<f32>> {
         let hid = self.forward_hidden(m, params, packed, tokens, threads, None)?;
-        let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
+        let s = self.seq_len;
         let b = hid.rows / s;
+        let rows: Vec<usize> = (0..b).map(|bi| bi * s + s - 1).collect();
+        self.project_rows(params, &hid, &rows, threads)
+    }
+
+    /// Last-position logits `(vocab,)` for ONE variable-length context:
+    /// `tokens` is a single unpadded sequence of length `1..=seq_len`
+    /// embedded at positions `0..len`. This is the full-recompute
+    /// reference that the KV-cached path ([`NativeModel::prefill`] +
+    /// [`NativeModel::decode_step`]) is tested bit-identical against, and
+    /// what recompute serving runs once per generated token.
+    pub fn last_logits_ctx(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let l = tokens.len();
+        anyhow::ensure!(
+            l >= 1 && l <= self.seq_len,
+            "context length {l} not in 1..={}",
+            self.seq_len
+        );
+        let hid = self.forward_hidden_seq(m, params, packed, tokens, l, threads, None, None)?;
+        self.project_rows(params, &hid, &[l - 1], threads)
+    }
+
+    /// Gather `rows` of the final hidden states and project them through
+    /// the fp lm_head; returns `(rows.len() * vocab)` row-major logits.
+    fn project_rows(
+        &self,
+        params: &ModelParams,
+        hid: &Matrix,
+        rows: &[usize],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let (d, v) = (self.d_model, self.vocab);
         let lm = params.get("lm_head")?;
-        let mut last = Matrix::zeros(b, d);
-        for bi in 0..b {
-            last.row_mut(bi).copy_from_slice(hid.row(bi * s + s - 1));
+        let mut last = Matrix::zeros(rows.len(), d);
+        for (i, &r) in rows.iter().enumerate() {
+            last.row_mut(i).copy_from_slice(hid.row(r));
         }
-        let mut out = Matrix::zeros(b, v);
-        kernels::gemm(b, d, v, &last.data, lm, &mut out.data, threads);
+        let mut out = Matrix::zeros(rows.len(), v);
+        kernels::gemm(rows.len(), d, v, &last.data, lm, &mut out.data, threads);
         Ok(out.data)
     }
 
@@ -127,8 +178,9 @@ impl NativeModel {
         Ok(captures)
     }
 
-    /// Full forward through every block and the final LayerNorm; returns
-    /// the (B*S, d_model) hidden states ready for the lm_head projection.
+    /// Full forward through every block and the final LayerNorm at the
+    /// model's fixed window (`seq_len`); returns the (B*S, d_model) hidden
+    /// states ready for the lm_head projection.
     fn forward_hidden(
         &self,
         m: &Manifest,
@@ -136,16 +188,48 @@ impl NativeModel {
         packed: Option<&PackedLayers>,
         tokens: &[i32],
         threads: usize,
-        mut capture: Option<&mut Vec<LayerCalib>>,
+        capture: Option<&mut Vec<LayerCalib>>,
     ) -> Result<Matrix> {
-        let (s, d) = (self.seq_len, self.d_model);
+        self.forward_hidden_seq(m, params, packed, tokens, self.seq_len, threads, capture, None)
+    }
+
+    /// [`NativeModel::forward_hidden`] generalized to a caller-chosen
+    /// sequence length `s <= seq_len` (positions `0..s`). When `cache` is
+    /// set (prefill), the batch must be a single sequence and every
+    /// layer's K/V rows are stored into that cache slot as they are
+    /// computed; the stored values are exactly the rows the in-forward
+    /// attention consumes, which is what makes later cached decode steps
+    /// bit-identical to recompute.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_hidden_seq(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        s: usize,
+        threads: usize,
+        mut capture: Option<&mut Vec<LayerCalib>>,
+        mut cache: Option<(&mut KvCache, usize)>,
+    ) -> Result<Matrix> {
+        let d = self.d_model;
+        anyhow::ensure!(
+            s >= 1 && s <= self.seq_len,
+            "sequence length {s} not in 1..={}",
+            self.seq_len
+        );
         anyhow::ensure!(
             !tokens.is_empty() && tokens.len() % s == 0,
-            "token batch must be a whole number of seq_len={s} sequences"
+            "token batch must be a whole number of length-{s} sequences"
         );
         let b = tokens.len() / s;
         if let Some(p) = packed {
             anyhow::ensure!(p.layers.len() == m.linears.len(), "packed layer arity");
+        }
+        if let Some((kv, slot)) = cache.as_ref() {
+            anyhow::ensure!(b == 1, "cache prefill takes a single sequence");
+            anyhow::ensure!(*slot < kv.slots(), "cache slot {slot} out of range");
+            anyhow::ensure!(s <= kv.capacity(), "sequence exceeds cache capacity");
         }
 
         // embeddings
@@ -183,7 +267,12 @@ impl NativeModel {
             let q = lin("attn.wq", &x, capture.as_deref_mut())?;
             let k = lin("attn.wk", &x, capture.as_deref_mut())?;
             let v = lin("attn.wv", &x, capture.as_deref_mut())?;
-            let att = self.attention(&q, &k, &v);
+            if let Some((kv, slot)) = cache.as_mut() {
+                for si in 0..s {
+                    kv.store(layer, *slot, si, k.row(si), v.row(si));
+                }
+            }
+            let att = self.attention(&q, &k, &v, s);
             let proj = lin("attn.wo", &att, capture.as_deref_mut())?;
             h.add_assign(&proj);
 
@@ -193,9 +282,6 @@ impl NativeModel {
                 params.get(&format!("{pre}ln2.scale"))?,
                 params.get(&format!("{pre}ln2.bias"))?,
             );
-            let lin = |nm: &str, inp: &Matrix, cap: Option<&mut Vec<LayerCalib>>| {
-                self.linear(m, params, packed, &format!("{pre}{nm}"), inp, threads, cap)
-            };
             let mut y = lin("mlp.fc1", &x, capture.as_deref_mut())?;
             for v in y.data.iter_mut() {
                 *v = gelu(*v);
@@ -249,46 +335,190 @@ impl NativeModel {
         Ok(y)
     }
 
-    /// Causal multi-head attention over (B*S, d) q/k/v; returns (B*S, d).
-    fn attention(&self, q: &Matrix, k: &Matrix, v: &Matrix) -> Matrix {
-        let (s, hn, hd) = (self.seq_len, self.n_heads, self.head_dim);
+    /// Causal multi-head attention over (B*S, d) q/k/v with sequence
+    /// length `s`; returns (B*S, d). Each query position runs through
+    /// [`kernels::attend_cached`] over the preceding K/V rows — the same
+    /// kernel [`NativeModel::decode_step`] calls over a [`KvCache`] slot,
+    /// so the two paths cannot drift.
+    fn attention(&self, q: &Matrix, k: &Matrix, v: &Matrix, s: usize) -> Matrix {
+        let (hn, hd, d) = (self.n_heads, self.head_dim, self.d_model);
         let b = q.rows / s;
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut o = Matrix::zeros(q.rows, self.d_model);
+        let mut o = Matrix::zeros(q.rows, d);
         let mut scores = vec![0f32; s];
         for bi in 0..b {
-            for head in 0..hn {
-                let hoff = head * hd;
-                for qi in 0..s {
-                    let qrow = &q.row(bi * s + qi)[hoff..hoff + hd];
-                    let mut maxs = f32::NEG_INFINITY;
-                    for (ki, sc) in scores[..=qi].iter_mut().enumerate() {
-                        let krow = &k.row(bi * s + ki)[hoff..hoff + hd];
-                        let mut dp = 0f32;
-                        for t in 0..hd {
-                            dp += qrow[t] * krow[t];
-                        }
-                        *sc = dp * scale;
-                        maxs = maxs.max(*sc);
-                    }
-                    let mut denom = 0f32;
-                    for sc in scores[..=qi].iter_mut() {
-                        *sc = (*sc - maxs).exp();
-                        denom += *sc;
-                    }
-                    let inv = 1.0 / denom;
-                    let orow = &mut o.row_mut(bi * s + qi)[hoff..hoff + hd];
-                    for (ki, &sc) in scores[..=qi].iter().enumerate() {
-                        let w = sc * inv;
-                        let vrow = &v.row(bi * s + ki)[hoff..hoff + hd];
-                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                            *ov += w * vv;
-                        }
-                    }
-                }
+            let base = bi * s;
+            for qi in 0..s {
+                kernels::attend_cached(
+                    q.row(base + qi),
+                    &k.data[base * d..(base + qi + 1) * d],
+                    &v.data[base * d..(base + qi + 1) * d],
+                    qi + 1,
+                    hn,
+                    hd,
+                    &mut scores,
+                    o.row_mut(base + qi),
+                );
             }
         }
         o
+    }
+
+    /// Allocate a [`KvCache`] sized for this model (`capacity = seq_len`)
+    /// with `slots` independent request slots.
+    pub fn kv_cache(&self, slots: usize) -> KvCache {
+        KvCache::new(self.n_layers, slots, self.seq_len, self.d_model)
+    }
+
+    /// Run a whole prompt once at positions `0..tokens.len()`, fill cache
+    /// `slot`'s per-layer K/V rows, and return the last-token logits
+    /// `(vocab,)`. Whatever the slot previously held is evicted.
+    ///
+    /// The prompt must fit the slot window (`1..=capacity` tokens, with
+    /// `capacity <= seq_len`); callers serving longer contexts pass the
+    /// last `capacity` tokens — the same truncation the recompute
+    /// reference applies.
+    pub fn prefill(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        slot: usize,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        cache.check_model(self)?;
+        let l = tokens.len();
+        anyhow::ensure!(
+            l >= 1 && l <= cache.capacity(),
+            "prompt length {l} not in 1..={}",
+            cache.capacity()
+        );
+        anyhow::ensure!(slot < cache.slots(), "cache slot {slot} out of range");
+        cache.reset(slot);
+        let hid = self.forward_hidden_seq(
+            m,
+            params,
+            packed,
+            tokens,
+            l,
+            threads,
+            None,
+            Some((&mut *cache, slot)),
+        )?;
+        cache.set_len(slot, l);
+        self.project_rows(params, &hid, &[l - 1], threads)
+    }
+
+    /// One KV-cached generation step over a batch of active cache slots:
+    /// row `i` embeds `tokens[i]` at position `cache.len(slots[i])`,
+    /// appends its K/V rows to that slot, attends over the slot's cached
+    /// window (itself included), and yields next-token logits. Returns
+    /// `(slots.len() * vocab)` row-major logits and advances each slot by
+    /// one position.
+    ///
+    /// Linear layers run through the same packed [`crate::kernels::qgemm`]
+    /// path as the full forward — still zero dequantization — and every
+    /// output row is bit-identical to the last row of a full recompute of
+    /// that slot's context, independent of which other slots share the
+    /// batch. Slots whose window is full are rejected: slide them with a
+    /// fresh [`NativeModel::prefill`] over the last `capacity` tokens.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_step(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        cache: &mut KvCache,
+        slots: &[usize],
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        cache.check_model(self)?;
+        let bsz = slots.len();
+        anyhow::ensure!(bsz >= 1 && tokens.len() == bsz, "slots/tokens arity mismatch");
+        for (i, &sl) in slots.iter().enumerate() {
+            anyhow::ensure!(sl < cache.slots(), "cache slot {sl} out of range");
+            anyhow::ensure!(!slots[..i].contains(&sl), "duplicate cache slot {sl}");
+            anyhow::ensure!(cache.len(sl) >= 1, "slot {sl} has no prefilled context");
+            anyhow::ensure!(
+                cache.len(sl) < cache.capacity(),
+                "slot {sl} window is full — re-prefill the slid window"
+            );
+        }
+        if let Some(p) = packed {
+            anyhow::ensure!(p.layers.len() == m.linears.len(), "packed layer arity");
+        }
+
+        // embeddings at each slot's next position
+        let d = self.d_model;
+        let tok_emb = params.get("tok_emb")?;
+        let pos_emb = params.get("pos_emb")?;
+        let mut h = Matrix::zeros(bsz, d);
+        for (i, (&sl, &t)) in slots.iter().zip(tokens).enumerate() {
+            anyhow::ensure!(
+                t >= 0 && (t as usize) < self.vocab,
+                "token {t} out of vocab range"
+            );
+            let pos = cache.len(sl);
+            let te = &tok_emb[(t as usize) * d..(t as usize + 1) * d];
+            let pe = &pos_emb[pos * d..(pos + 1) * d];
+            for ((o, &a), &p) in h.row_mut(i).iter_mut().zip(te).zip(pe) {
+                *o = a + p;
+            }
+        }
+
+        let mut scores = vec![0f32; cache.capacity()];
+        for layer in 0..self.n_layers {
+            let pre = format!("blk{layer}.");
+
+            let x = layer_norm(
+                &h,
+                params.get(&format!("{pre}ln1.scale"))?,
+                params.get(&format!("{pre}ln1.bias"))?,
+            );
+            let q = self.linear(m, params, packed, &format!("{pre}attn.wq"), &x, threads, None)?;
+            let k = self.linear(m, params, packed, &format!("{pre}attn.wk"), &x, threads, None)?;
+            let v = self.linear(m, params, packed, &format!("{pre}attn.wv"), &x, threads, None)?;
+            let mut att = Matrix::zeros(bsz, d);
+            for (i, &sl) in slots.iter().enumerate() {
+                let pos = cache.len(sl);
+                cache.store(layer, sl, pos, k.row(i), v.row(i));
+                let (krows, vrows) = cache.window(layer, sl, pos + 1);
+                kernels::attend_cached(
+                    q.row(i),
+                    krows,
+                    vrows,
+                    pos + 1,
+                    self.n_heads,
+                    self.head_dim,
+                    &mut scores,
+                    att.row_mut(i),
+                );
+            }
+            let proj =
+                self.linear(m, params, packed, &format!("{pre}attn.wo"), &att, threads, None)?;
+            h.add_assign(&proj);
+
+            let x = layer_norm(
+                &h,
+                params.get(&format!("{pre}ln2.scale"))?,
+                params.get(&format!("{pre}ln2.bias"))?,
+            );
+            let mut y =
+                self.linear(m, params, packed, &format!("{pre}mlp.fc1"), &x, threads, None)?;
+            for vv in y.data.iter_mut() {
+                *vv = gelu(*vv);
+            }
+            let y = self.linear(m, params, packed, &format!("{pre}mlp.fc2"), &y, threads, None)?;
+            h.add_assign(&y);
+        }
+        let hid = layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?);
+        for &sl in slots {
+            cache.advance(sl);
+        }
+        let rows: Vec<usize> = (0..bsz).collect();
+        self.project_rows(params, &hid, &rows, threads)
     }
 }
 
@@ -366,6 +596,167 @@ impl PackedLayers {
             return 0.0;
         }
         self.stored_bits() as f64 / m as f64
+    }
+}
+
+// -------------------------------------------------------------- KV cache
+
+/// Per-slot, per-layer K/V buffers backing incremental decoding.
+///
+/// One cache holds `slots` independent request slots; each slot owns, for
+/// every transformer layer, a fixed-capacity window of K and V rows
+/// (`capacity` positions × `d_model`, with `capacity` = the model's max
+/// context). [`NativeModel::prefill`] fills positions `0..L` for one
+/// slot; [`NativeModel::decode_step`] appends one row per step and
+/// attends over the filled prefix. Slots are recycled between requests
+/// with [`KvCache::reset`] — the batching server keeps exactly one cache
+/// alive and maps request lanes onto slots.
+///
+/// Wraparound: the buffers are rings in the serving sense — when a slot's
+/// window is full, the oldest entries are retired by re-prefilling the
+/// window slid by one token. The slide is a genuine recompute because the
+/// model's **absolute** position embeddings change every remaining
+/// token's position, invalidating the cached rows; in-window decoding
+/// (the common case) never recomputes anything.
+#[deny(missing_docs)]
+#[derive(Clone)]
+pub struct KvCache {
+    n_layers: usize,
+    slots: usize,
+    capacity: usize,
+    d_model: usize,
+    /// Flat K rows: `(layer, slot, pos)` → `d_model` f32s.
+    k: Vec<f32>,
+    /// Flat V rows, same layout as `k`.
+    v: Vec<f32>,
+    /// Filled prefix length per slot.
+    len: Vec<usize>,
+}
+
+impl std::fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KvCache(layers={} slots={} capacity={} d={} lens={:?})",
+            self.n_layers, self.slots, self.capacity, self.d_model, self.len
+        )
+    }
+}
+
+#[deny(missing_docs)]
+impl KvCache {
+    /// Allocate an all-empty cache. Every dimension must be >= 1; memory
+    /// is `2 * n_layers * slots * capacity * d_model` f32s, allocated once
+    /// up front so the serving loop never allocates per token.
+    pub fn new(n_layers: usize, slots: usize, capacity: usize, d_model: usize) -> KvCache {
+        assert!(
+            n_layers >= 1 && slots >= 1 && capacity >= 1 && d_model >= 1,
+            "KvCache dimensions must be >= 1"
+        );
+        let n = n_layers * slots * capacity * d_model;
+        KvCache {
+            n_layers,
+            slots,
+            capacity,
+            d_model,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            len: vec![0; slots],
+        }
+    }
+
+    /// Number of independent request slots.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Maximum cached positions per slot (the model's context window).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Filled prefix length of `slot` (0 = empty / evicted).
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    /// True when `slot` holds no context (fresh or evicted).
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.len[slot] == 0
+    }
+
+    /// True when `slot`'s window is full — the next token needs a
+    /// window-slide re-prefill instead of [`NativeModel::decode_step`].
+    pub fn is_full(&self, slot: usize) -> bool {
+        self.len[slot] >= self.capacity
+    }
+
+    /// Evict `slot`: drop its cached context so the slot can host a new
+    /// request. O(1) — rows are overwritten by the next prefill.
+    pub fn reset(&mut self, slot: usize) {
+        self.len[slot] = 0;
+    }
+
+    /// Total buffer footprint in bytes (K + V payloads).
+    pub fn mem_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Flat offset of `(layer, slot)`'s first row.
+    fn base(&self, layer: usize, slot: usize) -> usize {
+        (layer * self.slots + slot) * self.capacity * self.d_model
+    }
+
+    /// Store one K row and one V row at `pos` of `(layer, slot)`. Does not
+    /// touch the slot length — callers commit via [`KvCache::set_len`] /
+    /// [`KvCache::advance`] once every layer has stored its rows.
+    pub(crate) fn store(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(pos < self.capacity && k.len() == self.d_model && v.len() == self.d_model);
+        let at = self.base(layer, slot) + pos * self.d_model;
+        self.k[at..at + self.d_model].copy_from_slice(k);
+        self.v[at..at + self.d_model].copy_from_slice(v);
+    }
+
+    /// The first `n` cached (K, V) rows of `(layer, slot)`, contiguous —
+    /// the gather path [`crate::kernels::attend_cached`] consumes.
+    pub(crate) fn window(&self, layer: usize, slot: usize, n: usize) -> (&[f32], &[f32]) {
+        debug_assert!(n <= self.capacity);
+        let at = self.base(layer, slot);
+        let end = at + n * self.d_model;
+        (&self.k[at..end], &self.v[at..end])
+    }
+
+    /// Commit a prefilled prefix length.
+    pub(crate) fn set_len(&mut self, slot: usize, n: usize) {
+        debug_assert!(n <= self.capacity);
+        self.len[slot] = n;
+    }
+
+    /// Advance a slot by the one position a decode step appended.
+    pub(crate) fn advance(&mut self, slot: usize) {
+        debug_assert!(self.len[slot] < self.capacity);
+        self.len[slot] += 1;
+    }
+
+    /// Shape-check against a model: layer count, width, and window must
+    /// match (`capacity <= seq_len`, or decode positions would index past
+    /// the positional-embedding table).
+    pub(crate) fn check_model(&self, model: &NativeModel) -> Result<()> {
+        anyhow::ensure!(
+            self.n_layers == model.n_layers && self.d_model == model.d_model,
+            "cache shape (layers={}, d={}) != model (layers={}, d={})",
+            self.n_layers,
+            self.d_model,
+            model.n_layers,
+            model.d_model
+        );
+        anyhow::ensure!(
+            self.capacity <= model.seq_len,
+            "cache capacity {} exceeds model context {}",
+            self.capacity,
+            model.seq_len
+        );
+        Ok(())
     }
 }
 
@@ -524,6 +915,108 @@ mod tests {
         assert_eq!(p.tensors, q.tensors);
         let r = native_init(&m, 2);
         assert_ne!(p.tensors, r.tensors);
+    }
+
+    #[test]
+    fn kv_cache_slot_lifecycle() {
+        let mut kv = KvCache::new(2, 3, 4, 8);
+        assert_eq!(kv.slots(), 3);
+        assert_eq!(kv.capacity(), 4);
+        assert!(kv.is_empty(1));
+        assert!(!kv.is_full(1));
+        kv.store(0, 1, 0, &[1.0; 8], &[2.0; 8]);
+        kv.store(1, 1, 0, &[3.0; 8], &[4.0; 8]);
+        kv.set_len(1, 1);
+        assert_eq!(kv.len(1), 1);
+        let (k, v) = kv.window(1, 1, 1);
+        assert_eq!(k, &[3.0; 8]);
+        assert_eq!(v, &[4.0; 8]);
+        // other slots and layers untouched
+        assert_eq!(kv.window(0, 0, 1).0, &[0.0; 8]);
+        kv.advance(1);
+        kv.advance(1);
+        kv.advance(1);
+        assert!(kv.is_full(1));
+        kv.reset(1);
+        assert!(kv.is_empty(1));
+        assert_eq!(kv.mem_bytes(), 2 * 2 * 3 * 4 * 8 * 4);
+    }
+
+    #[test]
+    fn prefill_matches_variable_length_recompute() {
+        let (m, model, params, _) = tiny_setup();
+        let prompt: Vec<i32> = (0..7).map(|i| (i * 13 % 256) as i32).collect();
+        let mut cache = model.kv_cache(2);
+        let got = model.prefill(&m, &params, None, &prompt, &mut cache, 1, 2).unwrap();
+        let want = model.last_logits_ctx(&m, &params, None, &prompt, 2).unwrap();
+        assert_eq!(got, want, "prefill logits must equal the recompute reference");
+        assert_eq!(cache.len(1), 7);
+        assert_eq!(cache.len(0), 0);
+    }
+
+    #[test]
+    fn decode_steps_match_recompute_bit_exact_dense() {
+        let (m, model, params, _) = tiny_setup();
+        let mut cache = model.kv_cache(1);
+        let mut ctx: Vec<i32> = vec![5, 9, 200];
+        let mut logits = model.prefill(&m, &params, None, &ctx, &mut cache, 0, 2).unwrap();
+        for step in 0..6 {
+            // greedy next token from the incremental path
+            let tok = crate::util::argmax(&logits) as i32;
+            logits = model
+                .decode_step(&m, &params, None, &mut cache, &[0], &[tok], 2)
+                .unwrap();
+            ctx.push(tok);
+            let want = model.last_logits_ctx(&m, &params, None, &ctx, 2).unwrap();
+            assert_eq!(logits, want, "step {step}: decode must be bit-exact");
+        }
+        assert_eq!(cache.len(0), ctx.len());
+    }
+
+    #[test]
+    fn decode_step_rejects_bad_slots() {
+        let (m, model, params, _) = tiny_setup();
+        let mut cache = model.kv_cache(2);
+        // not prefilled yet
+        assert!(model
+            .decode_step(&m, &params, None, &mut cache, &[0], &[1], 1)
+            .is_err());
+        model.prefill(&m, &params, None, &[1, 2], &mut cache, 0, 1).unwrap();
+        // out-of-range and duplicate slots
+        assert!(model
+            .decode_step(&m, &params, None, &mut cache, &[5], &[1], 1)
+            .is_err());
+        assert!(model
+            .decode_step(&m, &params, None, &mut cache, &[0, 0], &[1, 2], 1)
+            .is_err());
+        // arity mismatch
+        assert!(model
+            .decode_step(&m, &params, None, &mut cache, &[0], &[1, 2], 1)
+            .is_err());
+        // fill the window: further decode must demand a re-prefill
+        let seq = model.seq_len;
+        for t in 0..seq - 2 {
+            model
+                .decode_step(&m, &params, None, &mut cache, &[0], &[(t % 250) as i32], 1)
+                .unwrap();
+        }
+        assert!(cache.is_full(0));
+        assert!(model
+            .decode_step(&m, &params, None, &mut cache, &[0], &[1], 1)
+            .is_err());
+    }
+
+    #[test]
+    fn prefill_rejects_oversized_and_empty_prompts() {
+        let (m, model, params, _) = tiny_setup();
+        let mut cache = model.kv_cache(1);
+        assert!(model.prefill(&m, &params, None, &[], &mut cache, 0, 1).is_err());
+        let long: Vec<i32> = vec![1; model.seq_len + 1];
+        assert!(model.prefill(&m, &params, None, &long, &mut cache, 0, 1).is_err());
+        assert!(model.prefill(&m, &params, None, &[1], &mut cache, 9, 1).is_err());
+        // mismatched cache shape
+        let mut wrong = KvCache::new(model.n_layers + 1, 1, model.seq_len, model.d_model);
+        assert!(model.prefill(&m, &params, None, &[1], &mut wrong, 0, 1).is_err());
     }
 
     #[test]

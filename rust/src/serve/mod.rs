@@ -1,13 +1,26 @@
 //! Batching inference server: the L3 request path over quantized weights.
 //!
 //! Architecture (vLLM-router-style, scaled to this repo): callers submit
-//! [`Request`]s to a [`Server`] handle; a batcher thread drains the queue,
-//! packs up to `eval_batch` prompts into one fixed-shape `fwd_logits`
-//! execution, samples one token per sequence, and re-queues unfinished
-//! sequences — continuous batching over a fixed window. Python is never on
-//! this path; the weights are the (de)quantized parameters.
+//! [`Request`]s to a [`Server`] handle; a batcher thread maps requests
+//! onto a fixed pool of KV-cache lanes (`eval_batch` of them). Each newly
+//! admitted request is **prefilled** once — its prompt runs through the
+//! model a single time, depositing per-layer K/V rows into its lane of a
+//! [`KvCache`] — and from then on rides fixed-shape **batched decode
+//! steps**: one token per active lane per step, attending over cached
+//! K/V instead of recomputing the window. Per-token cost is therefore
+//! O(context) attention + O(1) linear work, not a full O(context)
+//! forward; `benches/kernels.rs` records the resulting tokens/s win as
+//! `serve_kv` vs `serve_recompute`.
+//!
+//! When a lane's window fills (context = `seq_len`), the batcher slides
+//! it by re-prefilling the last `seq_len` tokens — the model's absolute
+//! position embeddings re-position every token on a slide, so the cached
+//! rows are genuinely stale and recompute is the correct (and reference-
+//! exact) behavior. Python is never on this path; with packed weights
+//! attached the decode linears run on RaBitQ codes via `qgemm`.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -16,7 +29,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::model::{Manifest, ModelParams};
-use crate::runtime::{ModelRuntime, PackedLayers};
+use crate::runtime::{KvCache, ModelRuntime, PackedLayers};
 use crate::util::percentile;
 
 /// A generation request.
@@ -36,7 +49,8 @@ pub struct Completion {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub latency_secs: f64,
-    /// Number of batch steps this request rode in.
+    /// Number of generation steps (one sampled token each: the prefill
+    /// yields the first, every decode step or window slide one more).
     pub steps: usize,
 }
 
@@ -52,9 +66,31 @@ struct Shared {
     queue: Mutex<VecDeque<Active>>,
     cv: Condvar,
     shutdown: Mutex<bool>,
+    /// Set by the batcher thread on exit (normal or error), *before* it
+    /// drains the queue — [`Server::submit`] checks it under the queue
+    /// lock so no request can be stranded behind a dead batcher.
+    dead: AtomicBool,
 }
 
-/// Server handle. Dropping it stops the batcher thread.
+/// Server handle.
+///
+/// # Lifecycle
+///
+/// 1. [`Server::start`] / [`Server::start_native_packed`] spawn the
+///    batcher thread, which owns the runtime, the weights, and one
+///    [`KvCache`] with `eval_batch` request lanes.
+/// 2. [`Server::submit`] enqueues work while the batcher is alive. Once
+///    shutdown has begun, or the batcher has exited (failed runtime
+///    factory, forward error), `submit` returns an error instead of
+///    queueing into a dead thread.
+/// 3. [`Server::shutdown`] waits for in-flight **and** queued requests to
+///    finish, joins the batcher, and returns its [`ServerStats`] (or its
+///    error). Dropping the handle performs the same drain-and-join but
+///    discards the result.
+///
+/// If the batcher dies early, receivers for already-queued requests
+/// disconnect (`recv` returns `Err`) rather than blocking forever: the
+/// exiting thread marks itself dead and then drains the queue.
 pub struct Server {
     shared: Arc<Shared>,
     worker: Option<thread::JoinHandle<Result<ServerStats>>>,
@@ -65,9 +101,19 @@ pub struct Server {
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     pub completions: usize,
+    /// Model executions: prefills (admissions + window slides) plus
+    /// batched decode steps.
     pub batch_steps: usize,
+    /// Sequence rows processed across all executions (a prefill is one
+    /// row, a batched decode is one row per active lane).
     pub total_rows: usize,
     pub tokens_generated: usize,
+    /// Prompt tokens pushed through prefill (admissions + slides).
+    pub prefill_tokens: usize,
+    /// Batched decode executions (the KV fast path).
+    pub decode_steps: usize,
+    /// Full-window re-prefills (context outgrew `seq_len`).
+    pub window_slides: usize,
     pub latencies: Vec<f64>,
     pub wall_secs: f64,
 }
@@ -98,12 +144,7 @@ impl ServerStats {
 
 fn softmax_sample(logits: &[f32], temperature: f32, seed: u64, step: usize) -> i32 {
     if temperature <= 0.0 {
-        return logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i as i32)
-            .unwrap_or(0);
+        return crate::util::argmax(logits) as i32;
     }
     let mut rng = crate::rng::Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37));
     let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
@@ -125,8 +166,9 @@ impl Server {
     ///
     /// PJRT handles are not `Send`, so the batcher thread constructs its
     /// own runtime via `factory` (e.g. `|| ModelRuntime::load(...)` with a
-    /// fresh `Runtime::cpu()`); `params` moves into the thread. The fixed
-    /// window is the model's `seq_len` and the batch is `eval_batch`.
+    /// fresh `Runtime::cpu()`); `params` moves into the thread. The lane
+    /// pool is `eval_batch` wide and each lane's KV window is the model's
+    /// `seq_len`.
     pub fn start<F>(factory: F, params: ModelParams) -> Server
     where
         F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
@@ -135,17 +177,26 @@ impl Server {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: Mutex::new(false),
+            dead: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&shared);
         let worker = thread::spawn(move || {
-            let mrt = factory()?;
-            batcher_loop(s2, mrt, params)
+            let result = match factory() {
+                Ok(mrt) => batcher_loop(&s2, mrt, params),
+                Err(e) => Err(e),
+            };
+            // Dead first, then drain: submit checks the flag under the
+            // queue lock, so a racing request either sees the flag or its
+            // queued entry is dropped here and the receiver disconnects.
+            s2.dead.store(true, Ordering::SeqCst);
+            s2.queue.lock().unwrap().clear();
+            result
         });
         Server { shared, worker: Some(worker), next_id: Mutex::new(1) }
     }
 
-    /// Serve from resident packed weights on the native backend: the
-    /// batcher's `fwd_logits` computes directly on RaBitQ codes via
+    /// Serve from resident packed weights on the native backend: prefill
+    /// and every decode step compute directly on RaBitQ codes via
     /// `qgemm` — no AOT artifacts, no dense weight reads, zero
     /// dequantization on the request path.
     pub fn start_native_packed(
@@ -163,14 +214,26 @@ impl Server {
         )
     }
 
-    /// Submit a request; returns a receiver for the completion.
+    /// Submit a request; returns the request id and a receiver for its
+    /// [`Completion`].
+    ///
+    /// A `max_new_tokens` of 0 completes immediately with an empty token
+    /// list (no model work, not counted in [`ServerStats`]).
+    ///
+    /// # Errors
+    ///
+    /// Fails once the server stopped accepting work: after
+    /// [`Server::shutdown`] began, or after the batcher thread exited
+    /// (e.g. its runtime factory failed). Without this check the request
+    /// would queue into a dead batcher and its receiver would block
+    /// forever.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         temperature: f32,
         seed: u64,
-    ) -> (u64, mpsc::Receiver<Completion>) {
+    ) -> Result<(u64, mpsc::Receiver<Completion>)> {
         let id = {
             let mut g = self.next_id.lock().unwrap();
             let id = *g;
@@ -178,6 +241,10 @@ impl Server {
             id
         };
         let (tx, rx) = mpsc::channel();
+        if max_new_tokens == 0 {
+            let _ = tx.send(Completion { id, tokens: Vec::new(), latency_secs: 0.0, steps: 0 });
+            return Ok((id, rx));
+        }
         let act = Active {
             req: Request { id, prompt, max_new_tokens, temperature, seed },
             generated: Vec::new(),
@@ -185,12 +252,26 @@ impl Server {
             steps: 0,
             done_tx: tx,
         };
-        self.shared.queue.lock().unwrap().push_back(act);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            anyhow::ensure!(
+                !self.shared.dead.load(Ordering::SeqCst)
+                    && !*self.shared.shutdown.lock().unwrap(),
+                "server is not accepting requests (shut down or batcher exited)"
+            );
+            q.push_back(act);
+        }
         self.shared.cv.notify_one();
-        (id, rx)
+        Ok((id, rx))
     }
 
-    /// Stop the batcher (after draining) and collect stats.
+    /// True while the batcher thread is alive and accepting submissions.
+    pub fn is_running(&self) -> bool {
+        !self.shared.dead.load(Ordering::SeqCst)
+    }
+
+    /// Stop the batcher (after draining in-flight and queued work) and
+    /// collect stats.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         {
             let mut s = self.shared.shutdown.lock().unwrap();
@@ -217,19 +298,90 @@ impl Drop for Server {
     }
 }
 
+/// The request's full context (prompt + generated so far), truncated to
+/// the trailing `seq` tokens — exactly the window the recompute reference
+/// evaluates. Empty prompts fall back to a single `0` token so prefill
+/// always has at least one position.
+fn context_window(act: &Active, seq: usize) -> Vec<i32> {
+    let mut ctx: Vec<i32> = act
+        .req
+        .prompt
+        .iter()
+        .chain(act.generated.iter())
+        .copied()
+        .collect();
+    if ctx.is_empty() {
+        ctx.push(0);
+    }
+    if ctx.len() > seq {
+        ctx.drain(..ctx.len() - seq);
+    }
+    ctx
+}
+
+/// Sample one token from `logits` for `act`, then either complete the
+/// request (send the [`Completion`], free the cache lane, return `None`)
+/// or hand the still-active request back.
+fn settle(
+    mut act: Active,
+    logits: &[f32],
+    cache: &mut KvCache,
+    slot: usize,
+    stats: &mut ServerStats,
+) -> Option<Active> {
+    let tok = softmax_sample(logits, act.req.temperature, act.req.seed, act.steps);
+    act.generated.push(tok);
+    act.steps += 1;
+    stats.tokens_generated += 1;
+    if act.generated.len() >= act.req.max_new_tokens {
+        let latency = act.submitted.elapsed().as_secs_f64();
+        stats.latencies.push(latency);
+        stats.completions += 1;
+        let _ = act.done_tx.send(Completion {
+            id: act.req.id,
+            tokens: act.generated,
+            latency_secs: latency,
+            steps: act.steps,
+        });
+        cache.reset(slot);
+        None
+    } else {
+        Some(act)
+    }
+}
+
 fn batcher_loop(
-    shared: Arc<Shared>,
+    shared: &Shared,
     mrt: ModelRuntime,
     params: ModelParams,
 ) -> Result<ServerStats> {
     let m = &mrt.manifest;
-    let (batch, seq) = (m.eval_batch, m.seq_len);
+    let (batch, seq, vocab) = (m.eval_batch, m.seq_len, m.vocab);
+    let mut cache = mrt.new_kv_cache(batch);
+    let mut lanes: Vec<Option<Active>> = (0..batch).map(|_| None).collect();
     let mut stats = ServerStats::default();
     let start = Instant::now();
 
     loop {
-        // grab up to `batch` active requests
-        let mut work: Vec<Active> = {
+        // ---- admit queued requests into free lanes: one prefill each,
+        // which also yields the request's first token
+        for slot in 0..batch {
+            if lanes[slot].is_some() {
+                continue;
+            }
+            let Some(act) = shared.queue.lock().unwrap().pop_front() else {
+                break;
+            };
+            let window = context_window(&act, seq);
+            let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
+            stats.batch_steps += 1;
+            stats.total_rows += 1;
+            stats.prefill_tokens += window.len();
+            lanes[slot] = settle(act, &logits, &mut cache, slot, &mut stats);
+        }
+
+        // ---- idle: wait for work or shutdown
+        if lanes.iter().all(|l| l.is_none()) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if !q.is_empty() {
@@ -245,52 +397,44 @@ fn batcher_loop(
                     .unwrap();
                 q = guard;
             }
-            let take = q.len().min(batch);
-            q.drain(..take).collect()
-        };
-
-        // pack the fixed-shape window: right-align (prompt + generated),
-        // left-pad with zeros, last real token at position seq-1
-        let mut tokens = vec![0i32; batch * seq];
-        for (row, act) in work.iter().enumerate() {
-            let mut ctx: Vec<i32> = act
-                .req
-                .prompt
-                .iter()
-                .chain(act.generated.iter())
-                .copied()
-                .collect();
-            if ctx.len() > seq {
-                ctx.drain(..ctx.len() - seq);
-            }
-            let off = row * seq + (seq - ctx.len());
-            tokens[off..row * seq + seq].copy_from_slice(&ctx);
+            continue;
         }
 
-        let logits = mrt.last_logits(&params, &tokens)?;
-        let vocab = m.vocab;
-        stats.batch_steps += 1;
-        stats.total_rows += work.len();
+        // ---- full windows slide via re-prefill (absolute position
+        // embeddings re-position every token, so the cached rows are
+        // stale by construction; in-window lanes stay on the fast path)
+        for slot in 0..batch {
+            let Some(act) = lanes[slot].take() else { continue };
+            if !cache.is_full(slot) {
+                lanes[slot] = Some(act);
+                continue;
+            }
+            let window = context_window(&act, seq);
+            let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
+            stats.batch_steps += 1;
+            stats.total_rows += 1;
+            stats.prefill_tokens += window.len();
+            stats.window_slides += 1;
+            lanes[slot] = settle(act, &logits, &mut cache, slot, &mut stats);
+        }
 
-        // sample, update, re-queue or complete
-        for (row, mut act) in work.drain(..).enumerate() {
-            let l = &logits[row * vocab..(row + 1) * vocab];
-            let tok = softmax_sample(l, act.req.temperature, act.req.seed, act.steps);
-            act.generated.push(tok);
-            act.steps += 1;
-            stats.tokens_generated += 1;
-            if act.generated.len() >= act.req.max_new_tokens {
-                let latency = act.submitted.elapsed().as_secs_f64();
-                stats.latencies.push(latency);
-                stats.completions += 1;
-                let _ = act.done_tx.send(Completion {
-                    id: act.req.id,
-                    tokens: act.generated,
-                    latency_secs: latency,
-                    steps: act.steps,
-                });
-            } else {
-                shared.queue.lock().unwrap().push_back(act);
+        // ---- fixed-shape batched decode over the remaining active lanes
+        let decode: Vec<usize> = (0..batch)
+            .filter(|&s| lanes[s].is_some() && !cache.is_full(s))
+            .collect();
+        if !decode.is_empty() {
+            let tokens: Vec<i32> = decode
+                .iter()
+                .map(|&s| *lanes[s].as_ref().unwrap().generated.last().unwrap())
+                .collect();
+            let rows = mrt.decode_step(&params, &mut cache, &decode, &tokens)?;
+            stats.batch_steps += 1;
+            stats.total_rows += decode.len();
+            stats.decode_steps += 1;
+            for (i, &slot) in decode.iter().enumerate() {
+                let act = lanes[slot].take().expect("decode lane is active");
+                let logits = &rows[i * vocab..(i + 1) * vocab];
+                lanes[slot] = settle(act, logits, &mut cache, slot, &mut stats);
             }
         }
     }
@@ -299,6 +443,9 @@ fn batcher_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::synthetic_manifest;
+    use crate::quant::{LayerCalib, TrickConfig};
+    use crate::runtime::{native_init, PackedLayers};
 
     #[test]
     fn greedy_sampling_is_argmax() {
@@ -315,14 +462,14 @@ mod tests {
         assert!((0..16).contains(&a));
     }
 
-    #[test]
-    fn native_packed_server_generates_tokens() {
-        use crate::model::synthetic_manifest;
-        use crate::quant::{LayerCalib, TrickConfig};
-        use crate::runtime::{native_init, PackedLayers};
-
-        let manifest = synthetic_manifest("serve-native", 32, 1, 2, 64, 8, 256, 2);
-        let params = native_init(&manifest, 17);
+    fn packed_fixture(
+        name: &str,
+        seq_len: usize,
+        eval_batch: usize,
+        seed: u64,
+    ) -> (Manifest, ModelParams, PackedLayers) {
+        let manifest = synthetic_manifest(name, 32, 1, 2, 64, seq_len, 256, eval_batch);
+        let params = native_init(&manifest, seed);
         let stats: Vec<LayerCalib> =
             manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
         let bits = vec![4u8; manifest.linears.len()];
@@ -330,14 +477,99 @@ mod tests {
             &manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1,
         )
         .unwrap();
+        (manifest, params, packed)
+    }
+
+    #[test]
+    fn native_packed_server_generates_tokens() {
+        let (manifest, params, packed) = packed_fixture("serve-native", 8, 2, 17);
         let server = Server::start_native_packed(manifest, params, packed);
-        let (_, rx) = server.submit(vec![1, 2, 3], 4, 0.0, 0);
+        let (_, rx) = server.submit(vec![1, 2, 3], 4, 0.0, 0).unwrap();
         let c = rx.recv().unwrap();
         assert_eq!(c.tokens.len(), 4);
         assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.completions, 1);
         assert_eq!(stats.tokens_generated, 4);
+        // 1 admission prefill + 3 decode rounds (no slides: 3 + 4 <= 8)
+        assert_eq!(stats.prefill_tokens, 3);
+        assert_eq!(stats.window_slides, 0);
+        assert!(stats.decode_steps >= 3);
+    }
+
+    #[test]
+    fn kv_server_slides_window_past_context() {
+        // seq_len 8, 20 generated tokens: the lane must slide repeatedly
+        let (manifest, params, packed) = packed_fixture("serve-slide", 8, 1, 23);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let (_, rx) = server.submit(vec![9, 8, 7], 20, 0.7, 5).unwrap();
+        let c = rx.recv().unwrap();
+        assert_eq!(c.tokens.len(), 20);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completions, 1);
+        assert_eq!(stats.tokens_generated, 20);
+        assert!(
+            stats.window_slides >= 10,
+            "window_slides {} — beyond-context generation must slide",
+            stats.window_slides
+        );
+    }
+
+    #[test]
+    fn zero_token_request_completes_empty() {
+        let (manifest, params, packed) = packed_fixture("serve-zero", 8, 1, 31);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let (_, rx) = server.submit(vec![1, 2], 0, 0.0, 0).unwrap();
+        let c = rx.recv().unwrap();
+        assert!(c.tokens.is_empty(), "asked for zero tokens, got {:?}", c.tokens);
+        assert_eq!(c.steps, 0);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.tokens_generated, 0);
+    }
+
+    #[test]
+    fn empty_prompt_is_served() {
+        let (manifest, params, packed) = packed_fixture("serve-empty", 8, 1, 29);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let (_, rx) = server.submit(Vec::new(), 3, 0.0, 0).unwrap();
+        let c = rx.recv().unwrap();
+        assert_eq!(c.tokens.len(), 3);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_into_dead_batcher_errors_not_hangs() {
+        let manifest = synthetic_manifest("serve-dead", 16, 1, 2, 32, 8, 64, 1);
+        let params = native_init(&manifest, 1);
+        let server = Server::start(|| anyhow::bail!("factory exploded"), params);
+        let mut waited = 0;
+        while server.is_running() && waited < 500 {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            waited += 1;
+        }
+        assert!(!server.is_running(), "worker should have died");
+        assert!(server.submit(vec![1], 3, 0.0, 0).is_err());
+        // shutdown surfaces the factory error instead of stats
+        assert!(server.shutdown().is_err());
+    }
+
+    #[test]
+    fn receivers_disconnect_when_batcher_dies() {
+        let manifest = synthetic_manifest("serve-late", 16, 1, 2, 32, 8, 64, 1);
+        let params = native_init(&manifest, 2);
+        let server = Server::start(
+            || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                anyhow::bail!("late failure")
+            },
+            params,
+        );
+        // this submit may race the death either way; both outcomes are
+        // lifecycle-correct — an error, or a receiver that disconnects
+        if let Ok((_, rx)) = server.submit(vec![1], 2, 0.0, 0) {
+            assert!(rx.recv().is_err(), "receiver must disconnect, not hang");
+        }
+        assert!(server.shutdown().is_err());
     }
 
     #[test]
@@ -349,6 +581,7 @@ mod tests {
             tokens_generated: 40,
             latencies: vec![0.1, 0.2],
             wall_secs: 2.0,
+            ..Default::default()
         };
         assert!((s.mean_batch_occupancy(4) - 0.75).abs() < 1e-12);
         assert!((s.throughput_tok_s() - 20.0).abs() < 1e-12);

@@ -1,7 +1,7 @@
 //! Thread-parallel helpers (no rayon in the offline vendor set).
 //!
-//! [`parallel_chunks`] is the quantizer hot-path primitive: it splits a
-//! mutable slice of work items across `std::thread::scope` workers.
+//! [`parallel_chunks_mut`] is the quantizer hot-path primitive: it splits
+//! a mutable slice of work items across `std::thread::scope` workers.
 //! [`Pool`] is a long-lived task pool used by the serving coordinator.
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -104,6 +104,21 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Index of the largest element (greedy token choice over logits): first
+/// occurrence wins ties, 0 for an empty slice. NaN entries are never
+/// selected over finite ones.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bestv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bestv {
+            bestv = x;
+            best = i;
+        }
+    }
+    best
+}
+
 /// p-th percentile (0..=100) by nearest-rank on a sorted copy.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {

@@ -358,7 +358,7 @@ fn server_round_trip_over_quantized_weights() {
     );
     let mut rxs = Vec::new();
     for i in 0..5 {
-        let (_, rx) = server.submit(tokenize("the fox "), 6, 0.0, i);
+        let (_, rx) = server.submit(tokenize("the fox "), 6, 0.0, i).unwrap();
         rxs.push(rx);
     }
     for rx in rxs {
@@ -436,11 +436,121 @@ fn native_packed_serving_performs_zero_dequant() {
     }
     let nll = mrt.token_nll(&params, &tokens).unwrap();
     assert!(nll.iter().all(|x| x.is_finite()));
+
+    // The KV-cached request path is held to the same bar: prefill, batched
+    // decode steps, and a window-slide re-prefill must all run on packed
+    // codes with zero full-matrix dequantization.
+    let mut cache = mrt.new_kv_cache(2);
+    mrt.prefill(&params, &mut cache, 0, &tokens[..5]).unwrap();
+    mrt.prefill(&params, &mut cache, 1, &tokens[..9]).unwrap();
+    for step in 0..6 {
+        let logits = mrt
+            .decode_step(&params, &mut cache, &[0, 1], &[(step * 7) % 256, (step * 11) % 256])
+            .unwrap();
+        assert_eq!(logits.len(), 2 * 256, "decode step {step}");
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+    // slide slot 1 to a fresh full window (the wraparound path)
+    let window: Vec<i32> = (0..16).map(|i| (i * 5 % 256) as i32).collect();
+    mrt.prefill(&params, &mut cache, 1, &window).unwrap();
     assert_eq!(
         raana::rabitq::dequant_calls(),
         before,
-        "forwards over packed weights must not dequantize"
+        "forwards over packed weights must not dequantize (incl. prefill/decode)"
     );
+}
+
+/// ISSUE 2 acceptance criterion: KV-cached incremental decoding is
+/// **bit-identical** to the full-recompute forward — for random models
+/// (dense and packed weights), random prompt lengths, mixed batch
+/// occupancies, and across the window slide at max context.
+#[test]
+fn kv_decode_bit_exact_vs_recompute_property() {
+    use raana::model::synthetic_manifest;
+    use raana::quant::LayerCalib;
+    use raana::runtime::{native_init, ModelRuntime, PackedLayers};
+
+    // (d_model, n_layers, n_heads, d_ff, seq_len, vocab); d=48 exercises
+    // both practical-RHT windows inside the packed linears
+    let shapes = [(32usize, 2usize, 2usize, 64usize, 12usize, 256usize),
+                  (48, 1, 4, 96, 10, 128)];
+    for (cfg, &(d, layers, heads, dff, seq, vocab)) in shapes.iter().enumerate() {
+        let manifest =
+            synthetic_manifest(&format!("kv-prop-{cfg}"), d, layers, heads, dff, seq, vocab, 2);
+        let params = native_init(&manifest, 100 + cfg as u64);
+
+        // calibration stats from a capture forward so the packed layers
+        // exercise outliers + centralization, and mixed bit-widths
+        let probe = ModelRuntime::native(manifest.clone()).unwrap();
+        let calib_tokens: Vec<i32> =
+            (0..2 * seq).map(|i| ((i * 17 + cfg) % vocab) as i32).collect();
+        let stats: Vec<LayerCalib> = probe
+            .native_model
+            .capture_layer_stats(&manifest, &params, &calib_tokens, 2)
+            .unwrap();
+        let bits: Vec<u8> =
+            (0..manifest.linears.len()).map(|k| [3u8, 5, 8][k % 3]).collect();
+        let packed = PackedLayers::quantize(
+            &manifest, &params, &bits, &stats, &TrickConfig::default(), 7, 2,
+        )
+        .unwrap();
+
+        // two runtimes: dense weights and packed codes — both must hold
+        let dense_mrt = ModelRuntime::native(manifest.clone()).unwrap();
+        let mut packed_mrt = ModelRuntime::native(manifest).unwrap();
+        packed_mrt.attach_packed(packed).unwrap();
+
+        for (which, mrt) in [("dense", &dense_mrt), ("packed", &packed_mrt)] {
+            let mut cache = mrt.new_kv_cache(3);
+            // three lanes at different prompt lengths (1, mid, full window)
+            let mut ctxs: Vec<Vec<i32>> = vec![
+                vec![((7 + cfg) % vocab) as i32],
+                (0..seq / 2).map(|i| ((i * 13 + 1) % vocab) as i32).collect(),
+                (0..seq).map(|i| ((i * 29 + 2) % vocab) as i32).collect(),
+            ];
+            let mut last: Vec<Vec<f32>> = Vec::new();
+            for (slot, ctx) in ctxs.iter().enumerate() {
+                let logits = mrt.prefill(&params, &mut cache, slot, ctx).unwrap();
+                let want = mrt.last_logits_ctx(&params, ctx).unwrap();
+                assert_eq!(logits, want, "{which} cfg {cfg} slot {slot}: prefill");
+                last.push(logits);
+            }
+            // generate past max context so every lane eventually slides
+            for step in 0..seq {
+                // greedy next token per lane, from the incremental logits
+                let next: Vec<i32> =
+                    last.iter().map(|l| raana::util::argmax(l) as i32).collect();
+                // batched decode over in-window lanes; full lanes slide
+                let decode: Vec<usize> =
+                    (0..3).filter(|&s| !cache.is_full(s)).collect();
+                let toks: Vec<i32> = decode.iter().map(|&s| next[s]).collect();
+                if !decode.is_empty() {
+                    let rows = mrt
+                        .decode_step(&params, &mut cache, &decode, &toks)
+                        .unwrap();
+                    for (i, &s) in decode.iter().enumerate() {
+                        last[s] = rows[i * vocab..(i + 1) * vocab].to_vec();
+                    }
+                }
+                for s in 0..3 {
+                    ctxs[s].push(next[s]);
+                    if !decode.contains(&s) {
+                        // wraparound: slide the window by re-prefilling
+                        let window = &ctxs[s][ctxs[s].len() - seq..];
+                        last[s] = mrt.prefill(&params, &mut cache, s, window).unwrap();
+                    }
+                    // reference: full recompute of the truncated context
+                    let lo = ctxs[s].len().saturating_sub(seq);
+                    let want = mrt.last_logits_ctx(&params, &ctxs[s][lo..]).unwrap();
+                    assert_eq!(
+                        last[s], want,
+                        "{which} cfg {cfg} slot {s} step {step}: KV logits \
+                         must be bit-identical to recompute"
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// End-to-end batching server over the native packed runtime — the
@@ -478,7 +588,7 @@ fn native_packed_server_round_trip() {
     );
     let mut rxs = Vec::new();
     for i in 0..4 {
-        let (_, rx) = server.submit(tokenize("the fox "), 5, 0.0, i);
+        let (_, rx) = server.submit(tokenize("the fox "), 5, 0.0, i).unwrap();
         rxs.push(rx);
     }
     for rx in rxs {
