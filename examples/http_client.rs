@@ -1,0 +1,94 @@
+//! Minimal client for the HTTP serving front-end: submit a prompt to a
+//! running `raana serve --http <port>` instance and print the tokens —
+//! streamed live (chunk by chunk) or as one completion.
+//!
+//! ```sh
+//! # terminal 1: the server (demo model, no artifacts needed)
+//! ./target/release/raana serve --http 8080
+//! # terminal 2:
+//! ./target/release/examples/http_client --addr 127.0.0.1:8080 \
+//!     --prompt "the quick brown fox " --tokens 24 --stream
+//! ```
+//!
+//! Also a quick smoke check of the other endpoints: `--stats` fetches
+//! `/v1/stats`, `--health` fetches `/healthz`.
+
+use anyhow::{bail, Result};
+use raana::cli::Args;
+use raana::data::{detokenize, tokenize};
+use raana::json;
+use raana::net::http_request;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.opt_or("addr", "127.0.0.1:8080").to_string();
+
+    if args.flag("health") {
+        let r = http_request(&addr, "GET", "/healthz", None)?;
+        println!("{} {}", r.status, r.body_str()?);
+        return Ok(());
+    }
+    if args.flag("stats") {
+        let r = http_request(&addr, "GET", "/v1/stats", None)?;
+        println!("{} {}", r.status, r.body_str()?);
+        return Ok(());
+    }
+
+    let prompt_text = args.opt_or("prompt", "the quick brown fox ").to_string();
+    let tokens = args.opt_usize("tokens", 24)?;
+    let temperature = args.opt_f64("temperature", 0.0)?;
+    let seed = args.opt_u64("seed", 0)?;
+    let stream = args.flag("stream");
+
+    let prompt = tokenize(&prompt_text);
+    let body = json::obj(vec![
+        ("prompt", json::arr(prompt.iter().map(|&t| json::num(t as f64)).collect())),
+        ("max_new_tokens", json::num(tokens as f64)),
+        ("temperature", json::num(temperature)),
+        ("seed", json::num(seed as f64)),
+        ("stream", json::Value::Bool(stream)),
+    ])
+    .to_json();
+
+    let resp = http_request(&addr, "POST", "/v1/generate", Some(&body))?;
+    if resp.status != 200 {
+        bail!("server answered {}: {}", resp.status, resp.body_str().unwrap_or("<binary>"));
+    }
+
+    if stream {
+        // one chunk per event: token lines, then the final done object
+        let mut toks: Vec<i32> = Vec::new();
+        for chunk in &resp.chunks {
+            let line = std::str::from_utf8(chunk)?;
+            let v = json::parse(line.trim_end())?;
+            if v.get("done").is_some() {
+                println!(
+                    "done: {} tokens in {:.1} ms",
+                    v.get("tokens").and_then(|t| t.as_arr()).map(|a| a.len()).unwrap_or(0),
+                    v.get("latency_secs").and_then(|x| x.as_f64()).unwrap_or(0.0) * 1e3
+                );
+            } else if let Some(t) = v.get("token").and_then(|x| x.as_f64()) {
+                toks.push(t as i32);
+            }
+        }
+        println!("---\n{}{}", prompt_text, detokenize(&toks).escape_debug());
+    } else {
+        let v = resp.json()?;
+        let toks: Vec<i32> = v
+            .req("tokens")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|f| f as i32)
+            .collect();
+        println!(
+            "request {} finished in {:.1} ms ({} steps)",
+            v.req_usize("id")?,
+            v.req("latency_secs")?.as_f64().unwrap_or(0.0) * 1e3,
+            v.req_usize("steps")?
+        );
+        println!("---\n{}{}", prompt_text, detokenize(&toks).escape_debug());
+    }
+    Ok(())
+}

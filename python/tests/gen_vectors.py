@@ -1,0 +1,194 @@
+#!/usr/bin/env python3
+"""Golden-vector generator: the committed cross-language kernel contract.
+
+Writes small JSON vectors into ``rust/tests/vectors/`` for the three
+kernels whose Rust implementations previously had only an ad-hoc Python
+f32 mirror: the orthonormal FWHT, the packed-code bit decoders (widths
+1-8, including non-byte-aligned tails), and ``attend_cached``. The Rust
+side (``rust/tests/golden.rs``) consumes them, so the equivalence is
+checkable both from a Python-only container (regenerate + diff, see
+``--check``) and from a Rust-only CI job (consume + compare).
+
+Determinism contract: data comes from ``random.Random`` (Mersenne
+Twister, stable across Python versions and platforms), f32 rounding goes
+through numpy, and the JSON is emitted with sorted keys — regenerating
+must be byte-identical to the committed files, which ``--check`` (and
+``test_vectors.py``) enforces.
+
+Usage:
+    python python/tests/gen_vectors.py           # (re)write the vectors
+    python python/tests/gen_vectors.py --check   # verify committed files
+"""
+
+import json
+import random
+import sys
+from pathlib import Path
+
+import numpy as np
+
+VECTOR_DIR = Path(__file__).resolve().parents[2] / "rust" / "tests" / "vectors"
+
+
+def f32(x):
+    """Round to f32 and back to a Python float (exact in JSON)."""
+    return float(np.float32(x))
+
+
+def rand_f32_list(rng, n, scale=2.0):
+    """Deterministic pseudo-gaussian-ish f32 values in (-scale, scale)."""
+    return [f32(rng.uniform(-scale, scale)) for _ in range(n)]
+
+
+# --------------------------------------------------------------------- FWHT
+
+def fwht_f32(values):
+    """Orthonormal FWHT in strict float32, mirroring `hadamard::fwht`:
+    butterfly stages of elementwise a+b / a-b (one IEEE op per output per
+    stage, so no reassociation anywhere), then a single multiply by
+    1/sqrt(d) computed in f32."""
+    x = np.asarray(values, dtype=np.float32).copy()
+    d = x.size
+    h = 1
+    while h < d:
+        x = x.reshape(-1, 2 * h)
+        a = x[:, :h].copy()
+        b = x[:, h:].copy()
+        x[:, :h] = a + b
+        x[:, h:] = a - b
+        x = x.reshape(-1)
+        h *= 2
+    scale = np.float32(1.0) / np.sqrt(np.float32(d))
+    return [float(v) for v in x * scale]
+
+
+def gen_fwht():
+    rng = random.Random(0xF147)
+    cases = []
+    for d in (1, 2, 4, 8, 32, 128):
+        for _ in range(2):
+            inp = rand_f32_list(rng, d)
+            cases.append({"d": d, "input": inp, "output": fwht_f32(inp)})
+    return {"kernel": "fwht", "cases": cases}
+
+
+# ------------------------------------------------------------- bit decoders
+
+def pack_lsb_first(values, bits):
+    """Mirror of `rabitq::PackedCodes::pack`: LSB-first within each byte."""
+    data = bytearray((len(values) * bits + 7) // 8)
+    for i, v in enumerate(values):
+        assert 0 <= v < (1 << bits)
+        bit0 = i * bits
+        byte0, off = divmod(bit0, 8)
+        w = v << off
+        data[byte0] |= w & 0xFF
+        if off + bits > 8:
+            data[byte0 + 1] |= (w >> 8) & 0xFF
+    return list(data)
+
+
+def gen_decode():
+    rng = random.Random(0xDEC0)
+    cases = []
+    for bits in range(1, 9):
+        # deliberately not a multiple of 8/bits: the packed payload ends in
+        # a partial byte for every width that allows one
+        n = 61
+        values = [rng.randrange(1 << bits) for _ in range(n)]
+        reads = []
+        # whole range, offset head, unaligned mid-range, single tail
+        # element, empty read — the shapes `decode_codes_into` special-cases
+        for start, ln in ((0, n), (1, n - 1), (7, 40), (n - 1, 1), (3, 0)):
+            reads.append({
+                "start": start,
+                "len": ln,
+                "expect": values[start:start + ln],
+            })
+        cases.append({
+            "bits": bits,
+            "values": values,
+            "data": pack_lsb_first(values, bits),
+            "reads": reads,
+        })
+    return {"kernel": "decode_codes", "cases": cases}
+
+
+# ------------------------------------------------------------ attend_cached
+
+def attend_ref(q, k_rows, v_rows, ctx, heads, head_dim):
+    """Float64 reference of `kernels::attend_cached`: per head, scaled
+    dot-product scores over all ctx keys, max-shifted softmax, weighted
+    value sum. The Rust kernel runs in f32, so the consumer compares with
+    the same 1e-4 tolerance its in-crate reference test uses."""
+    d = heads * head_dim
+    q = np.asarray(q, dtype=np.float64)
+    k = np.asarray(k_rows, dtype=np.float64).reshape(ctx, d)
+    v = np.asarray(v_rows, dtype=np.float64).reshape(ctx, d)
+    out = np.zeros(d)
+    for h in range(heads):
+        sl = slice(h * head_dim, (h + 1) * head_dim)
+        scores = k[:, sl] @ q[sl] / np.sqrt(head_dim)
+        scores = np.exp(scores - scores.max())
+        weights = scores / scores.sum()
+        out[sl] = weights @ v[:, sl]
+    return [float(x) for x in out]
+
+
+def gen_attend():
+    rng = random.Random(0xA77E)
+    cases = []
+    for heads, head_dim, ctx in ((1, 4, 1), (2, 4, 5), (4, 8, 12), (2, 16, 3)):
+        d = heads * head_dim
+        q = rand_f32_list(rng, d, 1.5)
+        k = rand_f32_list(rng, ctx * d, 1.5)
+        v = rand_f32_list(rng, ctx * d, 1.5)
+        cases.append({
+            "heads": heads,
+            "head_dim": head_dim,
+            "ctx": ctx,
+            "q": q,
+            "k": k,
+            "v": v,
+            "out": attend_ref(q, k, v, ctx, heads, head_dim),
+        })
+    return {"kernel": "attend_cached", "cases": cases}
+
+
+# ----------------------------------------------------------------- harness
+
+GENERATORS = {
+    "fwht.json": gen_fwht,
+    "decode_codes.json": gen_decode,
+    "attend_cached.json": gen_attend,
+}
+
+
+def render(doc):
+    return json.dumps(doc, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+def main(argv):
+    check = "--check" in argv
+    VECTOR_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for name, gen in GENERATORS.items():
+        path = VECTOR_DIR / name
+        text = render(gen())
+        if check:
+            committed = path.read_text() if path.exists() else None
+            if committed != text:
+                failures.append(name)
+            else:
+                print(f"ok: {name} matches regeneration")
+        else:
+            path.write_text(text)
+            print(f"wrote {path} ({len(text)} bytes)")
+    if failures:
+        print(f"STALE golden vectors: {failures} — rerun gen_vectors.py", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,109 @@
+"""Golden-vector suite (numpy-only — runs where jax is absent).
+
+Three jobs:
+1. the committed ``rust/tests/vectors/*.json`` must be byte-identical to a
+   regeneration (stale vectors are a silent contract break);
+2. the vectors must be internally consistent (FWHT involution/norm in f32,
+   decoder reads agreeing with the unpacked values, attention weights
+   summing to 1) — so a bad generator cannot pin a bad kernel;
+3. the files must stay parseable by the minimal Rust JSON subset (objects,
+   arrays, finite numbers — no NaN/Infinity literals).
+"""
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import gen_vectors as gv
+
+VEC = gv.VECTOR_DIR
+
+
+@pytest.mark.parametrize("name", sorted(gv.GENERATORS))
+def test_committed_vectors_match_regeneration(name):
+    path = VEC / name
+    assert path.exists(), f"{path} missing — run python/tests/gen_vectors.py"
+    assert path.read_text() == gv.render(gv.GENERATORS[name]()), (
+        f"{name} is stale — rerun python/tests/gen_vectors.py"
+    )
+
+
+def test_vectors_contain_only_finite_numbers():
+    # the Rust parser (correctly) refuses NaN/Infinity; walk every number
+    def walk(v):
+        if isinstance(v, float):
+            assert math.isfinite(v)
+        elif isinstance(v, list):
+            for x in v:
+                walk(x)
+        elif isinstance(v, dict):
+            for x in v.values():
+                walk(x)
+
+    for name in gv.GENERATORS:
+        walk(json.loads((VEC / name).read_text()))
+
+
+def test_fwht_vectors_are_orthonormal_involution():
+    doc = json.loads((VEC / "fwht.json").read_text())
+    for case in doc["cases"]:
+        inp = np.asarray(case["input"], dtype=np.float32)
+        out = np.asarray(case["output"], dtype=np.float32)
+        assert out.shape == inp.shape
+        # orthonormal: norm preserved
+        np.testing.assert_allclose(
+            np.linalg.norm(out), np.linalg.norm(inp), rtol=1e-5
+        )
+        # involution: applying the mirror again returns the input
+        back = np.asarray(gv.fwht_f32(out), dtype=np.float32)
+        np.testing.assert_allclose(back, inp, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_vectors_reads_are_consistent():
+    doc = json.loads((VEC / "decode_codes.json").read_text())
+    assert len(doc["cases"]) == 8, "one case per bit width 1..8"
+    for case in doc["cases"]:
+        bits, values = case["bits"], case["values"]
+        assert all(0 <= v < (1 << bits) for v in values)
+        assert case["data"] == gv.pack_lsb_first(values, bits)
+        assert len(case["data"]) == (len(values) * bits + 7) // 8
+        # at least one width must end mid-byte (the unaligned-tail cases)
+        for read in case["reads"]:
+            s, n = read["start"], read["len"]
+            assert read["expect"] == values[s:s + n]
+    tails = [c for c in doc["cases"] if (len(c["values"]) * c["bits"]) % 8 != 0]
+    assert tails, "vectors must cover non-byte-aligned tails"
+
+
+def test_attend_vectors_match_independent_reference():
+    doc = json.loads((VEC / "attend_cached.json").read_text())
+    for case in doc["cases"]:
+        heads, hd, ctx = case["heads"], case["head_dim"], case["ctx"]
+        d = heads * hd
+        q = np.asarray(case["q"], dtype=np.float64)
+        k = np.asarray(case["k"], dtype=np.float64).reshape(ctx, d)
+        v = np.asarray(case["v"], dtype=np.float64).reshape(ctx, d)
+        out = np.asarray(case["out"], dtype=np.float64)
+        # independent formulation: softmax via scipy-free logsumexp trick
+        for h in range(heads):
+            sl = slice(h * hd, (h + 1) * hd)
+            logits = (k[:, sl] @ q[sl]) / np.sqrt(hd)
+            w = np.exp(logits - logits.max())
+            w /= w.sum()
+            assert abs(w.sum() - 1.0) < 1e-12
+            np.testing.assert_allclose(out[sl], w @ v[:, sl], rtol=1e-10, atol=1e-12)
+
+
+def test_generator_check_mode_detects_staleness(tmp_path, monkeypatch):
+    # point the generator at a scratch dir: --check must fail before files
+    # exist, pass after generation, and fail after tampering
+    monkeypatch.setattr(gv, "VECTOR_DIR", tmp_path)
+    assert gv.main(["--check"]) == 1
+    assert gv.main([]) == 0
+    assert gv.main(["--check"]) == 0
+    victim = tmp_path / "fwht.json"
+    victim.write_text(victim.read_text().replace("cases", "cases_x", 1))
+    assert gv.main(["--check"]) == 1

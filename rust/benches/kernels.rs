@@ -313,6 +313,85 @@ fn main() -> anyhow::Result<()> {
         ]),
     ));
 
+    // ------------------------------ HTTP front-end overhead vs in-process
+    // same packed demo model behind the batching server; one greedy
+    // request of gen_len tokens, submitted in-process (Server::submit)
+    // vs over the loopback HTTP API. The delta is the full front-end tax:
+    // socket, request parse, JSON response — per *request*, so it
+    // amortizes over generation length.
+    let (manifest, params, packed) =
+        raana::experiments::native_demo_packed("bench-serve-http", 256, 4, 4, 7)?;
+    let server = std::sync::Arc::new(raana::serve::Server::start_native_packed(
+        manifest, params, packed,
+    ));
+    let http = raana::net::HttpServer::bind(std::sync::Arc::clone(&server), "127.0.0.1:0", 2)?;
+    let addr = http.local_addr().to_string();
+    let http_gen = 32usize;
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 13 % 256) as i32).collect();
+    // baseline rides submit_streaming like the HTTP handler does, so the
+    // measured delta is purely the network front-end (socket + parse +
+    // serialize), not the per-token event channel both paths share
+    let inproc_r = bench("serve_inprocess", 1, 8, || {
+        let handle = server.submit_streaming(prompt.clone(), http_gen, 0.0, 0).unwrap();
+        let mut done = None;
+        for ev in handle.events.iter() {
+            if let raana::serve::StreamEvent::Done(c) = ev {
+                done = Some(c);
+                break;
+            }
+        }
+        std::hint::black_box(done.expect("stream must complete"));
+    });
+    let body = format!(
+        "{{\"prompt\":{:?},\"max_new_tokens\":{http_gen}}}",
+        prompt
+    );
+    let http_r = bench("serve_http", 1, 8, || {
+        let resp = raana::net::http_request(&addr, "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(resp.status, 200);
+        std::hint::black_box(resp.body.len());
+    });
+    http.shutdown()?;
+    let server = match std::sync::Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => anyhow::bail!("HTTP layer still holds the server"),
+    };
+    server.shutdown()?;
+    let overhead_ms = (http_r.median() - inproc_r.median()) * 1e3;
+    let overhead_frac = (http_r.median() - inproc_r.median()) / inproc_r.median().max(1e-12);
+    let mut t = Table::new(&[
+        "Serving front-end (gen=32, packed demo model)",
+        "median",
+        "tok/s",
+    ]);
+    t.row(vec![
+        "in-process Server::submit".into(),
+        format!("{:.1} ms", inproc_r.median() * 1e3),
+        format!("{:.1}", http_gen as f64 / inproc_r.median()),
+    ]);
+    t.row(vec![
+        "HTTP POST /v1/generate (loopback)".into(),
+        format!("{:.1} ms", http_r.median() * 1e3),
+        format!("{:.1}", http_gen as f64 / http_r.median()),
+    ]);
+    t.row(vec![
+        "front-end overhead per request".into(),
+        format!("{overhead_ms:.2} ms"),
+        format!("{:.1}%", overhead_frac * 100.0),
+    ]);
+    println!("{}", t.render());
+    report.push((
+        "serve_http",
+        json::obj(vec![
+            ("gen_len", json::num(http_gen as f64)),
+            ("prompt_len", json::num(prompt.len() as f64)),
+            ("http", bench_json(&http_r)),
+            ("inprocess", bench_json(&inproc_r)),
+            ("overhead_ms", json::num(overhead_ms)),
+            ("overhead_frac", json::num(overhead_frac)),
+        ]),
+    ));
+
     let out = std::path::Path::new("BENCH_kernels.json");
     write_json_report(out, &json::obj(report))?;
     println!("wrote {}", out.display());

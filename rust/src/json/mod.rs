@@ -1,8 +1,14 @@
 //! Minimal JSON substrate (the offline vendor set has no serde facade).
 //!
 //! Supports the full JSON grammar minus exotic escapes; used for artifact
-//! manifests, run configs, and experiment result dumps. Not a speed-critical
-//! path — manifests are a few KiB.
+//! manifests, run configs, experiment result dumps — and, since the HTTP
+//! front-end ([`crate::net`]) landed, **untrusted network bytes**. The
+//! parser is therefore hardened against adversarial input: nesting depth
+//! is capped ([`MAX_DEPTH`]) so a `[[[[...` bomb cannot overflow the
+//! recursion stack, number literals are length-capped and must be finite,
+//! truncated `\u` escapes are errors rather than slice panics, and every
+//! malformed input path returns `Err` — `parse` never panics (tested in
+//! this module's adversarial suite). Not a speed-critical path.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -160,9 +166,19 @@ pub fn arr(v: Vec<Value>) -> Value {
     Value::Arr(v)
 }
 
+/// Maximum container nesting depth [`parse`] accepts. Hostile inputs like
+/// ten thousand `[`s would otherwise recurse once per level and overflow
+/// the stack (an unrecoverable abort, not an `Err`); every legitimate
+/// document in this repo nests single digits deep.
+pub const MAX_DEPTH: usize = 64;
+
+/// Longest number literal [`parse`] accepts, in bytes. JSON numbers this
+/// long are either hostile padding or values f64 cannot represent anyway.
+pub const MAX_NUMBER_LEN: usize = 256;
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Value> {
-    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -175,6 +191,8 @@ pub fn parse(text: &str) -> Result<Value> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting depth (see [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -221,12 +239,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos);
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Value> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek()? == b'}' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(m));
         }
         loop {
@@ -241,6 +269,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b'}' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(m));
                 }
                 c => bail!("expected ',' or '}}' got '{}'", c as char),
@@ -250,10 +279,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Value> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(v));
         }
         loop {
@@ -263,6 +294,7 @@ impl<'a> Parser<'a> {
                 b',' => self.pos += 1,
                 b']' => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(v));
                 }
                 c => bail!("expected ',' or ']' got '{}'", c as char),
@@ -291,9 +323,15 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(
-                                &self.bytes[self.pos..self.pos + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
+                            // bounds-checked: a document truncated inside
+                            // the escape must error, not slice-panic
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow!("EOF inside \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow!("bad \\u escape '{hex}'"))?;
                             self.pos += 4;
                             out.push(char::from_u32(code)
                                 .ok_or_else(|| anyhow!("bad \\u escape"))?);
@@ -320,9 +358,17 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
+        if self.pos - start > MAX_NUMBER_LEN {
+            bail!("number literal longer than {MAX_NUMBER_LEN} bytes at byte {start}");
+        }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Value::Num(text.parse::<f64>()
-            .map_err(|_| anyhow!("bad number '{text}'"))?))
+        let n = text.parse::<f64>().map_err(|_| anyhow!("bad number '{text}'"))?;
+        // "1e999" parses to +inf in Rust; JSON has no infinities or NaN,
+        // and downstream consumers assume finite numbers
+        if !n.is_finite() {
+            bail!("number '{text}' overflows f64");
+        }
+        Ok(Value::Num(n))
     }
 }
 
@@ -391,6 +437,65 @@ mod tests {
         let v = parse(" \n{ \"a\" :\t1 , \"b\" : [ ] }\r\n").unwrap();
         assert_eq!(v.req_usize("a").unwrap(), 1);
         assert_eq!(v.get("b").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    // ---- adversarial inputs: the parser faces raw network bytes via the
+    // HTTP front-end; every hostile shape must Err, never panic
+
+    #[test]
+    fn truncated_inputs_error_cleanly() {
+        let docs = [
+            "{\"a\":", "{\"a\"", "{\"a", "{\"", "[1, 2", "[1,", "\"abc", "\"ab\\",
+            "tru", "fal", "nul", "-", "1e", "{\"a\": \"b", "[[1, [2, [3",
+        ];
+        for doc in docs {
+            assert!(parse(doc).is_err(), "truncated '{doc}' must not parse");
+        }
+        // every prefix of a valid document either parses or errors — no
+        // index panics anywhere in the byte range
+        let full = r#"{"k":[1,-2.5e3,"a\u0041\n",true,null],"m":{"x":[[]]}}"#;
+        for cut in 0..full.len() {
+            if full.is_char_boundary(cut) {
+                let _ = parse(&full[..cut]);
+            }
+        }
+    }
+
+    #[test]
+    fn nesting_bomb_is_bounded_not_stack_overflow() {
+        // far past MAX_DEPTH: must Err (pre-limit this aborted the process)
+        let bomb = "[".repeat(100_000);
+        assert!(parse(&bomb).is_err());
+        let obj_bomb = "{\"a\":".repeat(100_000);
+        assert!(parse(&obj_bomb).is_err());
+        // mixed nesting, closed properly but too deep, still refused
+        let deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&deep).is_err());
+        // at the limit it parses
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn overlong_and_overflowing_numbers_error() {
+        let long = "9".repeat(MAX_NUMBER_LEN + 1);
+        assert!(parse(&long).is_err(), "overlong literal must be refused");
+        assert!(parse("1e999").is_err(), "f64 overflow is not a JSON number");
+        assert!(parse("-1e999").is_err());
+        // at the cap and representable: fine
+        assert!(parse(&"9".repeat(64)).is_ok());
+    }
+
+    #[test]
+    fn invalid_unicode_escapes_error() {
+        assert!(parse("\"\\uZZZZ\"").is_err(), "non-hex digits");
+        assert!(parse("\"\\u12\"").is_err(), "too few digits");
+        assert!(parse("\"\\u12").is_err(), "truncated mid-escape");
+        assert!(parse("\"\\u").is_err(), "truncated at escape start");
+        assert!(parse("\"\\uD800\"").is_err(), "lone surrogate is not a char");
+        assert!(parse("\"\\x41\"").is_err(), "unknown escape letter");
+        // valid escape still works
+        assert_eq!(parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!   ([`rabitq`], [`quant`]), the AllocateBits bit-width optimizer
 //!   ([`allocate`]), calibration ([`calib`]), baselines ([`baselines`]),
 //!   perplexity evaluation ([`eval`]), training driver ([`train`]), a
-//!   batching inference server ([`serve`]), and the synthetic-corpus
-//!   substrate ([`data`]).
+//!   batching inference server ([`serve`]) with an HTTP/1.1 front-end
+//!   ([`net`]: streaming, cancellation, backpressure), and the
+//!   synthetic-corpus substrate ([`data`]).
 //! * **L2/L1 (python/compile)** — a JAX transformer whose linear layers
 //!   call Pallas kernels, AOT-lowered once to HLO-text artifacts that the
 //!   [`runtime`] module loads and executes via PJRT. Python never runs on
@@ -38,6 +39,7 @@ pub mod hadamard;
 pub mod json;
 pub mod kernels;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod rabitq;
 pub mod rng;

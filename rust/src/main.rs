@@ -7,6 +7,7 @@
 //!   eval     [--model tiny --dataset wiki|c4]
 //!   table    --n 1..5            regenerate a paper table
 //!   serve    [--model tiny --requests N]   batching-server demo
+//!   serve    --http PORT [--max-queue N]   HTTP front-end (drains on stdin EOF)
 
 use anyhow::{bail, Result};
 
@@ -195,17 +196,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "tiny");
     let n_req = args.opt_usize("requests", 16)?;
     let new_tokens = args.opt_usize("tokens", 16)?;
+    // Bounded admission queue: HTTP runs default to 64 (backpressure as
+    // 429), in-process demo runs stay unbounded as before.
+    let cfg = raana::serve::ServeConfig {
+        max_queue: args.opt_usize("max-queue", if args.opt("http").is_some() { 64 } else { 0 })?,
+    };
 
     // Artifact-free path: serve a native-initialized model straight from
     // packed codes (demonstrates the request path without `make artifacts`).
     let have_artifacts = artifacts_root().join(model).join("manifest.json").exists();
-    if args.flag("native") || !have_artifacts {
+    let (server, batch) = if args.flag("native") || !have_artifacts {
         if !have_artifacts {
             info!("artifacts/{model} missing — native packed-serving demo (untrained weights)");
         }
-        return serve_native_demo(args, n_req, new_tokens);
+        build_native_demo_server(args, cfg)?
+    } else {
+        build_artifact_server(args, model, cfg)?
+    };
+    match args.opt("http") {
+        Some(port) => serve_http(server, port, args),
+        None => run_requests(server, n_req, new_tokens, batch),
     }
+}
 
+/// Quantize the trained `model` and start a packed-code server over it.
+fn build_artifact_server(
+    args: &Args,
+    model: &str,
+    cfg: raana::serve::ServeConfig,
+) -> Result<(raana::serve::Server, usize)> {
     let env = Env::load(model)?;
     // quantize, keeping the codes bit-packed: the server's fwd_logits
     // computes on them via qgemm, with zero dequantization per forward
@@ -227,11 +246,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = manifest.eval_batch;
     let params = env.params.clone();
     drop(env); // the server thread owns its own (native) runtime
-    let server = raana::serve::Server::start_native_packed(manifest, params, packed);
-    run_requests(server, n_req, new_tokens, batch)
+    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg);
+    Ok((server, batch))
 }
 
-fn serve_native_demo(args: &Args, n_req: usize, new_tokens: usize) -> Result<()> {
+/// Synthesize + pack a demo model and start a server over it.
+fn build_native_demo_server(
+    args: &Args,
+    cfg: raana::serve::ServeConfig,
+) -> Result<(raana::serve::Server, usize)> {
     let bits_raw = args.opt_usize("bits", 4)?;
     if !(1..=8).contains(&bits_raw) {
         bail!("--bits must be in 1..=8, got {bits_raw}");
@@ -247,8 +270,54 @@ fn serve_native_demo(args: &Args, n_req: usize, new_tokens: usize) -> Result<()>
         packed.avg_bits()
     );
     let batch = manifest.eval_batch;
-    let server = raana::serve::Server::start_native_packed(manifest, params, packed);
-    run_requests(server, n_req, new_tokens, batch)
+    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg);
+    Ok((server, batch))
+}
+
+/// Front the batching server with the HTTP layer until stdin closes, then
+/// drain gracefully (SIGTERM-style: stop accepting, finish in-flight
+/// work, collect final stats).
+fn serve_http(server: raana::serve::Server, port: &str, args: &Args) -> Result<()> {
+    let server = std::sync::Arc::new(server);
+    let addr = if port.contains(':') { port.to_string() } else { format!("127.0.0.1:{port}") };
+    let http = raana::net::HttpServer::bind_with(
+        std::sync::Arc::clone(&server),
+        &addr,
+        raana::net::HttpConfig {
+            workers: args.opt_usize("http-workers", 0)?,
+            max_new_tokens_cap: args.opt_usize("http-max-tokens", 0)?,
+        },
+    )?;
+    let bound = http.local_addr();
+    println!("HTTP serving on http://{bound}  (close stdin / Ctrl-D for graceful drain)");
+    println!("  curl -s http://{bound}/healthz");
+    println!("  curl -s http://{bound}/v1/stats");
+    println!(
+        "  curl -s -X POST http://{bound}/v1/generate -d \
+         '{{\"prompt\":[84,104,101,32],\"max_new_tokens\":16}}'"
+    );
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match std::io::stdin().read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    info!("stdin closed — draining HTTP connections");
+    http.shutdown()?;
+    let server = std::sync::Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("HTTP layer still holds the server"))?;
+    let stats = server.shutdown()?;
+    println!(
+        "served {} completions ({} cancelled), {:.1} tok/s, p50 {:.1} ms p95 {:.1} ms",
+        stats.completions,
+        stats.cancelled,
+        stats.throughput_tok_s(),
+        stats.p50_latency() * 1e3,
+        stats.p95_latency() * 1e3
+    );
+    Ok(())
 }
 
 fn run_requests(

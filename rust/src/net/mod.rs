@@ -1,0 +1,858 @@
+//! HTTP/1.1 front-end for the batching server — the layer where packed-code
+//! serving meets an actual network workload.
+//!
+//! Std-only by construction (no cargo registry in the build environment):
+//! `std::net` sockets, the crate's own [`crate::threadpool::Pool`] for
+//! connection handling, and the hardened [`crate::json`] parser for the
+//! (untrusted) request bodies. One request per connection, `Connection:
+//! close` — the simplest protocol subset that real clients (curl, the
+//! loopback tests, `examples/http_client.rs`) speak without negotiation.
+//!
+//! # Endpoints
+//!
+//! * `POST /v1/generate` — body `{"prompt": [ints], "max_new_tokens": N,
+//!   "temperature": T, "seed": S, "stream": bool}` (every field optional;
+//!   defaults `[] / 16 / 0.0 / 0 / false`). Non-streaming responses are one
+//!   JSON object mirroring [`Completion`]. With `"stream": true` the
+//!   response is `Transfer-Encoding: chunked`: one chunk per sampled token
+//!   (`{"id":..,"index":..,"token":..}\n`), then a final chunk with
+//!   `"done": true` and the full token list. A full admission queue maps
+//!   to **429**, a shut-down server to **503**, an unservable request
+//!   (e.g. out-of-vocab prompt token) to **400**.
+//! * `GET /healthz` — liveness: `{"ok":true,"running":bool}`.
+//! * `GET /v1/stats` — live [`ServerStats`] snapshot plus the current
+//!   admission-queue depth, readable **while generation is in flight**.
+//!
+//! # Cancellation
+//!
+//! Streamed responses are flushed per token, so a client that disconnects
+//! is detected at the next chunk write; non-streaming responses write
+//! nothing until completion, so their handler probes the socket for EOF
+//! between token events instead. Either way the handler fires the
+//! request's [`crate::serve::CancelToken`] and the batcher frees the KV
+//! lane mid-flight — a dropped connection never strands a lane
+//! (loopback-tested). Deliberate protocol choice: a **half-close**
+//! (client `shutdown(SHUT_WR)` after sending the request) is treated the
+//! same as a disconnect — this server's clients must keep their socket
+//! fully open until they have read the response.
+//!
+//! # Backpressure
+//!
+//! Layered and always explicit: the batching server's bounded admission
+//! queue maps to **429** (request-level). When every pool worker is
+//! pinned by a long-lived generation, new connections are handed to a
+//! bounded set of short-lived **overflow handlers** that still answer the
+//! cheap endpoints (`/healthz`, `/v1/stats` keep working under full
+//! load — liveness probes must not fail on a busy-but-healthy server)
+//! and refuse only `POST /v1/generate`, with **503** — after reading the
+//! request, so the client sees the response rather than a connection
+//! reset. Nothing ever queues silently in the pool's unbounded channel;
+//! past the overflow bound the connection is dropped outright.
+//!
+//! # Shutdown
+//!
+//! [`HttpServer::shutdown`] is a SIGTERM-style graceful drain: stop
+//! accepting, finish every in-flight connection, return. The batching
+//! [`Server`] underneath is owned via `Arc` and shut down by the caller
+//! afterwards, so queued work still completes.
+//!
+//! # Limits
+//!
+//! Request heads are capped at [`MAX_HEAD_BYTES`], bodies at
+//! [`MAX_BODY_BYTES`], and every request's `max_new_tokens` is clamped to
+//! [`HttpConfig::max_new_tokens_cap`] (default
+//! [`DEFAULT_MAX_NEW_TOKENS_CAP`]) so one patient client cannot pin a KV
+//! lane for an unbounded generation; socket reads time out so half-open
+//! peers cannot pin a worker forever. These caps plus the JSON parser's
+//! depth/number caps are the entire attack surface budget of this
+//! front-end.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Value};
+use crate::serve::{AdmitError, Completion, Server, ServerStats, StreamEvent, StreamHandle};
+use crate::threadpool::{default_threads, Pool};
+
+/// Maximum accepted size of a request line + headers, in bytes.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Maximum accepted request-body size, in bytes (prompts are token-id
+/// arrays; 1 MiB of JSON is far beyond any real prompt for these models).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Socket read timeout: a peer that stops sending mid-request is dropped
+/// rather than pinning a connection worker forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Socket write timeout for responses and stream chunks.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default server-side clamp on a request's `max_new_tokens` (see
+/// [`HttpConfig::max_new_tokens_cap`]).
+pub const DEFAULT_MAX_NEW_TOKENS_CAP: usize = 4096;
+
+/// Most overflow handlers alive at once (see the module's *Backpressure*
+/// section); connections beyond this while the pool is pinned are
+/// dropped without a response — the genuinely-overloaded regime.
+const OVERFLOW_HANDLERS_MAX: usize = 32;
+
+/// Construction options for [`HttpServer::bind_with`].
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Connection-handler pool size; `0` means [`default_threads`]
+    /// (min 4). Long-lived streaming connections each occupy a worker,
+    /// so size the pool to the expected concurrency.
+    pub workers: usize,
+    /// Server-side clamp applied to every request's `max_new_tokens`
+    /// (`0` means [`DEFAULT_MAX_NEW_TOKENS_CAP`]): the generation still
+    /// succeeds, truncated — it just cannot pin a KV lane indefinitely.
+    pub max_new_tokens_cap: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { workers: 0, max_new_tokens_cap: 0 }
+    }
+}
+
+/// Handle for a running HTTP front-end.
+///
+/// Binds a listener, spawns an accept loop, and serves each connection on
+/// a fixed [`Pool`] of workers. Dropping the handle performs the same
+/// graceful drain as [`HttpServer::shutdown`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    /// Live overflow-handler count — their threads are detached, so the
+    /// drain must wait on this before the `Arc<Server>` clones they hold
+    /// are guaranteed gone (see [`HttpServer::shutdown`]).
+    overflow: Arc<AtomicUsize>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an ephemeral
+    /// port — see [`HttpServer::local_addr`]) and start serving `server`
+    /// with `workers` connection handlers (`0` = default) and the default
+    /// `max_new_tokens` clamp. See [`HttpServer::bind_with`].
+    pub fn bind(server: Arc<Server>, addr: &str, workers: usize) -> Result<HttpServer> {
+        HttpServer::bind_with(server, addr, HttpConfig { workers, max_new_tokens_cap: 0 })
+    }
+
+    /// [`HttpServer::bind`] with explicit [`HttpConfig`].
+    pub fn bind_with(server: Arc<Server>, addr: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        // Non-blocking accept so the loop can observe the stop flag; 5 ms
+        // poll keeps shutdown latency negligible next to a model step.
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let overflow = Arc::new(AtomicUsize::new(0));
+        let overflow2 = Arc::clone(&overflow);
+        let workers = if cfg.workers == 0 { default_threads().max(4) } else { cfg.workers };
+        let cap = if cfg.max_new_tokens_cap == 0 {
+            DEFAULT_MAX_NEW_TOKENS_CAP
+        } else {
+            cfg.max_new_tokens_cap
+        };
+        let accept = thread::spawn(move || {
+            let pool = Pool::new(workers);
+            // Connection-level backpressure: the pool's submission channel
+            // is unbounded, so connections past the worker count must not
+            // be submitted (they would queue silently with no response at
+            // all). Instead a bounded set of short-lived overflow threads
+            // still answers cheap endpoints and refuses generation with a
+            // real 503 (request drained first, so no RST race).
+            let active = Arc::new(AtomicUsize::new(0));
+            loop {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((conn, _peer)) => {
+                        if active.load(Ordering::SeqCst) < workers {
+                            active.fetch_add(1, Ordering::SeqCst);
+                            let srv = Arc::clone(&server);
+                            let act = Arc::clone(&active);
+                            pool.submit(move || {
+                                handle_connection(&srv, conn, cap, false);
+                                act.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        } else if overflow2.load(Ordering::SeqCst) < OVERFLOW_HANDLERS_MAX {
+                            overflow2.fetch_add(1, Ordering::SeqCst);
+                            let srv = Arc::clone(&server);
+                            let ovf = Arc::clone(&overflow2);
+                            // detached: lifetime bounded by the socket
+                            // read/write timeouts, work bounded to cheap
+                            // endpoints + one 503. The Arc<Server> clone
+                            // MUST drop before the counter decrements —
+                            // shutdown uses the counter as the fence for
+                            // "no overflow thread still holds the server".
+                            thread::spawn(move || {
+                                handle_connection(&srv, conn, cap, true);
+                                drop(srv);
+                                ovf.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        } else {
+                            // genuinely overloaded: drop without response
+                            drop(conn);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            }
+            // dropping the pool joins its workers after they finish every
+            // already-accepted connection: the graceful drain
+            drop(pool);
+        });
+        Ok(HttpServer { addr: local, stop, accept: Some(accept), overflow })
+    }
+
+    /// The actually-bound address (resolves ephemeral port requests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting new connections, let every in-flight
+    /// request finish — pool workers via the pool join, detached overflow
+    /// handlers via their counter (their lifetime is bounded by the socket
+    /// timeouts) — then return. Afterwards no thread of this front-end
+    /// holds an `Arc<Server>` clone, so the caller's
+    /// `Arc::try_unwrap(server)` is race-free. The underlying [`Server`]
+    /// keeps running — shut it down separately once the last front-end is
+    /// gone.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        let joined = match self.accept.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("HTTP accept loop panicked")),
+            None => Ok(()),
+        };
+        self.drain_overflow();
+        joined
+    }
+
+    /// Wait (bounded by the socket timeouts, plus slack) for detached
+    /// overflow handlers to finish and release their server handles.
+    fn drain_overflow(&self) {
+        for _ in 0..6000 {
+            if self.overflow.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.drain_overflow();
+    }
+}
+
+// ------------------------------------------------------------ request path
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+/// Request-read failure with the HTTP status it maps to (400 for
+/// malformed/truncated requests, 413 for over-cap bodies).
+struct HttpError {
+    status: u16,
+    msg: String,
+}
+
+impl HttpError {
+    fn bad<M: std::fmt::Display>(msg: M) -> HttpError {
+        HttpError { status: 400, msg: msg.to_string() }
+    }
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// Read one `\n`-terminated line, bounded by the remaining head budget.
+fn read_line_capped(reader: &mut BufReader<TcpStream>, total: &mut usize) -> Result<String> {
+    let mut buf = Vec::new();
+    let budget = (MAX_HEAD_BYTES - *total + 1) as u64;
+    let n = reader.by_ref().take(budget).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        bail!("connection closed mid-request");
+    }
+    *total += n;
+    anyhow::ensure!(
+        buf.last() == Some(&b'\n') && *total <= MAX_HEAD_BYTES,
+        "request head truncated or larger than {MAX_HEAD_BYTES} bytes"
+    );
+    String::from_utf8(buf).map_err(|_| anyhow!("non-UTF-8 bytes in request head"))
+}
+
+fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| HttpError::bad(format!("{e}")))?);
+    let mut total = 0usize;
+    let line = read_line_capped(&mut reader, &mut total).map_err(HttpError::bad)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| HttpError::bad("empty request line"))?.to_string();
+    let path =
+        parts.next().ok_or_else(|| HttpError::bad("request line missing path"))?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::bad(format!("unsupported version '{version}'")));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_capped(&mut reader, &mut total).map_err(HttpError::bad)?;
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        let (k, v) = trimmed
+            .split_once(':')
+            .ok_or_else(|| HttpError::bad("malformed header line"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let content_length = match header(&headers, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::bad(format!("bad content-length '{v}'")))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError {
+            status: 413,
+            msg: format!(
+                "body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+            ),
+        });
+    }
+    // curl sends `Expect: 100-continue` for bodies over ~1 KiB and stalls
+    // ~1 s waiting for the interim response; acknowledge so a long-prompt
+    // POST does not pay that latency (only once the body passed the cap)
+    if content_length > 0 {
+        if let Some(v) = header(&headers, "expect") {
+            if v.eq_ignore_ascii_case("100-continue") {
+                let mut w: &TcpStream = stream;
+                let _ = w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+                let _ = w.flush();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader
+        .read_exact(&mut body)
+        .map_err(|e| HttpError::bad(format!("reading request body: {e}")))?;
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// Serve one connection. `overflow` marks the pinned-pool path: cheap
+/// endpoints are still answered, but generation is refused with 503
+/// (after the request was read, so the refusal actually reaches the
+/// client instead of being discarded by an RST).
+fn handle_connection(server: &Server, mut stream: TcpStream, cap: usize, overflow: bool) {
+    // the listener is non-blocking for the stop-flag poll; accepted
+    // sockets must not inherit that (they do on some BSDs)
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let req = match read_request(&stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = respond_error(&mut stream, e.status, &e.msg);
+            // The client may still be mid-send (e.g. a 413 refused before
+            // its body arrived). Closing with unread bytes in the receive
+            // buffer can RST the queued response away, so: FIN our write
+            // side first (the response is delivered), then drain reads
+            // until EOF — bounded by the byte budget and the read timeout.
+            let _ = stream.shutdown(Shutdown::Write);
+            let mut scratch = [0u8; 8192];
+            let mut r: &TcpStream = &stream;
+            let mut budget = 2 * MAX_BODY_BYTES;
+            while budget > 0 {
+                match r.read(&mut scratch) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => budget = budget.saturating_sub(n),
+                }
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("running", Value::Bool(server.is_running())),
+            ]);
+            let _ = respond(&mut stream, 200, "OK", &body.to_json());
+        }
+        ("GET", "/v1/stats") => {
+            let _ = respond(&mut stream, 200, "OK", &stats_json(server).to_json());
+        }
+        ("POST", "/v1/generate") if overflow => {
+            let _ = respond_error(&mut stream, 503, "all connection workers busy, retry later");
+        }
+        ("POST", "/v1/generate") => handle_generate(server, &mut stream, &req.body, cap),
+        ("GET", _) | ("POST", _) => {
+            let _ = respond_error(&mut stream, 404, &format!("no endpoint {}", req.path));
+        }
+        (m, _) => {
+            let _ = respond_error(&mut stream, 405, &format!("method {m} not supported"));
+        }
+    }
+}
+
+// --------------------------------------------------------------- /v1/generate
+
+struct GenParams {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    temperature: f32,
+    seed: u64,
+    stream: bool,
+}
+
+fn parse_generate(body: &[u8]) -> Result<GenParams> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("body is not UTF-8"))?;
+    let v = json::parse(text).map_err(|e| anyhow!("invalid JSON body: {e}"))?;
+    let prompt = match v.get("prompt") {
+        None => Vec::new(),
+        Some(p) => p
+            .as_arr()
+            .ok_or_else(|| anyhow!("'prompt' must be an array of token ids"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .filter(|f| f.fract() == 0.0 && (-2147483648.0..=2147483647.0).contains(f))
+                    .map(|f| f as i32)
+                    .ok_or_else(|| anyhow!("'prompt' entries must be integer token ids"))
+            })
+            .collect::<Result<Vec<i32>>>()?,
+    };
+    let max_new_tokens = match v.get("max_new_tokens") {
+        None => 16,
+        Some(x) => x
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && (0.0..=1e9).contains(f))
+            .map(|f| f as usize)
+            .ok_or_else(|| anyhow!("'max_new_tokens' must be an integer in 0..=1e9"))?,
+    };
+    let temperature = match v.get("temperature") {
+        None => 0.0,
+        Some(x) => x
+            .as_f64()
+            .filter(|f| f.is_finite() && *f >= 0.0)
+            .map(|f| f as f32)
+            .ok_or_else(|| anyhow!("'temperature' must be a non-negative number"))?,
+    };
+    let seed = match v.get("seed") {
+        None => 0,
+        Some(x) => x
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && (0.0..=1.8e19).contains(f))
+            .map(|f| f as u64)
+            .ok_or_else(|| anyhow!("'seed' must be a non-negative integer"))?,
+    };
+    let stream = match v.get("stream") {
+        None => false,
+        Some(x) => x.as_bool().ok_or_else(|| anyhow!("'stream' must be a boolean"))?,
+    };
+    Ok(GenParams { prompt, max_new_tokens, temperature, seed, stream })
+}
+
+fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], cap: usize) {
+    let gen = match parse_generate(body) {
+        Ok(g) => g,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    // server-side clamp: one patient client must not own a KV lane for an
+    // unbounded generation (see HttpConfig::max_new_tokens_cap)
+    let max_new_tokens = gen.max_new_tokens.min(cap);
+    // Both flavors ride the streaming submit so both get a CancelToken:
+    // a non-streaming response writes nothing until completion, so client
+    // disconnects are detected by probing the socket for EOF instead of
+    // by a failing chunk write — either way the KV lane is freed.
+    match server.submit_streaming(gen.prompt, max_new_tokens, gen.temperature, gen.seed) {
+        Ok(handle) if gen.stream => stream_response(stream, handle),
+        Ok(handle) => collect_response(stream, handle),
+        Err(e) => {
+            let _ = respond_admit_error(stream, &e);
+        }
+    }
+}
+
+/// True once the peer closed its side. Only valid after the request has
+/// been fully read (any further readable byte is either EOF — `Ok(0)` —
+/// or pipelined garbage we are free to ignore under `Connection: close`).
+/// A half-close (`shutdown(SHUT_WR)`) reads as EOF too and is treated as
+/// abandonment — the documented protocol choice (module docs): clients
+/// keep the socket fully open until they have read their response.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let mut r: &TcpStream = stream;
+    // Ok(0) = orderly close/half-close; a read error (ECONNRESET after an
+    // abortive close) is every bit as gone. Only WouldBlock means "still
+    // connected, nothing to read".
+    let gone = match r.read(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => e.kind() != std::io::ErrorKind::WouldBlock,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Non-streaming `/v1/generate`: drain the token events (the `Done`
+/// carries the full list), answering with one JSON object — while
+/// periodically probing the socket so a disconnected client cancels the
+/// generation instead of pinning its KV lane for up to `max_new_tokens`.
+fn collect_response(stream: &mut TcpStream, handle: StreamHandle) {
+    const PROBE_EVERY: usize = 32;
+    let mut since_probe = 0usize;
+    loop {
+        match handle.events.recv_timeout(Duration::from_millis(250)) {
+            Ok(StreamEvent::Token { .. }) => {
+                since_probe += 1;
+                if since_probe >= PROBE_EVERY {
+                    since_probe = 0;
+                    if client_gone(stream) {
+                        handle.cancel.cancel();
+                        return;
+                    }
+                }
+            }
+            Ok(StreamEvent::Done(c)) => {
+                let _ = respond(stream, 200, "OK", &completion_json(&c, false).to_json());
+                return;
+            }
+            // no event for a while: generation is slow or idle — a good
+            // moment to notice an abandoned connection
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(stream) {
+                    handle.cancel.cancel();
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let _ = respond_error(stream, 500, "generation aborted (batcher exited)");
+                return;
+            }
+        }
+    }
+}
+
+/// One chunk per sampled token; a write failure means the client is gone,
+/// so fire the [`crate::serve::CancelToken`] and free the KV lane. While
+/// *waiting* for events (e.g. still queued behind busy lanes, nothing to
+/// write yet) the socket is probed for EOF like the non-streaming path,
+/// so a client that disconnects before its first token cancels too.
+fn stream_response(stream: &mut TcpStream, handle: StreamHandle) {
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+                Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).and_then(|_| stream.flush()).is_err() {
+        handle.cancel.cancel();
+        return;
+    }
+    loop {
+        match handle.events.recv_timeout(Duration::from_millis(250)) {
+            Ok(StreamEvent::Token { id, index, token }) => {
+                let line = json::obj(vec![
+                    ("id", json::num(id as f64)),
+                    ("index", json::num(index as f64)),
+                    ("token", json::num(token as f64)),
+                ])
+                .to_json()
+                    + "\n";
+                if write_chunk(stream, line.as_bytes()).is_err() {
+                    handle.cancel.cancel();
+                    return;
+                }
+            }
+            Ok(StreamEvent::Done(c)) => {
+                let line = completion_json(&c, true).to_json() + "\n";
+                let _ = write_chunk(stream, line.as_bytes());
+                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ = stream.flush();
+                return;
+            }
+            // quiet stretch with nothing to write: check the peer is
+            // still there before waiting further
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(stream) {
+                    handle.cancel.cancel();
+                    return;
+                }
+            }
+            // sender dropped without Done: the request was cancelled or
+            // the batcher died — end the chunked body *without* the 0
+            // terminator so the client sees an aborted stream, not a
+            // well-formed short one
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn completion_json(c: &Completion, done_marker: bool) -> Value {
+    let mut fields = vec![
+        ("id", json::num(c.id as f64)),
+        ("tokens", json::arr(c.tokens.iter().map(|&t| json::num(t as f64)).collect())),
+        ("latency_secs", json::num(c.latency_secs)),
+        ("steps", json::num(c.steps as f64)),
+    ];
+    if done_marker {
+        fields.push(("done", Value::Bool(true)));
+    }
+    json::obj(fields)
+}
+
+fn stats_json(server: &Server) -> Value {
+    let s: ServerStats = server.stats();
+    json::obj(vec![
+        ("completions", json::num(s.completions as f64)),
+        ("tokens_generated", json::num(s.tokens_generated as f64)),
+        ("prefill_tokens", json::num(s.prefill_tokens as f64)),
+        ("decode_steps", json::num(s.decode_steps as f64)),
+        ("window_slides", json::num(s.window_slides as f64)),
+        ("batch_steps", json::num(s.batch_steps as f64)),
+        ("total_rows", json::num(s.total_rows as f64)),
+        ("cancelled", json::num(s.cancelled as f64)),
+        ("queue_depth", json::num(server.queue_depth() as f64)),
+        ("running", Value::Bool(server.is_running())),
+        ("throughput_tok_s", json::num(s.throughput_tok_s())),
+        ("p50_latency_secs", json::num(s.p50_latency())),
+        ("p95_latency_secs", json::num(s.p95_latency())),
+        ("wall_secs", json::num(s.wall_secs)),
+    ])
+}
+
+fn respond_admit_error(stream: &mut TcpStream, e: &AdmitError) -> std::io::Result<()> {
+    match e {
+        AdmitError::QueueFull => respond_error(stream, 429, "admission queue full, retry later"),
+        AdmitError::NotAccepting => respond_error(stream, 503, "server is shutting down"),
+        AdmitError::InvalidRequest(why) => respond_error(stream, 400, why),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Result<()> {
+    let reason = match status {
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    respond(stream, status, reason, &json::obj(vec![("error", json::s(msg))]).to_json())
+}
+
+fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n", payload.len())?;
+    stream.write_all(payload)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+// -------------------------------------------------------------- tiny client
+
+/// A parsed HTTP response, as read by [`http_request`].
+#[derive(Debug)]
+pub struct HttpResponse {
+    /// Status code (200, 429, ...).
+    pub status: u16,
+    /// Lower-cased header name/value pairs.
+    pub headers: Vec<(String, String)>,
+    /// Full body (chunked transfer already reassembled).
+    pub body: Vec<u8>,
+    /// Individual chunk payloads when the response was chunked (one per
+    /// stream event for `/v1/generate` streams); empty otherwise.
+    pub chunks: Vec<Vec<u8>>,
+}
+
+impl HttpResponse {
+    /// Body as UTF-8 text.
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow!("non-UTF-8 response body"))
+    }
+
+    /// Body parsed as JSON.
+    pub fn json(&self) -> Result<Value> {
+        json::parse(self.body_str()?)
+    }
+}
+
+/// Minimal blocking HTTP/1.1 client for loopback tests, benches, and the
+/// `http_client` example: one request, whole response (chunked responses
+/// are reassembled and the individual chunks preserved). Not a general
+/// client — it speaks exactly the subset this module's server emits.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let body_bytes = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body_bytes}",
+        body_bytes.len()
+    );
+    stream.write_all(req.as_bytes()).context("writing request")?;
+    stream.flush().ok();
+    read_response(&stream)
+}
+
+/// Parse one HTTP response off `stream` (shared by [`http_request`] and
+/// callers that manage the socket themselves).
+pub fn read_response(stream: &TcpStream) -> Result<HttpResponse> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line '{}'", line.trim_end()))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("reading header")?;
+        anyhow::ensure!(n > 0, "connection closed inside response head");
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = trimmed.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let mut chunks = Vec::new();
+    let body = if header(&headers, "transfer-encoding").is_some_and(|v| v.contains("chunked")) {
+        let mut all = Vec::new();
+        loop {
+            let mut size_line = String::new();
+            anyhow::ensure!(
+                reader.read_line(&mut size_line)? > 0,
+                "connection closed mid-stream (chunked body not terminated)"
+            );
+            let size_str = size_line.trim().split(';').next().unwrap_or("");
+            let size = usize::from_str_radix(size_str, 16)
+                .map_err(|_| anyhow!("bad chunk size '{size_str}'"))?;
+            if size == 0 {
+                // trailing CRLF after the last-chunk marker
+                let mut end = String::new();
+                let _ = reader.read_line(&mut end);
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            reader.read_exact(&mut chunk).context("reading chunk payload")?;
+            let mut crlf = [0u8; 2];
+            reader.read_exact(&mut crlf).context("reading chunk terminator")?;
+            all.extend_from_slice(&chunk);
+            chunks.push(chunk);
+        }
+        all
+    } else {
+        let len = match header(&headers, "content-length") {
+            Some(v) => v.parse::<usize>().map_err(|_| anyhow!("bad content-length"))?,
+            None => 0,
+        };
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).context("reading response body")?;
+        body
+    };
+    Ok(HttpResponse { status, headers, body, chunks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_body_parsing_defaults_and_validation() {
+        let g = parse_generate(br#"{"prompt":[1,2,3]}"#).unwrap();
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.max_new_tokens, 16);
+        assert_eq!(g.temperature, 0.0);
+        assert_eq!(g.seed, 0);
+        assert!(!g.stream);
+
+        let g = parse_generate(
+            br#"{"prompt":[],"max_new_tokens":4,"temperature":0.5,"seed":9,"stream":true}"#,
+        )
+        .unwrap();
+        assert!(g.prompt.is_empty());
+        assert_eq!(g.max_new_tokens, 4);
+        assert!((g.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(g.seed, 9);
+        assert!(g.stream);
+
+        // empty body is a valid all-defaults request? no: not JSON
+        assert!(parse_generate(b"").is_err());
+        assert!(parse_generate(b"{}").is_ok());
+        // hostile shapes refuse cleanly
+        assert!(parse_generate(br#"{"prompt":"abc"}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":[1.5]}"#).is_err());
+        assert!(parse_generate(br#"{"prompt":[99999999999999]}"#).is_err());
+        assert!(parse_generate(br#"{"max_new_tokens":-1}"#).is_err());
+        assert!(parse_generate(br#"{"max_new_tokens":1e12}"#).is_err());
+        assert!(parse_generate(br#"{"temperature":-0.1}"#).is_err());
+        assert!(parse_generate(br#"{"seed":-3}"#).is_err());
+        assert!(parse_generate(br#"{"stream":1}"#).is_err());
+        assert!(parse_generate(&[0xFF, 0xFE]).is_err());
+    }
+
+    #[test]
+    fn completion_json_shape() {
+        let c = Completion { id: 7, tokens: vec![1, 2], latency_secs: 0.5, steps: 2 };
+        let v = json::parse(&completion_json(&c, false).to_json()).unwrap();
+        assert_eq!(v.req_usize("id").unwrap(), 7);
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.get("done").is_none());
+        let v = json::parse(&completion_json(&c, true).to_json()).unwrap();
+        assert_eq!(v.get("done").unwrap().as_bool(), Some(true));
+    }
+}

@@ -18,9 +18,18 @@
 //! rows are genuinely stale and recompute is the correct (and reference-
 //! exact) behavior. Python is never on this path; with packed weights
 //! attached the decode linears run on RaBitQ codes via `qgemm`.
+//!
+//! Front-end hooks (what the HTTP layer in [`crate::net`] builds on):
+//! [`Server::submit_streaming`] delivers tokens one [`StreamEvent`] at a
+//! time; every request carries a [`CancelToken`] the batcher polls each
+//! round, so an abandoned request frees its KV lane mid-flight; a bounded
+//! admission queue ([`ServeConfig::max_queue`]) fails fast with
+//! [`AdmitError::QueueFull`] instead of queueing without limit; and a
+//! live [`ServerStats`] snapshot ([`Server::stats`]) answers while
+//! generation is in flight.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -54,12 +63,157 @@ pub struct Completion {
     pub steps: usize,
 }
 
+/// Per-token event delivered on a [`Server::submit_streaming`] channel.
+///
+/// The stream is a sequence of `Token` events (one per sampled token, in
+/// order) terminated by exactly one `Done` carrying the full
+/// [`Completion`]. If the request is cancelled or the batcher dies, the
+/// sender is dropped instead and the receiver disconnects without a
+/// `Done` — consumers must treat a disconnect as "generation aborted".
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One sampled token: `index` is its 0-based position in the output.
+    Token {
+        /// Request id (as returned by `submit_streaming`).
+        id: u64,
+        /// 0-based index of this token within the generation.
+        index: usize,
+        /// The sampled token.
+        token: i32,
+    },
+    /// Terminal event: the finished generation.
+    Done(Completion),
+}
+
+/// Cooperative cancellation handle for an in-flight request.
+///
+/// Cancelling is asynchronous: the batcher checks the flag once per
+/// round, frees the request's KV lane, and drops its event sender (so
+/// stream receivers disconnect). Cancelling an already-finished request
+/// is a harmless no-op. Clones share the same flag.
+#[derive(Clone, Debug)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    fn new() -> Self {
+        CancelToken(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// True once [`CancelToken::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Why [`Server::submit`] / [`Server::submit_streaming`] refused a request.
+///
+/// A typed error (rather than an opaque `anyhow::Error`) so front-ends can
+/// map each case to the right transport response — the HTTP layer turns
+/// `QueueFull` into 429, `NotAccepting` into 503 and `InvalidRequest`
+/// into 400.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded admission queue is at capacity (backpressure: retry
+    /// later rather than queueing unboundedly).
+    QueueFull,
+    /// The server stopped accepting work: shutdown began or the batcher
+    /// thread exited (e.g. its runtime factory failed).
+    NotAccepting,
+    /// The request can never be served (e.g. a prompt token outside the
+    /// model's vocabulary); admitting it would poison the batcher.
+    InvalidRequest(String),
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => write!(f, "admission queue full"),
+            AdmitError::NotAccepting => {
+                write!(f, "server is not accepting requests (shut down or batcher exited)")
+            }
+            AdmitError::InvalidRequest(why) => write!(f, "invalid request: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+impl From<AdmitError> for anyhow::Error {
+    fn from(e: AdmitError) -> anyhow::Error {
+        anyhow::Error::msg(e.to_string())
+    }
+}
+
+/// Handle for a streaming submission: the request id, the per-token event
+/// receiver, and the cancellation token.
+pub struct StreamHandle {
+    /// Request id.
+    pub id: u64,
+    /// Per-token event channel (see [`StreamEvent`] for the protocol).
+    pub events: mpsc::Receiver<StreamEvent>,
+    /// Cancellation handle (clone freely; see [`CancelToken`]).
+    pub cancel: CancelToken,
+}
+
+/// Server construction options.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Admission-queue capacity; `0` means unbounded. When bounded, a
+    /// submit against a full queue fails fast with
+    /// [`AdmitError::QueueFull`] instead of queueing — the backpressure
+    /// signal the HTTP front-end surfaces as 429.
+    pub max_queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_queue: 0 }
+    }
+}
+
+/// Where a request's results go: a single completion channel
+/// ([`Server::submit`]) or a per-token event channel
+/// ([`Server::submit_streaming`]).
+enum Sink {
+    Complete(mpsc::Sender<Completion>),
+    Stream(mpsc::Sender<StreamEvent>),
+}
+
+impl Sink {
+    /// Deliver one sampled token. Returns false when the receiver is gone
+    /// (streaming consumer dropped the channel) — the batcher treats that
+    /// exactly like a cancellation and frees the lane.
+    fn token(&self, id: u64, index: usize, token: i32) -> bool {
+        match self {
+            Sink::Complete(_) => true,
+            Sink::Stream(tx) => tx.send(StreamEvent::Token { id, index, token }).is_ok(),
+        }
+    }
+
+    fn done(&self, c: Completion) {
+        match self {
+            Sink::Complete(tx) => {
+                let _ = tx.send(c);
+            }
+            Sink::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(c));
+            }
+        }
+    }
+}
+
 struct Active {
     req: Request,
     generated: Vec<i32>,
     submitted: Instant,
     steps: usize,
-    done_tx: mpsc::Sender<Completion>,
+    cancel: CancelToken,
+    sink: Sink,
 }
 
 struct Shared {
@@ -70,6 +224,15 @@ struct Shared {
     /// drains the queue — [`Server::submit`] checks it under the queue
     /// lock so no request can be stranded behind a dead batcher.
     dead: AtomicBool,
+    /// Admission-queue capacity (0 = unbounded), from [`ServeConfig`].
+    max_queue: usize,
+    /// Model vocabulary size, published by the batcher once its runtime
+    /// is up (0 = not yet known). Lets `submit` reject out-of-vocab
+    /// prompts with a typed error before they reach the model.
+    vocab: AtomicUsize,
+    /// Live stats snapshot, refreshed by the batcher once per round so
+    /// `/v1/stats` can answer while generation is in flight.
+    live: Mutex<ServerStats>,
 }
 
 /// Server handle.
@@ -114,6 +277,10 @@ pub struct ServerStats {
     pub decode_steps: usize,
     /// Full-window re-prefills (context outgrew `seq_len`).
     pub window_slides: usize,
+    /// Requests abandoned mid-flight: an explicit [`CancelToken::cancel`],
+    /// a dropped stream receiver, or a prompt the model rejected at
+    /// admission. Each freed its KV lane without producing a completion.
+    pub cancelled: usize,
     pub latencies: Vec<f64>,
     pub wall_secs: f64,
 }
@@ -146,8 +313,14 @@ fn softmax_sample(logits: &[f32], temperature: f32, seed: u64, step: usize) -> i
     if temperature <= 0.0 {
         return crate::util::argmax(logits) as i32;
     }
-    let mut rng = crate::rng::Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37));
     let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    // Degenerate logit rows (all -inf, or any NaN contaminating the max)
+    // have no softmax: fall back to greedy instead of building a NaN
+    // cumulative table that would panic inside `sample_cumulative`.
+    if !maxl.is_finite() {
+        return crate::util::argmax(logits) as i32;
+    }
+    let mut rng = crate::rng::Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37));
     let exps: Vec<f64> = logits
         .iter()
         .map(|&x| (((x - maxl) / temperature) as f64).exp())
@@ -157,6 +330,11 @@ fn softmax_sample(logits: &[f32], temperature: f32, seed: u64, step: usize) -> i
     for e in exps {
         acc += e;
         cum.push(acc);
+    }
+    // acc >= exp(0) = 1 for the max logit, so the table is well-formed
+    // whenever maxl is finite; guard anyway against NaN stragglers.
+    if !acc.is_finite() || acc <= 0.0 {
+        return crate::util::argmax(logits) as i32;
     }
     rng.sample_cumulative(&cum) as i32
 }
@@ -173,11 +351,23 @@ impl Server {
     where
         F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
     {
+        Server::start_with(factory, params, ServeConfig::default())
+    }
+
+    /// [`Server::start`] with explicit [`ServeConfig`] (bounded admission
+    /// queue etc.).
+    pub fn start_with<F>(factory: F, params: ModelParams, cfg: ServeConfig) -> Server
+    where
+        F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
+    {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: Mutex::new(false),
             dead: AtomicBool::new(false),
+            max_queue: cfg.max_queue,
+            vocab: AtomicUsize::new(0),
+            live: Mutex::new(ServerStats::default()),
         });
         let s2 = Arc::clone(&shared);
         let worker = thread::spawn(move || {
@@ -204,14 +394,64 @@ impl Server {
         params: ModelParams,
         packed: PackedLayers,
     ) -> Server {
-        Server::start(
+        Server::start_native_packed_with(manifest, params, packed, ServeConfig::default())
+    }
+
+    /// [`Server::start_native_packed`] with explicit [`ServeConfig`].
+    pub fn start_native_packed_with(
+        manifest: Manifest,
+        params: ModelParams,
+        packed: PackedLayers,
+        cfg: ServeConfig,
+    ) -> Server {
+        Server::start_with(
             move || {
                 let mut mrt = ModelRuntime::native(manifest)?;
                 mrt.attach_packed(packed)?;
                 Ok(mrt)
             },
             params,
+            cfg,
         )
+    }
+
+    fn next_id(&self) -> u64 {
+        let mut g = self.next_id.lock().unwrap();
+        let id = *g;
+        *g += 1;
+        id
+    }
+
+    fn not_accepting(&self) -> bool {
+        self.shared.dead.load(Ordering::SeqCst) || *self.shared.shutdown.lock().unwrap()
+    }
+
+    /// Shared admission path: validate, bound the queue, enqueue.
+    fn admit(&self, act: Active) -> Result<(), AdmitError> {
+        // Out-of-vocab prompt tokens would make the batcher's prefill
+        // error out and kill the server; refuse them at the door once the
+        // batcher has published its vocabulary. (Before it has, the
+        // batcher-side guard in `batcher_loop` still drops them safely.)
+        let vocab = self.shared.vocab.load(Ordering::SeqCst);
+        if vocab > 0 {
+            if let Some(&t) = act.req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+                return Err(AdmitError::InvalidRequest(format!(
+                    "prompt token {t} outside vocabulary 0..{vocab}"
+                )));
+            }
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.dead.load(Ordering::SeqCst) || *self.shared.shutdown.lock().unwrap() {
+                return Err(AdmitError::NotAccepting);
+            }
+            if self.shared.max_queue > 0 && q.len() >= self.shared.max_queue {
+                return Err(AdmitError::QueueFull);
+            }
+            q.push_back(act);
+        }
+        self.shared.cv.notify_one();
+        Ok(())
     }
 
     /// Submit a request; returns the request id and a receiver for its
@@ -222,52 +462,106 @@ impl Server {
     ///
     /// # Errors
     ///
-    /// Fails once the server stopped accepting work: after
-    /// [`Server::shutdown`] began, or after the batcher thread exited
-    /// (e.g. its runtime factory failed). Without this check the request
-    /// would queue into a dead batcher and its receiver would block
-    /// forever.
+    /// [`AdmitError::NotAccepting`] once the server stopped accepting
+    /// work (after [`Server::shutdown`] began, or after the batcher
+    /// thread exited — without this check the request would queue into a
+    /// dead batcher and its receiver would block forever);
+    /// [`AdmitError::QueueFull`] when a bounded queue is at capacity;
+    /// [`AdmitError::InvalidRequest`] for prompts the model can never
+    /// serve.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         temperature: f32,
         seed: u64,
-    ) -> Result<(u64, mpsc::Receiver<Completion>)> {
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            let id = *g;
-            *g += 1;
-            id
-        };
+    ) -> Result<(u64, mpsc::Receiver<Completion>), AdmitError> {
+        let id = self.next_id();
         let (tx, rx) = mpsc::channel();
         if max_new_tokens == 0 {
+            // no model work, but the NotAccepting contract still holds: a
+            // shut-down server must not answer any request successfully
+            if self.not_accepting() {
+                return Err(AdmitError::NotAccepting);
+            }
             let _ = tx.send(Completion { id, tokens: Vec::new(), latency_secs: 0.0, steps: 0 });
             return Ok((id, rx));
         }
-        let act = Active {
+        self.admit(Active {
             req: Request { id, prompt, max_new_tokens, temperature, seed },
             generated: Vec::new(),
             submitted: Instant::now(),
             steps: 0,
-            done_tx: tx,
-        };
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            anyhow::ensure!(
-                !self.shared.dead.load(Ordering::SeqCst)
-                    && !*self.shared.shutdown.lock().unwrap(),
-                "server is not accepting requests (shut down or batcher exited)"
-            );
-            q.push_back(act);
-        }
-        self.shared.cv.notify_one();
+            cancel: CancelToken::new(),
+            sink: Sink::Complete(tx),
+        })?;
         Ok((id, rx))
+    }
+
+    /// Submit a request whose tokens are delivered one by one as they are
+    /// sampled — the transport behind the HTTP API's chunked streaming.
+    ///
+    /// The returned [`StreamHandle`] carries the event receiver (see
+    /// [`StreamEvent`] for the protocol) and a [`CancelToken`]: cancelling
+    /// — or simply dropping the receiver — frees the request's KV lane at
+    /// the batcher's next round instead of generating to completion.
+    ///
+    /// A `max_new_tokens` of 0 completes immediately (a lone `Done`).
+    ///
+    /// # Errors
+    ///
+    /// Same admission errors as [`Server::submit`].
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        temperature: f32,
+        seed: u64,
+    ) -> Result<StreamHandle, AdmitError> {
+        let id = self.next_id();
+        let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::new();
+        if max_new_tokens == 0 {
+            if self.not_accepting() {
+                return Err(AdmitError::NotAccepting);
+            }
+            let _ = tx.send(StreamEvent::Done(Completion {
+                id,
+                tokens: Vec::new(),
+                latency_secs: 0.0,
+                steps: 0,
+            }));
+            return Ok(StreamHandle { id, events: rx, cancel });
+        }
+        self.admit(Active {
+            req: Request { id, prompt, max_new_tokens, temperature, seed },
+            generated: Vec::new(),
+            submitted: Instant::now(),
+            steps: 0,
+            cancel: cancel.clone(),
+            sink: Sink::Stream(tx),
+        })?;
+        Ok(StreamHandle { id, events: rx, cancel })
     }
 
     /// True while the batcher thread is alive and accepting submissions.
     pub fn is_running(&self) -> bool {
         !self.shared.dead.load(Ordering::SeqCst)
+    }
+
+    /// Live [`ServerStats`] snapshot, refreshed by the batcher once per
+    /// scheduling round — unlike [`Server::shutdown`], this answers while
+    /// generation is in flight (the HTTP `/v1/stats` endpoint). The
+    /// snapshot's latency vector holds only the trailing
+    /// [`LIVE_LATENCY_WINDOW`] completions, so its percentiles read
+    /// recent traffic; the shutdown stats keep the full history.
+    pub fn stats(&self) -> ServerStats {
+        self.shared.live.lock().unwrap().clone()
+    }
+
+    /// Requests admitted but not yet mapped onto a KV lane.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
     }
 
     /// Stop the batcher (after draining in-flight and queued work) and
@@ -321,7 +615,9 @@ fn context_window(act: &Active, seq: usize) -> Vec<i32> {
 
 /// Sample one token from `logits` for `act`, then either complete the
 /// request (send the [`Completion`], free the cache lane, return `None`)
-/// or hand the still-active request back.
+/// or hand the still-active request back. A cancelled request — or one
+/// whose stream receiver disappeared — is abandoned here: lane freed, no
+/// completion sent, sender dropped so receivers disconnect.
 fn settle(
     mut act: Active,
     logits: &[f32],
@@ -329,15 +625,25 @@ fn settle(
     slot: usize,
     stats: &mut ServerStats,
 ) -> Option<Active> {
+    if act.cancel.is_cancelled() {
+        cache.reset(slot);
+        stats.cancelled += 1;
+        return None;
+    }
     let tok = softmax_sample(logits, act.req.temperature, act.req.seed, act.steps);
     act.generated.push(tok);
     act.steps += 1;
     stats.tokens_generated += 1;
+    if !act.sink.token(act.req.id, act.generated.len() - 1, tok) {
+        cache.reset(slot);
+        stats.cancelled += 1;
+        return None;
+    }
     if act.generated.len() >= act.req.max_new_tokens {
         let latency = act.submitted.elapsed().as_secs_f64();
         stats.latencies.push(latency);
         stats.completions += 1;
-        let _ = act.done_tx.send(Completion {
+        act.sink.done(Completion {
             id: act.req.id,
             tokens: act.generated,
             latency_secs: latency,
@@ -357,38 +663,70 @@ fn batcher_loop(
 ) -> Result<ServerStats> {
     let m = &mrt.manifest;
     let (batch, seq, vocab) = (m.eval_batch, m.seq_len, m.vocab);
+    shared.vocab.store(vocab, Ordering::SeqCst);
     let mut cache = mrt.new_kv_cache(batch);
     let mut lanes: Vec<Option<Active>> = (0..batch).map(|_| None).collect();
     let mut stats = ServerStats::default();
     let start = Instant::now();
 
     loop {
+        // ---- free lanes whose requests were cancelled since last round
+        // (dropped HTTP connections land here): reset the KV lane so the
+        // admission pass below can hand it to the next request
+        for slot in 0..batch {
+            let cancelled = lanes[slot].as_ref().is_some_and(|a| a.cancel.is_cancelled());
+            if cancelled {
+                lanes[slot] = None;
+                cache.reset(slot);
+                stats.cancelled += 1;
+            }
+        }
+
         // ---- admit queued requests into free lanes: one prefill each,
         // which also yields the request's first token
-        for slot in 0..batch {
+        'slots: for slot in 0..batch {
             if lanes[slot].is_some() {
                 continue;
             }
-            let Some(act) = shared.queue.lock().unwrap().pop_front() else {
+            loop {
+                let Some(act) = shared.queue.lock().unwrap().pop_front() else {
+                    break 'slots;
+                };
+                // cancelled while queued: drop without model work
+                if act.cancel.is_cancelled() {
+                    stats.cancelled += 1;
+                    continue;
+                }
+                // Backstop for the race in `Server::admit` before the
+                // vocabulary is published: an out-of-vocab prompt must
+                // never reach `prefill` (its error would kill the
+                // batcher). Dropping the sink disconnects the receiver.
+                if act.req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
+                    stats.cancelled += 1;
+                    continue;
+                }
+                let window = context_window(&act, seq);
+                let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
+                stats.batch_steps += 1;
+                stats.total_rows += 1;
+                stats.prefill_tokens += window.len();
+                lanes[slot] = settle(act, &logits, &mut cache, slot, &mut stats);
                 break;
-            };
-            let window = context_window(&act, seq);
-            let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
-            stats.batch_steps += 1;
-            stats.total_rows += 1;
-            stats.prefill_tokens += window.len();
-            lanes[slot] = settle(act, &logits, &mut cache, slot, &mut stats);
+            }
         }
 
         // ---- idle: wait for work or shutdown
         if lanes.iter().all(|l| l.is_none()) {
+            publish_stats(shared, &mut stats, start);
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if !q.is_empty() {
                     break;
                 }
                 if *shared.shutdown.lock().unwrap() {
+                    drop(q);
                     stats.wall_secs = start.elapsed().as_secs_f64();
+                    publish_stats(shared, &mut stats, start);
                     return Ok(stats);
                 }
                 let (guard, _) = shared
@@ -405,6 +743,11 @@ fn batcher_loop(
         // stale by construction; in-window lanes stay on the fast path)
         for slot in 0..batch {
             let Some(act) = lanes[slot].take() else { continue };
+            if act.cancel.is_cancelled() {
+                cache.reset(slot);
+                stats.cancelled += 1;
+                continue;
+            }
             if !cache.is_full(slot) {
                 lanes[slot] = Some(act);
                 continue;
@@ -437,7 +780,39 @@ fn batcher_loop(
                 lanes[slot] = settle(act, logits, &mut cache, slot, &mut stats);
             }
         }
+
+        publish_stats(shared, &mut stats, start);
     }
+}
+
+/// Completed-request latencies retained in the **live** snapshot (the
+/// full history stays in the batcher-local stats returned by
+/// [`Server::shutdown`]). Bounding the snapshot keeps the per-round
+/// publish O(window) instead of O(total completions) — the batcher
+/// republishes once per scheduling round, which is roughly once per
+/// generated token.
+pub const LIVE_LATENCY_WINDOW: usize = 512;
+
+/// Refresh the shared live snapshot. Cheap by construction: every field
+/// is a counter except the latency vector, which is truncated to the
+/// trailing [`LIVE_LATENCY_WINDOW`] entries (so live p50/p95 are over
+/// recent traffic — the more useful operational read anyway).
+fn publish_stats(shared: &Shared, stats: &mut ServerStats, start: Instant) {
+    stats.wall_secs = start.elapsed().as_secs_f64();
+    let from = stats.latencies.len().saturating_sub(LIVE_LATENCY_WINDOW);
+    let snap = ServerStats {
+        completions: stats.completions,
+        batch_steps: stats.batch_steps,
+        total_rows: stats.total_rows,
+        tokens_generated: stats.tokens_generated,
+        prefill_tokens: stats.prefill_tokens,
+        decode_steps: stats.decode_steps,
+        window_slides: stats.window_slides,
+        cancelled: stats.cancelled,
+        latencies: stats.latencies[from..].to_vec(),
+        wall_secs: stats.wall_secs,
+    };
+    *shared.live.lock().unwrap() = snap;
 }
 
 #[cfg(test)]
@@ -460,6 +835,44 @@ mod tests {
         let b = softmax_sample(&logits, 1.0, 42, 3);
         assert_eq!(a, b);
         assert!((0..16).contains(&a));
+    }
+
+    #[test]
+    fn sampling_all_equal_logits_covers_range() {
+        // all-equal logits: every index must be reachable, none preferred
+        let logits = vec![1.5f32; 8];
+        let mut seen = [false; 8];
+        for seed in 0..256u64 {
+            seen[softmax_sample(&logits, 0.7, seed, 0) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform sampling missed an index: {seen:?}");
+    }
+
+    #[test]
+    fn sampling_neg_inf_logits_never_panics() {
+        // all -inf: no softmax exists; must fall back to greedy, not panic
+        let all = vec![f32::NEG_INFINITY; 4];
+        assert_eq!(softmax_sample(&all, 1.0, 7, 2), 0);
+        // one finite survivor among -inf gets all the mass
+        let mut one = vec![f32::NEG_INFINITY; 5];
+        one[3] = 0.25;
+        for seed in 0..32u64 {
+            assert_eq!(softmax_sample(&one, 1.0, seed, 1), 3);
+        }
+        // NaN entries must never be selected
+        let with_nan = vec![f32::NAN, 1.0, f32::NAN, 0.5];
+        for seed in 0..32u64 {
+            let t = softmax_sample(&with_nan, 1.0, seed, 0);
+            assert!(t == 1 || t == 3, "picked NaN logit at index {t}");
+        }
+    }
+
+    #[test]
+    fn sampling_near_zero_temperature_is_argmax() {
+        let logits = vec![0.1f32, 2.0, -1.0, 1.9];
+        for seed in 0..32u64 {
+            assert_eq!(softmax_sample(&logits, 1e-30, seed, 0), 1);
+        }
     }
 
     fn packed_fixture(
@@ -549,6 +962,9 @@ mod tests {
         }
         assert!(!server.is_running(), "worker should have died");
         assert!(server.submit(vec![1], 3, 0.0, 0).is_err());
+        // even the no-model-work fast path must refuse (NotAccepting)
+        assert!(server.submit(vec![1], 0, 0.0, 0).is_err());
+        assert!(server.submit_streaming(vec![1], 0, 0.0, 0).is_err());
         // shutdown surfaces the factory error instead of stats
         assert!(server.shutdown().is_err());
     }
@@ -586,5 +1002,174 @@ mod tests {
         assert!((s.mean_batch_occupancy(4) - 0.75).abs() < 1e-12);
         assert!((s.throughput_tok_s() - 20.0).abs() < 1e-12);
         assert!(s.p95_latency() >= s.p50_latency());
+    }
+
+    #[test]
+    fn stats_percentiles_tolerate_empty_and_single() {
+        // the live snapshot is polled before any completion exists: the
+        // percentile helpers must not panic on empty latency vectors
+        let empty = ServerStats::default();
+        assert_eq!(empty.p50_latency(), 0.0);
+        assert_eq!(empty.p95_latency(), 0.0);
+        assert_eq!(empty.throughput_tok_s(), 0.0);
+        assert_eq!(empty.mean_batch_occupancy(4), 0.0);
+        let one = ServerStats { latencies: vec![0.25], ..Default::default() };
+        assert_eq!(one.p50_latency(), 0.25);
+        assert_eq!(one.p95_latency(), 0.25);
+    }
+
+    #[test]
+    fn streaming_tokens_match_nonstreamed_completion() {
+        let (manifest, params, packed) = packed_fixture("serve-stream", 8, 2, 41);
+        let server = Server::start_native_packed(manifest, params, packed);
+        // greedy: both paths must walk the identical token sequence
+        let (_, rx) = server.submit(vec![5, 6, 7], 5, 0.0, 0).unwrap();
+        let want = rx.recv().unwrap().tokens;
+
+        let handle = server.submit_streaming(vec![5, 6, 7], 5, 0.0, 0).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        for ev in handle.events.iter() {
+            match ev {
+                StreamEvent::Token { index, token, id } => {
+                    assert_eq!(id, handle.id);
+                    assert_eq!(index, streamed.len(), "events must arrive in order");
+                    streamed.push(token);
+                }
+                StreamEvent::Done(c) => {
+                    done = Some(c);
+                    break;
+                }
+            }
+        }
+        let done = done.expect("stream must end with Done");
+        assert_eq!(done.tokens, streamed, "Done must carry the streamed tokens");
+        assert_eq!(streamed, want, "streamed != non-streamed for greedy sampling");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn streaming_zero_tokens_is_immediate_done() {
+        let (manifest, params, packed) = packed_fixture("serve-stream0", 8, 1, 43);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let handle = server.submit_streaming(vec![1], 0, 0.0, 0).unwrap();
+        match handle.events.recv().unwrap() {
+            StreamEvent::Done(c) => assert!(c.tokens.is_empty()),
+            ev => panic!("expected immediate Done, got {ev:?}"),
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cancellation_frees_the_lane() {
+        // single lane; first request would generate (effectively) forever
+        let (manifest, params, packed) = packed_fixture("serve-cancel", 8, 1, 47);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let handle = server.submit_streaming(vec![1, 2], 1_000_000, 0.5, 3).unwrap();
+        // wait until it owns the lane (first token proves prefill ran)
+        let first = handle.events.recv_timeout(std::time::Duration::from_secs(30));
+        assert!(first.is_ok(), "first token never arrived");
+        handle.cancel.cancel();
+        // the lane must come free: a second request admits and completes
+        let (_, rx) = server.submit(vec![3, 4], 3, 0.0, 0).unwrap();
+        let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c.tokens.len(), 3);
+        // the cancelled stream disconnects without a Done
+        loop {
+            match handle.events.recv_timeout(std::time::Duration::from_secs(30)) {
+                Ok(StreamEvent::Done(_)) => panic!("cancelled request must not complete"),
+                Ok(StreamEvent::Token { .. }) => continue,
+                Err(_) => break, // disconnected (or drained): cancelled
+            }
+        }
+        let stats = server.shutdown().unwrap();
+        assert!(stats.cancelled >= 1, "cancellation must be counted");
+        assert_eq!(stats.completions, 1);
+    }
+
+    #[test]
+    fn dropping_stream_receiver_cancels() {
+        let (manifest, params, packed) = packed_fixture("serve-droprx", 8, 1, 53);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let handle = server.submit_streaming(vec![9], 1_000_000, 0.3, 1).unwrap();
+        // receiving one token proves the request owns the lane; then drop
+        // the receiver without cancelling explicitly
+        assert!(handle.events.recv_timeout(std::time::Duration::from_secs(30)).is_ok());
+        drop(handle);
+        let (_, rx) = server.submit(vec![2], 2, 0.0, 0).unwrap();
+        let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c.tokens.len(), 2);
+        let stats = server.shutdown().unwrap();
+        assert!(stats.cancelled >= 1);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let (manifest, params, packed) = packed_fixture("serve-429", 8, 1, 59);
+        let server = Server::start_native_packed_with(
+            manifest,
+            params,
+            packed,
+            ServeConfig { max_queue: 1 },
+        );
+        // A occupies the single lane (first token proves it left the queue)
+        let a = server.submit_streaming(vec![1], 1_000_000, 0.4, 2).unwrap();
+        assert!(a.events.recv_timeout(std::time::Duration::from_secs(30)).is_ok());
+        // B fills the queue; C must be refused, not silently queued
+        let b = server.submit(vec![2], 2, 0.0, 0).unwrap();
+        let c = server.submit(vec![3], 2, 0.0, 0);
+        assert_eq!(c.unwrap_err(), AdmitError::QueueFull);
+        assert_eq!(server.queue_depth(), 1, "rejected request must not be queued");
+        // free the lane: B drains
+        a.cancel.cancel();
+        let done = b.1.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(done.tokens.len(), 2);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn live_stats_update_mid_flight() {
+        let (manifest, params, packed) = packed_fixture("serve-live", 8, 1, 61);
+        let server = Server::start_native_packed(manifest, params, packed);
+        let handle = server.submit_streaming(vec![4, 5], 1_000_000, 0.6, 9).unwrap();
+        // after a few tokens the live snapshot must show progress even
+        // though nothing has completed
+        for _ in 0..3 {
+            assert!(handle.events.recv_timeout(std::time::Duration::from_secs(30)).is_ok());
+        }
+        let mut live = server.stats();
+        for _ in 0..200 {
+            if live.tokens_generated > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            live = server.stats();
+        }
+        assert!(live.tokens_generated > 0, "live stats never reflected progress");
+        assert_eq!(live.completions, 0);
+        handle.cancel.cancel();
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn out_of_vocab_prompt_is_refused_not_fatal() {
+        let (manifest, params, packed) = packed_fixture("serve-vocab", 8, 1, 67);
+        let server = Server::start_native_packed(manifest, params, packed);
+        // a served request proves the batcher is up (vocab published)
+        let (_, rx) = server.submit(vec![1], 1, 0.0, 0).unwrap();
+        rx.recv().unwrap();
+        // vocab is 256 in the fixture: token 300 can never be embedded
+        match server.submit(vec![300], 4, 0.0, 0) {
+            Err(AdmitError::InvalidRequest(_)) => {}
+            other => panic!("expected InvalidRequest, got {:?}", other.map(|(id, _)| id)),
+        }
+        assert_eq!(
+            server.submit(vec![-1], 4, 0.0, 0).unwrap_err(),
+            AdmitError::InvalidRequest("prompt token -1 outside vocabulary 0..256".into())
+        );
+        // the server survived: valid traffic still flows
+        let (_, rx) = server.submit(vec![2], 2, 0.0, 0).unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 2);
+        server.shutdown().unwrap();
     }
 }

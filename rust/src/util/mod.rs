@@ -119,13 +119,15 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy. Total
+/// panic-free: empty input yields 0.0 and the sort uses `total_cmp`, so a
+/// stray NaN cannot abort a stats endpoint mid-request.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[idx.min(v.len() - 1)]
 }
@@ -155,6 +157,28 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!(std_dev(&xs) > 0.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_single_do_not_panic() {
+        // the serve stats path hits these shapes before any completion
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[0.7], 0.0), 0.7);
+        assert_eq!(percentile(&[0.7], 50.0), 0.7);
+        assert_eq!(percentile(&[0.7], 100.0), 0.7);
+        // NaN must not abort the sort (total order puts it last)
+        let with_nan = [0.2, f64::NAN, 0.1];
+        assert_eq!(percentile(&with_nan, 0.0), 0.1);
+        assert!(mean(&[]) == 0.0 && std_dev(&[1.0]) == 0.0);
+    }
+
+    #[test]
+    fn argmax_edge_cases() {
+        assert_eq!(argmax(&[]), 0, "empty slice defaults to 0");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        assert_eq!(argmax(&[f32::NAN, 1.0, f32::NAN]), 1, "NaN never selected");
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0, "first occurrence wins ties");
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Loopback integration tests for the HTTP serving front-end (ISSUE 3):
+//! a real `TcpListener` on an ephemeral port, real sockets, the packed
+//! native demo model behind the batcher — no mocks anywhere.
+//!
+//! The wall, in order:
+//! (a) greedy generation over `POST /v1/generate` is bit-identical to
+//!     in-process `Server::submit`;
+//! (b) streamed chunks reassemble to exactly the non-streamed response;
+//! (c) a full admission queue answers 429 and does NOT silently queue;
+//! (d) dropping the client connection mid-generation frees the KV lane
+//!     (the next request admits);
+//! (e) `/healthz` and `/v1/stats` answer while generation is in flight;
+//! plus protocol-robustness cases (bad JSON, bad routes, oversized
+//! bodies, out-of-vocab prompts) that must map to clean 4xx responses.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use raana::json;
+use raana::model::synthetic_manifest;
+use raana::net::{http_request, HttpConfig, HttpServer};
+use raana::quant::{LayerCalib, TrickConfig};
+use raana::runtime::{native_init, PackedLayers};
+use raana::serve::{ServeConfig, Server};
+
+/// Packed demo fixture (mirrors `serve::tests::packed_fixture`): vocab
+/// 256, tiny dims so generation is fast, `eval_batch` KV lanes.
+fn packed_server(name: &str, seq_len: usize, eval_batch: usize, cfg: ServeConfig) -> Arc<Server> {
+    let manifest = synthetic_manifest(name, 32, 1, 2, 64, seq_len, 256, eval_batch);
+    let params = native_init(&manifest, 17);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1,
+    )
+    .unwrap();
+    Arc::new(Server::start_native_packed_with(manifest, params, packed, cfg))
+}
+
+/// Bind with the `max_new_tokens` clamp lifted: the lane-pinning tests
+/// rely on effectively-endless generations, which the default cap
+/// (correctly) prevents.
+fn bind_uncapped(server: &Arc<Server>, workers: usize) -> HttpServer {
+    HttpServer::bind_with(
+        Arc::clone(server),
+        "127.0.0.1:0",
+        HttpConfig { workers, max_new_tokens_cap: usize::MAX },
+    )
+    .unwrap()
+}
+
+fn shutdown_all(http: HttpServer, server: Arc<Server>) -> raana::serve::ServerStats {
+    http.shutdown().unwrap();
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown().unwrap(),
+        Err(_) => panic!("server still referenced after HTTP shutdown"),
+    }
+}
+
+fn generate_body(prompt: &[i32], max_new_tokens: usize, stream: bool) -> String {
+    format!(
+        "{{\"prompt\":{:?},\"max_new_tokens\":{max_new_tokens},\"temperature\":0,\
+         \"seed\":0,\"stream\":{stream}}}",
+        prompt
+    )
+}
+
+/// Block until the batcher has sampled at least `min_tokens` (proof that a
+/// request owns a KV lane and is generating, not merely queued — the HTTP
+/// response head is written at submission time, so reading it proves
+/// nothing about lane ownership).
+fn wait_generating(server: &Server, min_tokens: usize) {
+    for _ in 0..6000 {
+        if server.stats().tokens_generated >= min_tokens {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("server never started generating");
+}
+
+fn tokens_of(v: &json::Value) -> Vec<i32> {
+    v.get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_f64())
+        .map(|f| f as i32)
+        .collect()
+}
+
+// ------------------------------------------------------------- (a) parity
+
+#[test]
+fn http_greedy_generation_matches_in_process_submit() {
+    let server = packed_server("http-parity", 8, 2, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+
+    let prompt = vec![10i32, 20, 30];
+    // in-process reference (greedy: deterministic, so ids don't matter)
+    let (_, rx) = server.submit(prompt.clone(), 6, 0.0, 0).unwrap();
+    let want = rx.recv().unwrap().tokens;
+
+    let resp =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&prompt, 6, false)))
+            .unwrap();
+    assert_eq!(resp.status, 200, "body: {:?}", resp.body_str());
+    let v = resp.json().unwrap();
+    assert_eq!(
+        tokens_of(&v),
+        want,
+        "HTTP greedy generation must be bit-identical to Server::submit"
+    );
+    assert_eq!(v.req_usize("steps").unwrap(), 6);
+    assert!(v.req("latency_secs").unwrap().as_f64().unwrap() >= 0.0);
+
+    let stats = shutdown_all(http, server);
+    assert_eq!(stats.completions, 2);
+}
+
+// --------------------------------------------------- (b) stream reassembly
+
+#[test]
+fn streamed_chunks_reassemble_to_nonstreamed_response() {
+    let server = packed_server("http-stream", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+    let prompt = vec![5i32, 6, 7];
+
+    let plain =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&prompt, 5, false)))
+            .unwrap();
+    assert_eq!(plain.status, 200);
+    let want = tokens_of(&plain.json().unwrap());
+    assert_eq!(want.len(), 5);
+
+    let streamed =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&prompt, 5, true)))
+            .unwrap();
+    assert_eq!(streamed.status, 200);
+    // one chunk per token event + one final done chunk
+    assert_eq!(streamed.chunks.len(), 6, "5 token events + done");
+    let mut from_events = Vec::new();
+    let mut done_tokens = None;
+    for (i, chunk) in streamed.chunks.iter().enumerate() {
+        let line = std::str::from_utf8(chunk).unwrap();
+        let v = json::parse(line.trim_end()).unwrap();
+        if v.get("done").is_some() {
+            assert_eq!(i, streamed.chunks.len() - 1, "done must be the last chunk");
+            done_tokens = Some(tokens_of(&v));
+        } else {
+            assert_eq!(v.req_usize("index").unwrap(), from_events.len());
+            from_events.push(v.req("token").unwrap().as_f64().unwrap() as i32);
+        }
+    }
+    assert_eq!(from_events, want, "streamed tokens != non-streamed tokens");
+    assert_eq!(done_tokens.expect("final done chunk"), want);
+
+    shutdown_all(http, server);
+}
+
+// ------------------------------------------------------ (c) 429 backpressure
+
+#[test]
+fn full_admission_queue_answers_429_and_does_not_queue() {
+    // one lane, queue capacity 1
+    let server = packed_server("http-429", 8, 1, ServeConfig { max_queue: 1 });
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    // occupy the lane with an effectively-endless streamed request; the
+    // first chunk proves it was admitted out of the queue
+    let mut lane = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[1], 1_000_000, true);
+    write!(
+        lane,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    lane.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut first = [0u8; 1];
+    lane.read_exact(&mut first).unwrap(); // response started
+    wait_generating(&server, 1); // and the request owns the lane
+
+    // fill the queue (in-process, so it stays queued behind the lane)
+    let queued = server.submit(vec![2], 2, 0.0, 0).unwrap();
+    assert_eq!(server.queue_depth(), 1);
+
+    // over HTTP: the third request must be refused with 429...
+    let resp =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[3], 2, false)))
+            .unwrap();
+    assert_eq!(resp.status, 429, "body: {:?}", resp.body_str());
+    assert!(resp.body_str().unwrap().contains("queue"), "{:?}", resp.body_str());
+    // ...and NOT silently queued
+    assert_eq!(server.queue_depth(), 1, "rejected request must not enter the queue");
+
+    // free the lane (client disconnect) so shutdown can drain
+    drop(lane);
+    let queued_done = queued.1.recv_timeout(Duration::from_secs(60));
+    assert!(queued_done.is_ok(), "queued request must complete once the lane frees");
+    let stats = shutdown_all(http, server);
+    assert!(stats.cancelled >= 1, "dropped lane connection must count as cancelled");
+}
+
+// -------------------------------------------- (d) disconnect frees the lane
+
+#[test]
+fn dropping_client_connection_mid_generation_frees_the_lane() {
+    let server = packed_server("http-drop", 8, 1, ServeConfig::default());
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    // start an effectively-endless streamed generation, read a few bytes
+    // of it (it is really running), then drop the socket
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[9, 8], 1_000_000, true);
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut some = [0u8; 64];
+    conn.read_exact(&mut some).unwrap();
+    wait_generating(&server, 1);
+    drop(conn);
+
+    // the single lane must come free: a fresh request completes. The
+    // server only notices at its next chunk write, so allow retries on
+    // queueing but insist the whole thing resolves.
+    let resp =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[4, 5], 3, false)))
+            .unwrap();
+    assert_eq!(resp.status, 200, "body: {:?}", resp.body_str());
+    assert_eq!(tokens_of(&resp.json().unwrap()).len(), 3);
+
+    let stats = shutdown_all(http, server);
+    assert!(stats.cancelled >= 1, "disconnect must cancel, got {stats:?}");
+    assert_eq!(stats.completions, 1);
+}
+
+#[test]
+fn dropping_nonstreaming_client_also_frees_the_lane() {
+    // non-streaming responses write nothing until completion, so the
+    // disconnect is detected by the EOF probe rather than a chunk write
+    let server = packed_server("http-drop-plain", 8, 1, ServeConfig::default());
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    let conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[3, 1], 1_000_000, false);
+    write!(
+        &conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    wait_generating(&server, 1);
+    drop(conn);
+
+    let resp =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[6], 2, false)))
+            .unwrap();
+    assert_eq!(resp.status, 200, "body: {:?}", resp.body_str());
+    let stats = shutdown_all(http, server);
+    assert!(stats.cancelled >= 1, "EOF probe must cancel, got {stats:?}");
+    assert_eq!(stats.completions, 1);
+}
+
+#[test]
+fn busy_worker_pool_refuses_generate_but_keeps_cheap_endpoints() {
+    // a single connection worker, pinned by an endless stream: further
+    // generate requests must get a real 503 (never silent pool queueing),
+    // while /healthz and /v1/stats keep answering via overflow handlers —
+    // liveness probes must not fail on a busy-but-healthy server
+    let server = packed_server("http-busy", 8, 2, ServeConfig::default());
+    let http = bind_uncapped(&server, 1);
+    let addr = http.local_addr().to_string();
+
+    let conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[2], 1_000_000, true);
+    write!(
+        &conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    wait_generating(&server, 1);
+
+    let refused =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[4], 2, false)))
+            .unwrap();
+    assert_eq!(refused.status, 503, "pinned pool must refuse generation");
+    let health = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200, "liveness must survive a pinned pool");
+    let stats = http_request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(stats.status, 200, "stats must survive a pinned pool");
+
+    // freeing the worker restores generation (detection happens at the
+    // next chunk write, so poll)
+    drop(conn);
+    let mut ok = false;
+    for _ in 0..600 {
+        let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[5], 1, false)));
+        if matches!(r, Ok(ref resp) if resp.status == 200) {
+            ok = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(ok, "worker never came back after client disconnect");
+    shutdown_all(http, server);
+}
+
+#[test]
+fn max_new_tokens_is_clamped_server_side() {
+    let server = packed_server("http-cap", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind_with(
+        Arc::clone(&server),
+        "127.0.0.1:0",
+        HttpConfig { workers: 2, max_new_tokens_cap: 5 },
+    )
+    .unwrap();
+    let addr = http.local_addr().to_string();
+    // a request asking for a billion tokens completes with the cap's worth
+    let body = generate_body(&[1, 2], 1_000_000_000, false);
+    let resp = http_request(&addr, "POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(resp.status, 200, "body: {:?}", resp.body_str());
+    assert_eq!(tokens_of(&resp.json().unwrap()).len(), 5, "generation must be clamped");
+    let stats = shutdown_all(http, server);
+    assert_eq!(stats.completions, 1);
+}
+
+// ------------------------------------------- (e) health + stats in flight
+
+#[test]
+fn healthz_and_stats_respond_while_generation_is_in_flight() {
+    let server = packed_server("http-live", 8, 1, ServeConfig::default());
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    // pin the lane with a long streamed generation
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[7], 1_000_000, true);
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut some = [0u8; 64];
+    conn.read_exact(&mut some).unwrap();
+
+    let health = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200);
+    let hv = health.json().unwrap();
+    assert_eq!(hv.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(hv.get("running").unwrap().as_bool(), Some(true));
+
+    // stats must show live progress: tokens generated, zero completions
+    let mut live_tokens = 0usize;
+    for _ in 0..100 {
+        let stats = http_request(&addr, "GET", "/v1/stats", None).unwrap();
+        assert_eq!(stats.status, 200);
+        let sv = stats.json().unwrap();
+        assert_eq!(sv.req_usize("completions").unwrap(), 0);
+        live_tokens = sv.req_usize("tokens_generated").unwrap();
+        if live_tokens > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(live_tokens > 0, "/v1/stats never showed in-flight progress");
+
+    drop(conn);
+    shutdown_all(http, server);
+}
+
+// ------------------------------------------------- protocol robustness wall
+
+#[test]
+fn hostile_requests_get_clean_4xx_responses() {
+    let server = packed_server("http-hostile", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+
+    // malformed JSON body
+    let r = http_request(&addr, "POST", "/v1/generate", Some("{not json")).unwrap();
+    assert_eq!(r.status, 400);
+    // nesting bomb flows through the hardened parser as a 400, not a crash
+    let bomb = "[".repeat(50_000);
+    let r = http_request(&addr, "POST", "/v1/generate", Some(&bomb)).unwrap();
+    assert_eq!(r.status, 400);
+    // wrong types
+    let r = http_request(&addr, "POST", "/v1/generate", Some("{\"prompt\":\"hi\"}")).unwrap();
+    assert_eq!(r.status, 400);
+    // out-of-vocab prompt token: refused, and the server survives
+    let r = http_request(&addr, "POST", "/v1/generate", Some("{\"prompt\":[70000]}")).unwrap();
+    assert_eq!(r.status, 400, "body: {:?}", r.body_str());
+    // unknown route / method
+    let r = http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(r.status, 404);
+    let r = http_request(&addr, "DELETE", "/v1/generate", None).unwrap();
+    assert_eq!(r.status, 405);
+    // raw garbage instead of HTTP
+    {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.write_all(b"\x00\x01\x02 garbage\r\n\r\n").unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut out = Vec::new();
+        let _ = conn.read_to_end(&mut out); // server answers 400 or closes
+    }
+    // oversized declared body
+    {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        write!(
+            conn,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 999999999\r\n\r\n"
+        )
+        .unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let resp = raana::net::read_response(&conn).unwrap();
+        assert_eq!(resp.status, 413, "over-cap body is Payload Too Large, not generic 400");
+    }
+
+    // after all of that the server still serves valid traffic
+    let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[1, 2], 2, false)))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(tokens_of(&r.json().unwrap()).len(), 2);
+
+    let stats = shutdown_all(http, server);
+    assert_eq!(stats.completions, 1);
+}
+
+#[test]
+fn zero_max_new_tokens_over_http_is_empty_completion() {
+    let server = packed_server("http-zero", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+    let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[1], 0, false)))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    assert!(tokens_of(&r.json().unwrap()).is_empty());
+    // streaming flavor: a single done chunk
+    let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[1], 0, true)))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.chunks.len(), 1);
+    let v = json::parse(std::str::from_utf8(&r.chunks[0]).unwrap().trim_end()).unwrap();
+    assert_eq!(v.get("done").unwrap().as_bool(), Some(true));
+    shutdown_all(http, server);
+}
