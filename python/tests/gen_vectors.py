@@ -155,12 +155,200 @@ def gen_attend():
     return {"kernel": "attend_cached", "cases": cases}
 
 
+# --------------------------------------------------- kvq: quantize + attend
+
+def floor_pow2(n):
+    """Largest power of two <= n (mirror of hadamard::floor_pow2)."""
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def practical_rht_f32(values, signs1, signs2):
+    """Mirror of `hadamard::PracticalRht::apply` in strict f32: RHT (sign
+    multiply, then the orthonormal FWHT) over the first d_hat entries, then
+    over the last d_hat entries (windows overlap when d is not a power of
+    2; signs2 is empty when it is). Single IEEE f32 op per output per
+    stage, same order as the Rust butterfly — bit-exact by construction."""
+    x = np.asarray(values, dtype=np.float32).copy()
+    d = x.size
+    d_hat = len(signs1)
+
+    def rht_window(seg, signs):
+        seg = (seg * np.asarray(signs, dtype=np.float32)).astype(np.float32)
+        return np.asarray(fwht_f32(seg), dtype=np.float32)
+
+    x[:d_hat] = rht_window(x[:d_hat], signs1)
+    if signs2:
+        x[d - d_hat:] = rht_window(x[d - d_hat:], signs2)
+    return x
+
+
+def round_half_away_f32(s):
+    """f32 round-half-away-from-zero for non-negative inputs (mirror of
+    Rust `f32::round` on the quantizer's shifted values, which are always
+    >= 0 under max-abs scaling). `s - floor(s)` is exact in f32 for the
+    magnitudes here (< 2^23), so the half test is exact."""
+    s = np.asarray(s, dtype=np.float32)
+    fl = np.floor(s).astype(np.float32)
+    frac = (s - fl).astype(np.float32)
+    return np.where(frac >= np.float32(0.5), fl + np.float32(1.0), fl).astype(np.float32)
+
+
+def rabitq_quantize_maxabs_f32(seg, bits):
+    """Mirror of `rabitq::quantize_column_into` at ScaleMode::MaxAbs:
+    strict-f32 code arithmetic (scale, shift, round, clamp — one IEEE op
+    each, same order as Rust), f64 accumulation for the least-squares
+    rescale. Returns (codes as ints, r as an f32-rounded float)."""
+    x = np.asarray(seg, dtype=np.float32)
+    cb = np.float32((2 ** bits - 1) / 2.0)
+    maxv = np.float32(2 ** bits - 1)
+    maxabs = np.float32(np.max(np.abs(x))) if x.size else np.float32(0.0)
+    if maxabs == np.float32(0.0):
+        return [int(np.floor(cb))] * x.size, 0.0
+    base_t = np.float32(maxabs / cb)
+    inv_t = np.float32(np.float32(1.0) / base_t)
+    codes = []
+    vq = 0.0
+    qq = 0.0
+    for xi in x:
+        s = np.float32(np.float32(xi * inv_t) + cb)
+        code = float(np.clip(round_half_away_f32(s), np.float32(0.0), maxv))
+        qf = np.float32(np.float32(code) - cb)
+        vq += float(xi) * float(qf)
+        qq += float(qf) * float(qf)
+        codes.append(int(code))
+    r = f32(vq / qq) if qq > 0.0 else 0.0
+    return codes, r
+
+
+def fwht_f64(values):
+    """Orthonormal FWHT in float64 (reference side of the attend mirror)."""
+    x = np.asarray(values, dtype=np.float64).copy()
+    d = x.size
+    h = 1
+    while h < d:
+        x = x.reshape(-1, 2 * h)
+        a = x[:, :h].copy()
+        b = x[:, h:].copy()
+        x[:, :h] = a + b
+        x[:, h:] = a - b
+        x = x.reshape(-1)
+        h *= 2
+    return x / np.sqrt(d)
+
+
+def practical_rht_inv_f64(values, signs1, signs2):
+    """Float64 inverse of the practical RHT (window 2 first, then 1;
+    inverse RHT = FWHT then sign multiply)."""
+    x = np.asarray(values, dtype=np.float64).copy()
+    d = x.size
+    d_hat = len(signs1)
+    if signs2:
+        seg = fwht_f64(x[d - d_hat:]) * np.asarray(signs2, dtype=np.float64)
+        x[d - d_hat:] = seg
+    x[:d_hat] = fwht_f64(x[:d_hat]) * np.asarray(signs1, dtype=np.float64)
+    return x
+
+
+def kvq_quantize_rows(rows, ctx, heads, head_dim, bits, signs1, signs2):
+    """Rotate + quantize every (row, head) segment — the
+    `kvq::QuantizedKvStore::store_row` recipe. Returns (codes flat per row,
+    r per (row, head))."""
+    d = heads * head_dim
+    codes = []
+    rs = []
+    for ki in range(ctx):
+        for h in range(heads):
+            seg = rows[ki * d + h * head_dim:ki * d + (h + 1) * head_dim]
+            rot = practical_rht_f32(seg, signs1, signs2)
+            c, r = rabitq_quantize_maxabs_f32(rot, bits)
+            codes.extend(c)
+            rs.append(r)
+    return codes, rs
+
+
+def kvq_attend_ref(q, k_codes, k_r, v_codes, v_r, ctx, heads, head_dim,
+                   k_bits, v_bits, signs1, signs2):
+    """Float64 reference of `kernels::attend_cached_q` given exact codes:
+    rotate q per head (strict f32, like the kernel), estimate scores from
+    K codes, softmax, mix V codes in rotated space, inverse-rotate."""
+    d = heads * head_dim
+    cbk = (2 ** k_bits - 1) / 2.0
+    cbv = (2 ** v_bits - 1) / 2.0
+    out = np.zeros(d)
+    kc = np.asarray(k_codes, dtype=np.float64).reshape(ctx, d)
+    vc = np.asarray(v_codes, dtype=np.float64).reshape(ctx, d)
+    for h in range(heads):
+        sl = slice(h * head_dim, (h + 1) * head_dim)
+        q_rot = practical_rht_f32(np.asarray(q, dtype=np.float32)[sl],
+                                  signs1, signs2).astype(np.float64)
+        qsum = q_rot.sum()
+        rk = np.asarray([k_r[ki * heads + h] for ki in range(ctx)], dtype=np.float64)
+        scores = rk * (kc[:, sl] @ q_rot - cbk * qsum) / np.sqrt(head_dim)
+        w = np.exp(scores - scores.max())
+        w /= w.sum()
+        rv = np.asarray([v_r[ki * heads + h] for ki in range(ctx)], dtype=np.float64)
+        wr = w * rv
+        acc = wr @ vc[:, sl] - cbv * wr.sum()
+        out[sl] = practical_rht_inv_f64(acc, signs1, signs2)
+    return [float(x) for x in out]
+
+
+def gen_kvq():
+    rng = random.Random(0x6B76)
+    cases = []
+    # (heads, head_dim, ctx, k_bits, v_bits): pow2 and non-pow2 head dims
+    # (the latter exercise both practical-RHT windows), plus widths whose
+    # packed rows end mid-byte (unaligned head-dim tails)
+    shapes = (
+        (2, 8, 5, 8, 8),
+        (2, 8, 6, 4, 2),
+        (4, 16, 9, 4, 4),
+        (2, 5, 7, 5, 3),
+        (1, 12, 4, 3, 6),
+    )
+    for heads, head_dim, ctx, k_bits, v_bits in shapes:
+        d = heads * head_dim
+        d_hat = floor_pow2(head_dim)
+        signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+        signs2 = ([] if d_hat == head_dim
+                  else [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)])
+        q = rand_f32_list(rng, d, 1.5)
+        k = rand_f32_list(rng, ctx * d, 1.5)
+        v = rand_f32_list(rng, ctx * d, 1.5)
+        k_codes, k_r = kvq_quantize_rows(k, ctx, heads, head_dim, k_bits, signs1, signs2)
+        v_codes, v_r = kvq_quantize_rows(v, ctx, heads, head_dim, v_bits, signs1, signs2)
+        out = kvq_attend_ref(q, k_codes, k_r, v_codes, v_r, ctx, heads, head_dim,
+                             k_bits, v_bits, signs1, signs2)
+        cases.append({
+            "heads": heads,
+            "head_dim": head_dim,
+            "ctx": ctx,
+            "k_bits": k_bits,
+            "v_bits": v_bits,
+            "signs1": signs1,
+            "signs2": signs2,
+            "q": q,
+            "k": k,
+            "v": v,
+            "k_codes": k_codes,
+            "k_r": k_r,
+            "v_codes": v_codes,
+            "v_r": v_r,
+            "out": out,
+        })
+    return {"kernel": "kvq_attend", "cases": cases}
+
+
 # ----------------------------------------------------------------- harness
 
 GENERATORS = {
     "fwht.json": gen_fwht,
     "decode_codes.json": gen_decode,
     "attend_cached.json": gen_attend,
+    "kvq_attend.json": gen_kvq,
 }
 
 

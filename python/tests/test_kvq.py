@@ -1,0 +1,208 @@
+"""Quantized-KV mirror suite (numpy-only — runs where jax is absent).
+
+The Rust `kvq` subsystem (rotate-per-head → RaBitQ-quantize → pack →
+attend-over-codes) has no rustc in some containers, so its *logic* is
+validated here through the strict-f32 Python mirror in ``gen_vectors.py``
+— the same functions that emit the ``kvq_attend.json`` golden vectors the
+Rust side is pinned against. Three jobs:
+
+1. mirror self-checks: the practical RHT is orthonormal and inverts, the
+   quantizer's rescale is least-squares optimal, reconstruction error
+   decays ~2^-bits;
+2. the accuracy contract of the whole quantize→attend path: **bounded
+   drift** against exact f32/f64 attention at 8 bits and a **monotone
+   2 → 4 → 8-bit quality ladder** (EXPERIMENTS.md §KV compression);
+3. the committed golden vectors are internally consistent (softmax
+   weights well-formed, codes in range), so a bad generator cannot pin a
+   bad kernel.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import gen_vectors as gv
+
+VEC = gv.VECTOR_DIR
+
+
+def _mk_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _rand_f32(rng, n, scale=1.5):
+    return [gv.f32(x) for x in rng.uniform(-scale, scale, size=n)]
+
+
+def _signs(rng, head_dim):
+    d_hat = gv.floor_pow2(head_dim)
+    signs1 = [float(s) for s in rng.choice((-1.0, 1.0), size=d_hat)]
+    signs2 = ([] if d_hat == head_dim
+              else [float(s) for s in rng.choice((-1.0, 1.0), size=d_hat)])
+    return signs1, signs2
+
+
+def _attend_exact(q, k, v, ctx, heads, head_dim):
+    """Exact (float64) multi-head attention over the raw rows."""
+    d = heads * head_dim
+    q = np.asarray(q, dtype=np.float64)
+    k = np.asarray(k, dtype=np.float64).reshape(ctx, d)
+    v = np.asarray(v, dtype=np.float64).reshape(ctx, d)
+    out = np.zeros(d)
+    for h in range(heads):
+        sl = slice(h * head_dim, (h + 1) * head_dim)
+        s = k[:, sl] @ q[sl] / np.sqrt(head_dim)
+        w = np.exp(s - s.max())
+        w /= w.sum()
+        out[sl] = w @ v[:, sl]
+    return out
+
+
+def _attend_quantized(q, k, v, ctx, heads, head_dim, bits, signs1, signs2):
+    """The full mirror path: quantize rows per (row, head), attend over
+    the codes — what `QuantizedKvStore::store_row` + `attend_cached_q`
+    compute."""
+    kc, kr = gv.kvq_quantize_rows(k, ctx, heads, head_dim, bits, signs1, signs2)
+    vc, vr = gv.kvq_quantize_rows(v, ctx, heads, head_dim, bits, signs1, signs2)
+    return np.asarray(gv.kvq_attend_ref(
+        q, kc, kr, vc, vr, ctx, heads, head_dim, bits, bits, signs1, signs2))
+
+
+# ------------------------------------------------------------ mirror checks
+
+@pytest.mark.parametrize("head_dim", [4, 5, 8, 12, 16])
+def test_practical_rht_is_orthonormal_and_inverts(head_dim):
+    rng = _mk_rng(head_dim)
+    signs1, signs2 = _signs(rng, head_dim)
+    x = np.asarray(_rand_f32(rng, head_dim), dtype=np.float32)
+    y = gv.practical_rht_f32(x, signs1, signs2)
+    np.testing.assert_allclose(np.linalg.norm(y), np.linalg.norm(x), rtol=1e-5)
+    back = gv.practical_rht_inv_f64(y.astype(np.float64), signs1, signs2)
+    np.testing.assert_allclose(back, x.astype(np.float64), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 8])
+def test_quantizer_codes_in_range_and_r_is_least_squares(bits):
+    rng = _mk_rng(100 + bits)
+    seg = _rand_f32(rng, 64)
+    codes, r = gv.rabitq_quantize_maxabs_f32(seg, bits)
+    assert all(0 <= c <= 2 ** bits - 1 for c in codes)
+    cb = (2 ** bits - 1) / 2.0
+    qv = np.asarray(codes, dtype=np.float64) - cb
+    x = np.asarray(seg, dtype=np.float64)
+
+    def err(rr):
+        return float(np.sum((x - rr * qv) ** 2))
+
+    # perturbing r either way must not reduce the reconstruction error
+    assert err(r) <= err(r * 1.01) + 1e-9
+    assert err(r) <= err(r * 0.99) + 1e-9
+    # zero column: centered codes, r = 0
+    z_codes, z_r = gv.rabitq_quantize_maxabs_f32([0.0] * 8, bits)
+    assert z_r == 0.0
+    assert all(c == int(np.floor(cb)) for c in z_codes)
+
+
+def test_quantizer_reconstruction_decays_with_bits():
+    rng = _mk_rng(7)
+    seg = _rand_f32(rng, 256)
+    x = np.asarray(seg, dtype=np.float64)
+    prev = np.inf
+    for bits in range(1, 9):
+        codes, r = gv.rabitq_quantize_maxabs_f32(seg, bits)
+        cb = (2 ** bits - 1) / 2.0
+        rec = r * (np.asarray(codes, dtype=np.float64) - cb)
+        rel = np.linalg.norm(x - rec) / np.linalg.norm(x)
+        assert rel < prev * 1.05, f"bits={bits}: {rel} !< {prev}"
+        assert rel < 3.0 * 2.0 ** -bits, f"bits={bits} rel={rel}"
+        prev = rel
+
+
+# ------------------------------------------------- the accuracy contract
+
+def test_attend_over_codes_monotone_quality_ladder():
+    """The monotone 2 -> 4 -> 8-bit ladder, averaged over seeds: the
+    quantize→attend drift against exact attention must strictly shrink as
+    bits grow, and 8-bit must be tight (bounded drift, not exactness)."""
+    heads, head_dim, ctx = 2, 16, 12
+    d = heads * head_dim
+    errs = {2: [], 4: [], 8: []}
+    for seed in range(6):
+        rng = _mk_rng(1000 + seed)
+        signs1, signs2 = _signs(rng, head_dim)
+        q = _rand_f32(rng, d)
+        k = _rand_f32(rng, ctx * d)
+        v = _rand_f32(rng, ctx * d)
+        exact = _attend_exact(q, k, v, ctx, heads, head_dim)
+        norm = np.linalg.norm(exact)
+        for bits in (2, 4, 8):
+            got = _attend_quantized(q, k, v, ctx, heads, head_dim, bits,
+                                    signs1, signs2)
+            errs[bits].append(float(np.linalg.norm(got - exact) / norm))
+    mean = {b: np.mean(errs[b]) for b in errs}
+    assert mean[2] > mean[4] > mean[8], f"ladder not monotone: {mean}"
+    assert mean[8] < 0.05, f"8-bit drift too large: {mean[8]}"
+    assert mean[4] < 0.25, f"4-bit drift too large: {mean[4]}"
+
+
+def test_attend_over_codes_nonpow2_head_dim():
+    """Non-pow2 head dims ride the two overlapping RHT windows; the path
+    must stay well-conditioned there too."""
+    heads, head_dim, ctx = 2, 12, 8
+    d = heads * head_dim
+    rng = _mk_rng(77)
+    signs1, signs2 = _signs(rng, head_dim)
+    assert signs2, "non-pow2 head_dim must use the second window"
+    q = _rand_f32(rng, d)
+    k = _rand_f32(rng, ctx * d)
+    v = _rand_f32(rng, ctx * d)
+    exact = _attend_exact(q, k, v, ctx, heads, head_dim)
+    got = _attend_quantized(q, k, v, ctx, heads, head_dim, 8, signs1, signs2)
+    rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+    assert rel < 0.05, f"8-bit drift at head_dim=12: {rel}"
+
+
+def test_ctx1_is_value_reconstruction():
+    """One cached row: the softmax weight is exactly 1, so the attend
+    output is the V row's quantized reconstruction."""
+    heads, head_dim = 2, 8
+    d = heads * head_dim
+    rng = _mk_rng(5)
+    signs1, signs2 = _signs(rng, head_dim)
+    q = _rand_f32(rng, d)
+    k = _rand_f32(rng, d)
+    v = _rand_f32(rng, d)
+    got = _attend_quantized(q, k, v, 1, heads, head_dim, 8, signs1, signs2)
+    np.testing.assert_allclose(got, np.asarray(v, dtype=np.float64),
+                               rtol=0.05, atol=0.05)
+
+
+# ------------------------------------------------- committed golden vectors
+
+def test_kvq_vectors_are_internally_consistent():
+    doc = json.loads((VEC / "kvq_attend.json").read_text())
+    assert len(doc["cases"]) >= 5
+    nonpow2 = False
+    for case in doc["cases"]:
+        heads, hd, ctx = case["heads"], case["head_dim"], case["ctx"]
+        kb, vb = case["k_bits"], case["v_bits"]
+        d = heads * hd
+        nonpow2 |= hd & (hd - 1) != 0
+        assert len(case["k_codes"]) == ctx * d
+        assert len(case["k_r"]) == ctx * heads
+        assert all(0 <= c <= 2 ** kb - 1 for c in case["k_codes"])
+        assert all(0 <= c <= 2 ** vb - 1 for c in case["v_codes"])
+        assert len(case["signs1"]) == gv.floor_pow2(hd)
+        assert all(s in (-1.0, 1.0) for s in case["signs1"] + case["signs2"])
+        # regenerating the codes from the committed inputs must agree
+        kc, kr = gv.kvq_quantize_rows(case["k"], ctx, heads, hd, kb,
+                                      case["signs1"], case["signs2"])
+        assert kc == case["k_codes"]
+        np.testing.assert_allclose(kr, case["k_r"], rtol=1e-6, atol=1e-9)
+        # and the attend output must match the committed one exactly
+        out = gv.kvq_attend_ref(case["q"], case["k_codes"], case["k_r"],
+                                case["v_codes"], case["v_r"], ctx, heads, hd,
+                                kb, vb, case["signs1"], case["signs2"])
+        np.testing.assert_allclose(out, case["out"], rtol=1e-12, atol=1e-12)
+    assert nonpow2, "vectors must cover a non-pow2 head_dim"

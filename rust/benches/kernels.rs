@@ -12,6 +12,10 @@
 //! * Generation: KV-cached `prefill` + `decode_step` vs full-recompute
 //!   per token at generation length 64 (`serve_kv` vs `serve_recompute`
 //!   in the JSON; acceptance: >= 2x tokens/s).
+//! * Quantized-KV attention: `attend_cached_q` over 8/4/2-bit codes vs
+//!   the dense `attend_cached` on the same window, plus the
+//!   `kv_bytes_per_lane` table (f32 vs 8/4/2-bit) and the lane counts a
+//!   fixed KV budget buys (acceptance: >= 2x lanes at 4-bit vs f32).
 //!
 //! Results print as tables and land in `BENCH_kernels.json` so future PRs
 //! can diff the perf trajectory mechanically. Dimensions honor
@@ -313,6 +317,106 @@ fn main() -> anyhow::Result<()> {
         ]),
     ));
 
+    // ------------------ quantized-KV attention + lanes-per-byte economics
+    // attend_cached_q (scores + mixing straight over RaBitQ codes) vs the
+    // dense f32 attend_cached on the same 128-row window, and the
+    // kv_bytes_per_lane table that converts a KV RAM budget into lanes —
+    // the acceptance number is >= 2x lanes at 4-bit vs f32.
+    {
+        use raana::kernels::attend_cached;
+        use raana::kvq::{dense_bytes_per_lane, KvqPlan, QuantizedKvStore, DEFAULT_ROT_SEED};
+
+        let (heads, hd, ctx) = (4usize, 64usize, 128usize);
+        let d = heads * hd;
+        let mut rng = Rng::new(12);
+        let q = rng.gaussian_vec(d);
+        let krows = rng.gaussian_vec(ctx * d);
+        let vrows = rng.gaussian_vec(ctx * d);
+
+        let mut t = Table::new(&[
+            "Cached attention (ctx=128, d=256, 4 heads)",
+            "median",
+            "note",
+        ]);
+        let mut scores = vec![0f32; ctx];
+        let mut out = vec![0f32; d];
+        let dense_r = bench("attend_cached", 4, 64, || {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            attend_cached(&q, &krows, &vrows, ctx, heads, hd, &mut scores, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(vec![
+            "attend_cached (dense f32 rows)".into(),
+            format!("{:.1} us", dense_r.median() * 1e6),
+            "the PR-2 kernel".into(),
+        ]);
+        let mut kvq_entries: Vec<(&str, Value)> = vec![("attend_dense", bench_json(&dense_r))];
+        for bits in [8u8, 4, 2] {
+            // the real serving path: rows quantized+packed by the store,
+            // attention via attend_cached_q over its codes
+            let plan = KvqPlan::uniform(1, bits).expect("valid bits");
+            let mut store =
+                QuantizedKvStore::new(1, 1, ctx, d, heads, plan, DEFAULT_ROT_SEED)
+                    .expect("valid store shape");
+            for ki in 0..ctx {
+                store.store_row(0, 0, ki, &krows[ki * d..(ki + 1) * d],
+                                &vrows[ki * d..(ki + 1) * d]);
+            }
+            let mut scratch = store.scratch();
+            let mut qout = vec![0f32; d];
+            let r = bench(&format!("attend_cached_q_b{bits}"), 4, 64, || {
+                qout.iter_mut().for_each(|x| *x = 0.0);
+                store.attend(0, 0, ctx, &q, &mut scratch, &mut qout);
+                std::hint::black_box(&qout);
+            });
+            t.row(vec![
+                format!("attend_cached_q ({bits}-bit codes)"),
+                format!("{:.1} us", r.median() * 1e6),
+                format!("{:.2}x dense", r.median() / dense_r.median().max(1e-12)),
+            ]);
+            match bits {
+                8 => kvq_entries.push(("attend_q8", bench_json(&r))),
+                4 => kvq_entries.push(("attend_q4", bench_json(&r))),
+                _ => kvq_entries.push(("attend_q2", bench_json(&r))),
+            }
+        }
+        println!("{}", t.render());
+
+        // lanes-per-byte: the memory -> concurrency conversion
+        let (nl, cap) = (4usize, 128usize);
+        let dense_lane = dense_bytes_per_lane(nl, cap, d);
+        let budget = 16 * dense_lane; // sized for exactly 16 f32 lanes
+        let mut t = Table::new(&[
+            "KV bytes/lane (4 layers, ctx 128, d=256)",
+            "bytes",
+            "lanes @ same budget",
+        ]);
+        t.row(vec!["f32".into(), dense_lane.to_string(), "16".to_string()]);
+        let mut lane_entries: Vec<(&str, Value)> =
+            vec![("f32", json::num(dense_lane as f64))];
+        let mut lanes_4bit = 0usize;
+        for (key, bits) in [("b8", 8u8), ("b4", 4), ("b2", 2)] {
+            let lane = KvqPlan::uniform(nl, bits)
+                .expect("valid bits")
+                .bytes_per_lane(cap, d, heads);
+            let lanes = budget / lane;
+            if bits == 4 {
+                lanes_4bit = lanes;
+            }
+            t.row(vec![format!("{bits}-bit"), lane.to_string(), lanes.to_string()]);
+            lane_entries.push((key, json::num(lane as f64)));
+        }
+        println!("{}", t.render());
+        let ratio = lanes_4bit as f64 / 16.0;
+        println!("lanes at 4-bit vs f32 under the same budget: {ratio:.1}x (acceptance: >= 2x)");
+        kvq_entries.push(("kv_bytes_per_lane", json::obj(lane_entries)));
+        kvq_entries.push(("budget_bytes", json::num(budget as f64)));
+        kvq_entries.push(("lanes_f32", json::num(16.0)));
+        kvq_entries.push(("lanes_4bit", json::num(lanes_4bit as f64)));
+        kvq_entries.push(("lanes_ratio_4bit_vs_f32", json::num(ratio)));
+        report.push(("kvq", json::obj(kvq_entries)));
+    }
+
     // ------------------------------ HTTP front-end overhead vs in-process
     // same packed demo model behind the batching server; one greedy
     // request of gen_len tokens, submitted in-process (Server::submit)
@@ -323,7 +427,7 @@ fn main() -> anyhow::Result<()> {
         raana::experiments::native_demo_packed("bench-serve-http", 256, 4, 4, 7)?;
     let server = std::sync::Arc::new(raana::serve::Server::start_native_packed(
         manifest, params, packed,
-    ));
+    )?);
     let http = raana::net::HttpServer::bind(std::sync::Arc::clone(&server), "127.0.0.1:0", 2)?;
     let addr = http.local_addr().to_string();
     let http_gen = 32usize;

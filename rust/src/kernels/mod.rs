@@ -18,6 +18,11 @@
 //!   contiguous K/V row window. Both the full causal forward and the
 //!   KV-cached `decode_step` route through this one kernel, which is what
 //!   makes incremental decoding **bit-identical** to full recompute.
+//! * [`attend_cached_q`] — the same attention shape computed **directly
+//!   over RaBitQ-packed K/V codes** (the [`crate::kvq`] storage): scores
+//!   via the Algorithm-3 inner-product estimator per cached row, value
+//!   mixing as a weighted sum of decoded codes, with the per-head RHT
+//!   rotation folded into the query and inverted on the output.
 //!
 //! Threading: `threads == 0` means [`threadpool::default_threads`] (the
 //! `RAANA_THREADS` override applies). All kernels are bit-deterministic in
@@ -29,6 +34,7 @@
 //! bit-for-bit.
 #![deny(missing_docs)]
 
+use crate::hadamard::PracticalRht;
 use crate::rabitq::{grid_center, PackedCodes, QuantizedMatrix};
 use crate::tensor::Matrix;
 use crate::threadpool;
@@ -69,13 +75,19 @@ fn effective_threads(threads: usize) -> usize {
 /// assert_eq!(out, vec![0.0, 7.0, 5.0]);
 /// ```
 pub fn decode_codes_into(codes: &PackedCodes, start: usize, out: &mut [f32]) {
+    debug_assert!(start + out.len() <= codes.len, "decode range out of bounds");
+    decode_bits_into(&codes.data, codes.bits, start, out);
+}
+
+/// [`decode_codes_into`] over a raw packed-bit buffer (no [`PackedCodes`]
+/// wrapper) — the entry point the quantized KV cache uses, whose per-layer
+/// code buffers are plain byte vectors shared by many rows.
+pub fn decode_bits_into(data: &[u8], bits: u8, start: usize, out: &mut [f32]) {
     let len = out.len();
     if len == 0 {
         return;
     }
-    debug_assert!(start + len <= codes.len, "decode range out of bounds");
-    let bits = codes.bits as usize;
-    let data = &codes.data[..];
+    let bits = bits as usize;
     let mask: u32 = (1u32 << bits) - 1;
     let mut bitpos = start * bits;
 
@@ -293,6 +305,176 @@ pub fn attend_cached(
             for (ov, &vv) in orow.iter_mut().zip(vrow) {
                 *ov += w * vv;
             }
+        }
+    }
+}
+
+// ---------------------------------------------- quantized cached attention
+
+/// A read-only view of `ctx` RaBitQ-coded rows inside a shared packed-bit
+/// buffer — how [`crate::kvq::QuantizedKvStore`] hands cached K or V rows
+/// to [`attend_cached_q`] without materializing any f32 row storage.
+///
+/// Row `i` occupies elements `[start + i*d, start + (i+1)*d)` of the
+/// bit-packed `data` (at `bits` bits per element, LSB-first — the
+/// [`PackedCodes`] layout); `r[i * n_heads + h]` is the least-squares
+/// rescale of row `i`'s head-`h` segment, so each head segment of each row
+/// reconstructs as `r * (codes - grid_center(bits))`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantView<'a> {
+    /// Packed code payload (may cover many rows beyond this window).
+    pub data: &'a [u8],
+    /// Bits per code (1..=8).
+    pub bits: u8,
+    /// Element index of the window's row 0 within `data`.
+    pub start: usize,
+    /// Per-(row, head) rescales, row-major: `r[row * n_heads + head]`.
+    pub r: &'a [f32],
+}
+
+/// Caller-owned scratch for [`attend_cached_q`]: one allocation per batch
+/// loop, reused across every query (the kernel itself allocates nothing).
+#[derive(Clone, Debug)]
+pub struct AttendQScratch {
+    /// Rotated query row (d).
+    q_rot: Vec<f32>,
+    /// One decoded code row (d).
+    row: Vec<f32>,
+    /// Rotated-space output accumulator (d).
+    acc: Vec<f32>,
+    /// Head-major score/weight table (n_heads * ctx_max).
+    scores: Vec<f32>,
+    /// Per-head query sums, then per-head weight·rescale sums (n_heads).
+    hsum: Vec<f32>,
+}
+
+impl AttendQScratch {
+    /// Scratch sized for `d = n_heads * head_dim` queries over windows of
+    /// up to `ctx_max` cached rows.
+    pub fn new(d: usize, n_heads: usize, ctx_max: usize) -> AttendQScratch {
+        AttendQScratch {
+            q_rot: vec![0.0; d],
+            row: vec![0.0; d],
+            acc: vec![0.0; d],
+            scores: vec![0.0; n_heads * ctx_max],
+            hsum: vec![0.0; n_heads],
+        }
+    }
+}
+
+/// [`attend_cached`] computed **directly over RaBitQ codes**: single-query
+/// multi-head attention where the `ctx` cached K and V rows live as
+/// bit-packed codes ([`QuantView`]) whose head segments were RHT-rotated
+/// (`rot`, dimension `head_dim`) before quantization.
+///
+/// Per head `h` with query segment `q_h`:
+///
+/// * **scores** — the rotation is orthonormal, so `<q_h, k_h> =
+///   <rot(q_h), rot(k_h)>`; the kernel rotates the query once and applies
+///   the Algorithm-3 estimator per cached row: `score = r_k * (<q̂_h,
+///   codes> - c_b * Σ q̂_h) / sqrt(head_dim)` — no K row is ever
+///   reconstructed.
+/// * **mixing** — softmax weights combine the V rows *in rotated space*
+///   (`Σ_i w_i r_v,i (codes_i - c_b)`, decoded once per row), and the
+///   inverse rotation maps the mixed vector back before it is
+///   **accumulated into** `out[head window]` (callers pass a zeroed `out`,
+///   matching the [`attend_cached`] contract).
+///
+/// Each output row reduces in a fixed, batch-size-independent order, so a
+/// 1-row decode step reproduces the corresponding row of an n-row prefill
+/// bit-for-bit — the same contract the dense kernel upholds. Accuracy is
+/// *bounded drift* against [`attend_cached`] over the f32 rows: the error
+/// decays ~2^-bits per the RaBitQ bound (property-tested, and pinned by
+/// the `kvq_attend` golden vectors).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_cached_q(
+    q: &[f32],
+    k: QuantView<'_>,
+    v: QuantView<'_>,
+    ctx: usize,
+    n_heads: usize,
+    head_dim: usize,
+    rot: &PracticalRht,
+    scratch: &mut AttendQScratch,
+    out: &mut [f32],
+) {
+    let d = n_heads * head_dim;
+    debug_assert!(ctx >= 1, "attention needs at least one cached row");
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert_eq!(rot.d, head_dim, "rotation dimension must be head_dim");
+    debug_assert!(k.r.len() >= ctx * n_heads && v.r.len() >= ctx * n_heads);
+    debug_assert!(scratch.q_rot.len() == d && scratch.scores.len() >= n_heads * ctx);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+
+    // rotate the query once; cache per-head sums for the estimator
+    scratch.q_rot.copy_from_slice(q);
+    for h in 0..n_heads {
+        let seg = &mut scratch.q_rot[h * head_dim..(h + 1) * head_dim];
+        rot.apply(seg);
+        scratch.hsum[h] = seg.iter().sum();
+    }
+
+    // scores: decode each K row once, estimate every head's logit from it
+    let cbk = grid_center(k.bits);
+    for ki in 0..ctx {
+        decode_bits_into(k.data, k.bits, k.start + ki * d, &mut scratch.row);
+        for h in 0..n_heads {
+            let hoff = h * head_dim;
+            let qseg = &scratch.q_rot[hoff..hoff + head_dim];
+            let kseg = &scratch.row[hoff..hoff + head_dim];
+            let mut dp = 0f32;
+            for t in 0..head_dim {
+                dp += qseg[t] * kseg[t];
+            }
+            let est = k.r[ki * n_heads + h] * (dp - cbk * scratch.hsum[h]);
+            scratch.scores[h * ctx + ki] = est * scale;
+        }
+    }
+
+    // per-head max-shifted softmax, in place (scores become weights)
+    for h in 0..n_heads {
+        let sc = &mut scratch.scores[h * ctx..(h + 1) * ctx];
+        let maxs = sc.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut denom = 0f32;
+        for s in sc.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        for s in sc.iter_mut() {
+            *s *= inv;
+        }
+    }
+
+    // value mixing in rotated space: acc_h = Σ_i w_i r_i codes_i - c_b Σ w_i r_i
+    let cbv = grid_center(v.bits);
+    scratch.acc.iter_mut().for_each(|x| *x = 0.0);
+    scratch.hsum.iter_mut().for_each(|x| *x = 0.0);
+    for ki in 0..ctx {
+        decode_bits_into(v.data, v.bits, v.start + ki * d, &mut scratch.row);
+        for h in 0..n_heads {
+            let hoff = h * head_dim;
+            let wr = scratch.scores[h * ctx + ki] * v.r[ki * n_heads + h];
+            scratch.hsum[h] += wr;
+            let vseg = &scratch.row[hoff..hoff + head_dim];
+            let aseg = &mut scratch.acc[hoff..hoff + head_dim];
+            for (a, &c) in aseg.iter_mut().zip(vseg) {
+                *a += wr * c;
+            }
+        }
+    }
+    // subtract the grid-center term, invert the rotation, accumulate out
+    for h in 0..n_heads {
+        let hoff = h * head_dim;
+        let shift = cbv * scratch.hsum[h];
+        let aseg = &mut scratch.acc[hoff..hoff + head_dim];
+        for a in aseg.iter_mut() {
+            *a -= shift;
+        }
+        rot.apply_inverse(aseg);
+        for (o, &a) in out[hoff..hoff + head_dim].iter_mut().zip(aseg.iter()) {
+            *o += a;
         }
     }
 }
@@ -557,6 +739,204 @@ mod tests {
             let single = qgemm(&xi, &qm, 1);
             assert_eq!(full.row(i), single.row(0), "row {i}");
         }
+    }
+
+    /// Rotate + RaBitQ-quantize `ctx` rows per head (the kvq store recipe,
+    /// inlined): returns (packed codes, per-(row,head) rescales,
+    /// reconstructed f64 rows in the ORIGINAL basis).
+    fn quantize_rows(
+        rows: &[f32],
+        ctx: usize,
+        hn: usize,
+        hd: usize,
+        rot: &PracticalRht,
+        bits: u8,
+    ) -> (PackedCodes, Vec<f32>, Vec<f64>) {
+        use crate::rabitq::{quantize_column, ScaleMode};
+        let d = hn * hd;
+        let mut all_codes = Vec::with_capacity(ctx * d);
+        let mut r = Vec::with_capacity(ctx * hn);
+        let mut rec = vec![0f64; ctx * d];
+        for ki in 0..ctx {
+            for h in 0..hn {
+                let mut seg = rows[ki * d + h * hd..ki * d + (h + 1) * hd].to_vec();
+                rot.apply(&mut seg);
+                let (codes, rr) = quantize_column(&seg, bits, ScaleMode::MaxAbs);
+                let cb = grid_center(bits);
+                let mut seg_rec: Vec<f32> =
+                    codes.iter().map(|&c| rr * (c as f32 - cb)).collect();
+                rot.apply_inverse(&mut seg_rec);
+                for (t, &x) in seg_rec.iter().enumerate() {
+                    rec[ki * d + h * hd + t] = x as f64;
+                }
+                all_codes.extend_from_slice(&codes);
+                r.push(rr);
+            }
+        }
+        (PackedCodes::pack(&all_codes, bits), r, rec)
+    }
+
+    /// f64 reference attention over arbitrary (already reconstructed) rows.
+    fn attend_ref_f64(
+        q: &[f32],
+        k: &[f64],
+        v: &[f64],
+        ctx: usize,
+        hn: usize,
+        hd: usize,
+    ) -> Vec<f64> {
+        let d = hn * hd;
+        let mut out = vec![0f64; d];
+        for h in 0..hn {
+            let hoff = h * hd;
+            let mut sc: Vec<f64> = (0..ctx)
+                .map(|ki| {
+                    (0..hd)
+                        .map(|t| q[hoff + t] as f64 * k[ki * d + hoff + t])
+                        .sum::<f64>()
+                        / (hd as f64).sqrt()
+                })
+                .collect();
+            let maxs = sc.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let denom: f64 = sc.iter().map(|s| (s - maxs).exp()).sum();
+            for s in sc.iter_mut() {
+                *s = (*s - maxs).exp() / denom;
+            }
+            for t in 0..hd {
+                out[hoff + t] = (0..ctx).map(|ki| sc[ki] * v[ki * d + hoff + t]).sum();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn attend_cached_q_matches_reconstruction_reference() {
+        // the kernel's fused estimator == attention over the reconstructed
+        // rows (same math, different factorization) — for pow2 and non-pow2
+        // head dims (the latter exercises both practical-RHT windows)
+        for (hn, hd, ctx, bits) in
+            [(2usize, 8usize, 6usize, 4u8), (4, 8, 12, 8), (2, 5, 7, 5), (3, 16, 9, 2)]
+        {
+            let d = hn * hd;
+            let mut rng = Rng::new(700 + bits as u64);
+            let rot = PracticalRht::sample(hd, &mut rng);
+            let q = rng.gaussian_vec(d);
+            let krows = rng.gaussian_vec(ctx * d);
+            let vrows = rng.gaussian_vec(ctx * d);
+            let (kp, kr, krec) = quantize_rows(&krows, ctx, hn, hd, &rot, bits);
+            let (vp, vr, vrec) = quantize_rows(&vrows, ctx, hn, hd, &rot, bits);
+            let mut scratch = AttendQScratch::new(d, hn, ctx);
+            let mut out = vec![0f32; d];
+            attend_cached_q(
+                &q,
+                QuantView { data: &kp.data, bits, start: 0, r: &kr },
+                QuantView { data: &vp.data, bits, start: 0, r: &vr },
+                ctx,
+                hn,
+                hd,
+                &rot,
+                &mut scratch,
+                &mut out,
+            );
+            let want = attend_ref_f64(&q, &krec, &vrec, ctx, hn, hd);
+            for (i, (&got, &exp)) in out.iter().zip(&want).enumerate() {
+                assert!(
+                    (got as f64 - exp).abs() < 2e-3,
+                    "hn={hn} hd={hd} bits={bits} elem {i}: {got} vs {exp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attend_cached_q_error_vs_dense_shrinks_with_bits() {
+        // bounded drift vs the f32 kernel over the ORIGINAL rows, and a
+        // monotone 2 -> 4 -> 8 bit quality ladder
+        let (hn, hd, ctx) = (2usize, 16usize, 10usize);
+        let d = hn * hd;
+        let mut rng = Rng::new(900);
+        let rot = PracticalRht::sample(hd, &mut rng);
+        let q = rng.gaussian_vec(d);
+        let krows = rng.gaussian_vec(ctx * d);
+        let vrows = rng.gaussian_vec(ctx * d);
+        let mut scores = vec![0f32; ctx];
+        let mut exact = vec![0f32; d];
+        attend_cached(&q, &krows, &vrows, ctx, hn, hd, &mut scores, &mut exact);
+        let norm: f64 = exact.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 8] {
+            let (kp, kr, _) = quantize_rows(&krows, ctx, hn, hd, &rot, bits);
+            let (vp, vr, _) = quantize_rows(&vrows, ctx, hn, hd, &rot, bits);
+            let mut scratch = AttendQScratch::new(d, hn, ctx);
+            let mut out = vec![0f32; d];
+            attend_cached_q(
+                &q,
+                QuantView { data: &kp.data, bits, start: 0, r: &kr },
+                QuantView { data: &vp.data, bits, start: 0, r: &vr },
+                ctx,
+                hn,
+                hd,
+                &rot,
+                &mut scratch,
+                &mut out,
+            );
+            let err: f64 = out
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / norm;
+            assert!(err < prev, "bits={bits}: {err} !< {prev} (ladder must be monotone)");
+            // generous constant (softmax amplifies low-bit logit error);
+            // the point is the 2^-b scaling law
+            assert!(err < 6.0 * 2f64.powi(-(bits as i32)), "bits={bits} err={err}");
+            prev = err;
+        }
+        assert!(prev < 0.05, "8-bit attend drift too large: {prev}");
+    }
+
+    #[test]
+    fn attend_cached_q_single_row_is_value_reconstruction() {
+        // ctx == 1: softmax weight is exactly 1, so out == the V row's
+        // quantized reconstruction (rotation round-tripped)
+        let (hn, hd) = (2usize, 8usize);
+        let d = hn * hd;
+        let mut rng = Rng::new(901);
+        let rot = PracticalRht::sample(hd, &mut rng);
+        let q = rng.gaussian_vec(d);
+        let krows = rng.gaussian_vec(d);
+        let vrows = rng.gaussian_vec(d);
+        let (kp, kr, _) = quantize_rows(&krows, 1, hn, hd, &rot, 8);
+        let (vp, vr, vrec) = quantize_rows(&vrows, 1, hn, hd, &rot, 8);
+        let mut scratch = AttendQScratch::new(d, hn, 1);
+        let mut out = vec![0f32; d];
+        attend_cached_q(
+            &q,
+            QuantView { data: &kp.data, bits: 8, start: 0, r: &kr },
+            QuantView { data: &vp.data, bits: 8, start: 0, r: &vr },
+            1,
+            hn,
+            hd,
+            &rot,
+            &mut scratch,
+            &mut out,
+        );
+        for (i, (&got, &exp)) in out.iter().zip(&vrec).enumerate() {
+            assert!((got as f64 - exp).abs() < 1e-4, "elem {i}: {got} vs {exp}");
+        }
+    }
+
+    #[test]
+    fn decode_bits_into_matches_wrapper() {
+        let values: Vec<u8> = (0..131).map(|i| (i % 8) as u8).collect();
+        let packed = PackedCodes::pack(&values, 3);
+        let mut a = vec![0f32; 40];
+        let mut b = vec![0f32; 40];
+        decode_codes_into(&packed, 17, &mut a);
+        decode_bits_into(&packed.data, 3, 17, &mut b);
+        assert_eq!(a, b);
     }
 
     fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {

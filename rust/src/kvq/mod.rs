@@ -1,0 +1,758 @@
+//! Quantized KV-cache subsystem: RaBitQ-compressed K/V storage with
+//! attend-over-codes and per-layer bit allocation (ISSUE 4).
+//!
+//! At serving scale the KV cache, not the weights, caps concurrent lanes
+//! per byte of RAM: the weights are shared across lanes, but every lane
+//! owns `2 * n_layers * capacity * d_model` floats of K/V window. This
+//! module applies the paper's own machinery to that stream:
+//!
+//! * **Storage** ([`QuantizedKvStore`]) — each K and V row's per-head
+//!   segment is RHT-rotated ([`crate::hadamard::PracticalRht`] over
+//!   `head_dim`, shared Rademacher signs) and grid-quantized with
+//!   [`crate::rabitq::quantize_column_into`] at [`ScaleMode::MaxAbs`]
+//!   (one pass — quantization sits on the per-token hot path, where the
+//!   extended scale search would cost ~8x for marginal gain). Codes are
+//!   bit-packed into one shared buffer per layer; the only f32 side
+//!   payload is one least-squares rescale per (row, head).
+//! * **Compute** — attention never reconstructs the cache:
+//!   [`crate::kernels::attend_cached_q`] estimates scores from K codes
+//!   (Algorithm 3 per cached row) and mixes V codes in rotated space.
+//! * **Bit plan** ([`KvqPlan`], [`KvqPolicy`]) — K and V get separate
+//!   per-layer bit-widths, chosen by the paper's AllocateBits DP
+//!   ([`crate::allocate`]) under a per-lane byte budget, driven by
+//!   [`KvSensitivity`] estimates (attention logits are more bit-sensitive
+//!   than value mixing, so K sensitivities carry [`K_LOGIT_WEIGHT`]).
+//!
+//! The accuracy contract is **bounded drift**, not bit-exactness: per the
+//! RaBitQ bound the attention error decays ~`2^-bits`, property-tested as
+//! a monotone 2/4/8-bit quality ladder (EXPERIMENTS.md §KV compression)
+//! and pinned by the `kvq_attend` golden vectors. What *is* exact: the
+//! quantize→pack path is deterministic, and every attend reduces in a
+//! batch-size-independent order, so quantized decode steps reproduce a
+//! quantized re-prefill of the same context bit-for-bit.
+#![deny(missing_docs)]
+
+use anyhow::Result;
+
+use crate::allocate::AllocProblem;
+use crate::hadamard::PracticalRht;
+use crate::kernels::{self, AttendQScratch, QuantView};
+use crate::model::{Manifest, ModelParams};
+use crate::rabitq::{quantize_column_into, ScaleMode};
+use crate::rng::Rng;
+use crate::runtime::native::{NativeModel, PackedLayers};
+
+/// Multiplier applied to K-row sensitivities when no measured
+/// [`KvSensitivity`] is supplied (and the default ratio inside
+/// [`estimate_kv_sensitivity`]'s alphas): quantization error on K perturbs
+/// attention *logits*, which the softmax amplifies into weight shifts
+/// across the whole window, while V error enters the output linearly — so
+/// K deserves more bits at equal measured magnitude.
+pub const K_LOGIT_WEIGHT: f64 = 4.0;
+
+/// Default seed for the cache's Rademacher rotation signs. Any fixed seed
+/// works (the rotation only needs to be shared between store and attend);
+/// a constant keeps serving runs reproducible.
+pub const DEFAULT_ROT_SEED: u64 = 0x6b76_5157;
+
+// ------------------------------------------------------------------ errors
+
+/// Typed configuration errors for the quantized KV cache — surfaced at
+/// `Server` construction (config validation) instead of as a runtime
+/// panic/death inside the batcher.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvqError {
+    /// A requested KV bit-width outside 1..=8.
+    BadBits(u8),
+    /// The byte budget cannot fit even one lane at the cheapest allowed
+    /// plan; `min_lane_bytes` is the smallest admissible per-lane size.
+    BudgetTooSmall {
+        /// The offending budget, in bytes.
+        budget_bytes: usize,
+        /// Smallest per-lane footprint any admissible plan can reach.
+        min_lane_bytes: usize,
+    },
+    /// Shape/arity mismatch (plan length vs layers, head divisibility, …).
+    Shape(String),
+}
+
+impl std::fmt::Display for KvqError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvqError::BadBits(b) => write!(f, "KV bit-width {b} outside 1..=8"),
+            KvqError::BudgetTooSmall { budget_bytes, min_lane_bytes } => write!(
+                f,
+                "KV budget of {budget_bytes} bytes cannot fit one lane \
+                 (minimum {min_lane_bytes} bytes per lane)"
+            ),
+            KvqError::Shape(msg) => write!(f, "KV cache shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for KvqError {}
+
+impl From<KvqError> for anyhow::Error {
+    fn from(e: KvqError) -> anyhow::Error {
+        anyhow::Error::msg(e.to_string())
+    }
+}
+
+// ------------------------------------------------------------------- plan
+
+/// Per-layer KV bit plan: `bits[layer] = (k_bits, v_bits)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KvqPlan {
+    /// One `(K bits, V bits)` pair per transformer layer.
+    pub bits: Vec<(u8, u8)>,
+}
+
+impl KvqPlan {
+    /// Same bit-width everywhere (the `serve --kv-bits N` plan).
+    pub fn uniform(n_layers: usize, bits: u8) -> Result<KvqPlan, KvqError> {
+        if !(1..=8).contains(&bits) {
+            return Err(KvqError::BadBits(bits));
+        }
+        Ok(KvqPlan { bits: vec![(bits, bits); n_layers] })
+    }
+
+    /// Reject malformed plans (empty, or any width outside 1..=8).
+    pub fn validate(&self) -> Result<(), KvqError> {
+        if self.bits.is_empty() {
+            return Err(KvqError::Shape("empty bit plan".into()));
+        }
+        for &(kb, vb) in &self.bits {
+            for b in [kb, vb] {
+                if !(1..=8).contains(&b) {
+                    return Err(KvqError::BadBits(b));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean stored bits per cached K/V element (codes only).
+    pub fn avg_bits(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        let total: usize = self.bits.iter().map(|&(k, v)| k as usize + v as usize).sum();
+        total as f64 / (2 * self.bits.len()) as f64
+    }
+
+    /// Exact per-lane footprint in bytes: per layer, the packed K and V
+    /// code payloads for `capacity` rows plus the two f32 rescale tables
+    /// (one per (row, head) for each of K and V).
+    pub fn bytes_per_lane(&self, capacity: usize, d_model: usize, n_heads: usize) -> usize {
+        let mut total = 0usize;
+        for &(kb, vb) in &self.bits {
+            total += (capacity * d_model * kb as usize).div_ceil(8);
+            total += (capacity * d_model * vb as usize).div_ceil(8);
+            total += 2 * capacity * n_heads * 4; // r payloads
+        }
+        total
+    }
+
+    /// AllocateBits over the KV stream: pick per-layer (K, V) bit-widths
+    /// minimizing `Σ α 2^-b` such that one lane fits `lane_budget_bytes`.
+    ///
+    /// The DP (paper Alg. 4, GCD-reduced) sees `2 * n_layers` items — each
+    /// layer's K stream and V stream separately, every one sized
+    /// `capacity * d_model` codes — with the fixed rescale payload
+    /// subtracted from the budget up front. Without a measured
+    /// [`KvSensitivity`] the alphas default to [`K_LOGIT_WEIGHT`] : 1.
+    pub fn solve_for_budget(
+        n_layers: usize,
+        capacity: usize,
+        d_model: usize,
+        n_heads: usize,
+        lane_budget_bytes: usize,
+        bit_choices: &[u8],
+        sens: Option<&KvSensitivity>,
+    ) -> Result<KvqPlan, KvqError> {
+        if bit_choices.is_empty() {
+            return Err(KvqError::Shape("empty KV bit-choice set".into()));
+        }
+        if let Some(&b) = bit_choices.iter().find(|&&b| !(1..=8).contains(&b)) {
+            return Err(KvqError::BadBits(b));
+        }
+        if let Some(s) = sens {
+            if s.alpha_k.len() != n_layers || s.alpha_v.len() != n_layers {
+                return Err(KvqError::Shape(format!(
+                    "sensitivity arity {}/{} != {n_layers} layers",
+                    s.alpha_k.len(),
+                    s.alpha_v.len()
+                )));
+            }
+        }
+        let min_b = *bit_choices.iter().min().unwrap();
+        let min_lane = KvqPlan::uniform(n_layers, min_b)
+            .expect("min_b validated")
+            .bytes_per_lane(capacity, d_model, n_heads);
+        if lane_budget_bytes < min_lane {
+            return Err(KvqError::BudgetTooSmall {
+                budget_bytes: lane_budget_bytes,
+                min_lane_bytes: min_lane,
+            });
+        }
+        let overhead_bytes = 2 * n_layers * capacity * n_heads * 4;
+        let budget_bits = (lane_budget_bytes - overhead_bytes) as u64 * 8;
+        let mut alphas = Vec::with_capacity(2 * n_layers);
+        for l in 0..n_layers {
+            match sens {
+                Some(s) => {
+                    alphas.push(s.alpha_k[l]);
+                    alphas.push(s.alpha_v[l]);
+                }
+                None => {
+                    alphas.push(K_LOGIT_WEIGHT);
+                    alphas.push(1.0);
+                }
+            }
+        }
+        let problem = AllocProblem {
+            alphas,
+            m: vec![capacity * d_model; 2 * n_layers],
+            bit_choices: bit_choices.to_vec(),
+            budget: budget_bits,
+        };
+        let sol = problem
+            .solve()
+            .map_err(|e| KvqError::Shape(format!("AllocateBits failed: {e}")))?;
+        let bits: Vec<(u8, u8)> =
+            (0..n_layers).map(|l| (sol.bits[2 * l], sol.bits[2 * l + 1])).collect();
+        let plan = KvqPlan { bits };
+        // per-stream byte rounding can overshoot the bit budget by < 1
+        // byte per stream; anything beyond that is a solver bug
+        debug_assert!(
+            plan.bytes_per_lane(capacity, d_model, n_heads)
+                <= lane_budget_bytes + 2 * n_layers,
+            "solved plan exceeds the lane budget"
+        );
+        Ok(plan)
+    }
+}
+
+/// Per-lane footprint of the dense f32 cache (the baseline the
+/// lanes-per-byte win is measured against): `2 * n_layers * capacity *
+/// d_model` floats.
+pub fn dense_bytes_per_lane(n_layers: usize, capacity: usize, d_model: usize) -> usize {
+    2 * n_layers * capacity * d_model * 4
+}
+
+// ------------------------------------------------------------------ policy
+
+/// How a serving lane pool stores its KV rows — the
+/// [`crate::serve::ServeConfig`] knob behind `serve --kv-bits N` /
+/// `--kv-budget BYTES`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvqPolicy {
+    /// Dense f32 rows: bit-identical decoding, 32 bits per element.
+    DenseF32,
+    /// Every layer's K and V quantized at one bit-width (1..=8).
+    Uniform(u8),
+    /// Per-layer (K, V) bit-widths solved by AllocateBits under the
+    /// per-lane byte budget the server derives from its total
+    /// `kv_budget_bytes`, weighted by measured [`KvSensitivity`].
+    Budget {
+        /// Candidate bit-widths for the DP (e.g. `[2, 4, 8]`).
+        bit_choices: Vec<u8>,
+    },
+}
+
+impl Default for KvqPolicy {
+    fn default() -> Self {
+        KvqPolicy::DenseF32
+    }
+}
+
+impl KvqPolicy {
+    /// Resolve the policy to a bit plan (`None` = keep dense f32 rows).
+    ///
+    /// `lane_budget_bytes` is required by [`KvqPolicy::Budget`] (it is the
+    /// per-lane byte cap the DP solves under) and ignored otherwise;
+    /// `sens` sharpens the Budget alphas when available.
+    pub fn plan(
+        &self,
+        n_layers: usize,
+        capacity: usize,
+        d_model: usize,
+        n_heads: usize,
+        lane_budget_bytes: Option<usize>,
+        sens: Option<&KvSensitivity>,
+    ) -> Result<Option<KvqPlan>, KvqError> {
+        match self {
+            KvqPolicy::DenseF32 => Ok(None),
+            KvqPolicy::Uniform(bits) => Ok(Some(KvqPlan::uniform(n_layers, *bits)?)),
+            KvqPolicy::Budget { bit_choices } => {
+                let budget = lane_budget_bytes.ok_or_else(|| {
+                    KvqError::Shape(
+                        "Budget KV policy needs a kv_budget_bytes to derive lane budgets".into(),
+                    )
+                })?;
+                Ok(Some(KvqPlan::solve_for_budget(
+                    n_layers,
+                    capacity,
+                    d_model,
+                    n_heads,
+                    budget,
+                    bit_choices,
+                    sens,
+                )?))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- sensitivity
+
+/// Per-layer KV quantization sensitivities, AllocateBits-style: `alpha *
+/// 2^-bits` models the layer's contribution to attention error.
+#[derive(Clone, Debug)]
+pub struct KvSensitivity {
+    /// K-stream sensitivity per layer (logit path).
+    pub alpha_k: Vec<f64>,
+    /// V-stream sensitivity per layer (mixing path).
+    pub alpha_v: Vec<f64>,
+}
+
+impl KvSensitivity {
+    /// Flat default when no calibration forward is available: every layer
+    /// equal, K weighted [`K_LOGIT_WEIGHT`]x over V.
+    pub fn uniform(n_layers: usize) -> KvSensitivity {
+        KvSensitivity {
+            alpha_k: vec![K_LOGIT_WEIGHT; n_layers],
+            alpha_v: vec![1.0; n_layers],
+        }
+    }
+}
+
+/// Measure per-layer KV sensitivities with one short calibration prefill:
+/// run `sample` (truncated to the model window) through a dense 1-slot
+/// cache, then read each layer's stored K/V rows and take mean squared row
+/// norms — the magnitude entering the estimator's error bound (`|err| ∝
+/// ||q|| ||k|| 2^-b`). K alphas carry [`K_LOGIT_WEIGHT`] on top, for the
+/// softmax amplification of logit error.
+pub fn estimate_kv_sensitivity(
+    model: &NativeModel,
+    m: &Manifest,
+    params: &ModelParams,
+    packed: Option<&PackedLayers>,
+    sample: &[i32],
+    threads: usize,
+) -> Result<KvSensitivity> {
+    anyhow::ensure!(!sample.is_empty(), "sensitivity sample must be non-empty");
+    let take = sample.len().min(model.seq_len);
+    let mut cache = model.kv_cache(1);
+    model.prefill(m, params, packed, &sample[..take], &mut cache, 0, threads)?;
+    let d = model.d_model;
+    let mut alpha_k = Vec::with_capacity(model.n_layers);
+    let mut alpha_v = Vec::with_capacity(model.n_layers);
+    for layer in 0..model.n_layers {
+        let (krows, vrows) = cache.window(layer, 0, take);
+        let msn = |rows: &[f32]| -> f64 {
+            let total: f64 = rows.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            total / take as f64
+        };
+        alpha_k.push(K_LOGIT_WEIGHT * msn(krows));
+        alpha_v.push(msn(vrows));
+    }
+    Ok(KvSensitivity { alpha_k, alpha_v })
+}
+
+// ----------------------------------------------------------------- storage
+
+/// Bit-packed K/V storage for one [`crate::runtime::KvCache`]: every row's
+/// per-head segment lives as RaBitQ codes plus one f32 rescale, quantized
+/// at store time and consumed by [`crate::kernels::attend_cached_q`]
+/// without ever materializing f32 rows.
+///
+/// Layout per layer (bit-widths come from the [`KvqPlan`]): one packed
+/// code buffer of `slots * capacity * d_model` elements for K and one for
+/// V, plus rescale tables of `slots * capacity * n_heads` f32s. Rows are
+/// addressed as `(slot * capacity + pos) * d_model`, mirroring the dense
+/// cache so slot recycling works identically (stores overwrite in place —
+/// the packer clears a row's bits before setting them).
+#[derive(Clone)]
+pub struct QuantizedKvStore {
+    n_layers: usize,
+    slots: usize,
+    capacity: usize,
+    d_model: usize,
+    n_heads: usize,
+    head_dim: usize,
+    plan: KvqPlan,
+    rot: PracticalRht,
+    k_codes: Vec<Vec<u8>>,
+    v_codes: Vec<Vec<u8>>,
+    k_r: Vec<Vec<f32>>,
+    v_r: Vec<Vec<f32>>,
+    /// Store-path scratch: one rotated head segment.
+    seg: Vec<f32>,
+    /// Store-path scratch: one head segment's fresh codes.
+    codes_buf: Vec<u8>,
+}
+
+impl std::fmt::Debug for QuantizedKvStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "QuantizedKvStore(layers={} slots={} capacity={} d={} heads={} avg_bits={:.2})",
+            self.n_layers,
+            self.slots,
+            self.capacity,
+            self.d_model,
+            self.n_heads,
+            self.plan.avg_bits()
+        )
+    }
+}
+
+/// Write `values` into a shared packed buffer starting at element index
+/// `start`, clearing each element's bits first (slots are recycled, so a
+/// row must overwrite whatever codes it lands on).
+fn set_codes(data: &mut [u8], bits: u8, start: usize, values: &[u8]) {
+    let bits = bits as usize;
+    for (i, &v) in values.iter().enumerate() {
+        let bit0 = (start + i) * bits;
+        let byte0 = bit0 / 8;
+        let off = bit0 % 8;
+        let mask = ((1u16 << bits) - 1) << off;
+        let w = (v as u16) << off;
+        data[byte0] = (data[byte0] & !(mask as u8)) | (w & 0xFF) as u8;
+        if off + bits > 8 {
+            data[byte0 + 1] = (data[byte0 + 1] & !((mask >> 8) as u8)) | (w >> 8) as u8;
+        }
+    }
+}
+
+impl QuantizedKvStore {
+    /// Allocate an all-empty quantized store. Fails on plan/shape
+    /// mismatches (typed — this is the config-validation surface).
+    pub fn new(
+        n_layers: usize,
+        slots: usize,
+        capacity: usize,
+        d_model: usize,
+        n_heads: usize,
+        plan: KvqPlan,
+        rot_seed: u64,
+    ) -> Result<QuantizedKvStore, KvqError> {
+        plan.validate()?;
+        if plan.bits.len() != n_layers {
+            return Err(KvqError::Shape(format!(
+                "bit plan covers {} layers, cache has {n_layers}",
+                plan.bits.len()
+            )));
+        }
+        if n_heads == 0 || d_model % n_heads != 0 {
+            return Err(KvqError::Shape(format!(
+                "d_model {d_model} not divisible by n_heads {n_heads}"
+            )));
+        }
+        if n_layers == 0 || slots == 0 || capacity == 0 {
+            return Err(KvqError::Shape("cache dimensions must be >= 1".into()));
+        }
+        let head_dim = d_model / n_heads;
+        let elems = slots * capacity * d_model;
+        let buf = |bits: u8| vec![0u8; (elems * bits as usize).div_ceil(8)];
+        let mut rng = Rng::new(rot_seed);
+        let rot = PracticalRht::sample(head_dim, &mut rng);
+        Ok(QuantizedKvStore {
+            n_layers,
+            slots,
+            capacity,
+            d_model,
+            n_heads,
+            head_dim,
+            k_codes: plan.bits.iter().map(|&(kb, _)| buf(kb)).collect(),
+            v_codes: plan.bits.iter().map(|&(_, vb)| buf(vb)).collect(),
+            k_r: vec![vec![0f32; slots * capacity * n_heads]; n_layers],
+            v_r: vec![vec![0f32; slots * capacity * n_heads]; n_layers],
+            plan,
+            rot,
+            seg: vec![0f32; head_dim],
+            codes_buf: Vec::with_capacity(head_dim),
+        })
+    }
+
+    /// Heads per row (must match the model this cache serves).
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    /// The per-layer bit plan this store was allocated with.
+    pub fn plan(&self) -> &KvqPlan {
+        &self.plan
+    }
+
+    /// Per-lane footprint in bytes (codes + rescales for one slot).
+    pub fn bytes_per_lane(&self) -> usize {
+        self.plan.bytes_per_lane(self.capacity, self.d_model, self.n_heads)
+    }
+
+    /// Total buffer footprint in bytes across all slots.
+    pub fn mem_bytes(&self) -> usize {
+        let codes: usize = self
+            .k_codes
+            .iter()
+            .chain(&self.v_codes)
+            .map(|b| b.len())
+            .sum();
+        let rs: usize = self.k_r.iter().chain(&self.v_r).map(|r| r.len() * 4).sum();
+        codes + rs
+    }
+
+    /// Quantize + pack one K row and one V row at `pos` of `(layer,
+    /// slot)`: per head, rotate the segment, grid-quantize it
+    /// ([`ScaleMode::MaxAbs`]), write codes in place and record the
+    /// rescale. Deterministic in the inputs — re-storing the same row
+    /// reproduces identical codes.
+    pub fn store_row(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(layer < self.n_layers && slot < self.slots && pos < self.capacity);
+        debug_assert!(k.len() == self.d_model && v.len() == self.d_model);
+        let hd = self.head_dim;
+        let (kb, vb) = self.plan.bits[layer];
+        let base = (slot * self.capacity + pos) * self.d_model;
+        let rbase = (slot * self.capacity + pos) * self.n_heads;
+        let mut seg = std::mem::take(&mut self.seg);
+        let mut codes = std::mem::take(&mut self.codes_buf);
+        for h in 0..self.n_heads {
+            seg.clear();
+            seg.extend_from_slice(&k[h * hd..(h + 1) * hd]);
+            self.rot.apply(&mut seg);
+            let r = quantize_column_into(&seg, kb, ScaleMode::MaxAbs, &mut codes);
+            self.k_r[layer][rbase + h] = r;
+            set_codes(&mut self.k_codes[layer], kb, base + h * hd, &codes);
+
+            seg.clear();
+            seg.extend_from_slice(&v[h * hd..(h + 1) * hd]);
+            self.rot.apply(&mut seg);
+            let r = quantize_column_into(&seg, vb, ScaleMode::MaxAbs, &mut codes);
+            self.v_r[layer][rbase + h] = r;
+            set_codes(&mut self.v_codes[layer], vb, base + h * hd, &codes);
+        }
+        self.seg = seg;
+        self.codes_buf = codes;
+    }
+
+    /// Fresh [`AttendQScratch`] sized for this store's widest window.
+    pub fn scratch(&self) -> AttendQScratch {
+        AttendQScratch::new(self.d_model, self.n_heads, self.capacity)
+    }
+
+    /// Single-query attention over the first `ctx` cached rows of
+    /// `(layer, slot)`, straight from codes (accumulates into `out`; pass
+    /// it zeroed — the [`crate::kernels::attend_cached`] contract).
+    pub fn attend(
+        &self,
+        layer: usize,
+        slot: usize,
+        ctx: usize,
+        q: &[f32],
+        scratch: &mut AttendQScratch,
+        out: &mut [f32],
+    ) {
+        debug_assert!(layer < self.n_layers && slot < self.slots && ctx <= self.capacity);
+        let (kb, vb) = self.plan.bits[layer];
+        let start = slot * self.capacity * self.d_model;
+        let rstart = slot * self.capacity * self.n_heads;
+        let rlen = ctx * self.n_heads;
+        kernels::attend_cached_q(
+            q,
+            QuantView {
+                data: &self.k_codes[layer],
+                bits: kb,
+                start,
+                r: &self.k_r[layer][rstart..rstart + rlen],
+            },
+            QuantView {
+                data: &self.v_codes[layer],
+                bits: vb,
+                start,
+                r: &self.v_r[layer][rstart..rstart + rlen],
+            },
+            ctx,
+            self.n_heads,
+            self.head_dim,
+            &self.rot,
+            scratch,
+            out,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::attend_cached;
+
+    #[test]
+    fn plan_uniform_and_accounting() {
+        let p = KvqPlan::uniform(3, 4).unwrap();
+        assert_eq!(p.bits, vec![(4, 4); 3]);
+        assert_eq!(p.avg_bits(), 4.0);
+        // capacity 16, d 32, heads 2: per layer 2*ceil(16*32*4/8) + 2*16*2*4
+        let per_layer = 2 * (16 * 32 * 4usize).div_ceil(8) + 2 * 16 * 2 * 4;
+        assert_eq!(p.bytes_per_lane(16, 32, 2), 3 * per_layer);
+        assert_eq!(KvqPlan::uniform(2, 0).unwrap_err(), KvqError::BadBits(0));
+        assert_eq!(KvqPlan::uniform(2, 9).unwrap_err(), KvqError::BadBits(9));
+        // f32 baseline the ratio is measured against
+        assert_eq!(dense_bytes_per_lane(3, 16, 32), 3 * 2 * 16 * 32 * 4);
+    }
+
+    #[test]
+    fn plan_quantized_beats_dense_per_lane() {
+        // the whole point: >= 2x lanes per byte at 4-bit vs f32
+        let (layers, cap, d, heads) = (4usize, 128usize, 256usize, 4usize);
+        let dense = dense_bytes_per_lane(layers, cap, d);
+        let q4 = KvqPlan::uniform(layers, 4).unwrap().bytes_per_lane(cap, d, heads);
+        assert!(dense >= 2 * q4, "4-bit lane {q4} must be <= half of dense {dense}");
+    }
+
+    #[test]
+    fn solve_for_budget_respects_budget_and_sensitivity() {
+        let (layers, cap, d, heads) = (4usize, 16usize, 64usize, 4usize);
+        // strongly K-sensitive layer 0, strongly V-sensitive layer 3
+        let sens = KvSensitivity {
+            alpha_k: vec![50.0, 1.0, 1.0, 1.0],
+            alpha_v: vec![1.0, 1.0, 1.0, 50.0],
+        };
+        let budget = KvqPlan::uniform(layers, 4).unwrap().bytes_per_lane(cap, d, heads);
+        let plan = KvqPlan::solve_for_budget(
+            layers, cap, d, heads, budget, &[2, 4, 8], Some(&sens),
+        )
+        .unwrap();
+        assert_eq!(plan.bits.len(), layers);
+        assert!(plan.bytes_per_lane(cap, d, heads) <= budget);
+        // sensitive streams get more bits than their quiet counterparts
+        assert!(plan.bits[0].0 > plan.bits[1].0, "{:?}", plan.bits);
+        assert!(plan.bits[3].1 > plan.bits[2].1, "{:?}", plan.bits);
+    }
+
+    #[test]
+    fn solve_for_budget_default_alphas_favor_k() {
+        let (layers, cap, d, heads) = (2usize, 16usize, 64usize, 2usize);
+        let budget = KvqPlan::uniform(layers, 4).unwrap().bytes_per_lane(cap, d, heads);
+        let plan =
+            KvqPlan::solve_for_budget(layers, cap, d, heads, budget, &[2, 4, 8], None).unwrap();
+        for &(kb, vb) in &plan.bits {
+            assert!(kb >= vb, "K must not get fewer bits than V by default: {:?}", plan.bits);
+        }
+    }
+
+    #[test]
+    fn budget_too_small_is_typed() {
+        let err = KvqPlan::solve_for_budget(2, 16, 64, 2, 64, &[2, 4, 8], None).unwrap_err();
+        match err {
+            KvqError::BudgetTooSmall { budget_bytes, min_lane_bytes } => {
+                assert_eq!(budget_bytes, 64);
+                assert!(min_lane_bytes > 64);
+            }
+            other => panic!("expected BudgetTooSmall, got {other:?}"),
+        }
+        assert_eq!(
+            KvqPlan::solve_for_budget(2, 16, 64, 2, 1 << 20, &[9], None).unwrap_err(),
+            KvqError::BadBits(9)
+        );
+    }
+
+    #[test]
+    fn store_rejects_bad_shapes() {
+        let plan = KvqPlan::uniform(2, 4).unwrap();
+        assert!(matches!(
+            QuantizedKvStore::new(3, 1, 4, 8, 2, plan.clone(), 1),
+            Err(KvqError::Shape(_))
+        ));
+        assert!(matches!(
+            QuantizedKvStore::new(2, 1, 4, 9, 2, plan.clone(), 1),
+            Err(KvqError::Shape(_))
+        ));
+        assert!(QuantizedKvStore::new(2, 1, 4, 8, 2, plan, 1).is_ok());
+    }
+
+    #[test]
+    fn store_attend_tracks_dense_attention() {
+        // 8-bit quantized attend over stored rows stays near the dense
+        // kernel's answer; the drift shrinks monotonically with bits
+        let (layers, slots, cap, d, heads) = (2usize, 2usize, 8usize, 32usize, 2usize);
+        let mut rng = Rng::new(42);
+        let ctx = 6usize;
+        let q: Vec<f32> = rng.gaussian_vec(d);
+        let krows: Vec<f32> = rng.gaussian_vec(ctx * d);
+        let vrows: Vec<f32> = rng.gaussian_vec(ctx * d);
+        let mut scores = vec![0f32; ctx];
+        let mut exact = vec![0f32; d];
+        attend_cached(&q, &krows, &vrows, ctx, heads, d / heads, &mut scores, &mut exact);
+        let norm: f64 = exact.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 8] {
+            let plan = KvqPlan::uniform(layers, bits).unwrap();
+            let mut store =
+                QuantizedKvStore::new(layers, slots, cap, d, heads, plan, DEFAULT_ROT_SEED)
+                    .unwrap();
+            for pos in 0..ctx {
+                store.store_row(1, 1, pos, &krows[pos * d..(pos + 1) * d],
+                                &vrows[pos * d..(pos + 1) * d]);
+            }
+            let mut scratch = store.scratch();
+            let mut out = vec![0f32; d];
+            store.attend(1, 1, ctx, &q, &mut scratch, &mut out);
+            let err: f64 = out
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / norm;
+            assert!(err < prev, "bits={bits}: {err} !< {prev}");
+            prev = err;
+        }
+        assert!(prev < 0.06, "8-bit drift too large: {prev}");
+    }
+
+    #[test]
+    fn slot_recycling_overwrites_codes_exactly() {
+        // store row A, overwrite with row B, overwrite with A again: the
+        // attend output must be bit-identical to the first A store (the
+        // packer must clear recycled bits, incl. non-byte-aligned widths)
+        let (d, heads) = (24usize, 2usize);
+        let mut rng = Rng::new(77);
+        let a_k = rng.gaussian_vec(d);
+        let a_v = rng.gaussian_vec(d);
+        let b_k = rng.gaussian_vec(d);
+        let b_v = rng.gaussian_vec(d);
+        let q = rng.gaussian_vec(d);
+        for bits in [3u8, 4, 5, 8] {
+            let plan = KvqPlan::uniform(1, bits).unwrap();
+            let mut store = QuantizedKvStore::new(1, 1, 4, d, heads, plan, 9).unwrap();
+            let mut scratch = store.scratch();
+            store.store_row(0, 0, 0, &a_k, &a_v);
+            let mut first = vec![0f32; d];
+            store.attend(0, 0, 1, &q, &mut scratch, &mut first);
+            store.store_row(0, 0, 0, &b_k, &b_v);
+            store.store_row(0, 0, 0, &a_k, &a_v);
+            let mut again = vec![0f32; d];
+            store.attend(0, 0, 1, &q, &mut scratch, &mut again);
+            assert_eq!(first, again, "bits={bits}: recycled slot must overwrite cleanly");
+        }
+    }
+
+    #[test]
+    fn sensitivity_estimation_is_positive_and_k_weighted() {
+        use crate::model::synthetic_manifest;
+        use crate::runtime::native::native_init;
+        let m = synthetic_manifest("kvq-sens", 32, 2, 2, 64, 16, 256, 1);
+        let model = NativeModel::new(&m).unwrap();
+        let params = native_init(&m, 3);
+        let sample: Vec<i32> = (0..12).map(|i| (i * 7 % 256) as i32).collect();
+        let sens = estimate_kv_sensitivity(&model, &m, &params, None, &sample, 1).unwrap();
+        assert_eq!(sens.alpha_k.len(), 2);
+        assert_eq!(sens.alpha_v.len(), 2);
+        for l in 0..2 {
+            assert!(sens.alpha_k[l].is_finite() && sens.alpha_k[l] > 0.0);
+            assert!(sens.alpha_v[l].is_finite() && sens.alpha_v[l] > 0.0);
+        }
+    }
+}

@@ -21,7 +21,10 @@
 //!   codes resident ([`runtime::PackedLayers`]) and computes `fwd_logits`
 //!   straight from them — zero full-matrix dequantization per forward,
 //!   with a pure-Rust transformer forward standing in when PJRT artifacts
-//!   are absent.
+//!   are absent. The same machinery compresses the serving KV cache
+//!   ([`kvq`]): K/V rows live as packed RaBitQ codes with a per-layer
+//!   AllocateBits bit plan, and attention runs directly over the codes
+//!   (`kernels::attend_cached_q`).
 //!
 //! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
 //! examples under `examples/`.
@@ -38,6 +41,7 @@ pub mod experiments;
 pub mod hadamard;
 pub mod json;
 pub mod kernels;
+pub mod kvq;
 pub mod model;
 pub mod net;
 pub mod quant;

@@ -8,6 +8,10 @@
 //!   table    --n 1..5            regenerate a paper table
 //!   serve    [--model tiny --requests N]   batching-server demo
 //!   serve    --http PORT [--max-queue N]   HTTP front-end (drains on stdin EOF)
+//!   serve    --kv-bits N                   RaBitQ-compress the KV cache at N bits
+//!   serve    --kv-budget BYTES             total KV RAM budget -> lane count
+//!                                          (with --kv-bits: uniform plan; alone:
+//!                                          per-layer AllocateBits plan)
 
 use anyhow::{bail, Result};
 
@@ -192,14 +196,34 @@ fn cmd_table(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--kv-bits N` / `--kv-budget BYTES` → KV storage policy + budget.
+fn kv_from_args(args: &Args) -> Result<(raana::kvq::KvqPolicy, usize)> {
+    use raana::kvq::KvqPolicy;
+    let budget = args.opt_usize("kv-budget", 0)?;
+    let policy = match args.opt_usize("kv-bits", 0)? {
+        0 if budget > 0 => {
+            // budget without an explicit width: let AllocateBits pick
+            // per-layer (K, V) bit-widths under the per-lane share
+            KvqPolicy::Budget { bit_choices: vec![2, 3, 4, 5, 6, 8] }
+        }
+        0 => KvqPolicy::DenseF32,
+        b if (1..=8).contains(&b) => KvqPolicy::Uniform(b as u8),
+        b => bail!("--kv-bits must be in 1..=8, got {b}"),
+    };
+    Ok((policy, budget))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.opt_or("model", "tiny");
     let n_req = args.opt_usize("requests", 16)?;
     let new_tokens = args.opt_usize("tokens", 16)?;
     // Bounded admission queue: HTTP runs default to 64 (backpressure as
     // 429), in-process demo runs stay unbounded as before.
+    let (kv, kv_budget_bytes) = kv_from_args(args)?;
     let cfg = raana::serve::ServeConfig {
         max_queue: args.opt_usize("max-queue", if args.opt("http").is_some() { 64 } else { 0 })?,
+        kv,
+        kv_budget_bytes,
     };
 
     // Artifact-free path: serve a native-initialized model straight from
@@ -246,7 +270,7 @@ fn build_artifact_server(
     let batch = manifest.eval_batch;
     let params = env.params.clone();
     drop(env); // the server thread owns its own (native) runtime
-    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg);
+    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg)?;
     Ok((server, batch))
 }
 
@@ -270,7 +294,7 @@ fn build_native_demo_server(
         packed.avg_bits()
     );
     let batch = manifest.eval_batch;
-    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg);
+    let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg)?;
     Ok((server, batch))
 }
 

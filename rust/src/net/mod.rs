@@ -22,6 +22,9 @@
 //! * `GET /healthz` — liveness: `{"ok":true,"running":bool}`.
 //! * `GET /v1/stats` — live [`ServerStats`] snapshot plus the current
 //!   admission-queue depth, readable **while generation is in flight**.
+//!   Includes the KV-cache economics: `kv_bits` (32 = dense f32),
+//!   `kv_bytes_per_lane`, and the lane pool's size (`lanes`) and
+//!   occupancy (`lanes_active`).
 //!
 //! # Cancellation
 //!
@@ -646,6 +649,10 @@ fn stats_json(server: &Server) -> Value {
         ("total_rows", json::num(s.total_rows as f64)),
         ("cancelled", json::num(s.cancelled as f64)),
         ("queue_depth", json::num(server.queue_depth() as f64)),
+        ("kv_bits", json::num(s.kv_bits)),
+        ("kv_bytes_per_lane", json::num(s.kv_bytes_per_lane as f64)),
+        ("lanes", json::num(s.lanes as f64)),
+        ("lanes_active", json::num(s.lanes_active as f64)),
         ("running", Value::Bool(server.is_running())),
         ("throughput_tok_s", json::num(s.throughput_tok_s())),
         ("p50_latency_secs", json::num(s.p50_latency())),

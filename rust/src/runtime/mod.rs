@@ -22,7 +22,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-pub use native::{native_init, KvCache, NativeModel, PackedLayers};
+pub use native::{native_init, KvAttendScratch, KvCache, NativeModel, PackedLayers};
 
 use crate::model::{ArtifactPaths, Manifest, ModelParams};
 
@@ -331,6 +331,20 @@ impl ModelRuntime {
     /// ```
     pub fn new_kv_cache(&self, slots: usize) -> KvCache {
         self.native_model.kv_cache(slots)
+    }
+
+    /// [`ModelRuntime::new_kv_cache`] with **quantized** row storage: K/V
+    /// rows live as packed RaBitQ codes under the per-layer bit `plan` and
+    /// attention runs directly over the codes (see [`crate::kvq`]).
+    /// Construction errors are typed so servers can refuse bad KV configs
+    /// up front.
+    pub fn new_kv_cache_quantized(
+        &self,
+        slots: usize,
+        plan: crate::kvq::KvqPlan,
+        rot_seed: u64,
+    ) -> Result<KvCache, crate::kvq::KvqError> {
+        self.native_model.kv_cache_quantized(slots, plan, rot_seed)
     }
 
     /// Run a prompt once, filling cache `slot`; returns last-token logits

@@ -33,6 +33,7 @@
 use anyhow::{Context, Result};
 
 use crate::kernels;
+use crate::kvq::{KvqError, KvqPlan, QuantizedKvStore};
 use crate::model::{Manifest, ModelParams};
 use crate::quant::{LayerCalib, QuantizedLinear, TrickConfig};
 use crate::rng::Rng;
@@ -252,6 +253,13 @@ impl NativeModel {
             }
         }
 
+        // quantized caches attend over their just-stored codes, so the
+        // prefill borrows the cache's recycled code-path scratch
+        let mut kv_scratch = match cache.as_mut() {
+            Some((kv, _)) if kv.is_quantized() => Some(kv.take_scratch()),
+            _ => None,
+        };
+
         for layer in 0..self.n_layers {
             let pre = format!("blk{layer}.");
 
@@ -272,7 +280,31 @@ impl NativeModel {
                     kv.store(layer, *slot, si, k.row(si), v.row(si));
                 }
             }
-            let att = self.attention(&q, &k, &v, s);
+            // A quantized cache's prefill attends over the codes it just
+            // stored — each query position sees exactly the representation
+            // later decode steps will see, which is what makes quantized
+            // decode bit-identical to a quantized re-prefill. Dense caches
+            // keep the bit-exact in-forward f32 path.
+            let att = match cache.as_mut() {
+                Some((kv, slot)) if kv.is_quantized() => {
+                    let scratch = kv_scratch.as_mut().expect("quantized prefill scratch");
+                    let mut o = Matrix::zeros(s, d);
+                    for si in 0..s {
+                        kv.attend(
+                            layer,
+                            *slot,
+                            si + 1,
+                            q.row(si),
+                            self.n_heads,
+                            self.head_dim,
+                            scratch,
+                            o.row_mut(si),
+                        );
+                    }
+                    o
+                }
+                _ => self.attention(&q, &k, &v, s),
+            };
             let proj = lin("attn.wo", &att, capture.as_deref_mut())?;
             h.add_assign(&proj);
 
@@ -290,6 +322,9 @@ impl NativeModel {
             h.add_assign(&y);
         }
 
+        if let (Some(s), Some((kv, _))) = (kv_scratch.take(), cache.as_mut()) {
+            kv.put_scratch(s);
+        }
         Ok(layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?))
     }
 
@@ -367,6 +402,26 @@ impl NativeModel {
     /// with `slots` independent request slots.
     pub fn kv_cache(&self, slots: usize) -> KvCache {
         KvCache::new(self.n_layers, slots, self.seq_len, self.d_model)
+    }
+
+    /// [`NativeModel::kv_cache`] with **quantized** storage: rows live as
+    /// packed RaBitQ codes under the per-layer bit `plan` (see
+    /// [`crate::kvq`]); prefill and decode attend directly over the codes.
+    pub fn kv_cache_quantized(
+        &self,
+        slots: usize,
+        plan: KvqPlan,
+        rot_seed: u64,
+    ) -> Result<KvCache, KvqError> {
+        KvCache::new_quantized(
+            self.n_layers,
+            slots,
+            self.seq_len,
+            self.d_model,
+            self.n_heads,
+            plan,
+            rot_seed,
+        )
     }
 
     /// Run a whole prompt once at positions `0..tokens.len()`, fill cache
@@ -468,7 +523,7 @@ impl NativeModel {
             }
         }
 
-        let mut scores = vec![0f32; cache.capacity()];
+        let mut scratch = cache.take_scratch();
         for layer in 0..self.n_layers {
             let pre = format!("blk{layer}.");
 
@@ -484,15 +539,14 @@ impl NativeModel {
             for (i, &sl) in slots.iter().enumerate() {
                 let pos = cache.len(sl);
                 cache.store(layer, sl, pos, k.row(i), v.row(i));
-                let (krows, vrows) = cache.window(layer, sl, pos + 1);
-                kernels::attend_cached(
-                    q.row(i),
-                    krows,
-                    vrows,
+                cache.attend(
+                    layer,
+                    sl,
                     pos + 1,
+                    q.row(i),
                     self.n_heads,
                     self.head_dim,
-                    &mut scores,
+                    &mut scratch,
                     att.row_mut(i),
                 );
             }
@@ -513,6 +567,7 @@ impl NativeModel {
             let y = self.linear(m, params, packed, &format!("{pre}mlp.fc2"), &y, threads, None)?;
             h.add_assign(&y);
         }
+        cache.put_scratch(scratch);
         let hid = layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?);
         for &sl in slots {
             cache.advance(sl);
@@ -618,36 +673,78 @@ impl PackedLayers {
 /// model's **absolute** position embeddings change every remaining
 /// token's position, invalidating the cached rows; in-window decoding
 /// (the common case) never recomputes anything.
-#[deny(missing_docs)]
+///
+/// # Backing stores
+///
+/// Two storage representations live behind this one API, so prefill,
+/// decode, and the window slide are storage-agnostic:
+///
+/// * **Dense f32** ([`KvCache::new`]) — rows stored verbatim; attention
+///   via [`crate::kernels::attend_cached`]. Bit-identical to full
+///   recompute (the PR-2 contract, unchanged).
+/// * **Quantized codes** ([`KvCache::new_quantized`]) — rows RHT-rotated
+///   per head and RaBitQ-packed at store time under a per-layer
+///   [`KvqPlan`] ([`crate::kvq`]); attention runs directly over the codes
+///   via [`crate::kernels::attend_cached_q`]. Accuracy is *bounded
+///   drift* (~`2^-bits`), in exchange for several-fold more lanes per
+///   byte of cache RAM.
 #[derive(Clone)]
 pub struct KvCache {
     n_layers: usize,
     slots: usize,
     capacity: usize,
     d_model: usize,
-    /// Flat K rows: `(layer, slot, pos)` → `d_model` f32s.
-    k: Vec<f32>,
-    /// Flat V rows, same layout as `k`.
-    v: Vec<f32>,
     /// Filled prefix length per slot.
     len: Vec<usize>,
+    store: KvStore,
+    /// Parked attention scratch, reused across prefill/decode calls so the
+    /// serving loop allocates nothing per token (see
+    /// [`KvCache::take_scratch`]).
+    parked_scratch: Option<KvAttendScratch>,
+}
+
+/// The two storage backends behind [`KvCache`].
+#[derive(Clone, Debug)]
+enum KvStore {
+    /// Full-precision rows: flat `(layer, slot, pos) -> d_model` f32s.
+    Dense {
+        /// Flat K rows.
+        k: Vec<f32>,
+        /// Flat V rows, same layout.
+        v: Vec<f32>,
+    },
+    /// RaBitQ-coded rows (boxed: the store holds its own per-layer
+    /// buffers and scratch).
+    Quantized(Box<QuantizedKvStore>),
+}
+
+/// Caller-owned attention scratch for [`KvCache`] batch loops: holds the
+/// dense score buffer and (for quantized caches) the code-path scratch,
+/// so neither backend allocates per query. Obtain via
+/// [`KvCache::attend_scratch`] (fresh) or [`KvCache::take_scratch`]
+/// (recycled across calls).
+#[derive(Clone)]
+pub struct KvAttendScratch {
+    scores: Vec<f32>,
+    q: Option<kernels::AttendQScratch>,
 }
 
 impl std::fmt::Debug for KvCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "KvCache(layers={} slots={} capacity={} d={} lens={:?})",
-            self.n_layers, self.slots, self.capacity, self.d_model, self.len
+            "KvCache(layers={} slots={} capacity={} d={} bits={:.1} lens={:?})",
+            self.n_layers, self.slots, self.capacity, self.d_model, self.kv_bits(), self.len
         )
     }
 }
 
 #[deny(missing_docs)]
 impl KvCache {
-    /// Allocate an all-empty cache. Every dimension must be >= 1; memory
-    /// is `2 * n_layers * slots * capacity * d_model` f32s, allocated once
-    /// up front so the serving loop never allocates per token.
+    /// Allocate an all-empty **dense f32** cache. Every dimension must be
+    /// >= 1; memory is `2 * n_layers * slots * capacity * d_model` f32s,
+    /// allocated once up front so the serving loop never allocates per
+    /// token.
     pub fn new(n_layers: usize, slots: usize, capacity: usize, d_model: usize) -> KvCache {
         assert!(
             n_layers >= 1 && slots >= 1 && capacity >= 1 && d_model >= 1,
@@ -659,10 +756,37 @@ impl KvCache {
             slots,
             capacity,
             d_model,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
             len: vec![0; slots],
+            store: KvStore::Dense { k: vec![0.0; n], v: vec![0.0; n] },
+            parked_scratch: None,
         }
+    }
+
+    /// Allocate an all-empty **quantized** cache: rows are RaBitQ-coded at
+    /// store time under the per-layer bit `plan` (see [`crate::kvq`]).
+    /// `rot_seed` seeds the shared per-head rotation signs
+    /// ([`crate::kvq::DEFAULT_ROT_SEED`] serves fine). Errors are typed
+    /// ([`KvqError`]) so servers can refuse bad configs at construction.
+    pub fn new_quantized(
+        n_layers: usize,
+        slots: usize,
+        capacity: usize,
+        d_model: usize,
+        n_heads: usize,
+        plan: KvqPlan,
+        rot_seed: u64,
+    ) -> Result<KvCache, KvqError> {
+        let store =
+            QuantizedKvStore::new(n_layers, slots, capacity, d_model, n_heads, plan, rot_seed)?;
+        Ok(KvCache {
+            n_layers,
+            slots,
+            capacity,
+            d_model,
+            len: vec![0; slots],
+            store: KvStore::Quantized(Box::new(store)),
+            parked_scratch: None,
+        })
     }
 
     /// Number of independent request slots.
@@ -692,38 +816,151 @@ impl KvCache {
     }
 
     /// Evict `slot`: drop its cached context so the slot can host a new
-    /// request. O(1) — rows are overwritten by the next prefill.
+    /// request. O(1) — rows are overwritten by the next prefill (the
+    /// quantized packer clears recycled code bits on store).
     pub fn reset(&mut self, slot: usize) {
         self.len[slot] = 0;
     }
 
-    /// Total buffer footprint in bytes (K + V payloads).
-    pub fn mem_bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    /// True when rows live as packed RaBitQ codes rather than f32.
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.store, KvStore::Quantized(_))
     }
 
-    /// Flat offset of `(layer, slot)`'s first row.
+    /// Mean stored bits per cached element: 32 for the dense store, the
+    /// plan average for quantized codes (`/v1/stats` reports this).
+    pub fn kv_bits(&self) -> f64 {
+        match &self.store {
+            KvStore::Dense { .. } => 32.0,
+            KvStore::Quantized(q) => q.plan().avg_bits(),
+        }
+    }
+
+    /// Per-lane (per-slot) footprint in bytes — the quantity a KV memory
+    /// budget divides by to get a lane count.
+    pub fn bytes_per_lane(&self) -> usize {
+        match &self.store {
+            KvStore::Dense { .. } => {
+                crate::kvq::dense_bytes_per_lane(self.n_layers, self.capacity, self.d_model)
+            }
+            KvStore::Quantized(q) => q.bytes_per_lane(),
+        }
+    }
+
+    /// Total buffer footprint in bytes (K + V payloads, plus rescale
+    /// tables for the quantized store).
+    pub fn mem_bytes(&self) -> usize {
+        match &self.store {
+            KvStore::Dense { k, v } => (k.len() + v.len()) * std::mem::size_of::<f32>(),
+            KvStore::Quantized(q) => q.mem_bytes(),
+        }
+    }
+
+    /// Flat offset of `(layer, slot)`'s first row (dense layout).
     fn base(&self, layer: usize, slot: usize) -> usize {
         (layer * self.slots + slot) * self.capacity * self.d_model
     }
 
-    /// Store one K row and one V row at `pos` of `(layer, slot)`. Does not
-    /// touch the slot length — callers commit via [`KvCache::set_len`] /
-    /// [`KvCache::advance`] once every layer has stored its rows.
+    /// Store one K row and one V row at `pos` of `(layer, slot)` — copied
+    /// verbatim (dense) or rotated + quantized + packed in place
+    /// (quantized). Does not touch the slot length — callers commit via
+    /// [`KvCache::set_len`] / [`KvCache::advance`] once every layer has
+    /// stored its rows.
     pub(crate) fn store(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
         debug_assert!(pos < self.capacity && k.len() == self.d_model && v.len() == self.d_model);
         let at = self.base(layer, slot) + pos * self.d_model;
-        self.k[at..at + self.d_model].copy_from_slice(k);
-        self.v[at..at + self.d_model].copy_from_slice(v);
+        match &mut self.store {
+            KvStore::Dense { k: dk, v: dv } => {
+                dk[at..at + self.d_model].copy_from_slice(k);
+                dv[at..at + self.d_model].copy_from_slice(v);
+            }
+            KvStore::Quantized(q) => q.store_row(layer, slot, pos, k, v),
+        }
     }
 
     /// The first `n` cached (K, V) rows of `(layer, slot)`, contiguous —
     /// the gather path [`crate::kernels::attend_cached`] consumes.
+    /// **Dense store only**: quantized rows have no f32 representation to
+    /// hand out (use [`KvCache::attend`]).
     pub(crate) fn window(&self, layer: usize, slot: usize, n: usize) -> (&[f32], &[f32]) {
         debug_assert!(n <= self.capacity);
         let at = self.base(layer, slot);
         let end = at + n * self.d_model;
-        (&self.k[at..end], &self.v[at..end])
+        match &self.store {
+            KvStore::Dense { k, v } => (&k[at..end], &v[at..end]),
+            KvStore::Quantized(_) => {
+                panic!("KvCache::window is dense-only; quantized rows are packed codes")
+            }
+        }
+    }
+
+    /// Fresh attention scratch sized for this cache's window (allocate
+    /// once per batch loop; both backends then allocate nothing per
+    /// query).
+    pub fn attend_scratch(&self) -> KvAttendScratch {
+        KvAttendScratch {
+            scores: vec![0f32; self.capacity],
+            q: match &self.store {
+                KvStore::Dense { .. } => None,
+                KvStore::Quantized(qs) => Some(qs.scratch()),
+            },
+        }
+    }
+
+    /// Recycled attention scratch: hands back the parked buffers (or a
+    /// fresh set the first time) so the per-token decode path allocates
+    /// nothing; return it with [`KvCache::put_scratch`] when the batch
+    /// loop is done.
+    pub(crate) fn take_scratch(&mut self) -> KvAttendScratch {
+        match self.parked_scratch.take() {
+            Some(s) => s,
+            None => self.attend_scratch(),
+        }
+    }
+
+    /// Park a scratch for the next [`KvCache::take_scratch`].
+    pub(crate) fn put_scratch(&mut self, scratch: KvAttendScratch) {
+        self.parked_scratch = Some(scratch);
+    }
+
+    /// Single-query attention over the first `ctx` cached rows of
+    /// `(layer, slot)`, dispatched to the backend's kernel
+    /// ([`crate::kernels::attend_cached`] on f32 rows,
+    /// [`crate::kernels::attend_cached_q`] on codes). Accumulates into
+    /// `out` — pass it zeroed, per the kernel contract. Both paths reduce
+    /// each output row in a batch-size-independent order, so decode steps
+    /// reproduce a same-backend prefill of the same context bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn attend(
+        &self,
+        layer: usize,
+        slot: usize,
+        ctx: usize,
+        q: &[f32],
+        n_heads: usize,
+        head_dim: usize,
+        scratch: &mut KvAttendScratch,
+        out: &mut [f32],
+    ) {
+        match &self.store {
+            KvStore::Dense { .. } => {
+                let (krows, vrows) = self.window(layer, slot, ctx);
+                kernels::attend_cached(
+                    q,
+                    krows,
+                    vrows,
+                    ctx,
+                    n_heads,
+                    head_dim,
+                    &mut scratch.scores,
+                    out,
+                );
+            }
+            KvStore::Quantized(qs) => {
+                let qscratch = scratch.q.as_mut().expect("quantized scratch (attend_scratch)");
+                qs.attend(layer, slot, ctx, q, qscratch, out);
+            }
+        }
     }
 
     /// Commit a prefilled prefix length.
@@ -740,7 +977,8 @@ impl KvCache {
 
     /// Shape-check against a model: layer count, width, and window must
     /// match (`capacity <= seq_len`, or decode positions would index past
-    /// the positional-embedding table).
+    /// the positional-embedding table); a quantized store's head split
+    /// must match too (its rotation is per head).
     pub(crate) fn check_model(&self, model: &NativeModel) -> Result<()> {
         anyhow::ensure!(
             self.n_layers == model.n_layers && self.d_model == model.d_model,
@@ -756,6 +994,14 @@ impl KvCache {
             self.capacity,
             model.seq_len
         );
+        if let KvStore::Quantized(q) = &self.store {
+            anyhow::ensure!(
+                q.n_heads() == model.n_heads,
+                "quantized cache heads {} != model heads {}",
+                q.n_heads(),
+                model.n_heads
+            );
+        }
         Ok(())
     }
 }
@@ -1017,6 +1263,134 @@ mod tests {
         // mismatched cache shape
         let mut wrong = KvCache::new(model.n_layers + 1, 1, model.seq_len, model.d_model);
         assert!(model.prefill(&m, &params, None, &[1], &mut wrong, 0, 1).is_err());
+    }
+
+    #[test]
+    fn quantized_kv_decode_matches_quantized_prefill_bit_exact() {
+        // quantize→pack is deterministic and every attend reduces in a
+        // batch-size-independent order, so a decode step over a quantized
+        // cache must equal re-prefilling the same context into a fresh
+        // quantized cache — bit for bit, at any bit-width
+        use crate::kvq::{KvqPlan, DEFAULT_ROT_SEED};
+        let (m, model, params, _) = tiny_setup();
+        for bits in [2u8, 4, 8] {
+            let plan = KvqPlan::uniform(model.n_layers, bits).unwrap();
+            let mut cache =
+                model.kv_cache_quantized(1, plan.clone(), DEFAULT_ROT_SEED).unwrap();
+            let mut ctx: Vec<i32> = vec![5, 9, 200];
+            let mut logits =
+                model.prefill(&m, &params, None, &ctx, &mut cache, 0, 2).unwrap();
+            for step in 0..5 {
+                let tok = crate::util::argmax(&logits) as i32;
+                logits = model
+                    .decode_step(&m, &params, None, &mut cache, &[0], &[tok], 2)
+                    .unwrap();
+                ctx.push(tok);
+                let mut fresh =
+                    model.kv_cache_quantized(1, plan.clone(), DEFAULT_ROT_SEED).unwrap();
+                let want =
+                    model.prefill(&m, &params, None, &ctx, &mut fresh, 0, 2).unwrap();
+                assert_eq!(
+                    logits, want,
+                    "bits={bits} step {step}: quantized decode must equal quantized re-prefill"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kv_drift_bounded_and_monotone_in_bits() {
+        // bounded drift vs the f32 cache, shrinking with bits (the
+        // serving-level quality ladder; the full greedy-agreement property
+        // lives in rust/tests/integration.rs)
+        use crate::kvq::{KvqPlan, DEFAULT_ROT_SEED};
+        let (m, model, params, _) = tiny_setup();
+        let prompt: Vec<i32> = (0..10).map(|i| (i * 13 % 256) as i32).collect();
+        let mut dense = model.kv_cache(1);
+        let exact = model.prefill(&m, &params, None, &prompt, &mut dense, 0, 2).unwrap();
+        let norm: f64 = exact.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        let mut prev = f64::INFINITY;
+        for bits in [2u8, 4, 8] {
+            let plan = KvqPlan::uniform(model.n_layers, bits).unwrap();
+            let mut cache = model.kv_cache_quantized(1, plan, DEFAULT_ROT_SEED).unwrap();
+            let got = model.prefill(&m, &params, None, &prompt, &mut cache, 0, 2).unwrap();
+            let err: f64 = got
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+                / norm;
+            assert!(err < prev, "bits={bits}: logit drift {err} !< {prev}");
+            assert!(err.is_finite());
+            prev = err;
+        }
+        assert!(prev < 0.05, "8-bit logit drift too large: {prev}");
+    }
+
+    #[test]
+    fn quantized_cache_rejects_mismatched_models() {
+        use crate::kvq::{KvqPlan, DEFAULT_ROT_SEED};
+        let (m, model, params, _) = tiny_setup();
+        // plan arity != layers is a typed construction error
+        assert!(model
+            .kv_cache_quantized(1, KvqPlan::uniform(model.n_layers + 1, 4).unwrap(), 1)
+            .is_err());
+        // head mismatch caught by check_model at prefill time
+        let mut wrong = KvCache::new_quantized(
+            model.n_layers,
+            1,
+            model.seq_len,
+            model.d_model,
+            model.n_heads * 2,
+            KvqPlan::uniform(model.n_layers, 4).unwrap(),
+            DEFAULT_ROT_SEED,
+        )
+        .unwrap();
+        assert!(model.prefill(&m, &params, None, &[1, 2], &mut wrong, 0, 1).is_err());
+    }
+
+    #[test]
+    fn quantized_cache_window_slide_reprefill_works() {
+        use crate::kvq::{KvqPlan, DEFAULT_ROT_SEED};
+        let (m, model, params, _) = tiny_setup();
+        let plan = KvqPlan::uniform(model.n_layers, 4).unwrap();
+        let mut cache = model.kv_cache_quantized(1, plan, DEFAULT_ROT_SEED).unwrap();
+        let seq = model.seq_len;
+        let mut ctx: Vec<i32> = (0..seq).map(|i| (i * 3 % 256) as i32).collect();
+        let mut logits =
+            model.prefill(&m, &params, None, &ctx, &mut cache, 0, 1).unwrap();
+        assert!(cache.is_full(0));
+        // slide twice: re-prefill the trailing window, then keep decoding
+        for _ in 0..2 {
+            let tok = crate::util::argmax(&logits) as i32;
+            ctx.push(tok);
+            let window = &ctx[ctx.len() - seq..];
+            logits = model.prefill(&m, &params, None, window, &mut cache, 0, 1).unwrap();
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(cache.len(0), seq);
+    }
+
+    #[test]
+    fn kv_cache_reports_storage_metrics() {
+        use crate::kvq::{dense_bytes_per_lane, KvqPlan, DEFAULT_ROT_SEED};
+        let (_, model, _, _) = tiny_setup();
+        let dense = model.kv_cache(2);
+        assert!(!dense.is_quantized());
+        assert_eq!(dense.kv_bits(), 32.0);
+        assert_eq!(
+            dense.bytes_per_lane(),
+            dense_bytes_per_lane(model.n_layers, model.seq_len, model.d_model)
+        );
+        let q = model
+            .kv_cache_quantized(2, KvqPlan::uniform(model.n_layers, 4).unwrap(), DEFAULT_ROT_SEED)
+            .unwrap();
+        assert!(q.is_quantized());
+        assert_eq!(q.kv_bits(), 4.0);
+        // the whole point: >= 2x lanes per byte at 4-bit
+        assert!(dense.bytes_per_lane() >= 2 * q.bytes_per_lane());
+        assert!(q.mem_bytes() < dense.mem_bytes());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //!
 //! Architecture (vLLM-router-style, scaled to this repo): callers submit
 //! [`Request`]s to a [`Server`] handle; a batcher thread maps requests
-//! onto a fixed pool of KV-cache lanes (`eval_batch` of them). Each newly
+//! onto a fixed pool of KV-cache lanes (`eval_batch` of them by default;
+//! with a [`ServeConfig::kv_budget_bytes`] the pool is sized
+//! `budget / bytes_per_lane`, and [`ServeConfig::kv`] can store lanes as
+//! RaBitQ codes so the same RAM holds several times the lanes — see
+//! [`crate::kvq`]). Each newly
 //! admitted request is **prefilled** once — its prompt runs through the
 //! model a single time, depositing per-layer K/V rows into its lane of a
 //! [`KvCache`] — and from then on rides fixed-shape **batched decode
@@ -37,8 +41,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::kvq::{self, KvSensitivity, KvqError, KvqPlan, KvqPolicy};
 use crate::model::{Manifest, ModelParams};
-use crate::runtime::{KvCache, ModelRuntime, PackedLayers};
+use crate::runtime::{KvCache, ModelRuntime, NativeModel, PackedLayers};
 use crate::util::percentile;
 
 /// A generation request.
@@ -168,12 +173,130 @@ pub struct ServeConfig {
     /// [`AdmitError::QueueFull`] instead of queueing — the backpressure
     /// signal the HTTP front-end surfaces as 429.
     pub max_queue: usize,
+    /// KV-cache storage policy for the lane pool: dense f32 (default),
+    /// uniform N-bit RaBitQ codes, or a per-layer AllocateBits plan
+    /// solved under the budget (see [`crate::kvq::KvqPolicy`]).
+    pub kv: KvqPolicy,
+    /// Total KV memory budget in bytes across the whole lane pool; `0`
+    /// means "no budget" (the pool stays `eval_batch` lanes wide). With a
+    /// budget, the lane count becomes `budget / bytes_per_lane` — the
+    /// memory→lanes conversion that makes 4-bit KV serve more concurrent
+    /// requests than f32 from the same RAM. A budget too small for even
+    /// one lane is a typed **construction** error
+    /// ([`KvqError::BudgetTooSmall`]), never a runtime death.
+    pub kv_budget_bytes: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_queue: 0 }
+        ServeConfig { max_queue: 0, kv: KvqPolicy::DenseF32, kv_budget_bytes: 0 }
     }
+}
+
+/// Hard ceiling on lanes derived from a KV byte budget: past this, decode
+/// batches get so wide that per-step latency (not memory) dominates, and a
+/// generous budget should not silently produce a pathological pool.
+pub const MAX_KV_LANES: usize = 256;
+
+/// The fully-resolved KV lane-pool configuration: bit plan (None = dense
+/// f32), lane count, and the per-lane footprint both were derived from.
+/// Produced by config validation at `Server` construction (or inside the
+/// batcher for factory-made runtimes) and reported through
+/// [`ServerStats`].
+#[derive(Clone, Debug)]
+struct ResolvedKv {
+    plan: Option<KvqPlan>,
+    lanes: usize,
+    bytes_per_lane: usize,
+    kv_bits: f64,
+}
+
+/// Deterministic calibration prompt for KV sensitivity estimation.
+fn kv_calibration_sample(seq_len: usize, vocab: usize) -> Vec<i32> {
+    (0..seq_len.min(32)).map(|i| ((i * 7 + 1) % vocab) as i32).collect()
+}
+
+/// Measure per-layer KV sensitivities when the policy needs them
+/// ([`KvqPolicy::Budget`]): one short prefill over a deterministic sample.
+fn kv_sensitivity_if_needed(
+    cfg: &ServeConfig,
+    model: &NativeModel,
+    manifest: &Manifest,
+    params: &ModelParams,
+    packed: Option<&PackedLayers>,
+) -> Result<Option<KvSensitivity>> {
+    if !matches!(cfg.kv, KvqPolicy::Budget { .. }) {
+        return Ok(None);
+    }
+    let sample = kv_calibration_sample(model.seq_len, model.vocab);
+    Ok(Some(kvq::estimate_kv_sensitivity(model, manifest, params, packed, &sample, 0)?))
+}
+
+/// Validate + resolve the KV config against a model: bit plan, per-lane
+/// bytes, lane count. All failure modes are typed [`KvqError`]s — this is
+/// the config-validation surface `Server::start_native_packed_with` runs
+/// **before** spawning anything.
+fn resolve_kv(
+    cfg: &ServeConfig,
+    model: &NativeModel,
+    eval_batch: usize,
+    sens: Option<&KvSensitivity>,
+) -> Result<ResolvedKv, KvqError> {
+    // Budget policy: each of the eval_batch "baseline" lanes gets an equal
+    // share of the total budget as its per-lane cap; the actual lane count
+    // is then recomputed from what the solved plan really costs. When the
+    // equal share is too aggressive (the total still fits >= 1 lane, just
+    // fewer than eval_batch), fall back to the cheapest admissible lane
+    // size — BudgetTooSmall is reserved for budgets that truly cannot fit
+    // one lane, and always reports the user's configured total.
+    let lane_budget = if cfg.kv_budget_bytes > 0 {
+        Some((cfg.kv_budget_bytes / eval_batch.max(1)).max(1))
+    } else {
+        None
+    };
+    let solve = |lane_budget: Option<usize>| {
+        cfg.kv.plan(
+            model.n_layers,
+            model.seq_len,
+            model.d_model,
+            model.n_heads,
+            lane_budget,
+            sens,
+        )
+    };
+    let plan = match solve(lane_budget) {
+        Ok(p) => p,
+        Err(KvqError::BudgetTooSmall { min_lane_bytes, .. })
+            if cfg.kv_budget_bytes >= min_lane_bytes =>
+        {
+            solve(Some(min_lane_bytes))?
+        }
+        Err(KvqError::BudgetTooSmall { min_lane_bytes, .. }) => {
+            return Err(KvqError::BudgetTooSmall {
+                budget_bytes: cfg.kv_budget_bytes,
+                min_lane_bytes,
+            });
+        }
+        Err(e) => return Err(e),
+    };
+    let bytes_per_lane = match &plan {
+        Some(p) => p.bytes_per_lane(model.seq_len, model.d_model, model.n_heads),
+        None => kvq::dense_bytes_per_lane(model.n_layers, model.seq_len, model.d_model),
+    };
+    let lanes = if cfg.kv_budget_bytes == 0 {
+        eval_batch
+    } else {
+        let n = cfg.kv_budget_bytes / bytes_per_lane;
+        if n == 0 {
+            return Err(KvqError::BudgetTooSmall {
+                budget_bytes: cfg.kv_budget_bytes,
+                min_lane_bytes: bytes_per_lane,
+            });
+        }
+        n.min(MAX_KV_LANES)
+    };
+    let kv_bits = plan.as_ref().map(|p| p.avg_bits()).unwrap_or(32.0);
+    Ok(ResolvedKv { plan, lanes, bytes_per_lane, kv_bits })
 }
 
 /// Where a request's results go: a single completion channel
@@ -283,6 +406,15 @@ pub struct ServerStats {
     pub cancelled: usize,
     pub latencies: Vec<f64>,
     pub wall_secs: f64,
+    /// Mean stored bits per cached KV element (32 = dense f32 rows,
+    /// lower = RaBitQ-compressed cache; see [`crate::kvq`]).
+    pub kv_bits: f64,
+    /// Per-lane KV footprint in bytes (what a memory budget divides by).
+    pub kv_bytes_per_lane: usize,
+    /// KV lane-pool width (max concurrently-decoding requests).
+    pub lanes: usize,
+    /// Lanes currently holding an active request (live snapshot only).
+    pub lanes_active: usize,
 }
 
 impl ServerStats {
@@ -355,8 +487,27 @@ impl Server {
     }
 
     /// [`Server::start`] with explicit [`ServeConfig`] (bounded admission
-    /// queue etc.).
+    /// queue, KV storage policy, …).
+    ///
+    /// The factory path cannot validate the KV config eagerly (the model
+    /// shape only exists once the factory has run inside the batcher
+    /// thread), so a bad KV config surfaces as a dead batcher whose error
+    /// [`Server::shutdown`] returns. Prefer
+    /// [`Server::start_native_packed_with`], which validates at
+    /// construction and returns a typed error instead.
     pub fn start_with<F>(factory: F, params: ModelParams, cfg: ServeConfig) -> Server
+    where
+        F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
+    {
+        Server::start_impl(factory, params, cfg, None)
+    }
+
+    fn start_impl<F>(
+        factory: F,
+        params: ModelParams,
+        cfg: ServeConfig,
+        resolved: Option<ResolvedKv>,
+    ) -> Server
     where
         F: FnOnce() -> Result<ModelRuntime> + Send + 'static,
     {
@@ -372,7 +523,7 @@ impl Server {
         let s2 = Arc::clone(&shared);
         let worker = thread::spawn(move || {
             let result = match factory() {
-                Ok(mrt) => batcher_loop(&s2, mrt, params),
+                Ok(mrt) => batcher_loop(&s2, mrt, params, &cfg, resolved),
                 Err(e) => Err(e),
             };
             // Dead first, then drain: submit checks the flag under the
@@ -389,11 +540,18 @@ impl Server {
     /// and every decode step compute directly on RaBitQ codes via
     /// `qgemm` — no AOT artifacts, no dense weight reads, zero
     /// dequantization on the request path.
+    ///
+    /// # Errors
+    ///
+    /// Typed [`KvqError`]s from KV config validation (a budget too small
+    /// for one lane, bad bit-widths, shape mismatches) — checked here, at
+    /// construction, so a misconfigured server never spawns a batcher that
+    /// would die at its first allocation.
     pub fn start_native_packed(
         manifest: Manifest,
         params: ModelParams,
         packed: PackedLayers,
-    ) -> Server {
+    ) -> Result<Server, KvqError> {
         Server::start_native_packed_with(manifest, params, packed, ServeConfig::default())
     }
 
@@ -403,8 +561,15 @@ impl Server {
         params: ModelParams,
         packed: PackedLayers,
         cfg: ServeConfig,
-    ) -> Server {
-        Server::start_with(
+    ) -> Result<Server, KvqError> {
+        // Eager KV validation: model shape, sensitivity calibration (only
+        // when the policy needs it), bit plan, lane count — every failure
+        // is a typed construction error, not a batcher death.
+        let model = NativeModel::new(&manifest).map_err(|e| KvqError::Shape(e.to_string()))?;
+        let sens = kv_sensitivity_if_needed(&cfg, &model, &manifest, &params, Some(&packed))
+            .map_err(|e| KvqError::Shape(format!("KV sensitivity calibration failed: {e}")))?;
+        let resolved = resolve_kv(&cfg, &model, manifest.eval_batch, sens.as_ref())?;
+        Ok(Server::start_impl(
             move || {
                 let mut mrt = ModelRuntime::native(manifest)?;
                 mrt.attach_packed(packed)?;
@@ -412,7 +577,8 @@ impl Server {
             },
             params,
             cfg,
-        )
+            Some(resolved),
+        ))
     }
 
     fn next_id(&self) -> u64 {
@@ -660,13 +826,36 @@ fn batcher_loop(
     shared: &Shared,
     mrt: ModelRuntime,
     params: ModelParams,
+    cfg: &ServeConfig,
+    resolved: Option<ResolvedKv>,
 ) -> Result<ServerStats> {
     let m = &mrt.manifest;
-    let (batch, seq, vocab) = (m.eval_batch, m.seq_len, m.vocab);
+    let (seq, vocab) = (m.seq_len, m.vocab);
     shared.vocab.store(vocab, Ordering::SeqCst);
-    let mut cache = mrt.new_kv_cache(batch);
+    // Factory-path servers resolve their KV config here (the eager path
+    // already did it at construction and handed the result in).
+    let resolved = match resolved {
+        Some(r) => r,
+        None => {
+            let sens =
+                kv_sensitivity_if_needed(cfg, &mrt.native_model, m, &params, mrt.packed())?;
+            resolve_kv(cfg, &mrt.native_model, m.eval_batch, sens.as_ref())?
+        }
+    };
+    let batch = resolved.lanes;
+    let mut cache = match &resolved.plan {
+        None => mrt.new_kv_cache(batch),
+        Some(plan) => {
+            mrt.new_kv_cache_quantized(batch, plan.clone(), kvq::DEFAULT_ROT_SEED)?
+        }
+    };
     let mut lanes: Vec<Option<Active>> = (0..batch).map(|_| None).collect();
-    let mut stats = ServerStats::default();
+    let mut stats = ServerStats {
+        kv_bits: resolved.kv_bits,
+        kv_bytes_per_lane: resolved.bytes_per_lane,
+        lanes: batch,
+        ..Default::default()
+    };
     let start = Instant::now();
 
     loop {
@@ -717,6 +906,7 @@ fn batcher_loop(
 
         // ---- idle: wait for work or shutdown
         if lanes.iter().all(|l| l.is_none()) {
+            stats.lanes_active = 0;
             publish_stats(shared, &mut stats, start);
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -781,6 +971,7 @@ fn batcher_loop(
             }
         }
 
+        stats.lanes_active = lanes.iter().filter(|l| l.is_some()).count();
         publish_stats(shared, &mut stats, start);
     }
 }
@@ -811,6 +1002,10 @@ fn publish_stats(shared: &Shared, stats: &mut ServerStats, start: Instant) {
         cancelled: stats.cancelled,
         latencies: stats.latencies[from..].to_vec(),
         wall_secs: stats.wall_secs,
+        kv_bits: stats.kv_bits,
+        kv_bytes_per_lane: stats.kv_bytes_per_lane,
+        lanes: stats.lanes,
+        lanes_active: stats.lanes_active,
     };
     *shared.live.lock().unwrap() = snap;
 }
@@ -896,7 +1091,7 @@ mod tests {
     #[test]
     fn native_packed_server_generates_tokens() {
         let (manifest, params, packed) = packed_fixture("serve-native", 8, 2, 17);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let (_, rx) = server.submit(vec![1, 2, 3], 4, 0.0, 0).unwrap();
         let c = rx.recv().unwrap();
         assert_eq!(c.tokens.len(), 4);
@@ -914,7 +1109,7 @@ mod tests {
     fn kv_server_slides_window_past_context() {
         // seq_len 8, 20 generated tokens: the lane must slide repeatedly
         let (manifest, params, packed) = packed_fixture("serve-slide", 8, 1, 23);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let (_, rx) = server.submit(vec![9, 8, 7], 20, 0.7, 5).unwrap();
         let c = rx.recv().unwrap();
         assert_eq!(c.tokens.len(), 20);
@@ -931,7 +1126,7 @@ mod tests {
     #[test]
     fn zero_token_request_completes_empty() {
         let (manifest, params, packed) = packed_fixture("serve-zero", 8, 1, 31);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let (_, rx) = server.submit(vec![1, 2], 0, 0.0, 0).unwrap();
         let c = rx.recv().unwrap();
         assert!(c.tokens.is_empty(), "asked for zero tokens, got {:?}", c.tokens);
@@ -943,7 +1138,7 @@ mod tests {
     #[test]
     fn empty_prompt_is_served() {
         let (manifest, params, packed) = packed_fixture("serve-empty", 8, 1, 29);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let (_, rx) = server.submit(Vec::new(), 3, 0.0, 0).unwrap();
         let c = rx.recv().unwrap();
         assert_eq!(c.tokens.len(), 3);
@@ -1021,7 +1216,7 @@ mod tests {
     #[test]
     fn streaming_tokens_match_nonstreamed_completion() {
         let (manifest, params, packed) = packed_fixture("serve-stream", 8, 2, 41);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         // greedy: both paths must walk the identical token sequence
         let (_, rx) = server.submit(vec![5, 6, 7], 5, 0.0, 0).unwrap();
         let want = rx.recv().unwrap().tokens;
@@ -1051,7 +1246,7 @@ mod tests {
     #[test]
     fn streaming_zero_tokens_is_immediate_done() {
         let (manifest, params, packed) = packed_fixture("serve-stream0", 8, 1, 43);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let handle = server.submit_streaming(vec![1], 0, 0.0, 0).unwrap();
         match handle.events.recv().unwrap() {
             StreamEvent::Done(c) => assert!(c.tokens.is_empty()),
@@ -1064,7 +1259,7 @@ mod tests {
     fn cancellation_frees_the_lane() {
         // single lane; first request would generate (effectively) forever
         let (manifest, params, packed) = packed_fixture("serve-cancel", 8, 1, 47);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let handle = server.submit_streaming(vec![1, 2], 1_000_000, 0.5, 3).unwrap();
         // wait until it owns the lane (first token proves prefill ran)
         let first = handle.events.recv_timeout(std::time::Duration::from_secs(30));
@@ -1090,7 +1285,7 @@ mod tests {
     #[test]
     fn dropping_stream_receiver_cancels() {
         let (manifest, params, packed) = packed_fixture("serve-droprx", 8, 1, 53);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let handle = server.submit_streaming(vec![9], 1_000_000, 0.3, 1).unwrap();
         // receiving one token proves the request owns the lane; then drop
         // the receiver without cancelling explicitly
@@ -1110,8 +1305,9 @@ mod tests {
             manifest,
             params,
             packed,
-            ServeConfig { max_queue: 1 },
-        );
+            ServeConfig { max_queue: 1, ..Default::default() },
+        )
+        .unwrap();
         // A occupies the single lane (first token proves it left the queue)
         let a = server.submit_streaming(vec![1], 1_000_000, 0.4, 2).unwrap();
         assert!(a.events.recv_timeout(std::time::Duration::from_secs(30)).is_ok());
@@ -1130,7 +1326,7 @@ mod tests {
     #[test]
     fn live_stats_update_mid_flight() {
         let (manifest, params, packed) = packed_fixture("serve-live", 8, 1, 61);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         let handle = server.submit_streaming(vec![4, 5], 1_000_000, 0.6, 9).unwrap();
         // after a few tokens the live snapshot must show progress even
         // though nothing has completed
@@ -1154,7 +1350,7 @@ mod tests {
     #[test]
     fn out_of_vocab_prompt_is_refused_not_fatal() {
         let (manifest, params, packed) = packed_fixture("serve-vocab", 8, 1, 67);
-        let server = Server::start_native_packed(manifest, params, packed);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
         // a served request proves the batcher is up (vocab published)
         let (_, rx) = server.submit(vec![1], 1, 0.0, 0).unwrap();
         rx.recv().unwrap();
@@ -1170,6 +1366,168 @@ mod tests {
         // the server survived: valid traffic still flows
         let (_, rx) = server.submit(vec![2], 2, 0.0, 0).unwrap();
         assert_eq!(rx.recv().unwrap().tokens.len(), 2);
+        server.shutdown().unwrap();
+    }
+
+    /// Poll the live snapshot until the batcher has published its lane
+    /// setup (first idle round), bounded at ~5 s.
+    fn wait_lanes(server: &Server) -> ServerStats {
+        for _ in 0..500 {
+            let s = server.stats();
+            if s.lanes > 0 {
+                return s;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("batcher never published its lane setup");
+    }
+
+    #[test]
+    fn quantized_kv_server_generates_and_reports_bits() {
+        let (manifest, params, packed) = packed_fixture("serve-kvq", 8, 2, 71);
+        let server = Server::start_native_packed_with(
+            manifest,
+            params,
+            packed,
+            ServeConfig { kv: KvqPolicy::Uniform(4), ..Default::default() },
+        )
+        .unwrap();
+        let live = wait_lanes(&server);
+        assert_eq!(live.kv_bits, 4.0);
+        assert_eq!(live.lanes, 2, "no budget: lane pool stays eval_batch");
+        assert!(live.kv_bytes_per_lane > 0);
+        let (_, rx) = server.submit(vec![1, 2, 3], 6, 0.0, 0).unwrap();
+        let c = rx.recv().unwrap();
+        assert_eq!(c.tokens.len(), 6);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.completions, 1);
+        assert_eq!(stats.kv_bits, 4.0);
+    }
+
+    #[test]
+    fn kv_budget_scales_lane_count_vs_dense() {
+        // same total KV budget, f32 vs 4-bit: the quantized pool must fit
+        // at least 2x the lanes (the acceptance-criterion ratio)
+        let budget = {
+            let (manifest, _, _) = packed_fixture("serve-kvq-probe", 8, 1, 73);
+            let model = NativeModel::new(&manifest).unwrap();
+            3 * kvq::dense_bytes_per_lane(model.n_layers, model.seq_len, model.d_model)
+        };
+        let lanes_of = |kv: KvqPolicy| {
+            let (manifest, params, packed) = packed_fixture("serve-kvq-lanes", 8, 1, 73);
+            let server = Server::start_native_packed_with(
+                manifest,
+                params,
+                packed,
+                ServeConfig { kv, kv_budget_bytes: budget, ..Default::default() },
+            )
+            .unwrap();
+            let lanes = wait_lanes(&server).lanes;
+            server.shutdown().unwrap();
+            lanes
+        };
+        let dense = lanes_of(KvqPolicy::DenseF32);
+        let quant = lanes_of(KvqPolicy::Uniform(4));
+        assert_eq!(dense, 3, "budget sized for exactly 3 dense lanes");
+        assert!(
+            quant >= 2 * dense,
+            "4-bit KV must fit >= 2x the lanes of f32: {quant} vs {dense}"
+        );
+    }
+
+    #[test]
+    fn kv_budget_too_small_is_typed_construction_error() {
+        let (manifest, params, packed) = packed_fixture("serve-kvq-small", 8, 1, 79);
+        let err = Server::start_native_packed_with(
+            manifest,
+            params,
+            packed,
+            ServeConfig {
+                kv: KvqPolicy::Uniform(4),
+                kv_budget_bytes: 64,
+                ..Default::default()
+            },
+        )
+        .err()
+        .expect("a 64-byte KV budget must be refused at construction");
+        match err {
+            KvqError::BudgetTooSmall { budget_bytes, min_lane_bytes } => {
+                assert_eq!(budget_bytes, 64);
+                assert!(min_lane_bytes > 64);
+            }
+            other => panic!("expected BudgetTooSmall, got {other:?}"),
+        }
+        // bad bit-widths are refused the same way
+        let (manifest, params, packed) = packed_fixture("serve-kvq-bits", 8, 1, 79);
+        assert_eq!(
+            Server::start_native_packed_with(
+                manifest,
+                params,
+                packed,
+                ServeConfig { kv: KvqPolicy::Uniform(9), ..Default::default() },
+            )
+            .err(),
+            Some(KvqError::BadBits(9))
+        );
+    }
+
+    #[test]
+    fn kv_budget_policy_solves_per_layer_plan() {
+        // --kv-budget without --kv-bits: AllocateBits picks per-layer
+        // widths under the per-lane share; the server still serves
+        let (manifest, params, packed) = packed_fixture("serve-kvq-plan", 8, 2, 83);
+        let model = NativeModel::new(&manifest).unwrap();
+        let budget =
+            4 * kvq::KvqPlan::uniform(model.n_layers, 4)
+                .unwrap()
+                .bytes_per_lane(model.seq_len, model.d_model, model.n_heads);
+        let server = Server::start_native_packed_with(
+            manifest,
+            params,
+            packed,
+            ServeConfig {
+                kv: KvqPolicy::Budget { bit_choices: vec![2, 4, 8] },
+                kv_budget_bytes: budget,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let live = wait_lanes(&server);
+        assert!(live.kv_bits > 0.0 && live.kv_bits < 32.0, "kv_bits {}", live.kv_bits);
+        assert!(live.lanes >= 2, "budget sized for multiple lanes, got {}", live.lanes);
+        let (_, rx) = server.submit(vec![4, 5], 4, 0.0, 0).unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn kv_budget_below_equal_share_still_fits_one_lane() {
+        // eval_batch 2, total budget = exactly one cheapest (2-bit) lane:
+        // the equal-share heuristic would cap each lane at half that, but
+        // the budget genuinely fits a lane — construction must fall back
+        // to the cheapest lane size, not report BudgetTooSmall
+        let (manifest, params, packed) = packed_fixture("serve-kvq-tight", 8, 2, 89);
+        let model = NativeModel::new(&manifest).unwrap();
+        let min_lane = kvq::KvqPlan::uniform(model.n_layers, 2)
+            .unwrap()
+            .bytes_per_lane(model.seq_len, model.d_model, model.n_heads);
+        let server = Server::start_native_packed_with(
+            manifest,
+            params,
+            packed,
+            ServeConfig {
+                kv: KvqPolicy::Budget { bit_choices: vec![2, 4, 8] },
+                kv_budget_bytes: min_lane,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let live = wait_lanes(&server);
+        assert_eq!(live.lanes, 1, "exactly one cheapest lane fits");
+        assert!(live.kv_bits > 0.0 && live.kv_bits < 32.0);
+        let (_, rx) = server.submit(vec![7], 3, 0.0, 0).unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 3);
         server.shutdown().unwrap();
     }
 }

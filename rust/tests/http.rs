@@ -37,7 +37,7 @@ fn packed_server(name: &str, seq_len: usize, eval_batch: usize, cfg: ServeConfig
         &manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1,
     )
     .unwrap();
-    Arc::new(Server::start_native_packed_with(manifest, params, packed, cfg))
+    Arc::new(Server::start_native_packed_with(manifest, params, packed, cfg).unwrap())
 }
 
 /// Bind with the `max_new_tokens` clamp lifted: the lane-pinning tests
@@ -168,7 +168,8 @@ fn streamed_chunks_reassemble_to_nonstreamed_response() {
 #[test]
 fn full_admission_queue_answers_429_and_does_not_queue() {
     // one lane, queue capacity 1
-    let server = packed_server("http-429", 8, 1, ServeConfig { max_queue: 1 });
+    let server =
+        packed_server("http-429", 8, 1, ServeConfig { max_queue: 1, ..Default::default() });
     let http = bind_uncapped(&server, 4);
     let addr = http.local_addr().to_string();
 
@@ -439,6 +440,73 @@ fn hostile_requests_get_clean_4xx_responses() {
 
     let stats = shutdown_all(http, server);
     assert_eq!(stats.completions, 1);
+}
+
+#[test]
+fn stats_report_kv_cache_economics() {
+    // a 4-bit quantized-KV server must expose its cache economics on
+    // /v1/stats: effective bits, bytes per lane, pool size + occupancy
+    let server = packed_server(
+        "http-kvq",
+        8,
+        2,
+        ServeConfig { kv: raana::kvq::KvqPolicy::Uniform(4), ..Default::default() },
+    );
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    // pin one lane so lanes_active has something to show
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[3], 1_000_000, true);
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut some = [0u8; 64];
+    conn.read_exact(&mut some).unwrap();
+    wait_generating(&server, 1);
+
+    let resp = http_request(&addr, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = resp.json().unwrap();
+    assert_eq!(v.req("kv_bits").unwrap().as_f64().unwrap(), 4.0);
+    assert!(v.req_usize("kv_bytes_per_lane").unwrap() > 0);
+    assert_eq!(v.req_usize("lanes").unwrap(), 2);
+    let mut active = 0;
+    for _ in 0..200 {
+        let v = http_request(&addr, "GET", "/v1/stats", None).unwrap().json().unwrap();
+        active = v.req_usize("lanes_active").unwrap();
+        if active >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(active >= 1, "an in-flight request must show as an active lane");
+    // sanity: dense servers report 32-bit lanes
+    drop(conn);
+    shutdown_all(http, server);
+
+    let dense = packed_server("http-kvq-dense", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&dense), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+    // one request forces a publish round; poll (the publish races the
+    // completion by a scheduling round)
+    let _ = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[1], 1, false)))
+        .unwrap();
+    let mut bits = 0.0;
+    for _ in 0..200 {
+        let v = http_request(&addr, "GET", "/v1/stats", None).unwrap().json().unwrap();
+        bits = v.req("kv_bits").unwrap().as_f64().unwrap();
+        if bits > 0.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(bits, 32.0, "dense servers report 32-bit KV lanes");
+    shutdown_all(http, dense);
 }
 
 #[test]
