@@ -342,6 +342,98 @@ def gen_kvq():
     return {"kernel": "kvq_attend", "cases": cases}
 
 
+# ------------------------------------------------- index: scan + top-k
+
+def index_quantize_rows(rows, n, d, bits, signs1, signs2):
+    """Rotate + quantize each full row — the `index::Collection` store
+    recipe (full-dimension practical RHT, MaxAbs grid, one rescale per
+    row; metric normalization happens before this step and is not part
+    of the vectors). Returns (codes flat, r per row)."""
+    codes = []
+    rs = []
+    for i in range(n):
+        seg = rows[i * d:(i + 1) * d]
+        rot = practical_rht_f32(seg, signs1, signs2)
+        c, r = rabitq_quantize_maxabs_f32(rot, bits)
+        codes.extend(c)
+        rs.append(r)
+    return codes, rs
+
+
+def index_scan_ref(q, codes, rs, n, d, bits, signs1, signs2):
+    """Float64 reference of `kernels::scan_scores_q`: rotate the query
+    (strict f32, like the kernel), then per row the Algorithm-3 estimate
+    `r * (<q_rot, codes> - c_b * sum(q_rot))`."""
+    cb = (2 ** bits - 1) / 2.0
+    q_rot = practical_rht_f32(q, signs1, signs2).astype(np.float64)
+    qsum = q_rot.sum()
+    c = np.asarray(codes, dtype=np.float64).reshape(n, d)
+    scores = np.asarray(rs, dtype=np.float64) * (c @ q_rot - cb * qsum)
+    return [float(x) for x in scores]
+
+
+def index_top_k(scores, k):
+    """Mirror of `index::top_indices`: descending score, ties broken
+    toward the lower index."""
+    return sorted(range(len(scores)), key=lambda i: (-scores[i], i))[:k]
+
+
+def index_exact_scores(q, rows, n, d):
+    """Exact f64 inner products (the brute-force baseline / rerank)."""
+    r = np.asarray(rows, dtype=np.float64).reshape(n, d)
+    return [float(x) for x in r @ np.asarray(q, dtype=np.float64)]
+
+
+def gen_index():
+    rng = random.Random(0x1DE8)
+    cases = []
+    # (n, d, bits, k): pow2 and non-pow2 dims (the latter exercise both
+    # practical-RHT windows), plus widths whose packed rows end mid-byte
+    shapes = (
+        (12, 16, 8, 5),
+        (10, 24, 4, 5),
+        (8, 20, 5, 4),
+        (16, 32, 2, 5),
+        (9, 12, 3, 3),
+    )
+    for n, d, bits, k in shapes:
+        d_hat = floor_pow2(d)
+        signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+        signs2 = ([] if d_hat == d
+                  else [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)])
+        rows = rand_f32_list(rng, n * d, 1.5)
+        q = rand_f32_list(rng, d, 1.5)
+        codes, rs = index_quantize_rows(rows, n, d, bits, signs1, signs2)
+        est = index_scan_ref(q, codes, rs, n, d, bits, signs1, signs2)
+        # the consumer asserts the committed top-k ORDER: require clear
+        # gaps around and inside the top-k so f32-vs-f64 arithmetic
+        # differences cannot reorder it (deterministic data, so this is
+        # a generation-time invariant, not a flaky retry)
+        ranked = sorted(est, reverse=True)
+        gaps = [ranked[i] - ranked[i + 1] for i in range(min(k, len(ranked) - 1))]
+        assert min(gaps) > 2e-3, (
+            f"top-{k} gap too small for a pinned order (n={n} d={d} "
+            f"bits={bits}): {min(gaps)}"
+        )
+        cases.append({
+            "n": n,
+            "d": d,
+            "bits": bits,
+            "k": k,
+            "signs1": signs1,
+            "signs2": signs2,
+            "rows": rows,
+            "q": q,
+            "codes": codes,
+            "data": pack_lsb_first(codes, bits),
+            "r": rs,
+            "est_scores": est,
+            "exact_scores": index_exact_scores(q, rows, n, d),
+            "topk": index_top_k(est, k),
+        })
+    return {"kernel": "index_search", "cases": cases}
+
+
 # ----------------------------------------------------------------- harness
 
 GENERATORS = {
@@ -349,6 +441,7 @@ GENERATORS = {
     "decode_codes.json": gen_decode,
     "attend_cached.json": gen_attend,
     "kvq_attend.json": gen_kvq,
+    "index_search.json": gen_index,
 }
 
 

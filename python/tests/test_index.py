@@ -1,0 +1,206 @@
+"""Vector-index mirror suite (numpy-only — runs where jax is absent).
+
+The Rust retrieval subsystem (`rust/src/index/`: full-row practical-RHT
+rotation → MaxAbs RaBitQ quantization → packed-code estimated scan →
+exact f32 rerank) has no rustc in some containers, so its *logic* is
+validated here through the strict-f32 Python mirror in ``gen_vectors.py``
+— the same functions that emit the ``index_search.json`` golden vectors
+the Rust side is pinned against. Three jobs:
+
+1. mirror self-checks: the scan reference agrees with the per-row
+   Algorithm-3 estimator, and estimate error decays ~2^-bits;
+2. the subsystem's property contract, mirrored: recall@k against the
+   brute-force baseline is **non-decreasing along the 2 → 4 → 8-bit
+   ladder** (and clears 0.95 at 8 bits with rerank_factor 4), a wider
+   rerank pool never hurts (a deterministic superset property), and
+   add → query of the identical vector ranks itself first at >= 4 bits
+   after the exact rerank;
+3. the committed golden vectors are internally consistent (codes
+   regenerate from the committed rows, the top-k follows the committed
+   scores), so a bad generator cannot pin a bad kernel.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import gen_vectors as gv
+
+VEC = gv.VECTOR_DIR
+
+
+def _mk_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _signs(rng, d):
+    d_hat = gv.floor_pow2(d)
+    signs1 = [float(s) for s in rng.choice((-1.0, 1.0), size=d_hat)]
+    signs2 = ([] if d_hat == d
+              else [float(s) for s in rng.choice((-1.0, 1.0), size=d_hat)])
+    return signs1, signs2
+
+
+def _unit_rows(rng, n, d):
+    """n L2-normalized f32 rows, flat — the cosine store's residual
+    content (`index::Collection` normalizes at the door)."""
+    rows = []
+    for _ in range(n):
+        v = np.asarray([gv.f32(x) for x in rng.normal(size=d)], dtype=np.float32)
+        nv = np.linalg.norm(v)
+        if nv > 0:
+            v = (v / np.float32(nv)).astype(np.float32)
+        rows.extend(float(x) for x in v)
+    return rows
+
+
+def _two_phase(rows, q, n, d, bits, signs1, signs2, k, rerank_factor):
+    """Mirror of `Collection::query`: estimated scan over codes, exact
+    rerank of the top rerank_factor*k candidates. Returns the top-k ids."""
+    codes, rs = gv.index_quantize_rows(rows, n, d, bits, signs1, signs2)
+    est = gv.index_scan_ref(q, codes, rs, n, d, bits, signs1, signs2)
+    cand = gv.index_top_k(est, min(rerank_factor * k, n))
+    exact = gv.index_exact_scores(q, rows, n, d)
+    return sorted(cand, key=lambda i: (-exact[i], i))[:k]
+
+
+def _recall(rows, queries, n, d, bits, signs1, signs2, k, rerank_factor):
+    hits = 0
+    for q in queries:
+        got = _two_phase(rows, q, n, d, bits, signs1, signs2, k, rerank_factor)
+        want = set(gv.index_top_k(gv.index_exact_scores(q, rows, n, d), k))
+        hits += len(want.intersection(got))
+    return hits / (len(queries) * k)
+
+
+# ------------------------------------------------------------ mirror checks
+
+@pytest.mark.parametrize("d,bits", [(16, 8), (24, 4), (20, 5), (12, 3)])
+def test_scan_ref_matches_per_row_estimator(d, bits):
+    """The vectorized scan reference must agree with the scalar
+    Algorithm-3 estimate computed row by row."""
+    rng = _mk_rng(100 + d + bits)
+    n = 7
+    signs1, signs2 = _signs(rng, d)
+    rows = [gv.f32(x) for x in rng.uniform(-1.5, 1.5, size=n * d)]
+    q = [gv.f32(x) for x in rng.uniform(-1.5, 1.5, size=d)]
+    codes, rs = gv.index_quantize_rows(rows, n, d, bits, signs1, signs2)
+    scores = gv.index_scan_ref(q, codes, rs, n, d, bits, signs1, signs2)
+    cb = (2 ** bits - 1) / 2.0
+    q_rot = gv.practical_rht_f32(q, signs1, signs2).astype(np.float64)
+    for i in range(n):
+        ci = np.asarray(codes[i * d:(i + 1) * d], dtype=np.float64)
+        want = rs[i] * (ci @ q_rot - cb * q_rot.sum())
+        np.testing.assert_allclose(scores[i], want, rtol=1e-12, atol=1e-12)
+
+
+def test_estimate_error_decays_with_bits():
+    """|est - exact| on unit rows shrinks ~2^-b (the rotation makes the
+    estimator's error bound apply)."""
+    rng = _mk_rng(7)
+    n, d = 64, 32
+    signs1, signs2 = _signs(rng, d)
+    rows = _unit_rows(rng, n, d)
+    q = _unit_rows(rng, 1, d)
+    exact = np.asarray(gv.index_exact_scores(q, rows, n, d))
+    prev = np.inf
+    for bits in (2, 4, 8):
+        codes, rs = gv.index_quantize_rows(rows, n, d, bits, signs1, signs2)
+        est = np.asarray(gv.index_scan_ref(q, codes, rs, n, d, bits, signs1, signs2))
+        err = float(np.mean(np.abs(est - exact)))
+        assert err < prev, f"bits={bits}: {err} !< {prev}"
+        assert err < 4.0 * 2.0 ** -bits, f"bits={bits} err={err}"
+        prev = err
+    assert prev < 0.02, f"8-bit estimate error too large: {prev}"
+
+
+# ------------------------------------------------------ property contract
+
+def test_recall_nondecreasing_along_bit_ladder():
+    """The satellite property, mirrored: recall@10 vs brute force is
+    non-decreasing over 2 -> 4 -> 8 bits on a seeded fixture, and 8-bit
+    with rerank_factor 4 clears the 0.95 acceptance bar."""
+    rng = _mk_rng(777)
+    n, d, k, rf = 256, 48, 10, 4
+    signs1, signs2 = _signs(rng, d)
+    rows = _unit_rows(rng, n, d)
+    queries = [_unit_rows(rng, 1, d) for _ in range(16)]
+    prev = -1.0
+    for bits in (2, 4, 8):
+        r = _recall(rows, queries, n, d, bits, signs1, signs2, k, rf)
+        assert r >= prev, f"recall@{k} regressed: {r} < {prev} at {bits} bits"
+        prev = r
+    assert prev >= 0.95, f"8-bit recall@10 with rerank x4 must clear 0.95: {prev}"
+
+
+def test_wider_rerank_never_hurts():
+    """Deterministic superset property: the rerank_factor-4 candidate set
+    contains the rerank_factor-1 set, so recall cannot drop."""
+    rng = _mk_rng(991)
+    n, d, k = 128, 32, 8
+    signs1, signs2 = _signs(rng, d)
+    rows = _unit_rows(rng, n, d)
+    queries = [_unit_rows(rng, 1, d) for _ in range(8)]
+    r1 = _recall(rows, queries, n, d, 2, signs1, signs2, k, 1)
+    r4 = _recall(rows, queries, n, d, 2, signs1, signs2, k, 4)
+    assert r4 >= r1, f"wider rerank must not hurt recall: {r4} < {r1}"
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_self_query_ranks_first_after_rerank(bits):
+    """The satellite property, mirrored: querying a stored vector with
+    itself ranks it first at >= 4 bits — the estimated scan keeps it in
+    the candidate set, and the exact rerank pins cosine(self) = 1 at the
+    top (maximal under the cosine metric, ties impossible for distinct
+    unit rows)."""
+    for seed in range(4):
+        rng = _mk_rng(3000 + seed)
+        n, d, k = 96, 24, 5
+        signs1, signs2 = _signs(rng, d)
+        rows = _unit_rows(rng, n, d)
+        for probe in (0, n // 3, n - 1):
+            q = rows[probe * d:(probe + 1) * d]
+            got = _two_phase(rows, q, n, d, bits, signs1, signs2, k, 4)
+            assert got[0] == probe, (
+                f"bits={bits} seed={seed}: own vector must rank first, got {got}"
+            )
+
+
+# ------------------------------------------------- committed golden vectors
+
+def test_index_vectors_are_internally_consistent():
+    doc = json.loads((VEC / "index_search.json").read_text())
+    assert len(doc["cases"]) >= 5
+    nonpow2 = False
+    tails = False
+    for case in doc["cases"]:
+        n, d, bits, k = case["n"], case["d"], case["bits"], case["k"]
+        nonpow2 |= d & (d - 1) != 0
+        tails |= (d * bits) % 8 != 0
+        assert len(case["rows"]) == n * d
+        assert len(case["codes"]) == n * d
+        assert len(case["r"]) == n
+        assert all(0 <= c <= 2 ** bits - 1 for c in case["codes"])
+        assert len(case["signs1"]) == gv.floor_pow2(d)
+        assert all(s in (-1.0, 1.0) for s in case["signs1"] + case["signs2"])
+        # codes + rescales regenerate from the committed rows
+        codes, rs = gv.index_quantize_rows(
+            case["rows"], n, d, bits, case["signs1"], case["signs2"])
+        assert codes == case["codes"]
+        np.testing.assert_allclose(rs, case["r"], rtol=1e-6, atol=1e-9)
+        # the packed bytes are exactly the packer's output
+        assert case["data"] == gv.pack_lsb_first(case["codes"], bits)
+        # scores and top-k regenerate and agree with the committed order
+        est = gv.index_scan_ref(case["q"], case["codes"], case["r"],
+                                n, d, bits, case["signs1"], case["signs2"])
+        np.testing.assert_allclose(est, case["est_scores"], rtol=1e-12, atol=1e-12)
+        assert gv.index_top_k(est, k) == case["topk"]
+        exact = gv.index_exact_scores(case["q"], case["rows"], n, d)
+        np.testing.assert_allclose(exact, case["exact_scores"],
+                                   rtol=1e-12, atol=1e-12)
+        # top-k order is protected by real gaps (the generator invariant)
+        ranked = sorted(est, reverse=True)
+        assert all(ranked[i] - ranked[i + 1] > 2e-3 for i in range(k))
+    assert nonpow2, "vectors must cover a non-pow2 dimension"
+    assert tails, "vectors must cover mid-byte row tails"

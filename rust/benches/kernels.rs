@@ -16,6 +16,10 @@
 //!   the dense `attend_cached` on the same window, plus the
 //!   `kv_bytes_per_lane` table (f32 vs 8/4/2-bit) and the lane counts a
 //!   fixed KV budget buys (acceptance: >= 2x lanes at 4-bit vs f32).
+//! * Vector index: the two-phase top-10 query (`index_scan_q`: 8-bit
+//!   coded scan + exact rerank) vs the brute-force `index_scan_f32`
+//!   baseline at n=4096, d=256, with the scan-payload bytes-per-row
+//!   table and the recall@10 acceptance numbers in the JSON.
 //!
 //! Results print as tables and land in `BENCH_kernels.json` so future PRs
 //! can diff the perf trajectory mechanically. Dimensions honor
@@ -415,6 +419,109 @@ fn main() -> anyhow::Result<()> {
         kvq_entries.push(("lanes_4bit", json::num(lanes_4bit as f64)));
         kvq_entries.push(("lanes_ratio_4bit_vs_f32", json::num(ratio)));
         report.push(("kvq", json::obj(kvq_entries)));
+    }
+
+    // --------------------- vector-index scan QPS + bytes-per-row economics
+    // the retrieval subsystem's two-phase query (estimated scan over
+    // packed codes + exact rerank) vs the brute-force f32 baseline at
+    // n=4096, d=256, and the scan-payload bytes-per-row table. The two
+    // acceptance numbers land in the JSON: recall@10 at 8-bit with
+    // rerank_factor 4 (>= 0.95) and the 8-bit bytes-per-row ratio vs
+    // f32 (<= 1/3).
+    {
+        use raana::index::{IndexConfig, IndexPolicy, VectorStore, DEFAULT_RERANK_FACTOR};
+
+        let (n, d, k) = (4096usize, 256usize, 10usize);
+        let mut store = VectorStore::new(IndexConfig {
+            policy: IndexPolicy::Uniform(8),
+            ..Default::default()
+        })?;
+        store.add("bench", &Rng::new(20).gaussian_vec(n * d), d, threads)?;
+        let c = store.get("bench")?;
+        let queries: Vec<Vec<f32>> =
+            (0..32).map(|i| Rng::new(300 + i).gaussian_vec(d)).collect();
+
+        // recall@10 of the two-phase query vs the exact baseline
+        let mut hits = 0usize;
+        for q in &queries {
+            let got = c.query(q, k, DEFAULT_RERANK_FACTOR, threads)?;
+            let want: Vec<usize> =
+                c.brute_force(q, k, threads)?.iter().map(|h| h.id).collect();
+            hits += got.iter().filter(|h| want.contains(&h.id)).count();
+        }
+        let recall = hits as f64 / (queries.len() * k) as f64;
+
+        let q0 = &queries[0];
+        let scan_q = bench("index_scan_q", 2, 16, || {
+            std::hint::black_box(c.query(q0, k, DEFAULT_RERANK_FACTOR, threads).unwrap());
+        });
+        let scan_f32 = bench("index_scan_f32", 2, 16, || {
+            std::hint::black_box(c.brute_force(q0, k, threads).unwrap());
+        });
+        let qps_q = 1.0 / scan_q.median().max(1e-12);
+        let qps_f32 = 1.0 / scan_f32.median().max(1e-12);
+
+        let mut t = Table::new(&[
+            "Index top-10 (n=4096, d=256, cosine)",
+            "median",
+            "QPS",
+        ]);
+        t.row(vec![
+            "index_scan_q (8-bit codes + rerank x4)".into(),
+            format!("{:.2} ms", scan_q.median() * 1e3),
+            format!("{qps_q:.0}"),
+        ]);
+        t.row(vec![
+            "index_scan_f32 (brute-force exact)".into(),
+            format!("{:.2} ms", scan_f32.median() * 1e3),
+            format!("{qps_f32:.0}"),
+        ]);
+        t.row(vec![
+            "recall@10 of the two-phase query".into(),
+            format!("{recall:.4}"),
+            "acceptance: >= 0.95".into(),
+        ]);
+        println!("{}", t.render());
+
+        // scan-payload bytes per row: f32 baseline vs 8/4/2-bit codes
+        let f32_row = 4 * d;
+        let mut t = Table::new(&["Index bytes/row (d=256)", "bytes", "vs f32"]);
+        t.row(vec!["f32".into(), f32_row.to_string(), "1.00".to_string()]);
+        let mut lane_entries: Vec<(&str, Value)> =
+            vec![("f32", json::num(f32_row as f64))];
+        let mut ratio_8bit = 0f64;
+        for (key, bits) in [("b8", 8u8), ("b4", 4), ("b2", 2)] {
+            let row = (d * bits as usize).div_ceil(8) + 4;
+            let ratio = row as f64 / f32_row as f64;
+            if bits == 8 {
+                ratio_8bit = ratio;
+            }
+            t.row(vec![format!("{bits}-bit"), row.to_string(), format!("{ratio:.3}")]);
+            lane_entries.push((key, json::num(row as f64)));
+        }
+        println!("{}", t.render());
+        println!(
+            "index acceptance: recall@10 {recall:.4} (>= 0.95) at {:.3}x the f32 \
+             bytes/row (<= 1/3)",
+            ratio_8bit
+        );
+
+        report.push((
+            "index",
+            json::obj(vec![
+                ("n", json::num(n as f64)),
+                ("d", json::num(d as f64)),
+                ("k", json::num(k as f64)),
+                ("rerank_factor", json::num(DEFAULT_RERANK_FACTOR as f64)),
+                ("scan_q", bench_json(&scan_q)),
+                ("scan_f32", bench_json(&scan_f32)),
+                ("qps_q", json::num(qps_q)),
+                ("qps_f32", json::num(qps_f32)),
+                ("recall_at10_8bit", json::num(recall)),
+                ("bytes_per_row", json::obj(lane_entries)),
+                ("bytes_per_row_ratio_8bit", json::num(ratio_8bit)),
+            ]),
+        ));
     }
 
     // ------------------------------ HTTP front-end overhead vs in-process

@@ -1,0 +1,1251 @@
+//! Retrieval subsystem: a RaBitQ-native vector index with named
+//! collections, two-phase top-k search, and per-collection bit-widths
+//! (ISSUE 5).
+//!
+//! RaBitQ is an ANN vector-quantization method first — the paper adapts
+//! it to weights, but its unbiased inner-product estimator (Alg. 3) is
+//! exactly the primitive an embedding index needs. This module turns the
+//! crate's battle-tested rotation + packing + estimator kernels into a
+//! second serving workload: embed → add → query, RAG-shaped traffic.
+//!
+//! * **Storage** ([`Collection`]) — every embedding row is rotated with a
+//!   full-dimension practical RHT ([`crate::hadamard::PracticalRht`],
+//!   shared Rademacher signs per collection), grid-quantized with
+//!   [`crate::rabitq::quantize_column_into`] at [`ScaleMode::MaxAbs`]
+//!   (same contract as [`crate::kvq`]: one pass, one f32 rescale per
+//!   row), and bit-packed into one shared buffer. A residual f32 store
+//!   keeps the (metric-normalized) rows for the rerank phase — reported
+//!   separately from the scan payload, the way ANN systems keep raw
+//!   vectors beside their compressed index.
+//! * **Query** — two phases. Phase 1 scans *codes only*:
+//!   [`crate::kernels::scan_scores_q`] estimates every row's inner
+//!   product against the rotated query (Alg. 3 per row — no row is ever
+//!   reconstructed in f32; enforced by the [`rerank_row_reads`] counter,
+//!   the same mechanism as the zero-dequant forward test). Phase 2
+//!   fetches the top `rerank_factor * k` candidates from the residual
+//!   store and reranks them with exact f32 scores.
+//! * **Bit plan** ([`IndexPolicy`]) — collections get a uniform width,
+//!   or AllocateBits-solved widths under a total scan-payload byte
+//!   budget ([`VectorStore::rebalance`]), driven by **measured recall
+//!   sensitivity**: each collection's recall@k gap at a low probe width
+//!   becomes its DP alpha, so collections whose rankings collapse under
+//!   coarse codes win the bits. Recoding is lossless-from-exact — the
+//!   residual store re-encodes rows at the new width with no quality
+//!   debt from the old one.
+//!
+//! The accuracy contract is **recall**, not bit-exactness: phase-1
+//! estimates drift ~`2^-bits` (the RaBitQ bound), the rerank snaps the
+//! survivors back to exact scores, and the property tests pin a
+//! monotone 2 → 4 → 8-bit recall ladder against the brute-force f32
+//! baseline plus self-query-ranks-first at >= 4 bits.
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::allocate::AllocProblem;
+use crate::hadamard::PracticalRht;
+use crate::kernels;
+use crate::kvq::set_codes;
+use crate::rabitq::{quantize_column_into, ScaleMode};
+use crate::rng::Rng;
+
+/// Default seed for a store's per-collection rotation signs. Any fixed
+/// seed works (the rotation only needs to be shared between add and
+/// query); a constant keeps index contents reproducible.
+pub const DEFAULT_ROT_SEED: u64 = 0x7265_7472;
+
+/// Default phase-1 → phase-2 expansion: the scan hands `rerank_factor *
+/// k` candidates to the exact rerank.
+pub const DEFAULT_RERANK_FACTOR: usize = 4;
+
+/// Rows sampled as probe queries per collection when measuring recall
+/// sensitivity for the budget policy.
+const SENSITIVITY_SAMPLES: usize = 16;
+
+/// Process-wide count of residual-store row fetches (one per reranked
+/// candidate). The packed-code scan must dequantize **zero** full rows
+/// outside rerank, so after a query this counter moves by exactly the
+/// candidate count — asserted in `rust/tests/integration.rs` alongside a
+/// flat [`crate::rabitq::dequant_calls`], the same counter mechanism as
+/// the zero-dequant forward test.
+static RERANK_ROW_READS: AtomicUsize = AtomicUsize::new(0);
+
+/// Read the rerank row-fetch counter: total residual-store rows handed
+/// to the exact rerank, process-wide. The scan phase never moves it —
+/// the zero-rows-outside-rerank acceptance test pins the delta per
+/// query to exactly the candidate count.
+pub fn rerank_row_reads() -> usize {
+    RERANK_ROW_READS.load(Ordering::Relaxed)
+}
+
+// ------------------------------------------------------------------ errors
+
+/// Typed errors for the vector index — surfaced at configuration and on
+/// the request path so the HTTP layer can map each to a status (404 for
+/// missing collections, 400 for shape/argument problems, 507 for a full
+/// budget).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexError {
+    /// A requested code width outside 1..=8.
+    BadBits(u8),
+    /// Collection name empty, too long, or outside `[A-Za-z0-9_-]`.
+    BadName(String),
+    /// No collection of this name exists.
+    NoSuchCollection(String),
+    /// A vector's dimension does not match the collection's.
+    DimMismatch {
+        /// The collection whose dimension was violated.
+        collection: String,
+        /// The collection's row dimension.
+        expected: usize,
+        /// The offending vector's dimension.
+        got: usize,
+    },
+    /// Malformed query arguments (zero k, empty vector, …).
+    BadQuery(String),
+    /// The scan-payload byte budget cannot hold the rows even at the
+    /// cheapest admissible width — the add is refused, nothing mutates.
+    BudgetTooSmall {
+        /// The configured budget, in bytes.
+        budget_bytes: usize,
+        /// Smallest scan payload the rows could fit in.
+        min_bytes: usize,
+    },
+    /// Configuration/shape mismatch (empty bit-choice set, …).
+    Shape(String),
+}
+
+impl std::fmt::Display for IndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexError::BadBits(b) => write!(f, "index bit-width {b} outside 1..=8"),
+            IndexError::BadName(n) => write!(
+                f,
+                "bad collection name '{n}' (1..=64 chars of [A-Za-z0-9_-])"
+            ),
+            IndexError::NoSuchCollection(n) => write!(f, "no collection named '{n}'"),
+            IndexError::DimMismatch { collection, expected, got } => write!(
+                f,
+                "vector dimension {got} != collection '{collection}' dimension {expected}"
+            ),
+            IndexError::BadQuery(msg) => write!(f, "bad query: {msg}"),
+            IndexError::BudgetTooSmall { budget_bytes, min_bytes } => write!(
+                f,
+                "index budget of {budget_bytes} bytes cannot hold the rows \
+                 (minimum {min_bytes} bytes at the cheapest width)"
+            ),
+            IndexError::Shape(msg) => write!(f, "index shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IndexError {}
+
+impl From<IndexError> for anyhow::Error {
+    fn from(e: IndexError) -> anyhow::Error {
+        anyhow::Error::msg(e.to_string())
+    }
+}
+
+// ------------------------------------------------------------------ metric
+
+/// Similarity metric of a collection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Raw inner product over the stored rows.
+    InnerProduct,
+    /// Cosine similarity: rows and queries are L2-normalized at the
+    /// door, after which the inner product *is* the cosine — one scan
+    /// kernel serves both metrics.
+    Cosine,
+}
+
+impl Metric {
+    /// Stable wire name (`/v1/collections` reports it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::InnerProduct => "ip",
+            Metric::Cosine => "cosine",
+        }
+    }
+}
+
+/// L2-normalize in place (f64 accumulation); zero vectors stay zero.
+fn l2_normalize(v: &mut [f32]) {
+    let norm: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        let inv = (1.0 / norm) as f32;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+// ----------------------------------------------------------------- results
+
+/// One search result: the row id within its collection and the score
+/// under the collection's metric (exact f32 after rerank).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchHit {
+    /// Row id (0-based insertion order within the collection).
+    pub id: usize,
+    /// Exact score under the collection's metric.
+    pub score: f32,
+}
+
+/// Per-collection accounting snapshot (`GET /v1/collections`).
+#[derive(Clone, Debug)]
+pub struct CollectionInfo {
+    /// Collection name.
+    pub name: String,
+    /// Stored rows.
+    pub rows: usize,
+    /// Row dimension.
+    pub dim: usize,
+    /// Current code width.
+    pub bits: u8,
+    /// Similarity metric.
+    pub metric: Metric,
+    /// Scan payload per row: packed codes + the f32 rescale.
+    pub bytes_per_row: usize,
+    /// Total scan payload (codes buffer + rescale table).
+    pub code_bytes: usize,
+    /// Residual-store footprint (f32 rows the rerank reads).
+    pub exact_bytes: usize,
+}
+
+/// Indices of the top `k` scores, descending, ties broken toward the
+/// lower index — deterministic for any input. Partial selection first,
+/// so the scan's O(n) output is not fully sorted for small k.
+pub fn top_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let cmp = |a: &usize, b: &usize| {
+        scores[*b]
+            .partial_cmp(&scores[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_by(cmp);
+    idx
+}
+
+// -------------------------------------------------------------- collection
+
+/// One named set of embedding rows, stored as packed RaBitQ codes plus a
+/// residual f32 store for the exact rerank.
+///
+/// Layout: row `i`'s codes occupy elements `[i*d, (i+1)*d)` of the
+/// shared LSB-first bit buffer (the [`crate::rabitq::PackedCodes`]
+/// layout), `r[i]` is its least-squares rescale, and `exact[i*d..]`
+/// holds the metric-normalized row the rerank reads. All rows share one
+/// full-dimension rotation, so a query is rotated once per scan.
+#[derive(Clone, Debug)]
+pub struct Collection {
+    name: String,
+    d: usize,
+    bits: u8,
+    metric: Metric,
+    rot: PracticalRht,
+    codes: Vec<u8>,
+    r: Vec<f32>,
+    exact: Vec<f32>,
+}
+
+impl Collection {
+    /// Empty collection of `d`-dimensional rows coded at `bits`.
+    pub fn new(
+        name: &str,
+        d: usize,
+        bits: u8,
+        metric: Metric,
+        rot_seed: u64,
+    ) -> Result<Collection, IndexError> {
+        if !(1..=8).contains(&bits) {
+            return Err(IndexError::BadBits(bits));
+        }
+        if d == 0 {
+            return Err(IndexError::Shape("row dimension must be >= 1".into()));
+        }
+        let mut rng = Rng::new(rot_seed ^ hash_name(name));
+        let rot = PracticalRht::sample(d, &mut rng);
+        Ok(Collection {
+            name: name.to_string(),
+            d,
+            bits,
+            metric,
+            rot,
+            codes: Vec::new(),
+            r: Vec::new(),
+            exact: Vec::new(),
+        })
+    }
+
+    /// Collection name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Stored rows.
+    pub fn len(&self) -> usize {
+        self.r.len()
+    }
+
+    /// True when no rows are stored.
+    pub fn is_empty(&self) -> bool {
+        self.r.is_empty()
+    }
+
+    /// Row dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Current code width.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Similarity metric.
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Scan payload per row in bytes: `ceil(d * bits / 8)` of codes plus
+    /// one f32 rescale — the quantity the acceptance ratio compares to
+    /// the `4 * d` f32 baseline.
+    pub fn bytes_per_row(&self) -> usize {
+        (self.d * self.bits as usize).div_ceil(8) + 4
+    }
+
+    /// Total scan payload: packed code buffer + rescale table.
+    pub fn code_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.r.len()
+    }
+
+    /// Residual-store footprint (f32 rows, rerank side).
+    pub fn exact_bytes(&self) -> usize {
+        self.exact.len() * 4
+    }
+
+    /// Accounting snapshot.
+    pub fn info(&self) -> CollectionInfo {
+        CollectionInfo {
+            name: self.name.clone(),
+            rows: self.len(),
+            dim: self.d,
+            bits: self.bits,
+            metric: self.metric,
+            bytes_per_row: self.bytes_per_row(),
+            code_bytes: self.code_bytes(),
+            exact_bytes: self.exact_bytes(),
+        }
+    }
+
+    /// Append `vecs.len() / d` rows (`vecs` is row-major, a whole number
+    /// of rows). Under [`Metric::Cosine`] each row is L2-normalized
+    /// before storage. Returns the id of the first appended row.
+    pub fn add(&mut self, vecs: &[f32]) -> Result<usize, IndexError> {
+        if vecs.is_empty() || vecs.len() % self.d != 0 {
+            return Err(IndexError::DimMismatch {
+                collection: self.name.clone(),
+                expected: self.d,
+                got: vecs.len(),
+            });
+        }
+        let first = self.len();
+        let rows = vecs.len() / self.d;
+        let d = self.d;
+        // grow the packed buffer to cover the new rows before writing
+        let total = (first + rows) * d * self.bits as usize;
+        self.codes.resize(total.div_ceil(8), 0);
+        let mut seg = vec![0f32; d];
+        let mut colcodes: Vec<u8> = Vec::with_capacity(d);
+        for i in 0..rows {
+            seg.copy_from_slice(&vecs[i * d..(i + 1) * d]);
+            if self.metric == Metric::Cosine {
+                l2_normalize(&mut seg);
+            }
+            self.exact.extend_from_slice(&seg);
+            self.rot.apply(&mut seg);
+            let rr = quantize_column_into(&seg, self.bits, ScaleMode::MaxAbs, &mut colcodes);
+            set_codes(&mut self.codes, self.bits, (first + i) * d, &colcodes);
+            self.r.push(rr);
+        }
+        Ok(first)
+    }
+
+    /// Quantize every stored row at `bits` from the residual store —
+    /// the shared path behind [`Collection::recode`] and the budget
+    /// policy's low-width recall probe.
+    fn quantize_all(&self, bits: u8) -> (Vec<u8>, Vec<f32>) {
+        let (n, d) = (self.len(), self.d);
+        let mut data = vec![0u8; (n * d * bits as usize).div_ceil(8)];
+        let mut r = Vec::with_capacity(n);
+        let mut seg = vec![0f32; d];
+        let mut colcodes: Vec<u8> = Vec::with_capacity(d);
+        for i in 0..n {
+            seg.copy_from_slice(&self.exact[i * d..(i + 1) * d]);
+            self.rot.apply(&mut seg);
+            r.push(quantize_column_into(&seg, bits, ScaleMode::MaxAbs, &mut colcodes));
+            set_codes(&mut data, bits, i * d, &colcodes);
+        }
+        (data, r)
+    }
+
+    /// Re-encode every row at a new width. Lossless-from-exact: codes
+    /// are regenerated from the residual f32 rows, so repeated recoding
+    /// accumulates no error — a recoded collection is bit-identical to
+    /// one built at that width from scratch.
+    pub fn recode(&mut self, bits: u8) -> Result<(), IndexError> {
+        if !(1..=8).contains(&bits) {
+            return Err(IndexError::BadBits(bits));
+        }
+        if bits == self.bits {
+            return Ok(());
+        }
+        let (data, r) = self.quantize_all(bits);
+        self.codes = data;
+        self.r = r;
+        self.bits = bits;
+        Ok(())
+    }
+
+    /// Metric-adjust a query (cosine normalizes a copy) and rotate it
+    /// into the coded basis.
+    fn prepare_query(&self, q: &[f32]) -> Result<Vec<f32>, IndexError> {
+        if q.len() != self.d {
+            return Err(IndexError::DimMismatch {
+                collection: self.name.clone(),
+                expected: self.d,
+                got: q.len(),
+            });
+        }
+        let mut q_rot = q.to_vec();
+        if self.metric == Metric::Cosine {
+            l2_normalize(&mut q_rot);
+        }
+        self.rot.apply(&mut q_rot);
+        Ok(q_rot)
+    }
+
+    /// Two-phase top-k search: estimated scan over codes
+    /// ([`crate::kernels::scan_scores_q`] — zero rows reconstructed),
+    /// then exact f32 rerank of the top `rerank_factor * k` candidates
+    /// from the residual store. Returns up to `k` hits with exact
+    /// scores, descending (ties toward the lower id).
+    pub fn query(
+        &self,
+        q: &[f32],
+        k: usize,
+        rerank_factor: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        if k == 0 {
+            return Err(IndexError::BadQuery("k must be >= 1".into()));
+        }
+        let q_rot = self.prepare_query(q)?;
+        let n = self.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // phase 1: Alg.-3 estimates straight from the packed codes
+        let mut est = vec![0f32; n];
+        kernels::scan_scores_q(&q_rot, &self.codes, self.bits, 0, n, &self.r, threads, &mut est);
+        let take = (rerank_factor.max(1).saturating_mul(k)).min(n);
+        let candidates = top_indices(&est, take);
+        // phase 2: exact rerank — the only place residual rows are read
+        let mut metric_q = q.to_vec();
+        if self.metric == Metric::Cosine {
+            l2_normalize(&mut metric_q);
+        }
+        let mut hits: Vec<SearchHit> = candidates
+            .iter()
+            .map(|&i| {
+                RERANK_ROW_READS.fetch_add(1, Ordering::Relaxed);
+                let row = &self.exact[i * self.d..(i + 1) * self.d];
+                let mut dp = 0f32;
+                for (x, v) in metric_q.iter().zip(row) {
+                    dp += x * v;
+                }
+                SearchHit { id: i, score: dp }
+            })
+            .collect();
+        hits.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        hits.truncate(k);
+        Ok(hits)
+    }
+
+    /// Brute-force exact top-k over the residual f32 store — the
+    /// baseline the recall properties and `index_scan_f32` bench measure
+    /// against. Same metric handling and tie-breaks as [`Collection::query`].
+    pub fn brute_force(
+        &self,
+        q: &[f32],
+        k: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        if k == 0 {
+            return Err(IndexError::BadQuery("k must be >= 1".into()));
+        }
+        if q.len() != self.d {
+            return Err(IndexError::DimMismatch {
+                collection: self.name.clone(),
+                expected: self.d,
+                got: q.len(),
+            });
+        }
+        let n = self.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut mq = q.to_vec();
+        if self.metric == Metric::Cosine {
+            l2_normalize(&mut mq);
+        }
+        let mut scores = vec![0f32; n];
+        kernels::scan_scores_f32(&mq, &self.exact, n, threads, &mut scores);
+        Ok(top_indices(&scores, k)
+            .into_iter()
+            .map(|i| SearchHit { id: i, score: scores[i] })
+            .collect())
+    }
+}
+
+/// FNV-1a over the collection name: differentiates per-collection
+/// rotation streams under one store seed.
+fn hash_name(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ------------------------------------------------------------------ policy
+
+/// How a store picks code widths for its collections.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexPolicy {
+    /// Every collection coded at one width (1..=8).
+    Uniform(u8),
+    /// Per-collection widths solved by AllocateBits under the store's
+    /// total scan-payload byte budget, weighted by measured recall
+    /// sensitivity (see [`VectorStore::rebalance`]).
+    Budget {
+        /// Candidate widths for the DP (e.g. `[2, 4, 8]`).
+        bit_choices: Vec<u8>,
+    },
+}
+
+impl Default for IndexPolicy {
+    fn default() -> Self {
+        IndexPolicy::Uniform(8)
+    }
+}
+
+/// Store construction options.
+#[derive(Clone, Debug)]
+pub struct IndexConfig {
+    /// Bit-width policy (uniform, or budget-solved per collection).
+    pub policy: IndexPolicy,
+    /// Total scan-payload budget in bytes across all collections
+    /// (codes + rescales; the residual store is accounted separately,
+    /// like the raw vectors an ANN system keeps beside its index).
+    /// Required > 0 by [`IndexPolicy::Budget`], ignored otherwise.
+    pub budget_bytes: usize,
+    /// Metric applied to every collection.
+    pub metric: Metric,
+    /// Seed for the per-collection rotation signs.
+    pub rot_seed: u64,
+}
+
+impl Default for IndexConfig {
+    fn default() -> Self {
+        IndexConfig {
+            policy: IndexPolicy::default(),
+            budget_bytes: 0,
+            metric: Metric::Cosine,
+            rot_seed: DEFAULT_ROT_SEED,
+        }
+    }
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+}
+
+// ------------------------------------------------------------------- store
+
+/// Multiple named [`Collection`]s behind one bit-width policy — what the
+/// serving layer ([`crate::serve::index::IndexServer`]) wraps.
+#[derive(Clone, Debug)]
+pub struct VectorStore {
+    cfg: IndexConfig,
+    collections: BTreeMap<String, Collection>,
+    /// Row count at the last AllocateBits solve — the rebalance
+    /// throttle's reference point (Budget policy only).
+    rows_at_solve: usize,
+}
+
+impl VectorStore {
+    /// Empty store. Fails on an invalid policy (bad widths, a Budget
+    /// policy without a budget).
+    pub fn new(cfg: IndexConfig) -> Result<VectorStore, IndexError> {
+        match &cfg.policy {
+            IndexPolicy::Uniform(bits) => {
+                if !(1..=8).contains(bits) {
+                    return Err(IndexError::BadBits(*bits));
+                }
+            }
+            IndexPolicy::Budget { bit_choices } => {
+                if bit_choices.is_empty() {
+                    return Err(IndexError::Shape("empty index bit-choice set".into()));
+                }
+                if let Some(&b) = bit_choices.iter().find(|&&b| !(1..=8).contains(&b)) {
+                    return Err(IndexError::BadBits(b));
+                }
+                if cfg.budget_bytes == 0 {
+                    return Err(IndexError::Shape(
+                        "Budget index policy needs a budget_bytes > 0".into(),
+                    ));
+                }
+            }
+        }
+        Ok(VectorStore { cfg, collections: BTreeMap::new(), rows_at_solve: 0 })
+    }
+
+    /// The store's configuration.
+    pub fn config(&self) -> &IndexConfig {
+        &self.cfg
+    }
+
+    /// Number of collections.
+    pub fn len(&self) -> usize {
+        self.collections.len()
+    }
+
+    /// True when no collections exist.
+    pub fn is_empty(&self) -> bool {
+        self.collections.is_empty()
+    }
+
+    /// Borrow a collection.
+    pub fn get(&self, name: &str) -> Result<&Collection, IndexError> {
+        self.collections
+            .get(name)
+            .ok_or_else(|| IndexError::NoSuchCollection(name.to_string()))
+    }
+
+    /// Accounting snapshot of every collection, name order.
+    pub fn infos(&self) -> Vec<CollectionInfo> {
+        self.collections.values().map(Collection::info).collect()
+    }
+
+    /// Total scan payload across collections (the budgeted quantity).
+    pub fn code_bytes(&self) -> usize {
+        self.collections.values().map(Collection::code_bytes).sum()
+    }
+
+    /// Total stored rows across collections.
+    pub fn rows(&self) -> usize {
+        self.collections.values().map(Collection::len).sum()
+    }
+
+    /// Cheapest width the policy admits (min bit choice; the uniform
+    /// width under Uniform).
+    fn min_bits(&self) -> u8 {
+        match &self.cfg.policy {
+            IndexPolicy::Uniform(b) => *b,
+            IndexPolicy::Budget { bit_choices } => *bit_choices.iter().min().unwrap(),
+        }
+    }
+
+    /// Width a freshly created collection starts at: the richest
+    /// admissible (Budget collections are rebalanced down immediately,
+    /// so starting rich costs nothing and never under-codes).
+    fn initial_bits(&self) -> u8 {
+        match &self.cfg.policy {
+            IndexPolicy::Uniform(b) => *b,
+            IndexPolicy::Budget { bit_choices } => *bit_choices.iter().max().unwrap(),
+        }
+    }
+
+    /// Scan-payload bytes the store would need at the cheapest width if
+    /// `extra_rows` of dimension `extra_d` joined collection `name`
+    /// (admission check for the budget policy).
+    fn min_bytes_with(&self, name: &str, extra_rows: usize, extra_d: usize) -> usize {
+        let min_b = self.min_bits() as usize;
+        let mut total = 0usize;
+        for (cname, c) in &self.collections {
+            let rows = c.len() + if cname == name { extra_rows } else { 0 };
+            total += (rows * c.dim() * min_b).div_ceil(8) + 4 * rows;
+        }
+        if !self.collections.contains_key(name) {
+            total += (extra_rows * extra_d * min_b).div_ceil(8) + 4 * extra_rows;
+        }
+        total
+    }
+
+    /// Append rows to `name` (created on first use), `vecs` row-major
+    /// with `d` columns. Under [`IndexPolicy::Budget`] the add is
+    /// admission-checked against the byte budget first — a store that
+    /// cannot fit the rows even at the cheapest width refuses with
+    /// [`IndexError::BudgetTooSmall`] and mutates nothing — and the
+    /// store is rebalanced afterwards when the payload outgrew the
+    /// budget or rows grew >= 25% since the last solve (throttled; see
+    /// [`VectorStore::rebalance`]). Returns `(first_id, rows_added)`.
+    pub fn add(
+        &mut self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        threads: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        if !valid_name(name) {
+            return Err(IndexError::BadName(name.to_string()));
+        }
+        if d == 0 || vecs.is_empty() || vecs.len() % d != 0 {
+            return Err(IndexError::BadQuery(format!(
+                "vector payload of {} values is not a whole number of dimension-{d} rows",
+                vecs.len()
+            )));
+        }
+        let rows = vecs.len() / d;
+        // dimension mismatch is a caller error (400) and must win over
+        // the budget admission check (507) — check it first, before any
+        // byte accounting that would price the rows at the wrong width
+        if let Some(c) = self.collections.get(name) {
+            if c.dim() != d {
+                return Err(IndexError::DimMismatch {
+                    collection: name.to_string(),
+                    expected: c.dim(),
+                    got: d,
+                });
+            }
+        }
+        if let IndexPolicy::Budget { .. } = &self.cfg.policy {
+            let min_bytes = self.min_bytes_with(name, rows, d);
+            if min_bytes > self.cfg.budget_bytes {
+                return Err(IndexError::BudgetTooSmall {
+                    budget_bytes: self.cfg.budget_bytes,
+                    min_bytes,
+                });
+            }
+        }
+        if !self.collections.contains_key(name) {
+            let c = Collection::new(
+                name,
+                d,
+                self.initial_bits(),
+                self.cfg.metric,
+                self.cfg.rot_seed,
+            )?;
+            self.collections.insert(name.to_string(), c);
+        }
+        let first = self.collections.get_mut(name).expect("just inserted").add(vecs)?;
+        if matches!(self.cfg.policy, IndexPolicy::Budget { .. }) {
+            self.maybe_rebalance(threads)?;
+        }
+        Ok((first, rows))
+    }
+
+    /// Two-phase top-k against one collection (see [`Collection::query`]).
+    pub fn query(
+        &self,
+        name: &str,
+        q: &[f32],
+        k: usize,
+        rerank_factor: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        self.get(name)?.query(q, k, rerank_factor, threads)
+    }
+
+    /// Measured recall sensitivity of one collection: recall@k of the
+    /// low-width probe scan against the exact scan, sampled over up to
+    /// [`SENSITIVITY_SAMPLES`] stored rows used as queries. The DP alpha
+    /// is `(gap + eps) * 2^probe * rows` — scaled so a collection whose
+    /// ranking collapses at the probe width (`gap` → 1) outweighs one
+    /// that survives it, with the `2^probe` factor translating the
+    /// observed gap back to the `alpha * 2^-bits` error model and the
+    /// row count weighting recall loss by how many rows it affects.
+    fn recall_sensitivity(c: &Collection, probe_bits: u8, k: usize, threads: usize) -> f64 {
+        let n = c.len();
+        let k_eff = k.min(n).max(1);
+        let (probe_data, probe_r) = c.quantize_all(probe_bits);
+        let stride = (n / SENSITIVITY_SAMPLES).max(1);
+        let mut samples = 0usize;
+        let mut hits = 0usize;
+        let mut est = vec![0f32; n];
+        let mut exact = vec![0f32; n];
+        let mut i = 0;
+        while i < n && samples < SENSITIVITY_SAMPLES {
+            let q = &c.exact[i * c.d..(i + 1) * c.d];
+            let mut q_rot = q.to_vec();
+            c.rot.apply(&mut q_rot);
+            kernels::scan_scores_q(
+                &q_rot,
+                &probe_data,
+                probe_bits,
+                0,
+                n,
+                &probe_r,
+                threads,
+                &mut est,
+            );
+            kernels::scan_scores_f32(q, &c.exact, n, threads, &mut exact);
+            let top_e = top_indices(&est, k_eff);
+            let top_x = top_indices(&exact, k_eff);
+            hits += top_x.iter().filter(|&&t| top_e.contains(&t)).count();
+            samples += 1;
+            i += stride;
+        }
+        let gap = 1.0 - hits as f64 / (samples * k_eff).max(1) as f64;
+        let eps = 0.25 / (samples * k_eff).max(1) as f64;
+        (gap + eps) * 2f64.powi(probe_bits as i32) * n as f64
+    }
+
+    /// Rebalance only when it can matter: the store's scan payload at
+    /// current widths outgrew the budget (must shrink someone), or the
+    /// row count grew >= 25% since the last solve (the DP answer may
+    /// have shifted). Sensitivity measurement re-scans every collection,
+    /// so an unthrottled per-add rebalance would be O(rows²) cumulative
+    /// for row-at-a-time ingest; the growth trigger amortizes it.
+    fn maybe_rebalance(&mut self, threads: usize) -> Result<(), IndexError> {
+        let over_budget = self.code_bytes() > self.cfg.budget_bytes;
+        let grown = self.rows_at_solve == 0
+            || self.rows() >= self.rows_at_solve + self.rows_at_solve / 4;
+        if over_budget || grown {
+            self.rebalance(threads)?;
+        }
+        Ok(())
+    }
+
+    /// Re-solve every collection's width with AllocateBits under the
+    /// store's scan-payload byte budget, then recode collections whose
+    /// width changed (lossless-from-exact — see [`Collection::recode`]).
+    ///
+    /// The DP sees one item per non-empty collection, sized `rows * dim`
+    /// codes, with the rescale-table overhead subtracted from the budget
+    /// up front and alphas from the measured recall sensitivity at the
+    /// cheapest candidate width. Called automatically on budget-policy
+    /// adds (throttled — see `maybe_rebalance`); callers can force a
+    /// re-solve any time. No-op under [`IndexPolicy::Uniform`].
+    pub fn rebalance(&mut self, threads: usize) -> Result<(), IndexError> {
+        let IndexPolicy::Budget { bit_choices } = self.cfg.policy.clone() else {
+            return Ok(());
+        };
+        let probe = *bit_choices.iter().min().unwrap();
+        let names: Vec<String> = self
+            .collections
+            .iter()
+            .filter(|(_, c)| !c.is_empty())
+            .map(|(n, _)| n.clone())
+            .collect();
+        if names.is_empty() {
+            return Ok(());
+        }
+        let mut alphas = Vec::with_capacity(names.len());
+        let mut m = Vec::with_capacity(names.len());
+        let mut overhead = 0usize;
+        for n in &names {
+            let c = &self.collections[n];
+            alphas.push(VectorStore::recall_sensitivity(c, probe, 10, threads));
+            m.push(c.len() * c.dim());
+            overhead += 4 * c.len();
+        }
+        let min_bytes = self.min_bytes_with("", 0, 0);
+        if self.cfg.budget_bytes < min_bytes {
+            return Err(IndexError::BudgetTooSmall {
+                budget_bytes: self.cfg.budget_bytes,
+                min_bytes,
+            });
+        }
+        let budget_bits = (self.cfg.budget_bytes - overhead) as u64 * 8;
+        let problem = AllocProblem {
+            alphas,
+            m,
+            bit_choices: bit_choices.clone(),
+            budget: budget_bits,
+        };
+        let sol = problem
+            .solve()
+            .map_err(|e| IndexError::Shape(format!("AllocateBits failed: {e}")))?;
+        for (name, &bits) in names.iter().zip(&sol.bits) {
+            self.collections
+                .get_mut(name)
+                .expect("collected above")
+                .recode(bits)?;
+        }
+        self.rows_at_solve = self.rows();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randvecs(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).gaussian_vec(n * d)
+    }
+
+    fn uniform_store(bits: u8) -> VectorStore {
+        VectorStore::new(IndexConfig {
+            policy: IndexPolicy::Uniform(bits),
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    /// recall@k of the two-phase query against the brute-force baseline,
+    /// averaged over `queries` held-out query vectors.
+    fn recall_at_k(
+        store: &VectorStore,
+        name: &str,
+        queries: &[f32],
+        d: usize,
+        k: usize,
+        rerank_factor: usize,
+    ) -> f64 {
+        let c = store.get(name).unwrap();
+        let nq = queries.len() / d;
+        let mut hits = 0usize;
+        for qi in 0..nq {
+            let q = &queries[qi * d..(qi + 1) * d];
+            let got = c.query(q, k, rerank_factor, 1).unwrap();
+            let want = c.brute_force(q, k, 1).unwrap();
+            let want_ids: Vec<usize> = want.iter().map(|h| h.id).collect();
+            hits += got.iter().filter(|h| want_ids.contains(&h.id)).count();
+        }
+        hits as f64 / (nq * k) as f64
+    }
+
+    #[test]
+    fn add_and_query_basics() {
+        let mut store = uniform_store(8);
+        let (n, d) = (32usize, 24usize);
+        let (first, rows) = store.add("docs", &randvecs(n, d, 1), d, 1).unwrap();
+        assert_eq!((first, rows), (0, n));
+        let (first, rows) = store.add("docs", &randvecs(4, d, 2), d, 1).unwrap();
+        assert_eq!((first, rows), (n, 4));
+        let c = store.get("docs").unwrap();
+        assert_eq!(c.len(), n + 4);
+        assert_eq!(c.dim(), d);
+        let q = Rng::new(3).gaussian_vec(d);
+        let hits = store.query("docs", &q, 5, 4, 1).unwrap();
+        assert_eq!(hits.len(), 5);
+        // descending exact scores, ids in range
+        for w in hits.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        assert!(hits.iter().all(|h| h.id < n + 4));
+        // k larger than the collection truncates, never pads
+        let all = store.query("docs", &q, 1000, 4, 1).unwrap();
+        assert_eq!(all.len(), n + 4);
+    }
+
+    #[test]
+    fn typed_errors_cover_the_request_surface() {
+        let mut store = uniform_store(4);
+        let d = 16usize;
+        store.add("ok", &randvecs(4, d, 5), d, 1).unwrap();
+        assert!(matches!(
+            store.query("missing", &vec![0.0; d], 3, 4, 1),
+            Err(IndexError::NoSuchCollection(_))
+        ));
+        assert!(matches!(
+            store.query("ok", &vec![0.0; d + 1], 3, 4, 1),
+            Err(IndexError::DimMismatch { expected: 16, got: 17, .. })
+        ));
+        assert!(matches!(
+            store.query("ok", &vec![0.0; d], 0, 4, 1),
+            Err(IndexError::BadQuery(_))
+        ));
+        assert!(matches!(
+            store.add("ok", &randvecs(2, d + 1, 6), d + 1, 1),
+            Err(IndexError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            store.add("bad name!", &randvecs(1, d, 7), d, 1),
+            Err(IndexError::BadName(_))
+        ));
+        assert!(matches!(
+            store.add("empty", &[], d, 1),
+            Err(IndexError::BadQuery(_))
+        ));
+        assert!(matches!(
+            store.add("ragged", &randvecs(1, d, 8)[..d - 1], d, 1),
+            Err(IndexError::BadQuery(_))
+        ));
+        assert_eq!(
+            VectorStore::new(IndexConfig {
+                policy: IndexPolicy::Uniform(9),
+                ..Default::default()
+            })
+            .unwrap_err(),
+            IndexError::BadBits(9)
+        );
+        assert!(matches!(
+            VectorStore::new(IndexConfig {
+                policy: IndexPolicy::Budget { bit_choices: vec![2, 4] },
+                budget_bytes: 0,
+                ..Default::default()
+            }),
+            Err(IndexError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn self_query_ranks_first_at_4_bits_and_up() {
+        // the satellite property: add -> query of the identical vector
+        // always ranks it first at >= 4 bits after rerank (cosine: the
+        // self-score is exactly the metric maximum)
+        let (n, d, k) = (128usize, 32usize, 5usize);
+        for bits in [4u8, 8] {
+            for seed in 0..4u64 {
+                let mut store = uniform_store(bits);
+                let vecs = randvecs(n, d, 100 + seed);
+                store.add("self", &vecs, d, 1).unwrap();
+                for probe in [0usize, n / 3, n - 1] {
+                    let q = &vecs[probe * d..(probe + 1) * d];
+                    let hits = store
+                        .query("self", q, k, DEFAULT_RERANK_FACTOR, 1)
+                        .unwrap();
+                    assert_eq!(
+                        hits[0].id, probe,
+                        "bits={bits} seed={seed}: own vector must rank first"
+                    );
+                    assert!(
+                        (hits[0].score - 1.0).abs() < 1e-4,
+                        "cosine self-score must be ~1, got {}",
+                        hits[0].score
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recall_is_nondecreasing_in_bits() {
+        // the satellite property: recall@k vs the brute-force baseline,
+        // non-decreasing along the 2 -> 4 -> 8 ladder on a seeded fixture
+        let (n, d, k) = (256usize, 48usize, 10usize);
+        let vecs = randvecs(n, d, 777);
+        let queries = randvecs(24, d, 778);
+        let mut prev = -1.0f64;
+        for bits in [2u8, 4, 8] {
+            let mut store = uniform_store(bits);
+            store.add("fixture", &vecs, d, 1).unwrap();
+            let r = recall_at_k(&store, "fixture", &queries, d, k, DEFAULT_RERANK_FACTOR);
+            assert!(
+                r >= prev,
+                "recall@{k} regressed along the ladder: {r} < {prev} at {bits} bits"
+            );
+            prev = r;
+        }
+        assert!(prev >= 0.95, "8-bit recall@10 must clear 0.95, got {prev}");
+    }
+
+    #[test]
+    fn rerank_rescues_phase1_misses() {
+        // a wider rerank pool can only help: recall at rerank_factor 4
+        // must be >= rerank_factor 1 (pure phase-1 ranking) at 2 bits
+        let (n, d, k) = (256usize, 48usize, 10usize);
+        let vecs = randvecs(n, d, 991);
+        let queries = randvecs(16, d, 992);
+        let mut store = uniform_store(2);
+        store.add("fixture", &vecs, d, 1).unwrap();
+        let r1 = recall_at_k(&store, "fixture", &queries, d, k, 1);
+        let r4 = recall_at_k(&store, "fixture", &queries, d, k, 4);
+        assert!(r4 >= r1, "wider rerank must not hurt recall: {r4} < {r1}");
+    }
+
+    #[test]
+    fn recode_is_lossless_from_exact() {
+        // recoding down and back up must equal a fresh build at the
+        // final width, bit for bit (codes regenerate from exact rows)
+        let (n, d) = (40usize, 20usize);
+        let vecs = randvecs(n, d, 55);
+        let mut a = Collection::new("a", d, 8, Metric::Cosine, 9).unwrap();
+        a.add(&vecs).unwrap();
+        a.recode(2).unwrap();
+        a.recode(8).unwrap();
+        let mut b = Collection::new("a", d, 8, Metric::Cosine, 9).unwrap();
+        b.add(&vecs).unwrap();
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.bits(), 8);
+        assert_eq!(a.recode(9).unwrap_err(), IndexError::BadBits(9));
+    }
+
+    #[test]
+    fn bytes_per_row_beats_f32_by_3x_at_8_bits() {
+        // the acceptance ratio: scan payload <= 1/3 of the f32 rows
+        let d = 256usize;
+        let c = Collection::new("b", d, 8, Metric::Cosine, 1).unwrap();
+        assert_eq!(c.bytes_per_row(), d + 4);
+        assert!(3 * c.bytes_per_row() <= 4 * d, "8-bit scan payload must be <= f32/3");
+        let c2 = Collection::new("b", d, 2, Metric::Cosine, 1).unwrap();
+        assert_eq!(c2.bytes_per_row(), d / 4 + 4);
+    }
+
+    #[test]
+    fn budget_policy_admits_refuses_and_rebalances() {
+        let d = 32usize;
+        let rows_bytes = |n: usize, b: usize| (n * d * b).div_ceil(8) + 4 * n;
+        // budget sized for 64 rows at 4 bits: an 8-vs-2 DP has room to move
+        let budget = rows_bytes(64, 4);
+        let mut store = VectorStore::new(IndexConfig {
+            policy: IndexPolicy::Budget { bit_choices: vec![2, 4, 8] },
+            budget_bytes: budget,
+            ..Default::default()
+        })
+        .unwrap();
+        store.add("a", &randvecs(32, d, 21), d, 1).unwrap();
+        store.add("b", &randvecs(32, d, 22), d, 1).unwrap();
+        // the solved widths fit the budget
+        assert!(store.code_bytes() <= budget + store.len());
+        for info in store.infos() {
+            assert!((2..=8).contains(&info.bits), "{info:?}");
+        }
+        // an add the budget can never hold (even at 2 bits) is refused
+        // atomically: typed error, row counts unchanged
+        let before = store.rows();
+        let err = store.add("a", &randvecs(4096, d, 23), d, 1).unwrap_err();
+        assert!(matches!(err, IndexError::BudgetTooSmall { .. }), "{err:?}");
+        assert_eq!(store.rows(), before, "refused add must not mutate");
+    }
+
+    #[test]
+    fn budget_rebalance_respects_total_and_prefers_sensitive_rows() {
+        // two collections, one with tightly clustered rows (rankings
+        // collapse at 2 bits -> high measured sensitivity) and one with
+        // well-spread rows; under a budget that cannot afford 8 bits
+        // everywhere, the clustered collection must not end up below the
+        // spread one
+        let d = 32usize;
+        let n = 48usize;
+        let mut clustered = Vec::with_capacity(n * d);
+        let base = Rng::new(31).gaussian_vec(d);
+        let mut rng = Rng::new(32);
+        for _ in 0..n {
+            let noise = rng.gaussian_vec(d);
+            clustered.extend(base.iter().zip(&noise).map(|(&b, &e)| b + 0.05 * e));
+        }
+        let spread = randvecs(n, d, 33);
+        let rows_bytes = |nn: usize, b: usize| (nn * d * b).div_ceil(8) + 4 * nn;
+        let budget = rows_bytes(n, 8) + rows_bytes(n, 2) + 8;
+        let mut store = VectorStore::new(IndexConfig {
+            policy: IndexPolicy::Budget { bit_choices: vec![2, 4, 8] },
+            budget_bytes: budget,
+            ..Default::default()
+        })
+        .unwrap();
+        store.add("clustered", &clustered, d, 1).unwrap();
+        store.add("spread", &spread, d, 1).unwrap();
+        assert!(store.code_bytes() <= budget + store.len());
+        let bits_of = |name: &str| store.get(name).unwrap().bits();
+        assert!(
+            bits_of("clustered") >= bits_of("spread"),
+            "clustered {} vs spread {} — measured sensitivity must steer the bits",
+            bits_of("clustered"),
+            bits_of("spread")
+        );
+    }
+
+    #[test]
+    fn cosine_normalizes_and_ip_does_not() {
+        let d = 8usize;
+        let mut v = vec![0f32; d];
+        v[0] = 4.0;
+        let mut cos = Collection::new("c", d, 8, Metric::Cosine, 1).unwrap();
+        cos.add(&v).unwrap();
+        let hits = cos.query(&v, 1, 1, 1).unwrap();
+        assert!((hits[0].score - 1.0).abs() < 1e-6, "cosine self-score is 1");
+        let mut ip = Collection::new("i", d, 8, Metric::InnerProduct, 1).unwrap();
+        ip.add(&v).unwrap();
+        let hits = ip.query(&v, 1, 1, 1).unwrap();
+        assert!((hits[0].score - 16.0).abs() < 1e-4, "ip self-score is ||v||^2");
+        // zero vectors are storable and queryable (score 0), never NaN
+        let z = vec![0f32; d];
+        cos.add(&z).unwrap();
+        let hits = cos.query(&z, 2, 2, 1).unwrap();
+        assert!(hits.iter().all(|h| h.score.is_finite()));
+    }
+
+    #[test]
+    fn query_deterministic_across_thread_counts() {
+        let (n, d) = (300usize, 40usize);
+        let mut store = uniform_store(5);
+        store.add("t", &randvecs(n, d, 61), d, 1).unwrap();
+        let q = Rng::new(62).gaussian_vec(d);
+        let a = store.query("t", &q, 7, 4, 1).unwrap();
+        let b = store.query("t", &q, 7, 4, 8).unwrap();
+        assert_eq!(a, b, "two-phase query must be bit-deterministic in threads");
+    }
+
+    #[test]
+    fn top_indices_orders_and_breaks_ties_deterministically() {
+        let scores = [1.0f32, 3.0, 3.0, -1.0, 2.0];
+        assert_eq!(top_indices(&scores, 3), vec![1, 2, 4]);
+        assert_eq!(top_indices(&scores, 99), vec![1, 2, 4, 0, 3]);
+        assert!(top_indices(&scores, 0).is_empty());
+        assert!(top_indices(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn empty_collection_queries_cleanly() {
+        let mut c = Collection::new("e", 8, 4, Metric::Cosine, 1).unwrap();
+        assert!(c.is_empty());
+        assert!(c.query(&vec![1.0; 8], 3, 4, 1).unwrap().is_empty());
+        assert!(c.brute_force(&vec![1.0; 8], 3, 1).unwrap().is_empty());
+        c.add(&vec![1.0; 8]).unwrap();
+        assert_eq!(c.query(&vec![1.0; 8], 3, 4, 1).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn info_accounting_is_exact() {
+        let (n, d, bits) = (10usize, 12usize, 5u8);
+        let mut store = uniform_store(bits);
+        store.add("acct", &randvecs(n, d, 71), d, 1).unwrap();
+        let info = &store.infos()[0];
+        assert_eq!(info.rows, n);
+        assert_eq!(info.dim, d);
+        assert_eq!(info.bits, bits);
+        assert_eq!(info.bytes_per_row, (d * bits as usize).div_ceil(8) + 4);
+        assert_eq!(info.code_bytes, (n * d * bits as usize).div_ceil(8) + 4 * n);
+        assert_eq!(info.exact_bytes, n * d * 4);
+        assert_eq!(store.code_bytes(), info.code_bytes);
+        assert_eq!(store.rows(), n);
+    }
+
+    #[test]
+    fn nonpow2_dims_roundtrip() {
+        // non-power-of-2 dimension exercises both practical-RHT windows
+        let (n, d) = (64usize, 48usize);
+        let vecs = randvecs(n, d, 81);
+        let mut store = uniform_store(8);
+        store.add("np2", &vecs, d, 1).unwrap();
+        let q = &vecs[5 * d..6 * d];
+        let hits = store.query("np2", q, 3, 4, 1).unwrap();
+        assert_eq!(hits[0].id, 5);
+    }
+}

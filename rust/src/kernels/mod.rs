@@ -479,6 +479,120 @@ pub fn attend_cached_q(
     }
 }
 
+// ----------------------------------------------------------- index scans
+
+/// Estimated inner-product scan over RaBitQ-coded rows — phase 1 of the
+/// vector index's two-phase query ([`crate::index`]).
+///
+/// `q_rot` is the query **already rotated** into the rows' coded basis
+/// (the rotation is orthonormal, so `<q, row> = <q_rot, rot(row))>`);
+/// `data` holds `n` rows of `d` codes each, packed LSB-first at `bits`
+/// bits per element starting at element index `start` (the
+/// [`crate::rabitq::PackedCodes`] layout); `r[i]` is row `i`'s
+/// least-squares rescale. Writes one Algorithm-3 estimate per row:
+///
+/// ```text
+/// out[i] = r[i] * (<q_rot, codes_i> - c_b * Σ q_rot)
+/// ```
+///
+/// No row is ever reconstructed in f32 — codes are decoded into one
+/// per-task scratch row and consumed by the dot product directly, which
+/// is what keeps the scan's memory traffic at `bits/32` of the dense
+/// baseline. Parallel over row blocks; every output element is produced
+/// by exactly one task with a fixed reduction order, so the scan is
+/// bit-deterministic in `threads` (0 = default).
+pub fn scan_scores_q(
+    q_rot: &[f32],
+    data: &[u8],
+    bits: u8,
+    start: usize,
+    n: usize,
+    r: &[f32],
+    threads: usize,
+    out: &mut [f32],
+) {
+    let d = q_rot.len();
+    debug_assert!(r.len() >= n && out.len() >= n);
+    if n == 0 {
+        return;
+    }
+    let cb = grid_center(bits);
+    let qsum: f32 = q_rot.iter().sum();
+    let threads = effective_threads(threads);
+    // block size: amortize scratch allocation, stay cache-resident
+    const ROW_BLOCK: usize = 64;
+    if threads <= 1 || n <= ROW_BLOCK {
+        let mut row = vec![0f32; d];
+        scan_rows_q(q_rot, data, bits, start, 0, n, r, cb, qsum, &mut row, out);
+        return;
+    }
+    threadpool::parallel_chunks_mut(&mut out[..n], ROW_BLOCK, threads, |idx, chunk| {
+        let mut row = vec![0f32; d];
+        let i0 = idx * ROW_BLOCK;
+        scan_rows_q(q_rot, data, bits, start, i0, chunk.len(), r, cb, qsum, &mut row, chunk);
+    });
+}
+
+/// Serial inner loop of [`scan_scores_q`] over rows `[i0, i0 + len)`,
+/// writing into `out[..len]`.
+#[allow(clippy::too_many_arguments)]
+fn scan_rows_q(
+    q_rot: &[f32],
+    data: &[u8],
+    bits: u8,
+    start: usize,
+    i0: usize,
+    len: usize,
+    r: &[f32],
+    cb: f32,
+    qsum: f32,
+    row: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = q_rot.len();
+    for (j, o) in out.iter_mut().take(len).enumerate() {
+        let i = i0 + j;
+        decode_bits_into(data, bits, start + i * d, row);
+        let mut dp = 0f32;
+        for (x, c) in q_rot.iter().zip(row.iter()) {
+            dp += x * c;
+        }
+        *o = r[i] * (dp - cb * qsum);
+    }
+}
+
+/// Exact f32 inner-product scan — the brute-force baseline phase 1 is
+/// measured against (`index_scan_f32` in `benches/kernels.rs`) and the
+/// kernel the rerank phase applies to its candidate set. `rows` holds `n`
+/// contiguous rows of length `q.len()`. Parallel over row blocks,
+/// bit-deterministic in `threads` (0 = default).
+pub fn scan_scores_f32(q: &[f32], rows: &[f32], n: usize, threads: usize, out: &mut [f32]) {
+    let d = q.len();
+    debug_assert!(rows.len() >= n * d && out.len() >= n);
+    if n == 0 {
+        return;
+    }
+    let threads = effective_threads(threads);
+    const ROW_BLOCK: usize = 64;
+    let scan = |i0: usize, chunk: &mut [f32]| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let row = &rows[(i0 + j) * d..(i0 + j + 1) * d];
+            let mut dp = 0f32;
+            for (x, v) in q.iter().zip(row) {
+                dp += x * v;
+            }
+            *o = dp;
+        }
+    };
+    if threads <= 1 || n <= ROW_BLOCK {
+        scan(0, &mut out[..n]);
+        return;
+    }
+    threadpool::parallel_chunks_mut(&mut out[..n], ROW_BLOCK, threads, |idx, chunk| {
+        scan(idx * ROW_BLOCK, chunk);
+    });
+}
+
 // -------------------------------------------------------------- dense gemm
 
 /// Dense f32 GEMM: `out += A (m×k) @ B (k×n)`, row-major slices.
@@ -937,6 +1051,79 @@ mod tests {
         decode_codes_into(&packed, 17, &mut a);
         decode_bits_into(&packed.data, 3, 17, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scan_scores_q_matches_estimate_ip_per_row() {
+        use crate::rabitq::{estimate_ip, quantize_column};
+        // rows quantized individually; the fused scan must agree with the
+        // per-row Algorithm-3 estimator for every width
+        for (n, d, bits) in [(7usize, 24usize, 3u8), (16, 32, 4), (5, 20, 5), (64, 16, 8)] {
+            let mut rng = Rng::new(4000 + bits as u64);
+            let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec(d)).collect();
+            let q = rng.gaussian_vec(d);
+            let mut all_codes = Vec::with_capacity(n * d);
+            let mut r = Vec::with_capacity(n);
+            for row in &rows {
+                let (codes, rr) = quantize_column(row, bits, ScaleMode::MaxAbs);
+                all_codes.extend_from_slice(&codes);
+                r.push(rr);
+            }
+            let packed = PackedCodes::pack(&all_codes, bits);
+            let mut out = vec![0f32; n];
+            scan_scores_q(&q, &packed.data, bits, 0, n, &r, 2, &mut out);
+            for i in 0..n {
+                let want = estimate_ip(&q, &all_codes[i * d..(i + 1) * d], r[i], bits);
+                assert!(
+                    (out[i] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "n={n} d={d} bits={bits} row {i}: {} vs {want}",
+                    out[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scan_scores_deterministic_across_thread_counts() {
+        let (n, d, bits) = (300usize, 48usize, 5u8);
+        let mut rng = Rng::new(4100);
+        let values: Vec<u8> = (0..n * d).map(|_| rng.below(1 << bits) as u8).collect();
+        let packed = PackedCodes::pack(&values, bits);
+        let r: Vec<f32> = rng.gaussian_vec(n);
+        let q = rng.gaussian_vec(d);
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        scan_scores_q(&q, &packed.data, bits, 0, n, &r, 1, &mut a);
+        scan_scores_q(&q, &packed.data, bits, 0, n, &r, 8, &mut b);
+        assert_eq!(a, b, "scan_scores_q must be bit-deterministic in threads");
+
+        let rows = rng.gaussian_vec(n * d);
+        let mut fa = vec![0f32; n];
+        let mut fb = vec![0f32; n];
+        scan_scores_f32(&q, &rows, n, 1, &mut fa);
+        scan_scores_f32(&q, &rows, n, 8, &mut fb);
+        assert_eq!(fa, fb, "scan_scores_f32 must be bit-deterministic in threads");
+    }
+
+    #[test]
+    fn scan_scores_f32_matches_naive_dot() {
+        let (n, d) = (9usize, 33usize);
+        let mut rng = Rng::new(4200);
+        let rows = rng.gaussian_vec(n * d);
+        let q = rng.gaussian_vec(d);
+        let mut out = vec![0f32; n];
+        scan_scores_f32(&q, &rows, n, 2, &mut out);
+        for i in 0..n {
+            let want: f64 = q
+                .iter()
+                .zip(&rows[i * d..(i + 1) * d])
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!((out[i] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()), "row {i}");
+        }
+        // n == 0 is a no-op, not a panic
+        scan_scores_f32(&q, &rows, 0, 2, &mut out);
+        scan_scores_q(&q, &[], 4, 0, 0, &[], 2, &mut out);
     }
 
     fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {

@@ -410,8 +410,10 @@ impl std::fmt::Debug for QuantizedKvStore {
 
 /// Write `values` into a shared packed buffer starting at element index
 /// `start`, clearing each element's bits first (slots are recycled, so a
-/// row must overwrite whatever codes it lands on).
-fn set_codes(data: &mut [u8], bits: u8, start: usize, values: &[u8]) {
+/// row must overwrite whatever codes it lands on). Shared with
+/// [`crate::index`], whose collections append rows into the same
+/// LSB-first layout.
+pub(crate) fn set_codes(data: &mut [u8], bits: u8, start: usize, values: &[u8]) {
     let bits = bits as usize;
     for (i, &v) in values.iter().enumerate() {
         let bit0 = (start + i) * bits;

@@ -24,7 +24,13 @@
 //!   are absent. The same machinery compresses the serving KV cache
 //!   ([`kvq`]): K/V rows live as packed RaBitQ codes with a per-layer
 //!   AllocateBits bit plan, and attention runs directly over the codes
-//!   (`kernels::attend_cached_q`).
+//!   (`kernels::attend_cached_q`). It also backs a second workload: a
+//!   RaBitQ-native vector index ([`index`]) whose collections store
+//!   embedding rows as packed codes, answer top-k with an
+//!   estimated-scan + exact-rerank two-phase query, and pick
+//!   per-collection bit-widths with AllocateBits under a byte budget —
+//!   served over HTTP as `/v1/embed` + `/v1/collections/...`
+//!   ([`serve::index::IndexServer`]).
 //!
 //! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
 //! examples under `examples/`.
@@ -39,6 +45,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod hadamard;
+pub mod index;
 pub mod json;
 pub mod kernels;
 pub mod kvq;

@@ -12,6 +12,11 @@
 //!   serve    --kv-budget BYTES             total KV RAM budget -> lane count
 //!                                          (with --kv-bits: uniform plan; alone:
 //!                                          per-layer AllocateBits plan)
+//!   serve    --http PORT [--index-bits N | --index-budget BYTES] [--no-index]
+//!                                          retrieval endpoints (/v1/embed,
+//!                                          /v1/collections/...) next to generate
+//!   index    [--bits N | --budget BYTES]   vector-index demo: embed docs, add,
+//!            [--docs N --k K --rerank M]   self-retrieve, report recall + bytes
 
 use anyhow::{bail, Result};
 
@@ -33,11 +38,12 @@ fn main() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "index" => cmd_index(&args),
         "table" => cmd_table(&args),
         "help" | _ => {
             println!(
                 "raana — RaanA post-training quantization (paper reproduction)\n\
-                 usage: raana <info|train|quantize|eval|serve> [--options]\n\
+                 usage: raana <info|train|quantize|eval|serve|index> [--options]\n\
                  see README.md; tables are regenerated via `cargo bench`"
             );
             Ok(())
@@ -196,6 +202,31 @@ fn cmd_table(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared bits/budget → [`raana::index::IndexConfig`] construction for
+/// the `serve --http` flags (`--index-bits`/`--index-budget`) and the
+/// `index` demo's (`--bits`/`--budget`). A budget without an explicit
+/// width lets AllocateBits pick per-collection widths under it, weighted
+/// by measured recall sensitivity.
+fn index_cfg(bits: usize, budget: usize, flag: &str) -> Result<raana::index::IndexConfig> {
+    use raana::index::{IndexConfig, IndexPolicy};
+    let policy = match bits {
+        0 if budget > 0 => IndexPolicy::Budget { bit_choices: vec![2, 3, 4, 5, 6, 8] },
+        0 => IndexPolicy::Uniform(8),
+        b if (1..=8).contains(&b) => IndexPolicy::Uniform(b as u8),
+        b => bail!("--{flag} must be in 1..=8, got {b}"),
+    };
+    Ok(IndexConfig { policy, budget_bytes: budget, ..Default::default() })
+}
+
+/// `--index-bits N` / `--index-budget BYTES` → index config (serve path).
+fn index_cfg_from_args(args: &Args) -> Result<raana::index::IndexConfig> {
+    index_cfg(
+        args.opt_usize("index-bits", 0)?,
+        args.opt_usize("index-budget", 0)?,
+        "index-bits",
+    )
+}
+
 /// `--kv-bits N` / `--kv-budget BYTES` → KV storage policy + budget.
 fn kv_from_args(args: &Args) -> Result<(raana::kvq::KvqPolicy, usize)> {
     use raana::kvq::KvqPolicy;
@@ -226,21 +257,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_budget_bytes,
     };
 
+    // Index serving rides along on the HTTP front-end unless opted out:
+    // the same manifest/params/packed triple backs the embed path.
+    let want_index = args.opt("http").is_some() && !args.flag("no-index");
+
     // Artifact-free path: serve a native-initialized model straight from
     // packed codes (demonstrates the request path without `make artifacts`).
     let have_artifacts = artifacts_root().join(model).join("manifest.json").exists();
-    let (server, batch) = if args.flag("native") || !have_artifacts {
+    let (server, batch, index) = if args.flag("native") || !have_artifacts {
         if !have_artifacts {
             info!("artifacts/{model} missing — native packed-serving demo (untrained weights)");
         }
-        build_native_demo_server(args, cfg)?
+        build_native_demo_server(args, cfg, want_index)?
     } else {
-        build_artifact_server(args, model, cfg)?
+        build_artifact_server(args, model, cfg, want_index)?
     };
     match args.opt("http") {
-        Some(port) => serve_http(server, port, args),
+        Some(port) => serve_http(server, index, port, args),
         None => run_requests(server, n_req, new_tokens, batch),
     }
+}
+
+/// Build the optional index server from clones of the serving triple
+/// (the generate batcher owns the originals; the embed path duplicates
+/// the weights — acceptable at these model sizes, documented in
+/// ARCHITECTURE §Retrieval).
+fn maybe_index_server(
+    args: &Args,
+    want_index: bool,
+    manifest: &raana::model::Manifest,
+    params: &raana::model::ModelParams,
+    packed: &raana::runtime::PackedLayers,
+) -> Result<Option<raana::serve::index::IndexServer>> {
+    if !want_index {
+        return Ok(None);
+    }
+    let ix = raana::serve::index::IndexServer::with_embedder(
+        index_cfg_from_args(args)?,
+        manifest.clone(),
+        params.clone(),
+        Some(packed.clone()),
+    )?;
+    Ok(Some(ix))
 }
 
 /// Quantize the trained `model` and start a packed-code server over it.
@@ -248,7 +306,8 @@ fn build_artifact_server(
     args: &Args,
     model: &str,
     cfg: raana::serve::ServeConfig,
-) -> Result<(raana::serve::Server, usize)> {
+    want_index: bool,
+) -> Result<(raana::serve::Server, usize, Option<raana::serve::index::IndexServer>)> {
     let env = Env::load(model)?;
     // quantize, keeping the codes bit-packed: the server's fwd_logits
     // computes on them via qgemm, with zero dequantization per forward
@@ -270,15 +329,17 @@ fn build_artifact_server(
     let batch = manifest.eval_batch;
     let params = env.params.clone();
     drop(env); // the server thread owns its own (native) runtime
+    let index = maybe_index_server(args, want_index, &manifest, &params, &packed)?;
     let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg)?;
-    Ok((server, batch))
+    Ok((server, batch, index))
 }
 
 /// Synthesize + pack a demo model and start a server over it.
 fn build_native_demo_server(
     args: &Args,
     cfg: raana::serve::ServeConfig,
-) -> Result<(raana::serve::Server, usize)> {
+    want_index: bool,
+) -> Result<(raana::serve::Server, usize, Option<raana::serve::index::IndexServer>)> {
     let bits_raw = args.opt_usize("bits", 4)?;
     if !(1..=8).contains(&bits_raw) {
         bail!("--bits must be in 1..=8, got {bits_raw}");
@@ -294,18 +355,26 @@ fn build_native_demo_server(
         packed.avg_bits()
     );
     let batch = manifest.eval_batch;
+    let index = maybe_index_server(args, want_index, &manifest, &params, &packed)?;
     let server = raana::serve::Server::start_native_packed_with(manifest, params, packed, cfg)?;
-    Ok((server, batch))
+    Ok((server, batch, index))
 }
 
 /// Front the batching server with the HTTP layer until stdin closes, then
 /// drain gracefully (SIGTERM-style: stop accepting, finish in-flight
 /// work, collect final stats).
-fn serve_http(server: raana::serve::Server, port: &str, args: &Args) -> Result<()> {
+fn serve_http(
+    server: raana::serve::Server,
+    index: Option<raana::serve::index::IndexServer>,
+    port: &str,
+    args: &Args,
+) -> Result<()> {
     let server = std::sync::Arc::new(server);
+    let index = index.map(std::sync::Arc::new);
     let addr = if port.contains(':') { port.to_string() } else { format!("127.0.0.1:{port}") };
-    let http = raana::net::HttpServer::bind_with(
+    let http = raana::net::HttpServer::bind_with_index(
         std::sync::Arc::clone(&server),
+        index.clone(),
         &addr,
         raana::net::HttpConfig {
             workers: args.opt_usize("http-workers", 0)?,
@@ -320,6 +389,18 @@ fn serve_http(server: raana::serve::Server, port: &str, args: &Args) -> Result<(
         "  curl -s -X POST http://{bound}/v1/generate -d \
          '{{\"prompt\":[84,104,101,32],\"max_new_tokens\":16}}'"
     );
+    if index.is_some() {
+        println!("  curl -s -X POST http://{bound}/v1/embed -d '{{\"text\":\"hello\"}}'");
+        println!(
+            "  curl -s -X POST http://{bound}/v1/collections/docs/add -d \
+             '{{\"texts\":[\"first doc\",\"second doc\"]}}'"
+        );
+        println!(
+            "  curl -s -X POST http://{bound}/v1/collections/docs/query -d \
+             '{{\"text\":\"first\",\"k\":2}}'"
+        );
+        println!("  curl -s http://{bound}/v1/collections");
+    }
     let mut line = String::new();
     loop {
         line.clear();
@@ -340,6 +421,90 @@ fn serve_http(server: raana::serve::Server, port: &str, args: &Args) -> Result<(
         stats.throughput_tok_s(),
         stats.p50_latency() * 1e3,
         stats.p95_latency() * 1e3
+    );
+    if let Some(ix) = &index {
+        let s = ix.stats();
+        println!(
+            "index: {} collections, {} rows, {} embeds, {} queries, {} B scan payload",
+            s.collections, s.rows, s.embeds, s.queries, s.code_bytes
+        );
+    }
+    Ok(())
+}
+
+/// `raana index` — artifact-free retrieval demo: synthesize + pack a demo
+/// model, embed a small document set, self-retrieve every document, and
+/// report recall plus the scan-payload economics.
+fn cmd_index(args: &Args) -> Result<()> {
+    use raana::serve::index::IndexServer;
+    let d = args.opt_usize("d-model", 128)?;
+    let layers = args.opt_usize("layers", 2)?;
+    let n_docs = args.opt_usize("docs", 24)?.max(2);
+    let k = args.opt_usize("k", 5)?.max(1);
+    let rerank = args.opt_usize("rerank", raana::index::DEFAULT_RERANK_FACTOR)?.max(1);
+    let cfg = index_cfg(args.opt_usize("bits", 0)?, args.opt_usize("budget", 0)?, "bits")?;
+    let (manifest, params, packed) =
+        raana::experiments::native_demo_packed("index-demo", d, layers, 4, 7)?;
+    info!(
+        "embedding with a packed demo model: d={d}, {layers} layers, {} linears on codes",
+        manifest.linears.len()
+    );
+    let ix = IndexServer::with_embedder(cfg, manifest, params, Some(packed))?;
+    let dim = ix.embed_dim().expect("embedder attached");
+
+    // synthesize distinct "documents" from the synthetic corpus
+    let corpus = raana::data::synthwiki(1 << 14, 11);
+    let words: Vec<&str> = corpus.split_whitespace().collect();
+    let docs: Vec<String> = (0..n_docs)
+        .map(|i| {
+            let w0 = (i * 13) % words.len().saturating_sub(9).max(1);
+            format!("doc {i}: {}", words[w0..(w0 + 8).min(words.len())].join(" "))
+        })
+        .collect();
+    for doc in &docs {
+        let emb = ix.embed(&raana::data::tokenize(doc))?;
+        ix.add("demo", &emb, dim)?;
+    }
+
+    // self-retrieval: every document must come back as its own top hit
+    let mut hits_at_1 = 0usize;
+    let mut t = benchlib::Table::new(&["query doc", "top-1 id", "score", "top-k ids"]);
+    for (i, doc) in docs.iter().enumerate() {
+        let q = ix.embed(&raana::data::tokenize(doc))?;
+        let hits = ix.query("demo", &q, k, rerank)?;
+        if hits.first().map(|h| h.id) == Some(i) {
+            hits_at_1 += 1;
+        }
+        if i < 8 {
+            t.row(vec![
+                format!("{i}"),
+                hits.first().map(|h| h.id.to_string()).unwrap_or_default(),
+                hits.first().map(|h| format!("{:.4}", h.score)).unwrap_or_default(),
+                hits.iter().map(|h| h.id.to_string()).collect::<Vec<_>>().join(","),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "self-retrieval recall@1: {hits_at_1}/{} (two-phase: coded scan + exact rerank x{rerank})",
+        docs.len()
+    );
+    let mut t = benchlib::Table::new(&["collection", "rows", "dim", "bits", "B/row (scan)", "f32 B/row"]);
+    for c in ix.collections() {
+        t.row(vec![
+            c.name.clone(),
+            c.rows.to_string(),
+            c.dim.to_string(),
+            c.bits.to_string(),
+            c.bytes_per_row.to_string(),
+            (4 * c.dim).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let s = ix.stats();
+    println!(
+        "{} embeds, {} queries, {} B scan payload total",
+        s.embeds, s.queries, s.code_bytes
     );
     Ok(())
 }

@@ -20,11 +20,40 @@
 //!   to **429**, a shut-down server to **503**, an unservable request
 //!   (e.g. out-of-vocab prompt token) to **400**.
 //! * `GET /healthz` — liveness: `{"ok":true,"running":bool}`.
-//! * `GET /v1/stats` — live [`ServerStats`] snapshot plus the current
-//!   admission-queue depth, readable **while generation is in flight**.
-//!   Includes the KV-cache economics: `kv_bits` (32 = dense f32),
-//!   `kv_bytes_per_lane`, and the lane pool's size (`lanes`) and
-//!   occupancy (`lanes_active`).
+//! * `GET /v1/stats` — live [`ServerStats`] snapshot, readable **while
+//!   generation is in flight**. Includes the admission-queue depth
+//!   (republished per batcher round) and the KV-cache economics:
+//!   `kv_bits` (32 = dense f32), `kv_bytes_per_lane`, and the lane
+//!   pool's size (`lanes`) and occupancy (`lanes_active`).
+//!
+//! With an [`IndexServer`] attached ([`HttpServer::bind_with_index`]),
+//! the retrieval workload rides the same front-end:
+//!
+//! * `POST /v1/embed` — body `{"text": "..."}` or `{"tokens": [ints]}`;
+//!   answers `{"embedding": [f32...], "dim": N}` (mean-pooled,
+//!   L2-normalized final hidden states, truncated to the model window).
+//! * `POST /v1/collections/{name}/add` — body `{"vectors": [[f32...],
+//!   ...]}`, or `{"texts": [...]}` / `{"tokens": [[ints], ...]}` to
+//!   embed server-side; answers `{"collection", "ids", "count"}`. A
+//!   budget-policy store that cannot fit the rows refuses with **507**.
+//! * `POST /v1/collections/{name}/query` — body `{"vector": [f32...]}`
+//!   (or `"text"` / `"tokens"`), optional `"k"` (default 10) and
+//!   `"rerank_factor"` (default 4); answers `{"results": [{"id",
+//!   "score"}, ...]}` — estimated scan over packed codes, exact rerank.
+//! * `GET /v1/collections` — per-collection bits/bytes/row counts plus
+//!   the index serving counters.
+//!
+//! Without an index attached these paths answer 404. Under overflow
+//! (pinned worker pool) the POST index endpoints refuse with 503 like
+//! generation — they run model/scan compute — while `GET
+//! /v1/collections` stays live next to `/healthz` and `/v1/stats`.
+//!
+//! # Error shape
+//!
+//! Every error response on every path — 400/404/405/413/429/500/503/507
+//! — is the same single-key JSON object `{"error": "..."}`
+//! (loopback-tested across all of them), and every 405 names the
+//! allowed methods in an `Allow:` header per RFC 9110.
 //!
 //! # Cancellation
 //!
@@ -80,7 +109,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::data::tokenize;
+use crate::index::{IndexError, DEFAULT_RERANK_FACTOR};
 use crate::json::{self, Value};
+use crate::serve::index::IndexServer;
 use crate::serve::{AdmitError, Completion, Server, ServerStats, StreamEvent, StreamHandle};
 use crate::threadpool::{default_threads, Pool};
 
@@ -150,8 +182,23 @@ impl HttpServer {
         HttpServer::bind_with(server, addr, HttpConfig { workers, max_new_tokens_cap: 0 })
     }
 
-    /// [`HttpServer::bind`] with explicit [`HttpConfig`].
+    /// [`HttpServer::bind`] with explicit [`HttpConfig`] (no index
+    /// endpoints — they answer 404).
     pub fn bind_with(server: Arc<Server>, addr: &str, cfg: HttpConfig) -> Result<HttpServer> {
+        HttpServer::bind_with_index(server, None, addr, cfg)
+    }
+
+    /// [`HttpServer::bind_with`] plus an optional [`IndexServer`]: when
+    /// supplied, `/v1/embed` and `/v1/collections/...` serve the
+    /// retrieval workload from the same connection pool (index calls run
+    /// directly on the connection workers — see
+    /// [`crate::serve::index`]).
+    pub fn bind_with_index(
+        server: Arc<Server>,
+        index: Option<Arc<IndexServer>>,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
         let local = listener.local_addr().context("resolving bound address")?;
@@ -186,14 +233,16 @@ impl HttpServer {
                         if active.load(Ordering::SeqCst) < workers {
                             active.fetch_add(1, Ordering::SeqCst);
                             let srv = Arc::clone(&server);
+                            let ix = index.clone();
                             let act = Arc::clone(&active);
                             pool.submit(move || {
-                                handle_connection(&srv, conn, cap, false);
+                                handle_connection(&srv, ix.as_deref(), conn, cap, false);
                                 act.fetch_sub(1, Ordering::SeqCst);
                             });
                         } else if overflow2.load(Ordering::SeqCst) < OVERFLOW_HANDLERS_MAX {
                             overflow2.fetch_add(1, Ordering::SeqCst);
                             let srv = Arc::clone(&server);
+                            let ix = index.clone();
                             let ovf = Arc::clone(&overflow2);
                             // detached: lifetime bounded by the socket
                             // read/write timeouts, work bounded to cheap
@@ -202,8 +251,9 @@ impl HttpServer {
                             // shutdown uses the counter as the fence for
                             // "no overflow thread still holds the server".
                             thread::spawn(move || {
-                                handle_connection(&srv, conn, cap, true);
+                                handle_connection(&srv, ix.as_deref(), conn, cap, true);
                                 drop(srv);
+                                drop(ix);
                                 ovf.fetch_sub(1, Ordering::SeqCst);
                             });
                         } else {
@@ -372,10 +422,17 @@ fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
 }
 
 /// Serve one connection. `overflow` marks the pinned-pool path: cheap
-/// endpoints are still answered, but generation is refused with 503
-/// (after the request was read, so the refusal actually reaches the
-/// client instead of being discarded by an RST).
-fn handle_connection(server: &Server, mut stream: TcpStream, cap: usize, overflow: bool) {
+/// endpoints are still answered, but generation — and the index's POST
+/// compute paths — are refused with 503 (after the request was read, so
+/// the refusal actually reaches the client instead of being discarded
+/// by an RST).
+fn handle_connection(
+    server: &Server,
+    index: Option<&IndexServer>,
+    mut stream: TcpStream,
+    cap: usize,
+    overflow: bool,
+) {
     // the listener is non-blocking for the stop-flag poll; accepted
     // sockets must not inherit that (they do on some BSDs)
     let _ = stream.set_nonblocking(false);
@@ -404,26 +461,84 @@ fn handle_connection(server: &Server, mut stream: TcpStream, cap: usize, overflo
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            let body = json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("running", Value::Bool(server.is_running())),
-            ]);
-            let _ = respond(&mut stream, 200, "OK", &body.to_json());
+    let method = req.method.as_str();
+    match req.path.as_str() {
+        "/healthz" => match method {
+            "GET" => {
+                let body = json::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("running", Value::Bool(server.is_running())),
+                ]);
+                let _ = respond(&mut stream, 200, "OK", &body.to_json());
+            }
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        "/v1/stats" => match method {
+            "GET" => {
+                let _ = respond(&mut stream, 200, "OK", &stats_json(server).to_json());
+            }
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        "/v1/generate" => match method {
+            "POST" if overflow => {
+                let _ =
+                    respond_error(&mut stream, 503, "all connection workers busy, retry later");
+            }
+            "POST" => handle_generate(server, &mut stream, &req.body, cap),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "POST");
+            }
+        },
+        "/v1/embed" => match method {
+            // no index attached beats overflow: the path genuinely does
+            // not exist on this deployment, so 404 — retrying is useless
+            "POST" if overflow && index.is_some() => {
+                let _ =
+                    respond_error(&mut stream, 503, "all connection workers busy, retry later");
+            }
+            "POST" => handle_embed(index, &mut stream, &req.body),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "POST");
+            }
+        },
+        "/v1/collections" => match method {
+            // accounting read: stays live under overflow like /v1/stats
+            "GET" => handle_collections_list(index, &mut stream),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        p if p.starts_with("/v1/collections/") => {
+            let rest = &p["/v1/collections/".len()..];
+            match (rest.split_once('/'), method) {
+                // same 404-beats-503 rule as /v1/embed
+                (Some((_, "add" | "query")), "POST") if overflow && index.is_some() => {
+                    let _ = respond_error(
+                        &mut stream,
+                        503,
+                        "all connection workers busy, retry later",
+                    );
+                }
+                (Some((name, "add")), "POST") => {
+                    handle_index_add(index, name, &mut stream, &req.body)
+                }
+                (Some((name, "query")), "POST") => {
+                    handle_index_query(index, name, &mut stream, &req.body)
+                }
+                (Some((_, "add" | "query")), m) => {
+                    let _ = respond_method_not_allowed(&mut stream, m, "POST");
+                }
+                _ => {
+                    let _ = respond_error(&mut stream, 404, &format!("no endpoint {p}"));
+                }
+            }
         }
-        ("GET", "/v1/stats") => {
-            let _ = respond(&mut stream, 200, "OK", &stats_json(server).to_json());
-        }
-        ("POST", "/v1/generate") if overflow => {
-            let _ = respond_error(&mut stream, 503, "all connection workers busy, retry later");
-        }
-        ("POST", "/v1/generate") => handle_generate(server, &mut stream, &req.body, cap),
-        ("GET", _) | ("POST", _) => {
-            let _ = respond_error(&mut stream, 404, &format!("no endpoint {}", req.path));
-        }
-        (m, _) => {
-            let _ = respond_error(&mut stream, 405, &format!("method {m} not supported"));
+        p => {
+            let _ = respond_error(&mut stream, 404, &format!("no endpoint {p}"));
         }
     }
 }
@@ -443,17 +558,7 @@ fn parse_generate(body: &[u8]) -> Result<GenParams> {
     let v = json::parse(text).map_err(|e| anyhow!("invalid JSON body: {e}"))?;
     let prompt = match v.get("prompt") {
         None => Vec::new(),
-        Some(p) => p
-            .as_arr()
-            .ok_or_else(|| anyhow!("'prompt' must be an array of token ids"))?
-            .iter()
-            .map(|x| {
-                x.as_f64()
-                    .filter(|f| f.fract() == 0.0 && (-2147483648.0..=2147483647.0).contains(f))
-                    .map(|f| f as i32)
-                    .ok_or_else(|| anyhow!("'prompt' entries must be integer token ids"))
-            })
-            .collect::<Result<Vec<i32>>>()?,
+        Some(p) => parse_i32_array(p, "prompt")?,
     };
     let max_new_tokens = match v.get("max_new_tokens") {
         None => 16,
@@ -624,6 +729,316 @@ fn stream_response(stream: &mut TcpStream, handle: StreamHandle) {
     }
 }
 
+// ------------------------------------------------------- index endpoints
+
+/// Unwrap the optional index server; absent → 404 (the deployment did
+/// not enable index serving, so the path genuinely does not exist).
+fn require_index<'a>(
+    index: Option<&'a IndexServer>,
+    stream: &mut TcpStream,
+) -> Option<&'a IndexServer> {
+    if index.is_none() {
+        let _ = respond_error(stream, 404, "index serving not enabled on this server");
+    }
+    index
+}
+
+/// Map a typed [`IndexError`] to its transport status: missing
+/// collections are 404, a full byte budget is 507 (the add was refused,
+/// nothing mutated), everything else is a 400-shaped caller error.
+fn respond_index_error(stream: &mut TcpStream, e: &IndexError) -> std::io::Result<()> {
+    let status = match e {
+        IndexError::NoSuchCollection(_) => 404,
+        IndexError::BudgetTooSmall { .. } => 507,
+        _ => 400,
+    };
+    respond_error(stream, status, &e.to_string())
+}
+
+/// Parse an i32 array field (token ids — same validation as the
+/// generate prompt).
+fn parse_i32_array(x: &Value, field: &str) -> Result<Vec<i32>> {
+    x.as_arr()
+        .ok_or_else(|| anyhow!("'{field}' must be an array of token ids"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|f| f.fract() == 0.0 && (-2147483648.0..=2147483647.0).contains(f))
+                .map(|f| f as i32)
+                .ok_or_else(|| anyhow!("'{field}' entries must be integer token ids"))
+        })
+        .collect()
+}
+
+/// Parse an f32 vector field (the JSON parser already rejected
+/// non-finite numbers).
+fn parse_f32_array(x: &Value, field: &str) -> Result<Vec<f32>> {
+    let arr = x
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{field}' must be an array of numbers"))?;
+    anyhow::ensure!(!arr.is_empty(), "'{field}' must be non-empty");
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("'{field}' entries must be numbers"))
+        })
+        .collect()
+}
+
+/// One token sequence out of `{"text": "..."}` or `{"tokens": [ints]}`.
+fn parse_tokens_or_text(v: &Value) -> Result<Vec<i32>> {
+    if let Some(t) = v.get("text") {
+        let s = t.as_str().ok_or_else(|| anyhow!("'text' must be a string"))?;
+        return Ok(tokenize(s));
+    }
+    if let Some(t) = v.get("tokens") {
+        return parse_i32_array(t, "tokens");
+    }
+    bail!("need 'text' (a string) or 'tokens' (an array of token ids)")
+}
+
+fn hits_json(hits: &[crate::index::SearchHit]) -> Value {
+    json::arr(
+        hits.iter()
+            .map(|h| {
+                json::obj(vec![
+                    ("id", json::num(h.id as f64)),
+                    ("score", json::num(h.score as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// `POST /v1/embed` — embed one text/token sequence.
+fn handle_embed(index: Option<&IndexServer>, stream: &mut TcpStream, body: &[u8]) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow!("body is not UTF-8"))
+        .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")))
+        .and_then(|v| parse_tokens_or_text(&v));
+    let tokens = match parsed {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    match ix.embed(&tokens) {
+        Ok(emb) => {
+            let body = json::obj(vec![
+                ("dim", json::num(emb.len() as f64)),
+                ("tokens", json::num(tokens.len() as f64)),
+                (
+                    "embedding",
+                    json::arr(emb.iter().map(|&x| json::num(x as f64)).collect()),
+                ),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        Err(e) => {
+            let _ = respond_index_error(stream, &e);
+        }
+    }
+}
+
+/// The add/query vector payloads: caller-supplied vectors, or texts /
+/// token sequences embedded server-side. Returns row-major values plus
+/// the row dimension.
+fn parse_vectors(ix: &IndexServer, v: &Value) -> Result<(Vec<f32>, usize)> {
+    if let Some(vs) = v.get("vectors") {
+        let rows = vs
+            .as_arr()
+            .ok_or_else(|| anyhow!("'vectors' must be an array of number arrays"))?;
+        anyhow::ensure!(!rows.is_empty(), "'vectors' must be non-empty");
+        let mut flat = Vec::new();
+        let mut d = 0usize;
+        for (i, row) in rows.iter().enumerate() {
+            let r = parse_f32_array(row, "vectors")?;
+            if i == 0 {
+                d = r.len();
+            } else {
+                anyhow::ensure!(
+                    r.len() == d,
+                    "'vectors' rows must share one dimension ({} vs {d})",
+                    r.len()
+                );
+            }
+            flat.extend_from_slice(&r);
+        }
+        return Ok((flat, d));
+    }
+    // text/token shapes: embed server-side, one row per entry
+    let seqs: Vec<Vec<i32>> = if let Some(ts) = v.get("texts") {
+        ts.as_arr()
+            .ok_or_else(|| anyhow!("'texts' must be an array of strings"))?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .map(tokenize)
+                    .ok_or_else(|| anyhow!("'texts' entries must be strings"))
+            })
+            .collect::<Result<_>>()?
+    } else if let Some(ts) = v.get("tokens") {
+        ts.as_arr()
+            .ok_or_else(|| anyhow!("'tokens' must be an array of token-id arrays"))?
+            .iter()
+            .map(|t| parse_i32_array(t, "tokens"))
+            .collect::<Result<_>>()?
+    } else {
+        bail!("need 'vectors', 'texts', or 'tokens'")
+    };
+    anyhow::ensure!(!seqs.is_empty(), "nothing to add");
+    let mut flat = Vec::new();
+    let mut d = 0usize;
+    for seq in &seqs {
+        let emb = ix.embed(seq).map_err(|e| anyhow!("{e}"))?;
+        d = emb.len();
+        flat.extend_from_slice(&emb);
+    }
+    Ok((flat, d))
+}
+
+/// `POST /v1/collections/{name}/add`.
+fn handle_index_add(index: Option<&IndexServer>, name: &str, stream: &mut TcpStream, body: &[u8]) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow!("body is not UTF-8"))
+        .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")))
+        .and_then(|v| parse_vectors(ix, &v));
+    let (flat, d) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    match ix.add(name, &flat, d) {
+        Ok((first, count)) => {
+            let body = json::obj(vec![
+                ("collection", json::s(name)),
+                ("count", json::num(count as f64)),
+                (
+                    "ids",
+                    json::arr((first..first + count).map(|i| json::num(i as f64)).collect()),
+                ),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        Err(e) => {
+            let _ = respond_index_error(stream, &e);
+        }
+    }
+}
+
+/// `POST /v1/collections/{name}/query`.
+fn handle_index_query(
+    index: Option<&IndexServer>,
+    name: &str,
+    stream: &mut TcpStream,
+    body: &[u8],
+) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow!("body is not UTF-8"))
+        .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")));
+    let v = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    let q = if let Some(qv) = v.get("vector") {
+        match parse_f32_array(qv, "vector") {
+            Ok(q) => q,
+            Err(e) => {
+                let _ = respond_error(stream, 400, &e.to_string());
+                return;
+            }
+        }
+    } else {
+        match parse_tokens_or_text(&v).and_then(|t| ix.embed(&t).map_err(|e| anyhow!("{e}"))) {
+            Ok(q) => q,
+            Err(e) => {
+                let _ = respond_error(stream, 400, &e.to_string());
+                return;
+            }
+        }
+    };
+    let k = match v.get("k") {
+        None => 10,
+        Some(x) => match x.as_f64().filter(|f| f.fract() == 0.0 && (1.0..=1024.0).contains(f)) {
+            Some(f) => f as usize,
+            None => {
+                let _ = respond_error(stream, 400, "'k' must be an integer in 1..=1024");
+                return;
+            }
+        },
+    };
+    let rerank_factor = match v.get("rerank_factor") {
+        None => DEFAULT_RERANK_FACTOR,
+        Some(x) => match x.as_f64().filter(|f| f.fract() == 0.0 && (1.0..=64.0).contains(f)) {
+            Some(f) => f as usize,
+            None => {
+                let _ =
+                    respond_error(stream, 400, "'rerank_factor' must be an integer in 1..=64");
+                return;
+            }
+        },
+    };
+    match ix.query(name, &q, k, rerank_factor) {
+        Ok(hits) => {
+            let body = json::obj(vec![
+                ("collection", json::s(name)),
+                ("k", json::num(k as f64)),
+                ("rerank_factor", json::num(rerank_factor as f64)),
+                ("results", hits_json(&hits)),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        Err(e) => {
+            let _ = respond_index_error(stream, &e);
+        }
+    }
+}
+
+/// `GET /v1/collections` — the index accounting surface.
+fn handle_collections_list(index: Option<&IndexServer>, stream: &mut TcpStream) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let stats = ix.stats();
+    let collections = json::arr(
+        ix.collections()
+            .iter()
+            .map(|c| {
+                json::obj(vec![
+                    ("name", json::s(&c.name)),
+                    ("rows", json::num(c.rows as f64)),
+                    ("dim", json::num(c.dim as f64)),
+                    ("bits", json::num(c.bits as f64)),
+                    ("metric", json::s(c.metric.name())),
+                    ("bytes_per_row", json::num(c.bytes_per_row as f64)),
+                    ("code_bytes", json::num(c.code_bytes as f64)),
+                    ("exact_bytes", json::num(c.exact_bytes as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("collections", collections),
+        ("rows", json::num(stats.rows as f64)),
+        ("code_bytes", json::num(stats.code_bytes as f64)),
+        ("embeds", json::num(stats.embeds as f64)),
+        ("rows_added", json::num(stats.rows_added as f64)),
+        ("queries", json::num(stats.queries as f64)),
+    ];
+    if let Some(d) = ix.embed_dim() {
+        fields.push(("embed_dim", json::num(d as f64)));
+    }
+    let _ = respond(stream, 200, "OK", &json::obj(fields).to_json());
+}
+
 fn completion_json(c: &Completion, done_marker: bool) -> Value {
     let mut fields = vec![
         ("id", json::num(c.id as f64)),
@@ -648,7 +1063,9 @@ fn stats_json(server: &Server) -> Value {
         ("batch_steps", json::num(s.batch_steps as f64)),
         ("total_rows", json::num(s.total_rows as f64)),
         ("cancelled", json::num(s.cancelled as f64)),
-        ("queue_depth", json::num(server.queue_depth() as f64)),
+        // from the snapshot: the batcher republishes it per round, so one
+        // stats read reports generate and index load coherently
+        ("queue_depth", json::num(s.queue_depth as f64)),
         ("kv_bits", json::num(s.kv_bits)),
         ("kv_bytes_per_lane", json::num(s.kv_bytes_per_lane as f64)),
         ("lanes", json::num(s.lanes as f64)),
@@ -670,11 +1087,29 @@ fn respond_admit_error(stream: &mut TcpStream, e: &AdmitError) -> std::io::Resul
 }
 
 fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
-    let head = format!(
+    respond_with_headers(stream, status, reason, &[], body)
+}
+
+/// [`respond`] with extra response headers (the 405 path's `Allow:`).
+fn respond_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()
@@ -688,9 +1123,31 @@ fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Res
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
+        507 => "Insufficient Storage",
         _ => "Internal Server Error",
     };
     respond(stream, status, reason, &json::obj(vec![("error", json::s(msg))]).to_json())
+}
+
+/// 405 with the RFC-9110-required `Allow:` header and the same
+/// `{"error": ...}` body shape as every other error path.
+fn respond_method_not_allowed(
+    stream: &mut TcpStream,
+    method: &str,
+    allow: &str,
+) -> std::io::Result<()> {
+    let body = json::obj(vec![(
+        "error",
+        json::s(&format!("method {method} not allowed here (allow: {allow})")),
+    )])
+    .to_json();
+    respond_with_headers(
+        stream,
+        405,
+        "Method Not Allowed",
+        &[("Allow", allow)],
+        &body,
+    )
 }
 
 fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
@@ -850,6 +1307,28 @@ mod tests {
         assert!(parse_generate(br#"{"seed":-3}"#).is_err());
         assert!(parse_generate(br#"{"stream":1}"#).is_err());
         assert!(parse_generate(&[0xFF, 0xFE]).is_err());
+    }
+
+    #[test]
+    fn index_body_parsing_shapes() {
+        // tokens-or-text: both shapes, text wins when both present
+        let v = json::parse(r#"{"text":"AB"}"#).unwrap();
+        assert_eq!(parse_tokens_or_text(&v).unwrap(), vec![65, 66]);
+        let v = json::parse(r#"{"tokens":[1,2,3]}"#).unwrap();
+        assert_eq!(parse_tokens_or_text(&v).unwrap(), vec![1, 2, 3]);
+        assert!(parse_tokens_or_text(&json::parse("{}").unwrap()).is_err());
+        assert!(parse_tokens_or_text(&json::parse(r#"{"text":7}"#).unwrap()).is_err());
+        assert!(parse_tokens_or_text(&json::parse(r#"{"tokens":[1.5]}"#).unwrap()).is_err());
+
+        let v = json::parse(r#"{"vector":[0.5,-1,2]}"#).unwrap();
+        assert_eq!(
+            parse_f32_array(v.get("vector").unwrap(), "vector").unwrap(),
+            vec![0.5, -1.0, 2.0]
+        );
+        let v = json::parse(r#"{"vector":[]}"#).unwrap();
+        assert!(parse_f32_array(v.get("vector").unwrap(), "vector").is_err());
+        let v = json::parse(r#"{"vector":"x"}"#).unwrap();
+        assert!(parse_f32_array(v.get("vector").unwrap(), "vector").is_err());
     }
 
     #[test]

@@ -388,6 +388,39 @@ impl ModelRuntime {
         )
     }
 
+    /// Embed one variable-length token sequence: mean-pooled,
+    /// L2-normalized final hidden states — the retrieval subsystem's
+    /// representation. Runs on the native backend (packed codes when
+    /// attached). Contexts beyond `seq_len` are an **error** at this
+    /// level; the serving layer
+    /// ([`crate::serve::index::IndexServer::embed`]) truncates to the
+    /// model window before calling. See [`NativeModel::embed`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use raana::model::synthetic_manifest;
+    /// use raana::runtime::ModelRuntime;
+    ///
+    /// let m = synthetic_manifest("embed-doc", 32, 1, 2, 64, 8, 256, 1);
+    /// let mrt = ModelRuntime::native(m).unwrap();
+    /// let params = mrt.init(1).unwrap();
+    /// let e = mrt.embed(&params, &[10, 11, 12]).unwrap();
+    /// assert_eq!(e.len(), 32);
+    /// let norm: f32 = e.iter().map(|x| x * x).sum::<f32>().sqrt();
+    /// assert!((norm - 1.0).abs() < 1e-4); // unit-norm by contract
+    /// assert!(mrt.embed(&params, &[0; 9]).is_err()); // beyond seq_len
+    /// ```
+    pub fn embed(&self, params: &ModelParams, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.native_model.embed(
+            &self.manifest,
+            params,
+            self.packed.as_ref(),
+            tokens,
+            0,
+        )
+    }
+
     /// Full-recompute last-token logits for one variable-length context —
     /// the reference the KV path is bit-identical to, and the per-token
     /// cost recompute serving pays. See [`NativeModel::last_logits_ctx`].

@@ -108,6 +108,45 @@ impl NativeModel {
         self.project_rows(params, &hid, &[l - 1], threads)
     }
 
+    /// Embed ONE variable-length token sequence: run it through the full
+    /// forward at positions `0..len`, mean-pool the final hidden states
+    /// over the sequence, and L2-normalize — the representation the
+    /// retrieval subsystem ([`crate::index`]) stores and searches.
+    ///
+    /// With packed weights attached the forward computes on RaBitQ codes
+    /// (same zero-dequantization path as generation). Deterministic in
+    /// the thread count; an all-zero pooled vector (degenerate) is
+    /// returned unnormalized rather than dividing by zero.
+    pub fn embed(
+        &self,
+        m: &Manifest,
+        params: &ModelParams,
+        packed: Option<&PackedLayers>,
+        tokens: &[i32],
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let l = tokens.len();
+        anyhow::ensure!(
+            l >= 1 && l <= self.seq_len,
+            "embed context length {l} not in 1..={}",
+            self.seq_len
+        );
+        let hid = self.forward_hidden_seq(m, params, packed, tokens, l, threads, None, None)?;
+        let d = self.d_model;
+        // mean-pool in f64 so the pooled vector is independent of how the
+        // forward batched its rows
+        let mut acc = vec![0f64; d];
+        for i in 0..l {
+            for (a, &h) in acc.iter_mut().zip(hid.row(i)) {
+                *a += h as f64;
+            }
+        }
+        let inv = 1.0 / l as f64;
+        let norm: f64 = acc.iter().map(|&x| (x * inv) * (x * inv)).sum::<f64>().sqrt();
+        let scale = if norm > 0.0 { inv / norm } else { inv };
+        Ok(acc.iter().map(|&x| (x * scale) as f32).collect())
+    }
+
     /// Gather `rows` of the final hidden states and project them through
     /// the fp lm_head; returns `(rows.len() * vocab)` row-major logits.
     fn project_rows(
@@ -1161,6 +1200,27 @@ mod tests {
         assert_eq!(p.tensors, q.tensors);
         let r = native_init(&m, 2);
         assert_ne!(p.tensors, r.tensors);
+    }
+
+    #[test]
+    fn embed_is_unit_norm_deterministic_and_length_sensitive() {
+        let (m, model, params, _) = tiny_setup();
+        let tokens: Vec<i32> = (0..9).map(|i| (i * 11 % 256) as i32).collect();
+        let e = model.embed(&m, &params, None, &tokens, 2).unwrap();
+        assert_eq!(e.len(), model.d_model);
+        let norm: f64 = e.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "embedding must be L2-normalized, norm {norm}");
+        // deterministic in the thread count
+        let e8 = model.embed(&m, &params, None, &tokens, 8).unwrap();
+        assert_eq!(e, e8);
+        // a different context embeds differently
+        let other = model.embed(&m, &params, None, &[1, 2, 3], 2).unwrap();
+        assert_ne!(e, other);
+        // bad contexts refuse cleanly
+        assert!(model.embed(&m, &params, None, &[], 1).is_err());
+        let long = vec![1i32; model.seq_len + 1];
+        assert!(model.embed(&m, &params, None, &long, 1).is_err());
+        assert!(model.embed(&m, &params, None, &[300], 1).is_err());
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Index serving: the [`IndexServer`] that fronts the retrieval
+//! subsystem ([`crate::index`]) next to the generation batcher.
+//!
+//! Unlike generation — which needs a dedicated batcher thread to
+//! amortize model steps across KV lanes — index operations are
+//! synchronous and short, so the `IndexServer` is a thread-safe handle
+//! the HTTP connection workers call **directly**: embeds run the native
+//! forward on the caller's thread (the fused kernels fan out on the
+//! crate's shared worker pool, the same threads the batcher's kernels
+//! use), and collection reads/writes serialize on one store lock. That
+//! keeps generate and index traffic on one front-end and one thread
+//! pool without coupling index latency to the batcher's round cadence.
+//!
+//! The embedding backend is optional: an `IndexServer` without one
+//! still serves vector-in/vector-out add + query (callers bring their
+//! own embeddings); `/v1/embed` and text-shaped requests then refuse
+//! with a typed error.
+#![deny(missing_docs)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::index::{CollectionInfo, IndexConfig, IndexError, SearchHit, VectorStore};
+use crate::model::{Manifest, ModelParams};
+use crate::runtime::native::{NativeModel, PackedLayers};
+
+/// The model triple an [`IndexServer`] embeds with: manifest + weights
+/// (+ packed codes, so embeds ride the same zero-dequant `qgemm` path
+/// as generation).
+pub struct EmbedBackend {
+    manifest: Manifest,
+    model: NativeModel,
+    params: ModelParams,
+    packed: Option<PackedLayers>,
+}
+
+impl EmbedBackend {
+    /// Validate the model shape and build the backend.
+    pub fn new(
+        manifest: Manifest,
+        params: ModelParams,
+        packed: Option<PackedLayers>,
+    ) -> Result<EmbedBackend> {
+        let model = NativeModel::new(&manifest)?;
+        if let Some(p) = &packed {
+            anyhow::ensure!(
+                p.layers.len() == manifest.linears.len(),
+                "packed layer arity {} != {} registered linears",
+                p.layers.len(),
+                manifest.linears.len()
+            );
+        }
+        Ok(EmbedBackend { manifest, model, params, packed })
+    }
+
+    /// Embedding dimension (the model's hidden width).
+    pub fn dim(&self) -> usize {
+        self.model.d_model
+    }
+
+    /// Longest token context one embed accepts before truncation.
+    pub fn window(&self) -> usize {
+        self.model.seq_len
+    }
+}
+
+/// Aggregate index-serving counters (`GET /v1/collections` reports
+/// them alongside the per-collection table).
+#[derive(Clone, Debug, Default)]
+pub struct IndexServerStats {
+    /// Embeddings computed (directly or inside text-shaped add/query).
+    pub embeds: usize,
+    /// Rows added across all collections.
+    pub rows_added: usize,
+    /// Top-k queries answered.
+    pub queries: usize,
+    /// Collections currently live.
+    pub collections: usize,
+    /// Rows currently stored across collections.
+    pub rows: usize,
+    /// Total scan payload in bytes (codes + rescales — the budgeted
+    /// quantity).
+    pub code_bytes: usize,
+}
+
+/// Thread-safe serving handle over a [`VectorStore`] plus an optional
+/// embedding model — what [`crate::net`] routes `/v1/embed` and
+/// `/v1/collections/...` to. See the module docs for the threading
+/// model.
+pub struct IndexServer {
+    backend: Option<EmbedBackend>,
+    store: Mutex<VectorStore>,
+    embeds: AtomicUsize,
+    rows_added: AtomicUsize,
+    queries: AtomicUsize,
+}
+
+impl IndexServer {
+    /// Vector-only index server (no embedding model): add and query take
+    /// caller-supplied vectors; `/v1/embed` refuses.
+    pub fn new(cfg: IndexConfig) -> Result<IndexServer, IndexError> {
+        Ok(IndexServer {
+            backend: None,
+            store: Mutex::new(VectorStore::new(cfg)?),
+            embeds: AtomicUsize::new(0),
+            rows_added: AtomicUsize::new(0),
+            queries: AtomicUsize::new(0),
+        })
+    }
+
+    /// Index server with an embedding backend: text/token requests embed
+    /// through `manifest` + `params` (+ `packed` codes when supplied —
+    /// the zero-dequant serving path).
+    pub fn with_embedder(
+        cfg: IndexConfig,
+        manifest: Manifest,
+        params: ModelParams,
+        packed: Option<PackedLayers>,
+    ) -> Result<IndexServer> {
+        let backend = EmbedBackend::new(manifest, params, packed)?;
+        let store = VectorStore::new(cfg)?;
+        Ok(IndexServer {
+            backend: Some(backend),
+            store: Mutex::new(store),
+            embeds: AtomicUsize::new(0),
+            rows_added: AtomicUsize::new(0),
+            queries: AtomicUsize::new(0),
+        })
+    }
+
+    /// Embedding dimension, when an embedding backend is attached.
+    pub fn embed_dim(&self) -> Option<usize> {
+        self.backend.as_ref().map(EmbedBackend::dim)
+    }
+
+    /// Embed one token sequence: mean-pooled, L2-normalized final hidden
+    /// states ([`NativeModel::embed`]). Sequences beyond the model
+    /// window are truncated to its first `window()` tokens
+    /// (deterministic, documented truncation — retrieval favors the
+    /// document head). Typed errors: no backend, empty input, or
+    /// out-of-vocab tokens.
+    pub fn embed(&self, tokens: &[i32]) -> Result<Vec<f32>, IndexError> {
+        let be = self.backend.as_ref().ok_or_else(|| {
+            IndexError::BadQuery("this index server has no embedding model attached".into())
+        })?;
+        if tokens.is_empty() {
+            return Err(IndexError::BadQuery("cannot embed an empty token sequence".into()));
+        }
+        let vocab = be.model.vocab;
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            return Err(IndexError::BadQuery(format!(
+                "token {t} outside vocabulary 0..{vocab}"
+            )));
+        }
+        let take = tokens.len().min(be.model.seq_len);
+        let out = be
+            .model
+            .embed(&be.manifest, &be.params, be.packed.as_ref(), &tokens[..take], 0)
+            .map_err(|e| IndexError::Shape(format!("embed forward failed: {e}")))?;
+        self.embeds.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Append rows to a collection (created on first use): `vecs` is
+    /// row-major with `d` columns. Returns `(first_id, rows_added)`.
+    /// See [`VectorStore::add`] for the budget-policy admission check.
+    pub fn add(
+        &self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        let out = self.store.lock().unwrap().add(name, vecs, d, 0)?;
+        self.rows_added.fetch_add(out.1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Two-phase top-k query against one collection (see
+    /// [`crate::index::Collection::query`]).
+    pub fn query(
+        &self,
+        name: &str,
+        q: &[f32],
+        k: usize,
+        rerank_factor: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        let hits = self.store.lock().unwrap().query(name, q, k, rerank_factor, 0)?;
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        Ok(hits)
+    }
+
+    /// Per-collection accounting snapshot, name order.
+    pub fn collections(&self) -> Vec<CollectionInfo> {
+        self.store.lock().unwrap().infos()
+    }
+
+    /// Aggregate serving counters + store accounting.
+    pub fn stats(&self) -> IndexServerStats {
+        let store = self.store.lock().unwrap();
+        IndexServerStats {
+            embeds: self.embeds.load(Ordering::Relaxed),
+            rows_added: self.rows_added.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            collections: store.len(),
+            rows: store.rows(),
+            code_bytes: store.code_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{IndexPolicy, Metric};
+    use crate::model::synthetic_manifest;
+    use crate::quant::{LayerCalib, TrickConfig};
+    use crate::runtime::native::native_init;
+
+    fn embed_fixture(seed: u64) -> IndexServer {
+        let manifest = synthetic_manifest("idx-serve", 32, 1, 2, 64, 16, 256, 1);
+        let params = native_init(&manifest, seed);
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; manifest.linears.len()];
+        let packed = PackedLayers::quantize(
+            &manifest, &params, &bits, &stats, &TrickConfig::none(), seed, 1,
+        )
+        .unwrap();
+        IndexServer::with_embedder(
+            IndexConfig::default(),
+            manifest,
+            params,
+            Some(packed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn embed_add_query_round_trip() {
+        let srv = embed_fixture(3);
+        let d = srv.embed_dim().unwrap();
+        // three "documents" (byte-token sequences), then self-retrieval
+        let docs: Vec<Vec<i32>> = vec![
+            (0..10).map(|i| (i * 7 % 256) as i32).collect(),
+            (0..10).map(|i| (i * 13 % 256) as i32).collect(),
+            (0..10).map(|i| (i * 29 % 256) as i32).collect(),
+        ];
+        for doc in &docs {
+            let e = srv.embed(doc).unwrap();
+            assert_eq!(e.len(), d);
+            srv.add("docs", &e, d).unwrap();
+        }
+        let probe = srv.embed(&docs[1]).unwrap();
+        let hits = srv.query("docs", &probe, 2, 4).unwrap();
+        assert_eq!(hits[0].id, 1, "a document must retrieve itself");
+        assert!((hits[0].score - 1.0).abs() < 1e-4, "cosine self-score ~1");
+        let stats = srv.stats();
+        assert_eq!(stats.embeds, 4);
+        assert_eq!(stats.rows_added, 3);
+        assert_eq!(stats.queries, 1);
+        assert_eq!(stats.collections, 1);
+        assert_eq!(stats.rows, 3);
+        assert!(stats.code_bytes > 0);
+    }
+
+    #[test]
+    fn embed_truncates_long_contexts_and_rejects_bad_tokens() {
+        let srv = embed_fixture(5);
+        // longer than the window: truncates to the first seq_len tokens
+        let long: Vec<i32> = (0..64).map(|i| (i % 256) as i32).collect();
+        let head: Vec<i32> = long[..16].to_vec(); // fixture seq_len = 16
+        assert_eq!(srv.embed(&long).unwrap(), srv.embed(&head).unwrap());
+        assert!(matches!(srv.embed(&[]), Err(IndexError::BadQuery(_))));
+        assert!(matches!(srv.embed(&[300]), Err(IndexError::BadQuery(_))));
+        assert!(matches!(srv.embed(&[-1]), Err(IndexError::BadQuery(_))));
+    }
+
+    #[test]
+    fn vector_only_server_serves_without_embedder() {
+        let srv = IndexServer::new(IndexConfig {
+            policy: IndexPolicy::Uniform(8),
+            metric: Metric::Cosine,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(srv.embed_dim().is_none());
+        assert!(matches!(srv.embed(&[1, 2]), Err(IndexError::BadQuery(_))));
+        let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        srv.add("raw", &v, 8).unwrap();
+        let hits = srv.query("raw", &v, 1, 4).unwrap();
+        assert_eq!(hits[0].id, 0);
+        // typed errors pass through the serving layer untouched
+        assert!(matches!(
+            srv.query("nope", &v, 1, 4),
+            Err(IndexError::NoSuchCollection(_))
+        ));
+    }
+
+    #[test]
+    fn concurrent_adds_and_queries_are_serialized_safely() {
+        use std::sync::Arc;
+        let srv = Arc::new(IndexServer::new(IndexConfig::default()).unwrap());
+        let d = 16usize;
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = Arc::clone(&srv);
+            handles.push(std::thread::spawn(move || {
+                let vecs = crate::rng::Rng::new(t).gaussian_vec(8 * d);
+                s.add("conc", &vecs, d).unwrap();
+                let q = crate::rng::Rng::new(100 + t).gaussian_vec(d);
+                for _ in 0..4 {
+                    let _ = s.query("conc", &q, 3, 4);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.stats().rows, 32);
+    }
+}

@@ -30,7 +30,15 @@
 //! admission queue ([`ServeConfig::max_queue`]) fails fast with
 //! [`AdmitError::QueueFull`] instead of queueing without limit; and a
 //! live [`ServerStats`] snapshot ([`Server::stats`]) answers while
-//! generation is in flight.
+//! generation is in flight (including the admission-queue depth, so
+//! generate and index load read from one endpoint).
+//!
+//! A second workload lives beside the batcher: [`index::IndexServer`]
+//! serves the retrieval subsystem ([`crate::index`]) — embed, add,
+//! query — directly on the HTTP workers' threads (see its module docs
+//! for why it needs no batcher).
+
+pub mod index;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -415,6 +423,11 @@ pub struct ServerStats {
     pub lanes: usize,
     /// Lanes currently holding an active request (live snapshot only).
     pub lanes_active: usize,
+    /// Requests admitted but not yet mapped onto a KV lane, at snapshot
+    /// time — republished per batcher round so generate and index load
+    /// are observable from one `/v1/stats` read (live snapshot only; the
+    /// shutdown stats report 0, the queue having drained).
+    pub queue_depth: usize,
 }
 
 impl ServerStats {
@@ -990,6 +1003,7 @@ pub const LIVE_LATENCY_WINDOW: usize = 512;
 /// recent traffic — the more useful operational read anyway).
 fn publish_stats(shared: &Shared, stats: &mut ServerStats, start: Instant) {
     stats.wall_secs = start.elapsed().as_secs_f64();
+    stats.queue_depth = shared.queue.lock().unwrap().len();
     let from = stats.latencies.len().saturating_sub(LIVE_LATENCY_WINDOW);
     let snap = ServerStats {
         completions: stats.completions,
@@ -1006,6 +1020,7 @@ fn publish_stats(shared: &Shared, stats: &mut ServerStats, start: Instant) {
         kv_bytes_per_lane: stats.kv_bytes_per_lane,
         lanes: stats.lanes,
         lanes_active: stats.lanes_active,
+        queue_depth: stats.queue_depth,
     };
     *shared.live.lock().unwrap() = snap;
 }
@@ -1345,6 +1360,31 @@ mod tests {
         assert_eq!(live.completions, 0);
         handle.cancel.cancel();
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn live_snapshot_republishes_queue_depth() {
+        // single lane, one request pinning it and one queued behind it:
+        // the live snapshot itself must carry the queue depth (the
+        // /v1/stats surface reads the snapshot, not the server handle)
+        let (manifest, params, packed) = packed_fixture("serve-qdepth", 8, 1, 97);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
+        let a = server.submit_streaming(vec![1], 1_000_000, 0.4, 2).unwrap();
+        assert!(a.events.recv_timeout(std::time::Duration::from_secs(30)).is_ok());
+        let b = server.submit(vec![2], 2, 0.0, 0).unwrap();
+        let mut seen = 0usize;
+        for _ in 0..500 {
+            seen = server.stats().queue_depth;
+            if seen > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(seen, 1, "snapshot must republish the queued request");
+        a.cancel.cancel();
+        assert_eq!(b.1.recv_timeout(std::time::Duration::from_secs(30)).unwrap().tokens.len(), 2);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.queue_depth, 0, "shutdown stats report a drained queue");
     }
 
     #[test]

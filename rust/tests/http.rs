@@ -12,6 +12,14 @@
 //! (e) `/healthz` and `/v1/stats` answer while generation is in flight;
 //! plus protocol-robustness cases (bad JSON, bad routes, oversized
 //! bodies, out-of-vocab prompts) that must map to clean 4xx responses.
+//!
+//! The retrieval wall (ISSUE 5) rides the same loopback setup:
+//! (f) embed → add → query round-trips over the wire, self-retrieval
+//!     included, and `GET /v1/collections` reports real accounting;
+//! (g) EVERY error path — 400/404/405/413/429/503, generate and index
+//!     endpoints alike — answers the one JSON shape `{"error": "..."}`,
+//!     and 405 responses carry an `Allow:` header;
+//! (h) servers bound without an index answer 404 on the index paths.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -507,6 +515,336 @@ fn stats_report_kv_cache_economics() {
     }
     assert_eq!(bits, 32.0, "dense servers report 32-bit KV lanes");
     shutdown_all(http, dense);
+}
+
+// --------------------------------------------- (f)(g)(h) retrieval wall
+
+use raana::index::IndexConfig;
+use raana::serve::index::IndexServer;
+
+/// Index fixture sharing the demo-model recipe: 4-bit packed weights
+/// behind the embed path, 8-bit (default) collection codes.
+fn index_fixture(seed: u64) -> Arc<IndexServer> {
+    let manifest = synthetic_manifest("http-index", 32, 1, 2, 64, 16, 256, 1);
+    let params = native_init(&manifest, seed);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::none(), seed, 1,
+    )
+    .unwrap();
+    Arc::new(
+        IndexServer::with_embedder(IndexConfig::default(), manifest, params, Some(packed))
+            .unwrap(),
+    )
+}
+
+fn bind_indexed(server: &Arc<Server>, index: &Arc<IndexServer>, workers: usize) -> HttpServer {
+    HttpServer::bind_with_index(
+        Arc::clone(server),
+        Some(Arc::clone(index)),
+        "127.0.0.1:0",
+        HttpConfig { workers, max_new_tokens_cap: usize::MAX },
+    )
+    .unwrap()
+}
+
+/// The one error contract: a JSON object whose single key is a
+/// non-empty string `error`. Returns the message for spot checks.
+fn assert_error_shape(resp: &raana::net::HttpResponse) -> String {
+    let v = resp.json().unwrap_or_else(|e| {
+        panic!("status {} body must be JSON, got {:?}: {e}", resp.status, resp.body_str())
+    });
+    let msg = v
+        .get("error")
+        .and_then(|m| m.as_str())
+        .unwrap_or_else(|| panic!("status {} body must carry 'error': {:?}", resp.status, v));
+    assert!(!msg.is_empty(), "error message must be non-empty");
+    msg.to_string()
+}
+
+fn header_of<'a>(resp: &'a raana::net::HttpResponse, name: &str) -> Option<&'a str> {
+    resp.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+#[test]
+fn index_embed_add_query_flow_over_http() {
+    let server = packed_server("http-ix-flow", 8, 1, ServeConfig::default());
+    let index = index_fixture(23);
+    let http = bind_indexed(&server, &index, 2);
+    let addr = http.local_addr().to_string();
+
+    // embed: unit-norm vector of the model width
+    let r = http_request(&addr, "POST", "/v1/embed", Some(r#"{"text":"hello world"}"#)).unwrap();
+    assert_eq!(r.status, 200, "body: {:?}", r.body_str());
+    let ev = r.json().unwrap();
+    assert_eq!(ev.req_usize("dim").unwrap(), 32);
+    let emb: Vec<f64> = ev
+        .get("embedding")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    assert_eq!(emb.len(), 32);
+    let norm: f64 = emb.iter().map(|x| x * x).sum::<f64>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-4, "embedding must be unit-norm, got {norm}");
+
+    // add three documents server-side (texts are embedded for us)
+    let r = http_request(
+        &addr,
+        "POST",
+        "/v1/collections/docs/add",
+        Some(r#"{"texts":["alpha doc one","beta doc two","gamma doc three"]}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "body: {:?}", r.body_str());
+    let av = r.json().unwrap();
+    assert_eq!(av.req_usize("count").unwrap(), 3);
+    let ids: Vec<usize> = av
+        .get("ids")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap())
+        .collect();
+    assert_eq!(ids, vec![0, 1, 2]);
+
+    // add one raw vector (client-supplied embedding)
+    let vec_body = format!(r#"{{"vectors":[{}]}}"#, ev.get("embedding").unwrap().to_json());
+    let r =
+        http_request(&addr, "POST", "/v1/collections/docs/add", Some(&vec_body)).unwrap();
+    assert_eq!(r.status, 200, "body: {:?}", r.body_str());
+    assert_eq!(r.json().unwrap().req_usize("count").unwrap(), 1);
+
+    // self-retrieval through the wire: the re-embedded text is identical,
+    // so after the exact rerank it must rank first with cosine ~1
+    let r = http_request(
+        &addr,
+        "POST",
+        "/v1/collections/docs/query",
+        Some(r#"{"text":"beta doc two","k":2}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "body: {:?}", r.body_str());
+    let qv = r.json().unwrap();
+    let results = qv.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].req_usize("id").unwrap(), 1, "own text must rank first");
+    let score = results[0].req("score").unwrap().as_f64().unwrap();
+    assert!((score - 1.0).abs() < 1e-3, "cosine self-score ~1, got {score}");
+
+    // query by raw vector hits the raw-vector row (id 3, same embedding
+    // as "hello world")
+    let qbody = format!(r#"{{"vector":{},"k":1}}"#, ev.get("embedding").unwrap().to_json());
+    let r = http_request(&addr, "POST", "/v1/collections/docs/query", Some(&qbody)).unwrap();
+    assert_eq!(r.status, 200);
+    let rv = r.json().unwrap();
+    let top = &rv.get("results").unwrap().as_arr().unwrap()[0];
+    assert_eq!(top.req_usize("id").unwrap(), 3);
+
+    // accounting surface: rows, bits, scan bytes/row, counters
+    let r = http_request(&addr, "GET", "/v1/collections", None).unwrap();
+    assert_eq!(r.status, 200);
+    let cv = r.json().unwrap();
+    assert_eq!(cv.req_usize("rows").unwrap(), 4);
+    assert_eq!(cv.req_usize("embed_dim").unwrap(), 32);
+    assert!(cv.req_usize("embeds").unwrap() >= 5, "3 texts + 1 embed + 1 query text");
+    assert_eq!(cv.req_usize("queries").unwrap(), 2);
+    let cols = cv.get("collections").unwrap().as_arr().unwrap();
+    assert_eq!(cols.len(), 1);
+    assert_eq!(cols[0].req_str("name").unwrap(), "docs");
+    assert_eq!(cols[0].req_usize("rows").unwrap(), 4);
+    assert_eq!(cols[0].req_usize("dim").unwrap(), 32);
+    assert_eq!(cols[0].req_usize("bits").unwrap(), 8);
+    assert_eq!(cols[0].req_str("metric").unwrap(), "cosine");
+    // 8-bit scan payload: d + 4 rescale bytes per row
+    assert_eq!(cols[0].req_usize("bytes_per_row").unwrap(), 36);
+    assert_eq!(cols[0].req_usize("exact_bytes").unwrap(), 4 * 32 * 4);
+
+    shutdown_all(http, server);
+}
+
+#[test]
+fn every_error_path_shares_one_json_shape_with_allow_on_405() {
+    // single lane, single connection worker, one-deep admission queue:
+    // enough to walk 400/404/405/413/429/503 (+ the index endpoints)
+    // through real sockets and assert the one {"error": ...} shape
+    let server = packed_server(
+        "http-shapes",
+        8,
+        1,
+        ServeConfig { max_queue: 1, ..Default::default() },
+    );
+    let index = index_fixture(29);
+    let http = bind_indexed(&server, &index, 1);
+    let addr = http.local_addr().to_string();
+
+    // --- 404: unknown route, unknown collection verb, missing collection
+    let r = http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(r.status, 404);
+    assert_error_shape(&r);
+    let r = http_request(&addr, "POST", "/v1/collections/docs/compact", Some("{}")).unwrap();
+    assert_eq!(r.status, 404);
+    assert_error_shape(&r);
+    let r = http_request(
+        &addr,
+        "POST",
+        "/v1/collections/missing/query",
+        Some(r#"{"vector":[1,2]}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 404, "missing collection is a 404: {:?}", r.body_str());
+    assert_error_shape(&r);
+
+    // --- 405 with Allow on every known path
+    for (method, path, allow) in [
+        ("DELETE", "/healthz", "GET"),
+        ("POST", "/healthz", "GET"),
+        ("DELETE", "/v1/stats", "GET"),
+        ("GET", "/v1/generate", "POST"),
+        ("GET", "/v1/embed", "POST"),
+        ("POST", "/v1/collections", "GET"),
+        ("GET", "/v1/collections/docs/add", "POST"),
+        ("PUT", "/v1/collections/docs/query", "POST"),
+    ] {
+        let r = http_request(&addr, method, path, None).unwrap();
+        assert_eq!(r.status, 405, "{method} {path}");
+        assert_error_shape(&r);
+        assert_eq!(
+            header_of(&r, "allow"),
+            Some(allow),
+            "{method} {path} must name the allowed methods"
+        );
+    }
+
+    // --- 400: malformed bodies on generate and every index POST
+    for (path, body) in [
+        ("/v1/generate", "{not json"),
+        ("/v1/embed", "{}"),
+        ("/v1/embed", r#"{"tokens":[999999]}"#),
+        ("/v1/collections/docs/add", r#"{"vectors":[[1,2],[1,2,3]]}"#),
+        ("/v1/collections/docs/query", r#"{"vector":[]}"#),
+        ("/v1/collections/docs/query", r#"{"vector":[1],"k":0}"#),
+    ] {
+        let r = http_request(&addr, "POST", path, Some(body)).unwrap();
+        assert_eq!(r.status, 400, "POST {path} {body}: {:?}", r.body_str());
+        assert_error_shape(&r);
+    }
+    // bad collection name
+    let r = http_request(
+        &addr,
+        "POST",
+        "/v1/collections/bad%20name/add",
+        Some(r#"{"vectors":[[1,2]]}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    assert_error_shape(&r);
+
+    // --- 413: over-cap declared body
+    {
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        write!(
+            conn,
+            "POST /v1/embed HTTP/1.1\r\nHost: t\r\nContent-Length: 999999999\r\n\r\n"
+        )
+        .unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let resp = raana::net::read_response(&conn).unwrap();
+        assert_eq!(resp.status, 413);
+        assert_error_shape(&resp);
+    }
+
+    // --- 503 (overflow): pin the single connection worker with an
+    // endless stream; generate AND the index POSTs must refuse with the
+    // shape, while the cheap GETs stay live
+    {
+        let conn = TcpStream::connect(&addr).unwrap();
+        let body = generate_body(&[2], 1_000_000, true);
+        write!(
+            &conn,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        wait_generating(&server, 1);
+        for (path, body) in [
+            ("/v1/generate", r#"{"prompt":[1],"max_new_tokens":1}"#),
+            ("/v1/embed", r#"{"text":"x"}"#),
+            ("/v1/collections/docs/add", r#"{"texts":["x"]}"#),
+            ("/v1/collections/docs/query", r#"{"text":"x"}"#),
+        ] {
+            let r = http_request(&addr, "POST", path, Some(body)).unwrap();
+            assert_eq!(r.status, 503, "POST {path} under overflow");
+            assert_error_shape(&r);
+        }
+        let r = http_request(&addr, "GET", "/v1/collections", None).unwrap();
+        assert_eq!(r.status, 200, "collection accounting must survive a pinned pool");
+        drop(conn);
+    }
+    // worker returns after the disconnect is noticed (poll)
+    let mut ok = false;
+    for _ in 0..600 {
+        let r = http_request(
+            &addr,
+            "POST",
+            "/v1/generate",
+            Some(&generate_body(&[5], 1, false)),
+        );
+        if matches!(r, Ok(ref resp) if resp.status == 200) {
+            ok = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(ok, "worker never came back after client disconnect");
+
+    // --- 429: lane pinned in-process, queue filled, next submit refused
+    {
+        let pin = server.submit_streaming(vec![1], 1_000_000, 0.4, 2).unwrap();
+        assert!(pin.events.recv_timeout(Duration::from_secs(30)).is_ok());
+        let queued = server.submit(vec![2], 2, 0.0, 0).unwrap();
+        let r = http_request(
+            &addr,
+            "POST",
+            "/v1/generate",
+            Some(&generate_body(&[3], 1, false)),
+        )
+        .unwrap();
+        assert_eq!(r.status, 429, "full queue must answer 429: {:?}", r.body_str());
+        assert_error_shape(&r);
+        pin.cancel.cancel();
+        let _ = queued.1.recv_timeout(Duration::from_secs(30));
+    }
+
+    shutdown_all(http, server);
+}
+
+#[test]
+fn index_endpoints_answer_404_without_an_index() {
+    let server = packed_server("http-noix", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+    for (method, path, body) in [
+        ("POST", "/v1/embed", Some(r#"{"text":"x"}"#)),
+        ("GET", "/v1/collections", None),
+        ("POST", "/v1/collections/docs/add", Some(r#"{"texts":["x"]}"#)),
+        ("POST", "/v1/collections/docs/query", Some(r#"{"text":"x"}"#)),
+    ] {
+        let r = http_request(&addr, method, path, body).unwrap();
+        assert_eq!(r.status, 404, "{method} {path} without an index");
+        let msg = assert_error_shape(&r);
+        assert!(msg.contains("not enabled"), "got: {msg}");
+    }
+    // generation is untouched by the absence of an index
+    let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[1], 1, false)))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    shutdown_all(http, server);
 }
 
 #[test]

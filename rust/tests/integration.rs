@@ -472,6 +472,52 @@ fn native_packed_serving_performs_zero_dequant() {
     );
 }
 
+/// ISSUE 5 acceptance criterion: the vector index's packed-code scan
+/// dequantizes **zero** full rows outside the rerank — counter-enforced
+/// by the same mechanism as the zero-dequant forward test above. The
+/// rerank-read counter must move by exactly `rerank_factor * k` per
+/// query (the candidate set, nothing more), and the full-matrix
+/// dequantization counter must stay flat through adds and queries.
+#[test]
+fn index_scan_reads_zero_rows_outside_rerank() {
+    use raana::index::{rerank_row_reads, IndexConfig, IndexPolicy, VectorStore};
+    use raana::rng::Rng;
+
+    let _lock = test_lock(); // exclusive: both counters are process-global
+
+    let (n, d, k, rf) = (256usize, 64usize, 4usize, 4usize);
+    let mut store = VectorStore::new(IndexConfig {
+        policy: IndexPolicy::Uniform(8),
+        ..Default::default()
+    })
+    .unwrap();
+    let dequant_before = raana::rabitq::dequant_calls();
+    store.add("zero", &Rng::new(5).gaussian_vec(n * d), d, 1).unwrap();
+
+    for (seed, threads) in [(10u64, 1usize), (11, 4), (12, 2)] {
+        let q = Rng::new(seed).gaussian_vec(d);
+        let reads_before = rerank_row_reads();
+        let hits = store.query("zero", &q, k, rf, threads).unwrap();
+        assert_eq!(hits.len(), k);
+        assert_eq!(
+            rerank_row_reads() - reads_before,
+            rf * k,
+            "a query over {n} rows must fetch exactly its {rf}x{k} rerank \
+             candidates from the residual store — the scan itself reads codes only"
+        );
+    }
+    // phase 1 alone (rerank_factor 1): exactly k fetches
+    let reads_before = rerank_row_reads();
+    store.query("zero", &Rng::new(13).gaussian_vec(d), k, 1, 1).unwrap();
+    assert_eq!(rerank_row_reads() - reads_before, k);
+
+    assert_eq!(
+        raana::rabitq::dequant_calls(),
+        dequant_before,
+        "index adds and queries must never full-matrix dequantize"
+    );
+}
+
 /// ISSUE 2 acceptance criterion: KV-cached incremental decoding is
 /// **bit-identical** to the full-recompute forward — for random models
 /// (dense and packed weights), random prompt lengths, mixed batch
