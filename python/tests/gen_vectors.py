@@ -22,7 +22,9 @@ Usage:
 
 import json
 import random
+import struct
 import sys
+import zlib
 from pathlib import Path
 
 import numpy as np
@@ -434,6 +436,221 @@ def gen_index():
     return {"kernel": "index_search", "cases": cases}
 
 
+# ----------------------------------------- durability: WAL + snapshot bytes
+
+def f32_bytes(values):
+    """Little-endian f32 serialization of exact-f32 Python floats."""
+    return np.asarray(values, dtype="<f4").tobytes()
+
+
+def wal_record(seq, name, dim, rows):
+    """Mirror of `index::wal::encode_record`: `[len u32][crc u32]` then a
+    payload of `[kind=1][seq u64][name_len u16][name][dim u32][nrows u32]
+    [rows f32 LE]`. The CRC is zlib-compatible CRC-32 over the payload."""
+    payload = bytes([1]) + struct.pack("<Q", seq)
+    payload += struct.pack("<H", len(name)) + name.encode()
+    payload += struct.pack("<II", dim, len(rows) // dim)
+    payload += f32_bytes(rows)
+    return struct.pack("<II", len(payload), zlib.crc32(payload)) + payload
+
+
+def durability_collection(name, d, bits, signs1, signs2, exact_rows):
+    """Sealed-collection state under Metric::InnerProduct (no row
+    normalization): the residual store IS the input rows, codes and
+    rescales come from the shared index quantization recipe."""
+    n = len(exact_rows) // d
+    codes, rs = index_quantize_rows(exact_rows, n, d, bits, signs1, signs2)
+    return {
+        "name": name,
+        "d": d,
+        "bits": bits,
+        "signs1": signs1,
+        "signs2": signs2,
+        "codes": bytes(pack_lsb_first(codes, bits)),
+        "r": rs,
+        "exact": exact_rows,
+    }
+
+
+def snapshot_bytes(next_seq, rows_at_solve, collections):
+    """Mirror of `index::snapshot::encode_snapshot` (the RQSN v1 format):
+    header, per-collection blocks in name order, whole-body CRC-32."""
+    out = bytearray(b"RQSN")
+    out += struct.pack("<I", 1)
+    out += struct.pack("<QQ", next_seq, rows_at_solve)
+    out += struct.pack("<I", len(collections))
+    for c in sorted(collections, key=lambda c: c["name"]):
+        out += struct.pack("<H", len(c["name"])) + c["name"].encode()
+        out += struct.pack("<I", c["d"]) + bytes([c["bits"], 0])  # metric 0 = ip
+        out += struct.pack("<I", len(c["signs1"])) + f32_bytes(c["signs1"])
+        out += struct.pack("<I", len(c["signs2"])) + f32_bytes(c["signs2"])
+        out += struct.pack("<II", len(c["r"]), len(c["codes"]))
+        out += bytes(c["codes"])
+        out += f32_bytes(c["r"])
+        out += f32_bytes(c["exact"])
+    out += struct.pack("<I", zlib.crc32(bytes(out)))
+    return bytes(out)
+
+
+def snapshot_file(next_seq):
+    """Mirror of `snapshot_file_name`: zero-padded so lexicographic order
+    is sequence order."""
+    return f"snapshot-{next_seq:020d}.seg"
+
+
+def gen_durability():
+    """Recovery edge cases as committed byte-level fixtures. Each case is
+    a data directory (relative path -> hex bytes) plus the exact recovery
+    outcome: the report counters and — the decisive cross-language check
+    — the canonical re-encoding of the recovered store, computed here
+    with numpy and asserted byte-identical by the Rust consumer
+    (`rust/tests/durability.rs`) after it recovers the same directory.
+
+    All cases use Metric ip (no normalization to mirror) and a Uniform
+    bit plan (no rebalance cadence), and WAL records only ever target
+    collections already present in the snapshot — fresh-collection sign
+    diagonals are RNG-derived on the Rust side and not mirrorable, which
+    is exactly why snapshots serialize signs instead of seeds."""
+    rng = random.Random(0xD04A)
+    d, bits = 16, 6
+    signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d)]
+    signs2 = []
+
+    def rows_of(n):
+        return rand_f32_list(rng, n * d, 1.5)
+
+    def col(exact_rows, name="docs", dd=None, s1=None):
+        return durability_collection(
+            name, dd or d, bits, s1 or signs1, signs2, exact_rows)
+
+    def expect(snap, replay, dropped, dup, corrupt, next_seq, rows, reenc):
+        return {
+            "snapshot_rows": snap,
+            "replayed_rows": replay,
+            "dropped_records": dropped,
+            "duplicate_records": dup,
+            "corrupt_snapshots": corrupt,
+            "next_seq": next_seq,
+            "rows": rows,
+            "reencoded_snapshot": reenc.hex(),
+        }
+
+    cases = []
+
+    # 1. empty WAL beside a snapshot: a clean zero-record file, nothing
+    # to replay, nothing dropped
+    sealed = rows_of(3)
+    snap = snapshot_bytes(3, 0, [col(sealed)])
+    cases.append({
+        "name": "empty-wal",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(3): snap.hex(), "wal/docs.wal": ""},
+        "expect": expect(3, 0, 0, 0, 0, 3, 3, snap),
+    })
+
+    # 2. snapshot only, no WAL directory at all (the state right after a
+    # snapshot sealed and deleted the logs)
+    sealed = rows_of(2)
+    snap = snapshot_bytes(2, 0, [col(sealed)])
+    cases.append({
+        "name": "snapshot-only",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(2): snap.hex()},
+        "expect": expect(2, 0, 0, 0, 0, 2, 2, snap),
+    })
+
+    # 3. torn mid-record tail: two whole records replay, the truncated
+    # third is one dropped tail (the normal crash shape)
+    sealed = rows_of(2)
+    r2, r3, r4 = rows_of(1), rows_of(2), rows_of(1)
+    wal = wal_record(2, "docs", d, r2) + wal_record(3, "docs", d, r3)
+    wal += wal_record(4, "docs", d, r4)[:13]  # header + 5 payload bytes
+    final = col(sealed + r2 + r3)
+    cases.append({
+        "name": "torn-mid-record-tail",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
+                  "wal/docs.wal": wal.hex()},
+        "expect": expect(2, 3, 1, 0, 0, 4, 5, snapshot_bytes(4, 0, [final])),
+    })
+
+    # 4. duplicate replay idempotence: a WAL record the snapshot already
+    # sealed (seq below next_seq) is skipped, never double-applied
+    sealed = rows_of(2)
+    new = rows_of(1)
+    wal = wal_record(1, "docs", d, sealed[d:]) + wal_record(2, "docs", d, new)
+    final = col(sealed + new)
+    cases.append({
+        "name": "duplicate-replay",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
+                  "wal/docs.wal": wal.hex()},
+        "expect": expect(2, 1, 0, 1, 0, 3, 3, snapshot_bytes(3, 0, [final])),
+    })
+
+    # 5. checksum mismatch: a flipped payload bit fails the CRC and ends
+    # the replayable prefix (stop-at-first-corruption)
+    sealed = rows_of(1)
+    good = rows_of(1)
+    bad = bytearray(wal_record(2, "docs", d, rows_of(1)))
+    bad[12] ^= 0x20  # inside the payload's seq field
+    wal = wal_record(1, "docs", d, good) + bytes(bad)
+    final = col(sealed + good)
+    cases.append({
+        "name": "checksum-mismatch",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(1): snapshot_bytes(1, 0, [col(sealed)]).hex(),
+                  "wal/docs.wal": wal.hex()},
+        "expect": expect(1, 1, 1, 0, 0, 2, 2, snapshot_bytes(2, 0, [final])),
+    })
+
+    # 6. corrupt newest snapshot: recovery skips it (counted), falls back
+    # to the kept predecessor, and the WAL still covers the gap
+    sealed = rows_of(2)
+    extra = rows_of(1)
+    newest = bytearray(snapshot_bytes(3, 0, [col(sealed + extra)]))
+    newest[20] ^= 0x01  # CRC catches the flip; the file is skipped
+    cases.append({
+        "name": "corrupt-snapshot-fallback",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
+                  snapshot_file(3): bytes(newest).hex(),
+                  "wal/docs.wal": wal_record(2, "docs", d, extra).hex()},
+        "expect": expect(2, 1, 0, 0, 1, 3, 3,
+                         snapshot_bytes(3, 0, [col(sealed + extra)])),
+    })
+
+    # 7. interleaved collections: per-collection WAL files merge back by
+    # the store-global seq, and the snapshot's name order is canonical
+    d2 = 8
+    s_alpha = [float(rng.choice((-1.0, 1.0))) for _ in range(d2)]
+    s_beta = [float(rng.choice((-1.0, 1.0))) for _ in range(d2)]
+    a0 = rand_f32_list(rng, d2, 1.5)
+    b1 = rand_f32_list(rng, d2, 1.5)
+    b2 = rand_f32_list(rng, d2, 1.5)
+    a3 = rand_f32_list(rng, d2, 1.5)
+    sealed_cols = [col(a0, "alpha", d2, s_alpha), col(b1, "beta", d2, s_beta)]
+    final_cols = [col(a0 + a3, "alpha", d2, s_alpha),
+                  col(b1 + b2, "beta", d2, s_beta)]
+    cases.append({
+        "name": "interleaved-collections",
+        "bits": bits,
+        "metric": "ip",
+        "files": {snapshot_file(2): snapshot_bytes(2, 0, sealed_cols).hex(),
+                  "wal/beta.wal": wal_record(2, "beta", d2, b2).hex(),
+                  "wal/alpha.wal": wal_record(3, "alpha", d2, a3).hex()},
+        "expect": expect(2, 2, 0, 0, 0, 4, 4, snapshot_bytes(4, 0, final_cols)),
+    })
+
+    return {"kernel": "durability_recovery", "cases": cases}
+
+
 # ----------------------------------------------------------------- harness
 
 GENERATORS = {
@@ -442,6 +659,7 @@ GENERATORS = {
     "attend_cached.json": gen_attend,
     "kvq_attend.json": gen_kvq,
     "index_search.json": gen_index,
+    "durability.json": gen_durability,
 }
 
 

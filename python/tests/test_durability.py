@@ -1,0 +1,379 @@
+"""Durability mirror suite (numpy-only — runs where rustc is absent).
+
+The crash-safety layer (`rust/src/index/{wal,snapshot,durability}.rs`)
+is pinned cross-language through the committed byte-level fixtures in
+``rust/tests/vectors/durability.json``. This suite is the Python half of
+that wall: an independent reimplementation of the WAL record format, the
+RQSN v1 snapshot format, and the recovery state machine (newest usable
+snapshot → stop-at-first-corruption WAL parse → seq-merged replay), run
+against the same fixture directories the Rust consumer recovers.
+
+Three jobs:
+
+1. **fixture re-derivation** — every committed case's recovery outcome
+   (report counters, next_seq, and the canonical re-encoded snapshot) is
+   recomputed from the raw directory bytes through this mirror, so the
+   generator cannot pin a state it merely asserted;
+2. **fault-injection properties, mirrored** — truncating a WAL at every
+   byte recovers exactly the whole-record prefix, any single corrupted
+   byte in a record ends the replayable prefix before it, and any
+   corrupted or truncated snapshot is rejected outright (whole-body
+   CRC);
+3. **the tentpole property in numpy** — recovery from a snapshot + a
+   WAL torn at an arbitrary byte equals a fresh build of the durable
+   add prefix, byte-for-byte through the canonical snapshot encoding.
+"""
+
+import json
+import random
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+import gen_vectors as gv
+
+VEC = gv.VECTOR_DIR
+D, BITS = 16, 6
+
+
+# ------------------------------------------------------- WAL format mirror
+
+def parse_payload(p):
+    """Mirror of `wal::decode_payload`: None on any structural violation."""
+    if len(p) < 11 or p[0] != 1:
+        return None
+    seq, = struct.unpack_from("<Q", p, 1)
+    name_len, = struct.unpack_from("<H", p, 9)
+    off = 11
+    if len(p) < off + name_len + 8:
+        return None
+    try:
+        name = p[off:off + name_len].decode()
+    except UnicodeDecodeError:
+        return None
+    off += name_len
+    dim, nrows = struct.unpack_from("<II", p, off)
+    off += 8
+    if dim == 0 or nrows == 0 or len(p) != off + dim * nrows * 4:
+        return None
+    rows = [float(x) for x in np.frombuffer(p[off:], dtype="<f4")]
+    return {"seq": seq, "name": name, "dim": dim, "rows": rows}
+
+
+def parse_wal(data):
+    """Mirror of `wal::decode_records`: the replayable whole-record
+    prefix plus how it ended ('clean' / 'torn' / 'bad-checksum' /
+    'malformed'). Stop-at-first-corruption, never an exception."""
+    recs = []
+    off = 0
+    n = len(data)
+    while off < n:
+        if n - off < 8:
+            return recs, "torn"
+        ln, crc = struct.unpack_from("<II", data, off)
+        if n - off - 8 < ln:
+            return recs, "torn"
+        payload = data[off + 8:off + 8 + ln]
+        if zlib.crc32(payload) != crc:
+            return recs, "bad-checksum"
+        rec = parse_payload(payload)
+        if rec is None:
+            return recs, "malformed"
+        recs.append(rec)
+        off += 8 + ln
+    return recs, "clean"
+
+
+# -------------------------------------------------- snapshot format mirror
+
+def unpack_lsb_first(data, bits, n):
+    """Inverse of `gen_vectors.pack_lsb_first` (LSB-first bit packing)."""
+    val = int.from_bytes(bytes(data), "little")
+    mask = (1 << bits) - 1
+    return [(val >> (i * bits)) & mask for i in range(n)]
+
+
+def f32_list(buf):
+    return [float(x) for x in np.frombuffer(buf, dtype="<f4")]
+
+
+def parse_snapshot(data):
+    """Mirror of `snapshot::decode_snapshot`: the decoded store state, or
+    None when the CRC, magic, version, or structure is off."""
+    if len(data) < 32:
+        return None
+    body, tail = data[:-4], data[-4:]
+    if zlib.crc32(body) != struct.unpack("<I", tail)[0]:
+        return None
+    if body[:4] != b"RQSN" or struct.unpack_from("<I", body, 4)[0] != 1:
+        return None
+    next_seq, rows_at_solve = struct.unpack_from("<QQ", body, 8)
+    ncols, = struct.unpack_from("<I", body, 24)
+    off = 28
+    cols = {}
+    try:
+        for _ in range(ncols):
+            name_len, = struct.unpack_from("<H", body, off)
+            off += 2
+            name = body[off:off + name_len].decode()
+            off += name_len
+            d, = struct.unpack_from("<I", body, off)
+            bits, metric = body[off + 4], body[off + 5]
+            off += 6
+            d_hat, = struct.unpack_from("<I", body, off)
+            off += 4
+            signs1 = f32_list(body[off:off + 4 * d_hat])
+            off += 4 * d_hat
+            s2len, = struct.unpack_from("<I", body, off)
+            off += 4
+            signs2 = f32_list(body[off:off + 4 * s2len])
+            off += 4 * s2len
+            nrows, codes_len = struct.unpack_from("<II", body, off)
+            off += 8
+            if codes_len != (nrows * d * bits + 7) // 8:
+                return None
+            codes = unpack_lsb_first(body[off:off + codes_len], bits, nrows * d)
+            off += codes_len
+            r = f32_list(body[off:off + 4 * nrows])
+            off += 4 * nrows
+            exact = f32_list(body[off:off + 4 * nrows * d])
+            off += 4 * nrows * d
+            if len(exact) != nrows * d:
+                return None
+            cols[name] = {"d": d, "bits": bits, "metric": metric,
+                          "signs1": signs1, "signs2": signs2,
+                          "codes": codes, "r": r, "exact": exact}
+    except (struct.error, IndexError, UnicodeDecodeError, ValueError):
+        return None
+    if off != len(body):
+        return None
+    return {"next_seq": next_seq, "rows_at_solve": rows_at_solve,
+            "collections": cols}
+
+
+def encode_state(state):
+    """Canonical re-encoding of a recovered state — byte-identical to
+    Rust's `encode_snapshot(store, next_seq)` by construction."""
+    cols = []
+    for name, c in state["collections"].items():
+        cols.append({"name": name, "d": c["d"], "bits": c["bits"],
+                     "signs1": c["signs1"], "signs2": c["signs2"],
+                     "codes": bytes(gv.pack_lsb_first(c["codes"], c["bits"])),
+                     "r": c["r"], "exact": c["exact"]})
+    return gv.snapshot_bytes(state["next_seq"], state["rows_at_solve"], cols)
+
+
+# --------------------------------------------------- recovery state machine
+
+def snapshot_seq(name):
+    """Mirror of `snapshot::parse_snapshot_seq`."""
+    if not (name.startswith("snapshot-") and name.endswith(".seg")):
+        return None
+    body = name[len("snapshot-"):-len(".seg")]
+    if len(body) != 20 or not body.isdigit():
+        return None
+    return int(body)
+
+
+def recover(files):
+    """Mirror of `durability::recover` over a dict of relative path →
+    bytes: newest decodable snapshot (corrupt ones counted and skipped),
+    per-file stop-at-first-corruption WAL parse, seq-sorted merge, and a
+    contiguous replay from the snapshot's next_seq. Replay targets must
+    already exist in the snapshot (the fixture contract — fresh
+    collections would need the Rust sign-sampling RNG)."""
+    report = {"snapshot_rows": 0, "replayed_rows": 0, "dropped_records": 0,
+              "duplicate_records": 0, "corrupt_snapshots": 0}
+    snaps = sorted((n for n in files if snapshot_seq(n) is not None),
+                   key=snapshot_seq, reverse=True)
+    state = None
+    for name in snaps:
+        state = parse_snapshot(files[name])
+        if state is not None:
+            break
+        report["corrupt_snapshots"] += 1
+    if state is None:
+        state = {"next_seq": 0, "rows_at_solve": 0, "collections": {}}
+    report["snapshot_rows"] = sum(
+        len(c["r"]) for c in state["collections"].values())
+    records = []
+    for name in sorted(files):
+        if not (name.startswith("wal/") and name.endswith(".wal")):
+            continue
+        recs, tail = parse_wal(files[name])
+        if tail != "clean":
+            report["dropped_records"] += 1
+        records.extend(recs)
+    records.sort(key=lambda r: r["seq"])
+    next_seq = state["next_seq"]
+    for rec in records:
+        if rec["seq"] < next_seq:
+            report["duplicate_records"] += 1
+            continue
+        if rec["seq"] > next_seq:
+            report["dropped_records"] += 1
+            continue
+        c = state["collections"][rec["name"]]
+        n_new = len(rec["rows"]) // rec["dim"]
+        codes, rs = gv.index_quantize_rows(
+            rec["rows"], n_new, c["d"], c["bits"], c["signs1"], c["signs2"])
+        c["codes"].extend(codes)
+        c["r"].extend(rs)
+        c["exact"].extend(rec["rows"])
+        report["replayed_rows"] += n_new
+        next_seq = rec["seq"] + 1
+    state["next_seq"] = next_seq
+    return state, report
+
+
+# ----------------------------------------------------------------- fixtures
+
+def durability_cases():
+    return json.loads((VEC / "durability.json").read_text())["cases"]
+
+
+def case_files(case):
+    return {path: bytes.fromhex(h) for path, h in case["files"].items()}
+
+
+@pytest.mark.parametrize("case", durability_cases(), ids=lambda c: c["name"])
+def test_committed_cases_rederive_through_the_mirror(case):
+    # the committed expectations must fall out of an independent recovery
+    # run over the raw directory bytes — counters, next_seq, and the
+    # canonical re-encoding all recomputed, nothing trusted
+    state, report = recover(case_files(case))
+    expect = case["expect"]
+    for key in ("snapshot_rows", "replayed_rows", "dropped_records",
+                "duplicate_records", "corrupt_snapshots"):
+        assert report[key] == expect[key], f"{case['name']}: {key}"
+    assert state["next_seq"] == expect["next_seq"]
+    assert sum(len(c["r"]) for c in state["collections"].values()) \
+        == expect["rows"]
+    assert encode_state(state).hex() == expect["reencoded_snapshot"], \
+        f"{case['name']}: canonical re-encoding diverged"
+
+
+def test_fixture_covers_the_required_edge_cases():
+    names = {c["name"] for c in durability_cases()}
+    required = {"empty-wal", "snapshot-only", "torn-mid-record-tail",
+                "duplicate-replay", "checksum-mismatch"}
+    assert required <= names, f"missing durability cases: {required - names}"
+
+
+# ----------------------------------------------- fault-injection properties
+
+def _signs(rng, d):
+    return [float(rng.choice((-1.0, 1.0))) for _ in range(d)]
+
+
+def _wal_of(rng, n_records):
+    recs = []
+    out = b""
+    for seq in range(n_records):
+        rows = gv.rand_f32_list(rng, (1 + seq % 2) * D, 1.5)
+        recs.append((seq, rows))
+        out += gv.wal_record(seq, "docs", D, rows)
+    return recs, out
+
+
+def test_wal_truncation_at_every_byte_keeps_the_whole_record_prefix():
+    rng = random.Random(0x7E42)
+    recs, wal = _wal_of(rng, 3)
+    boundaries = [0]
+    off = 0
+    for seq, rows in recs:
+        off += len(gv.wal_record(seq, "docs", D, rows))
+        boundaries.append(off)
+    for cut in range(len(wal) + 1):
+        got, tail = parse_wal(wal[:cut])
+        want = max(i for i, b in enumerate(boundaries) if b <= cut)
+        assert len(got) == want, f"cut={cut}"
+        assert [g["seq"] for g in got] == [s for s, _ in recs[:want]]
+        assert (tail == "clean") == (cut in boundaries), f"cut={cut}"
+
+
+def test_any_corrupted_record_byte_ends_the_prefix_before_it():
+    rng = random.Random(0x7E43)
+    rows = gv.rand_f32_list(rng, 2 * D, 1.5)
+    rec = gv.wal_record(5, "docs", D, rows)
+    for byte in range(len(rec)):
+        bad = bytearray(rec)
+        bad[byte] ^= 0x10
+        got, tail = parse_wal(bytes(bad))
+        assert got == [] and tail != "clean", f"byte={byte}: {tail}"
+
+
+def test_any_snapshot_corruption_or_truncation_is_rejected():
+    rng = random.Random(0x7E44)
+    signs1 = _signs(rng, D)
+    col = gv.durability_collection(
+        "docs", D, BITS, signs1, [], gv.rand_f32_list(rng, 3 * D, 1.5))
+    snap = gv.snapshot_bytes(3, 0, [col])
+    assert parse_snapshot(snap) is not None, "clean snapshot must decode"
+    for byte in range(len(snap)):
+        bad = bytearray(snap)
+        bad[byte] ^= 0x04
+        assert parse_snapshot(bytes(bad)) is None, f"flip at {byte}"
+    for cut in range(len(snap)):
+        assert parse_snapshot(snap[:cut]) is None, f"truncated to {cut}"
+
+
+def test_snapshot_round_trips_bit_for_bit():
+    rng = random.Random(0x7E45)
+    signs1 = _signs(rng, D)
+    col = gv.durability_collection(
+        "docs", D, BITS, signs1, [], gv.rand_f32_list(rng, 4 * D, 1.5))
+    snap = gv.snapshot_bytes(7, 0, [col])
+    state = parse_snapshot(snap)
+    assert state["next_seq"] == 7
+    assert list(state["collections"]) == ["docs"]
+    assert encode_state(state) == snap
+
+
+def test_recovery_equals_fresh_build_at_every_wal_tear_point():
+    # the tentpole property, mirrored: snapshot sealing the first add,
+    # WAL carrying adds 2..=5; tearing the WAL at ANY byte must recover
+    # exactly the fresh build of the whole-record prefix, byte-for-byte
+    # through the canonical encoding
+    rng = random.Random(0x7E46)
+    signs1 = _signs(rng, D)
+    adds = [gv.rand_f32_list(rng, (1 + i % 3) * D, 1.5) for i in range(5)]
+    snap = gv.snapshot_bytes(
+        1, 0, [gv.durability_collection("docs", D, BITS, signs1, [], adds[0])])
+    wal = b""
+    boundaries = [0]
+    for seq, rows in enumerate(adds[1:], start=1):
+        wal += gv.wal_record(seq, "docs", D, rows)
+        boundaries.append(len(wal))
+    for cut in range(len(wal) + 1):
+        state, report = recover(
+            {"snapshot-" + "0" * 19 + "1.seg": snap, "wal/docs.wal": wal[:cut]})
+        durable = 1 + max(i for i, b in enumerate(boundaries) if b <= cut)
+        fresh_rows = [v for rows in adds[:durable] for v in rows]
+        fresh = gv.snapshot_bytes(durable, 0, [gv.durability_collection(
+            "docs", D, BITS, signs1, [], fresh_rows)])
+        assert encode_state(state) == fresh, f"cut={cut}"
+        assert report["replayed_rows"] == sum(
+            len(r) // D for r in adds[1:durable])
+        assert report["dropped_records"] == (0 if cut in boundaries else 1)
+
+
+def test_duplicate_and_gap_replay_semantics():
+    rng = random.Random(0x7E47)
+    signs1 = _signs(rng, D)
+    sealed = gv.rand_f32_list(rng, 2 * D, 1.5)
+    fresh_row = gv.rand_f32_list(rng, D, 1.5)
+    beyond_gap = gv.rand_f32_list(rng, D, 1.5)
+    snap = gv.snapshot_bytes(
+        2, 0, [gv.durability_collection("docs", D, BITS, signs1, [], sealed)])
+    wal = (gv.wal_record(0, "docs", D, sealed[:D])     # sealed: duplicate
+           + gv.wal_record(2, "docs", D, fresh_row)    # contiguous: replays
+           + gv.wal_record(4, "docs", D, beyond_gap))  # seq 3 missing: drops
+    state, report = recover(
+        {"snapshot-" + "0" * 19 + "2.seg": snap, "wal/docs.wal": wal})
+    assert report == {"snapshot_rows": 2, "replayed_rows": 1,
+                      "dropped_records": 1, "duplicate_records": 1,
+                      "corrupt_snapshots": 0}
+    assert state["next_seq"] == 3

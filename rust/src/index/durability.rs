@@ -1,0 +1,516 @@
+//! Durability orchestration: WAL-before-ack writes, periodic
+//! snapshots, and crash recovery for a [`VectorStore`].
+//!
+//! [`DurableStore`] wraps a store with an optional durability engine.
+//! Without one (`DurableStore::ephemeral`) it is a zero-cost
+//! pass-through — the serving layer holds one type either way. With one
+//! ([`DurableStore::open`]):
+//!
+//! * **Write path** — an `add` first applies to the in-memory store
+//!   (so admission failures, bad names, and budget refusals never
+//!   reach the log), then appends one WAL record stamped with the next
+//!   store-global sequence number, then acknowledges. Under
+//!   [`FsyncPolicy::Always`] the append is flushed before the ack.
+//! * **Snapshot path** — after every `snapshot_every` acknowledged
+//!   records (and on [`DurableStore::snapshot_now`]) the whole store is
+//!   serialized to a versioned segment file (atomic temp + fsync +
+//!   rename), the WAL files are deleted (their records are sealed into
+//!   the snapshot), and older snapshots beyond one spare are pruned.
+//! * **Recovery** ([`recover`]) — load the newest decodable snapshot
+//!   (corrupt ones are skipped, older ones tried), parse every WAL
+//!   file stop-at-first-corruption, merge the surviving records by
+//!   global sequence number, and replay the contiguous run starting at
+//!   the snapshot's `next_seq` through the normal `add` path. Records
+//!   already sealed in the snapshot (seq below `next_seq`) are skipped
+//!   — replay is idempotent; records after a sequence gap are dropped
+//!   — a lost record invalidates everything that depended on coming
+//!   after it. The outcome is surfaced as [`RecoveryReport`]
+//!   (`/v1/stats` reports `recovered_rows` / `dropped_records`).
+//!
+//! Because replay re-runs the deterministic quantization pipeline and
+//! snapshots store the exact in-memory layout, a recovered store equals
+//! a never-crashed store **bit-for-bit** (codes, rescales, residuals,
+//! bit plan) up to the last durable record — the property the
+//! fault-injection wall in `rust/tests/durability.rs` asserts for every
+//! fault the [`super::io::FaultIo`] shim can inject.
+
+use super::io::{Io, StdIo};
+use super::snapshot::{
+    decode_snapshot, encode_snapshot, list_snapshots, snapshot_path,
+};
+use super::wal::{decode_records, encode_record, wal_path, WalRecord, WalTail, WAL_DIR};
+use super::{IndexConfig, IndexError, SearchHit, VectorStore};
+use std::path::{Path, PathBuf};
+
+/// When WAL appends are flushed to stable storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync every WAL append before acknowledging — an acked add
+    /// survives power loss, at one disk flush per add.
+    Always,
+    /// Leave flushing to the OS page cache — an acked add survives
+    /// process death but a power cut may tear the tail (which recovery
+    /// tolerates by design).
+    Never,
+}
+
+/// Durability configuration for [`DurableStore::open`].
+#[derive(Clone, Debug)]
+pub struct DurabilityConfig {
+    /// Directory holding `wal/` and the snapshot segments.
+    pub data_dir: PathBuf,
+    /// WAL flush policy.
+    pub fsync: FsyncPolicy,
+    /// Acknowledged records between automatic snapshots; `0` disables
+    /// automatic snapshots (explicit [`DurableStore::snapshot_now`]
+    /// only).
+    pub snapshot_every: usize,
+}
+
+/// What recovery found and did, for `/v1/stats` and the test walls.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Rows restored from the snapshot.
+    pub snapshot_rows: usize,
+    /// Rows replayed from WAL records.
+    pub replayed_rows: usize,
+    /// WAL records dropped: corrupt/torn tails (one per damaged file)
+    /// plus whole records lost to a sequence gap.
+    pub dropped_records: usize,
+    /// WAL records skipped because the snapshot already sealed them
+    /// (duplicate replay — idempotence, not loss).
+    pub duplicate_records: usize,
+    /// Snapshot files that failed to decode and were skipped.
+    pub corrupt_snapshots: usize,
+}
+
+impl RecoveryReport {
+    /// Total rows the store holds because of recovery (snapshot +
+    /// replay) — the `recovered_rows` stats field.
+    pub fn recovered_rows(&self) -> usize {
+        self.snapshot_rows + self.replayed_rows
+    }
+}
+
+/// Load the newest usable snapshot and replay the WAL tail. Never
+/// fails on *corruption* (that is data, reported in the
+/// [`RecoveryReport`]); fails only on genuine I/O errors or an invalid
+/// `cfg`.
+pub fn recover(
+    io: &mut dyn Io,
+    data_dir: &Path,
+    cfg: IndexConfig,
+) -> Result<(VectorStore, u64, RecoveryReport), IndexError> {
+    let mut report = RecoveryReport::default();
+    // newest decodable snapshot wins; corrupt ones are skipped
+    let mut store: Option<(VectorStore, u64)> = None;
+    for seq in list_snapshots(io, data_dir)? {
+        let path = snapshot_path(data_dir, seq);
+        let bytes = io
+            .read(&path)
+            .map_err(|e| IndexError::Io(format!("reading {}: {e}", path.display())))?
+            .unwrap_or_default();
+        match decode_snapshot(&bytes, cfg.clone()) {
+            Ok(loaded) => {
+                store = Some(loaded);
+                break;
+            }
+            Err(_) => report.corrupt_snapshots += 1,
+        }
+    }
+    let (mut store, mut next_seq) = match store {
+        Some(s) => s,
+        None => (VectorStore::new(cfg)?, 0),
+    };
+    report.snapshot_rows = store.rows();
+    // parse every WAL file stop-at-first-corruption, then merge by the
+    // store-global sequence number to reconstruct the original
+    // interleaved add order (the Budget policy's rebalance cadence —
+    // hence the final bit plan — depends on it)
+    let wal_dir = data_dir.join(WAL_DIR);
+    let mut records: Vec<WalRecord> = Vec::new();
+    for name in io
+        .list(&wal_dir)
+        .map_err(|e| IndexError::Io(format!("listing {}: {e}", wal_dir.display())))?
+    {
+        if !name.ends_with(".wal") {
+            continue;
+        }
+        let path = wal_dir.join(&name);
+        let bytes = io
+            .read(&path)
+            .map_err(|e| IndexError::Io(format!("reading {}: {e}", path.display())))?
+            .unwrap_or_default();
+        let (recs, tail) = decode_records(&bytes);
+        if tail != WalTail::Clean {
+            report.dropped_records += 1;
+        }
+        records.extend(recs);
+    }
+    records.sort_by_key(|r| r.seq);
+    // replay the contiguous run from next_seq; duplicates (sealed in
+    // the snapshot) are skipped, anything after a gap is dropped
+    for rec in records {
+        if rec.seq < next_seq {
+            report.duplicate_records += 1;
+            continue;
+        }
+        if rec.seq > next_seq {
+            report.dropped_records += 1;
+            continue;
+        }
+        match store.add(&rec.name, &rec.rows, rec.dim, 0) {
+            Ok((_, rows)) => report.replayed_rows += rows,
+            // a record the store now refuses (e.g. budget shrank across
+            // restarts) is dropped, not fatal — recovery must finish
+            Err(_) => {
+                report.dropped_records += 1;
+                continue;
+            }
+        }
+        next_seq = rec.seq + 1;
+    }
+    Ok((store, next_seq, report))
+}
+
+/// The durability engine a durable [`DurableStore`] carries.
+struct Engine {
+    io: Box<dyn Io>,
+    data_dir: PathBuf,
+    fsync: FsyncPolicy,
+    snapshot_every: usize,
+    next_seq: u64,
+    records_since_snapshot: usize,
+    report: RecoveryReport,
+}
+
+/// A [`VectorStore`] with optional crash-safety. All read paths and
+/// the non-durable constructor are zero-overhead pass-throughs, so the
+/// serving layer holds one type whether or not `--data-dir` was given.
+pub struct DurableStore {
+    store: VectorStore,
+    engine: Option<Engine>,
+}
+
+impl DurableStore {
+    /// In-memory only store — restart loses everything (the PR-5
+    /// behavior, still the default without `--data-dir`).
+    pub fn ephemeral(cfg: IndexConfig) -> Result<DurableStore, IndexError> {
+        Ok(DurableStore { store: VectorStore::new(cfg)?, engine: None })
+    }
+
+    /// Open (or create) a durable store at `dcfg.data_dir` on the real
+    /// filesystem: recover whatever the directory holds, then log every
+    /// subsequent add.
+    pub fn open(cfg: IndexConfig, dcfg: DurabilityConfig) -> Result<DurableStore, IndexError> {
+        DurableStore::open_with(cfg, dcfg, Box::new(StdIo))
+    }
+
+    /// [`DurableStore::open`] over an explicit [`Io`] — the seam the
+    /// fault-injection wall uses ([`super::io::MemIo`] /
+    /// [`super::io::FaultIo`]).
+    pub fn open_with(
+        cfg: IndexConfig,
+        dcfg: DurabilityConfig,
+        mut io: Box<dyn Io>,
+    ) -> Result<DurableStore, IndexError> {
+        let (store, next_seq, report) = recover(io.as_mut(), &dcfg.data_dir, cfg)?;
+        Ok(DurableStore {
+            store,
+            engine: Some(Engine {
+                io,
+                data_dir: dcfg.data_dir,
+                fsync: dcfg.fsync,
+                snapshot_every: dcfg.snapshot_every,
+                next_seq,
+                records_since_snapshot: 0,
+                report,
+            }),
+        })
+    }
+
+    /// Borrow the underlying store (all read paths).
+    pub fn store(&self) -> &VectorStore {
+        &self.store
+    }
+
+    /// True when adds are logged to disk.
+    pub fn is_durable(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// The recovery outcome of [`DurableStore::open`]; `None` for
+    /// ephemeral stores (the stats endpoint omits the fields).
+    pub fn recovery(&self) -> Option<RecoveryReport> {
+        self.engine.as_ref().map(|e| e.report)
+    }
+
+    /// Next store-global WAL sequence number (tests pin the cadence).
+    pub fn next_seq(&self) -> u64 {
+        self.engine.as_ref().map(|e| e.next_seq).unwrap_or(0)
+    }
+
+    /// Durable add: apply in memory, then append one WAL record, then
+    /// acknowledge (see module docs for the ordering argument). The
+    /// in-memory apply alone decides admission — a refused add writes
+    /// nothing. A WAL append failure is returned as
+    /// [`IndexError::Io`]; the in-memory rows stay (they are valid,
+    /// merely not yet durable) and the sequence number is still
+    /// consumed so a later snapshot reseals them.
+    pub fn add(
+        &mut self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        threads: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        let out = self.store.add(name, vecs, d, threads)?;
+        let Some(engine) = &mut self.engine else {
+            return Ok(out);
+        };
+        let rec = WalRecord {
+            seq: engine.next_seq,
+            name: name.to_string(),
+            dim: d,
+            rows: vecs.to_vec(),
+        };
+        engine.next_seq += 1;
+        engine.records_since_snapshot += 1;
+        let bytes = encode_record(&rec)?;
+        let path = wal_path(&engine.data_dir, name);
+        engine
+            .io
+            .append(&path, &bytes, engine.fsync == FsyncPolicy::Always)
+            .map_err(|e| IndexError::Io(format!("WAL append to {}: {e}", path.display())))?;
+        if engine.snapshot_every > 0 && engine.records_since_snapshot >= engine.snapshot_every {
+            self.snapshot_now()?;
+        }
+        Ok(out)
+    }
+
+    /// Write a snapshot sealing the current state, delete the WAL files
+    /// it subsumes, and prune all but the previous snapshot (kept as a
+    /// fallback against a latent bad write). No-op on ephemeral stores.
+    pub fn snapshot_now(&mut self) -> Result<(), IndexError> {
+        let Some(engine) = &mut self.engine else {
+            return Ok(());
+        };
+        let bytes = encode_snapshot(&self.store, engine.next_seq);
+        let path = snapshot_path(&engine.data_dir, engine.next_seq);
+        engine
+            .io
+            .write_atomic(&path, &bytes, true)
+            .map_err(|e| IndexError::Io(format!("writing {}: {e}", path.display())))?;
+        // the snapshot seals every logged record: drop the WALs
+        let wal_dir = engine.data_dir.join(WAL_DIR);
+        for name in engine
+            .io
+            .list(&wal_dir)
+            .map_err(|e| IndexError::Io(format!("listing {}: {e}", wal_dir.display())))?
+        {
+            if name.ends_with(".wal") {
+                let p = wal_dir.join(&name);
+                engine
+                    .io
+                    .remove(&p)
+                    .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+            }
+        }
+        // keep the new snapshot plus one predecessor
+        let seqs = list_snapshots(engine.io.as_mut(), &engine.data_dir)?;
+        for &old in seqs.iter().skip(2) {
+            let p = snapshot_path(&engine.data_dir, old);
+            engine
+                .io
+                .remove(&p)
+                .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+        }
+        engine.records_since_snapshot = 0;
+        Ok(())
+    }
+
+    /// Pass-through query (see [`VectorStore::query`]).
+    pub fn query(
+        &self,
+        name: &str,
+        q: &[f32],
+        k: usize,
+        rerank_factor: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        self.store.query(name, q, k, rerank_factor, threads)
+    }
+
+    /// Hand back the inner [`Io`] (tests recover from what survived a
+    /// faulted run). Ephemeral stores return `None`.
+    pub fn into_io(self) -> Option<Box<dyn Io>> {
+        self.engine.map(|e| e.io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::io::MemIo;
+    use super::*;
+    use crate::index::IndexPolicy;
+    use crate::rng::Rng;
+
+    fn cfg() -> IndexConfig {
+        IndexConfig { policy: IndexPolicy::Uniform(6), ..Default::default() }
+    }
+
+    fn dcfg(snapshot_every: usize) -> DurabilityConfig {
+        DurabilityConfig {
+            data_dir: PathBuf::from("/idx"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every,
+        }
+    }
+
+    fn assert_bit_identical(a: &VectorStore, b: &VectorStore) {
+        assert_eq!(
+            a.collections.keys().collect::<Vec<_>>(),
+            b.collections.keys().collect::<Vec<_>>()
+        );
+        for (name, ca) in &a.collections {
+            let cb = &b.collections[name];
+            assert_eq!(ca.bits, cb.bits, "{name}: bit plan");
+            assert_eq!(ca.codes, cb.codes, "{name}: packed codes");
+            assert_eq!(ca.r, cb.r, "{name}: rescales");
+            assert_eq!(ca.exact, cb.exact, "{name}: residuals");
+        }
+    }
+
+    #[test]
+    fn restart_recovers_wal_only_store_bit_for_bit() {
+        let d = 16usize;
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..5u64 {
+            let v = Rng::new(seed).gaussian_vec(3 * d);
+            durable.add("docs", &v, d, 1).unwrap();
+            fresh.add("docs", &v, d, 1).unwrap();
+        }
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.recovered_rows(), 15);
+        assert_eq!(rep.dropped_records, 0);
+        assert_eq!(reopened.next_seq(), 5);
+        assert_bit_identical(reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn snapshot_seals_wal_and_recovery_prefers_it() {
+        let d = 8usize;
+        let mut durable = DurableStore::open_with(cfg(), dcfg(2), Box::new(MemIo::new())).unwrap();
+        for seed in 0..5u64 {
+            durable.add("a", &Rng::new(seed).gaussian_vec(d), d, 1).unwrap();
+        }
+        // snapshot_every=2: snapshots at seq 2 and 4; one record (seq 4)
+        // still in the WAL
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(2), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.snapshot_rows, 4);
+        assert_eq!(rep.replayed_rows, 1);
+        assert_eq!(rep.duplicate_records, 0);
+        assert_eq!(reopened.next_seq(), 5);
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..5u64 {
+            fresh.add("a", &Rng::new(seed).gaussian_vec(d), d, 1).unwrap();
+        }
+        assert_bit_identical(reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn duplicate_wal_records_replay_idempotently() {
+        // write snapshot *without* clearing the WAL by re-appending a
+        // sealed record manually: recovery must skip it
+        let d = 8usize;
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let v = Rng::new(9).gaussian_vec(d);
+        durable.add("a", &v, d, 1).unwrap();
+        durable.snapshot_now().unwrap();
+        let mut io = durable.into_io().unwrap();
+        let stale = encode_record(&WalRecord {
+            seq: 0,
+            name: "a".into(),
+            dim: d,
+            rows: v.clone(),
+        })
+        .unwrap();
+        io.append(&wal_path(Path::new("/idx"), "a"), &stale, false).unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.duplicate_records, 1);
+        assert_eq!(rep.replayed_rows, 0);
+        assert_eq!(reopened.store().rows(), 1, "no double-apply");
+    }
+
+    #[test]
+    fn seq_gap_stops_replay_and_counts_drops() {
+        let d = 4usize;
+        let mut io = MemIo::new();
+        let mk = |seq: u64| {
+            encode_record(&WalRecord {
+                seq,
+                name: "g".into(),
+                dim: d,
+                rows: vec![seq as f32; d],
+            })
+            .unwrap()
+        };
+        let p = wal_path(Path::new("/idx"), "g");
+        io.append(&p, &mk(0), false).unwrap();
+        io.append(&p, &mk(1), false).unwrap();
+        io.append(&p, &mk(3), false).unwrap(); // 2 lost elsewhere
+        io.append(&p, &mk(4), false).unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.replayed_rows, 2, "seq 0 and 1 only");
+        assert_eq!(rep.dropped_records, 2, "seq 3 and 4 are beyond the gap");
+        assert_eq!(reopened.next_seq(), 2);
+    }
+
+    #[test]
+    fn interleaved_collections_recover_in_global_order() {
+        // two collections, alternating adds: per-collection WALs must
+        // merge back to the original global order
+        let d = 8usize;
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..6u64 {
+            let name = if seed % 2 == 0 { "even" } else { "odd" };
+            let v = Rng::new(seed).gaussian_vec(2 * d);
+            durable.add(name, &v, d, 1).unwrap();
+            fresh.add(name, &v, d, 1).unwrap();
+        }
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        assert_bit_identical(reopened.store(), &fresh);
+        assert_eq!(reopened.next_seq(), 6);
+    }
+
+    #[test]
+    fn refused_adds_write_nothing() {
+        let d = 8usize;
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        assert!(durable.add("bad name!", &vec![0.0; d], d, 1).is_err());
+        assert_eq!(durable.next_seq(), 0, "refused add must not consume a seq");
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        assert_eq!(reopened.store().rows(), 0);
+        assert_eq!(reopened.recovery().unwrap(), RecoveryReport::default());
+    }
+
+    #[test]
+    fn ephemeral_store_has_no_engine() {
+        let mut s = DurableStore::ephemeral(cfg()).unwrap();
+        s.add("a", &vec![1.0; 8], 8, 1).unwrap();
+        assert!(!s.is_durable());
+        assert!(s.recovery().is_none());
+        s.snapshot_now().unwrap(); // no-op, not an error
+        assert!(s.into_io().is_none());
+    }
+}

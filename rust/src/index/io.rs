@@ -1,0 +1,296 @@
+//! Byte-level I/O behind the durability layer, with deterministic fault
+//! injection.
+//!
+//! Everything the WAL and snapshot writers touch on disk goes through
+//! the [`Io`] trait: whole-file reads, appends, atomic replaces,
+//! removals, directory listings. Three implementations:
+//!
+//! * [`StdIo`] — the real filesystem (what `--data-dir` uses). Atomic
+//!   replace is write-temp + fsync + rename, so a crash mid-snapshot
+//!   leaves either the old file or the new one, never a torn hybrid.
+//! * [`MemIo`] — an in-memory map, for tests that build, corrupt, and
+//!   recover stores without touching disk.
+//! * [`FaultIo`] — wraps any [`Io`] and applies one [`Fault`] from a
+//!   deterministic plan: fail the Nth write outright, persist only the
+//!   first N bytes of it (a torn write), or flip one bit of it
+//!   (silent media corruption). The recovery property wall drives every
+//!   fault through this shim and asserts recovery ≡ fresh build up to
+//!   the last durable record.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
+
+/// Filesystem surface of the durability layer. Object-safe so stores
+/// can hold a `Box<dyn Io + Send>` and tests can swap in [`MemIo`] /
+/// [`FaultIo`].
+pub trait Io: Send {
+    /// Read a whole file. `Ok(None)` when it does not exist.
+    fn read(&mut self, path: &Path) -> io::Result<Option<Vec<u8>>>;
+
+    /// Append `bytes` to `path`, creating it (and parent directories)
+    /// if missing. With `fsync`, flush to stable storage before
+    /// returning — the WAL's ack-after-durable knob.
+    fn append(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()>;
+
+    /// Atomically replace `path` with `bytes`: the file observably holds
+    /// either its previous content or all of `bytes`, never a prefix.
+    /// With `fsync`, the new content is flushed before the swap.
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()>;
+
+    /// Delete a file; missing files are a no-op.
+    fn remove(&mut self, path: &Path) -> io::Result<()>;
+
+    /// File names (not full paths) directly inside `dir`, sorted.
+    /// A missing directory lists as empty.
+    fn list(&mut self, dir: &Path) -> io::Result<Vec<String>>;
+}
+
+// ------------------------------------------------------------------- StdIo
+
+/// Real-filesystem [`Io`].
+#[derive(Debug, Default)]
+pub struct StdIo;
+
+impl Io for StdIo {
+    fn read(&mut self, path: &Path) -> io::Result<Option<Vec<u8>>> {
+        match fs::read(path) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn append(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(bytes)?;
+        if fsync {
+            f.sync_data()?;
+        }
+        Ok(())
+    }
+
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()> {
+        let parent = path.parent().unwrap_or_else(|| Path::new("."));
+        fs::create_dir_all(parent)?;
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            if fsync {
+                f.sync_data()?;
+            }
+        }
+        fs::rename(&tmp, path)?;
+        if fsync {
+            // persist the rename itself (directory entry)
+            if let Ok(dir) = fs::File::open(parent) {
+                let _ = dir.sync_data();
+            }
+        }
+        Ok(())
+    }
+
+    fn remove(&mut self, path: &Path) -> io::Result<()> {
+        match fs::remove_file(path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn list(&mut self, dir: &Path) -> io::Result<Vec<String>> {
+        let rd = match fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => Err(e)?,
+        };
+        let mut names = Vec::new();
+        for entry in rd {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                if let Some(n) = entry.file_name().to_str() {
+                    names.push(n.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+// ------------------------------------------------------------------- MemIo
+
+/// In-memory [`Io`]: a path → bytes map. Deterministic, no disk, and
+/// the test walls can inspect or corrupt "files" directly via
+/// [`MemIo::get`] / [`MemIo::put`].
+#[derive(Debug, Default, Clone)]
+pub struct MemIo {
+    files: BTreeMap<PathBuf, Vec<u8>>,
+}
+
+impl MemIo {
+    /// Empty in-memory filesystem.
+    pub fn new() -> MemIo {
+        MemIo::default()
+    }
+
+    /// Borrow a file's bytes, if present.
+    pub fn get(&self, path: &Path) -> Option<&Vec<u8>> {
+        self.files.get(path)
+    }
+
+    /// Insert or replace a file wholesale (fixture loading, manual
+    /// corruption).
+    pub fn put(&mut self, path: &Path, bytes: Vec<u8>) {
+        self.files.insert(path.to_path_buf(), bytes);
+    }
+}
+
+impl Io for MemIo {
+    fn read(&mut self, path: &Path) -> io::Result<Option<Vec<u8>>> {
+        Ok(self.files.get(path).cloned())
+    }
+
+    fn append(&mut self, path: &Path, bytes: &[u8], _fsync: bool) -> io::Result<()> {
+        self.files.entry(path.to_path_buf()).or_default().extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8], _fsync: bool) -> io::Result<()> {
+        self.files.insert(path.to_path_buf(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn remove(&mut self, path: &Path) -> io::Result<()> {
+        self.files.remove(path);
+        Ok(())
+    }
+
+    fn list(&mut self, dir: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for p in self.files.keys() {
+            if p.parent() == Some(dir) {
+                if let Some(n) = p.file_name().and_then(|n| n.to_str()) {
+                    names.push(n.to_string());
+                }
+            }
+        }
+        Ok(names)
+    }
+}
+
+// ----------------------------------------------------------------- FaultIo
+
+/// One deterministic fault, addressed by the global 1-based ordinal of
+/// the write it hits (appends and atomic writes share the counter).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The `nth` write fails with an I/O error; nothing is persisted.
+    FailWrite {
+        /// 1-based ordinal of the write to fail.
+        nth: usize,
+    },
+    /// The `nth` write persists only its first `keep` bytes — a torn
+    /// write (power loss mid-append). Later writes succeed normally.
+    TornWrite {
+        /// 1-based ordinal of the write to tear.
+        nth: usize,
+        /// Bytes of the payload that reach storage.
+        keep: usize,
+    },
+    /// The `nth` write persists with one bit flipped — silent
+    /// corruption the CRC must catch at recovery.
+    FlipBit {
+        /// 1-based ordinal of the write to corrupt.
+        nth: usize,
+        /// Byte offset within that write's payload.
+        byte: usize,
+        /// Bit index 0..8 within the byte.
+        bit: u8,
+    },
+}
+
+/// [`Io`] wrapper that injects one [`Fault`] at a deterministic point
+/// in the write sequence. Reads, removals, and listings pass through
+/// untouched — recovery always sees exactly what "survived the crash".
+pub struct FaultIo<I: Io> {
+    inner: I,
+    fault: Fault,
+    writes: usize,
+}
+
+impl<I: Io> FaultIo<I> {
+    /// Wrap `inner`, arming `fault`.
+    pub fn new(inner: I, fault: Fault) -> FaultIo<I> {
+        FaultIo { inner, fault, writes: 0 }
+    }
+
+    /// Writes observed so far (for sizing fault plans in tests).
+    pub fn writes(&self) -> usize {
+        self.writes
+    }
+
+    /// Unwrap the inner [`Io`] (tests recover from what survived).
+    pub fn into_inner(self) -> I {
+        self.inner
+    }
+
+    /// Apply the armed fault to this write's payload, if it is the
+    /// targeted ordinal. `Ok(None)` means "drop the write entirely".
+    fn mangle(&mut self, bytes: &[u8]) -> io::Result<Option<Vec<u8>>> {
+        self.writes += 1;
+        match self.fault {
+            Fault::FailWrite { nth } if nth == self.writes => {
+                Err(io::Error::new(io::ErrorKind::Other, "injected write failure"))
+            }
+            Fault::TornWrite { nth, keep } if nth == self.writes => {
+                Ok(Some(bytes[..keep.min(bytes.len())].to_vec()))
+            }
+            Fault::FlipBit { nth, byte, bit } if nth == self.writes => {
+                let mut out = bytes.to_vec();
+                if let Some(b) = out.get_mut(byte) {
+                    *b ^= 1u8 << (bit & 7);
+                }
+                Ok(Some(out))
+            }
+            _ => Ok(Some(bytes.to_vec())),
+        }
+    }
+}
+
+impl<I: Io> Io for FaultIo<I> {
+    fn read(&mut self, path: &Path) -> io::Result<Option<Vec<u8>>> {
+        self.inner.read(path)
+    }
+
+    fn append(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()> {
+        match self.mangle(bytes)? {
+            Some(b) => self.inner.append(path, &b, fsync),
+            None => Ok(()),
+        }
+    }
+
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8], fsync: bool) -> io::Result<()> {
+        // a torn atomic write is still atomic-or-absent on a real fs;
+        // modelling the tear as a short *file* covers the stricter case
+        match self.mangle(bytes)? {
+            Some(b) => self.inner.write_atomic(path, &b, fsync),
+            None => Ok(()),
+        }
+    }
+
+    fn remove(&mut self, path: &Path) -> io::Result<()> {
+        self.inner.remove(path)
+    }
+
+    fn list(&mut self, dir: &Path) -> io::Result<Vec<String>> {
+        self.inner.list(dir)
+    }
+}

@@ -38,7 +38,18 @@
 //! survivors back to exact scores, and the property tests pin a
 //! monotone 2 → 4 → 8-bit recall ladder against the brute-force f32
 //! baseline plus self-query-ranks-first at >= 4 bits.
+//!
+//! Durability (ISSUE 6) lives in the child modules: [`wal`] (the
+//! per-collection CRC-checksummed append log), [`snapshot`] (versioned
+//! sealed-state segments), [`durability`] (the [`durability::DurableStore`]
+//! orchestrator: WAL-before-ack, periodic snapshots, crash recovery),
+//! and [`io`] (the filesystem seam with deterministic fault injection).
 #![deny(missing_docs)]
+
+pub mod durability;
+pub mod io;
+pub mod snapshot;
+pub mod wal;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -114,6 +125,9 @@ pub enum IndexError {
     },
     /// Configuration/shape mismatch (empty bit-choice set, …).
     Shape(String),
+    /// A durability-layer I/O failure (WAL append, snapshot write,
+    /// data-dir listing) — the HTTP layer maps it to 500.
+    Io(String),
 }
 
 impl std::fmt::Display for IndexError {
@@ -136,6 +150,7 @@ impl std::fmt::Display for IndexError {
                  (minimum {min_bytes} bytes at the cheapest width)"
             ),
             IndexError::Shape(msg) => write!(f, "index shape error: {msg}"),
+            IndexError::Io(msg) => write!(f, "index durability I/O error: {msg}"),
         }
     }
 }

@@ -1,0 +1,281 @@
+//! Write-ahead log: length-prefixed, CRC-checksummed add records.
+//!
+//! One WAL file per collection (`wal/<name>.wal` under the data dir);
+//! every acknowledged `add` appends exactly one record. Records carry a
+//! **store-global** monotone sequence number so recovery can merge the
+//! per-collection files back into the original interleaved add order —
+//! the Budget policy's rebalance cadence depends on that total order,
+//! and bit-for-bit "recovery ≡ fresh build" only holds if replay
+//! preserves it.
+//!
+//! ## Record wire format (all integers little-endian)
+//!
+//! ```text
+//! [len: u32] [crc: u32] [payload: len bytes]
+//! payload = [kind: u8 = 1]
+//!           [seq: u64]
+//!           [name_len: u16] [name: name_len bytes]
+//!           [dim: u32] [nrows: u32]
+//!           [nrows * dim * f32]
+//! ```
+//!
+//! `crc` is CRC-32 (IEEE polynomial, zlib-compatible) over the payload
+//! bytes — the Python mirror checks it with `zlib.crc32`. The reader is
+//! **stop-at-first-corruption**: a short length prefix, a length that
+//! overruns the file, a CRC mismatch, or a malformed payload ends that
+//! file's replayable prefix; everything before it stands, everything
+//! after is reported as a dropped tail. A torn final record — the
+//! normal crash shape for an append log — is therefore tolerated by
+//! construction, not special-cased.
+
+use super::IndexError;
+use std::path::{Path, PathBuf};
+
+/// Record kind tag for an `add` (the only kind in v1).
+pub const RECORD_ADD: u8 = 1;
+
+/// Subdirectory of the data dir holding the per-collection WAL files.
+pub const WAL_DIR: &str = "wal";
+
+/// CRC-32, IEEE/zlib polynomial (reflected 0xEDB88320), no table —
+/// byte-at-a-time is plenty for record-sized payloads and keeps the
+/// implementation std-only and trivially mirrorable.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// One decoded WAL record: the add of `rows` (row-major, `dim` wide)
+/// to collection `name`, stamped with the store-global `seq`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WalRecord {
+    /// Store-global sequence number (one per acknowledged add).
+    pub seq: u64,
+    /// Target collection.
+    pub name: String,
+    /// Row dimension.
+    pub dim: usize,
+    /// Row-major f32 payload, a whole number of rows.
+    pub rows: Vec<f32>,
+}
+
+impl WalRecord {
+    /// Rows in this record.
+    pub fn nrows(&self) -> usize {
+        if self.dim == 0 { 0 } else { self.rows.len() / self.dim }
+    }
+}
+
+/// Path of a collection's WAL file under `data_dir`.
+pub fn wal_path(data_dir: &Path, collection: &str) -> PathBuf {
+    data_dir.join(WAL_DIR).join(format!("{collection}.wal"))
+}
+
+/// Encode one record (length prefix + CRC + payload).
+pub fn encode_record(rec: &WalRecord) -> Result<Vec<u8>, IndexError> {
+    if rec.name.len() > u16::MAX as usize {
+        return Err(IndexError::Io(format!(
+            "collection name of {} bytes too long for a WAL record",
+            rec.name.len()
+        )));
+    }
+    let nrows = rec.nrows();
+    if rec.dim == 0 || nrows == 0 || rec.rows.len() != nrows * rec.dim {
+        return Err(IndexError::Io(format!(
+            "WAL record payload of {} values is not a whole number of dimension-{} rows",
+            rec.rows.len(),
+            rec.dim
+        )));
+    }
+    let mut payload = Vec::with_capacity(1 + 8 + 2 + rec.name.len() + 8 + rec.rows.len() * 4);
+    payload.push(RECORD_ADD);
+    payload.extend_from_slice(&rec.seq.to_le_bytes());
+    payload.extend_from_slice(&(rec.name.len() as u16).to_le_bytes());
+    payload.extend_from_slice(rec.name.as_bytes());
+    payload.extend_from_slice(&(rec.dim as u32).to_le_bytes());
+    payload.extend_from_slice(&(nrows as u32).to_le_bytes());
+    for v in &rec.rows {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Why a WAL file's replayable prefix ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalTail {
+    /// The file ended exactly on a record boundary.
+    Clean,
+    /// Trailing bytes too short for a whole record — a torn final
+    /// append (the expected crash shape).
+    Torn,
+    /// A record whose CRC did not match its payload — bit rot or a
+    /// mangled write.
+    BadChecksum,
+    /// A record whose payload did not parse (unknown kind, inconsistent
+    /// lengths) despite a matching CRC.
+    Malformed,
+}
+
+/// Decode a WAL file's replayable prefix: every whole, checksummed,
+/// well-formed record up to the first corruption, plus how the prefix
+/// ended. Never errors — corruption is data, not failure, at recovery
+/// time.
+pub fn decode_records(bytes: &[u8]) -> (Vec<WalRecord>, WalTail) {
+    let mut recs = Vec::new();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        if bytes.len() - off < 8 {
+            return (recs, WalTail::Torn);
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        if bytes.len() - off - 8 < len {
+            return (recs, WalTail::Torn);
+        }
+        let payload = &bytes[off + 8..off + 8 + len];
+        if crc32(payload) != crc {
+            return (recs, WalTail::BadChecksum);
+        }
+        match decode_payload(payload) {
+            Some(rec) => recs.push(rec),
+            None => return (recs, WalTail::Malformed),
+        }
+        off += 8 + len;
+    }
+    (recs, WalTail::Clean)
+}
+
+/// Parse one checksummed payload; `None` on any structural violation.
+fn decode_payload(p: &[u8]) -> Option<WalRecord> {
+    if p.len() < 1 + 8 + 2 || p[0] != RECORD_ADD {
+        return None;
+    }
+    let seq = u64::from_le_bytes(p[1..9].try_into().unwrap());
+    let name_len = u16::from_le_bytes(p[9..11].try_into().unwrap()) as usize;
+    let mut off = 11usize;
+    if p.len() < off + name_len + 8 {
+        return None;
+    }
+    let name = std::str::from_utf8(&p[off..off + name_len]).ok()?.to_string();
+    off += name_len;
+    let dim = u32::from_le_bytes(p[off..off + 4].try_into().unwrap()) as usize;
+    let nrows = u32::from_le_bytes(p[off + 4..off + 8].try_into().unwrap()) as usize;
+    off += 8;
+    let want = dim.checked_mul(nrows)?.checked_mul(4)?;
+    if dim == 0 || nrows == 0 || p.len() != off + want {
+        return None;
+    }
+    let mut rows = Vec::with_capacity(dim * nrows);
+    for chunk in p[off..].chunks_exact(4) {
+        rows.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Some(WalRecord { seq, name, dim, rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, name: &str, dim: usize, n: usize) -> WalRecord {
+        let rows: Vec<f32> = (0..n * dim).map(|i| i as f32 * 0.5 - 1.0).collect();
+        WalRecord { seq, name: name.into(), dim, rows }
+    }
+
+    #[test]
+    fn crc32_matches_zlib_reference_values() {
+        // zlib.crc32(b"") == 0, zlib.crc32(b"123456789") == 0xCBF43926
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"hello"), 0x3610_A686);
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let r = rec(7, "docs", 4, 3);
+        let bytes = encode_record(&r).unwrap();
+        let (recs, tail) = decode_records(&bytes);
+        assert_eq!(tail, WalTail::Clean);
+        assert_eq!(recs, vec![r]);
+    }
+
+    #[test]
+    fn multiple_records_concatenate() {
+        let a = rec(1, "a", 2, 2);
+        let b = rec(2, "b", 3, 1);
+        let mut bytes = encode_record(&a).unwrap();
+        bytes.extend(encode_record(&b).unwrap());
+        let (recs, tail) = decode_records(&bytes);
+        assert_eq!(tail, WalTail::Clean);
+        assert_eq!(recs, vec![a, b]);
+    }
+
+    #[test]
+    fn torn_tail_keeps_whole_prefix() {
+        let a = rec(1, "a", 2, 2);
+        let b = rec(2, "a", 2, 1);
+        let mut bytes = encode_record(&a).unwrap();
+        let full = encode_record(&b).unwrap();
+        // every strict prefix of the final record is a torn tail
+        for cut in 1..full.len() {
+            let mut torn = bytes.clone();
+            torn.extend_from_slice(&full[..cut]);
+            let (recs, tail) = decode_records(&torn);
+            assert_eq!(recs, vec![a.clone()], "cut={cut}");
+            assert_eq!(tail, WalTail::Torn, "cut={cut}");
+        }
+        bytes.extend(full);
+        assert_eq!(decode_records(&bytes).1, WalTail::Clean);
+    }
+
+    #[test]
+    fn any_flipped_payload_bit_is_caught() {
+        let r = rec(3, "docs", 3, 2);
+        let clean = encode_record(&r).unwrap();
+        for byte in 8..clean.len() {
+            let mut bad = clean.clone();
+            bad[byte] ^= 0x10;
+            let (recs, tail) = decode_records(&bad);
+            assert!(recs.is_empty(), "byte={byte}");
+            assert_eq!(tail, WalTail::BadChecksum, "byte={byte}");
+        }
+    }
+
+    #[test]
+    fn corruption_mid_file_drops_the_rest() {
+        let a = rec(1, "a", 2, 1);
+        let b = rec(2, "a", 2, 1);
+        let c = rec(3, "a", 2, 1);
+        let ea = encode_record(&a).unwrap();
+        let mut eb = encode_record(&b).unwrap();
+        eb[10] ^= 0x01; // corrupt b's payload
+        let ec = encode_record(&c).unwrap();
+        let bytes: Vec<u8> = [ea, eb, ec].concat();
+        let (recs, tail) = decode_records(&bytes);
+        assert_eq!(recs, vec![a], "stop-at-first-corruption");
+        assert_eq!(tail, WalTail::BadChecksum);
+    }
+
+    #[test]
+    fn encode_rejects_ragged_payloads() {
+        let bad = WalRecord { seq: 1, name: "x".into(), dim: 3, rows: vec![0.0; 4] };
+        assert!(matches!(encode_record(&bad), Err(IndexError::Io(_))));
+    }
+
+    #[test]
+    fn empty_input_is_a_clean_empty_wal() {
+        let (recs, tail) = decode_records(&[]);
+        assert!(recs.is_empty());
+        assert_eq!(tail, WalTail::Clean);
+    }
+}

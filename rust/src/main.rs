@@ -15,6 +15,12 @@
 //!   serve    --http PORT [--index-bits N | --index-budget BYTES] [--no-index]
 //!                                          retrieval endpoints (/v1/embed,
 //!                                          /v1/collections/...) next to generate
+//!   serve    --data-dir PATH [--fsync always|never] [--snapshot-every N]
+//!                                          crash-safe collections: WAL + snapshots
+//!                                          under PATH, recovered at startup
+//!   serve    --http PORT [--http-read-timeout-ms MS]
+//!                                          socket read timeout (0 = default 10s);
+//!                                          stalled peers get a typed 408
 //!   index    [--bits N | --budget BYTES]   vector-index demo: embed docs, add,
 //!            [--docs N --k K --rerank M]   self-retrieve, report recall + bytes
 
@@ -227,6 +233,28 @@ fn index_cfg_from_args(args: &Args) -> Result<raana::index::IndexConfig> {
     )
 }
 
+/// `--data-dir PATH [--fsync always|never] [--snapshot-every N]` →
+/// durability config. `None` without `--data-dir` (ephemeral store, the
+/// pre-durability behavior). fsync defaults to `always` — an acked add
+/// survives power loss; `--fsync never` trades that for ingest speed
+/// (recovery still tolerates the resulting torn tails).
+fn durability_from_args(args: &Args) -> Result<Option<raana::index::durability::DurabilityConfig>> {
+    use raana::index::durability::{DurabilityConfig, FsyncPolicy};
+    let Some(dir) = args.opt("data-dir") else {
+        return Ok(None);
+    };
+    let fsync = match args.opt_or("fsync", "always") {
+        "always" => FsyncPolicy::Always,
+        "never" => FsyncPolicy::Never,
+        s => bail!("--fsync must be 'always' or 'never', got '{s}'"),
+    };
+    Ok(Some(DurabilityConfig {
+        data_dir: std::path::PathBuf::from(dir),
+        fsync,
+        snapshot_every: args.opt_usize("snapshot-every", 256)?,
+    }))
+}
+
 /// `--kv-bits N` / `--kv-budget BYTES` → KV storage policy + budget.
 fn kv_from_args(args: &Args) -> Result<(raana::kvq::KvqPolicy, usize)> {
     use raana::kvq::KvqPolicy;
@@ -292,12 +320,25 @@ fn maybe_index_server(
     if !want_index {
         return Ok(None);
     }
+    let durability = durability_from_args(args)?;
     let ix = raana::serve::index::IndexServer::with_embedder(
         index_cfg_from_args(args)?,
+        durability,
         manifest.clone(),
         params.clone(),
         Some(packed.clone()),
     )?;
+    if let Some(rep) = ix.recovery() {
+        info!(
+            "index recovery: {} rows restored ({} from snapshot, {} replayed), \
+             {} records dropped, {} duplicates skipped",
+            rep.recovered_rows(),
+            rep.snapshot_rows,
+            rep.replayed_rows,
+            rep.dropped_records,
+            rep.duplicate_records
+        );
+    }
     Ok(Some(ix))
 }
 
@@ -379,6 +420,7 @@ fn serve_http(
         raana::net::HttpConfig {
             workers: args.opt_usize("http-workers", 0)?,
             max_new_tokens_cap: args.opt_usize("http-max-tokens", 0)?,
+            read_timeout_ms: args.opt_usize("http-read-timeout-ms", 0)? as u64,
         },
     )?;
     let bound = http.local_addr();
@@ -424,6 +466,11 @@ fn serve_http(
     );
     if let Some(ix) = &index {
         let s = ix.stats();
+        if s.durable {
+            // orderly shutdown: seal everything into one snapshot so the
+            // next start recovers without replaying a long WAL tail
+            ix.snapshot_now()?;
+        }
         println!(
             "index: {} collections, {} rows, {} embeds, {} queries, {} B scan payload",
             s.collections, s.rows, s.embeds, s.queries, s.code_bytes
@@ -449,7 +496,7 @@ fn cmd_index(args: &Args) -> Result<()> {
         "embedding with a packed demo model: d={d}, {layers} layers, {} linears on codes",
         manifest.linears.len()
     );
-    let ix = IndexServer::with_embedder(cfg, manifest, params, Some(packed))?;
+    let ix = IndexServer::with_embedder(cfg, None, manifest, params, Some(packed))?;
     let dim = ix.embed_dim().expect("embedder attached");
 
     // synthesize distinct "documents" from the synthetic corpus

@@ -24,7 +24,10 @@
 //!   generation is in flight**. Includes the admission-queue depth
 //!   (republished per batcher round) and the KV-cache economics:
 //!   `kv_bits` (32 = dense f32), `kv_bytes_per_lane`, and the lane
-//!   pool's size (`lanes`) and occupancy (`lanes_active`).
+//!   pool's size (`lanes`) and occupancy (`lanes_active`). With an
+//!   index attached, also `index_durable` and — when the store was
+//!   opened from a data dir — the recovery accounting
+//!   `recovered_rows` / `dropped_records`.
 //!
 //! With an [`IndexServer`] attached ([`HttpServer::bind_with_index`]),
 //! the retrieval workload rides the same front-end:
@@ -50,10 +53,15 @@
 //!
 //! # Error shape
 //!
-//! Every error response on every path — 400/404/405/413/429/500/503/507
-//! — is the same single-key JSON object `{"error": "..."}`
-//! (loopback-tested across all of them), and every 405 names the
-//! allowed methods in an `Allow:` header per RFC 9110.
+//! Every error response on every path —
+//! 400/404/405/408/413/429/500/503/507 — is the same single-key JSON
+//! object `{"error": "..."}` (loopback-tested across all of them),
+//! every 405 names the allowed methods in an `Allow:` header per RFC
+//! 9110, and the transient refusals (429/503) advertise `Retry-After:
+//! 1` so well-behaved clients back off instead of hammering admission.
+//! A peer that stalls mid-request past the socket read timeout (a
+//! slow-loris client, a dead link) gets a typed **408** instead of a
+//! pinned worker.
 //!
 //! # Cancellation
 //!
@@ -123,8 +131,10 @@ pub const MAX_HEAD_BYTES: usize = 16 * 1024;
 /// arrays; 1 MiB of JSON is far beyond any real prompt for these models).
 pub const MAX_BODY_BYTES: usize = 1024 * 1024;
 
-/// Socket read timeout: a peer that stops sending mid-request is dropped
-/// rather than pinning a connection worker forever.
+/// Default socket read timeout (see [`HttpConfig::read_timeout_ms`]): a
+/// peer that stops sending mid-request — the slow-loris shape — is
+/// answered with a typed **408** and dropped rather than pinning a
+/// connection worker forever.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Socket write timeout for responses and stream chunks.
@@ -150,11 +160,17 @@ pub struct HttpConfig {
     /// (`0` means [`DEFAULT_MAX_NEW_TOKENS_CAP`]): the generation still
     /// succeeds, truncated — it just cannot pin a KV lane indefinitely.
     pub max_new_tokens_cap: usize,
+    /// Socket read timeout in milliseconds for request heads and bodies
+    /// (`0` means the 10 s default): the slow-loris guard. A connection
+    /// that trickles or stalls its request past this deadline gets a
+    /// typed **408** and is closed. Tests shrink it to exercise the
+    /// guard without waiting out the production default.
+    pub read_timeout_ms: u64,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { workers: 0, max_new_tokens_cap: 0 }
+        HttpConfig { workers: 0, max_new_tokens_cap: 0, read_timeout_ms: 0 }
     }
 }
 
@@ -179,7 +195,7 @@ impl HttpServer {
     /// with `workers` connection handlers (`0` = default) and the default
     /// `max_new_tokens` clamp. See [`HttpServer::bind_with`].
     pub fn bind(server: Arc<Server>, addr: &str, workers: usize) -> Result<HttpServer> {
-        HttpServer::bind_with(server, addr, HttpConfig { workers, max_new_tokens_cap: 0 })
+        HttpServer::bind_with(server, addr, HttpConfig { workers, ..Default::default() })
     }
 
     /// [`HttpServer::bind`] with explicit [`HttpConfig`] (no index
@@ -215,6 +231,11 @@ impl HttpServer {
         } else {
             cfg.max_new_tokens_cap
         };
+        let read_timeout = if cfg.read_timeout_ms == 0 {
+            READ_TIMEOUT
+        } else {
+            Duration::from_millis(cfg.read_timeout_ms)
+        };
         let accept = thread::spawn(move || {
             let pool = Pool::new(workers);
             // Connection-level backpressure: the pool's submission channel
@@ -236,7 +257,7 @@ impl HttpServer {
                             let ix = index.clone();
                             let act = Arc::clone(&active);
                             pool.submit(move || {
-                                handle_connection(&srv, ix.as_deref(), conn, cap, false);
+                                handle_connection(&srv, ix.as_deref(), conn, cap, read_timeout, false);
                                 act.fetch_sub(1, Ordering::SeqCst);
                             });
                         } else if overflow2.load(Ordering::SeqCst) < OVERFLOW_HANDLERS_MAX {
@@ -251,7 +272,7 @@ impl HttpServer {
                             // shutdown uses the counter as the fence for
                             // "no overflow thread still holds the server".
                             thread::spawn(move || {
-                                handle_connection(&srv, ix.as_deref(), conn, cap, true);
+                                handle_connection(&srv, ix.as_deref(), conn, cap, read_timeout, true);
                                 drop(srv);
                                 drop(ix);
                                 ovf.fetch_sub(1, Ordering::SeqCst);
@@ -361,11 +382,29 @@ fn read_line_capped(reader: &mut BufReader<TcpStream>, total: &mut usize) -> Res
     String::from_utf8(buf).map_err(|_| anyhow!("non-UTF-8 bytes in request head"))
 }
 
+/// Classify a head-read failure: a socket read timeout means the client
+/// stalled mid-request (a slow-loris peer, or just a dead link), which
+/// gets a typed 408 so it is distinguishable from a malformed request.
+fn head_error(e: anyhow::Error) -> HttpError {
+    if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+        if matches!(
+            ioe.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            return HttpError {
+                status: 408,
+                msg: "timed out reading request head".to_string(),
+            };
+        }
+    }
+    HttpError::bad(e)
+}
+
 fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
     let mut reader =
         BufReader::new(stream.try_clone().map_err(|e| HttpError::bad(format!("{e}")))?);
     let mut total = 0usize;
-    let line = read_line_capped(&mut reader, &mut total).map_err(HttpError::bad)?;
+    let line = read_line_capped(&mut reader, &mut total).map_err(head_error)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().ok_or_else(|| HttpError::bad("empty request line"))?.to_string();
     let path =
@@ -377,7 +416,7 @@ fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
 
     let mut headers = Vec::new();
     loop {
-        let line = read_line_capped(&mut reader, &mut total).map_err(HttpError::bad)?;
+        let line = read_line_capped(&mut reader, &mut total).map_err(head_error)?;
         let trimmed = line.trim_end_matches(['\r', '\n']);
         if trimmed.is_empty() {
             break;
@@ -415,9 +454,16 @@ fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
         }
     }
     let mut body = vec![0u8; content_length];
-    reader
-        .read_exact(&mut body)
-        .map_err(|e| HttpError::bad(format!("reading request body: {e}")))?;
+    reader.read_exact(&mut body).map_err(|e| {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            HttpError { status: 408, msg: "timed out reading request body".to_string() }
+        } else {
+            HttpError::bad(format!("reading request body: {e}"))
+        }
+    })?;
     Ok(HttpRequest { method, path, headers, body })
 }
 
@@ -431,13 +477,14 @@ fn handle_connection(
     index: Option<&IndexServer>,
     mut stream: TcpStream,
     cap: usize,
+    read_timeout: Duration,
     overflow: bool,
 ) {
     // the listener is non-blocking for the stop-flag poll; accepted
     // sockets must not inherit that (they do on some BSDs)
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(read_timeout));
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let req = match read_request(&stream) {
         Ok(r) => r,
@@ -477,7 +524,7 @@ fn handle_connection(
         },
         "/v1/stats" => match method {
             "GET" => {
-                let _ = respond(&mut stream, 200, "OK", &stats_json(server).to_json());
+                let _ = respond(&mut stream, 200, "OK", &stats_json(server, index).to_json());
             }
             _ => {
                 let _ = respond_method_not_allowed(&mut stream, method, "GET");
@@ -1052,9 +1099,9 @@ fn completion_json(c: &Completion, done_marker: bool) -> Value {
     json::obj(fields)
 }
 
-fn stats_json(server: &Server) -> Value {
+fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
     let s: ServerStats = server.stats();
-    json::obj(vec![
+    let mut fields = vec![
         ("completions", json::num(s.completions as f64)),
         ("tokens_generated", json::num(s.tokens_generated as f64)),
         ("prefill_tokens", json::num(s.prefill_tokens as f64)),
@@ -1075,7 +1122,18 @@ fn stats_json(server: &Server) -> Value {
         ("p50_latency_secs", json::num(s.p50_latency())),
         ("p95_latency_secs", json::num(s.p95_latency())),
         ("wall_secs", json::num(s.wall_secs)),
-    ])
+    ];
+    if let Some(ix) = index {
+        let is = ix.stats();
+        fields.push(("index_durable", Value::Bool(is.durable)));
+        if let Some(r) = is.recovered_rows {
+            fields.push(("recovered_rows", json::num(r as f64)));
+        }
+        if let Some(d) = is.dropped_records {
+            fields.push(("dropped_records", json::num(d as f64)));
+        }
+    }
+    json::obj(fields)
 }
 
 fn respond_admit_error(stream: &mut TcpStream, e: &AdmitError) -> std::io::Result<()> {
@@ -1120,13 +1178,27 @@ fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Res
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
         507 => "Insufficient Storage",
         _ => "Internal Server Error",
     };
-    respond(stream, status, reason, &json::obj(vec![("error", json::s(msg))]).to_json())
+    // 429/503 are transient refusals: advertise a retry hint so clients
+    // (including this module's own test client) back off instead of
+    // hammering the admission queue.
+    let extra: &[(&str, &str)] = match status {
+        429 | 503 => &[("Retry-After", "1")],
+        _ => &[],
+    };
+    respond_with_headers(
+        stream,
+        status,
+        reason,
+        extra,
+        &json::obj(vec![("error", json::s(msg))]).to_json(),
+    )
 }
 
 /// 405 with the RFC-9110-required `Allow:` header and the same
@@ -1207,6 +1279,48 @@ pub fn http_request(
     stream.write_all(req.as_bytes()).context("writing request")?;
     stream.flush().ok();
     read_response(&stream)
+}
+
+/// [`http_request`] with bounded retry-with-backoff on transient refusals
+/// (429/503) and transport errors. The delay doubles from a 25 ms base,
+/// is capped by the server's `Retry-After` hint (when present; 500 ms
+/// otherwise), and carries a small deterministic jitter so lockstep
+/// clients in a loopback test don't re-collide. After `attempts` tries
+/// the last refusal is returned as-is — callers still see the real
+/// status — and only a transport error that never produced a response
+/// is surfaced as `Err`.
+pub fn http_request_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    attempts: usize,
+) -> Result<HttpResponse> {
+    let attempts = attempts.max(1);
+    let mut last_err = None;
+    for attempt in 0..attempts {
+        match http_request(addr, method, path, body) {
+            Ok(resp) => {
+                if !matches!(resp.status, 429 | 503) || attempt + 1 == attempts {
+                    return Ok(resp);
+                }
+                // honor the server's hint, but never sleep a whole
+                // advertised second inside a loopback test
+                let cap_ms = header(&resp.headers, "retry-after")
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .map(|secs| (secs * 1000).min(1000))
+                    .unwrap_or(500);
+                let backoff = 25u64.saturating_mul(1 << attempt.min(5));
+                let jitter = (attempt as u64 * 37) % 29;
+                thread::sleep(Duration::from_millis(backoff.min(cap_ms) + jitter));
+            }
+            Err(e) => {
+                last_err = Some(e);
+                thread::sleep(Duration::from_millis(25 + (attempt as u64 * 37) % 29));
+            }
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow!("retry budget of {attempts} attempts exhausted")))
 }
 
 /// Parse one HTTP response off `stream` (shared by [`http_request`] and

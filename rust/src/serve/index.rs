@@ -22,7 +22,8 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::index::{CollectionInfo, IndexConfig, IndexError, SearchHit, VectorStore};
+use crate::index::durability::{DurabilityConfig, DurableStore, RecoveryReport};
+use crate::index::{CollectionInfo, IndexConfig, IndexError, SearchHit};
 use crate::model::{Manifest, ModelParams};
 use crate::runtime::native::{NativeModel, PackedLayers};
 
@@ -83,6 +84,14 @@ pub struct IndexServerStats {
     /// Total scan payload in bytes (codes + rescales — the budgeted
     /// quantity).
     pub code_bytes: usize,
+    /// True when adds are WAL-logged to a data dir (`--data-dir`).
+    pub durable: bool,
+    /// Rows restored at startup (snapshot + WAL replay); `None` on
+    /// ephemeral servers — `/v1/stats` omits the field.
+    pub recovered_rows: Option<usize>,
+    /// WAL records dropped at startup to corruption or sequence gaps;
+    /// `None` on ephemeral servers.
+    pub dropped_records: Option<usize>,
 }
 
 /// Thread-safe serving handle over a [`VectorStore`] plus an optional
@@ -91,43 +100,58 @@ pub struct IndexServerStats {
 /// model.
 pub struct IndexServer {
     backend: Option<EmbedBackend>,
-    store: Mutex<VectorStore>,
+    store: Mutex<DurableStore>,
     embeds: AtomicUsize,
     rows_added: AtomicUsize,
     queries: AtomicUsize,
 }
 
 impl IndexServer {
-    /// Vector-only index server (no embedding model): add and query take
-    /// caller-supplied vectors; `/v1/embed` refuses.
-    pub fn new(cfg: IndexConfig) -> Result<IndexServer, IndexError> {
-        Ok(IndexServer {
-            backend: None,
-            store: Mutex::new(VectorStore::new(cfg)?),
+    fn from_parts(backend: Option<EmbedBackend>, store: DurableStore) -> IndexServer {
+        IndexServer {
+            backend,
+            store: Mutex::new(store),
             embeds: AtomicUsize::new(0),
             rows_added: AtomicUsize::new(0),
             queries: AtomicUsize::new(0),
-        })
+        }
+    }
+
+    /// Vector-only index server (no embedding model): add and query take
+    /// caller-supplied vectors; `/v1/embed` refuses. Ephemeral — restart
+    /// loses the store (see [`IndexServer::open_durable`]).
+    pub fn new(cfg: IndexConfig) -> Result<IndexServer, IndexError> {
+        Ok(IndexServer::from_parts(None, DurableStore::ephemeral(cfg)?))
+    }
+
+    /// Vector-only index server persisting to `dcfg.data_dir`: recovery
+    /// runs before the server accepts traffic (snapshot load + WAL
+    /// replay — see [`crate::index::durability`]), and every
+    /// acknowledged add is WAL-logged first.
+    pub fn open_durable(
+        cfg: IndexConfig,
+        dcfg: DurabilityConfig,
+    ) -> Result<IndexServer, IndexError> {
+        Ok(IndexServer::from_parts(None, DurableStore::open(cfg, dcfg)?))
     }
 
     /// Index server with an embedding backend: text/token requests embed
     /// through `manifest` + `params` (+ `packed` codes when supplied —
-    /// the zero-dequant serving path).
+    /// the zero-dequant serving path). With `durability`, the store is
+    /// recovered from and persisted to the data dir.
     pub fn with_embedder(
         cfg: IndexConfig,
+        durability: Option<DurabilityConfig>,
         manifest: Manifest,
         params: ModelParams,
         packed: Option<PackedLayers>,
     ) -> Result<IndexServer> {
         let backend = EmbedBackend::new(manifest, params, packed)?;
-        let store = VectorStore::new(cfg)?;
-        Ok(IndexServer {
-            backend: Some(backend),
-            store: Mutex::new(store),
-            embeds: AtomicUsize::new(0),
-            rows_added: AtomicUsize::new(0),
-            queries: AtomicUsize::new(0),
-        })
+        let store = match durability {
+            Some(dcfg) => DurableStore::open(cfg, dcfg)?,
+            None => DurableStore::ephemeral(cfg)?,
+        };
+        Ok(IndexServer::from_parts(Some(backend), store))
     }
 
     /// Embedding dimension, when an embedding backend is attached.
@@ -165,7 +189,9 @@ impl IndexServer {
 
     /// Append rows to a collection (created on first use): `vecs` is
     /// row-major with `d` columns. Returns `(first_id, rows_added)`.
-    /// See [`VectorStore::add`] for the budget-policy admission check.
+    /// See [`crate::index::VectorStore::add`] for the budget-policy
+    /// admission check. On a durable server the add is WAL-logged
+    /// before this returns (fsync per the configured policy).
     pub fn add(
         &self,
         name: &str,
@@ -175,6 +201,17 @@ impl IndexServer {
         let out = self.store.lock().unwrap().add(name, vecs, d, 0)?;
         self.rows_added.fetch_add(out.1, Ordering::Relaxed);
         Ok(out)
+    }
+
+    /// Seal the current store into a snapshot segment and truncate the
+    /// WAL (no-op on ephemeral servers). Exposed for orderly shutdown.
+    pub fn snapshot_now(&self) -> Result<(), IndexError> {
+        self.store.lock().unwrap().snapshot_now()
+    }
+
+    /// Startup recovery outcome; `None` on ephemeral servers.
+    pub fn recovery(&self) -> Option<RecoveryReport> {
+        self.store.lock().unwrap().recovery()
     }
 
     /// Two-phase top-k query against one collection (see
@@ -193,12 +230,15 @@ impl IndexServer {
 
     /// Per-collection accounting snapshot, name order.
     pub fn collections(&self) -> Vec<CollectionInfo> {
-        self.store.lock().unwrap().infos()
+        self.store.lock().unwrap().store().infos()
     }
 
-    /// Aggregate serving counters + store accounting.
+    /// Aggregate serving counters + store accounting (+ the recovery
+    /// outcome on durable servers).
     pub fn stats(&self) -> IndexServerStats {
-        let store = self.store.lock().unwrap();
+        let durable = self.store.lock().unwrap();
+        let recovery = durable.recovery();
+        let store = durable.store();
         IndexServerStats {
             embeds: self.embeds.load(Ordering::Relaxed),
             rows_added: self.rows_added.load(Ordering::Relaxed),
@@ -206,6 +246,9 @@ impl IndexServer {
             collections: store.len(),
             rows: store.rows(),
             code_bytes: store.code_bytes(),
+            durable: durable.is_durable(),
+            recovered_rows: recovery.map(|r| r.recovered_rows()),
+            dropped_records: recovery.map(|r| r.dropped_records),
         }
     }
 }
@@ -230,6 +273,7 @@ mod tests {
         .unwrap();
         IndexServer::with_embedder(
             IndexConfig::default(),
+            None,
             manifest,
             params,
             Some(packed),

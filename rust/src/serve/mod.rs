@@ -364,6 +364,20 @@ struct Shared {
     /// Live stats snapshot, refreshed by the batcher once per round so
     /// `/v1/stats` can answer while generation is in flight.
     live: Mutex<ServerStats>,
+    /// Test hook ([`Server::inject_batcher_panic`]): when set, the
+    /// batcher panics at the top of its next scheduling round, which is
+    /// how the panic-containment regression tests simulate a bug in
+    /// model code without depending on one.
+    panic_inject: AtomicBool,
+}
+
+/// Read a mutex even when the batcher thread poisoned it by panicking
+/// mid-round: every value behind these locks (queue, flags, stats
+/// snapshot) is valid at any intermediate state, and refusing to read
+/// one would turn a contained batcher death into a panic in the HTTP
+/// worker that happened to probe `/v1/stats` next.
+fn unpoison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Server handle.
@@ -532,18 +546,36 @@ impl Server {
             max_queue: cfg.max_queue,
             vocab: AtomicUsize::new(0),
             live: Mutex::new(ServerStats::default()),
+            panic_inject: AtomicBool::new(false),
         });
         let s2 = Arc::clone(&shared);
         let worker = thread::spawn(move || {
-            let result = match factory() {
-                Ok(mrt) => batcher_loop(&s2, mrt, params, &cfg, resolved),
-                Err(e) => Err(e),
-            };
+            // A panicking batcher round (a bug in model code, or the test
+            // hook) must not skip the dead-marking below — that would
+            // strand every queued submitter on a receiver that never
+            // disconnects. Contain the unwind here: in-flight requests
+            // drop their sinks as the loop's locals unwind (receivers
+            // disconnect -> the HTTP layer answers a typed 500), and the
+            // panic becomes the error `Server::shutdown` reports.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match factory() {
+                    Ok(mrt) => batcher_loop(&s2, mrt, params, &cfg, resolved),
+                    Err(e) => Err(e),
+                }
+            }))
+            .unwrap_or_else(|payload| {
+                let what = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                Err(anyhow::anyhow!("batcher panicked: {what}"))
+            });
             // Dead first, then drain: submit checks the flag under the
             // queue lock, so a racing request either sees the flag or its
             // queued entry is dropped here and the receiver disconnects.
             s2.dead.store(true, Ordering::SeqCst);
-            s2.queue.lock().unwrap().clear();
+            unpoison(&s2.queue).clear();
             result
         });
         Server { shared, worker: Some(worker), next_id: Mutex::new(1) }
@@ -602,7 +634,7 @@ impl Server {
     }
 
     fn not_accepting(&self) -> bool {
-        self.shared.dead.load(Ordering::SeqCst) || *self.shared.shutdown.lock().unwrap()
+        self.shared.dead.load(Ordering::SeqCst) || *unpoison(&self.shared.shutdown)
     }
 
     /// Shared admission path: validate, bound the queue, enqueue.
@@ -620,8 +652,8 @@ impl Server {
             }
         }
         {
-            let mut q = self.shared.queue.lock().unwrap();
-            if self.shared.dead.load(Ordering::SeqCst) || *self.shared.shutdown.lock().unwrap() {
+            let mut q = unpoison(&self.shared.queue);
+            if self.shared.dead.load(Ordering::SeqCst) || *unpoison(&self.shared.shutdown) {
                 return Err(AdmitError::NotAccepting);
             }
             if self.shared.max_queue > 0 && q.len() >= self.shared.max_queue {
@@ -735,19 +767,30 @@ impl Server {
     /// [`LIVE_LATENCY_WINDOW`] completions, so its percentiles read
     /// recent traffic; the shutdown stats keep the full history.
     pub fn stats(&self) -> ServerStats {
-        self.shared.live.lock().unwrap().clone()
+        unpoison(&self.shared.live).clone()
     }
 
     /// Requests admitted but not yet mapped onto a KV lane.
     pub fn queue_depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        unpoison(&self.shared.queue).len()
+    }
+
+    /// Test hook: make the batcher panic at the top of its next
+    /// scheduling round, simulating a bug in model code. The panic is
+    /// contained (see `start_impl`): the server marks itself dead,
+    /// in-flight receivers disconnect, and [`Server::shutdown`] returns
+    /// the panic as an error.
+    #[doc(hidden)]
+    pub fn inject_batcher_panic(&self) {
+        self.shared.panic_inject.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
     }
 
     /// Stop the batcher (after draining in-flight and queued work) and
     /// collect stats.
     pub fn shutdown(mut self) -> Result<ServerStats> {
         {
-            let mut s = self.shared.shutdown.lock().unwrap();
+            let mut s = unpoison(&self.shared.shutdown);
             *s = true;
         }
         self.shared.cv.notify_all();
@@ -760,7 +803,7 @@ impl Drop for Server {
     fn drop(&mut self) {
         if self.worker.is_some() {
             {
-                let mut s = self.shared.shutdown.lock().unwrap();
+                let mut s = unpoison(&self.shared.shutdown);
                 *s = true;
             }
             self.shared.cv.notify_all();
@@ -872,6 +915,11 @@ fn batcher_loop(
     let start = Instant::now();
 
     loop {
+        // ---- test hook: simulate a bug in model code killing a round
+        if shared.panic_inject.load(Ordering::SeqCst) {
+            panic!("injected batcher panic (test hook)");
+        }
+
         // ---- free lanes whose requests were cancelled since last round
         // (dropped HTTP connections land here): reset the KV lane so the
         // admission pass below can hand it to the next request
@@ -923,7 +971,7 @@ fn batcher_loop(
             publish_stats(shared, &mut stats, start);
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if !q.is_empty() {
+                if !q.is_empty() || shared.panic_inject.load(Ordering::SeqCst) {
                     break;
                 }
                 if *shared.shutdown.lock().unwrap() {
@@ -1196,6 +1244,42 @@ mod tests {
             assert!(rx.recv().is_err(), "receiver must disconnect, not hang");
         }
         assert!(server.shutdown().is_err());
+    }
+
+    #[test]
+    fn batcher_panic_is_contained_not_a_hang() {
+        let (manifest, params, packed) = packed_fixture("serve-panic", 8, 1, 37);
+        let server = Server::start_native_packed(manifest, params, packed).unwrap();
+        // a long generation pins the lane so the panic hits mid-stream
+        let (_, rx) = server.submit(vec![1, 2], 1_000_000, 0.0, 0).unwrap();
+        let mut waited = 0;
+        while server.stats().tokens_generated == 0 && waited < 1000 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            waited += 1;
+        }
+        assert!(server.stats().tokens_generated > 0, "generation never started");
+        server.inject_batcher_panic();
+        // the in-flight receiver disconnects instead of hanging forever
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).is_err(),
+            "in-flight receiver must disconnect after the panic"
+        );
+        let mut waited = 0;
+        while server.is_running() && waited < 1000 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            waited += 1;
+        }
+        assert!(!server.is_running(), "panicked batcher must mark itself dead");
+        // post-panic, submitters get a typed refusal and the observability
+        // surface keeps answering even if a lock was poisoned mid-round
+        assert!(matches!(server.submit(vec![1], 3, 0.0, 0), Err(AdmitError::NotAccepting)));
+        let _ = server.stats();
+        let _ = server.queue_depth();
+        let err = server.shutdown().expect_err("shutdown must surface the panic");
+        assert!(
+            err.to_string().contains("panic"),
+            "shutdown error should name the panic, got: {err}"
+        );
     }
 
     #[test]

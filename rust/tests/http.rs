@@ -16,10 +16,18 @@
 //! The retrieval wall (ISSUE 5) rides the same loopback setup:
 //! (f) embed → add → query round-trips over the wire, self-retrieval
 //!     included, and `GET /v1/collections` reports real accounting;
-//! (g) EVERY error path — 400/404/405/413/429/503, generate and index
-//!     endpoints alike — answers the one JSON shape `{"error": "..."}`,
-//!     and 405 responses carry an `Allow:` header;
+//! (g) EVERY error path — 400/404/405/408/413/429/503, generate and
+//!     index endpoints alike — answers the one JSON shape
+//!     `{"error": "..."}`, and 405 responses carry an `Allow:` header;
 //! (h) servers bound without an index answer 404 on the index paths.
+//!
+//! The robustness wall (ISSUE 6) extends it:
+//! (i) a slow-loris client that stalls mid-head gets a typed 408, not a
+//!     worker pinned forever;
+//! (j) 429 and 503 responses carry `Retry-After`, and the bounded
+//!     `http_request_retry` client honours it;
+//! (k) a batcher panic fails in-flight requests with a typed error and
+//!     flips `/healthz` unhealthy — submitters never hang.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -28,7 +36,7 @@ use std::time::Duration;
 
 use raana::json;
 use raana::model::synthetic_manifest;
-use raana::net::{http_request, HttpConfig, HttpServer};
+use raana::net::{http_request, http_request_retry, HttpConfig, HttpServer};
 use raana::quant::{LayerCalib, TrickConfig};
 use raana::runtime::{native_init, PackedLayers};
 use raana::serve::{ServeConfig, Server};
@@ -55,7 +63,7 @@ fn bind_uncapped(server: &Arc<Server>, workers: usize) -> HttpServer {
     HttpServer::bind_with(
         Arc::clone(server),
         "127.0.0.1:0",
-        HttpConfig { workers, max_new_tokens_cap: usize::MAX },
+        HttpConfig { workers, max_new_tokens_cap: usize::MAX, ..Default::default() },
     )
     .unwrap()
 }
@@ -206,6 +214,7 @@ fn full_admission_queue_answers_429_and_does_not_queue() {
             .unwrap();
     assert_eq!(resp.status, 429, "body: {:?}", resp.body_str());
     assert!(resp.body_str().unwrap().contains("queue"), "{:?}", resp.body_str());
+    assert_eq!(header_of(&resp, "retry-after"), Some("1"), "429 must carry Retry-After");
     // ...and NOT silently queued
     assert_eq!(server.queue_depth(), 1, "rejected request must not enter the queue");
 
@@ -307,25 +316,112 @@ fn busy_worker_pool_refuses_generate_but_keeps_cheap_endpoints() {
         http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[4], 2, false)))
             .unwrap();
     assert_eq!(refused.status, 503, "pinned pool must refuse generation");
+    assert_eq!(header_of(&refused, "retry-after"), Some("1"), "503 must carry Retry-After");
     let health = http_request(&addr, "GET", "/healthz", None).unwrap();
     assert_eq!(health.status, 200, "liveness must survive a pinned pool");
     let stats = http_request(&addr, "GET", "/v1/stats", None).unwrap();
     assert_eq!(stats.status, 200, "stats must survive a pinned pool");
 
     // freeing the worker restores generation (detection happens at the
-    // next chunk write, so poll)
+    // next chunk write, so the retry client absorbs the 503 window)
     drop(conn);
-    let mut ok = false;
+    let resp =
+        http_request_retry(&addr, "POST", "/v1/generate", Some(&generate_body(&[5], 1, false)), 60)
+            .unwrap();
+    assert_eq!(resp.status, 200, "worker never came back after client disconnect");
+    shutdown_all(http, server);
+}
+
+// --------------------------------------------- (i) slow-loris typed 408
+
+#[test]
+fn slow_loris_client_gets_typed_408() {
+    let server = packed_server("http-loris", 8, 1, ServeConfig::default());
+    let http = HttpServer::bind_with(
+        Arc::clone(&server),
+        "127.0.0.1:0",
+        HttpConfig { workers: 2, max_new_tokens_cap: usize::MAX, read_timeout_ms: 200 },
+    )
+    .unwrap();
+    let addr = http.local_addr().to_string();
+
+    // stall mid-request-line: the server must not wait forever
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.write_all(b"POST /v1/gen").unwrap();
+    let resp = raana::net::read_response(&conn).unwrap();
+    assert_eq!(resp.status, 408, "stalled head must answer 408");
+    let msg = assert_error_shape(&resp);
+    assert!(msg.contains("timed out"), "{msg}");
+
+    // stall mid-body: head complete, Content-Length never delivered
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.write_all(b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 64\r\n\r\n{\"pro")
+        .unwrap();
+    let resp = raana::net::read_response(&conn).unwrap();
+    assert_eq!(resp.status, 408, "stalled body must answer 408");
+    assert_error_shape(&resp);
+
+    // a prompt client is unaffected by the short timeout
+    let health = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200);
+    shutdown_all(http, server);
+}
+
+// ------------------------------- (k) batcher panic: typed failure, not hang
+
+#[test]
+fn batcher_panic_flips_health_and_fails_requests_typed() {
+    let server = packed_server("http-panic", 8, 2, ServeConfig::default());
+    let http = bind_uncapped(&server, 4);
+    let addr = http.local_addr().to_string();
+
+    // an in-flight non-streaming request: nothing is written until
+    // completion, so the typed 500 is observable after the panic
+    let conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[1, 2], 1_000_000, false);
+    write!(
+        &conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    wait_generating(&server, 1);
+
+    server.inject_batcher_panic();
+
+    // the in-flight request must fail with the typed abort — never hang
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let resp = raana::net::read_response(&conn).unwrap();
+    assert_eq!(resp.status, 500, "body: {:?}", resp.body_str());
+    let msg = assert_error_shape(&resp);
+    assert!(msg.contains("aborted"), "{msg}");
+
+    // /healthz must flip unhealthy once the worker has unwound
+    let mut unhealthy = false;
     for _ in 0..600 {
-        let r = http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[5], 1, false)));
-        if matches!(r, Ok(ref resp) if resp.status == 200) {
-            ok = true;
+        let h = http_request(&addr, "GET", "/healthz", None).unwrap();
+        if h.json().unwrap().get("running").and_then(|b| b.as_bool()) == Some(false) {
+            unhealthy = true;
             break;
         }
-        std::thread::sleep(Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(5));
     }
-    assert!(ok, "worker never came back after client disconnect");
-    shutdown_all(http, server);
+    assert!(unhealthy, "healthz must report running:false after a batcher panic");
+
+    // new generate requests are refused with a typed 503, not queued
+    let refused =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[3], 2, false)))
+            .unwrap();
+    assert_eq!(refused.status, 503, "body: {:?}", refused.body_str());
+    assert_error_shape(&refused);
+
+    http.shutdown().unwrap();
+    match Arc::try_unwrap(server) {
+        Ok(s) => {
+            s.shutdown().expect_err("shutdown must surface the batcher panic");
+        }
+        Err(_) => panic!("server still referenced after HTTP shutdown"),
+    }
 }
 
 #[test]
@@ -334,7 +430,7 @@ fn max_new_tokens_is_clamped_server_side() {
     let http = HttpServer::bind_with(
         Arc::clone(&server),
         "127.0.0.1:0",
-        HttpConfig { workers: 2, max_new_tokens_cap: 5 },
+        HttpConfig { workers: 2, max_new_tokens_cap: 5, ..Default::default() },
     )
     .unwrap();
     let addr = http.local_addr().to_string();
@@ -535,7 +631,7 @@ fn index_fixture(seed: u64) -> Arc<IndexServer> {
     )
     .unwrap();
     Arc::new(
-        IndexServer::with_embedder(IndexConfig::default(), manifest, params, Some(packed))
+        IndexServer::with_embedder(IndexConfig::default(), None, manifest, params, Some(packed))
             .unwrap(),
     )
 }
@@ -545,7 +641,7 @@ fn bind_indexed(server: &Arc<Server>, index: &Arc<IndexServer>, workers: usize) 
         Arc::clone(server),
         Some(Arc::clone(index)),
         "127.0.0.1:0",
-        HttpConfig { workers, max_new_tokens_cap: usize::MAX },
+        HttpConfig { workers, max_new_tokens_cap: usize::MAX, ..Default::default() },
     )
     .unwrap()
 }
