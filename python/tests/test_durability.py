@@ -183,7 +183,13 @@ def recover(files):
     per-file stop-at-first-corruption WAL parse, seq-sorted merge, and a
     contiguous replay from the snapshot's next_seq. Replay targets must
     already exist in the snapshot (the fixture contract — fresh
-    collections would need the Rust sign-sampling RNG)."""
+    collections would need the Rust sign-sampling RNG).
+
+    The Rust engine additionally RESEALS after a recovery that dropped,
+    skipped, or rejected anything (snapshot + delete all WALs) before
+    accepting new writes; that is post-recovery engine behavior, not
+    part of the recovery function mirrored here — the recovered state
+    and report this returns are unaffected by it."""
     report = {"snapshot_rows": 0, "replayed_rows": 0, "dropped_records": 0,
               "duplicate_records": 0, "corrupt_snapshots": 0}
     snaps = sorted((n for n in files if snapshot_seq(n) is not None),

@@ -11,6 +11,14 @@
 //!   reach the log), then appends one WAL record stamped with the next
 //!   store-global sequence number, then acknowledges. Under
 //!   [`FsyncPolicy::Always`] the append is flushed before the ack.
+//!   A **failed append** consumed a sequence number without logging a
+//!   record — left alone that gap would make recovery drop every later
+//!   acked record — so the engine immediately reseals by snapshot: if
+//!   the snapshot lands, the rows are durable and the add is
+//!   acknowledged normally; if it also fails, the store flips
+//!   **read-only** ([`IndexError::ReadOnly`], HTTP 503) so no further
+//!   ack can be issued that recovery would silently void, and a client
+//!   retry is refused rather than applied twice.
 //! * **Snapshot path** — after every `snapshot_every` acknowledged
 //!   records (and on [`DurableStore::snapshot_now`]) the whole store is
 //!   serialized to a versioned segment file (atomic temp + fsync +
@@ -26,6 +34,16 @@
 //!   — a lost record invalidates everything that depended on coming
 //!   after it. The outcome is surfaced as [`RecoveryReport`]
 //!   (`/v1/stats` reports `recovered_rows` / `dropped_records`).
+//!   When recovery dropped, skipped, or rejected *anything* (torn
+//!   tail, checksum failure, sequence gap, stale duplicate, corrupt
+//!   snapshot), the damaged bytes are still on disk — appending after
+//!   a corrupt tail would make every new record unreadable at the next
+//!   recovery, and reusing post-gap sequence numbers could resurrect
+//!   stale records over acknowledged ones. So [`DurableStore::open_with`]
+//!   **reseals before accepting writes**: one immediate snapshot seals
+//!   the recovered state, deletes every WAL file (corrupt tails and
+//!   stale records included), and prunes undecodable snapshots. A
+//!   second crash right after restart therefore recovers cleanly.
 //!
 //! Because replay re-runs the deterministic quantization pipeline and
 //! snapshots store the exact in-memory layout, a recovered store equals
@@ -182,6 +200,10 @@ struct Engine {
     next_seq: u64,
     records_since_snapshot: usize,
     report: RecoveryReport,
+    /// Set when a WAL append failed *and* the reseal snapshot failed:
+    /// the store can no longer honor WAL-before-ack, so adds are
+    /// refused ([`IndexError::ReadOnly`]) until restart.
+    read_only: bool,
 }
 
 /// A [`VectorStore`] with optional crash-safety. All read paths and
@@ -215,7 +237,7 @@ impl DurableStore {
         mut io: Box<dyn Io>,
     ) -> Result<DurableStore, IndexError> {
         let (store, next_seq, report) = recover(io.as_mut(), &dcfg.data_dir, cfg)?;
-        Ok(DurableStore {
+        let mut opened = DurableStore {
             store,
             engine: Some(Engine {
                 io,
@@ -225,8 +247,24 @@ impl DurableStore {
                 next_seq,
                 records_since_snapshot: 0,
                 report,
+                read_only: false,
             }),
-        })
+        };
+        // Reseal before accepting writes whenever recovery found damage:
+        // a torn/corrupt WAL tail would swallow every record appended
+        // after it (stop-at-first-corruption), and records dropped
+        // beyond a sequence gap would collide with the reused sequence
+        // numbers of new acks. One snapshot seals the recovered state
+        // and deletes all of it. Failing the reseal fails the open —
+        // accepting writes over known-damaged logs is the one thing the
+        // durability contract cannot do.
+        let damaged = report.dropped_records > 0
+            || report.duplicate_records > 0
+            || report.corrupt_snapshots > 0;
+        if damaged {
+            opened.snapshot_now()?;
+        }
+        Ok(opened)
     }
 
     /// Borrow the underlying store (all read paths).
@@ -237,6 +275,14 @@ impl DurableStore {
     /// True when adds are logged to disk.
     pub fn is_durable(&self) -> bool {
         self.engine.is_some()
+    }
+
+    /// True when a durability failure flipped the store read-only
+    /// (a WAL append and its reseal snapshot both failed): adds are
+    /// refused until restart; reads keep working. Always `false` for
+    /// ephemeral stores.
+    pub fn is_read_only(&self) -> bool {
+        self.engine.as_ref().is_some_and(|e| e.read_only)
     }
 
     /// The recovery outcome of [`DurableStore::open`]; `None` for
@@ -253,10 +299,16 @@ impl DurableStore {
     /// Durable add: apply in memory, then append one WAL record, then
     /// acknowledge (see module docs for the ordering argument). The
     /// in-memory apply alone decides admission — a refused add writes
-    /// nothing. A WAL append failure is returned as
-    /// [`IndexError::Io`]; the in-memory rows stay (they are valid,
-    /// merely not yet durable) and the sequence number is still
-    /// consumed so a later snapshot reseals them.
+    /// nothing. A WAL append failure consumed a sequence number without
+    /// a record — a gap that would void every later ack at recovery —
+    /// so the engine immediately reseals by snapshot: on success the
+    /// add is durable (sealed, not logged) and acknowledged normally;
+    /// if the snapshot also fails the store flips read-only and the add
+    /// returns [`IndexError::ReadOnly`] (the rows stay in memory but
+    /// are not durable, and no later add will be accepted that recovery
+    /// would silently drop). A failed *cadence* snapshot is non-fatal:
+    /// the add is already durable in the WAL, so the snapshot is simply
+    /// retried on the next add.
     pub fn add(
         &mut self,
         name: &str,
@@ -264,26 +316,61 @@ impl DurableStore {
         d: usize,
         threads: usize,
     ) -> Result<(usize, usize), IndexError> {
+        if let Some(engine) = &self.engine {
+            if engine.read_only {
+                return Err(IndexError::ReadOnly(
+                    "a WAL append and its reseal snapshot both failed; \
+                     the store is read-only until restart"
+                        .into(),
+                ));
+            }
+        }
         let out = self.store.add(name, vecs, d, threads)?;
-        let Some(engine) = &mut self.engine else {
+        if self.engine.is_none() {
             return Ok(out);
+        }
+        let (append_result, cadence_due) = {
+            let engine = self.engine.as_mut().expect("checked above");
+            let rec = WalRecord {
+                seq: engine.next_seq,
+                name: name.to_string(),
+                dim: d,
+                rows: vecs.to_vec(),
+            };
+            let bytes = encode_record(&rec)?;
+            engine.next_seq += 1;
+            engine.records_since_snapshot += 1;
+            let path = wal_path(&engine.data_dir, name);
+            let res = engine
+                .io
+                .append(&path, &bytes, engine.fsync == FsyncPolicy::Always)
+                .map_err(|e| format!("WAL append to {}: {e}", path.display()));
+            let due = engine.snapshot_every > 0
+                && engine.records_since_snapshot >= engine.snapshot_every;
+            (res, due)
         };
-        let rec = WalRecord {
-            seq: engine.next_seq,
-            name: name.to_string(),
-            dim: d,
-            rows: vecs.to_vec(),
-        };
-        engine.next_seq += 1;
-        engine.records_since_snapshot += 1;
-        let bytes = encode_record(&rec)?;
-        let path = wal_path(&engine.data_dir, name);
-        engine
-            .io
-            .append(&path, &bytes, engine.fsync == FsyncPolicy::Always)
-            .map_err(|e| IndexError::Io(format!("WAL append to {}: {e}", path.display())))?;
-        if engine.snapshot_every > 0 && engine.records_since_snapshot >= engine.snapshot_every {
-            self.snapshot_now()?;
+        if let Err(append_err) = append_result {
+            return match self.snapshot_now() {
+                // the reseal sealed the consumed seq (and these rows):
+                // the add is durable, ack it
+                Ok(()) => Ok(out),
+                Err(snap_err) => {
+                    self.engine.as_mut().expect("checked above").read_only = true;
+                    Err(IndexError::ReadOnly(format!(
+                        "{append_err}; reseal snapshot also failed ({snap_err}); \
+                         rows applied in memory but NOT durable; \
+                         the store is read-only until restart"
+                    )))
+                }
+            };
+        }
+        if cadence_due {
+            // non-fatal: the add is durable in the WAL either way, and a
+            // failed snapshot left the WAL in place (deletion is skipped
+            // on error), so the next add retries the snapshot
+            if let Err(e) = self.snapshot_now() {
+                crate::info!("index snapshot failed (will retry next add): {e}");
+            }
         }
         Ok(out)
     }
@@ -316,9 +403,16 @@ impl DurableStore {
                     .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
             }
         }
-        // keep the new snapshot plus one predecessor
+        // prune: a snapshot with seq > next_seq can only be one recovery
+        // rejected as undecodable (a valid one would have been loaded
+        // and next_seq would sit at or above it) — delete those so they
+        // stop shadowing good snapshots; then keep the new snapshot
+        // plus one predecessor
         let seqs = list_snapshots(engine.io.as_mut(), &engine.data_dir)?;
-        for &old in seqs.iter().skip(2) {
+        let sealed = engine.next_seq;
+        let stale_new = seqs.iter().filter(|&&s| s > sealed);
+        let old_predecessors = seqs.iter().filter(|&&s| s < sealed).skip(1);
+        for &old in stale_new.chain(old_predecessors) {
             let p = snapshot_path(&engine.data_dir, old);
             engine
                 .io
@@ -350,7 +444,7 @@ impl DurableStore {
 
 #[cfg(test)]
 mod tests {
-    use super::super::io::MemIo;
+    use super::super::io::{Fault, FaultIo, MemIo};
     use super::*;
     use crate::index::IndexPolicy;
     use crate::rng::Rng;
@@ -502,6 +596,132 @@ mod tests {
         let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
         assert_eq!(reopened.store().rows(), 0);
         assert_eq!(reopened.recovery().unwrap(), RecoveryReport::default());
+    }
+
+    #[test]
+    fn torn_tail_is_resealed_so_a_second_crash_loses_nothing() {
+        // the double-crash shape from the review: a torn tail must not
+        // leave corrupt bytes that swallow post-restart appends
+        let d = 8usize;
+        let v0 = Rng::new(20).gaussian_vec(d);
+        let v1 = Rng::new(21).gaussian_vec(d);
+        let mut io = MemIo::new();
+        let p = wal_path(Path::new("/idx"), "a");
+        io.append(&p, &encode_record(&WalRecord { seq: 0, name: "a".into(), dim: d, rows: v0.clone() }).unwrap(), false)
+            .unwrap();
+        let torn = encode_record(&WalRecord { seq: 1, name: "a".into(), dim: d, rows: v1.clone() }).unwrap();
+        io.append(&p, &torn[..torn.len() / 2], false).unwrap();
+        // first restart: recovery drops the torn tail and reseals
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        assert_eq!(durable.recovery().unwrap().dropped_records, 1);
+        // post-restart acks land after the reseal, not after torn bytes
+        let v2 = Rng::new(22).gaussian_vec(d);
+        let v3 = Rng::new(23).gaussian_vec(d);
+        durable.add("a", &v2, d, 1).unwrap();
+        durable.add("a", &v3, d, 1).unwrap();
+        // second crash: every ack since the first restart must survive
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.dropped_records, 0, "second recovery must be clean");
+        assert_eq!(rep.recovered_rows(), 3);
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for v in [&v0, &v2, &v3] {
+            fresh.add("a", v, d, 1).unwrap();
+        }
+        assert_bit_identical(reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn gap_reseal_prevents_stale_records_shadowing_reused_seqs() {
+        // review scenario: post-gap records left on disk could replay
+        // under a reused seq instead of the newly acknowledged record —
+        // the reseal must delete them
+        let d = 4usize;
+        let mut io = MemIo::new();
+        let rec = |seq: u64, name: &str, fill: f32| {
+            encode_record(&WalRecord { seq, name: name.into(), dim: d, rows: vec![fill; d] })
+                .unwrap()
+        };
+        io.append(&wal_path(Path::new("/idx"), "a"), &rec(0, "a", 1.0), false).unwrap();
+        // seq 1 lost (gap); seq 2 survives in another, clean WAL file
+        io.append(&wal_path(Path::new("/idx"), "stale"), &rec(2, "stale", 9.0), false).unwrap();
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        assert_eq!(durable.recovery().unwrap().dropped_records, 1);
+        assert_eq!(durable.next_seq(), 1, "resumes at the gap");
+        // new acks reuse seqs 1 and 2; the stale seq-2 record must not
+        // resurrect at the next recovery
+        let v1 = Rng::new(31).gaussian_vec(d);
+        let v2 = Rng::new(32).gaussian_vec(d);
+        durable.add("a", &v1, d, 1).unwrap();
+        durable.add("a", &v2, d, 1).unwrap();
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.dropped_records, 0);
+        assert!(
+            !reopened.store().collections.contains_key("stale"),
+            "the dropped post-gap record must not reappear"
+        );
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        fresh.add("a", &vec![1.0; d], d, 1).unwrap();
+        fresh.add("a", &v1, d, 1).unwrap();
+        fresh.add("a", &v2, d, 1).unwrap();
+        assert_bit_identical(reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn failed_append_reseals_into_a_snapshot_and_still_acks() {
+        // one transient append failure (review: a brief ENOSPC) must not
+        // void later acks via a permanent sequence gap
+        let d = 8usize;
+        let io = FaultIo::new(MemIo::new(), Fault::FailWrite { nth: 3 });
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..4u64 {
+            let v = Rng::new(40 + seed).gaussian_vec(d);
+            // add 3's append fails and is resealed by snapshot — the add
+            // is durable either way, so every add must ack
+            durable.add("a", &v, d, 1).unwrap();
+            fresh.add("a", &v, d, 1).unwrap();
+        }
+        assert!(!durable.is_read_only());
+        assert_eq!(durable.next_seq(), 4);
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.dropped_records, 0, "no gap: the reseal covered the consumed seq");
+        assert_eq!(rep.recovered_rows(), 4);
+        assert_bit_identical(reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn persistent_write_failure_flips_read_only_and_refuses_retries() {
+        let d = 8usize;
+        // write 1 (add 1's append) succeeds; everything after fails —
+        // add 2's append fails AND its reseal snapshot fails
+        let io = FaultIo::new(MemIo::new(), Fault::FailWritesFrom { nth: 2 });
+        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let v0 = Rng::new(50).gaussian_vec(d);
+        durable.add("a", &v0, d, 1).unwrap();
+        let err = durable.add("a", &Rng::new(51).gaussian_vec(d), d, 1).unwrap_err();
+        assert!(matches!(err, IndexError::ReadOnly(_)), "got {err}");
+        assert!(durable.is_read_only());
+        // a client retry is refused before touching the store — no
+        // duplicate rows, no ack that recovery would void
+        let rows_before = durable.store().rows();
+        let err = durable.add("a", &Rng::new(51).gaussian_vec(d), d, 1).unwrap_err();
+        assert!(matches!(err, IndexError::ReadOnly(_)));
+        assert_eq!(durable.store().rows(), rows_before, "refused before apply");
+        // reads keep working
+        assert_eq!(durable.query("a", &v0, 1, 4, 1).unwrap().len(), 1);
+        // recovery sees exactly the durable prefix (add 1)
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
+        assert_eq!(reopened.recovery().unwrap().recovered_rows(), 1);
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        fresh.add("a", &v0, d, 1).unwrap();
+        assert_bit_identical(reopened.store(), &fresh);
     }
 
     #[test]

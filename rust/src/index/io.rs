@@ -197,6 +197,13 @@ pub enum Fault {
         /// 1-based ordinal of the write to fail.
         nth: usize,
     },
+    /// Every write from the `nth` on fails — a disk that stays broken
+    /// (ENOSPC, pulled volume), the case that must flip the store
+    /// read-only rather than keep acking into a sequence gap.
+    FailWritesFrom {
+        /// 1-based ordinal of the first failing write.
+        nth: usize,
+    },
     /// The `nth` write persists only its first `keep` bytes — a torn
     /// write (power loss mid-append). Later writes succeed normally.
     TornWrite {
@@ -249,6 +256,9 @@ impl<I: Io> FaultIo<I> {
         match self.fault {
             Fault::FailWrite { nth } if nth == self.writes => {
                 Err(io::Error::new(io::ErrorKind::Other, "injected write failure"))
+            }
+            Fault::FailWritesFrom { nth } if nth <= self.writes => {
+                Err(io::Error::new(io::ErrorKind::Other, "injected persistent write failure"))
             }
             Fault::TornWrite { nth, keep } if nth == self.writes => {
                 Ok(Some(bytes[..keep.min(bytes.len())].to_vec()))

@@ -128,6 +128,13 @@ pub enum IndexError {
     /// A durability-layer I/O failure (WAL append, snapshot write,
     /// data-dir listing) — the HTTP layer maps it to 500.
     Io(String),
+    /// The store refused the add because a prior WAL append *and* its
+    /// reseal snapshot both failed: accepting more acks would let
+    /// recovery silently drop them, so writes are refused until
+    /// restart. Reads keep working. The HTTP layer maps it to 503
+    /// (with `Retry-After` — but a retry is refused, never applied
+    /// twice, so there is no duplicate-on-retry hazard).
+    ReadOnly(String),
 }
 
 impl std::fmt::Display for IndexError {
@@ -151,6 +158,9 @@ impl std::fmt::Display for IndexError {
             ),
             IndexError::Shape(msg) => write!(f, "index shape error: {msg}"),
             IndexError::Io(msg) => write!(f, "index durability I/O error: {msg}"),
+            IndexError::ReadOnly(msg) => {
+                write!(f, "index store is read-only after a durability failure: {msg}")
+            }
         }
     }
 }

@@ -25,9 +25,9 @@
 //!   (republished per batcher round) and the KV-cache economics:
 //!   `kv_bits` (32 = dense f32), `kv_bytes_per_lane`, and the lane
 //!   pool's size (`lanes`) and occupancy (`lanes_active`). With an
-//!   index attached, also `index_durable` and — when the store was
-//!   opened from a data dir — the recovery accounting
-//!   `recovered_rows` / `dropped_records`.
+//!   index attached, also `index_durable` / `index_read_only` and —
+//!   when the store was opened from a data dir — the recovery
+//!   accounting `recovered_rows` / `dropped_records`.
 //!
 //! With an [`IndexServer`] attached ([`HttpServer::bind_with_index`]),
 //! the retrieval workload rides the same front-end:
@@ -792,11 +792,16 @@ fn require_index<'a>(
 
 /// Map a typed [`IndexError`] to its transport status: missing
 /// collections are 404, a full byte budget is 507 (the add was refused,
-/// nothing mutated), everything else is a 400-shaped caller error.
+/// nothing mutated), a durability I/O failure is 500, a store flipped
+/// read-only by a durability failure is 503 (the add was refused before
+/// touching the store, so retrying cannot duplicate rows), and
+/// everything else is a 400-shaped caller error.
 fn respond_index_error(stream: &mut TcpStream, e: &IndexError) -> std::io::Result<()> {
     let status = match e {
         IndexError::NoSuchCollection(_) => 404,
         IndexError::BudgetTooSmall { .. } => 507,
+        IndexError::Io(_) => 500,
+        IndexError::ReadOnly(_) => 503,
         _ => 400,
     };
     respond_error(stream, status, &e.to_string())
@@ -1126,6 +1131,7 @@ fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
     if let Some(ix) = index {
         let is = ix.stats();
         fields.push(("index_durable", Value::Bool(is.durable)));
+        fields.push(("index_read_only", Value::Bool(is.read_only)));
         if let Some(r) = is.recovered_rows {
             fields.push(("recovered_rows", json::num(r as f64)));
         }

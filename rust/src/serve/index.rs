@@ -86,6 +86,10 @@ pub struct IndexServerStats {
     pub code_bytes: usize,
     /// True when adds are WAL-logged to a data dir (`--data-dir`).
     pub durable: bool,
+    /// True when a durability failure flipped the store read-only
+    /// (adds refused with 503 until restart); always `false` for
+    /// ephemeral servers.
+    pub read_only: bool,
     /// Rows restored at startup (snapshot + WAL replay); `None` on
     /// ephemeral servers — `/v1/stats` omits the field.
     pub recovered_rows: Option<usize>,
@@ -247,6 +251,7 @@ impl IndexServer {
             rows: store.rows(),
             code_bytes: store.code_bytes(),
             durable: durable.is_durable(),
+            read_only: durable.is_read_only(),
             recovered_rows: recovery.map(|r| r.recovered_rows()),
             dropped_records: recovery.map(|r| r.dropped_records),
         }
