@@ -113,6 +113,30 @@ def gen_decode():
             "data": pack_lsb_first(values, bits),
             "reads": reads,
         })
+    # second case per width, drawn from an independent stream so the base
+    # cases above stay byte-identical: n = 37 ends mid-byte for every
+    # width except 8 (where alignment is structural), and the reads stop
+    # and start inside the bulk body so the width-specialized decoders
+    # can't silently change tail handling
+    rng_tail = random.Random(0xDEC1)
+    for bits in range(1, 9):
+        n = 37
+        values = [rng_tail.randrange(1 << bits) for _ in range(n)]
+        reads = []
+        # whole range, truncated tail, mid-range stopping short of the
+        # end, short unaligned window, two-element tail
+        for start, ln in ((0, n), (0, n - 3), (5, n - 7), (2, 9), (n - 2, 2)):
+            reads.append({
+                "start": start,
+                "len": ln,
+                "expect": values[start:start + ln],
+            })
+        cases.append({
+            "bits": bits,
+            "values": values,
+            "data": pack_lsb_first(values, bits),
+            "reads": reads,
+        })
     return {"kernel": "decode_codes", "cases": cases}
 
 

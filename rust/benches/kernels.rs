@@ -12,6 +12,10 @@
 //! * Generation: KV-cached `prefill` + `decode_step` vs full-recompute
 //!   per token at generation length 64 (`serve_kv` vs `serve_recompute`
 //!   in the JSON; acceptance: >= 2x tokens/s).
+//! * Worker pool: persistent-pool dispatch vs `std::thread::scope`
+//!   spawn/join on an empty job, and the resulting serve-loop ratio
+//!   (`spawn_join_overhead_us`, `serve_tokps_pool_ratio` in the JSON;
+//!   acceptance: >= 1.5x at demo scale).
 //! * Quantized-KV attention: `attend_cached_q` over 8/4/2-bit codes vs
 //!   the dense `attend_cached` on the same window, plus the
 //!   `kv_bytes_per_lane` table (f32 vs 8/4/2-bit) and the lane counts a
@@ -320,6 +324,68 @@ fn main() -> anyhow::Result<()> {
             ("speedup_vs_recompute", json::num(kv_speedup)),
         ]),
     ));
+
+    // -------------------------- worker pool vs scoped spawn/join tax
+    // ISSUE 7: every parallel kernel call used to spawn and join scoped
+    // OS threads; the persistent pool hands the same index ranges to
+    // parked workers instead. Measure both dispatch costs head to head
+    // on an empty job, then convert the per-call delta into the serve
+    // ratio: a decode step on the demo model crosses one pool barrier
+    // per linear (6 per layer) plus the logit projection, so the scoped
+    // equivalent of the measured pooled step is
+    // `step + barriers * (scoped - pool)`.
+    {
+        use raana::threadpool::parallel_for;
+        let idxs: Vec<usize> = (0..threads).collect();
+        let pool_r = bench("pool_dispatch", 8, 256, || {
+            parallel_for(&idxs, threads, |_, _| {
+                std::hint::black_box(());
+            });
+        });
+        let scoped_r = bench("scoped_spawn_join", 8, 256, || {
+            std::thread::scope(|s| {
+                for _ in 0..threads.saturating_sub(1) {
+                    s.spawn(|| std::hint::black_box(()));
+                }
+            });
+        });
+        let overhead_s = (scoped_r.median() - pool_r.median()).max(0.0);
+        let barriers = 6 * manifest.n_layers + 1;
+        let step_s = kv_r.median() / gen_len as f64;
+        let scoped_step_s = step_s + barriers as f64 * overhead_s;
+        let pool_ratio = scoped_step_s / step_s.max(1e-12);
+
+        let mut t = Table::new(&["Worker pool dispatch", "median", "note"]);
+        t.row(vec![
+            "persistent pool (parallel_for, empty job)".into(),
+            format!("{:.1} us", pool_r.median() * 1e6),
+            format!("{threads} threads, warm workers"),
+        ]);
+        t.row(vec![
+            "std::thread::scope spawn + join".into(),
+            format!("{:.1} us", scoped_r.median() * 1e6),
+            "the pre-pool per-call cost".into(),
+        ]);
+        t.row(vec![
+            "serve tok/s ratio, pooled vs scoped".into(),
+            format!("{pool_ratio:.2}x"),
+            format!("{barriers} barriers/decode step; acceptance: >= 1.5x"),
+        ]);
+        println!("{}", t.render());
+        report.push((
+            "pool",
+            json::obj(vec![
+                ("threads", json::num(threads as f64)),
+                ("pool_dispatch", bench_json(&pool_r)),
+                ("scoped_spawn_join", bench_json(&scoped_r)),
+                ("spawn_join_overhead_us", json::num(overhead_s * 1e6)),
+                ("barriers_per_decode_step", json::num(barriers as f64)),
+                ("serve_tokps_pool", json::num(kv_tok_s)),
+                ("serve_tokps_scoped_equiv", json::num(1.0 / scoped_step_s.max(1e-12))),
+                ("serve_tokps_pool_ratio", json::num(pool_ratio)),
+            ]),
+        ));
+    }
 
     // ------------------ quantized-KV attention + lanes-per-byte economics
     // attend_cached_q (scores + mixing straight over RaBitQ codes) vs the

@@ -88,7 +88,10 @@ pub fn fwht(x: &mut [f32]) {
 /// cache-blocked pass (each worker streams whole rows, so a row's butterfly
 /// stages run while it is L1/L2-resident). `threads == 0` means
 /// [`crate::threadpool::default_threads`] (`RAANA_THREADS` applies).
-/// Bit-deterministic in the thread count — rows are independent.
+/// Runs on the process-wide persistent pool
+/// ([`crate::threadpool::global`]); bit-deterministic in the thread
+/// count and pool width — rows are independent and chunking is fixed by
+/// the caller.
 pub fn fwht_batch(data: &mut [f32], d: usize, threads: usize) {
     assert!(is_pow2(d), "fwht_batch needs power-of-2 row length, got {d}");
     assert_eq!(data.len() % d, 0, "data length must be a multiple of d");
@@ -209,8 +212,9 @@ impl PracticalRht {
     }
 
     /// [`PracticalRht::apply_rows`] with an explicit thread count
-    /// (0 = default). Rows are independent, so the result is
-    /// bit-deterministic in `threads`.
+    /// (0 = default), on the process-wide persistent pool. Rows are
+    /// independent and chunking is fixed by the caller, so the result is
+    /// bit-deterministic in `threads` and in the pool width.
     pub fn apply_rows_threaded(&self, m: &mut Matrix, threads: usize) {
         assert_eq!(m.cols, self.d);
         let d = self.d;

@@ -10,9 +10,11 @@
 //! * [`gemm`] — dense f32 GEMM with a 4-row register-tiled microkernel and
 //!   row-block parallelism; backs `Matrix::matmul` (calibration, baselines,
 //!   and the native model's full-precision layers).
-//! * [`decode_codes_into`] — the shared bit decoder: unrolled byte-aligned
-//!   fast paths for 1/2/4/8-bit codes, a streaming bit-window decoder for
-//!   3/5/6/7.
+//! * [`decode_codes_into`] — the shared bit decoder: width-specialized,
+//!   branch-free bulk bodies for 1/2/4/8-bit codes (fixed lanes per byte,
+//!   shaped for compiler autovectorization), a streaming bit-window
+//!   decoder for 3/5/6/7; prologue/epilogue handle mid-byte tails and are
+//!   pinned byte-exact by the golden decode vectors.
 //!
 //! * [`attend_cached`] — single-query multi-head attention over a
 //!   contiguous K/V row window. Both the full causal forward and the
@@ -25,8 +27,11 @@
 //!   rotation folded into the query and inverted on the output.
 //!
 //! Threading: `threads == 0` means [`threadpool::default_threads`] (the
-//! `RAANA_THREADS` override applies). All kernels are bit-deterministic in
-//! the thread count — every output element is produced by exactly one task
+//! `RAANA_THREADS` override applies). Every parallel kernel runs on the
+//! process-wide persistent pool ([`threadpool::global`]) — work is handed
+//! out as fixed, caller-defined chunks, so no spawn/join barrier is paid
+//! per call. All kernels are bit-deterministic in the thread count *and*
+//! in the pool size — every output element is produced by exactly one task
 //! with a fixed reduction order. A second, stricter contract backs the KV
 //! cache: every kernel computes each output **row** with a reduction order
 //! that does not depend on how many rows are in the batch, so a 1-row
@@ -101,32 +106,28 @@ pub fn decode_bits_into(data: &[u8], bits: u8, start: usize, out: &mut [f32]) {
             i += 1;
             bitpos += bits;
         }
+        // bulk body: one width-specialized, branch-free pass over whole
+        // bytes. The `match` runs once per call (not once per byte) and
+        // each helper's inner loop has a fixed trip shape with no
+        // per-element branches — the form LLVM autovectorizes (u8 load →
+        // shift/mask lanes → f32 convert). Byte-exact vs the per-element
+        // reference; the golden decode vectors pin every width's tails.
         let per_byte = 8 / bits;
-        let mut byte = bitpos >> 3;
-        while len - i >= per_byte {
-            let w = data[byte] as u32;
+        let byte0 = bitpos >> 3;
+        let whole = (len - i) / per_byte;
+        {
+            let src = &data[byte0..byte0 + whole];
+            let dst = &mut out[i..i + whole * per_byte];
             match bits {
-                8 => out[i] = w as f32,
-                4 => {
-                    out[i] = (w & 15) as f32;
-                    out[i + 1] = (w >> 4) as f32;
-                }
-                2 => {
-                    out[i] = (w & 3) as f32;
-                    out[i + 1] = ((w >> 2) & 3) as f32;
-                    out[i + 2] = ((w >> 4) & 3) as f32;
-                    out[i + 3] = (w >> 6) as f32;
-                }
-                _ => {
-                    for t in 0..8 {
-                        out[i + t] = ((w >> t) & 1) as f32;
-                    }
-                }
+                8 => decode_bytes_w8(src, dst),
+                4 => decode_bytes_w4(src, dst),
+                2 => decode_bytes_w2(src, dst),
+                _ => decode_bytes_w1(src, dst),
             }
-            i += per_byte;
-            byte += 1;
         }
-        bitpos = byte * 8;
+        i += whole * per_byte;
+        bitpos = (byte0 + whole) * 8;
+        // epilogue: mid-byte tail (fewer than per_byte codes left)
         while i < len {
             let w = data[bitpos >> 3] as u32;
             out[i] = ((w >> (bitpos & 7)) & mask) as f32;
@@ -137,6 +138,56 @@ pub fn decode_bits_into(data: &[u8], bits: u8, start: usize, out: &mut [f32]) {
     }
 
     // streaming bit-window decoder for 3/5/6/7-bit codes
+    decode_bits_streaming(data, bits, mask, bitpos, out);
+}
+
+/// 8-bit bulk body: one code per byte, straight widening convert.
+#[inline]
+fn decode_bytes_w8(src: &[u8], dst: &mut [f32]) {
+    for (o, &b) in dst.iter_mut().zip(src) {
+        *o = b as f32;
+    }
+}
+
+/// 4-bit bulk body: two lanes per byte, fixed shift/mask per lane.
+#[inline]
+fn decode_bytes_w4(src: &[u8], dst: &mut [f32]) {
+    for (o, &b) in dst.chunks_exact_mut(2).zip(src) {
+        o[0] = (b & 15) as f32;
+        o[1] = (b >> 4) as f32;
+    }
+}
+
+/// 2-bit bulk body: four lanes per byte.
+#[inline]
+fn decode_bytes_w2(src: &[u8], dst: &mut [f32]) {
+    for (o, &b) in dst.chunks_exact_mut(4).zip(src) {
+        o[0] = (b & 3) as f32;
+        o[1] = ((b >> 2) & 3) as f32;
+        o[2] = ((b >> 4) & 3) as f32;
+        o[3] = (b >> 6) as f32;
+    }
+}
+
+/// 1-bit bulk body: eight lanes per byte, fully unrolled.
+#[inline]
+fn decode_bytes_w1(src: &[u8], dst: &mut [f32]) {
+    for (o, &b) in dst.chunks_exact_mut(8).zip(src) {
+        o[0] = (b & 1) as f32;
+        o[1] = ((b >> 1) & 1) as f32;
+        o[2] = ((b >> 2) & 1) as f32;
+        o[3] = ((b >> 3) & 1) as f32;
+        o[4] = ((b >> 4) & 1) as f32;
+        o[5] = ((b >> 5) & 1) as f32;
+        o[6] = ((b >> 6) & 1) as f32;
+        o[7] = (b >> 7) as f32;
+    }
+}
+
+/// Streaming bit-window decoder for the widths that straddle bytes
+/// (3/5/6/7): maintain a shift register of pending bits.
+#[inline]
+fn decode_bits_streaming(data: &[u8], bits: usize, mask: u32, bitpos: usize, out: &mut [f32]) {
     let mut byte = bitpos >> 3;
     let off = bitpos & 7;
     let mut acc: u32 = (data[byte] as u32) >> off;

@@ -8,11 +8,26 @@
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Context, Result};
 
 use crate::json::{self, Value};
 use crate::tensor::Matrix;
+
+/// Process-wide count of name-based parameter/linear lookups (linear
+/// string scans over the manifest tables: [`Manifest::param_index`],
+/// [`Manifest::linear_index`], [`ModelParams::index_of`]).
+static NAME_RESOLUTIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Read the resolution counter. Mirrors `rabitq::dequant_calls`: the native
+/// forward resolves every index once at `NativeModel` construction, so a
+/// full prefill + any number of decode steps must leave this counter
+/// unchanged — regression-tested in `rust/tests/integration.rs`
+/// (`native_serving_performs_zero_name_resolutions`).
+pub fn name_resolutions() -> usize {
+    NAME_RESOLUTIONS.load(Ordering::Relaxed)
+}
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
@@ -115,11 +130,25 @@ impl Manifest {
         })
     }
 
+    /// Index of a parameter by name — a **counted** string scan (see
+    /// [`name_resolutions`]); hot paths resolve once and hold the index.
     pub fn param_index(&self, name: &str) -> Result<usize> {
+        NAME_RESOLUTIONS.fetch_add(1, Ordering::Relaxed);
         self.params
             .iter()
             .position(|p| p.name == name)
             .with_context(|| format!("unknown param '{name}'"))
+    }
+
+    /// Index of a registered linear by its param name — a **counted**
+    /// string scan (see [`name_resolutions`]). The native forward resolves
+    /// all of these at `NativeModel` construction and never again.
+    pub fn linear_index(&self, name: &str) -> Result<usize> {
+        NAME_RESOLUTIONS.fetch_add(1, Ordering::Relaxed);
+        self.linears
+            .iter()
+            .position(|l| l.param == name)
+            .with_context(|| format!("linear '{name}' not registered in manifest"))
     }
 
     /// Total parameter count.
@@ -233,7 +262,12 @@ impl ModelParams {
         Ok(ModelParams { specs: manifest.params.clone(), tensors })
     }
 
+    /// Index of a tensor by name — a **counted** string scan (see
+    /// [`name_resolutions`]). Tensors are stored in manifest order, so an
+    /// index resolved here (or via [`Manifest::param_index`]) stays valid
+    /// for direct `tensors[i]` access for the life of the store.
     pub fn index_of(&self, name: &str) -> Result<usize> {
+        NAME_RESOLUTIONS.fetch_add(1, Ordering::Relaxed);
         self.specs
             .iter()
             .position(|p| p.name == name)

@@ -30,7 +30,7 @@
 //! tokens (absolute position embeddings invalidate shifted K/V rows, so
 //! this is the only recompute left on the path).
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::kernels;
 use crate::kvq::{KvqError, KvqPlan, QuantizedKvStore};
@@ -39,7 +39,12 @@ use crate::quant::{LayerCalib, QuantizedLinear, TrickConfig};
 use crate::rng::Rng;
 use crate::tensor::Matrix;
 
-/// Validated model dimensions for the native forward.
+/// Validated model dimensions for the native forward, plus every
+/// parameter and linear index the forward ever touches, resolved **once**
+/// at construction. The per-step path performs zero name-based lookups
+/// and zero string formatting — enforced by the
+/// [`crate::model::name_resolutions`] counter (regression test in
+/// `rust/tests/integration.rs`).
 #[derive(Clone, Debug)]
 pub struct NativeModel {
     pub d_model: usize,
@@ -49,12 +54,99 @@ pub struct NativeModel {
     pub d_ff: usize,
     pub seq_len: usize,
     pub vocab: usize,
+    idx: ForwardIdx,
+}
+
+/// Construction-time-resolved tensor/linear indices (see [`NativeModel`]).
+/// Tensor indices address `ModelParams::tensors`, valid because tensors
+/// are stored in manifest order (`ModelParams` docs); linear indices
+/// address `Manifest::linears` == `PackedLayers::layers`.
+#[derive(Clone, Debug)]
+struct ForwardIdx {
+    tok_emb: usize,
+    pos_emb: usize,
+    ln_f_scale: usize,
+    ln_f_bias: usize,
+    lm_head: usize,
+    /// Manifest param count — the cheap per-call layout guard.
+    n_params: usize,
+    blocks: Vec<BlockIdx>,
+}
+
+/// One transformer block's resolved indices.
+#[derive(Clone, Debug)]
+struct BlockIdx {
+    ln1_scale: usize,
+    ln1_bias: usize,
+    ln2_scale: usize,
+    ln2_bias: usize,
+    wq: LinearIdx,
+    wk: LinearIdx,
+    wv: LinearIdx,
+    wo: LinearIdx,
+    fc1: LinearIdx,
+    fc2: LinearIdx,
+}
+
+/// One registered linear, fully resolved: registry slot + weight/bias
+/// tensor indices + shape.
+#[derive(Clone, Debug)]
+struct LinearIdx {
+    /// Index into `Manifest::linears` (== the packed layer slot).
+    lin: usize,
+    /// Weight tensor index into `ModelParams::tensors`.
+    param: usize,
+    /// Bias tensor index into `ModelParams::tensors`.
+    bias: usize,
+    /// Input dim.
+    d: usize,
+    /// Output dim.
+    c: usize,
 }
 
 impl NativeModel {
     pub fn new(m: &Manifest) -> Result<Self> {
         anyhow::ensure!(m.n_heads > 0 && m.d_model % m.n_heads == 0, "d_model % n_heads != 0");
         anyhow::ensure!(m.seq_len >= 2, "seq_len must be >= 2");
+        // Resolve every name the forward will ever need, here and never
+        // again: these are the only (counted) string scans on the native
+        // path after construction.
+        let resolve_linear = |name: &str| -> Result<LinearIdx> {
+            let k = m.linear_index(name)?;
+            let lin = &m.linears[k];
+            Ok(LinearIdx {
+                lin: k,
+                param: m.param_index(&lin.param)?,
+                bias: m.param_index(&lin.bias)?,
+                d: lin.d,
+                c: lin.c,
+            })
+        };
+        let mut blocks = Vec::with_capacity(m.n_layers);
+        for layer in 0..m.n_layers {
+            let pre = format!("blk{layer}.");
+            blocks.push(BlockIdx {
+                ln1_scale: m.param_index(&format!("{pre}ln1.scale"))?,
+                ln1_bias: m.param_index(&format!("{pre}ln1.bias"))?,
+                ln2_scale: m.param_index(&format!("{pre}ln2.scale"))?,
+                ln2_bias: m.param_index(&format!("{pre}ln2.bias"))?,
+                wq: resolve_linear(&format!("{pre}attn.wq"))?,
+                wk: resolve_linear(&format!("{pre}attn.wk"))?,
+                wv: resolve_linear(&format!("{pre}attn.wv"))?,
+                wo: resolve_linear(&format!("{pre}attn.wo"))?,
+                fc1: resolve_linear(&format!("{pre}mlp.fc1"))?,
+                fc2: resolve_linear(&format!("{pre}mlp.fc2"))?,
+            });
+        }
+        let idx = ForwardIdx {
+            tok_emb: m.param_index("tok_emb")?,
+            pos_emb: m.param_index("pos_emb")?,
+            ln_f_scale: m.param_index("ln_f.scale")?,
+            ln_f_bias: m.param_index("ln_f.bias")?,
+            lm_head: m.param_index("lm_head")?,
+            n_params: m.params.len(),
+            blocks,
+        };
         Ok(NativeModel {
             d_model: m.d_model,
             n_layers: m.n_layers,
@@ -63,7 +155,25 @@ impl NativeModel {
             d_ff: m.d_ff,
             seq_len: m.seq_len,
             vocab: m.vocab,
+            idx,
         })
+    }
+
+    /// Indexed access assumes `params` is in manifest order — the only
+    /// order [`ModelParams`] is ever built in (`zeros` / `from_tensors`
+    /// clone the manifest's spec table; the `.rkpt` format round-trips
+    /// it). One arity check per call guards gross mismatches; debug
+    /// builds verify the resolved anchors by name.
+    fn check_params(&self, params: &ModelParams) -> Result<()> {
+        anyhow::ensure!(
+            params.tensors.len() == self.idx.n_params,
+            "params/manifest arity mismatch: {} tensors, manifest has {}",
+            params.tensors.len(),
+            self.idx.n_params
+        );
+        debug_assert_eq!(params.specs[self.idx.tok_emb].name, "tok_emb");
+        debug_assert_eq!(params.specs[self.idx.lm_head].name, "lm_head");
+        Ok(())
     }
 
     /// Last-position logits, (B, vocab) row-major. `tokens` is any whole
@@ -157,7 +267,7 @@ impl NativeModel {
         threads: usize,
     ) -> Result<Vec<f32>> {
         let (d, v) = (self.d_model, self.vocab);
-        let lm = params.get("lm_head")?;
+        let lm = &params.tensors[self.idx.lm_head];
         let mut last = Matrix::zeros(rows.len(), d);
         for (i, &r) in rows.iter().enumerate() {
             last.row_mut(i).copy_from_slice(hid.row(r));
@@ -180,7 +290,7 @@ impl NativeModel {
         let hid = self.forward_hidden(m, params, packed, tokens, threads, None)?;
         let (s, d, v) = (self.seq_len, self.d_model, self.vocab);
         let b = hid.rows / s;
-        let lm = params.get("lm_head")?;
+        let lm = &params.tensors[self.idx.lm_head];
         let mut logits = Matrix::zeros(b * s, v);
         kernels::gemm(b * s, d, v, &hid.data, lm, &mut logits.data, threads);
         let mut nll = Vec::with_capacity(b * (s - 1));
@@ -271,10 +381,12 @@ impl NativeModel {
             anyhow::ensure!(*slot < kv.slots(), "cache slot {slot} out of range");
             anyhow::ensure!(s <= kv.capacity(), "sequence exceeds cache capacity");
         }
+        self.check_params(params)?;
 
-        // embeddings
-        let tok_emb = params.get("tok_emb")?;
-        let pos_emb = params.get("pos_emb")?;
+        // embeddings (construction-resolved indices: no name lookups here
+        // or anywhere below — see `ForwardIdx`)
+        let tok_emb = &params.tensors[self.idx.tok_emb];
+        let pos_emb = &params.tensors[self.idx.pos_emb];
         let mut h = Matrix::zeros(b * s, d);
         for bi in 0..b {
             for si in 0..s {
@@ -300,20 +412,20 @@ impl NativeModel {
         };
 
         for layer in 0..self.n_layers {
-            let pre = format!("blk{layer}.");
+            let blk = &self.idx.blocks[layer];
 
             // attention sub-block (pre-LN)
             let x = layer_norm(
                 &h,
-                params.get(&format!("{pre}ln1.scale"))?,
-                params.get(&format!("{pre}ln1.bias"))?,
+                &params.tensors[blk.ln1_scale],
+                &params.tensors[blk.ln1_bias],
             );
-            let lin = |nm: &str, inp: &Matrix, cap: Option<&mut Vec<LayerCalib>>| {
-                self.linear(m, params, packed, &format!("{pre}{nm}"), inp, threads, cap)
+            let lin = |li: &LinearIdx, inp: &Matrix, cap: Option<&mut Vec<LayerCalib>>| {
+                self.linear(params, packed, li, inp, threads, cap)
             };
-            let q = lin("attn.wq", &x, capture.as_deref_mut())?;
-            let k = lin("attn.wk", &x, capture.as_deref_mut())?;
-            let v = lin("attn.wv", &x, capture.as_deref_mut())?;
+            let q = lin(&blk.wq, &x, capture.as_deref_mut())?;
+            let k = lin(&blk.wk, &x, capture.as_deref_mut())?;
+            let v = lin(&blk.wv, &x, capture.as_deref_mut())?;
             if let Some((kv, slot)) = cache.as_mut() {
                 for si in 0..s {
                     kv.store(layer, *slot, si, k.row(si), v.row(si));
@@ -344,63 +456,61 @@ impl NativeModel {
                 }
                 _ => self.attention(&q, &k, &v, s),
             };
-            let proj = lin("attn.wo", &att, capture.as_deref_mut())?;
+            let proj = lin(&blk.wo, &att, capture.as_deref_mut())?;
             h.add_assign(&proj);
 
             // MLP sub-block (pre-LN)
             let x = layer_norm(
                 &h,
-                params.get(&format!("{pre}ln2.scale"))?,
-                params.get(&format!("{pre}ln2.bias"))?,
+                &params.tensors[blk.ln2_scale],
+                &params.tensors[blk.ln2_bias],
             );
-            let mut y = lin("mlp.fc1", &x, capture.as_deref_mut())?;
+            let mut y = lin(&blk.fc1, &x, capture.as_deref_mut())?;
             for v in y.data.iter_mut() {
                 *v = gelu(*v);
             }
-            let y = lin("mlp.fc2", &y, capture.as_deref_mut())?;
+            let y = lin(&blk.fc2, &y, capture.as_deref_mut())?;
             h.add_assign(&y);
         }
 
         if let (Some(s), Some((kv, _))) = (kv_scratch.take(), cache.as_mut()) {
             kv.put_scratch(s);
         }
-        Ok(layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?))
+        Ok(layer_norm(
+            &h,
+            &params.tensors[self.idx.ln_f_scale],
+            &params.tensors[self.idx.ln_f_bias],
+        ))
     }
 
     /// One registered linear layer: packed (qgemm on codes) or dense
     /// (full-precision gemm), plus the layer bias. `capture`, when set,
     /// receives the layer input (forward order = manifest linear order).
-    #[allow(clippy::too_many_arguments)]
+    /// Addressed entirely by construction-resolved [`LinearIdx`] — no
+    /// registry scan, no name lookup.
     fn linear(
         &self,
-        m: &Manifest,
         params: &ModelParams,
         packed: Option<&PackedLayers>,
-        name: &str,
+        li: &LinearIdx,
         x: &Matrix,
         threads: usize,
         capture: Option<&mut Vec<LayerCalib>>,
     ) -> Result<Matrix> {
-        let k = m
-            .linears
-            .iter()
-            .position(|l| l.param == name)
-            .with_context(|| format!("linear '{name}' not registered in manifest"))?;
-        let lin = &m.linears[k];
-        anyhow::ensure!(x.cols == lin.d, "linear '{name}' input dim");
+        anyhow::ensure!(x.cols == li.d, "linear input dim mismatch");
         if let Some(c) = capture {
             c.push(LayerCalib::from_activations(x));
         }
         let mut y = match packed {
-            Some(p) => p.layers[k].forward_est_threaded(x, threads),
+            Some(p) => p.layers[li.lin].forward_est_threaded(x, threads),
             None => {
-                let w = params.get(&lin.param)?;
-                let mut out = Matrix::zeros(x.rows, lin.c);
-                kernels::gemm(x.rows, lin.d, lin.c, &x.data, w, &mut out.data, threads);
+                let w = &params.tensors[li.param];
+                let mut out = Matrix::zeros(x.rows, li.c);
+                kernels::gemm(x.rows, li.d, li.c, &x.data, w, &mut out.data, threads);
                 out
             }
         };
-        let bias = params.get(&lin.bias)?;
+        let bias = &params.tensors[li.bias];
         for i in 0..y.rows {
             for (o, &bv) in y.row_mut(i).iter_mut().zip(bias) {
                 *o += bv;
@@ -543,11 +653,13 @@ impl NativeModel {
         if let Some(p) = packed {
             anyhow::ensure!(p.layers.len() == m.linears.len(), "packed layer arity");
         }
+        self.check_params(params)?;
 
-        // embeddings at each slot's next position
+        // embeddings at each slot's next position (indexed access — the
+        // decode step performs zero name lookups and zero `format!`s)
         let d = self.d_model;
-        let tok_emb = params.get("tok_emb")?;
-        let pos_emb = params.get("pos_emb")?;
+        let tok_emb = &params.tensors[self.idx.tok_emb];
+        let pos_emb = &params.tensors[self.idx.pos_emb];
         let mut h = Matrix::zeros(bsz, d);
         for (i, (&sl, &t)) in slots.iter().zip(tokens).enumerate() {
             anyhow::ensure!(
@@ -564,16 +676,16 @@ impl NativeModel {
 
         let mut scratch = cache.take_scratch();
         for layer in 0..self.n_layers {
-            let pre = format!("blk{layer}.");
+            let blk = &self.idx.blocks[layer];
 
             let x = layer_norm(
                 &h,
-                params.get(&format!("{pre}ln1.scale"))?,
-                params.get(&format!("{pre}ln1.bias"))?,
+                &params.tensors[blk.ln1_scale],
+                &params.tensors[blk.ln1_bias],
             );
-            let q = self.linear(m, params, packed, &format!("{pre}attn.wq"), &x, threads, None)?;
-            let k = self.linear(m, params, packed, &format!("{pre}attn.wk"), &x, threads, None)?;
-            let v = self.linear(m, params, packed, &format!("{pre}attn.wv"), &x, threads, None)?;
+            let q = self.linear(params, packed, &blk.wq, &x, threads, None)?;
+            let k = self.linear(params, packed, &blk.wk, &x, threads, None)?;
+            let v = self.linear(params, packed, &blk.wv, &x, threads, None)?;
             let mut att = Matrix::zeros(bsz, d);
             for (i, &sl) in slots.iter().enumerate() {
                 let pos = cache.len(sl);
@@ -589,25 +701,27 @@ impl NativeModel {
                     att.row_mut(i),
                 );
             }
-            let proj =
-                self.linear(m, params, packed, &format!("{pre}attn.wo"), &att, threads, None)?;
+            let proj = self.linear(params, packed, &blk.wo, &att, threads, None)?;
             h.add_assign(&proj);
 
             let x = layer_norm(
                 &h,
-                params.get(&format!("{pre}ln2.scale"))?,
-                params.get(&format!("{pre}ln2.bias"))?,
+                &params.tensors[blk.ln2_scale],
+                &params.tensors[blk.ln2_bias],
             );
-            let mut y =
-                self.linear(m, params, packed, &format!("{pre}mlp.fc1"), &x, threads, None)?;
+            let mut y = self.linear(params, packed, &blk.fc1, &x, threads, None)?;
             for vv in y.data.iter_mut() {
                 *vv = gelu(*vv);
             }
-            let y = self.linear(m, params, packed, &format!("{pre}mlp.fc2"), &y, threads, None)?;
+            let y = self.linear(params, packed, &blk.fc2, &y, threads, None)?;
             h.add_assign(&y);
         }
         cache.put_scratch(scratch);
-        let hid = layer_norm(&h, params.get("ln_f.scale")?, params.get("ln_f.bias")?);
+        let hid = layer_norm(
+            &h,
+            &params.tensors[self.idx.ln_f_scale],
+            &params.tensors[self.idx.ln_f_bias],
+        );
         for &sl in slots {
             cache.advance(sl);
         }

@@ -21,7 +21,11 @@
 //! position embeddings re-position every token on a slide, so the cached
 //! rows are genuinely stale and recompute is the correct (and reference-
 //! exact) behavior. Python is never on this path; with packed weights
-//! attached the decode linears run on RaBitQ codes via `qgemm`.
+//! attached the decode linears run on RaBitQ codes via `qgemm`, whose
+//! parallelism comes from the process-wide persistent worker pool
+//! ([`crate::threadpool::global`]) — the batcher thread submits jobs and
+//! participates in them itself, so even a shut-down pool drains requests
+//! to completion (`rust/tests/pool_drain.rs`).
 //!
 //! Front-end hooks (what the HTTP layer in [`crate::net`] builds on):
 //! [`Server::submit_streaming`] delivers tokens one [`StreamEvent`] at a

@@ -1,12 +1,63 @@
 //! Thread-parallel helpers (no rayon in the offline vendor set).
 //!
-//! [`parallel_chunks_mut`] is the quantizer hot-path primitive: it splits
-//! a mutable slice of work items across `std::thread::scope` workers.
-//! [`Pool`] is a long-lived task pool used by the serving coordinator.
+//! Since PR 7 the parallel primitives ride one **persistent, process-wide
+//! worker pool** ([`global`]) instead of spawning and joining
+//! `std::thread::scope` threads per call. Workers are spawned once
+//! (`default_threads() - 1` of them; the calling thread is always the
+//! remaining executor), park on a condvar between jobs, and are fed work
+//! through a shared job queue. A *job* is a batch of `n_tasks` indices;
+//! executors claim indices from an atomic cursor, so the **chunking is
+//! fixed by the caller** and only *which executor* runs a chunk varies —
+//! the bit-determinism-in-thread-count contract every kernel relies on
+//! (see `rust/tests/integration.rs` and the per-kernel
+//! `*_deterministic_across_thread_counts` tests).
+//!
+//! [`parallel_for`], [`parallel_map`] and [`parallel_chunks_mut`] keep
+//! their pre-pool signatures, so every call site (`kernels::qgemm`,
+//! `scan_scores_q`, dense `gemm`, `hadamard::fwht_batch` /
+//! `PracticalRht::apply_rows`, the RaBitQ quantizer, and therefore the
+//! serve batcher's prefill/decode steps) shares the same pool without
+//! `Arc`-wrapping any kernel input: tasks borrow the caller's slices
+//! exactly as the scoped version did.
+//!
+//! # How borrowed tasks meet persistent workers
+//!
+//! A worker thread is `'static`; a kernel's inputs are not. Safe Rust has
+//! exactly one std mechanism for lending non-`'static` data to another
+//! thread — `std::thread::scope` — and it is the spawn/join tax this pool
+//! removes. So the handoff erases the task borrow at the pool boundary
+//! (a raw pointer to the caller's `dyn Fn(usize)` task) and re-earns
+//! safety with a **completion barrier**, which is precisely how
+//! `thread::scope` is implemented inside std:
+//!
+//! * [`WorkerPool::run`] publishes the erased task, then **blocks until
+//!   every index has finished executing** before returning. The borrow it
+//!   erased therefore strictly outlives every dereference.
+//! * Executors dereference the task only for claimed indices `i < n`,
+//!   and the completion count reaches `n` only after each such call has
+//!   returned. A worker that still holds a (now-dangling) pointer after
+//!   the job completed can never dereference it again: the claim cursor
+//!   is already `>= n`.
+//! * Panics inside a task are caught per index (`catch_unwind`), counted
+//!   as completed so the submitter can never hang, and surfaced as a
+//!   typed [`PoolError`] — the job is poisoned, the pool is not (the
+//!   PR-6 batcher containment idiom, one layer down).
+//!
+//! Those three invariants are the entire unsafe surface of the crate and
+//! they live in this module only; all public APIs are safe.
+//!
+//! Re-entrant submission (a task calling back into the pool) is
+//! **supported**: the nested call executes inline on the submitting
+//! executor, which is deadlock-free and bit-identical because results
+//! never depend on which executor runs an index. [`WorkerPool::shutdown`]
+//! can race any in-flight job without hanging it: the submitting thread
+//! is itself an executor, so it finishes whatever the exiting workers do
+//! not.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 /// Number of worker threads to use (env `RAANA_THREADS` overrides).
@@ -19,24 +70,339 @@ pub fn default_threads() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-/// Run `f(index, item)` over all items, work-stealing via an atomic cursor.
+/// Typed failure of a pool job (satellite of the PR-6 containment story:
+/// a panicking work item poisons only its own job, never the pool).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// At least one work item panicked. `detail` carries the first
+    /// captured panic message; the remaining indices of the job still ran
+    /// (the completion barrier requires it), and the pool remains
+    /// serviceable for subsequent jobs.
+    TaskPanicked {
+        /// First captured panic payload, stringified.
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::TaskPanicked { detail } => {
+                write!(f, "pool work item panicked: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// The caller-facing task shape: `task(i)` for each index in `0..n_tasks`.
+/// Must be callable from any executor concurrently (`Sync`).
+type Task<'a> = dyn Fn(usize) + Sync + 'a;
+
+/// One submitted batch of indices, shared between the submitter and the
+/// workers that joined it.
+struct Job {
+    /// Lifetime-erased pointer to the submitter's task. See the module
+    /// docs: valid until `done == n`, which [`WorkerPool::run`] awaits
+    /// before returning (and before the borrow it erased can end).
+    task: *const Task<'static>,
+    /// Total indices in the job; the fixed chunking lives in the caller.
+    n: usize,
+    /// Claim cursor: `fetch_add` hands out each index exactly once.
+    next: AtomicUsize,
+    /// Executors currently registered on this job (submitter included).
+    active: AtomicUsize,
+    /// Maximum executors allowed to join (the caller's `threads` hint).
+    width: usize,
+    /// Completed-index count behind a mutex so the submitter can condvar-
+    /// wait on it; `done == n` is the completion barrier.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload captured from a work item, if any.
+    panic_detail: Mutex<Option<String>>,
+}
+
+// SAFETY: `task` points at a `dyn Fn(usize) + Sync` owned by the
+// submitting thread's stack frame. Sending the pointer between threads is
+// sound because (a) the pointee is `Sync`, so concurrent `&`-calls are
+// allowed, and (b) every dereference happens-before `done == n`, which
+// `WorkerPool::run` awaits while the pointee is still borrowed (the
+// completion barrier in the module docs). No executor dereferences after
+// the cursor passes `n`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn has_unclaimed(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n
+    }
+
+    /// Try to join this job as one more executor (bounded by `width`).
+    fn try_register(&self) -> bool {
+        self.active
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |a| {
+                if a < self.width {
+                    Some(a + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    fn unregister(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Claim-and-run loop shared by the submitter and every worker that
+    /// joined the job. Each claimed index runs under `catch_unwind` and is
+    /// counted completed even on panic, so the barrier always releases.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // SAFETY: i < n, so the barrier has not released and the
+            // submitter still holds the borrow behind `task` (see the
+            // `unsafe impl` above and the module docs).
+            let res = catch_unwind(AssertUnwindSafe(|| unsafe { (*self.task)(i) }));
+            if let Err(payload) = res {
+                let mut slot = self.panic_detail.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(panic_message(&payload));
+                }
+            }
+            let mut c = self.done.lock().unwrap();
+            *c += 1;
+            if *c == self.n {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+struct PoolShared {
+    /// Pending / in-flight jobs. The submitter removes its own job after
+    /// the barrier releases; workers only scan for joinable entries.
+    jobs: Mutex<Vec<Arc<Job>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+thread_local! {
+    /// Set while this thread is executing inside a pool job (worker main
+    /// loop, or a submitter draining its own job). Nested submissions
+    /// observe it and run inline — re-entrancy support without deadlock.
+    static IN_POOL_JOB: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent worker pool executing borrowed, index-addressed jobs.
+///
+/// `WorkerPool::new(k)` parks `k - 1` worker threads; the submitting
+/// thread is always the k-th executor, so a pool of size 1 has **no**
+/// workers and runs jobs inline with zero synchronization — the serial
+/// reference path the determinism tests compare against.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` executors (`threads - 1` parked
+    /// worker threads plus the submitter).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            jobs: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads - 1)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                thread::spawn(move || worker_main(&sh))
+            })
+            .collect();
+        WorkerPool { shared, workers, threads }
+    }
+
+    /// Executor count this pool was built with (workers + submitter).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(i)` for every `i in 0..n_tasks`, at most `width`
+    /// executors touching the job (the caller's `threads` hint; clamped
+    /// to at least the submitting thread). Blocks until **every** index
+    /// has completed — the barrier that makes lending `task`'s borrows to
+    /// persistent workers sound.
+    ///
+    /// Determinism contract: `task` must derive everything from `i` (and
+    /// captured state it only reads, or writes disjointly by `i`), never
+    /// from the executing thread. Under that contract the output is
+    /// bit-identical for every `width` and pool size, warm or cold.
+    ///
+    /// Runs inline (serially, on the calling thread) when `n_tasks <= 1`,
+    /// `width <= 1`, the pool has no workers or is shut down, or the
+    /// caller is itself a pool executor (re-entrant submission).
+    pub fn run(&self, n_tasks: usize, width: usize, task: &Task<'_>) -> Result<(), PoolError> {
+        if n_tasks == 0 {
+            return Ok(());
+        }
+        let inline = n_tasks == 1
+            || width <= 1
+            || self.workers.is_empty()
+            || self.shared.shutdown.load(Ordering::SeqCst)
+            || IN_POOL_JOB.with(|f| f.get());
+        if inline {
+            return run_inline(n_tasks, task);
+        }
+
+        // SAFETY: erase the task borrow for the worker handoff. The
+        // pointee lives in our caller's frame; the barrier below (`done ==
+        // n_tasks`) completes before this function returns, hence before
+        // the borrow can end. See the module docs and `unsafe impl Send /
+        // Sync for Job`.
+        let task: *const Task<'static> = unsafe { std::mem::transmute(task as *const Task<'_>) };
+        let job = Arc::new(Job {
+            task,
+            n: n_tasks,
+            next: AtomicUsize::new(0),
+            active: AtomicUsize::new(1), // the submitter
+            width: width.max(1),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic_detail: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.jobs.lock().unwrap();
+            q.push(Arc::clone(&job));
+        }
+        self.shared.work_cv.notify_all();
+
+        // The submitter is executor #1: drain alongside the workers, then
+        // hold at the barrier for indices other executors still run.
+        IN_POOL_JOB.with(|f| f.set(true));
+        job.drain();
+        IN_POOL_JOB.with(|f| f.set(false));
+        let mut c = job.done.lock().unwrap();
+        while *c < job.n {
+            c = job.done_cv.wait(c).unwrap();
+        }
+        drop(c);
+        job.unregister();
+
+        // Barrier released: retire the job before the erased borrow ends.
+        {
+            let mut q = self.shared.jobs.lock().unwrap();
+            q.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+
+        let detail = job.panic_detail.lock().unwrap().take();
+        match detail {
+            Some(detail) => Err(PoolError::TaskPanicked { detail }),
+            None => Ok(()),
+        }
+    }
+
+    /// Ask the workers to exit after their current job. In-flight and
+    /// subsequent [`WorkerPool::run`] calls still complete — the
+    /// submitting thread is always an executor, so a drained pool just
+    /// degrades to inline execution; nothing can hang on shutdown.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Serial fallback used for tiny jobs, width-1 requests, and re-entrant
+/// submissions. Panic semantics match the pooled path: every index runs,
+/// the first panic is reported as a typed error.
+fn run_inline(n_tasks: usize, task: &Task<'_>) -> Result<(), PoolError> {
+    let mut first_panic: Option<String> = None;
+    for i in 0..n_tasks {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+            if first_panic.is_none() {
+                first_panic = Some(panic_message(&payload));
+            }
+        }
+    }
+    match first_panic {
+        Some(detail) => Err(PoolError::TaskPanicked { detail }),
+        None => Ok(()),
+    }
+}
+
+fn worker_main(shared: &PoolShared) {
+    IN_POOL_JOB.with(|f| f.set(true));
+    let mut q = shared.jobs.lock().unwrap();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let job = q.iter().find(|j| j.has_unclaimed() && j.try_register()).map(Arc::clone);
+        match job {
+            Some(job) => {
+                drop(q);
+                job.drain();
+                job.unregister();
+                q = shared.jobs.lock().unwrap();
+            }
+            None => {
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        }
+    }
+}
+
+/// The process-wide pool every parallel kernel shares, sized
+/// [`default_threads`] (so `RAANA_THREADS` set at process start bounds
+/// the whole serving substrate). Created lazily on first use; never torn
+/// down — worker threads park between jobs and cost nothing idle.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_threads()))
+}
+
+/// Re-raise a pooled task panic on the submitting thread, preserving the
+/// pre-pool `thread::scope` semantics the kernel callers (and the serve
+/// batcher's `catch_unwind` containment above them) were built on.
+fn propagate(res: Result<(), PoolError>) {
+    if let Err(e) = res {
+        panic!("{e}");
+    }
+}
+
+/// Run `f(index, item)` over all items on the shared pool, work-stealing
+/// via the job's atomic claim cursor. Bit-deterministic in `threads`.
 pub fn parallel_for<T: Sync, F: Fn(usize, &T) + Sync>(items: &[T], threads: usize, f: F) {
     if items.is_empty() {
         return;
     }
-    let threads = threads.clamp(1, items.len());
-    let cursor = AtomicUsize::new(0);
-    thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                f(i, &items[i]);
-            });
-        }
-    });
+    let width = threads.clamp(1, items.len());
+    propagate(global().run(items.len(), width, &|i| f(i, &items[i])));
 }
 
 /// Map `f` over items in parallel preserving order.
@@ -46,27 +412,23 @@ pub fn parallel_map<T: Sync, R: Send, F: Fn(usize, &T) -> R + Sync>(
     f: F,
 ) -> Vec<R> {
     let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
-    let slots = Mutex::new(&mut out);
-    let cursor = AtomicUsize::new(0);
-    let threads = threads.clamp(1, items.len().max(1));
-    thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(i, &items[i]);
-                // SAFETY-free approach: short lock to place the result.
-                let mut guard = slots.lock().unwrap();
-                guard[i] = Some(r);
-            });
-        }
-    });
+    {
+        let slots = Mutex::new(&mut out);
+        let width = threads.clamp(1, items.len().max(1));
+        propagate(global().run(items.len(), width, &|i| {
+            let r = f(i, &items[i]);
+            // lock only to place the result; disjoint slots by index
+            let mut guard = slots.lock().unwrap();
+            guard[i] = Some(r);
+        }));
+    }
     out.into_iter().map(|x| x.expect("worker filled slot")).collect()
 }
 
-/// Split a mutable slice into chunks processed by separate threads.
+/// Split a mutable slice into `chunk`-sized pieces processed in parallel
+/// on the shared pool. Chunk boundaries depend only on (`data.len()`,
+/// `chunk`) — never on the pool — so outputs are bit-identical across
+/// pool sizes and thread counts.
 pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     data: &mut [T],
     chunk: usize,
@@ -76,34 +438,25 @@ pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     if data.is_empty() {
         return;
     }
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let cursor = AtomicUsize::new(0);
-    let chunks = Mutex::new(chunks.into_iter().map(Some).collect::<Vec<_>>());
-    let n = {
-        let g = chunks.lock().unwrap();
-        g.len()
-    };
-    let threads = threads.clamp(1, n);
-    thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let taken = {
-                    let mut g = chunks.lock().unwrap();
-                    g[i].take()
-                };
-                if let Some((idx, slice)) = taken {
-                    f(idx, slice);
-                }
-            });
+    let chunks: Vec<Option<(usize, &mut [T])>> =
+        data.chunks_mut(chunk).enumerate().map(Some).collect();
+    let n = chunks.len();
+    let slots = Mutex::new(chunks);
+    let width = threads.clamp(1, n);
+    propagate(global().run(n, width, &|i| {
+        let taken = {
+            let mut g = slots.lock().unwrap();
+            g[i].take()
+        };
+        if let Some((idx, slice)) = taken {
+            f(idx, slice);
         }
-    });
+    }));
 }
 
-/// A long-lived FIFO task pool (used by the serving coordinator).
+/// A long-lived FIFO task pool for `'static` jobs (the HTTP connection
+/// workers in `net/`). Distinct from [`WorkerPool`]: these jobs block on
+/// sockets for seconds, so they must never occupy kernel executors.
 pub struct Pool {
     tx: Option<mpsc::Sender<Box<dyn FnOnce() + Send>>>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -204,5 +557,151 @@ mod tests {
         parallel_for(&items, 4, |_, _| panic!("should not run"));
         let out: Vec<u8> = parallel_map(&items, 4, |_, &x| x);
         assert!(out.is_empty());
+    }
+
+    /// The wall: one borrowed job, every pool size, bit-identical output
+    /// and full coverage (each index exactly once).
+    #[test]
+    fn worker_pool_deterministic_across_pool_sizes() {
+        let input: Vec<u64> = (0..997).map(|i| i * 2654435761 % 1013).collect();
+        let reference: Vec<u64> = input.iter().map(|&x| x * x + 7).collect();
+        for pool_size in [1usize, 2, 3, 7, 8] {
+            let pool = WorkerPool::new(pool_size);
+            let out: Vec<AtomicU64> = (0..input.len()).map(|_| AtomicU64::new(0)).collect();
+            let hits = AtomicUsize::new(0);
+            pool.run(input.len(), pool_size, &|i| {
+                out[i].store(input[i] * input[i] + 7, Ordering::Relaxed);
+                hits.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+            assert_eq!(hits.load(Ordering::Relaxed), input.len(), "size {pool_size}");
+            let got: Vec<u64> = out.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+            assert_eq!(got, reference, "pool size {pool_size}");
+        }
+    }
+
+    /// Warm-pool reuse: repeated jobs on one pool leak no state between
+    /// jobs (fresh cursor/barrier per job, identical results each time).
+    #[test]
+    fn warm_pool_repeated_jobs_identical() {
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = (0..513).collect();
+        let mut first: Option<Vec<usize>> = None;
+        for round in 0..20 {
+            let out: Vec<AtomicUsize> = (0..items.len()).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(items.len(), 4, &|i| {
+                out[i].store(items[i] * 3 + 1, Ordering::Relaxed);
+            })
+            .unwrap();
+            let got: Vec<usize> = out.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+            match &first {
+                None => first = Some(got),
+                Some(f) => assert_eq!(&got, f, "round {round}"),
+            }
+        }
+    }
+
+    /// A panicking work item poisons only its job: the submitter gets a
+    /// typed error, every other index still ran, and the same pool
+    /// services the next job normally.
+    #[test]
+    fn panic_poisons_job_not_pool() {
+        let pool = WorkerPool::new(4);
+        let ran = AtomicUsize::new(0);
+        let err = pool
+            .run(64, 4, &|i| {
+                if i == 13 {
+                    panic!("boom at 13");
+                }
+                ran.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap_err();
+        let PoolError::TaskPanicked { detail } = err;
+        assert!(detail.contains("boom at 13"), "detail: {detail}");
+        assert_eq!(ran.load(Ordering::Relaxed), 63, "all non-panicking indices ran");
+
+        // pool stays serviceable
+        let ok = AtomicUsize::new(0);
+        pool.run(64, 4, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(ok.load(Ordering::Relaxed), 64);
+    }
+
+    /// Re-entrant submission from inside a task is supported: it runs
+    /// inline on the submitting executor and cannot deadlock.
+    #[test]
+    fn reentrant_submission_runs_inline() {
+        let pool = WorkerPool::new(3);
+        let inner_total = AtomicUsize::new(0);
+        pool.run(6, 3, &|_| {
+            // nested submission to the *global* pool from a pool executor
+            let local = AtomicUsize::new(0);
+            global()
+                .run(10, 8, &|j| {
+                    local.fetch_add(j + 1, Ordering::Relaxed);
+                })
+                .unwrap();
+            assert_eq!(local.load(Ordering::Relaxed), 55);
+            inner_total.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(inner_total.load(Ordering::Relaxed), 6);
+    }
+
+    /// Shutdown racing an in-flight job never hangs the submitter: the
+    /// submitting thread is an executor and finishes what workers drop.
+    #[test]
+    fn shutdown_during_job_completes_and_stays_usable() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let p2 = Arc::clone(&pool);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = Arc::clone(&done);
+        let submitter = thread::spawn(move || {
+            p2.run(200, 4, &|_| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                d2.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        });
+        pool.shutdown();
+        submitter.join().unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 200);
+
+        // post-shutdown jobs degrade to inline execution, still correct
+        let after = AtomicUsize::new(0);
+        pool.run(32, 4, &|_| {
+            after.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(after.load(Ordering::Relaxed), 32);
+    }
+
+    /// The helpers ride the global pool and agree with serial for every
+    /// requested width (the primitive-level thread-count wall).
+    #[test]
+    fn helpers_bit_identical_across_widths() {
+        let items: Vec<u32> = (0..731).map(|i| i * 2654435761u32).collect();
+        let serial = parallel_map(&items, 1, |i, &x| x.rotate_left((i % 31) as u32));
+        for width in [2usize, 3, 7, 8] {
+            let got = parallel_map(&items, width, |i, &x| x.rotate_left((i % 31) as u32));
+            assert_eq!(got, serial, "width {width}");
+        }
+        let mut base = vec![0u64; 1003];
+        parallel_chunks_mut(&mut base, 64, 1, |idx, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 1000 + k) as u64;
+            }
+        });
+        for width in [2usize, 3, 7, 8] {
+            let mut data = vec![0u64; 1003];
+            parallel_chunks_mut(&mut data, 64, width, |idx, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (idx * 1000 + k) as u64;
+                }
+            });
+            assert_eq!(data, base, "width {width}");
+        }
     }
 }

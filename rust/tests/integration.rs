@@ -776,6 +776,223 @@ fn native_packed_server_round_trip() {
     assert!(stats.tokens_generated >= 20);
 }
 
+/// ISSUE 7 acceptance criterion (determinism wall, kernel level): every
+/// parallel kernel produces bit-identical output across pool widths
+/// 1/2/3/7/8 and across repeated calls on a warm pool. All calls run on
+/// the process-wide persistent worker pool ([`raana::threadpool::global`]),
+/// so the repeats also prove no state leaks between jobs.
+#[test]
+fn parallel_kernels_bit_identical_across_pool_widths() {
+    use raana::hadamard::{fwht_batch, PracticalRht};
+    use raana::kernels::{gemm, qgemm, scan_scores_f32, scan_scores_q};
+    use raana::rabitq::{quantize_column, PackedCodes, QuantizedMatrix, ScaleMode};
+    use raana::rng::Rng;
+    use raana::tensor::Matrix;
+
+    const WIDTHS: [usize; 5] = [1, 2, 3, 7, 8];
+    const WARM_REPEATS: usize = 3;
+    let mut rng = Rng::new(0x700);
+
+    // qgemm over packed codes at several bit widths (the 1/4-bit widths
+    // take the autovectorized bulk decoder, 3/7 the streaming path)
+    let (n, d, c) = (9usize, 48usize, 33usize);
+    let x = Matrix::from_vec(n, d, rng.gaussian_vec(n * d));
+    for bits in [1u8, 3, 4, 7] {
+        let w = Matrix::from_vec(d, c, rng.gaussian_vec(d * c));
+        let qm = QuantizedMatrix::quantize(&w, bits, ScaleMode::MaxAbs, 1);
+        let want = qgemm(&x, &qm, 1);
+        for &t in &WIDTHS {
+            for rep in 0..WARM_REPEATS {
+                let got = qgemm(&x, &qm, t);
+                assert_eq!(
+                    got.data, want.data,
+                    "qgemm bits={bits} threads={t} rep={rep}"
+                );
+            }
+        }
+    }
+
+    // scan_scores_q over a packed row store (n > ROW_BLOCK so the scan
+    // actually splits across workers), plus the f32 scan
+    let (sn, sd, sbits) = (300usize, 40usize, 5u8);
+    let mut all_codes = Vec::with_capacity(sn * sd);
+    let mut r = Vec::with_capacity(sn);
+    for _ in 0..sn {
+        let (codes, rr) = quantize_column(&rng.gaussian_vec(sd), sbits, ScaleMode::MaxAbs);
+        all_codes.extend_from_slice(&codes);
+        r.push(rr);
+    }
+    let packed = PackedCodes::pack(&all_codes, sbits);
+    let q = rng.gaussian_vec(sd);
+    let mut want_q = vec![0f32; sn];
+    scan_scores_q(&q, &packed.data, sbits, 0, sn, &r, 1, &mut want_q);
+    let rows_f32: Vec<f32> = rng.gaussian_vec(sn * sd);
+    let mut want_f = vec![0f32; sn];
+    scan_scores_f32(&q, &rows_f32, sn, 1, &mut want_f);
+    for &t in &WIDTHS {
+        for rep in 0..WARM_REPEATS {
+            let mut got = vec![0f32; sn];
+            scan_scores_q(&q, &packed.data, sbits, 0, sn, &r, t, &mut got);
+            assert_eq!(got, want_q, "scan_scores_q threads={t} rep={rep}");
+            let mut got_f = vec![0f32; sn];
+            scan_scores_f32(&q, &rows_f32, sn, t, &mut got_f);
+            assert_eq!(got_f, want_f, "scan_scores_f32 threads={t} rep={rep}");
+        }
+    }
+
+    // fwht_batch, PracticalRht::apply_rows (d=48: two overlapping
+    // Hadamard windows), and the dense gemm
+    let base = rng.gaussian_vec(64 * 32);
+    let mut want_h = base.clone();
+    fwht_batch(&mut want_h, 32, 1);
+    let rot = PracticalRht::sample(48, &mut rng);
+    let m0 = Matrix::from_vec(37, 48, rng.gaussian_vec(37 * 48));
+    let mut want_rot = m0.clone();
+    rot.apply_rows_threaded(&mut want_rot, 1);
+    let (gm, gk, gn) = (17usize, 23usize, 29usize);
+    let a = rng.gaussian_vec(gm * gk);
+    let b = rng.gaussian_vec(gk * gn);
+    let mut want_g = vec![0f32; gm * gn];
+    gemm(gm, gk, gn, &a, &b, &mut want_g, 1);
+    for &t in &WIDTHS {
+        for rep in 0..WARM_REPEATS {
+            let mut got_h = base.clone();
+            fwht_batch(&mut got_h, 32, t);
+            assert_eq!(got_h, want_h, "fwht_batch threads={t} rep={rep}");
+            let mut got_rot = m0.clone();
+            rot.apply_rows_threaded(&mut got_rot, t);
+            assert_eq!(got_rot.data, want_rot.data, "apply_rows threads={t} rep={rep}");
+            let mut got_g = vec![0f32; gm * gn];
+            gemm(gm, gk, gn, &a, &b, &mut got_g, t);
+            assert_eq!(got_g, want_g, "gemm threads={t} rep={rep}");
+        }
+    }
+}
+
+/// ISSUE 7 acceptance criterion (determinism wall, end to end): greedy
+/// decode through the native model is bit-identical across pool widths
+/// 1/2/3/7/8 — dense weights, packed codes (the qgemm path), and the
+/// quantized KV cache (the attend_cached_q path), covering prefill and
+/// the KV-cached decode step at every width.
+#[test]
+fn greedy_decode_bit_identical_across_pool_widths() {
+    use raana::kvq::{KvqPlan, DEFAULT_ROT_SEED};
+    use raana::model::synthetic_manifest;
+    use raana::quant::LayerCalib;
+    use raana::runtime::{native_init, KvCache, NativeModel, PackedLayers};
+
+    const WIDTHS: [usize; 5] = [1, 2, 3, 7, 8];
+    let manifest = synthetic_manifest("pool-width", 32, 2, 2, 64, 12, 256, 2);
+    let params = native_init(&manifest, 77);
+    let nm = NativeModel::new(&manifest).unwrap();
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits: Vec<u8> =
+        (0..manifest.linears.len()).map(|k| [4u8, 6, 8][k % 3]).collect();
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::default(), 7, 2,
+    )
+    .unwrap();
+
+    let prompt: Vec<i32> = (0..7).map(|i| (i * 31 % 256) as i32).collect();
+    let gen = 4usize; // 7 + 4 = 11 < seq_len 12: stays inside the window
+
+    let modes: [(&str, Option<&PackedLayers>, bool); 3] = [
+        ("dense", None, false),
+        ("packed", Some(&packed), false),
+        ("packed+kvq", Some(&packed), true),
+    ];
+    for (mode, packed_opt, kvq) in modes {
+        // the width-1 (serial) trajectory is the reference the parallel
+        // widths must reproduce bit for bit
+        let mut reference: Option<Vec<Vec<f32>>> = None;
+        for &t in &WIDTHS {
+            let mut cache = if kvq {
+                let plan = KvqPlan::uniform(manifest.n_layers, 8).unwrap();
+                nm.new_kv_cache_quantized(1, plan, DEFAULT_ROT_SEED).unwrap()
+            } else {
+                KvCache::new(manifest.n_layers, 1, manifest.seq_len, manifest.d_model)
+            };
+            let mut rows = Vec::new();
+            let mut logits = nm
+                .prefill(&manifest, &params, packed_opt, &prompt, &mut cache, 0, t)
+                .unwrap();
+            rows.push(logits.clone());
+            for _ in 0..gen {
+                let tok = raana::util::argmax(&logits) as i32;
+                logits = nm
+                    .decode_step(&manifest, &params, packed_opt, &mut cache, &[0], &[tok], t)
+                    .unwrap();
+                rows.push(logits.clone());
+            }
+            match &reference {
+                None => reference = Some(rows),
+                Some(want) => assert_eq!(
+                    &rows, want,
+                    "{mode} threads={t}: greedy decode must be bit-identical \
+                     across pool widths"
+                ),
+            }
+        }
+    }
+}
+
+/// ISSUE 7 acceptance criterion: after `NativeModel` construction, a
+/// full-sequence forward plus prefill + N decode steps performs **zero**
+/// name-based parameter/linear lookups — counter-enforced exactly like
+/// the zero-dequant wall above, across dense and packed weights.
+#[test]
+fn native_serving_performs_zero_name_resolutions() {
+    use raana::model::synthetic_manifest;
+    use raana::quant::LayerCalib;
+    use raana::runtime::{native_init, ModelRuntime, PackedLayers};
+
+    let _lock = test_lock(); // exclusive: the resolution counter is global
+
+    let manifest = synthetic_manifest("zero-resolve", 32, 2, 2, 64, 16, 256, 2);
+    let params = native_init(&manifest, 41);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::none(), 7, 2,
+    )
+    .unwrap();
+
+    let dense_mrt = ModelRuntime::native(manifest.clone()).unwrap();
+    let mut packed_mrt = ModelRuntime::native(manifest).unwrap();
+    packed_mrt.attach_packed(packed).unwrap();
+
+    let tokens: Vec<i32> = (0..2 * 16).map(|i| (i * 3 % 256) as i32).collect();
+    // every one-time resolution (manifest walks, `format!`-ed block names)
+    // happened during construction above; from here the counter is flat
+    let before = raana::model::name_resolutions();
+    for mrt in [&dense_mrt, &packed_mrt] {
+        let logits = mrt.last_logits(&params, &tokens).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+        let nll = mrt.token_nll(&params, &tokens).unwrap();
+        assert!(nll.iter().all(|x| x.is_finite()));
+        let mut cache = mrt.new_kv_cache(2);
+        mrt.prefill(&params, &mut cache, 0, &tokens[..5]).unwrap();
+        mrt.prefill(&params, &mut cache, 1, &tokens[..9]).unwrap();
+        for step in 0..6 {
+            mrt.decode_step(
+                &params,
+                &mut cache,
+                &[0, 1],
+                &[(step * 7) % 256, (step * 11) % 256],
+            )
+            .unwrap();
+        }
+    }
+    assert_eq!(
+        raana::model::name_resolutions(),
+        before,
+        "steady-state serving must perform zero name-based parameter/linear \
+         lookups — they are all precomputed at NativeModel construction"
+    );
+}
+
 #[test]
 fn corpus_respects_model_seq_len() {
     require_artifacts!();

@@ -1,0 +1,69 @@
+//! Global-pool shutdown during serve drain — isolated in its own
+//! integration binary (its own process) on purpose: shutting down the
+//! process-wide worker pool is permanent, and after it every parallel
+//! helper degrades to the caller-inline path. Keeping this wall out of
+//! the shared test binaries means the determinism suites elsewhere keep
+//! their real multi-worker parallelism.
+//!
+//! This file intentionally holds exactly one `#[test]`: a second test in
+//! the same binary would race the irreversible shutdown.
+
+use raana::model::synthetic_manifest;
+use raana::quant::{LayerCalib, TrickConfig};
+use raana::runtime::{native_init, ModelRuntime, PackedLayers};
+
+/// ISSUE 7 lifecycle wall: shutting down the global pool while the serve
+/// batcher is mid-drain must neither hang nor drop completions. The pool
+/// guarantees this structurally — submitters always participate in their
+/// own jobs, so a shut-down pool degrades to inline execution instead of
+/// deadlocking — and the bits coming out are unchanged.
+#[test]
+fn global_pool_shutdown_during_serve_drain_completes() {
+    let manifest = synthetic_manifest("pool-drain", 32, 2, 2, 64, 16, 256, 2);
+    let params = native_init(&manifest, 17);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed = PackedLayers::quantize(
+        &manifest, &params, &bits, &stats, &TrickConfig::none(), 7, 2,
+    )
+    .unwrap();
+
+    // Warm the pool before the server starts, so the shutdown below races
+    // an actually-spawned worker set, not a lazily never-started one.
+    let warm: Vec<usize> = (0..64).collect();
+    let doubled = raana::threadpool::parallel_map(&warm, 4, |_, &v| v * 2);
+    assert_eq!(doubled[63], 126);
+
+    let m2 = manifest.clone();
+    let server = raana::serve::Server::start(
+        move || {
+            let mut mrt = ModelRuntime::native(m2)?;
+            mrt.attach_packed(packed)?;
+            Ok(mrt)
+        },
+        params,
+    );
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let (_, rx) = server
+            .submit(raana::data::tokenize("the fox "), 5, 0.0, i)
+            .unwrap();
+        rxs.push(rx);
+    }
+    // Kill the pool while the batcher is draining the queue.
+    raana::threadpool::global().shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let c = rx.recv().expect("completion must arrive after pool shutdown");
+        assert_eq!(c.tokens.len(), 5, "request {i}");
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.completions, 6);
+    assert!(stats.tokens_generated >= 30);
+
+    // The helpers stay serviceable inline after shutdown, and still
+    // produce the same bits they did with live workers.
+    let after = raana::threadpool::parallel_map(&warm, 8, |_, &v| v * 2);
+    assert_eq!(after, doubled);
+}
