@@ -460,7 +460,7 @@ def gen_index():
     return {"kernel": "index_search", "cases": cases}
 
 
-# ----------------------------------------- durability: WAL + snapshot bytes
+# ------------------------- durability: WAL + segment + manifest bytes
 
 def f32_bytes(values):
     """Little-endian f32 serialization of exact-f32 Python floats."""
@@ -479,9 +479,11 @@ def wal_record(seq, name, dim, rows):
 
 
 def durability_collection(name, d, bits, signs1, signs2, exact_rows):
-    """Sealed-collection state under Metric::InnerProduct (no row
+    """Flattened collection state under Metric::InnerProduct (no row
     normalization): the residual store IS the input rows, codes and
-    rescales come from the shared index quantization recipe."""
+    rescales come from the shared index quantization recipe — how the
+    rows end up split between sealed segments and the head does not
+    change this canonical form."""
     n = len(exact_rows) // d
     codes, rs = index_quantize_rows(exact_rows, n, d, bits, signs1, signs2)
     return {
@@ -497,8 +499,10 @@ def durability_collection(name, d, bits, signs1, signs2, exact_rows):
 
 
 def snapshot_bytes(next_seq, rows_at_solve, collections):
-    """Mirror of `index::snapshot::encode_snapshot` (the RQSN v1 format):
-    header, per-collection blocks in name order, whole-body CRC-32."""
+    """Mirror of `index::snapshot::encode_snapshot` (the RQSN v1 format —
+    no longer written to disk, but kept as the canonical LOGICAL encoding
+    every recovery expectation is asserted through): header,
+    per-collection blocks in name order, whole-body CRC-32."""
     out = bytearray(b"RQSN")
     out += struct.pack("<I", 1)
     out += struct.pack("<QQ", next_seq, rows_at_solve)
@@ -516,25 +520,74 @@ def snapshot_bytes(next_seq, rows_at_solve, collections):
     return bytes(out)
 
 
-def snapshot_file(next_seq):
-    """Mirror of `snapshot_file_name`: zero-padded so lexicographic order
-    is sequence order."""
-    return f"snapshot-{next_seq:020d}.seg"
+def segment_file(name, seg_id):
+    """Mirror of `segment_file_name`: the id is zero-padded and parsed
+    from the END (collection names may contain '-')."""
+    return f"segments/{name}-{seg_id:020d}.seg"
+
+
+def segment_bytes(name, seg_id, d, bits, exact_rows, signs1, signs2):
+    """Mirror of `index::segment::encode_segment` (the RQSG v1 format):
+    one sealed head — per-segment packed codes, rescales, residual rows —
+    under Metric::InnerProduct, CRC-32 tail."""
+    n = len(exact_rows) // d
+    codes, rs = index_quantize_rows(exact_rows, n, d, bits, signs1, signs2)
+    packed = bytes(pack_lsb_first(codes, bits))
+    out = bytearray(b"RQSG")
+    out += struct.pack("<I", 1)
+    out += struct.pack("<H", len(name)) + name.encode()
+    out += struct.pack("<Q", seg_id)
+    out += struct.pack("<I", d) + bytes([bits, 0])  # metric 0 = ip
+    out += struct.pack("<I", n)
+    out += struct.pack("<I", len(packed)) + packed
+    out += f32_bytes(rs)
+    out += f32_bytes(exact_rows)
+    out += struct.pack("<I", zlib.crc32(bytes(out)))
+    return bytes(out)
+
+
+def manifest_file(gen):
+    """Mirror of `manifest_file_name`: zero-padded so lexicographic order
+    is generation order."""
+    return f"manifest-{gen:020d}.mf"
+
+
+def manifest_bytes(gen, next_seq, next_seg_id, rows_at_solve, collections):
+    """Mirror of `index::segment::encode_manifest` (the RQMF v1 format):
+    store header, then per collection (strict name order) its config,
+    sign diagonals, and the ordered list of live segment references
+    `(id, rows, bits)` — a per-segment bits below the collection's marks
+    a file recovery must requantize. CRC-32 tail."""
+    out = bytearray(b"RQMF")
+    out += struct.pack("<I", 1)
+    out += struct.pack("<QQQQ", gen, next_seq, next_seg_id, rows_at_solve)
+    out += struct.pack("<I", len(collections))
+    for c in sorted(collections, key=lambda c: c["name"]):
+        out += struct.pack("<H", len(c["name"])) + c["name"].encode()
+        out += struct.pack("<I", c["d"]) + bytes([c["bits"], 0])  # metric 0 = ip
+        out += struct.pack("<I", len(c["signs1"])) + f32_bytes(c["signs1"])
+        out += struct.pack("<I", len(c["signs2"])) + f32_bytes(c["signs2"])
+        out += struct.pack("<I", len(c["segments"]))
+        for sid, rows, sbits in c["segments"]:
+            out += struct.pack("<Q", sid) + struct.pack("<I", rows) + bytes([sbits])
+    out += struct.pack("<I", zlib.crc32(bytes(out)))
+    return bytes(out)
 
 
 def gen_durability():
     """Recovery edge cases as committed byte-level fixtures. Each case is
-    a data directory (relative path -> hex bytes) plus the exact recovery
-    outcome: the report counters and — the decisive cross-language check
-    — the canonical re-encoding of the recovered store, computed here
-    with numpy and asserted byte-identical by the Rust consumer
+    a data directory (relative path -> hex bytes: a manifest, its segment
+    files, and WAL tails) plus the exact recovery outcome: the report
+    counters and — the decisive cross-language check — the canonical
+    re-encoding of the recovered store, computed here with numpy and
+    asserted byte-identical by the Rust consumer
     (`rust/tests/durability.rs`) after it recovers the same directory.
 
     All cases use Metric ip (no normalization to mirror) and a Uniform
     bit plan (no rebalance cadence), and WAL records only ever target
-    collections already present in the snapshot — fresh-collection sign
+    collections already present in the manifest — fresh-collection sign
     diagonals are RNG-derived on the Rust side and not mirrorable, which
-    is exactly why snapshots serialize signs instead of seeds."""
+    is exactly why the manifest serializes signs instead of seeds."""
     rng = random.Random(0xD04A)
     d, bits = 16, 6
     signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d)]
@@ -546,6 +599,15 @@ def gen_durability():
     def col(exact_rows, name="docs", dd=None, s1=None):
         return durability_collection(
             name, dd or d, bits, s1 or signs1, signs2, exact_rows)
+
+    def seg(seg_id, exact_rows, name="docs", dd=None, s1=None):
+        return segment_bytes(name, seg_id, dd or d, bits, exact_rows,
+                             s1 or signs1, signs2)
+
+    def mcol(segments, name="docs", dd=None, s1=None):
+        return {"name": name, "d": dd or d, "bits": bits,
+                "signs1": s1 or signs1, "signs2": signs2,
+                "segments": segments}
 
     def expect(snap, replay, dropped, dup, corrupt, next_seq, rows, reenc):
         return {
@@ -561,28 +623,31 @@ def gen_durability():
 
     cases = []
 
-    # 1. empty WAL beside a snapshot: a clean zero-record file, nothing
-    # to replay, nothing dropped
+    # 1. empty WAL beside a sealed generation: a clean zero-record file,
+    # nothing to replay, nothing dropped
     sealed = rows_of(3)
-    snap = snapshot_bytes(3, 0, [col(sealed)])
     cases.append({
         "name": "empty-wal",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(3): snap.hex(), "wal/docs.wal": ""},
-        "expect": expect(3, 0, 0, 0, 0, 3, 3, snap),
+        "files": {manifest_file(1): manifest_bytes(1, 3, 2, 0,
+                                                   [mcol([(1, 3, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex(),
+                  "wal/docs.wal": ""},
+        "expect": expect(3, 0, 0, 0, 0, 3, 3, snapshot_bytes(3, 0, [col(sealed)])),
     })
 
-    # 2. snapshot only, no WAL directory at all (the state right after a
-    # snapshot sealed and deleted the logs)
+    # 2. manifest + segment only, no WAL directory at all (the state
+    # right after a seal committed and deleted the logs)
     sealed = rows_of(2)
-    snap = snapshot_bytes(2, 0, [col(sealed)])
     cases.append({
-        "name": "snapshot-only",
+        "name": "manifest-only",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(2): snap.hex()},
-        "expect": expect(2, 0, 0, 0, 0, 2, 2, snap),
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex()},
+        "expect": expect(2, 0, 0, 0, 0, 2, 2, snapshot_bytes(2, 0, [col(sealed)])),
     })
 
     # 3. torn mid-record tail: two whole records replay, the truncated
@@ -596,13 +661,15 @@ def gen_durability():
         "name": "torn-mid-record-tail",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex(),
                   "wal/docs.wal": wal.hex()},
         "expect": expect(2, 3, 1, 0, 0, 4, 5, snapshot_bytes(4, 0, [final])),
     })
 
-    # 4. duplicate replay idempotence: a WAL record the snapshot already
-    # sealed (seq below next_seq) is skipped, never double-applied
+    # 4. duplicate replay idempotence: a WAL record the manifest already
+    # covers (seq below next_seq) is skipped, never double-applied
     sealed = rows_of(2)
     new = rows_of(1)
     wal = wal_record(1, "docs", d, sealed[d:]) + wal_record(2, "docs", d, new)
@@ -611,7 +678,9 @@ def gen_durability():
         "name": "duplicate-replay",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex(),
                   "wal/docs.wal": wal.hex()},
         "expect": expect(2, 1, 0, 1, 0, 3, 3, snapshot_bytes(3, 0, [final])),
     })
@@ -628,30 +697,38 @@ def gen_durability():
         "name": "checksum-mismatch",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(1): snapshot_bytes(1, 0, [col(sealed)]).hex(),
+        "files": {manifest_file(1): manifest_bytes(1, 1, 2, 0,
+                                                   [mcol([(1, 1, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex(),
                   "wal/docs.wal": wal.hex()},
         "expect": expect(1, 1, 1, 0, 0, 2, 2, snapshot_bytes(2, 0, [final])),
     })
 
-    # 6. corrupt newest snapshot: recovery skips it (counted), falls back
-    # to the kept predecessor, and the WAL still covers the gap
+    # 6. corrupt newest manifest: recovery skips that generation
+    # (counted), falls back to the kept predecessor, the WAL still
+    # covers the gap, and the newer generation's segment file is simply
+    # an unreferenced orphan
     sealed = rows_of(2)
     extra = rows_of(1)
-    newest = bytearray(snapshot_bytes(3, 0, [col(sealed + extra)]))
-    newest[20] ^= 0x01  # CRC catches the flip; the file is skipped
+    newest = bytearray(manifest_bytes(2, 3, 3, 0,
+                                      [mcol([(1, 2, bits), (2, 1, bits)])]))
+    newest[20] ^= 0x01  # CRC catches the flip; the generation is skipped
     cases.append({
-        "name": "corrupt-snapshot-fallback",
+        "name": "corrupt-manifest-fallback",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(2): snapshot_bytes(2, 0, [col(sealed)]).hex(),
-                  snapshot_file(3): bytes(newest).hex(),
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)])]).hex(),
+                  manifest_file(2): bytes(newest).hex(),
+                  segment_file("docs", 1): seg(1, sealed).hex(),
+                  segment_file("docs", 2): seg(2, extra).hex(),
                   "wal/docs.wal": wal_record(2, "docs", d, extra).hex()},
         "expect": expect(2, 1, 0, 0, 1, 3, 3,
                          snapshot_bytes(3, 0, [col(sealed + extra)])),
     })
 
     # 7. interleaved collections: per-collection WAL files merge back by
-    # the store-global seq, and the snapshot's name order is canonical
+    # the store-global seq, and the manifest's name order is canonical
     d2 = 8
     s_alpha = [float(rng.choice((-1.0, 1.0))) for _ in range(d2)]
     s_beta = [float(rng.choice((-1.0, 1.0))) for _ in range(d2)]
@@ -659,20 +736,161 @@ def gen_durability():
     b1 = rand_f32_list(rng, d2, 1.5)
     b2 = rand_f32_list(rng, d2, 1.5)
     a3 = rand_f32_list(rng, d2, 1.5)
-    sealed_cols = [col(a0, "alpha", d2, s_alpha), col(b1, "beta", d2, s_beta)]
+    manifest = manifest_bytes(1, 2, 3, 0, [
+        mcol([(1, 1, bits)], "alpha", d2, s_alpha),
+        mcol([(2, 1, bits)], "beta", d2, s_beta),
+    ])
     final_cols = [col(a0 + a3, "alpha", d2, s_alpha),
                   col(b1 + b2, "beta", d2, s_beta)]
     cases.append({
         "name": "interleaved-collections",
         "bits": bits,
         "metric": "ip",
-        "files": {snapshot_file(2): snapshot_bytes(2, 0, sealed_cols).hex(),
+        "files": {manifest_file(1): manifest.hex(),
+                  segment_file("alpha", 1): seg(1, a0, "alpha", d2, s_alpha).hex(),
+                  segment_file("beta", 2): seg(2, b1, "beta", d2, s_beta).hex(),
                   "wal/beta.wal": wal_record(2, "beta", d2, b2).hex(),
                   "wal/alpha.wal": wal_record(3, "alpha", d2, a3).hex()},
         "expect": expect(2, 2, 0, 0, 0, 4, 4, snapshot_bytes(4, 0, final_cols)),
     })
 
     return {"kernel": "durability_recovery", "cases": cases}
+
+
+def gen_segments():
+    """Segment-format edge cases (`rust/tests/segments.rs` consumes
+    these): scatter across several sealed segments, the stale-width
+    requantize path, orphan tolerance, and whole-generation rejection on
+    a missing or corrupt referenced segment. d = 10 on purpose — the
+    practical RHT uses both (overlapping) windows, and at 5 bits a row
+    is 50 bits, so rows share bytes and the per-segment packing differs
+    from the flattened canonical packing (which pins that recovery
+    really repacks, not concatenates)."""
+    rng = random.Random(0x5E65)
+    d, bits = 10, 5
+    d_hat = floor_pow2(d)
+    signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+    signs2 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+
+    def rows_of(n):
+        return rand_f32_list(rng, n * d, 1.5)
+
+    def col(exact_rows, b=bits):
+        return durability_collection("docs", d, b, signs1, signs2, exact_rows)
+
+    def seg(seg_id, exact_rows, b=bits):
+        return segment_bytes("docs", seg_id, d, b, exact_rows, signs1, signs2)
+
+    def mcol(segments, b=bits):
+        return {"name": "docs", "d": d, "bits": b,
+                "signs1": signs1, "signs2": signs2, "segments": segments}
+
+    def expect(snap, replay, dropped, corrupt, next_seq, rows, segments, reenc):
+        return {
+            "snapshot_rows": snap,
+            "replayed_rows": replay,
+            "dropped_records": dropped,
+            "corrupt_snapshots": corrupt,
+            "next_seq": next_seq,
+            "rows": rows,
+            "segments": segments,
+            "reencoded_snapshot": reenc.hex(),
+        }
+
+    cases = []
+
+    # 1. scatter across two sealed segments + a WAL tail into the head:
+    # the canonical re-encoding flattens all three, repacking codes
+    # across the segment boundaries
+    seg_a, seg_b, tail = rows_of(2), rows_of(3), rows_of(1)
+    cases.append({
+        "name": "multi-segment-scatter",
+        "bits": bits,
+        "metric": "ip",
+        "files": {manifest_file(1): manifest_bytes(1, 5, 3, 0,
+                                                   [mcol([(1, 2, bits),
+                                                          (2, 3, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, seg_a).hex(),
+                  segment_file("docs", 2): seg(2, seg_b).hex(),
+                  "wal/docs.wal": wal_record(5, "docs", d, tail).hex()},
+        "expect": expect(5, 1, 0, 0, 6, 6, 2,
+                         snapshot_bytes(6, 0, [col(seg_a + seg_b + tail)])),
+    })
+
+    # 2. stale width: the manifest says the collection runs at 3 bits
+    # but the file on disk was sealed at 5 (a rebalance narrowed the
+    # plan after the seal; compaction has not rewritten the file yet) —
+    # recovery must requantize the segment's rows from its residual
+    # store, bit-identical to a fresh 3-bit encode
+    stale = rows_of(2)
+    cases.append({
+        "name": "stale-width-requantize",
+        "bits": 3,
+        "metric": "ip",
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)],
+                                                         b=3)]).hex(),
+                  segment_file("docs", 1): seg(1, stale, b=bits).hex()},
+        "expect": expect(2, 0, 0, 0, 2, 2, 1, snapshot_bytes(2, 0, [col(stale, b=3)])),
+    })
+
+    # 3. an orphan segment file (valid bytes, but no manifest references
+    # it — a crash between a segment write and its manifest commit) is
+    # ignored entirely
+    live, orphan, tail = rows_of(2), rows_of(1), rows_of(1)
+    cases.append({
+        "name": "orphan-segment-ignored",
+        "bits": bits,
+        "metric": "ip",
+        "files": {manifest_file(1): manifest_bytes(1, 2, 2, 0,
+                                                   [mcol([(1, 2, bits)])]).hex(),
+                  segment_file("docs", 1): seg(1, live).hex(),
+                  segment_file("docs", 7): seg(7, orphan).hex(),
+                  "wal/docs.wal": wal_record(2, "docs", d, tail).hex()},
+        "expect": expect(2, 1, 0, 0, 3, 3, 1,
+                         snapshot_bytes(3, 0, [col(live + tail)])),
+    })
+
+    # 4. a referenced segment file is MISSING: the whole newer generation
+    # is rejected (partial loads could mix swaps), recovery falls back to
+    # the predecessor, and the still-present WAL covers the difference
+    first = rows_of(2)
+    second = rows_of(2)
+    gen1 = manifest_bytes(1, 2, 2, 0, [mcol([(1, 2, bits)])])
+    gen2 = manifest_bytes(2, 4, 3, 0, [mcol([(1, 2, bits), (2, 2, bits)])])
+    wal = (wal_record(2, "docs", d, second[:d])
+           + wal_record(3, "docs", d, second[d:]))
+    cases.append({
+        "name": "missing-referenced-segment",
+        "bits": bits,
+        "metric": "ip",
+        "files": {manifest_file(1): gen1.hex(),
+                  manifest_file(2): gen2.hex(),
+                  segment_file("docs", 1): seg(1, first).hex(),
+                  # segment 2 intentionally absent
+                  "wal/docs.wal": wal.hex()},
+        "expect": expect(2, 2, 0, 1, 4, 4, 1,
+                         snapshot_bytes(4, 0, [col(first + second)])),
+    })
+
+    # 5. a referenced segment file is CORRUPT (one flipped byte fails its
+    # CRC): same whole-generation rejection and fallback as case 4
+    broken = bytearray(seg(2, second))
+    broken[25] ^= 0x10
+    cases.append({
+        "name": "corrupt-referenced-segment",
+        "bits": bits,
+        "metric": "ip",
+        "files": {manifest_file(1): gen1.hex(),
+                  manifest_file(2): gen2.hex(),
+                  segment_file("docs", 1): seg(1, first).hex(),
+                  segment_file("docs", 2): bytes(broken).hex(),
+                  "wal/docs.wal": wal.hex()},
+        "expect": expect(2, 2, 0, 1, 4, 4, 1,
+                         snapshot_bytes(4, 0, [col(first + second)])),
+    })
+
+    return {"kernel": "segment_recovery", "cases": cases}
 
 
 # ----------------------------------------------------------------- harness
@@ -684,6 +902,7 @@ GENERATORS = {
     "kvq_attend.json": gen_kvq,
     "index_search.json": gen_index,
     "durability.json": gen_durability,
+    "segments.json": gen_segments,
 }
 
 

@@ -1,11 +1,12 @@
 """Durability mirror suite (numpy-only — runs where rustc is absent).
 
-The crash-safety layer (`rust/src/index/{wal,snapshot,durability}.rs`)
+The crash-safety layer (`rust/src/index/{wal,segment,durability}.rs`)
 is pinned cross-language through the committed byte-level fixtures in
 ``rust/tests/vectors/durability.json``. This suite is the Python half of
 that wall: an independent reimplementation of the WAL record format, the
-RQSN v1 snapshot format, and the recovery state machine (newest usable
-snapshot → stop-at-first-corruption WAL parse → seq-merged replay), run
+RQSG segment / RQMF manifest formats, and the recovery state machine
+(newest usable manifest generation → load + validate every referenced
+segment → stop-at-first-corruption WAL parse → seq-merged replay), run
 against the same fixture directories the Rust consumer recovers.
 
 Three jobs:
@@ -17,11 +18,17 @@ Three jobs:
 2. **fault-injection properties, mirrored** — truncating a WAL at every
    byte recovers exactly the whole-record prefix, any single corrupted
    byte in a record ends the replayable prefix before it, and any
-   corrupted or truncated snapshot is rejected outright (whole-body
-   CRC);
-3. **the tentpole property in numpy** — recovery from a snapshot + a
-   WAL torn at an arbitrary byte equals a fresh build of the durable
-   add prefix, byte-for-byte through the canonical snapshot encoding.
+   corrupted or truncated segment or manifest is rejected outright
+   (whole-body CRC);
+3. **the tentpole property in numpy** — recovery from a sealed
+   generation + a WAL torn at an arbitrary byte equals a fresh build of
+   the durable add prefix, byte-for-byte through the canonical RQSN
+   encoding (which is no longer written to disk but remains the logical
+   equality yardstick).
+
+The segment-specific walls (scatter, stale-width requantize, orphan and
+missing/corrupt referenced segments) live in ``test_segments.py`` and
+reuse this module's mirror.
 """
 
 import json
@@ -86,7 +93,7 @@ def parse_wal(data):
     return recs, "clean"
 
 
-# -------------------------------------------------- snapshot format mirror
+# --------------------------------------- segment / manifest format mirrors
 
 def unpack_lsb_first(data, bits, n):
     """Inverse of `gen_vectors.pack_lsb_first` (LSB-first bit packing)."""
@@ -99,63 +106,116 @@ def f32_list(buf):
     return [float(x) for x in np.frombuffer(buf, dtype="<f4")]
 
 
-def parse_snapshot(data):
-    """Mirror of `snapshot::decode_snapshot`: the decoded store state, or
-    None when the CRC, magic, version, or structure is off."""
-    if len(data) < 32:
+def parse_segment(data):
+    """Mirror of `segment::decode_segment`: the decoded file, or None
+    when the CRC, magic, version, or structure is off."""
+    if len(data) < 36:
         return None
     body, tail = data[:-4], data[-4:]
     if zlib.crc32(body) != struct.unpack("<I", tail)[0]:
         return None
-    if body[:4] != b"RQSN" or struct.unpack_from("<I", body, 4)[0] != 1:
+    if body[:4] != b"RQSG" or struct.unpack_from("<I", body, 4)[0] != 1:
         return None
-    next_seq, rows_at_solve = struct.unpack_from("<QQ", body, 8)
-    ncols, = struct.unpack_from("<I", body, 24)
-    off = 28
-    cols = {}
     try:
+        off = 8
+        name_len, = struct.unpack_from("<H", body, off)
+        off += 2
+        name = body[off:off + name_len].decode()
+        off += name_len
+        seg_id, = struct.unpack_from("<Q", body, off)
+        off += 8
+        d, = struct.unpack_from("<I", body, off)
+        bits, metric = body[off + 4], body[off + 5]
+        off += 6
+        if d == 0 or not 1 <= bits <= 8 or metric > 1:
+            return None
+        nrows, codes_len = struct.unpack_from("<II", body, off)
+        off += 8
+        if codes_len != (nrows * d * bits + 7) // 8:
+            return None
+        codes = unpack_lsb_first(body[off:off + codes_len], bits, nrows * d)
+        off += codes_len
+        r = f32_list(body[off:off + 4 * nrows])
+        off += 4 * nrows
+        exact = f32_list(body[off:off + 4 * nrows * d])
+        off += 4 * nrows * d
+        if off != len(body) or len(r) != nrows or len(exact) != nrows * d:
+            return None
+    except (struct.error, IndexError, UnicodeDecodeError, ValueError):
+        return None
+    return {"name": name, "id": seg_id, "d": d, "bits": bits,
+            "metric": metric, "codes": codes, "r": r, "exact": exact}
+
+
+def parse_manifest(data):
+    """Mirror of `segment::decode_manifest`: the decoded store manifest,
+    or None when the CRC, magic, version, ordering, or any segment
+    reference is off."""
+    if len(data) < 48:
+        return None
+    body, tail = data[:-4], data[-4:]
+    if zlib.crc32(body) != struct.unpack("<I", tail)[0]:
+        return None
+    if body[:4] != b"RQMF" or struct.unpack_from("<I", body, 4)[0] != 1:
+        return None
+    try:
+        gen, next_seq, next_seg_id, rows_at_solve = \
+            struct.unpack_from("<QQQQ", body, 8)
+        ncols, = struct.unpack_from("<I", body, 40)
+        off = 44
+        cols = []
+        prev_name = None
         for _ in range(ncols):
             name_len, = struct.unpack_from("<H", body, off)
             off += 2
             name = body[off:off + name_len].decode()
             off += name_len
+            if prev_name is not None and prev_name >= name:
+                return None
+            prev_name = name
             d, = struct.unpack_from("<I", body, off)
             bits, metric = body[off + 4], body[off + 5]
             off += 6
+            if d == 0 or not 1 <= bits <= 8 or metric > 1:
+                return None
             d_hat, = struct.unpack_from("<I", body, off)
             off += 4
+            if d_hat == 0 or d_hat > d:
+                return None
             signs1 = f32_list(body[off:off + 4 * d_hat])
             off += 4 * d_hat
             s2len, = struct.unpack_from("<I", body, off)
             off += 4
+            if s2len not in (0, d_hat):
+                return None
             signs2 = f32_list(body[off:off + 4 * s2len])
             off += 4 * s2len
-            nrows, codes_len = struct.unpack_from("<II", body, off)
-            off += 8
-            if codes_len != (nrows * d * bits + 7) // 8:
-                return None
-            codes = unpack_lsb_first(body[off:off + codes_len], bits, nrows * d)
-            off += codes_len
-            r = f32_list(body[off:off + 4 * nrows])
-            off += 4 * nrows
-            exact = f32_list(body[off:off + 4 * nrows * d])
-            off += 4 * nrows * d
-            if len(exact) != nrows * d:
-                return None
-            cols[name] = {"d": d, "bits": bits, "metric": metric,
-                          "signs1": signs1, "signs2": signs2,
-                          "codes": codes, "r": r, "exact": exact}
+            nsegs, = struct.unpack_from("<I", body, off)
+            off += 4
+            segments = []
+            for _ in range(nsegs):
+                sid, srows = struct.unpack_from("<QI", body, off)
+                sbits = body[off + 12]
+                off += 13
+                if srows == 0 or not 1 <= sbits <= 8 or sid >= next_seg_id:
+                    return None
+                segments.append((sid, srows, sbits))
+            cols.append({"name": name, "d": d, "bits": bits,
+                         "metric": metric, "signs1": signs1,
+                         "signs2": signs2, "segments": segments})
     except (struct.error, IndexError, UnicodeDecodeError, ValueError):
         return None
     if off != len(body):
         return None
-    return {"next_seq": next_seq, "rows_at_solve": rows_at_solve,
-            "collections": cols}
+    return {"gen": gen, "next_seq": next_seq, "next_seg_id": next_seg_id,
+            "rows_at_solve": rows_at_solve, "collections": cols}
 
 
 def encode_state(state):
     """Canonical re-encoding of a recovered state — byte-identical to
-    Rust's `encode_snapshot(store, next_seq)` by construction."""
+    Rust's `encode_snapshot(store, next_seq)` by construction (which
+    flattens and repacks codes globally regardless of how the rows were
+    split between segments and the head)."""
     cols = []
     for name, c in state["collections"].items():
         cols.append({"name": name, "d": c["d"], "bits": c["bits"],
@@ -167,37 +227,82 @@ def encode_state(state):
 
 # --------------------------------------------------- recovery state machine
 
-def snapshot_seq(name):
-    """Mirror of `snapshot::parse_snapshot_seq`."""
-    if not (name.startswith("snapshot-") and name.endswith(".seg")):
+def manifest_gen(name):
+    """Mirror of `segment::parse_manifest_gen`."""
+    if not (name.startswith("manifest-") and name.endswith(".mf")):
         return None
-    body = name[len("snapshot-"):-len(".seg")]
+    body = name[len("manifest-"):-len(".mf")]
     if len(body) != 20 or not body.isdigit():
         return None
     return int(body)
 
 
+def load_generation(files, gen):
+    """Mirror of `durability::load_manifest_generation`: decode the
+    manifest at `gen`, then load and validate every referenced segment.
+    ANY failure — corrupt manifest, missing file, corrupt segment, or a
+    header that disagrees with its manifest entry — fails the whole
+    generation (None). A per-segment width below the collection's means
+    the file predates a rebalance: those rows are requantized from the
+    segment's residual store. Returns (state, segment_count)."""
+    m = parse_manifest(files.get(gv.manifest_file(gen), b""))
+    if m is None or m["gen"] != gen:
+        return None
+    cols = {}
+    nsegs = 0
+    for mc in m["collections"]:
+        col = {"d": mc["d"], "bits": mc["bits"], "metric": mc["metric"],
+               "signs1": mc["signs1"], "signs2": mc["signs2"],
+               "codes": [], "r": [], "exact": []}
+        for sid, srows, sbits in mc["segments"]:
+            path = gv.segment_file(mc["name"], sid)
+            if path not in files:
+                return None
+            seg = parse_segment(files[path])
+            if seg is None:
+                return None
+            if (seg["name"] != mc["name"] or seg["id"] != sid
+                    or seg["d"] != mc["d"] or seg["metric"] != mc["metric"]
+                    or len(seg["r"]) != srows or seg["bits"] != sbits):
+                return None
+            if sbits != mc["bits"]:
+                codes, rs = gv.index_quantize_rows(
+                    seg["exact"], srows, mc["d"], mc["bits"],
+                    mc["signs1"], mc["signs2"])
+            else:
+                codes, rs = seg["codes"], seg["r"]
+            col["codes"].extend(codes)
+            col["r"].extend(rs)
+            col["exact"].extend(seg["exact"])
+            nsegs += 1
+        cols[mc["name"]] = col
+    state = {"next_seq": m["next_seq"], "rows_at_solve": m["rows_at_solve"],
+             "collections": cols}
+    return state, nsegs
+
+
 def recover(files):
     """Mirror of `durability::recover` over a dict of relative path →
-    bytes: newest decodable snapshot (corrupt ones counted and skipped),
-    per-file stop-at-first-corruption WAL parse, seq-sorted merge, and a
-    contiguous replay from the snapshot's next_seq. Replay targets must
-    already exist in the snapshot (the fixture contract — fresh
-    collections would need the Rust sign-sampling RNG).
+    bytes: newest loadable manifest generation (failed ones counted and
+    skipped), per-file stop-at-first-corruption WAL parse, seq-sorted
+    merge, and a contiguous replay from the manifest's next_seq. Replay
+    targets must already exist in the manifest (the fixture contract —
+    fresh collections would need the Rust sign-sampling RNG).
 
     The Rust engine additionally RESEALS after a recovery that dropped,
-    skipped, or rejected anything (snapshot + delete all WALs) before
+    skipped, or rejected anything (seal + delete all WALs) before
     accepting new writes; that is post-recovery engine behavior, not
     part of the recovery function mirrored here — the recovered state
     and report this returns are unaffected by it."""
     report = {"snapshot_rows": 0, "replayed_rows": 0, "dropped_records": 0,
-              "duplicate_records": 0, "corrupt_snapshots": 0}
-    snaps = sorted((n for n in files if snapshot_seq(n) is not None),
-                   key=snapshot_seq, reverse=True)
+              "duplicate_records": 0, "corrupt_snapshots": 0, "segments": 0}
+    gens = sorted((manifest_gen(n) for n in files
+                   if manifest_gen(n) is not None), reverse=True)
     state = None
-    for name in snaps:
-        state = parse_snapshot(files[name])
-        if state is not None:
+    for gen in gens:
+        loaded = load_generation(files, gen)
+        if loaded is not None:
+            state, report["segments"] = loaded
             break
         report["corrupt_snapshots"] += 1
     if state is None:
@@ -263,8 +368,9 @@ def test_committed_cases_rederive_through_the_mirror(case):
 
 def test_fixture_covers_the_required_edge_cases():
     names = {c["name"] for c in durability_cases()}
-    required = {"empty-wal", "snapshot-only", "torn-mid-record-tail",
-                "duplicate-replay", "checksum-mismatch"}
+    required = {"empty-wal", "manifest-only", "torn-mid-record-tail",
+                "duplicate-replay", "checksum-mismatch",
+                "corrupt-manifest-fallback", "interleaved-collections"}
     assert required <= names, f"missing durability cases: {required - names}"
 
 
@@ -272,6 +378,11 @@ def test_fixture_covers_the_required_edge_cases():
 
 def _signs(rng, d):
     return [float(rng.choice((-1.0, 1.0))) for _ in range(d)]
+
+
+def _mcol(name, d, bits, signs1, signs2, segments):
+    return {"name": name, "d": d, "bits": bits,
+            "signs1": signs1, "signs2": signs2, "segments": segments}
 
 
 def _wal_of(rng, n_records):
@@ -311,51 +422,68 @@ def test_any_corrupted_record_byte_ends_the_prefix_before_it():
         assert got == [] and tail != "clean", f"byte={byte}: {tail}"
 
 
-def test_any_snapshot_corruption_or_truncation_is_rejected():
+def test_any_segment_or_manifest_corruption_or_truncation_is_rejected():
     rng = random.Random(0x7E44)
     signs1 = _signs(rng, D)
-    col = gv.durability_collection(
-        "docs", D, BITS, signs1, [], gv.rand_f32_list(rng, 3 * D, 1.5))
-    snap = gv.snapshot_bytes(3, 0, [col])
-    assert parse_snapshot(snap) is not None, "clean snapshot must decode"
-    for byte in range(len(snap)):
-        bad = bytearray(snap)
-        bad[byte] ^= 0x04
-        assert parse_snapshot(bytes(bad)) is None, f"flip at {byte}"
-    for cut in range(len(snap)):
-        assert parse_snapshot(snap[:cut]) is None, f"truncated to {cut}"
+    rows = gv.rand_f32_list(rng, 3 * D, 1.5)
+    seg = gv.segment_bytes("docs", 1, D, BITS, rows, signs1, [])
+    man = gv.manifest_bytes(1, 3, 2, 0,
+                            [_mcol("docs", D, BITS, signs1, [], [(1, 3, BITS)])])
+    assert parse_segment(seg) is not None, "clean segment must decode"
+    assert parse_manifest(man) is not None, "clean manifest must decode"
+    for blob, parse in ((seg, parse_segment), (man, parse_manifest)):
+        for byte in range(len(blob)):
+            bad = bytearray(blob)
+            bad[byte] ^= 0x04
+            assert parse(bytes(bad)) is None, f"flip at {byte}"
+        for cut in range(len(blob)):
+            assert parse(blob[:cut]) is None, f"truncated to {cut}"
 
 
-def test_snapshot_round_trips_bit_for_bit():
+def test_segment_and_manifest_round_trip_through_the_mirror():
+    # one sealed generation decodes back to exactly the state that wrote
+    # it, and the canonical re-encoding round-trips bit-for-bit
     rng = random.Random(0x7E45)
     signs1 = _signs(rng, D)
-    col = gv.durability_collection(
-        "docs", D, BITS, signs1, [], gv.rand_f32_list(rng, 4 * D, 1.5))
-    snap = gv.snapshot_bytes(7, 0, [col])
-    state = parse_snapshot(snap)
+    rows = gv.rand_f32_list(rng, 4 * D, 1.5)
+    files = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 7, 2, 0, [_mcol("docs", D, BITS, signs1, [], [(1, 4, BITS)])]),
+        gv.segment_file("docs", 1): gv.segment_bytes(
+            "docs", 1, D, BITS, rows, signs1, []),
+    }
+    state, report = recover(files)
     assert state["next_seq"] == 7
     assert list(state["collections"]) == ["docs"]
-    assert encode_state(state) == snap
+    assert report["segments"] == 1 and report["corrupt_snapshots"] == 0
+    fresh = gv.snapshot_bytes(
+        7, 0, [gv.durability_collection("docs", D, BITS, signs1, [], rows)])
+    assert encode_state(state) == fresh
 
 
 def test_recovery_equals_fresh_build_at_every_wal_tear_point():
-    # the tentpole property, mirrored: snapshot sealing the first add,
-    # WAL carrying adds 2..=5; tearing the WAL at ANY byte must recover
-    # exactly the fresh build of the whole-record prefix, byte-for-byte
-    # through the canonical encoding
+    # the tentpole property, mirrored: one sealed generation covering the
+    # first add, WAL carrying adds 2..=5; tearing the WAL at ANY byte
+    # must recover exactly the fresh build of the whole-record prefix,
+    # byte-for-byte through the canonical encoding
     rng = random.Random(0x7E46)
     signs1 = _signs(rng, D)
     adds = [gv.rand_f32_list(rng, (1 + i % 3) * D, 1.5) for i in range(5)]
-    snap = gv.snapshot_bytes(
-        1, 0, [gv.durability_collection("docs", D, BITS, signs1, [], adds[0])])
+    sealed = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 1, 2, 0,
+            [_mcol("docs", D, BITS, signs1, [],
+                   [(1, len(adds[0]) // D, BITS)])]),
+        gv.segment_file("docs", 1): gv.segment_bytes(
+            "docs", 1, D, BITS, adds[0], signs1, []),
+    }
     wal = b""
     boundaries = [0]
     for seq, rows in enumerate(adds[1:], start=1):
         wal += gv.wal_record(seq, "docs", D, rows)
         boundaries.append(len(wal))
     for cut in range(len(wal) + 1):
-        state, report = recover(
-            {"snapshot-" + "0" * 19 + "1.seg": snap, "wal/docs.wal": wal[:cut]})
+        state, report = recover({**sealed, "wal/docs.wal": wal[:cut]})
         durable = 1 + max(i for i, b in enumerate(boundaries) if b <= cut)
         fresh_rows = [v for rows in adds[:durable] for v in rows]
         fresh = gv.snapshot_bytes(durable, 0, [gv.durability_collection(
@@ -372,14 +500,18 @@ def test_duplicate_and_gap_replay_semantics():
     sealed = gv.rand_f32_list(rng, 2 * D, 1.5)
     fresh_row = gv.rand_f32_list(rng, D, 1.5)
     beyond_gap = gv.rand_f32_list(rng, D, 1.5)
-    snap = gv.snapshot_bytes(
-        2, 0, [gv.durability_collection("docs", D, BITS, signs1, [], sealed)])
-    wal = (gv.wal_record(0, "docs", D, sealed[:D])     # sealed: duplicate
-           + gv.wal_record(2, "docs", D, fresh_row)    # contiguous: replays
-           + gv.wal_record(4, "docs", D, beyond_gap))  # seq 3 missing: drops
-    state, report = recover(
-        {"snapshot-" + "0" * 19 + "2.seg": snap, "wal/docs.wal": wal})
+    files = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 2, 2, 0, [_mcol("docs", D, BITS, signs1, [], [(1, 2, BITS)])]),
+        gv.segment_file("docs", 1): gv.segment_bytes(
+            "docs", 1, D, BITS, sealed, signs1, []),
+        "wal/docs.wal":
+            (gv.wal_record(0, "docs", D, sealed[:D])     # sealed: duplicate
+             + gv.wal_record(2, "docs", D, fresh_row)    # contiguous: replays
+             + gv.wal_record(4, "docs", D, beyond_gap)),  # seq 3 missing: drops
+    }
+    state, report = recover(files)
     assert report == {"snapshot_rows": 2, "replayed_rows": 1,
                       "dropped_records": 1, "duplicate_records": 1,
-                      "corrupt_snapshots": 0}
+                      "corrupt_snapshots": 0, "segments": 1}
     assert state["next_seq"] == 3

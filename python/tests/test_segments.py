@@ -1,0 +1,189 @@
+"""Segment-layout mirror suite (numpy-only — runs where rustc is
+absent).
+
+The segmented on-disk layout (`rust/src/index/segment.rs` + the
+recovery side of `durability.rs`) is pinned cross-language through the
+committed fixtures in ``rust/tests/vectors/segments.json``, consumed on
+the Rust side by ``rust/tests/segments.rs``. This suite re-derives every
+committed case through the recovery mirror in ``test_durability.py`` and
+adds the segment-specific properties:
+
+1. **scatter repack** — rows split across several sealed segments
+   re-encode to the same canonical flattened RQSN bytes as one monolithic
+   build (the fixture dimensions make per-segment code packing differ
+   from the flattened packing, so this pins a real repack, not a
+   concatenation);
+2. **stale-width requantize** — a segment file sealed at one width under
+   a manifest that has since narrowed the collection recovers
+   bit-identical to a fresh encode at the new width;
+3. **whole-generation rejection** — a missing or corrupt referenced
+   segment fails its entire manifest generation, falling back to the
+   kept predecessor, while valid orphan files are simply ignored.
+"""
+
+import json
+import random
+
+import pytest
+
+import gen_vectors as gv
+import test_durability as td
+
+VEC = gv.VECTOR_DIR
+D, BITS = 10, 5  # both RHT windows in play; 50-bit rows share bytes
+
+
+# ----------------------------------------------------------------- fixtures
+
+def segment_cases():
+    return json.loads((VEC / "segments.json").read_text())["cases"]
+
+
+@pytest.mark.parametrize("case", segment_cases(), ids=lambda c: c["name"])
+def test_committed_cases_rederive_through_the_mirror(case):
+    state, report = td.recover(td.case_files(case))
+    expect = case["expect"]
+    for key in ("snapshot_rows", "replayed_rows", "dropped_records",
+                "corrupt_snapshots", "segments"):
+        assert report[key] == expect[key], f"{case['name']}: {key}"
+    assert state["next_seq"] == expect["next_seq"]
+    assert sum(len(c["r"]) for c in state["collections"].values()) \
+        == expect["rows"]
+    assert td.encode_state(state).hex() == expect["reencoded_snapshot"], \
+        f"{case['name']}: canonical re-encoding diverged"
+
+
+def test_fixture_covers_the_required_edge_cases():
+    names = {c["name"] for c in segment_cases()}
+    required = {"multi-segment-scatter", "stale-width-requantize",
+                "orphan-segment-ignored", "missing-referenced-segment",
+                "corrupt-referenced-segment"}
+    assert required <= names, f"missing segment cases: {required - names}"
+
+
+# ------------------------------------------------------------- properties
+
+def _env(seed):
+    rng = random.Random(seed)
+    d_hat = gv.floor_pow2(D)
+    signs1 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+    signs2 = [float(rng.choice((-1.0, 1.0))) for _ in range(d_hat)]
+    return rng, signs1, signs2
+
+
+def _mcol(segments, signs1, signs2, bits=BITS):
+    return {"name": "docs", "d": D, "bits": bits,
+            "signs1": signs1, "signs2": signs2, "segments": segments}
+
+
+def _seg(seg_id, rows, signs1, signs2, bits=BITS):
+    return gv.segment_bytes("docs", seg_id, D, bits, rows, signs1, signs2)
+
+
+def _fresh(rows, signs1, signs2, next_seq, bits=BITS):
+    return gv.snapshot_bytes(next_seq, 0, [gv.durability_collection(
+        "docs", D, bits, signs1, signs2, rows)])
+
+
+def test_any_segment_split_reencodes_to_the_monolithic_build():
+    # 6 rows split 1+5, 2+4, 3+3, … across two segments, plus a no-split
+    # baseline: every split must recover to the SAME canonical bytes
+    rng, signs1, signs2 = _env(0x5E01)
+    rows = gv.rand_f32_list(rng, 6 * D, 1.5)
+    fresh = _fresh(rows, signs1, signs2, 6)
+    for cut_rows in range(7):
+        a, b = rows[:cut_rows * D], rows[cut_rows * D:]
+        segs = [(1, len(a) // D, BITS), (2, len(b) // D, BITS)]
+        segs = [s for s in segs if s[1] > 0]
+        files = {gv.manifest_file(1): gv.manifest_bytes(
+            1, 6, 3, 0, [_mcol(segs, signs1, signs2)])}
+        if a:
+            files[gv.segment_file("docs", 1)] = _seg(1, a, signs1, signs2)
+        if b:
+            files[gv.segment_file("docs", 2)] = _seg(2, b, signs1, signs2)
+        state, report = td.recover(files)
+        assert report["segments"] == len(segs)
+        assert td.encode_state(state) == fresh, f"split at row {cut_rows}"
+
+
+def test_per_segment_packing_really_differs_from_the_flattened_packing():
+    # the repack property above is only meaningful if concatenating the
+    # per-segment code bytes would NOT equal the flattened packing — at
+    # 50 bits per row a 1-row segment ends mid-byte, so it must differ
+    rng, signs1, signs2 = _env(0x5E02)
+    rows = gv.rand_f32_list(rng, 2 * D, 1.5)
+    codes, _ = gv.index_quantize_rows(rows, 2, D, BITS, signs1, signs2)
+    whole = bytes(gv.pack_lsb_first(codes, BITS))
+    half_a = bytes(gv.pack_lsb_first(codes[:D], BITS))
+    half_b = bytes(gv.pack_lsb_first(codes[D:], BITS))
+    assert half_a + half_b != whole, \
+        "fixture dims must force a real repack (rows share bytes)"
+
+
+def test_stale_width_segment_requantizes_to_a_fresh_encode():
+    # sealed at 5 bits, manifest narrowed to 3: recovery must requantize
+    # from the residual store, equal to a fresh 3-bit build
+    rng, signs1, signs2 = _env(0x5E03)
+    rows = gv.rand_f32_list(rng, 3 * D, 1.5)
+    files = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 3, 2, 0, [_mcol([(1, 3, BITS)], signs1, signs2, bits=3)]),
+        gv.segment_file("docs", 1): _seg(1, rows, signs1, signs2, bits=BITS),
+    }
+    state, report = td.recover(files)
+    assert report["corrupt_snapshots"] == 0 and report["segments"] == 1
+    assert td.encode_state(state) == _fresh(rows, signs1, signs2, 3, bits=3)
+
+
+def test_missing_or_corrupt_referenced_segment_fails_the_generation():
+    rng, signs1, signs2 = _env(0x5E04)
+    first = gv.rand_f32_list(rng, 2 * D, 1.5)
+    second = gv.rand_f32_list(rng, D, 1.5)
+    gen1 = gv.manifest_bytes(1, 2, 2, 0, [_mcol([(1, 2, BITS)], signs1, signs2)])
+    gen2 = gv.manifest_bytes(2, 3, 3, 0,
+                             [_mcol([(1, 2, BITS), (2, 1, BITS)],
+                                    signs1, signs2)])
+    base = {gv.manifest_file(1): gen1, gv.manifest_file(2): gen2,
+            gv.segment_file("docs", 1): _seg(1, first, signs1, signs2),
+            "wal/docs.wal": gv.wal_record(2, "docs", D, second)}
+    corrupt = bytearray(_seg(2, second, signs1, signs2))
+    corrupt[19] ^= 0x08
+    for variant in (dict(base),
+                    {**base, gv.segment_file("docs", 2): bytes(corrupt)}):
+        state, report = td.recover(variant)
+        assert report["corrupt_snapshots"] == 1, "gen 2 must be rejected"
+        assert report["segments"] == 1 and report["replayed_rows"] == 1
+        assert td.encode_state(state) == \
+            _fresh(first + second, signs1, signs2, 3)
+
+
+def test_valid_orphan_segments_are_ignored():
+    # a crash between a segment write and its manifest commit leaves a
+    # well-formed file no manifest references; recovery must not load it
+    rng, signs1, signs2 = _env(0x5E05)
+    live = gv.rand_f32_list(rng, 2 * D, 1.5)
+    orphan = gv.rand_f32_list(rng, D, 1.5)
+    files = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 2, 2, 0, [_mcol([(1, 2, BITS)], signs1, signs2)]),
+        gv.segment_file("docs", 1): _seg(1, live, signs1, signs2),
+        gv.segment_file("docs", 9): _seg(9, orphan, signs1, signs2),
+    }
+    state, report = td.recover(files)
+    assert report["segments"] == 1 and report["corrupt_snapshots"] == 0
+    assert td.encode_state(state) == _fresh(live, signs1, signs2, 2)
+
+
+def test_header_disagreement_with_the_manifest_fails_the_generation():
+    # a well-formed segment file whose row count disagrees with its
+    # manifest entry (a swapped or stale file) must fail the generation
+    rng, signs1, signs2 = _env(0x5E06)
+    rows = gv.rand_f32_list(rng, 2 * D, 1.5)
+    files = {
+        gv.manifest_file(1): gv.manifest_bytes(
+            1, 3, 2, 0, [_mcol([(1, 3, BITS)], signs1, signs2)]),
+        gv.segment_file("docs", 1): _seg(1, rows, signs1, signs2),
+    }
+    state, report = td.recover(files)
+    assert report["corrupt_snapshots"] == 1
+    assert state["collections"] == {} and state["next_seq"] == 0

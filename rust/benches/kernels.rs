@@ -24,6 +24,12 @@
 //!   coded scan + exact rerank) vs the brute-force `index_scan_f32`
 //!   baseline at n=4096, d=256, with the scan-payload bytes-per-row
 //!   table and the recall@10 acceptance numbers in the JSON.
+//! * Durability seal: the pre-segment whole-store snapshot encode vs
+//!   the segmented head-only seal (`seal_ms_monolithic` /
+//!   `seal_ms_segmented` in §segments), plus the query p50 while a
+//!   deliberately slowed seal is in flight
+//!   (`query_p50_during_seal_us`) — the lock-split acceptance that
+//!   reads never wait on sealing.
 //!
 //! Results print as tables and land in `BENCH_kernels.json` so future PRs
 //! can diff the perf trajectory mechanically. Dimensions honor
@@ -586,6 +592,120 @@ fn main() -> anyhow::Result<()> {
                 ("recall_at10_8bit", json::num(recall)),
                 ("bytes_per_row", json::obj(lane_entries)),
                 ("bytes_per_row_ratio_8bit", json::num(ratio_8bit)),
+            ]),
+        ));
+    }
+
+    // ------------------- segmented seal cost + query latency mid-seal
+    // ISSUE 8: the old durability layer re-encoded EVERY row of every
+    // collection on each cadence snapshot; sealing now writes only the
+    // mutable head as an immutable segment plus a small manifest, and
+    // the RwLock split lets queries run while the seal's file I/O is in
+    // flight. Three numbers: the monolithic whole-store encode, the
+    // real segmented seal path (append one head batch + seal_now on a
+    // durable store over MemIo), and the query p50 while a deliberately
+    // slowed seal holds the durability engine.
+    {
+        use raana::index::durability::{DurabilityConfig, DurableStore, FsyncPolicy};
+        use raana::index::io::{Fault, FaultIo, MemIo};
+        use raana::index::snapshot::encode_snapshot;
+        use raana::index::{IndexConfig, IndexPolicy, VectorStore, DEFAULT_RERANK_FACTOR};
+        use raana::util::percentile;
+
+        let (n_sealed, n_head, d) = (8192usize, 256usize, 256usize);
+        let icfg =
+            || IndexConfig { policy: IndexPolicy::Uniform(8), ..Default::default() };
+        let dcfg = || DurabilityConfig {
+            data_dir: std::path::PathBuf::from("/bench"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0,
+            segment_rows: 0,
+        };
+        let sealed_rows = Rng::new(40).gaussian_vec(n_sealed * d);
+        let head_rows = Rng::new(41).gaussian_vec(n_head * d);
+
+        // the pre-segment cadence cost: serialize the whole store
+        let mut mono = VectorStore::new(icfg())?;
+        mono.add("bench", &sealed_rows, d, threads)?;
+        let mono_r = bench("seal_monolithic", 1, 8, || {
+            std::hint::black_box(encode_snapshot(&mono, 0));
+        });
+
+        // the segmented cost: append a head batch, seal it — O(head)
+        let durable = DurableStore::open_with(icfg(), dcfg(), Box::new(MemIo::new()))?;
+        durable.add("bench", &sealed_rows, d, threads)?;
+        durable.seal_now()?;
+        let seg_r = bench("seal_segmented", 1, 8, || {
+            durable.add("bench", &head_rows, d, threads).unwrap();
+            durable.seal_now().unwrap();
+        });
+
+        // query latency while a seal is in flight: SlowWrite stalls the
+        // seal's segment write (write 2 — the add's WAL append is
+        // write 1) for 300 ms; the store read lock stays free, so the
+        // queries below must keep completing at their normal latency
+        let slow = DurableStore::open_with(
+            icfg(),
+            dcfg(),
+            Box::new(FaultIo::new(MemIo::new(), Fault::SlowWrite { nth: 2, millis: 300 })),
+        )?;
+        slow.add("bench", &sealed_rows, d, threads)?;
+        let q = Rng::new(42).gaussian_vec(d);
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let mut lat_us: Vec<f64> = Vec::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                slow.seal_now().unwrap();
+                done.store(true, std::sync::atomic::Ordering::SeqCst);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            while !done.load(std::sync::atomic::Ordering::SeqCst) {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(
+                    slow.query("bench", &q, 10, DEFAULT_RERANK_FACTOR, threads).unwrap(),
+                );
+                lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+        });
+        let p50_us = percentile(&lat_us, 50.0);
+
+        let mono_ms = mono_r.median() * 1e3;
+        let seg_ms = seg_r.median() * 1e3;
+        let speedup = mono_ms / seg_ms.max(1e-12);
+        let mut t = Table::new(&[
+            "Durability seal (8192 sealed rows, 256-row head, d=256)",
+            "median",
+            "note",
+        ]);
+        t.row(vec![
+            "monolithic snapshot (whole-store encode)".into(),
+            format!("{mono_ms:.2} ms"),
+            "the pre-segment per-cadence cost".into(),
+        ]);
+        t.row(vec![
+            "segmented seal (add head + seal_now)".into(),
+            format!("{seg_ms:.2} ms"),
+            format!("{speedup:.1}x; O(head), includes the head quantize"),
+        ]);
+        t.row(vec![
+            "query p50 during a 300 ms-stalled seal".into(),
+            format!("{p50_us:.0} us"),
+            format!("{} queries completed mid-seal", lat_us.len()),
+        ]);
+        println!("{}", t.render());
+        report.push((
+            "segments",
+            json::obj(vec![
+                ("n_sealed", json::num(n_sealed as f64)),
+                ("n_head", json::num(n_head as f64)),
+                ("d", json::num(d as f64)),
+                ("seal_monolithic", bench_json(&mono_r)),
+                ("seal_segmented", bench_json(&seg_r)),
+                ("seal_ms_monolithic", json::num(mono_ms)),
+                ("seal_ms_segmented", json::num(seg_ms)),
+                ("seal_speedup", json::num(speedup)),
+                ("query_p50_during_seal_us", json::num(p50_us)),
+                ("queries_during_seal", json::num(lat_us.len() as f64)),
             ]),
         ));
     }

@@ -1,0 +1,412 @@
+//! Background compaction: merge small sealed segments, rewrite
+//! segments whose on-disk width went stale after a rebalance, and swap
+//! the result in atomically via one new manifest generation.
+//!
+//! Cadence sealing produces segments sized by *when* the seal fired,
+//! not by what a scan wants: row-at-a-time ingest under a tight
+//! `--snapshot-every` leaves a trail of tiny segments, each a separate
+//! scatter-gather target and a separate recovery read. Compaction
+//! walks each collection's sealed list in order and greedily merges
+//! **adjacent** runs whose combined rows fit the target segment size —
+//! adjacency keeps global row ids stable, since ids are assigned by
+//! position in the sealed sequence. Merged rows are requantized from
+//! the residual store at the collection's current width
+//! (deterministic, lossless-from-exact), so a merged segment is
+//! bit-identical to what a fresh build would pack for those rows.
+//!
+//! The same pass re-solves per-collection widths under the byte budget
+//! ([`super::VectorStore::rebalance`] — a no-op under the Uniform
+//! policy) and rewrites any segment file whose `disk_bits` no longer
+//! matches its collection, retiring the requantize-at-recovery debt.
+//! Non-empty heads are sealed in the same swap, so the new manifest is
+//! a complete checkpoint: it carries the engine's current `next_seq`
+//! and the WAL files it subsumes are deleted after the commit.
+//!
+//! Crash safety is inherited from the seal path: every new segment
+//! file is written first, the manifest write is the single commit
+//! point, and the in-memory splice happens only after it. A crash at
+//! any write ordinal leaves either the old generation (plus intact
+//! WALs, if the crash hit before the manifest landed) or the new one —
+//! the `rust/tests/segments.rs` wall drives every fault through every
+//! ordinal of a seal → compact → swap run and asserts recovery stays
+//! bit-identical to a fresh build of the durable prefix.
+
+use super::durability::{prune_files, DurableStore};
+use super::segment::{
+    encode_manifest, encode_segment, manifest_path, segment_path, ManifestCollection,
+    ManifestSegment, SegmentData, StoreManifest,
+};
+use super::wal::WAL_DIR;
+use super::IndexError;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+
+/// Target rows per merged segment when `--segment-rows` is unset.
+const DEFAULT_TARGET_ROWS: usize = 4096;
+
+/// One planned change to a collection's sealed list, indexed into the
+/// sealed vector as it stood at plan time (the engine lock is held
+/// across plan and apply, so the indices cannot go stale).
+enum SegOp {
+    /// The segment and its file are untouched.
+    Keep { idx: usize },
+    /// Same rows, new file at the collection's current width.
+    Rewrite { idx: usize, id: u64 },
+    /// A merged run; `data` replaces the run's members.
+    Merge { data: SegmentData },
+}
+
+struct CollectionPlan {
+    name: String,
+    ops: Vec<SegOp>,
+    head_id: Option<u64>,
+}
+
+impl DurableStore {
+    /// Run one compaction pass: re-solve widths, merge small adjacent
+    /// segments, rewrite stale-width files, seal non-empty heads, and
+    /// swap the manifest. Returns `Ok(true)` when a merge or rewrite
+    /// actually happened (and bumps the `compactions` counter);
+    /// `Ok(false)` when there was nothing to do — ephemeral and
+    /// read-only stores always report `false`. Queries are never
+    /// blocked: all file I/O runs without the store lock, exactly like
+    /// a seal.
+    pub fn compact_now(&self, threads: usize) -> Result<bool, IndexError> {
+        let Some(engine_mx) = &self.engine else {
+            return Ok(false);
+        };
+        let mut engine = engine_mx.lock().expect("index engine lock poisoned");
+        if engine.read_only {
+            return Ok(false);
+        }
+        // re-solve widths first so every file written below lands at
+        // the final plan (no-op under Uniform)
+        self.store
+            .write()
+            .expect("index store lock poisoned")
+            .rebalance(threads)?;
+        let target = if engine.segment_rows > 0 {
+            engine.segment_rows
+        } else {
+            DEFAULT_TARGET_ROWS
+        };
+        // plan under a read lock: decide ops, encode every new file
+        let (plans, writes, manifest_bytes, gen, new_next_id, did_work) = {
+            let store = self.store.read().expect("index store lock poisoned");
+            let mut next_id = engine.next_seg_id;
+            let mut writes: Vec<(PathBuf, Vec<u8>)> = Vec::new();
+            let mut plans: Vec<CollectionPlan> = Vec::new();
+            let mut mcols: Vec<ManifestCollection> = Vec::new();
+            let mut did_work = false;
+            for (name, c) in &store.collections {
+                let mut ops: Vec<SegOp> = Vec::new();
+                let mut segs: Vec<ManifestSegment> = Vec::new();
+                let mut i = 0usize;
+                while i < c.sealed.len() {
+                    // longest adjacent run from i that fits the target
+                    let mut j = i;
+                    let mut run_rows = 0usize;
+                    while j < c.sealed.len() && run_rows + c.sealed[j].rows() <= target {
+                        run_rows += c.sealed[j].rows();
+                        j += 1;
+                    }
+                    if j > i + 1 {
+                        let mut exact = Vec::new();
+                        for s in &c.sealed[i..j] {
+                            exact.extend_from_slice(&s.exact);
+                        }
+                        let (codes, r) = super::quantize_rows(&c.rot, c.d, &exact, c.bits);
+                        let id = next_id;
+                        next_id += 1;
+                        let bytes =
+                            encode_segment(name, c.d, c.bits, c.metric, id, &codes, &r, &exact);
+                        writes.push((segment_path(&engine.data_dir, name, id), bytes));
+                        segs.push(ManifestSegment { id, rows: run_rows, bits: c.bits });
+                        ops.push(SegOp::Merge {
+                            data: SegmentData { id, disk_bits: c.bits, codes, r, exact },
+                        });
+                        did_work = true;
+                        i = j;
+                    } else {
+                        let s = &c.sealed[i];
+                        if s.disk_bits != c.bits {
+                            // in-memory codes are already at the current
+                            // width (rebalance recodes sealed segments);
+                            // only the file needs rewriting
+                            let id = next_id;
+                            next_id += 1;
+                            let bytes = encode_segment(
+                                name, c.d, c.bits, c.metric, id, &s.codes, &s.r, &s.exact,
+                            );
+                            writes.push((segment_path(&engine.data_dir, name, id), bytes));
+                            segs.push(ManifestSegment { id, rows: s.rows(), bits: c.bits });
+                            ops.push(SegOp::Rewrite { idx: i, id });
+                            did_work = true;
+                        } else {
+                            segs.push(ManifestSegment {
+                                id: s.id,
+                                rows: s.rows(),
+                                bits: s.disk_bits,
+                            });
+                            ops.push(SegOp::Keep { idx: i });
+                        }
+                        i += 1;
+                    }
+                }
+                let head_id = if c.r.is_empty() {
+                    None
+                } else {
+                    let id = next_id;
+                    next_id += 1;
+                    let bytes =
+                        encode_segment(name, c.d, c.bits, c.metric, id, &c.codes, &c.r, &c.exact);
+                    writes.push((segment_path(&engine.data_dir, name, id), bytes));
+                    segs.push(ManifestSegment { id, rows: c.r.len(), bits: c.bits });
+                    Some(id)
+                };
+                plans.push(CollectionPlan { name: name.clone(), ops, head_id });
+                mcols.push(ManifestCollection {
+                    name: name.clone(),
+                    d: c.d,
+                    bits: c.bits,
+                    metric: c.metric,
+                    signs1: c.rot.signs1.clone(),
+                    signs2: c.rot.signs2.clone(),
+                    segments: segs,
+                });
+            }
+            let gen = engine.next_gen;
+            let m = StoreManifest {
+                gen,
+                next_seq: engine.next_seq,
+                next_seg_id: next_id,
+                rows_at_solve: store.rows_at_solve,
+                collections: mcols,
+            };
+            (plans, writes, encode_manifest(&m), gen, next_id, did_work)
+        };
+        if !did_work {
+            // nothing to merge or rewrite; leave head sealing to the
+            // cadence rather than churn a manifest generation per tick
+            return Ok(false);
+        }
+        // commit: segment files first, then the manifest (the swap)
+        for (path, bytes) in &writes {
+            engine
+                .io
+                .write_atomic(path, bytes, true)
+                .map_err(|e| IndexError::Io(format!("writing {}: {e}", path.display())))?;
+        }
+        let mpath = manifest_path(&engine.data_dir, gen);
+        engine
+            .io
+            .write_atomic(&mpath, &manifest_bytes, true)
+            .map_err(|e| IndexError::Io(format!("writing {}: {e}", mpath.display())))?;
+        engine.next_gen = gen + 1;
+        engine.next_seg_id = new_next_id;
+        engine.rows_since_seal = 0;
+        // the manifest sealed every head, so it covers every logged
+        // record: drop the WALs
+        let wal_dir = engine.data_dir.join(WAL_DIR);
+        for name in engine
+            .io
+            .list(&wal_dir)
+            .map_err(|e| IndexError::Io(format!("listing {}: {e}", wal_dir.display())))?
+        {
+            if name.ends_with(".wal") {
+                let p = wal_dir.join(&name);
+                engine
+                    .io
+                    .remove(&p)
+                    .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+            }
+        }
+        let prev = engine.prev_good_gen.replace(gen);
+        prune_files(&mut engine, gen, prev)?;
+        // splice the new sealed lists in under a brief write lock
+        {
+            let mut store = self.store.write().expect("index store lock poisoned");
+            for plan in plans {
+                let Some(c) = store.collections.get_mut(&plan.name) else {
+                    continue;
+                };
+                let mut old: Vec<Option<SegmentData>> =
+                    std::mem::take(&mut c.sealed).into_iter().map(Some).collect();
+                let mut new_sealed = Vec::with_capacity(plan.ops.len());
+                for op in plan.ops {
+                    match op {
+                        SegOp::Keep { idx } => {
+                            new_sealed.push(old[idx].take().expect("op indices are unique"));
+                        }
+                        SegOp::Rewrite { idx, id } => {
+                            let mut s = old[idx].take().expect("op indices are unique");
+                            s.id = id;
+                            s.disk_bits = c.bits;
+                            new_sealed.push(s);
+                        }
+                        SegOp::Merge { data } => new_sealed.push(data),
+                    }
+                }
+                c.sealed = new_sealed;
+                if let Some(id) = plan.head_id {
+                    c.seal_head(id);
+                }
+            }
+        }
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::durability::{DurabilityConfig, DurableStore, FsyncPolicy};
+    use super::super::io::MemIo;
+    use super::super::snapshot::encode_snapshot;
+    use super::super::{IndexConfig, IndexPolicy, VectorStore};
+    use crate::rng::Rng;
+    use std::path::PathBuf;
+
+    fn cfg() -> IndexConfig {
+        IndexConfig { policy: IndexPolicy::Uniform(6), ..Default::default() }
+    }
+
+    fn dcfg() -> DurabilityConfig {
+        DurabilityConfig {
+            data_dir: PathBuf::from("/idx"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0,
+            segment_rows: 0,
+        }
+    }
+
+    fn assert_bit_identical(a: &VectorStore, b: &VectorStore) {
+        assert_eq!(encode_snapshot(a, 0), encode_snapshot(b, 0), "stores differ bit-for-bit");
+    }
+
+    #[test]
+    fn merges_small_segments_and_stays_bit_identical() {
+        let d = 8usize;
+        let durable = DurableStore::open_with(cfg(), dcfg(), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..3u64 {
+            let v = Rng::new(seed).gaussian_vec(2 * d);
+            durable.add("a", &v, d, 1).unwrap();
+            fresh.add("a", &v, d, 1).unwrap();
+            durable.seal_now().unwrap();
+        }
+        assert_eq!(durable.store().segments(), 3);
+        assert!(durable.compact_now(1).unwrap());
+        assert_eq!(durable.compactions(), 1);
+        {
+            let s = durable.store();
+            assert_eq!(s.segments(), 1, "three tiny segments merge into one");
+            assert_eq!(s.rows(), 6);
+            assert_bit_identical(&s, &fresh);
+        }
+        // recovery from the swapped manifest is bit-identical too
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(), io).unwrap();
+        assert_eq!(reopened.recovery().unwrap().recovered_rows(), 6);
+        assert_bit_identical(&reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn compaction_seals_heads_in_the_same_swap() {
+        let d = 8usize;
+        let durable = DurableStore::open_with(cfg(), dcfg(), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(cfg()).unwrap();
+        for seed in 0..2u64 {
+            let v = Rng::new(10 + seed).gaussian_vec(d);
+            durable.add("a", &v, d, 1).unwrap();
+            fresh.add("a", &v, d, 1).unwrap();
+            durable.seal_now().unwrap();
+        }
+        let v = Rng::new(20).gaussian_vec(d);
+        durable.add("a", &v, d, 1).unwrap(); // head row, WAL only
+        fresh.add("a", &v, d, 1).unwrap();
+        assert!(durable.compact_now(1).unwrap());
+        {
+            let s = durable.store();
+            assert_eq!(s.head_rows(), 0, "the head seals in the same swap");
+            assert_eq!(s.segments(), 2, "one merged run + the sealed head");
+        }
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(cfg(), dcfg(), io).unwrap();
+        let rep = reopened.recovery().unwrap();
+        assert_eq!(rep.snapshot_rows, 3, "all rows are sealed; nothing replays");
+        assert_eq!(rep.replayed_rows, 0);
+        assert_bit_identical(&reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn compaction_is_a_noop_when_nothing_qualifies() {
+        let d = 8usize;
+        let durable = DurableStore::open_with(cfg(), dcfg(), Box::new(MemIo::new())).unwrap();
+        durable.add("a", &Rng::new(1).gaussian_vec(4 * d), d, 1).unwrap();
+        durable.seal_now().unwrap();
+        // one segment at the current width, empty head: nothing to do
+        assert!(!durable.compact_now(1).unwrap());
+        assert_eq!(durable.compactions(), 0);
+        assert_eq!(durable.store().segments(), 1);
+        // a lone head row does not qualify either — cadence owns that
+        durable.add("a", &Rng::new(2).gaussian_vec(d), d, 1).unwrap();
+        assert!(!durable.compact_now(1).unwrap());
+        assert_eq!(durable.store().head_rows(), 1);
+        // ephemeral stores always report false
+        let eph = DurableStore::ephemeral(cfg()).unwrap();
+        assert!(!eph.compact_now(1).unwrap());
+    }
+
+    #[test]
+    fn rewrite_retires_stale_width_files() {
+        // Budget policy: the first segment's file is written at the
+        // initial rich width; later growth narrows the collection. A
+        // compaction pass must leave every on-disk file at the current
+        // width, so the next recovery decodes straight bytes with no
+        // requantize debt.
+        let d = 16usize;
+        let bcfg = IndexConfig {
+            policy: IndexPolicy::Budget { bit_choices: vec![2, 4, 8] },
+            budget_bytes: 600,
+            ..Default::default()
+        };
+        let durable =
+            DurableStore::open_with(bcfg.clone(), dcfg(), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(bcfg.clone()).unwrap();
+        let batch = |seed: u64| Rng::new(seed).gaussian_vec(10 * d);
+        durable.add("a", &batch(0), d, 1).unwrap();
+        fresh.add("a", &batch(0), d, 1).unwrap();
+        durable.seal_now().unwrap();
+        for seed in 1..5u64 {
+            durable.add("a", &batch(seed), d, 1).unwrap();
+            fresh.add("a", &batch(seed), d, 1).unwrap();
+        }
+        {
+            let s = durable.store();
+            let c = s.get("a").unwrap();
+            assert!(c.bits() < 8, "the solver must have narrowed the collection");
+            assert!(c.segments().iter().any(|seg| seg.disk_bits != c.bits()));
+        }
+        assert!(durable.compact_now(1).unwrap());
+        {
+            let s = durable.store();
+            let c = s.get("a").unwrap();
+            assert!(
+                c.segments().iter().all(|seg| seg.disk_bits == c.bits()),
+                "every file must be rewritten at the solved width"
+            );
+            assert_eq!(s.head_rows(), 0);
+        }
+        // the store state itself is untouched by compaction
+        {
+            let s = durable.store();
+            // fresh never sealed, so flatten both and compare
+            fresh.rebalance(1).unwrap(); // compact re-solved; mirror it
+            assert_bit_identical(&s, &fresh);
+        }
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(bcfg, dcfg(), io).unwrap();
+        assert_bit_identical(&reopened.store(), &fresh);
+    }
+}

@@ -1,5 +1,5 @@
-//! Durability orchestration: WAL-before-ack writes, periodic
-//! snapshots, and crash recovery for a [`VectorStore`].
+//! Durability orchestration: WAL-before-ack writes, head sealing into
+//! immutable segments, and crash recovery for a [`VectorStore`].
 //!
 //! [`DurableStore`] wraps a store with an optional durability engine.
 //! Without one (`DurableStore::ephemeral`) it is a zero-cost
@@ -13,52 +13,85 @@
 //!   [`FsyncPolicy::Always`] the append is flushed before the ack.
 //!   A **failed append** consumed a sequence number without logging a
 //!   record — left alone that gap would make recovery drop every later
-//!   acked record — so the engine immediately reseals by snapshot: if
-//!   the snapshot lands, the rows are durable and the add is
-//!   acknowledged normally; if it also fails, the store flips
-//!   **read-only** ([`IndexError::ReadOnly`], HTTP 503) so no further
-//!   ack can be issued that recovery would silently void, and a client
-//!   retry is refused rather than applied twice.
-//! * **Snapshot path** — after every `snapshot_every` acknowledged
-//!   records (and on [`DurableStore::snapshot_now`]) the whole store is
-//!   serialized to a versioned segment file (atomic temp + fsync +
-//!   rename), the WAL files are deleted (their records are sealed into
-//!   the snapshot), and older snapshots beyond one spare are pruned.
-//! * **Recovery** ([`recover`]) — load the newest decodable snapshot
-//!   (corrupt ones are skipped, older ones tried), parse every WAL
-//!   file stop-at-first-corruption, merge the surviving records by
-//!   global sequence number, and replay the contiguous run starting at
-//!   the snapshot's `next_seq` through the normal `add` path. Records
-//!   already sealed in the snapshot (seq below `next_seq`) are skipped
-//!   — replay is idempotent; records after a sequence gap are dropped
-//!   — a lost record invalidates everything that depended on coming
-//!   after it. The outcome is surfaced as [`RecoveryReport`]
-//!   (`/v1/stats` reports `recovered_rows` / `dropped_records`).
-//!   When recovery dropped, skipped, or rejected *anything* (torn
-//!   tail, checksum failure, sequence gap, stale duplicate, corrupt
-//!   snapshot), the damaged bytes are still on disk — appending after
-//!   a corrupt tail would make every new record unreadable at the next
-//!   recovery, and reusing post-gap sequence numbers could resurrect
-//!   stale records over acknowledged ones. So [`DurableStore::open_with`]
-//!   **reseals before accepting writes**: one immediate snapshot seals
-//!   the recovered state, deletes every WAL file (corrupt tails and
-//!   stale records included), and prunes undecodable snapshots. A
-//!   second crash right after restart therefore recovers cleanly.
+//!   acked record — so the engine immediately reseals: if the seal
+//!   lands, the rows are durable and the add is acknowledged normally;
+//!   if it also fails, the store flips **read-only**
+//!   ([`IndexError::ReadOnly`], HTTP 503) so no further ack can be
+//!   issued that recovery would silently void, and a client retry is
+//!   refused rather than applied twice.
+//! * **Seal path** — after every `snapshot_every` acknowledged *rows*
+//!   (not records — a 100-row add moves the store as far from its last
+//!   checkpoint as 100 single-row adds), whenever a collection's head
+//!   reaches `segment_rows`, and on [`DurableStore::seal_now`], each
+//!   non-empty head is written to one immutable CRC'd **segment file**
+//!   and a new **manifest** generation listing every live segment is
+//!   written (atomic temp + fsync + rename; the manifest write is the
+//!   single commit point). Then the WAL files are deleted (their
+//!   records are sealed) and stale manifests/segments beyond one spare
+//!   generation are pruned. Sealing is O(head rows): sealed segments
+//!   are never re-encoded, which is what replaced the PR-6 monolithic
+//!   whole-store snapshot (O(store rows) per cadence write).
+//! * **Recovery** ([`recover`]) — load the newest fully-decodable
+//!   manifest generation (a corrupt manifest *or any corrupt/missing
+//!   segment it references* fails the whole generation; older ones are
+//!   tried), rebuilding each collection's sealed segments — rows whose
+//!   on-disk width predates a rebalance are requantized from the
+//!   segment's residual store, bit-identical to a fresh encode. Then
+//!   parse every WAL file stop-at-first-corruption, merge the surviving
+//!   records by global sequence number, and replay the contiguous run
+//!   starting at the manifest's `next_seq` through the normal `add`
+//!   path (into the heads). Records already sealed (seq below
+//!   `next_seq`) are skipped — replay is idempotent; records after a
+//!   sequence gap are dropped — a lost record invalidates everything
+//!   that depended on coming after it. The outcome is surfaced as
+//!   [`RecoveryReport`] (`/v1/stats` reports `recovered_rows` /
+//!   `dropped_records`). When recovery dropped, skipped, or rejected
+//!   *anything* (torn tail, checksum failure, sequence gap, stale
+//!   duplicate, corrupt generation), the damaged bytes are still on
+//!   disk — appending after a corrupt tail would make every new record
+//!   unreadable at the next recovery, and reusing post-gap sequence
+//!   numbers could resurrect stale records over acknowledged ones. So
+//!   [`DurableStore::open_with`] **reseals before accepting writes**:
+//!   one immediate seal checkpoints the recovered state, deletes every
+//!   WAL file (corrupt tails and stale records included), and prunes
+//!   undecodable generations. A second crash right after restart
+//!   therefore recovers cleanly.
 //!
 //! Because replay re-runs the deterministic quantization pipeline and
-//! snapshots store the exact in-memory layout, a recovered store equals
-//! a never-crashed store **bit-for-bit** (codes, rescales, residuals,
-//! bit plan) up to the last durable record — the property the
-//! fault-injection wall in `rust/tests/durability.rs` asserts for every
-//! fault the [`super::io::FaultIo`] shim can inject.
+//! segment files store the exact in-memory layout, a recovered store
+//! equals a never-crashed store **bit-for-bit** (codes, rescales,
+//! residuals, bit plan) up to the last durable record — the property
+//! the fault-injection walls in `rust/tests/durability.rs` and
+//! `rust/tests/segments.rs` assert for every fault the
+//! [`super::io::FaultIo`] shim can inject, at every write ordinal.
+//!
+//! ## Locking
+//!
+//! [`DurableStore`] is internally synchronized and all methods take
+//! `&self`, so the serving layer shares it behind an `Arc` with **no
+//! outer lock**. The store proper lives in an `RwLock` (queries and
+//! stats take read locks; applying an add or moving a sealed head
+//! takes a brief write lock), and the engine — WAL cursors, the
+//! [`Io`] handle, seal bookkeeping — lives in a `Mutex` that
+//! serializes writers only. Seal and segment I/O runs while holding
+//! the engine lock but **no store lock**, so a query never waits on a
+//! slow disk flush (the PR-8 headline fix — the old design serialized
+//! every query behind snapshot I/O). Lock order is engine → store;
+//! read paths take only the store lock.
 
 use super::io::{Io, StdIo};
-use super::snapshot::{
-    decode_snapshot, encode_snapshot, list_snapshots, snapshot_path,
+use super::segment::{
+    decode_manifest, decode_segment, encode_manifest, encode_segment, list_manifests,
+    manifest_path, parse_segment_file, segment_path, ManifestCollection, ManifestSegment,
+    SegmentData, StoreManifest, SEGMENT_DIR,
 };
 use super::wal::{decode_records, encode_record, wal_path, WalRecord, WalTail, WAL_DIR};
-use super::{IndexConfig, IndexError, SearchHit, VectorStore};
+use super::{Collection, IndexConfig, IndexError, SearchHit, VectorStore};
+use crate::hadamard::PracticalRht;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock, RwLockReadGuard};
 
 /// When WAL appends are flushed to stable storage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,70 +108,96 @@ pub enum FsyncPolicy {
 /// Durability configuration for [`DurableStore::open`].
 #[derive(Clone, Debug)]
 pub struct DurabilityConfig {
-    /// Directory holding `wal/` and the snapshot segments.
+    /// Directory holding `wal/`, `segments/`, and the manifests.
     pub data_dir: PathBuf,
     /// WAL flush policy.
     pub fsync: FsyncPolicy,
-    /// Acknowledged records between automatic snapshots; `0` disables
-    /// automatic snapshots (explicit [`DurableStore::snapshot_now`]
-    /// only).
+    /// Acknowledged **rows** between automatic seals; `0` disables the
+    /// cadence (explicit [`DurableStore::seal_now`] and the
+    /// `segment_rows` trigger only). Rows, not records: one bulk add of
+    /// `n` rows counts `n` toward the cadence, so WAL replay debt is
+    /// bounded by data volume rather than request count.
     pub snapshot_every: usize,
+    /// Seal whenever a collection's mutable head reaches this many
+    /// rows, bounding per-collection segment size (and hence seal
+    /// cost); `0` disables the trigger.
+    pub segment_rows: usize,
 }
 
 /// What recovery found and did, for `/v1/stats` and the test walls.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RecoveryReport {
-    /// Rows restored from the snapshot.
+    /// Rows restored from the manifest's sealed segments.
     pub snapshot_rows: usize,
-    /// Rows replayed from WAL records.
+    /// Rows replayed from WAL records (into the heads).
     pub replayed_rows: usize,
     /// WAL records dropped: corrupt/torn tails (one per damaged file)
     /// plus whole records lost to a sequence gap.
     pub dropped_records: usize,
-    /// WAL records skipped because the snapshot already sealed them
+    /// WAL records skipped because a sealed segment already holds them
     /// (duplicate replay — idempotence, not loss).
     pub duplicate_records: usize,
-    /// Snapshot files that failed to decode and were skipped.
+    /// Manifest generations that failed to load — a corrupt manifest,
+    /// or a referenced segment file that was missing, corrupt, or
+    /// inconsistent with its manifest entry — and were skipped.
     pub corrupt_snapshots: usize,
 }
 
 impl RecoveryReport {
-    /// Total rows the store holds because of recovery (snapshot +
-    /// replay) — the `recovered_rows` stats field.
+    /// Total rows the store holds because of recovery (sealed segments
+    /// + replay) — the `recovered_rows` stats field.
     pub fn recovered_rows(&self) -> usize {
         self.snapshot_rows + self.replayed_rows
     }
 }
 
-/// Load the newest usable snapshot and replay the WAL tail. Never
-/// fails on *corruption* (that is data, reported in the
-/// [`RecoveryReport`]); fails only on genuine I/O errors or an invalid
-/// `cfg`.
+/// Everything [`recover`] hands back: the rebuilt store plus the
+/// cursors the engine resumes from.
+pub struct Recovered {
+    /// The recovered store (sealed segments + replayed heads).
+    pub store: VectorStore,
+    /// WAL sequence number the next add will be stamped with.
+    pub next_seq: u64,
+    /// Next unused store-global segment id.
+    pub next_seg_id: u64,
+    /// Generation the next manifest will be written at — strictly
+    /// above every manifest file seen on disk, decodable or not, so a
+    /// rejected generation is never overwritten (it is evidence).
+    pub next_gen: u64,
+    /// The manifest generation that was loaded, if any.
+    pub loaded_gen: Option<u64>,
+    /// What recovery found and did.
+    pub report: RecoveryReport,
+}
+
+/// Load the newest usable manifest generation and replay the WAL tail.
+/// Never fails on *corruption* (that is data, reported in the
+/// [`RecoveryReport`]); fails only on an invalid `cfg` or an I/O error
+/// outside any particular generation.
 pub fn recover(
     io: &mut dyn Io,
     data_dir: &Path,
     cfg: IndexConfig,
-) -> Result<(VectorStore, u64, RecoveryReport), IndexError> {
+) -> Result<Recovered, IndexError> {
     let mut report = RecoveryReport::default();
-    // newest decodable snapshot wins; corrupt ones are skipped
-    let mut store: Option<(VectorStore, u64)> = None;
-    for seq in list_snapshots(io, data_dir)? {
-        let path = snapshot_path(data_dir, seq);
-        let bytes = io
-            .read(&path)
-            .map_err(|e| IndexError::Io(format!("reading {}: {e}", path.display())))?
-            .unwrap_or_default();
-        match decode_snapshot(&bytes, cfg.clone()) {
-            Ok(loaded) => {
-                store = Some(loaded);
+    let gens = list_manifests(io, data_dir)?;
+    let next_gen = gens.first().map_or(1, |g| g + 1);
+    // newest fully-loadable generation wins; a generation with a
+    // corrupt manifest OR any bad referenced segment is skipped whole —
+    // partial loads could mix segments from different swaps
+    let mut loaded: Option<(VectorStore, u64, u64, u64)> = None;
+    for &gen in &gens {
+        match load_manifest_generation(io, data_dir, gen, &cfg) {
+            Ok((store, m)) => {
+                loaded = Some((store, m.next_seq, m.next_seg_id, gen));
                 break;
             }
             Err(_) => report.corrupt_snapshots += 1,
         }
     }
-    let (mut store, mut next_seq) = match store {
-        Some(s) => s,
-        None => (VectorStore::new(cfg)?, 0),
+    let (mut store, mut next_seq, next_seg_id, loaded_gen) = match loaded {
+        Some((s, seq, seg, gen)) => (s, seq, seg, Some(gen)),
+        None => (VectorStore::new(cfg)?, 0, 1, None),
     };
     report.snapshot_rows = store.rows();
     // parse every WAL file stop-at-first-corruption, then merge by the
@@ -166,8 +225,8 @@ pub fn recover(
         records.extend(recs);
     }
     records.sort_by_key(|r| r.seq);
-    // replay the contiguous run from next_seq; duplicates (sealed in
-    // the snapshot) are skipped, anything after a gap is dropped
+    // replay the contiguous run from next_seq; duplicates (already
+    // sealed into segments) are skipped, anything after a gap dropped
     for rec in records {
         if rec.seq < next_seq {
             report.duplicate_records += 1;
@@ -188,37 +247,135 @@ pub fn recover(
         }
         next_seq = rec.seq + 1;
     }
-    Ok((store, next_seq, report))
+    Ok(Recovered { store, next_seq, next_seg_id, next_gen, loaded_gen, report })
 }
 
-/// The durability engine a durable [`DurableStore`] carries.
-struct Engine {
-    io: Box<dyn Io>,
-    data_dir: PathBuf,
-    fsync: FsyncPolicy,
-    snapshot_every: usize,
-    next_seq: u64,
-    records_since_snapshot: usize,
-    report: RecoveryReport,
-    /// Set when a WAL append failed *and* the reseal snapshot failed:
-    /// the store can no longer honor WAL-before-ack, so adds are
-    /// refused ([`IndexError::ReadOnly`]) until restart.
-    read_only: bool,
+/// Rebuild a store from one manifest generation. Any failure — corrupt
+/// manifest, missing/corrupt segment file, or a segment inconsistent
+/// with the manifest entry that referenced it — rejects the whole
+/// generation (the caller falls back to an older one).
+fn load_manifest_generation(
+    io: &mut dyn Io,
+    data_dir: &Path,
+    gen: u64,
+    cfg: &IndexConfig,
+) -> Result<(VectorStore, StoreManifest), IndexError> {
+    let corrupt = |what: String| IndexError::Io(format!("manifest generation {gen}: {what}"));
+    let path = manifest_path(data_dir, gen);
+    let bytes = io
+        .read(&path)
+        .map_err(|e| corrupt(format!("reading {}: {e}", path.display())))?
+        .ok_or_else(|| corrupt("manifest file vanished".into()))?;
+    let m = decode_manifest(&bytes)?;
+    if m.gen != gen {
+        return Err(corrupt(format!("file names gen {gen} but payload says {}", m.gen)));
+    }
+    let mut collections: BTreeMap<String, Collection> = BTreeMap::new();
+    for mc in &m.collections {
+        let d_hat = mc.signs1.len();
+        if !d_hat.is_power_of_two() {
+            return Err(corrupt(format!("rotation window {d_hat} is not a power of two")));
+        }
+        let rot = PracticalRht {
+            d: mc.d,
+            d_hat,
+            signs1: mc.signs1.clone(),
+            signs2: mc.signs2.clone(),
+        };
+        let mut sealed: Vec<SegmentData> = Vec::new();
+        for sref in &mc.segments {
+            let spath = segment_path(data_dir, &mc.name, sref.id);
+            let sbytes = io
+                .read(&spath)
+                .map_err(|e| corrupt(format!("reading {}: {e}", spath.display())))?
+                .ok_or_else(|| {
+                    corrupt(format!("referenced segment {} missing", spath.display()))
+                })?;
+            let seg = decode_segment(&sbytes)?;
+            if seg.name != mc.name
+                || seg.id != sref.id
+                || seg.d != mc.d
+                || seg.metric != mc.metric
+                || seg.r.len() != sref.rows
+                || seg.bits != sref.bits
+            {
+                return Err(corrupt(format!(
+                    "segment {} disagrees with its manifest entry",
+                    spath.display()
+                )));
+            }
+            // a file written before a rebalance holds codes at a stale
+            // width — requantize from the residual store (deterministic
+            // and lossless-from-exact, so the result is bit-identical
+            // to a fresh encode at the current width)
+            let (codes, r) = if seg.bits == mc.bits {
+                (seg.codes, seg.r)
+            } else {
+                super::quantize_rows(&rot, mc.d, &seg.exact, mc.bits)
+            };
+            sealed.push(SegmentData { id: sref.id, disk_bits: sref.bits, codes, r, exact: seg.exact });
+        }
+        let c = Collection {
+            name: mc.name.clone(),
+            d: mc.d,
+            bits: mc.bits,
+            metric: mc.metric,
+            rot,
+            sealed,
+            codes: Vec::new(),
+            r: Vec::new(),
+            exact: Vec::new(),
+        };
+        collections.insert(mc.name.clone(), c);
+    }
+    let store = VectorStore { cfg: cfg.clone(), collections, rows_at_solve: m.rows_at_solve };
+    Ok((store, m))
 }
 
-/// A [`VectorStore`] with optional crash-safety. All read paths and
-/// the non-durable constructor are zero-overhead pass-throughs, so the
-/// serving layer holds one type whether or not `--data-dir` was given.
+/// The durability engine a durable [`DurableStore`] carries, behind a
+/// `Mutex` that serializes writers (adds, seals, compactions) without
+/// ever blocking readers.
+pub(super) struct Engine {
+    pub(super) io: Box<dyn Io>,
+    pub(super) data_dir: PathBuf,
+    pub(super) fsync: FsyncPolicy,
+    pub(super) snapshot_every: usize,
+    pub(super) segment_rows: usize,
+    pub(super) next_seq: u64,
+    pub(super) next_seg_id: u64,
+    pub(super) next_gen: u64,
+    /// The last committed manifest generation — kept on disk as the
+    /// fallback against a latent bad write of its successor.
+    pub(super) prev_good_gen: Option<u64>,
+    /// Acknowledged rows since the last committed seal (the
+    /// `snapshot_every` cadence counter).
+    pub(super) rows_since_seal: usize,
+    pub(super) report: RecoveryReport,
+    /// Set when a WAL append failed *and* the reseal also failed: the
+    /// store can no longer honor WAL-before-ack, so adds are refused
+    /// ([`IndexError::ReadOnly`]) until restart.
+    pub(super) read_only: bool,
+}
+
+/// A [`VectorStore`] with optional crash-safety, internally
+/// synchronized (see the module docs' *Locking* section). All methods
+/// take `&self`; the serving layer shares it behind an `Arc`.
 pub struct DurableStore {
-    store: VectorStore,
-    engine: Option<Engine>,
+    pub(super) store: RwLock<VectorStore>,
+    pub(super) engine: Option<Mutex<Engine>>,
+    /// Completed compaction passes (see [`DurableStore::compact_now`]).
+    pub(super) compactions: AtomicUsize,
 }
 
 impl DurableStore {
     /// In-memory only store — restart loses everything (the PR-5
     /// behavior, still the default without `--data-dir`).
     pub fn ephemeral(cfg: IndexConfig) -> Result<DurableStore, IndexError> {
-        Ok(DurableStore { store: VectorStore::new(cfg)?, engine: None })
+        Ok(DurableStore {
+            store: RwLock::new(VectorStore::new(cfg)?),
+            engine: None,
+            compactions: AtomicUsize::new(0),
+        })
     }
 
     /// Open (or create) a durable store at `dcfg.data_dir` on the real
@@ -229,47 +386,54 @@ impl DurableStore {
     }
 
     /// [`DurableStore::open`] over an explicit [`Io`] — the seam the
-    /// fault-injection wall uses ([`super::io::MemIo`] /
+    /// fault-injection walls use ([`super::io::MemIo`] /
     /// [`super::io::FaultIo`]).
     pub fn open_with(
         cfg: IndexConfig,
         dcfg: DurabilityConfig,
         mut io: Box<dyn Io>,
     ) -> Result<DurableStore, IndexError> {
-        let (store, next_seq, report) = recover(io.as_mut(), &dcfg.data_dir, cfg)?;
-        let mut opened = DurableStore {
-            store,
-            engine: Some(Engine {
+        let rec = recover(io.as_mut(), &dcfg.data_dir, cfg)?;
+        let damaged = rec.report.dropped_records > 0
+            || rec.report.duplicate_records > 0
+            || rec.report.corrupt_snapshots > 0;
+        let opened = DurableStore {
+            store: RwLock::new(rec.store),
+            engine: Some(Mutex::new(Engine {
                 io,
                 data_dir: dcfg.data_dir,
                 fsync: dcfg.fsync,
                 snapshot_every: dcfg.snapshot_every,
-                next_seq,
-                records_since_snapshot: 0,
-                report,
+                segment_rows: dcfg.segment_rows,
+                next_seq: rec.next_seq,
+                next_seg_id: rec.next_seg_id,
+                next_gen: rec.next_gen,
+                prev_good_gen: rec.loaded_gen,
+                rows_since_seal: 0,
+                report: rec.report,
                 read_only: false,
-            }),
+            })),
+            compactions: AtomicUsize::new(0),
         };
         // Reseal before accepting writes whenever recovery found damage:
         // a torn/corrupt WAL tail would swallow every record appended
         // after it (stop-at-first-corruption), and records dropped
         // beyond a sequence gap would collide with the reused sequence
-        // numbers of new acks. One snapshot seals the recovered state
+        // numbers of new acks. One seal checkpoints the recovered state
         // and deletes all of it. Failing the reseal fails the open —
         // accepting writes over known-damaged logs is the one thing the
         // durability contract cannot do.
-        let damaged = report.dropped_records > 0
-            || report.duplicate_records > 0
-            || report.corrupt_snapshots > 0;
         if damaged {
-            opened.snapshot_now()?;
+            opened.seal_now()?;
         }
         Ok(opened)
     }
 
-    /// Borrow the underlying store (all read paths).
-    pub fn store(&self) -> &VectorStore {
-        &self.store
+    /// Read access to the underlying store (queries, stats, tests).
+    /// The guard holds a read lock — writers wait while it lives, so
+    /// callers should keep it brief.
+    pub fn store(&self) -> RwLockReadGuard<'_, VectorStore> {
+        self.store.read().expect("index store lock poisoned")
     }
 
     /// True when adds are logged to disk.
@@ -278,22 +442,33 @@ impl DurableStore {
     }
 
     /// True when a durability failure flipped the store read-only
-    /// (a WAL append and its reseal snapshot both failed): adds are
-    /// refused until restart; reads keep working. Always `false` for
-    /// ephemeral stores.
+    /// (a WAL append and its reseal both failed): adds are refused
+    /// until restart; reads keep working. Always `false` for ephemeral
+    /// stores.
     pub fn is_read_only(&self) -> bool {
-        self.engine.as_ref().is_some_and(|e| e.read_only)
+        self.engine
+            .as_ref()
+            .is_some_and(|m| m.lock().expect("index engine lock poisoned").read_only)
     }
 
     /// The recovery outcome of [`DurableStore::open`]; `None` for
     /// ephemeral stores (the stats endpoint omits the fields).
     pub fn recovery(&self) -> Option<RecoveryReport> {
-        self.engine.as_ref().map(|e| e.report)
+        self.engine
+            .as_ref()
+            .map(|m| m.lock().expect("index engine lock poisoned").report)
     }
 
     /// Next store-global WAL sequence number (tests pin the cadence).
     pub fn next_seq(&self) -> u64 {
-        self.engine.as_ref().map(|e| e.next_seq).unwrap_or(0)
+        self.engine
+            .as_ref()
+            .map_or(0, |m| m.lock().expect("index engine lock poisoned").next_seq)
+    }
+
+    /// Completed compaction passes since open (`/v1/stats`).
+    pub fn compactions(&self) -> usize {
+        self.compactions.load(Ordering::Relaxed)
     }
 
     /// Durable add: apply in memory, then append one WAL record, then
@@ -301,94 +476,173 @@ impl DurableStore {
     /// in-memory apply alone decides admission — a refused add writes
     /// nothing. A WAL append failure consumed a sequence number without
     /// a record — a gap that would void every later ack at recovery —
-    /// so the engine immediately reseals by snapshot: on success the
-    /// add is durable (sealed, not logged) and acknowledged normally;
-    /// if the snapshot also fails the store flips read-only and the add
-    /// returns [`IndexError::ReadOnly`] (the rows stay in memory but
-    /// are not durable, and no later add will be accepted that recovery
-    /// would silently drop). A failed *cadence* snapshot is non-fatal:
-    /// the add is already durable in the WAL, so the snapshot is simply
-    /// retried on the next add.
+    /// so the engine immediately reseals: on success the add is durable
+    /// (sealed, not logged) and acknowledged normally; if the seal also
+    /// fails the store flips read-only and the add returns
+    /// [`IndexError::ReadOnly`] (the rows stay in memory but are not
+    /// durable, and no later add will be accepted that recovery would
+    /// silently drop). A failed *cadence* seal is non-fatal: the add is
+    /// already durable in the WAL, so the seal is simply retried on the
+    /// next add. The store lock is held only while applying rows in
+    /// memory — never across I/O — so queries proceed during appends
+    /// and seals.
     pub fn add(
-        &mut self,
+        &self,
         name: &str,
         vecs: &[f32],
         d: usize,
         threads: usize,
     ) -> Result<(usize, usize), IndexError> {
-        if let Some(engine) = &self.engine {
-            if engine.read_only {
-                return Err(IndexError::ReadOnly(
-                    "a WAL append and its reseal snapshot both failed; \
-                     the store is read-only until restart"
-                        .into(),
-                ));
-            }
-        }
-        let out = self.store.add(name, vecs, d, threads)?;
-        if self.engine.is_none() {
-            return Ok(out);
-        }
-        let (append_result, cadence_due) = {
-            let engine = self.engine.as_mut().expect("checked above");
-            let rec = WalRecord {
-                seq: engine.next_seq,
-                name: name.to_string(),
-                dim: d,
-                rows: vecs.to_vec(),
-            };
-            let bytes = encode_record(&rec)?;
-            engine.next_seq += 1;
-            engine.records_since_snapshot += 1;
-            let path = wal_path(&engine.data_dir, name);
-            let res = engine
-                .io
-                .append(&path, &bytes, engine.fsync == FsyncPolicy::Always)
-                .map_err(|e| format!("WAL append to {}: {e}", path.display()));
-            let due = engine.snapshot_every > 0
-                && engine.records_since_snapshot >= engine.snapshot_every;
-            (res, due)
+        let Some(engine_mx) = &self.engine else {
+            return self
+                .store
+                .write()
+                .expect("index store lock poisoned")
+                .add(name, vecs, d, threads);
         };
+        let mut engine = engine_mx.lock().expect("index engine lock poisoned");
+        if engine.read_only {
+            return Err(IndexError::ReadOnly(
+                "a WAL append and its reseal both failed; \
+                 the store is read-only until restart"
+                    .into(),
+            ));
+        }
+        let out = self
+            .store
+            .write()
+            .expect("index store lock poisoned")
+            .add(name, vecs, d, threads)?;
+        let rec = WalRecord {
+            seq: engine.next_seq,
+            name: name.to_string(),
+            dim: d,
+            rows: vecs.to_vec(),
+        };
+        let bytes = encode_record(&rec)?;
+        engine.next_seq += 1;
+        engine.rows_since_seal += out.1;
+        let path = wal_path(&engine.data_dir, name);
+        let fsync = engine.fsync == FsyncPolicy::Always;
+        let append_result = engine
+            .io
+            .append(&path, &bytes, fsync)
+            .map_err(|e| format!("WAL append to {}: {e}", path.display()));
         if let Err(append_err) = append_result {
-            return match self.snapshot_now() {
-                // the reseal sealed the consumed seq (and these rows):
+            return match self.seal_locked(&mut engine) {
+                // the reseal covered the consumed seq (and these rows):
                 // the add is durable, ack it
                 Ok(()) => Ok(out),
-                Err(snap_err) => {
-                    self.engine.as_mut().expect("checked above").read_only = true;
+                Err(seal_err) => {
+                    engine.read_only = true;
                     Err(IndexError::ReadOnly(format!(
-                        "{append_err}; reseal snapshot also failed ({snap_err}); \
+                        "{append_err}; reseal also failed ({seal_err}); \
                          rows applied in memory but NOT durable; \
                          the store is read-only until restart"
                     )))
                 }
             };
         }
-        if cadence_due {
+        let head_full = engine.segment_rows > 0
+            && self
+                .store
+                .read()
+                .expect("index store lock poisoned")
+                .collections
+                .values()
+                .any(|c| c.head_rows() >= engine.segment_rows);
+        let cadence_due =
+            engine.snapshot_every > 0 && engine.rows_since_seal >= engine.snapshot_every;
+        if cadence_due || head_full {
             // non-fatal: the add is durable in the WAL either way, and a
-            // failed snapshot left the WAL in place (deletion is skipped
-            // on error), so the next add retries the snapshot
-            if let Err(e) = self.snapshot_now() {
-                crate::info!("index snapshot failed (will retry next add): {e}");
+            // failed seal left the WAL in place (deletion happens only
+            // after the manifest commit), so the next add retries
+            if let Err(e) = self.seal_locked(&mut engine) {
+                crate::info!("index seal failed (will retry next add): {e}");
             }
         }
         Ok(out)
     }
 
-    /// Write a snapshot sealing the current state, delete the WAL files
-    /// it subsumes, and prune all but the previous snapshot (kept as a
-    /// fallback against a latent bad write). No-op on ephemeral stores.
-    pub fn snapshot_now(&mut self) -> Result<(), IndexError> {
-        let Some(engine) = &mut self.engine else {
+    /// Seal every non-empty head into an immutable segment and commit a
+    /// new manifest generation; then delete the WAL files it subsumes
+    /// and prune stale generations. No-op heads still commit a manifest
+    /// (recovery needs the current `next_seq`). No-op on ephemeral
+    /// stores.
+    pub fn seal_now(&self) -> Result<(), IndexError> {
+        let Some(engine_mx) = &self.engine else {
             return Ok(());
         };
-        let bytes = encode_snapshot(&self.store, engine.next_seq);
-        let path = snapshot_path(&engine.data_dir, engine.next_seq);
+        let mut engine = engine_mx.lock().expect("index engine lock poisoned");
+        self.seal_locked(&mut engine)
+    }
+
+    /// The seal itself, with the engine already locked. Three phases:
+    /// plan under a store *read* lock (capture which heads to seal and
+    /// encode their bytes), write segment files then the manifest with
+    /// **no store lock held** (the manifest write is the commit point —
+    /// failure before it leaves the previous generation and every WAL
+    /// intact), then move the sealed heads in memory under a brief
+    /// store write lock.
+    pub(super) fn seal_locked(&self, engine: &mut Engine) -> Result<(), IndexError> {
+        let (writes, manifest_bytes, gen, seals, new_next_id) = {
+            let store = self.store.read().expect("index store lock poisoned");
+            let mut next_id = engine.next_seg_id;
+            let mut writes: Vec<(PathBuf, Vec<u8>)> = Vec::new();
+            let mut seals: Vec<(String, u64)> = Vec::new();
+            let mut mcols: Vec<ManifestCollection> = Vec::new();
+            for (name, c) in &store.collections {
+                let mut segs: Vec<ManifestSegment> = c
+                    .sealed
+                    .iter()
+                    .map(|s| ManifestSegment { id: s.id, rows: s.rows(), bits: s.disk_bits })
+                    .collect();
+                if !c.r.is_empty() {
+                    let id = next_id;
+                    next_id += 1;
+                    let bytes = encode_segment(
+                        name, c.d, c.bits, c.metric, id, &c.codes, &c.r, &c.exact,
+                    );
+                    writes.push((segment_path(&engine.data_dir, name, id), bytes));
+                    segs.push(ManifestSegment { id, rows: c.r.len(), bits: c.bits });
+                    seals.push((name.clone(), id));
+                }
+                mcols.push(ManifestCollection {
+                    name: name.clone(),
+                    d: c.d,
+                    bits: c.bits,
+                    metric: c.metric,
+                    signs1: c.rot.signs1.clone(),
+                    signs2: c.rot.signs2.clone(),
+                    segments: segs,
+                });
+            }
+            let gen = engine.next_gen;
+            let m = StoreManifest {
+                gen,
+                next_seq: engine.next_seq,
+                next_seg_id: next_id,
+                rows_at_solve: store.rows_at_solve,
+                collections: mcols,
+            };
+            (writes, encode_manifest(&m), gen, seals, next_id)
+        };
+        for (path, bytes) in &writes {
+            engine
+                .io
+                .write_atomic(path, bytes, true)
+                .map_err(|e| IndexError::Io(format!("writing {}: {e}", path.display())))?;
+        }
+        let mpath = manifest_path(&engine.data_dir, gen);
         engine
             .io
-            .write_atomic(&path, &bytes, true)
-            .map_err(|e| IndexError::Io(format!("writing {}: {e}", path.display())))?;
-        // the snapshot seals every logged record: drop the WALs
+            .write_atomic(&mpath, &manifest_bytes, true)
+            .map_err(|e| IndexError::Io(format!("writing {}: {e}", mpath.display())))?;
+        // committed: everything below is cleanup of now-superseded state
+        engine.next_gen = gen + 1;
+        engine.next_seg_id = new_next_id;
+        engine.rows_since_seal = 0;
+        // the manifest covers every logged record: drop the WALs
         let wal_dir = engine.data_dir.join(WAL_DIR);
         for name in engine
             .io
@@ -403,27 +657,22 @@ impl DurableStore {
                     .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
             }
         }
-        // prune: a snapshot with seq > next_seq can only be one recovery
-        // rejected as undecodable (a valid one would have been loaded
-        // and next_seq would sit at or above it) — delete those so they
-        // stop shadowing good snapshots; then keep the new snapshot
-        // plus one predecessor
-        let seqs = list_snapshots(engine.io.as_mut(), &engine.data_dir)?;
-        let sealed = engine.next_seq;
-        let stale_new = seqs.iter().filter(|&&s| s > sealed);
-        let old_predecessors = seqs.iter().filter(|&&s| s < sealed).skip(1);
-        for &old in stale_new.chain(old_predecessors) {
-            let p = snapshot_path(&engine.data_dir, old);
-            engine
-                .io
-                .remove(&p)
-                .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+        let prev = engine.prev_good_gen.replace(gen);
+        prune_files(engine, gen, prev)?;
+        if !seals.is_empty() {
+            let mut store = self.store.write().expect("index store lock poisoned");
+            for (name, id) in &seals {
+                if let Some(c) = store.collections.get_mut(name) {
+                    c.seal_head(*id);
+                }
+            }
         }
-        engine.records_since_snapshot = 0;
         Ok(())
     }
 
-    /// Pass-through query (see [`VectorStore::query`]).
+    /// Pass-through query (see [`VectorStore::query`]); takes only a
+    /// store read lock, so queries run concurrently with each other and
+    /// with seal/compaction I/O.
     pub fn query(
         &self,
         name: &str,
@@ -432,21 +681,83 @@ impl DurableStore {
         rerank_factor: usize,
         threads: usize,
     ) -> Result<Vec<SearchHit>, IndexError> {
-        self.store.query(name, q, k, rerank_factor, threads)
+        self.store
+            .read()
+            .expect("index store lock poisoned")
+            .query(name, q, k, rerank_factor, threads)
     }
 
     /// Hand back the inner [`Io`] (tests recover from what survived a
     /// faulted run). Ephemeral stores return `None`.
     pub fn into_io(self) -> Option<Box<dyn Io>> {
-        self.engine.map(|e| e.io)
+        self.engine
+            .map(|m| m.into_inner().expect("index engine lock poisoned").io)
     }
+}
+
+/// Delete every manifest other than the `keep` / `keep_prev`
+/// generations and every segment file no kept manifest references. A
+/// kept generation that no longer decodes from disk (a mangled write
+/// the CRC catches) is deleted too — it could only shadow its good
+/// predecessor at recovery.
+pub(super) fn prune_files(
+    engine: &mut Engine,
+    keep: u64,
+    keep_prev: Option<u64>,
+) -> Result<(), IndexError> {
+    let mut referenced: BTreeSet<(String, u64)> = BTreeSet::new();
+    let mut kept: Vec<u64> = Vec::new();
+    for gen in [Some(keep), keep_prev].into_iter().flatten() {
+        let path = manifest_path(&engine.data_dir, gen);
+        let decodable = engine
+            .io
+            .read(&path)
+            .ok()
+            .flatten()
+            .and_then(|b| decode_manifest(&b).ok());
+        if let Some(m) = decodable {
+            kept.push(gen);
+            for c in &m.collections {
+                for s in &c.segments {
+                    referenced.insert((c.name.clone(), s.id));
+                }
+            }
+        }
+    }
+    for gen in list_manifests(engine.io.as_mut(), &engine.data_dir)? {
+        if !kept.contains(&gen) {
+            let p = manifest_path(&engine.data_dir, gen);
+            engine
+                .io
+                .remove(&p)
+                .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+        }
+    }
+    let seg_dir = engine.data_dir.join(SEGMENT_DIR);
+    for file in engine
+        .io
+        .list(&seg_dir)
+        .map_err(|e| IndexError::Io(format!("listing {}: {e}", seg_dir.display())))?
+    {
+        let live = parse_segment_file(&file)
+            .is_some_and(|(name, id)| referenced.contains(&(name, id)));
+        if !live {
+            let p = seg_dir.join(&file);
+            engine
+                .io
+                .remove(&p)
+                .map_err(|e| IndexError::Io(format!("removing {}: {e}", p.display())))?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::io::{Fault, FaultIo, MemIo};
+    use super::super::snapshot::encode_snapshot;
     use super::*;
-    use crate::index::IndexPolicy;
+    use crate::index::{IndexPolicy, Metric};
     use crate::rng::Rng;
 
     fn cfg() -> IndexConfig {
@@ -458,27 +769,21 @@ mod tests {
             data_dir: PathBuf::from("/idx"),
             fsync: FsyncPolicy::Never,
             snapshot_every,
+            segment_rows: 0,
         }
     }
 
+    /// Byte equality of the canonical flattened encoding: identical
+    /// codes, rescales, residuals, and bit plan regardless of how the
+    /// rows are split between sealed segments and heads.
     fn assert_bit_identical(a: &VectorStore, b: &VectorStore) {
-        assert_eq!(
-            a.collections.keys().collect::<Vec<_>>(),
-            b.collections.keys().collect::<Vec<_>>()
-        );
-        for (name, ca) in &a.collections {
-            let cb = &b.collections[name];
-            assert_eq!(ca.bits, cb.bits, "{name}: bit plan");
-            assert_eq!(ca.codes, cb.codes, "{name}: packed codes");
-            assert_eq!(ca.r, cb.r, "{name}: rescales");
-            assert_eq!(ca.exact, cb.exact, "{name}: residuals");
-        }
+        assert_eq!(encode_snapshot(a, 0), encode_snapshot(b, 0), "stores differ bit-for-bit");
     }
 
     #[test]
     fn restart_recovers_wal_only_store_bit_for_bit() {
         let d = 16usize;
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
         let mut fresh = VectorStore::new(cfg()).unwrap();
         for seed in 0..5u64 {
             let v = Rng::new(seed).gaussian_vec(3 * d);
@@ -491,18 +796,18 @@ mod tests {
         assert_eq!(rep.recovered_rows(), 15);
         assert_eq!(rep.dropped_records, 0);
         assert_eq!(reopened.next_seq(), 5);
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
     }
 
     #[test]
     fn snapshot_seals_wal_and_recovery_prefers_it() {
         let d = 8usize;
-        let mut durable = DurableStore::open_with(cfg(), dcfg(2), Box::new(MemIo::new())).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(2), Box::new(MemIo::new())).unwrap();
         for seed in 0..5u64 {
             durable.add("a", &Rng::new(seed).gaussian_vec(d), d, 1).unwrap();
         }
-        // snapshot_every=2: snapshots at seq 2 and 4; one record (seq 4)
-        // still in the WAL
+        // snapshot_every=2 rows, 1-row adds: seals after adds 2 and 4;
+        // one record (seq 4) still in the WAL
         let io = durable.into_io().unwrap();
         let reopened = DurableStore::open_with(cfg(), dcfg(2), io).unwrap();
         let rep = reopened.recovery().unwrap();
@@ -514,18 +819,64 @@ mod tests {
         for seed in 0..5u64 {
             fresh.add("a", &Rng::new(seed).gaussian_vec(d), d, 1).unwrap();
         }
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn seal_cadence_counts_rows_not_records() {
+        let d = 8usize;
+        // snapshot_every = 8 ROWS: one 10-row add crosses the cadence
+        // by itself (the old record-counting cadence would have waited
+        // for 8 records — unbounded replay debt from bulk adds)
+        let durable = DurableStore::open_with(cfg(), dcfg(8), Box::new(MemIo::new())).unwrap();
+        durable.add("a", &Rng::new(1).gaussian_vec(10 * d), d, 1).unwrap();
+        {
+            let s = durable.store();
+            assert_eq!(s.head_rows(), 0, "a 10-row add must seal immediately");
+            assert_eq!(s.segments(), 1);
+        }
+        // 1-row adds: rows == records, so the cadence fires on the 8th
+        for seed in 0..7u64 {
+            durable.add("a", &Rng::new(10 + seed).gaussian_vec(d), d, 1).unwrap();
+        }
+        assert_eq!(durable.store().head_rows(), 7, "7 rows since the seal: not yet");
+        durable.add("a", &Rng::new(99).gaussian_vec(d), d, 1).unwrap();
+        {
+            let s = durable.store();
+            assert_eq!(s.head_rows(), 0, "8th row fires the cadence");
+            assert_eq!(s.segments(), 2);
+        }
+    }
+
+    #[test]
+    fn full_head_forces_a_seal_when_segment_rows_set() {
+        let d = 8usize;
+        let dc = DurabilityConfig {
+            data_dir: PathBuf::from("/idx"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 0,
+            segment_rows: 4,
+        };
+        let durable = DurableStore::open_with(cfg(), dc, Box::new(MemIo::new())).unwrap();
+        durable.add("a", &Rng::new(1).gaussian_vec(3 * d), d, 1).unwrap();
+        assert_eq!(durable.store().head_rows(), 3, "3 < 4: head stays");
+        durable.add("a", &Rng::new(2).gaussian_vec(d), d, 1).unwrap();
+        {
+            let s = durable.store();
+            assert_eq!(s.head_rows(), 0, "head reached segment_rows: sealed");
+            assert_eq!(s.segments(), 1);
+        }
     }
 
     #[test]
     fn duplicate_wal_records_replay_idempotently() {
-        // write snapshot *without* clearing the WAL by re-appending a
+        // write a manifest *without* clearing the WAL by re-appending a
         // sealed record manually: recovery must skip it
         let d = 8usize;
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
         let v = Rng::new(9).gaussian_vec(d);
         durable.add("a", &v, d, 1).unwrap();
-        durable.snapshot_now().unwrap();
+        durable.seal_now().unwrap();
         let mut io = durable.into_io().unwrap();
         let stale = encode_record(&WalRecord {
             seq: 0,
@@ -572,7 +923,7 @@ mod tests {
         // two collections, alternating adds: per-collection WALs must
         // merge back to the original global order
         let d = 8usize;
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
         let mut fresh = VectorStore::new(cfg()).unwrap();
         for seed in 0..6u64 {
             let name = if seed % 2 == 0 { "even" } else { "odd" };
@@ -582,14 +933,14 @@ mod tests {
         }
         let io = durable.into_io().unwrap();
         let reopened = DurableStore::open_with(cfg(), dcfg(0), io).unwrap();
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
         assert_eq!(reopened.next_seq(), 6);
     }
 
     #[test]
     fn refused_adds_write_nothing() {
         let d = 8usize;
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(MemIo::new())).unwrap();
         assert!(durable.add("bad name!", &vec![0.0; d], d, 1).is_err());
         assert_eq!(durable.next_seq(), 0, "refused add must not consume a seq");
         let io = durable.into_io().unwrap();
@@ -612,7 +963,7 @@ mod tests {
         let torn = encode_record(&WalRecord { seq: 1, name: "a".into(), dim: d, rows: v1.clone() }).unwrap();
         io.append(&p, &torn[..torn.len() / 2], false).unwrap();
         // first restart: recovery drops the torn tail and reseals
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
         assert_eq!(durable.recovery().unwrap().dropped_records, 1);
         // post-restart acks land after the reseal, not after torn bytes
         let v2 = Rng::new(22).gaussian_vec(d);
@@ -629,7 +980,7 @@ mod tests {
         for v in [&v0, &v2, &v3] {
             fresh.add("a", v, d, 1).unwrap();
         }
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
     }
 
     #[test]
@@ -646,7 +997,7 @@ mod tests {
         io.append(&wal_path(Path::new("/idx"), "a"), &rec(0, "a", 1.0), false).unwrap();
         // seq 1 lost (gap); seq 2 survives in another, clean WAL file
         io.append(&wal_path(Path::new("/idx"), "stale"), &rec(2, "stale", 9.0), false).unwrap();
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
         assert_eq!(durable.recovery().unwrap().dropped_records, 1);
         assert_eq!(durable.next_seq(), 1, "resumes at the gap");
         // new acks reuse seqs 1 and 2; the stale seq-2 record must not
@@ -667,21 +1018,21 @@ mod tests {
         fresh.add("a", &vec![1.0; d], d, 1).unwrap();
         fresh.add("a", &v1, d, 1).unwrap();
         fresh.add("a", &v2, d, 1).unwrap();
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
     }
 
     #[test]
-    fn failed_append_reseals_into_a_snapshot_and_still_acks() {
+    fn failed_append_reseals_into_a_segment_and_still_acks() {
         // one transient append failure (review: a brief ENOSPC) must not
         // void later acks via a permanent sequence gap
         let d = 8usize;
         let io = FaultIo::new(MemIo::new(), Fault::FailWrite { nth: 3 });
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
         let mut fresh = VectorStore::new(cfg()).unwrap();
         for seed in 0..4u64 {
             let v = Rng::new(40 + seed).gaussian_vec(d);
-            // add 3's append fails and is resealed by snapshot — the add
-            // is durable either way, so every add must ack
+            // add 3's append fails and is resealed into a segment — the
+            // add is durable either way, so every add must ack
             durable.add("a", &v, d, 1).unwrap();
             fresh.add("a", &v, d, 1).unwrap();
         }
@@ -692,16 +1043,16 @@ mod tests {
         let rep = reopened.recovery().unwrap();
         assert_eq!(rep.dropped_records, 0, "no gap: the reseal covered the consumed seq");
         assert_eq!(rep.recovered_rows(), 4);
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
     }
 
     #[test]
     fn persistent_write_failure_flips_read_only_and_refuses_retries() {
         let d = 8usize;
         // write 1 (add 1's append) succeeds; everything after fails —
-        // add 2's append fails AND its reseal snapshot fails
+        // add 2's append fails AND its reseal fails
         let io = FaultIo::new(MemIo::new(), Fault::FailWritesFrom { nth: 2 });
-        let mut durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
+        let durable = DurableStore::open_with(cfg(), dcfg(0), Box::new(io)).unwrap();
         let v0 = Rng::new(50).gaussian_vec(d);
         durable.add("a", &v0, d, 1).unwrap();
         let err = durable.add("a", &Rng::new(51).gaussian_vec(d), d, 1).unwrap_err();
@@ -721,16 +1072,57 @@ mod tests {
         assert_eq!(reopened.recovery().unwrap().recovered_rows(), 1);
         let mut fresh = VectorStore::new(cfg()).unwrap();
         fresh.add("a", &v0, d, 1).unwrap();
-        assert_bit_identical(reopened.store(), &fresh);
+        assert_bit_identical(&reopened.store(), &fresh);
+    }
+
+    #[test]
+    fn stale_width_segments_requantize_at_recovery() {
+        // Budget policy: seal at the initial (rich) width, keep adding
+        // until the solver shrinks the collection, seal again — the
+        // manifest now lists the old segment at its stale on-disk width.
+        // Recovery must requantize those rows from the residual store
+        // and land bit-identical to a never-sealed, never-crashed build.
+        let d = 16usize;
+        let bcfg = IndexConfig {
+            policy: IndexPolicy::Budget { bit_choices: vec![2, 4, 8] },
+            budget_bytes: 600,
+            metric: Metric::InnerProduct,
+            ..Default::default()
+        };
+        let durable =
+            DurableStore::open_with(bcfg.clone(), dcfg(0), Box::new(MemIo::new())).unwrap();
+        let mut fresh = VectorStore::new(bcfg.clone()).unwrap();
+        let batch = |seed: u64| Rng::new(seed).gaussian_vec(10 * d);
+        durable.add("a", &batch(0), d, 1).unwrap();
+        fresh.add("a", &batch(0), d, 1).unwrap();
+        durable.seal_now().unwrap(); // segment written at the rich width
+        for seed in 1..5u64 {
+            durable.add("a", &batch(seed), d, 1).unwrap();
+            fresh.add("a", &batch(seed), d, 1).unwrap();
+        }
+        // 50 rows at 8 bits need 1000 B > 600: the solver must have
+        // narrowed the collection below its sealed width
+        assert!(durable.store().get("a").unwrap().bits() < 8);
+        durable.seal_now().unwrap();
+        let io = durable.into_io().unwrap();
+        let reopened = DurableStore::open_with(bcfg, dcfg(0), io).unwrap();
+        let s = reopened.store();
+        let c = s.get("a").unwrap();
+        assert!(
+            c.segments().iter().any(|seg| seg.disk_bits != c.bits()),
+            "the stale-width requantize path must actually be exercised"
+        );
+        assert_bit_identical(&s, &fresh);
     }
 
     #[test]
     fn ephemeral_store_has_no_engine() {
-        let mut s = DurableStore::ephemeral(cfg()).unwrap();
+        let s = DurableStore::ephemeral(cfg()).unwrap();
         s.add("a", &vec![1.0; 8], 8, 1).unwrap();
         assert!(!s.is_durable());
         assert!(s.recovery().is_none());
-        s.snapshot_now().unwrap(); // no-op, not an error
+        s.seal_now().unwrap(); // no-op, not an error
+        assert_eq!(s.compactions(), 0);
         assert!(s.into_io().is_none());
     }
 }

@@ -222,6 +222,15 @@ pub enum Fault {
         /// Bit index 0..8 within the byte.
         bit: u8,
     },
+    /// The `nth` write sleeps `millis` before persisting normally — a
+    /// slow disk flush. Used to assert that readers never serialize
+    /// behind seal I/O (the ISSUE-8 headline bug).
+    SlowWrite {
+        /// 1-based ordinal of the write to delay.
+        nth: usize,
+        /// Milliseconds to sleep before the write proceeds.
+        millis: u64,
+    },
 }
 
 /// [`Io`] wrapper that injects one [`Fault`] at a deterministic point
@@ -269,6 +278,10 @@ impl<I: Io> FaultIo<I> {
                     *b ^= 1u8 << (bit & 7);
                 }
                 Ok(Some(out))
+            }
+            Fault::SlowWrite { nth, millis } if nth == self.writes => {
+                std::thread::sleep(std::time::Duration::from_millis(millis));
+                Ok(Some(bytes.to_vec()))
             }
             _ => Ok(Some(bytes.to_vec())),
         }

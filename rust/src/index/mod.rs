@@ -39,15 +39,28 @@
 //! monotone 2 → 4 → 8-bit recall ladder against the brute-force f32
 //! baseline plus self-query-ranks-first at >= 4 bits.
 //!
-//! Durability (ISSUE 6) lives in the child modules: [`wal`] (the
-//! per-collection CRC-checksummed append log), [`snapshot`] (versioned
-//! sealed-state segments), [`durability`] (the [`durability::DurableStore`]
-//! orchestrator: WAL-before-ack, periodic snapshots, crash recovery),
-//! and [`io`] (the filesystem seam with deterministic fault injection).
+//! Durability (ISSUE 6, segmented in ISSUE 8) lives in the child
+//! modules: [`wal`] (the per-collection CRC-checksummed append log),
+//! [`segment`] (immutable sealed segments + the manifest that lists
+//! them — the on-disk layout), [`snapshot`] (the canonical *logical*
+//! encoding of a whole store, used for bit-for-bit equality checks and
+//! golden fixtures), [`durability`] (the [`durability::DurableStore`]
+//! orchestrator: WAL-before-ack, O(head) sealing, crash recovery),
+//! [`compact`] (the background compactor that merges small segments
+//! and re-solves widths, swapping the manifest atomically), and [`io`]
+//! (the filesystem seam with deterministic fault injection).
+//!
+//! A [`Collection`]'s rows are split between a **mutable head** (the
+//! buffers `add` appends to) and a list of immutable **sealed
+//! segments**; queries scatter-gather the phase-1 scan across sealed
+//! segments plus the head in seal order, which is bit-identical to a
+//! monolithic scan because the Alg.-3 estimator is per-row.
 #![deny(missing_docs)]
 
+pub mod compact;
 pub mod durability;
 pub mod io;
+pub mod segment;
 pub mod snapshot;
 pub mod wal;
 
@@ -238,6 +251,10 @@ pub struct CollectionInfo {
     pub code_bytes: usize,
     /// Residual-store footprint (f32 rows the rerank reads).
     pub exact_bytes: usize,
+    /// Immutable sealed segments backing this collection.
+    pub segments: usize,
+    /// Rows still in the mutable head (unsealed).
+    pub head_rows: usize,
 }
 
 /// Indices of the top `k` scores, descending, ties broken toward the
@@ -268,11 +285,19 @@ pub fn top_indices(scores: &[f32], k: usize) -> Vec<usize> {
 /// One named set of embedding rows, stored as packed RaBitQ codes plus a
 /// residual f32 store for the exact rerank.
 ///
-/// Layout: row `i`'s codes occupy elements `[i*d, (i+1)*d)` of the
-/// shared LSB-first bit buffer (the [`crate::rabitq::PackedCodes`]
-/// layout), `r[i]` is its least-squares rescale, and `exact[i*d..]`
-/// holds the metric-normalized row the rerank reads. All rows share one
-/// full-dimension rotation, so a query is rotated once per scan.
+/// Rows live in two parts. The **head** (`codes`/`r`/`exact` below) is
+/// mutable: `add` appends to it. **Sealed segments** (`sealed`) are
+/// immutable copies of earlier heads, each the in-memory twin of one
+/// on-disk segment file (see [`segment`]). Global row ids run through
+/// the sealed segments in seal order and then the head, so sealing
+/// never renumbers a row.
+///
+/// Within each part, row `i`'s codes occupy elements `[i*d, (i+1)*d)`
+/// of that part's LSB-first bit buffer (the
+/// [`crate::rabitq::PackedCodes`] layout), `r[i]` is its least-squares
+/// rescale, and `exact[i*d..]` holds the metric-normalized row the
+/// rerank reads. All rows share one full-dimension rotation, so a
+/// query is rotated once per scan regardless of segment count.
 #[derive(Clone, Debug)]
 pub struct Collection {
     name: String,
@@ -280,6 +305,7 @@ pub struct Collection {
     bits: u8,
     metric: Metric,
     rot: PracticalRht,
+    sealed: Vec<segment::SegmentData>,
     codes: Vec<u8>,
     r: Vec<f32>,
     exact: Vec<f32>,
@@ -308,6 +334,7 @@ impl Collection {
             bits,
             metric,
             rot,
+            sealed: Vec::new(),
             codes: Vec::new(),
             r: Vec::new(),
             exact: Vec::new(),
@@ -319,14 +346,30 @@ impl Collection {
         &self.name
     }
 
-    /// Stored rows.
+    /// Stored rows (sealed segments + head).
     pub fn len(&self) -> usize {
-        self.r.len()
+        self.sealed.iter().map(segment::SegmentData::rows).sum::<usize>() + self.r.len()
     }
 
     /// True when no rows are stored.
     pub fn is_empty(&self) -> bool {
-        self.r.is_empty()
+        self.sealed.is_empty() && self.r.is_empty()
+    }
+
+    /// Rows still in the mutable head (unsealed — covered by the WAL,
+    /// not by any segment file).
+    pub fn head_rows(&self) -> usize {
+        self.r.len()
+    }
+
+    /// Number of immutable sealed segments.
+    pub fn segment_count(&self) -> usize {
+        self.sealed.len()
+    }
+
+    /// Borrow the sealed segments, seal order (global row order).
+    pub fn segments(&self) -> &[segment::SegmentData] {
+        &self.sealed
     }
 
     /// Row dimension.
@@ -351,14 +394,18 @@ impl Collection {
         (self.d * self.bits as usize).div_ceil(8) + 4
     }
 
-    /// Total scan payload: packed code buffer + rescale table.
+    /// Total scan payload: packed code buffers + rescale tables, sealed
+    /// segments and head alike.
     pub fn code_bytes(&self) -> usize {
-        self.codes.len() + 4 * self.r.len()
+        let sealed: usize =
+            self.sealed.iter().map(|s| s.codes.len() + 4 * s.r.len()).sum();
+        sealed + self.codes.len() + 4 * self.r.len()
     }
 
     /// Residual-store footprint (f32 rows, rerank side).
     pub fn exact_bytes(&self) -> usize {
-        self.exact.len() * 4
+        let sealed: usize = self.sealed.iter().map(|s| s.exact.len() * 4).sum();
+        sealed + self.exact.len() * 4
     }
 
     /// Accounting snapshot.
@@ -372,6 +419,8 @@ impl Collection {
             bytes_per_row: self.bytes_per_row(),
             code_bytes: self.code_bytes(),
             exact_bytes: self.exact_bytes(),
+            segments: self.sealed.len(),
+            head_rows: self.r.len(),
         }
     }
 
@@ -387,10 +436,11 @@ impl Collection {
             });
         }
         let first = self.len();
+        let head_first = self.r.len(); // packing offset is head-local
         let rows = vecs.len() / self.d;
         let d = self.d;
-        // grow the packed buffer to cover the new rows before writing
-        let total = (first + rows) * d * self.bits as usize;
+        // grow the head's packed buffer to cover the new rows
+        let total = (head_first + rows) * d * self.bits as usize;
         self.codes.resize(total.div_ceil(8), 0);
         let mut seg = vec![0f32; d];
         let mut colcodes: Vec<u8> = Vec::with_capacity(d);
@@ -402,31 +452,106 @@ impl Collection {
             self.exact.extend_from_slice(&seg);
             self.rot.apply(&mut seg);
             let rr = quantize_column_into(&seg, self.bits, ScaleMode::MaxAbs, &mut colcodes);
-            set_codes(&mut self.codes, self.bits, (first + i) * d, &colcodes);
+            set_codes(&mut self.codes, self.bits, (head_first + i) * d, &colcodes);
             self.r.push(rr);
         }
         Ok(first)
     }
 
-    /// Quantize every stored row at `bits` from the residual store —
-    /// the shared path behind [`Collection::recode`] and the budget
-    /// policy's low-width recall probe.
+    /// Seal the head: move its buffers wholesale into a new immutable
+    /// [`segment::SegmentData`] with store-global id `id`. O(head rows)
+    /// — sealed segments are never touched. No-op on an empty head.
+    /// The durability layer calls this only after the matching segment
+    /// file and manifest are committed.
+    pub fn seal_head(&mut self, id: u64) {
+        if self.r.is_empty() {
+            return;
+        }
+        self.sealed.push(segment::SegmentData {
+            id,
+            disk_bits: self.bits,
+            codes: std::mem::take(&mut self.codes),
+            r: std::mem::take(&mut self.r),
+            exact: std::mem::take(&mut self.exact),
+        });
+    }
+
+    /// The residual store's parts in global row order: every sealed
+    /// segment's rows, then the head's.
+    fn exact_parts(&self) -> impl Iterator<Item = &[f32]> {
+        self.sealed
+            .iter()
+            .map(|s| s.exact.as_slice())
+            .chain(std::iter::once(self.exact.as_slice()))
+    }
+
+    /// Residual f32 row at global id `i`, walking the sealed segments
+    /// then the head.
+    fn row_exact(&self, i: usize) -> &[f32] {
+        let mut i = i;
+        for s in &self.sealed {
+            if i < s.rows() {
+                return &s.exact[i * self.d..(i + 1) * self.d];
+            }
+            i -= s.rows();
+        }
+        &self.exact[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Quantize every stored row (sealed + head, global order) at
+    /// `bits` from the residual store into **one contiguous buffer** —
+    /// the budget policy's low-width recall probe, and the canonical
+    /// flattening the logical snapshot encoding serializes. Because
+    /// recoding is lossless-from-exact, the flat result is
+    /// bit-identical to the codes of a never-sealed collection.
     fn quantize_all(&self, bits: u8) -> (Vec<u8>, Vec<f32>) {
         let (n, d) = (self.len(), self.d);
         let mut data = vec![0u8; (n * d * bits as usize).div_ceil(8)];
         let mut r = Vec::with_capacity(n);
         let mut seg = vec![0f32; d];
         let mut colcodes: Vec<u8> = Vec::with_capacity(d);
-        for i in 0..n {
-            seg.copy_from_slice(&self.exact[i * d..(i + 1) * d]);
-            self.rot.apply(&mut seg);
-            r.push(quantize_column_into(&seg, bits, ScaleMode::MaxAbs, &mut colcodes));
-            set_codes(&mut data, bits, i * d, &colcodes);
+        let mut gi = 0usize;
+        for part in self.exact_parts() {
+            for row in part.chunks_exact(d) {
+                seg.copy_from_slice(row);
+                self.rot.apply(&mut seg);
+                r.push(quantize_column_into(&seg, bits, ScaleMode::MaxAbs, &mut colcodes));
+                set_codes(&mut data, bits, gi * d, &colcodes);
+                gi += 1;
+            }
         }
         (data, r)
     }
 
-    /// Re-encode every row at a new width. Lossless-from-exact: codes
+    /// Flat scan payload over all rows, global order: `(codes, r)` at
+    /// the collection's current width, as if it had never been sealed.
+    /// Borrows the head directly when nothing is sealed; requantizes
+    /// (losslessly) otherwise. Used by the canonical logical encoding.
+    pub(crate) fn flat_codes_r(&self) -> (Vec<u8>, Vec<f32>) {
+        if self.sealed.is_empty() {
+            (self.codes.clone(), self.r.clone())
+        } else {
+            self.quantize_all(self.bits)
+        }
+    }
+
+    /// Flat residual store over all rows, global order.
+    pub(crate) fn flat_exact(&self) -> Vec<f32> {
+        if self.sealed.is_empty() {
+            self.exact.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.len() * self.d);
+            for part in self.exact_parts() {
+                out.extend_from_slice(part);
+            }
+            out
+        }
+    }
+
+    /// Re-encode every row at a new width — head *and* sealed segments
+    /// (each from its own residual store; segment files on disk keep
+    /// their old width until compaction rewrites them, tracked by
+    /// [`segment::SegmentData::disk_bits`]). Lossless-from-exact: codes
     /// are regenerated from the residual f32 rows, so repeated recoding
     /// accumulates no error — a recoded collection is bit-identical to
     /// one built at that width from scratch.
@@ -437,7 +562,16 @@ impl Collection {
         if bits == self.bits {
             return Ok(());
         }
-        let (data, r) = self.quantize_all(bits);
+        let recoded: Vec<(Vec<u8>, Vec<f32>)> = self
+            .sealed
+            .iter()
+            .map(|s| quantize_rows(&self.rot, self.d, &s.exact, bits))
+            .collect();
+        for (s, (codes, r)) in self.sealed.iter_mut().zip(recoded) {
+            s.codes = codes;
+            s.r = r;
+        }
+        let (data, r) = quantize_rows(&self.rot, self.d, &self.exact, bits);
         self.codes = data;
         self.r = r;
         self.bits = bits;
@@ -482,9 +616,41 @@ impl Collection {
         if n == 0 {
             return Ok(Vec::new());
         }
-        // phase 1: Alg.-3 estimates straight from the packed codes
+        // phase 1: Alg.-3 estimates straight from the packed codes,
+        // scatter-gathered across sealed segments then the head. The
+        // estimator is per-row, so scanning each part into its global
+        // offset of `est` is bit-identical to one monolithic scan —
+        // the merge order is fixed (seal order, head last), keeping
+        // results deterministic regardless of segment boundaries.
         let mut est = vec![0f32; n];
-        kernels::scan_scores_q(&q_rot, &self.codes, self.bits, 0, n, &self.r, threads, &mut est);
+        let mut off = 0usize;
+        for s in &self.sealed {
+            let rows = s.rows();
+            kernels::scan_scores_q(
+                &q_rot,
+                &s.codes,
+                self.bits,
+                0,
+                rows,
+                &s.r,
+                threads,
+                &mut est[off..off + rows],
+            );
+            off += rows;
+        }
+        let head = self.r.len();
+        if head > 0 {
+            kernels::scan_scores_q(
+                &q_rot,
+                &self.codes,
+                self.bits,
+                0,
+                head,
+                &self.r,
+                threads,
+                &mut est[off..off + head],
+            );
+        }
         let take = (rerank_factor.max(1).saturating_mul(k)).min(n);
         let candidates = top_indices(&est, take);
         // phase 2: exact rerank — the only place residual rows are read
@@ -496,7 +662,7 @@ impl Collection {
             .iter()
             .map(|&i| {
                 RERANK_ROW_READS.fetch_add(1, Ordering::Relaxed);
-                let row = &self.exact[i * self.d..(i + 1) * self.d];
+                let row = self.row_exact(i);
                 let mut dp = 0f32;
                 for (x, v) in metric_q.iter().zip(row) {
                     dp += x * v;
@@ -542,12 +708,44 @@ impl Collection {
             l2_normalize(&mut mq);
         }
         let mut scores = vec![0f32; n];
-        kernels::scan_scores_f32(&mq, &self.exact, n, threads, &mut scores);
+        let mut off = 0usize;
+        for part in self.exact_parts() {
+            let rows = part.len() / self.d;
+            if rows > 0 {
+                kernels::scan_scores_f32(&mq, part, rows, threads, &mut scores[off..off + rows]);
+            }
+            off += rows;
+        }
         Ok(top_indices(&scores, k)
             .into_iter()
             .map(|i| SearchHit { id: i, score: scores[i] })
             .collect())
     }
+}
+
+/// Quantize a buffer of pre-normalized residual rows at `bits` under
+/// `rot`, packed from element 0 of a fresh buffer — the primitive
+/// behind head/segment recoding, segment merging, and recovery's
+/// requantize-stale-segment path. Deterministic and lossless-from-
+/// exact, so every caller gets bytes bit-identical to a fresh encode.
+pub(crate) fn quantize_rows(
+    rot: &PracticalRht,
+    d: usize,
+    exact: &[f32],
+    bits: u8,
+) -> (Vec<u8>, Vec<f32>) {
+    let n = exact.len() / d;
+    let mut data = vec![0u8; (n * d * bits as usize).div_ceil(8)];
+    let mut r = Vec::with_capacity(n);
+    let mut seg = vec![0f32; d];
+    let mut colcodes: Vec<u8> = Vec::with_capacity(d);
+    for (i, row) in exact.chunks_exact(d).enumerate() {
+        seg.copy_from_slice(row);
+        rot.apply(&mut seg);
+        r.push(quantize_column_into(&seg, bits, ScaleMode::MaxAbs, &mut colcodes));
+        set_codes(&mut data, bits, i * d, &colcodes);
+    }
+    (data, r)
 }
 
 /// FNV-1a over the collection name: differentiates per-collection
@@ -693,6 +891,17 @@ impl VectorStore {
         self.collections.values().map(Collection::len).sum()
     }
 
+    /// Total sealed segments across collections.
+    pub fn segments(&self) -> usize {
+        self.collections.values().map(Collection::segment_count).sum()
+    }
+
+    /// Total unsealed head rows across collections (rows covered only
+    /// by the WAL).
+    pub fn head_rows(&self) -> usize {
+        self.collections.values().map(Collection::head_rows).sum()
+    }
+
     /// Cheapest width the policy admits (min bit choice; the uniform
     /// width under Uniform).
     fn min_bits(&self) -> u8 {
@@ -822,7 +1031,7 @@ impl VectorStore {
         let mut exact = vec![0f32; n];
         let mut i = 0;
         while i < n && samples < SENSITIVITY_SAMPLES {
-            let q = &c.exact[i * c.d..(i + 1) * c.d];
+            let q = c.row_exact(i);
             let mut q_rot = q.to_vec();
             c.rot.apply(&mut q_rot);
             kernels::scan_scores_q(
@@ -835,7 +1044,14 @@ impl VectorStore {
                 threads,
                 &mut est,
             );
-            kernels::scan_scores_f32(q, &c.exact, n, threads, &mut exact);
+            let mut off = 0usize;
+            for part in c.exact_parts() {
+                let rows = part.len() / c.d;
+                if rows > 0 {
+                    kernels::scan_scores_f32(q, part, rows, threads, &mut exact[off..off + rows]);
+                }
+                off += rows;
+            }
             let top_e = top_indices(&est, k_eff);
             let top_x = top_indices(&exact, k_eff);
             hits += top_x.iter().filter(|&&t| top_e.contains(&t)).count();
@@ -1260,6 +1476,69 @@ mod tests {
         assert_eq!(info.exact_bytes, n * d * 4);
         assert_eq!(store.code_bytes(), info.code_bytes);
         assert_eq!(store.rows(), n);
+    }
+
+    #[test]
+    fn sealed_collection_queries_bit_identical_to_monolithic() {
+        // the tentpole invariant: scatter-gathered phase-1 scans across
+        // sealed segments + head merge to exactly the monolithic result
+        let (n, d) = (96usize, 24usize);
+        let vecs = randvecs(n, d, 4242);
+        let mut mono = Collection::new("s", d, 5, Metric::Cosine, 9).unwrap();
+        mono.add(&vecs).unwrap();
+        let mut seg = Collection::new("s", d, 5, Metric::Cosine, 9).unwrap();
+        for (i, chunk) in vecs.chunks(32 * d).enumerate() {
+            let first = seg.add(chunk).unwrap();
+            assert_eq!(first, i * 32, "global ids must survive sealing");
+            seg.seal_head(i as u64);
+        }
+        assert_eq!(seg.len(), n);
+        assert_eq!(seg.segment_count(), 3);
+        assert_eq!(seg.head_rows(), 0);
+        for qseed in [7u64, 8, 9] {
+            let q = Rng::new(qseed).gaussian_vec(d);
+            assert_eq!(
+                seg.query(&q, 10, 4, 1).unwrap(),
+                mono.query(&q, 10, 4, 1).unwrap(),
+                "segmented and monolithic queries must agree bit-for-bit"
+            );
+            assert_eq!(
+                seg.brute_force(&q, 10, 1).unwrap(),
+                mono.brute_force(&q, 10, 1).unwrap()
+            );
+        }
+        // a half-sealed collection (segments + non-empty head) too
+        let mut half = Collection::new("s", d, 5, Metric::Cosine, 9).unwrap();
+        half.add(&vecs[..64 * d]).unwrap();
+        half.seal_head(0);
+        half.add(&vecs[64 * d..]).unwrap();
+        assert_eq!(half.head_rows(), 32);
+        let q = Rng::new(7).gaussian_vec(d);
+        assert_eq!(half.query(&q, 10, 4, 1).unwrap(), mono.query(&q, 10, 4, 1).unwrap());
+        // flat views equal the monolithic buffers bit-for-bit
+        let (fc, fr) = half.flat_codes_r();
+        assert_eq!((fc, fr), (mono.codes.clone(), mono.r.clone()));
+        assert_eq!(half.flat_exact(), mono.exact);
+        assert_eq!(half.code_bytes(), mono.code_bytes());
+        assert_eq!(half.exact_bytes(), mono.exact_bytes());
+    }
+
+    #[test]
+    fn recode_spans_sealed_segments_and_stays_lossless() {
+        let (n, d) = (48usize, 16usize);
+        let vecs = randvecs(n, d, 66);
+        let mut seg = Collection::new("r", d, 8, Metric::Cosine, 9).unwrap();
+        seg.add(&vecs[..24 * d]).unwrap();
+        seg.seal_head(0);
+        seg.add(&vecs[24 * d..]).unwrap();
+        seg.recode(3).unwrap();
+        assert_eq!(seg.segments()[0].disk_bits, 8, "disk width is stale after recode");
+        let mut mono = Collection::new("r", d, 3, Metric::Cosine, 9).unwrap();
+        mono.add(&vecs).unwrap();
+        let (fc, fr) = seg.flat_codes_r();
+        assert_eq!((fc, fr), (mono.codes.clone(), mono.r.clone()));
+        let q = Rng::new(5).gaussian_vec(d);
+        assert_eq!(seg.query(&q, 8, 4, 1).unwrap(), mono.query(&q, 8, 4, 1).unwrap());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! Immutable sealed segments and the manifest that lists them: the
+//! on-disk layout that replaced the PR-6 monolithic whole-store
+//! snapshot.
+//!
+//! A collection's rows now live in two places: a **mutable head** (the
+//! packed-code/rescale/residual buffers inside
+//! [`super::Collection`] that `add` appends to) and a list of
+//! **immutable sealed segments** ([`SegmentData`]). Sealing moves the
+//! head's buffers wholesale into a new segment and writes them to one
+//! per-collection CRC'd segment file — O(head rows), not O(store
+//! rows), which is the whole point: the old design re-encoded every
+//! row of every collection on each cadence snapshot. A small
+//! **manifest** file then lists the live segments plus the sequence
+//! cursor; writing the manifest (atomic temp + fsync + rename through
+//! the [`super::io::Io`] seam) is the single commit point of a seal or
+//! a compaction swap.
+//!
+//! Because RaBitQ codes are deterministic and recoding is
+//! lossless-from-exact, a segment file *is* the exact serving layout:
+//! recovery loads the bytes straight back (or requantizes from the
+//! residual store when a rebalance changed the collection's width
+//! after the segment was written — bit-identical to a fresh encode).
+//!
+//! ## Segment wire format (all integers little-endian)
+//!
+//! ```text
+//! [magic: "RQSG"] [version: u32 = 1]
+//! [name_len: u16] [name] [id: u64]
+//! [d: u32] [bits: u8] [metric: u8]          metric: 0 = ip, 1 = cosine
+//! [nrows: u32]
+//! [codes_len: u32] [codes bytes]
+//! [r: nrows * f32]
+//! [exact: nrows * d * f32]
+//! [crc: u32]                                CRC-32 of every prior byte
+//! ```
+//!
+//! Segment files live in `DIR/segments/<name>-<id, zero-padded>.seg`;
+//! ids are store-global and monotone, so a file is written exactly
+//! once and never modified (compaction writes *new* ids and deletes
+//! the replaced files only after the manifest swap).
+//!
+//! ## Manifest wire format (all integers little-endian)
+//!
+//! ```text
+//! [magic: "RQMF"] [version: u32 = 1]
+//! [gen: u64] [next_seq: u64] [next_seg_id: u64] [rows_at_solve: u64]
+//! [n_collections: u32]
+//! per collection, name order:
+//!   [name_len: u16] [name]
+//!   [d: u32] [bits: u8] [metric: u8]
+//!   [d_hat: u32] [signs1: d_hat * f32]
+//!   [signs2_len: u32] [signs2: signs2_len * f32]
+//!   [n_segments: u32]  per segment: [id: u64] [rows: u32] [bits: u8]
+//! [crc: u32]
+//! ```
+//!
+//! Manifests are named `manifest-<gen, zero-padded>.mf` with a
+//! store-global monotone generation, so the newest decodable manifest
+//! wins at recovery and a corrupt one falls back to its kept
+//! predecessor. A per-segment `bits` that differs from the
+//! collection's records that the file on disk predates a rebalance —
+//! recovery requantizes those rows from the segment's residual store.
+
+use super::io::Io;
+use super::snapshot::Cur;
+use super::wal::crc32;
+use super::{IndexError, Metric};
+use std::path::{Path, PathBuf};
+
+/// Four-byte magic at offset 0 of every segment file.
+pub const SEGMENT_MAGIC: &[u8; 4] = b"RQSG";
+
+/// Current segment format version.
+pub const SEGMENT_VERSION: u32 = 1;
+
+/// Four-byte magic at offset 0 of every manifest file.
+pub const MANIFEST_MAGIC: &[u8; 4] = b"RQMF";
+
+/// Current manifest format version.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Subdirectory of the data dir holding the sealed segment files.
+pub const SEGMENT_DIR: &str = "segments";
+
+// ------------------------------------------------------------- in-memory
+
+/// One immutable sealed segment of a collection: the head's buffers at
+/// the moment it was sealed. Codes are always held at the collection's
+/// *current* width (a rebalance recodes sealed segments in memory);
+/// `disk_bits` remembers the width of the on-disk file, which stays at
+/// its sealed width until compaction rewrites it.
+#[derive(Clone, Debug)]
+pub struct SegmentData {
+    /// Store-global segment id (names the on-disk file).
+    pub id: u64,
+    /// Width of the codes in the on-disk segment file. Equal to the
+    /// collection's width at seal time; stale after a rebalance until
+    /// compaction rewrites the file.
+    pub disk_bits: u8,
+    /// Packed codes at the collection's current width.
+    pub codes: Vec<u8>,
+    /// Per-row least-squares rescales.
+    pub r: Vec<f32>,
+    /// Residual f32 rows (metric-normalized), rerank side.
+    pub exact: Vec<f32>,
+}
+
+impl SegmentData {
+    /// Rows stored in this segment.
+    pub fn rows(&self) -> usize {
+        self.r.len()
+    }
+}
+
+// ----------------------------------------------------------- file naming
+
+/// File name of collection `name`'s segment `id`.
+pub fn segment_file_name(name: &str, id: u64) -> String {
+    format!("{name}-{id:020}.seg")
+}
+
+/// Parse a segment file name back to `(collection, id)`; `None` for
+/// strangers. Collection names may contain `-`, so the id is taken
+/// from the end.
+pub fn parse_segment_file(file: &str) -> Option<(String, u64)> {
+    let body = file.strip_suffix(".seg")?;
+    let (name, id) = body.rsplit_once('-')?;
+    if name.is_empty() || id.len() != 20 || !id.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    Some((name.to_string(), id.parse().ok()?))
+}
+
+/// Full path of a segment file under the data dir.
+pub fn segment_path(data_dir: &Path, name: &str, id: u64) -> PathBuf {
+    data_dir.join(SEGMENT_DIR).join(segment_file_name(name, id))
+}
+
+/// File name of the manifest at generation `gen`.
+pub fn manifest_file_name(gen: u64) -> String {
+    format!("manifest-{gen:020}.mf")
+}
+
+/// Parse a manifest file name back to its generation; `None` for
+/// non-manifest names.
+pub fn parse_manifest_gen(file: &str) -> Option<u64> {
+    let body = file.strip_prefix("manifest-")?.strip_suffix(".mf")?;
+    if body.len() != 20 || !body.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    body.parse().ok()
+}
+
+/// Full path of a manifest file under the data dir.
+pub fn manifest_path(data_dir: &Path, gen: u64) -> PathBuf {
+    data_dir.join(manifest_file_name(gen))
+}
+
+/// Generations of every manifest file in `data_dir`, newest first.
+pub fn list_manifests(io: &mut dyn Io, data_dir: &Path) -> Result<Vec<u64>, IndexError> {
+    let names = io
+        .list(data_dir)
+        .map_err(|e| IndexError::Io(format!("listing {}: {e}", data_dir.display())))?;
+    let mut gens: Vec<u64> = names.iter().filter_map(|n| parse_manifest_gen(n)).collect();
+    gens.sort_unstable_by(|a, b| b.cmp(a));
+    Ok(gens)
+}
+
+// --------------------------------------------------------- segment codec
+
+fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn metric_tag(metric: Metric) -> u8 {
+    match metric {
+        Metric::InnerProduct => 0,
+        Metric::Cosine => 1,
+    }
+}
+
+fn metric_from_tag(tag: u8) -> Result<Metric, IndexError> {
+    match tag {
+        0 => Ok(Metric::InnerProduct),
+        1 => Ok(Metric::Cosine),
+        m => Err(corrupt(&format!("unknown metric tag {m}"))),
+    }
+}
+
+fn corrupt(what: &str) -> IndexError {
+    IndexError::Io(format!("segment store corrupt: {what}"))
+}
+
+fn overflow() -> IndexError {
+    IndexError::Io("segment length overflow".into())
+}
+
+/// Serialize one sealed segment of collection `name` to file bytes.
+/// `bits` is the width the codes are packed at (the collection's width
+/// at write time — recorded so recovery can tell when a later
+/// rebalance made the file stale).
+pub fn encode_segment(
+    name: &str,
+    d: usize,
+    bits: u8,
+    metric: Metric,
+    id: u64,
+    codes: &[u8],
+    r: &[f32],
+    exact: &[f32],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(SEGMENT_MAGIC);
+    out.extend_from_slice(&SEGMENT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    out.push(bits);
+    out.push(metric_tag(metric));
+    out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+    out.extend_from_slice(codes);
+    push_f32s(&mut out, r);
+    push_f32s(&mut out, exact);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// A decoded segment file, before it is checked against the manifest
+/// entry that referenced it.
+#[derive(Clone, Debug)]
+pub struct DecodedSegment {
+    /// Collection the segment belongs to.
+    pub name: String,
+    /// Store-global segment id.
+    pub id: u64,
+    /// Row dimension.
+    pub d: usize,
+    /// Width the codes are packed at.
+    pub bits: u8,
+    /// Similarity metric.
+    pub metric: Metric,
+    /// Packed codes.
+    pub codes: Vec<u8>,
+    /// Per-row rescales.
+    pub r: Vec<f32>,
+    /// Residual f32 rows.
+    pub exact: Vec<f32>,
+}
+
+/// Decode segment file bytes. Any structural or checksum violation is
+/// a typed error — recovery treats it as "this manifest generation is
+/// unusable, fall back", never a panic.
+pub fn decode_segment(bytes: &[u8]) -> Result<DecodedSegment, IndexError> {
+    if bytes.len() < 4 + 4 + 2 + 8 + 4 + 1 + 1 + 4 + 4 + 4 {
+        return Err(corrupt("segment too short for a header"));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored_crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(body) != stored_crc {
+        return Err(corrupt("segment checksum mismatch"));
+    }
+    let mut cur = Cur::new(body);
+    if cur.take(4)? != SEGMENT_MAGIC {
+        return Err(corrupt("bad segment magic"));
+    }
+    let version = cur.u32()?;
+    if version != SEGMENT_VERSION {
+        return Err(IndexError::Io(format!(
+            "segment version {version} unsupported (this build reads {SEGMENT_VERSION})"
+        )));
+    }
+    let name_len = cur.u16()? as usize;
+    let name = std::str::from_utf8(cur.take(name_len)?)
+        .map_err(|_| corrupt("segment collection name not UTF-8"))?
+        .to_string();
+    let id = cur.u64()?;
+    let d = cur.u32()? as usize;
+    let bits = cur.u8()?;
+    let metric = metric_from_tag(cur.u8()?)?;
+    if d == 0 || !(1..=8).contains(&bits) {
+        return Err(corrupt("bad segment dimension or bit-width"));
+    }
+    let nrows = cur.u32()? as usize;
+    let codes_len = cur.u32()? as usize;
+    let want_codes = nrows
+        .checked_mul(d)
+        .and_then(|x| x.checked_mul(bits as usize))
+        .ok_or_else(overflow)?
+        .div_ceil(8);
+    if codes_len != want_codes {
+        return Err(corrupt("segment code buffer length inconsistent with rows"));
+    }
+    let codes = cur.take(codes_len)?.to_vec();
+    let r = cur.f32s(nrows)?;
+    let exact = cur.f32s(nrows.checked_mul(d).ok_or_else(overflow)?)?;
+    if !cur.done() {
+        return Err(corrupt("trailing bytes after segment payload"));
+    }
+    Ok(DecodedSegment { name, id, d, bits, metric, codes, r, exact })
+}
+
+// -------------------------------------------------------- manifest codec
+
+/// One segment reference inside a manifest: enough to locate the file,
+/// validate it, and decide whether it predates a rebalance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ManifestSegment {
+    /// Store-global segment id.
+    pub id: u64,
+    /// Rows the segment holds (validated against the decoded file).
+    pub rows: usize,
+    /// Width of the codes in the file. When this differs from the
+    /// collection's width, recovery requantizes the segment's rows from
+    /// its residual store (lossless-from-exact).
+    pub bits: u8,
+}
+
+/// One collection's entry in a manifest: identity, rotation signs
+/// (serialized so the format is self-contained and the numpy mirror
+/// can author byte-exact fixtures), current width, and the ordered
+/// list of live sealed segments. Head rows are *not* listed — they are
+/// covered by the WAL.
+#[derive(Clone, Debug)]
+pub struct ManifestCollection {
+    /// Collection name.
+    pub name: String,
+    /// Row dimension.
+    pub d: usize,
+    /// Current code width of the collection.
+    pub bits: u8,
+    /// Similarity metric.
+    pub metric: Metric,
+    /// First Rademacher sign diagonal of the rotation.
+    pub signs1: Vec<f32>,
+    /// Second sign diagonal (empty for single-window rotations).
+    pub signs2: Vec<f32>,
+    /// Live sealed segments, in seal order (global row order).
+    pub segments: Vec<ManifestSegment>,
+}
+
+/// The manifest: the small file whose atomic write commits a seal or a
+/// compaction swap. Lists every collection's live segments plus the
+/// store-global cursors recovery needs.
+#[derive(Clone, Debug)]
+pub struct StoreManifest {
+    /// Monotone generation (names the file; newest decodable wins).
+    pub gen: u64,
+    /// WAL replay resumes at this store-global sequence number.
+    pub next_seq: u64,
+    /// Next unused store-global segment id.
+    pub next_seg_id: u64,
+    /// Row count at the last AllocateBits solve (the rebalance
+    /// throttle's reference point).
+    pub rows_at_solve: usize,
+    /// Per-collection entries, name order.
+    pub collections: Vec<ManifestCollection>,
+}
+
+/// Serialize a manifest to file bytes.
+pub fn encode_manifest(m: &StoreManifest) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MANIFEST_MAGIC);
+    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    out.extend_from_slice(&m.gen.to_le_bytes());
+    out.extend_from_slice(&m.next_seq.to_le_bytes());
+    out.extend_from_slice(&m.next_seg_id.to_le_bytes());
+    out.extend_from_slice(&(m.rows_at_solve as u64).to_le_bytes());
+    out.extend_from_slice(&(m.collections.len() as u32).to_le_bytes());
+    for c in &m.collections {
+        out.extend_from_slice(&(c.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(c.name.as_bytes());
+        out.extend_from_slice(&(c.d as u32).to_le_bytes());
+        out.push(c.bits);
+        out.push(metric_tag(c.metric));
+        out.extend_from_slice(&(c.signs1.len() as u32).to_le_bytes());
+        push_f32s(&mut out, &c.signs1);
+        out.extend_from_slice(&(c.signs2.len() as u32).to_le_bytes());
+        push_f32s(&mut out, &c.signs2);
+        out.extend_from_slice(&(c.segments.len() as u32).to_le_bytes());
+        for s in &c.segments {
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.extend_from_slice(&(s.rows as u32).to_le_bytes());
+            out.push(s.bits);
+        }
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode manifest file bytes. Typed errors for every structural or
+/// checksum violation (recovery falls back to an older generation).
+pub fn decode_manifest(bytes: &[u8]) -> Result<StoreManifest, IndexError> {
+    if bytes.len() < 4 + 4 + 8 + 8 + 8 + 8 + 4 + 4 {
+        return Err(corrupt("manifest too short for a header"));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored_crc = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(body) != stored_crc {
+        return Err(corrupt("manifest checksum mismatch"));
+    }
+    let mut cur = Cur::new(body);
+    if cur.take(4)? != MANIFEST_MAGIC {
+        return Err(corrupt("bad manifest magic"));
+    }
+    let version = cur.u32()?;
+    if version != MANIFEST_VERSION {
+        return Err(IndexError::Io(format!(
+            "manifest version {version} unsupported (this build reads {MANIFEST_VERSION})"
+        )));
+    }
+    let gen = cur.u64()?;
+    let next_seq = cur.u64()?;
+    let next_seg_id = cur.u64()?;
+    let rows_at_solve = cur.u64()? as usize;
+    let n_collections = cur.u32()? as usize;
+    let mut collections = Vec::new();
+    let mut prev_name: Option<String> = None;
+    for _ in 0..n_collections {
+        let name_len = cur.u16()? as usize;
+        let name = std::str::from_utf8(cur.take(name_len)?)
+            .map_err(|_| corrupt("collection name not UTF-8"))?
+            .to_string();
+        if prev_name.as_deref().is_some_and(|p| p >= name.as_str()) {
+            return Err(corrupt("collections not in strict name order"));
+        }
+        prev_name = Some(name.clone());
+        let d = cur.u32()? as usize;
+        let bits = cur.u8()?;
+        let metric = metric_from_tag(cur.u8()?)?;
+        if d == 0 || !(1..=8).contains(&bits) {
+            return Err(corrupt("bad dimension or bit-width"));
+        }
+        let d_hat = cur.u32()? as usize;
+        if d_hat == 0 || d_hat > d {
+            return Err(corrupt("rotation window larger than dimension"));
+        }
+        let signs1 = cur.f32s(d_hat)?;
+        let signs2_len = cur.u32()? as usize;
+        if signs2_len != 0 && signs2_len != d_hat {
+            return Err(corrupt("second sign diagonal length mismatch"));
+        }
+        let signs2 = cur.f32s(signs2_len)?;
+        let n_segments = cur.u32()? as usize;
+        let mut segments = Vec::new();
+        for _ in 0..n_segments {
+            let id = cur.u64()?;
+            let rows = cur.u32()? as usize;
+            let sbits = cur.u8()?;
+            if rows == 0 || !(1..=8).contains(&sbits) || id >= next_seg_id {
+                return Err(corrupt("bad segment reference"));
+            }
+            segments.push(ManifestSegment { id, rows, bits: sbits });
+        }
+        collections.push(ManifestCollection { name, d, bits, metric, signs1, signs2, segments });
+    }
+    if !cur.done() {
+        return Err(corrupt("trailing bytes after last collection"));
+    }
+    Ok(StoreManifest { gen, next_seq, next_seg_id, rows_at_solve, collections })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample_segment() -> Vec<u8> {
+        let (n, d, bits) = (5usize, 8usize, 6u8);
+        let codes = vec![0xA5u8; (n * d * bits as usize).div_ceil(8)];
+        let r: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let exact = Rng::new(1).gaussian_vec(n * d);
+        encode_segment("docs", d, bits, Metric::Cosine, 7, &codes, &r, &exact)
+    }
+
+    fn sample_manifest() -> StoreManifest {
+        StoreManifest {
+            gen: 3,
+            next_seq: 42,
+            next_seg_id: 9,
+            rows_at_solve: 17,
+            collections: vec![ManifestCollection {
+                name: "docs".into(),
+                d: 8,
+                bits: 6,
+                metric: Metric::Cosine,
+                signs1: vec![1.0, -1.0, 1.0, 1.0, -1.0, -1.0, 1.0, -1.0],
+                signs2: vec![],
+                segments: vec![
+                    ManifestSegment { id: 2, rows: 5, bits: 6 },
+                    ManifestSegment { id: 7, rows: 3, bits: 4 },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn segment_round_trips_bit_for_bit() {
+        let bytes = sample_segment();
+        let seg = decode_segment(&bytes).unwrap();
+        assert_eq!(seg.name, "docs");
+        assert_eq!(seg.id, 7);
+        assert_eq!((seg.d, seg.bits, seg.metric), (8, 6, Metric::Cosine));
+        assert_eq!(seg.r.len(), 5);
+        assert_eq!(seg.exact.len(), 40);
+        let re = encode_segment(
+            &seg.name, seg.d, seg.bits, seg.metric, seg.id, &seg.codes, &seg.r, &seg.exact,
+        );
+        assert_eq!(re, bytes);
+    }
+
+    #[test]
+    fn manifest_round_trips_and_orders_strictly() {
+        let m = sample_manifest();
+        let bytes = encode_manifest(&m);
+        let back = decode_manifest(&bytes).unwrap();
+        assert_eq!(back.gen, 3);
+        assert_eq!(back.next_seq, 42);
+        assert_eq!(back.next_seg_id, 9);
+        assert_eq!(back.rows_at_solve, 17);
+        assert_eq!(back.collections.len(), 1);
+        assert_eq!(back.collections[0].segments, m.collections[0].segments);
+        assert_eq!(encode_manifest(&back), bytes);
+    }
+
+    #[test]
+    fn every_corruption_and_truncation_is_rejected() {
+        for bytes in [sample_segment(), encode_manifest(&sample_manifest())] {
+            let decode = |b: &[u8]| -> bool {
+                decode_segment(b).is_ok() || decode_manifest(b).is_ok()
+            };
+            assert!(decode(&bytes), "pristine bytes must decode");
+            for byte in 0..bytes.len() {
+                let mut bad = bytes.clone();
+                bad[byte] ^= 0x10;
+                assert!(!decode(&bad), "flip at byte {byte} must not decode");
+            }
+            for cut in 0..bytes.len() {
+                assert!(!decode(&bytes[..cut]), "truncation to {cut} must not decode");
+            }
+        }
+    }
+
+    #[test]
+    fn file_names_round_trip_and_reject_strangers() {
+        assert_eq!(parse_segment_file(&segment_file_name("docs", 7)), Some(("docs".into(), 7)));
+        assert_eq!(
+            parse_segment_file(&segment_file_name("a-b_c", 123)),
+            Some(("a-b_c".into(), 123)),
+            "names containing '-' parse from the end"
+        );
+        assert_eq!(parse_segment_file("docs-42.seg"), None, "unpadded");
+        assert_eq!(parse_segment_file("manifest-00000000000000000003.mf"), None);
+        assert_eq!(parse_manifest_gen(&manifest_file_name(3)), Some(3));
+        assert_eq!(parse_manifest_gen("manifest-3.mf"), None, "unpadded");
+        assert_eq!(parse_manifest_gen("docs-00000000000000000007.seg"), None);
+        assert!(manifest_file_name(9) < manifest_file_name(10), "lexicographic == numeric");
+    }
+
+    #[test]
+    fn manifest_rejects_unsorted_collections_and_bad_refs() {
+        let mut m = sample_manifest();
+        m.collections.push(m.collections[0].clone()); // duplicate name
+        assert!(decode_manifest(&encode_manifest(&m)).is_err());
+        let mut m = sample_manifest();
+        m.collections[0].segments[0].id = 99; // >= next_seg_id
+        assert!(decode_manifest(&encode_manifest(&m)).is_err());
+        let mut m = sample_manifest();
+        m.collections[0].segments[0].rows = 0; // empty segments never exist
+        assert!(decode_manifest(&encode_manifest(&m)).is_err());
+    }
+}

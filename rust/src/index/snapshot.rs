@@ -1,18 +1,26 @@
-//! Versioned snapshots: the sealed-state side of the durability layer.
+//! The canonical **logical** encoding of a whole [`VectorStore`].
 //!
-//! A snapshot serializes a whole [`VectorStore`] — per collection the
-//! packed codes, rescales, residual f32 store, current bit-width, and
-//! the rotation's Rademacher sign diagonals — plus the store-global
-//! `next_seq` and the rebalance throttle's `rows_at_solve`. Because
-//! RaBitQ codes are deterministic and recoding is lossless-from-exact,
-//! this *is* the live in-memory layout: loading a snapshot reproduces
-//! the store bit-for-bit, and replaying the WAL tail on top of it is
-//! indistinguishable from never having crashed.
+//! A snapshot serializes a store — per collection the packed codes,
+//! rescales, residual f32 store, current bit-width, and the rotation's
+//! Rademacher sign diagonals — plus the store-global `next_seq` and
+//! the rebalance throttle's `rows_at_solve`. Because RaBitQ codes are
+//! deterministic and recoding is lossless-from-exact, this *is* the
+//! live layout: decoding reproduces the store bit-for-bit.
+//!
+//! Since ISSUE 8 the production on-disk format is segmented (see
+//! [`super::segment`]): monolithic `snapshot-<seq>.seg` files are no
+//! longer written. This encoding survives as the store's **canonical
+//! flattened form** — sealed segments are serialized as one contiguous
+//! buffer per collection, exactly the bytes a never-sealed store would
+//! produce — which is what makes "recovery ≡ fresh build" testable as
+//! plain byte equality: the crash walls and the cross-language golden
+//! fixtures compare `encode_snapshot` outputs, independent of where
+//! segment boundaries happen to fall.
 //!
 //! Serializing the sign diagonals (rather than the rotation seed) makes
-//! the format self-contained: recovery never re-runs the sampling RNG,
-//! and the numpy mirror can author byte-exact snapshot fixtures with
-//! explicitly chosen signs.
+//! the format self-contained: decoding never re-runs the sampling RNG,
+//! and the numpy mirror can author byte-exact fixtures with explicitly
+//! chosen signs.
 //!
 //! ## Wire format (all integers little-endian)
 //!
@@ -30,44 +38,17 @@
 //!   [exact: nrows * d * f32]
 //! [crc: u32]                               CRC-32 of every prior byte
 //! ```
-//!
-//! Snapshot files are named `snapshot-<next_seq, zero-padded>.seg` so
-//! lexicographic order is sequence order, and are written via
-//! [`super::io::Io::write_atomic`] (temp + fsync + rename): a crash
-//! mid-snapshot leaves the previous snapshot intact, never a torn one.
 
-use super::io::Io;
 use super::wal::crc32;
 use super::{Collection, IndexConfig, IndexError, Metric, VectorStore};
 use crate::hadamard::PracticalRht;
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
 
-/// Four-byte magic at offset 0 of every snapshot file.
+/// Four-byte magic at offset 0 of every snapshot encoding.
 pub const SNAPSHOT_MAGIC: &[u8; 4] = b"RQSN";
 
 /// Current snapshot format version.
 pub const SNAPSHOT_VERSION: u32 = 1;
-
-/// File name of the snapshot sealing everything below `next_seq`.
-pub fn snapshot_file_name(next_seq: u64) -> String {
-    format!("snapshot-{next_seq:020}.seg")
-}
-
-/// Parse a snapshot file name back to its `next_seq`; `None` for
-/// non-snapshot names (WAL files, temp files, strangers).
-pub fn parse_snapshot_seq(name: &str) -> Option<u64> {
-    let body = name.strip_prefix("snapshot-")?.strip_suffix(".seg")?;
-    if body.len() != 20 || !body.bytes().all(|b| b.is_ascii_digit()) {
-        return None;
-    }
-    body.parse().ok()
-}
-
-/// Full path of a snapshot file under the data dir.
-pub fn snapshot_path(data_dir: &Path, next_seq: u64) -> PathBuf {
-    data_dir.join(snapshot_file_name(next_seq))
-}
 
 fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
     for v in vals {
@@ -75,7 +56,12 @@ fn push_f32s(out: &mut Vec<u8>, vals: &[f32]) {
     }
 }
 
-/// Serialize `store` (sealed through `next_seq`) to snapshot bytes.
+/// Serialize `store` (durable through `next_seq`) to canonical
+/// snapshot bytes. Sealed segments are flattened into one contiguous
+/// buffer per collection (lossless requantize from the residual store
+/// when segments exist), so the output is independent of segment
+/// boundaries: a sealed-and-compacted store and a monolithic build of
+/// the same rows encode identically.
 pub fn encode_snapshot(store: &VectorStore, next_seq: u64) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(SNAPSHOT_MAGIC);
@@ -96,51 +82,64 @@ pub fn encode_snapshot(store: &VectorStore, next_seq: u64) -> Vec<u8> {
         push_f32s(&mut out, &c.rot.signs1);
         out.extend_from_slice(&(c.rot.signs2.len() as u32).to_le_bytes());
         push_f32s(&mut out, &c.rot.signs2);
-        out.extend_from_slice(&(c.r.len() as u32).to_le_bytes());
-        out.extend_from_slice(&(c.codes.len() as u32).to_le_bytes());
-        out.extend_from_slice(&c.codes);
-        push_f32s(&mut out, &c.r);
-        push_f32s(&mut out, &c.exact);
+        let (codes, r) = c.flat_codes_r();
+        let exact = c.flat_exact();
+        out.extend_from_slice(&(r.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&codes);
+        push_f32s(&mut out, &r);
+        push_f32s(&mut out, &exact);
     }
     let crc = crc32(&out);
     out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
-/// Cursor-style reader over snapshot bytes; every take is bounds-checked
-/// so corrupt lengths surface as typed errors, never panics.
-struct Cur<'a> {
+/// Cursor-style reader over an encoded record; every take is
+/// bounds-checked so corrupt lengths surface as typed errors, never
+/// panics. Shared by the snapshot, segment, and manifest decoders.
+pub(crate) struct Cur<'a> {
     b: &'a [u8],
     off: usize,
 }
 
 impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], IndexError> {
+    /// Reader over `b`, positioned at offset 0.
+    pub(crate) fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, off: 0 }
+    }
+
+    /// True when every byte has been consumed.
+    pub(crate) fn done(&self) -> bool {
+        self.off == self.b.len()
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], IndexError> {
         if self.b.len() - self.off < n {
-            return Err(IndexError::Io("snapshot truncated".into()));
+            return Err(IndexError::Io("encoded record truncated".into()));
         }
         let s = &self.b[self.off..self.off + n];
         self.off += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, IndexError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, IndexError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> Result<u16, IndexError> {
+    pub(crate) fn u16(&mut self) -> Result<u16, IndexError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> Result<u32, IndexError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, IndexError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, IndexError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, IndexError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, IndexError> {
+    pub(crate) fn f32s(&mut self, n: usize) -> Result<Vec<f32>, IndexError> {
         let raw = self.take(n.checked_mul(4).ok_or_else(overflow)?)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
@@ -170,7 +169,7 @@ pub fn decode_snapshot(
     if crc32(body) != stored_crc {
         return Err(corrupt("checksum mismatch"));
     }
-    let mut cur = Cur { b: body, off: 0 };
+    let mut cur = Cur::new(body);
     if cur.take(4)? != SNAPSHOT_MAGIC {
         return Err(corrupt("bad magic"));
     }
@@ -225,23 +224,13 @@ pub fn decode_snapshot(
         let rot = PracticalRht { d, d_hat, signs1, signs2 };
         collections.insert(
             name.clone(),
-            Collection { name, d, bits, metric, rot, codes, r, exact },
+            Collection { name, d, bits, metric, rot, sealed: Vec::new(), codes, r, exact },
         );
     }
-    if cur.off != body.len() {
+    if !cur.done() {
         return Err(corrupt("trailing bytes after last collection"));
     }
     Ok((VectorStore { cfg, collections, rows_at_solve }, next_seq))
-}
-
-/// Sequence numbers of every snapshot file in `data_dir`, newest first.
-pub fn list_snapshots(io: &mut dyn Io, data_dir: &Path) -> Result<Vec<u64>, IndexError> {
-    let names = io
-        .list(data_dir)
-        .map_err(|e| IndexError::Io(format!("listing {}: {e}", data_dir.display())))?;
-    let mut seqs: Vec<u64> = names.iter().filter_map(|n| parse_snapshot_seq(n)).collect();
-    seqs.sort_unstable_by(|a, b| b.cmp(a));
-    Ok(seqs)
 }
 
 #[cfg(test)]
@@ -316,12 +305,15 @@ mod tests {
     }
 
     #[test]
-    fn file_names_round_trip_and_sort_by_seq() {
-        assert_eq!(parse_snapshot_seq(&snapshot_file_name(0)), Some(0));
-        assert_eq!(parse_snapshot_seq(&snapshot_file_name(123_456)), Some(123_456));
-        assert_eq!(parse_snapshot_seq("snapshot-42.seg"), None, "unpadded");
-        assert_eq!(parse_snapshot_seq("docs.wal"), None);
-        assert!(snapshot_file_name(9) < snapshot_file_name(10), "lexicographic == numeric");
+    fn sealed_store_encodes_identically_to_monolithic() {
+        // the canonical-flattening property: segment boundaries are
+        // invisible in the logical encoding
+        let mono = built_store();
+        let mut sealed = built_store();
+        for c in sealed.collections.values_mut() {
+            c.seal_head(7);
+        }
+        assert_eq!(encode_snapshot(&sealed, 42), encode_snapshot(&mono, 42));
     }
 
     #[test]

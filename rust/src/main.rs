@@ -16,6 +16,7 @@
 //!                                          retrieval endpoints (/v1/embed,
 //!                                          /v1/collections/...) next to generate
 //!   serve    --data-dir PATH [--fsync always|never] [--snapshot-every N]
+//!            [--segment-rows N]
 //!                                          crash-safe collections: WAL + snapshots
 //!                                          under PATH, recovered at startup
 //!   serve    --http PORT [--http-read-timeout-ms MS]
@@ -233,11 +234,16 @@ fn index_cfg_from_args(args: &Args) -> Result<raana::index::IndexConfig> {
     )
 }
 
-/// `--data-dir PATH [--fsync always|never] [--snapshot-every N]` →
-/// durability config. `None` without `--data-dir` (ephemeral store, the
-/// pre-durability behavior). fsync defaults to `always` — an acked add
-/// survives power loss; `--fsync never` trades that for ingest speed
-/// (recovery still tolerates the resulting torn tails).
+/// `--data-dir PATH [--fsync always|never] [--snapshot-every N]
+/// [--segment-rows N]` → durability config. `None` without `--data-dir`
+/// (ephemeral store, the pre-durability behavior). fsync defaults to
+/// `always` — an acked add survives power loss; `--fsync never` trades
+/// that for ingest speed (recovery still tolerates the resulting torn
+/// tails). `--snapshot-every` counts *rows* acknowledged since the last
+/// seal (a bulk add of 300 rows crosses a cadence of 256 immediately);
+/// `--segment-rows` additionally seals as soon as any one collection's
+/// mutable head reaches that many rows, bounding both WAL replay and
+/// per-seal cost. Either can be 0 to disable that trigger.
 fn durability_from_args(args: &Args) -> Result<Option<raana::index::durability::DurabilityConfig>> {
     use raana::index::durability::{DurabilityConfig, FsyncPolicy};
     let Some(dir) = args.opt("data-dir") else {
@@ -252,6 +258,7 @@ fn durability_from_args(args: &Args) -> Result<Option<raana::index::durability::
         data_dir: std::path::PathBuf::from(dir),
         fsync,
         snapshot_every: args.opt_usize("snapshot-every", 256)?,
+        segment_rows: args.opt_usize("segment-rows", 4096)?,
     }))
 }
 
@@ -330,7 +337,7 @@ fn maybe_index_server(
     )?;
     if let Some(rep) = ix.recovery() {
         info!(
-            "index recovery: {} rows restored ({} from snapshot, {} replayed), \
+            "index recovery: {} rows restored ({} from sealed segments, {} replayed), \
              {} records dropped, {} duplicates skipped",
             rep.recovered_rows(),
             rep.snapshot_rows,
@@ -423,6 +430,13 @@ fn serve_http(
             read_timeout_ms: args.opt_usize("http-read-timeout-ms", 0)? as u64,
         },
     )?;
+    // Background compactor (durable stores only): merges small sealed
+    // segments and retires stale-width files while serving; every pass
+    // commits atomically, so stopping it mid-flight is always safe.
+    let compactor = index
+        .as_ref()
+        .filter(|ix| ix.stats().durable)
+        .map(|ix| ix.start_compactor(std::time::Duration::from_secs(30)));
     let bound = http.local_addr();
     println!("HTTP serving on http://{bound}  (close stdin / Ctrl-D for graceful drain)");
     println!("  curl -s http://{bound}/healthz");
@@ -453,6 +467,9 @@ fn serve_http(
     }
     info!("stdin closed — draining HTTP connections");
     http.shutdown()?;
+    if let Some(c) = compactor {
+        c.stop();
+    }
     let server = std::sync::Arc::try_unwrap(server)
         .map_err(|_| anyhow::anyhow!("HTTP layer still holds the server"))?;
     let stats = server.shutdown()?;
@@ -467,9 +484,10 @@ fn serve_http(
     if let Some(ix) = &index {
         let s = ix.stats();
         if s.durable {
-            // orderly shutdown: seal everything into one snapshot so the
-            // next start recovers without replaying a long WAL tail
-            ix.snapshot_now()?;
+            // orderly shutdown: seal every head into a segment so the
+            // next start recovers from the manifest without replaying a
+            // long WAL tail
+            ix.seal_now()?;
         }
         println!(
             "index: {} collections, {} rows, {} embeds, {} queries, {} B scan payload",

@@ -25,9 +25,11 @@
 //!   (republished per batcher round) and the KV-cache economics:
 //!   `kv_bits` (32 = dense f32), `kv_bytes_per_lane`, and the lane
 //!   pool's size (`lanes`) and occupancy (`lanes_active`). With an
-//!   index attached, also `index_durable` / `index_read_only` and —
-//!   when the store was opened from a data dir — the recovery
-//!   accounting `recovered_rows` / `dropped_records`.
+//!   index attached, also `index_durable` / `index_read_only`, the
+//!   segment accounting `index_segments` / `index_head_rows` /
+//!   `index_compactions`, and — when the store was opened from a data
+//!   dir — the recovery accounting `recovered_rows` /
+//!   `dropped_records`.
 //!
 //! With an [`IndexServer`] attached ([`HttpServer::bind_with_index`]),
 //! the retrieval workload rides the same front-end:
@@ -1073,6 +1075,8 @@ fn handle_collections_list(index: Option<&IndexServer>, stream: &mut TcpStream) 
                     ("bytes_per_row", json::num(c.bytes_per_row as f64)),
                     ("code_bytes", json::num(c.code_bytes as f64)),
                     ("exact_bytes", json::num(c.exact_bytes as f64)),
+                    ("segments", json::num(c.segments as f64)),
+                    ("head_rows", json::num(c.head_rows as f64)),
                 ])
             })
             .collect(),
@@ -1081,6 +1085,9 @@ fn handle_collections_list(index: Option<&IndexServer>, stream: &mut TcpStream) 
         ("collections", collections),
         ("rows", json::num(stats.rows as f64)),
         ("code_bytes", json::num(stats.code_bytes as f64)),
+        ("segments", json::num(stats.segments as f64)),
+        ("head_rows", json::num(stats.head_rows as f64)),
+        ("compactions", json::num(stats.compactions as f64)),
         ("embeds", json::num(stats.embeds as f64)),
         ("rows_added", json::num(stats.rows_added as f64)),
         ("queries", json::num(stats.queries as f64)),
@@ -1132,6 +1139,9 @@ fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
         let is = ix.stats();
         fields.push(("index_durable", Value::Bool(is.durable)));
         fields.push(("index_read_only", Value::Bool(is.read_only)));
+        fields.push(("index_segments", json::num(is.segments as f64)));
+        fields.push(("index_head_rows", json::num(is.head_rows as f64)));
+        fields.push(("index_compactions", json::num(is.compactions as f64)));
         if let Some(r) = is.recovered_rows {
             fields.push(("recovered_rows", json::num(r as f64)));
         }

@@ -7,9 +7,15 @@
 //! the HTTP connection workers call **directly**: embeds run the native
 //! forward on the caller's thread (the fused kernels fan out on the
 //! crate's shared worker pool, the same threads the batcher's kernels
-//! use), and collection reads/writes serialize on one store lock. That
-//! keeps generate and index traffic on one front-end and one thread
-//! pool without coupling index latency to the batcher's round cadence.
+//! use), and collection reads/writes go straight to the internally
+//! synchronized [`DurableStore`] — queries and stats share a read
+//! lock, adds serialize on the durability engine, and seal/compaction
+//! file I/O runs without the store lock, so a query never queues
+//! behind a slow disk flush (the PR-6 design serialized every request
+//! on one store mutex, which stalled reads for the whole of each
+//! snapshot write). That keeps generate and index traffic on one
+//! front-end and one thread pool without coupling index latency to the
+//! batcher's round cadence.
 //!
 //! The embedding backend is optional: an `IndexServer` without one
 //! still serves vector-in/vector-out add + query (callers bring their
@@ -17,8 +23,9 @@
 //! with a typed error.
 #![deny(missing_docs)]
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -84,14 +91,20 @@ pub struct IndexServerStats {
     /// Total scan payload in bytes (codes + rescales — the budgeted
     /// quantity).
     pub code_bytes: usize,
+    /// Immutable sealed segments across collections.
+    pub segments: usize,
+    /// Rows still in mutable heads (covered only by the WAL).
+    pub head_rows: usize,
+    /// Completed compaction passes since startup.
+    pub compactions: usize,
     /// True when adds are WAL-logged to a data dir (`--data-dir`).
     pub durable: bool,
     /// True when a durability failure flipped the store read-only
     /// (adds refused with 503 until restart); always `false` for
     /// ephemeral servers.
     pub read_only: bool,
-    /// Rows restored at startup (snapshot + WAL replay); `None` on
-    /// ephemeral servers — `/v1/stats` omits the field.
+    /// Rows restored at startup (sealed segments + WAL replay); `None`
+    /// on ephemeral servers — `/v1/stats` omits the field.
     pub recovered_rows: Option<usize>,
     /// WAL records dropped at startup to corruption or sequence gaps;
     /// `None` on ephemeral servers.
@@ -102,9 +115,11 @@ pub struct IndexServerStats {
 /// embedding model — what [`crate::net`] routes `/v1/embed` and
 /// `/v1/collections/...` to. See the module docs for the threading
 /// model.
+///
+/// [`VectorStore`]: crate::index::VectorStore
 pub struct IndexServer {
     backend: Option<EmbedBackend>,
-    store: Mutex<DurableStore>,
+    store: DurableStore,
     embeds: AtomicUsize,
     rows_added: AtomicUsize,
     queries: AtomicUsize,
@@ -114,7 +129,7 @@ impl IndexServer {
     fn from_parts(backend: Option<EmbedBackend>, store: DurableStore) -> IndexServer {
         IndexServer {
             backend,
-            store: Mutex::new(store),
+            store,
             embeds: AtomicUsize::new(0),
             rows_added: AtomicUsize::new(0),
             queries: AtomicUsize::new(0),
@@ -129,8 +144,8 @@ impl IndexServer {
     }
 
     /// Vector-only index server persisting to `dcfg.data_dir`: recovery
-    /// runs before the server accepts traffic (snapshot load + WAL
-    /// replay — see [`crate::index::durability`]), and every
+    /// runs before the server accepts traffic (manifest + segment load,
+    /// then WAL replay — see [`crate::index::durability`]), and every
     /// acknowledged add is WAL-logged first.
     pub fn open_durable(
         cfg: IndexConfig,
@@ -195,31 +210,67 @@ impl IndexServer {
     /// row-major with `d` columns. Returns `(first_id, rows_added)`.
     /// See [`crate::index::VectorStore::add`] for the budget-policy
     /// admission check. On a durable server the add is WAL-logged
-    /// before this returns (fsync per the configured policy).
+    /// before this returns (fsync per the configured policy); queries
+    /// keep running while the record — or a cadence seal it triggers —
+    /// is being written.
     pub fn add(
         &self,
         name: &str,
         vecs: &[f32],
         d: usize,
     ) -> Result<(usize, usize), IndexError> {
-        let out = self.store.lock().unwrap().add(name, vecs, d, 0)?;
+        let out = self.store.add(name, vecs, d, 0)?;
         self.rows_added.fetch_add(out.1, Ordering::Relaxed);
         Ok(out)
     }
 
-    /// Seal the current store into a snapshot segment and truncate the
-    /// WAL (no-op on ephemeral servers). Exposed for orderly shutdown.
-    pub fn snapshot_now(&self) -> Result<(), IndexError> {
-        self.store.lock().unwrap().snapshot_now()
+    /// Seal every non-empty head into an immutable segment and commit a
+    /// new manifest generation (no-op on ephemeral servers). Exposed
+    /// for orderly shutdown.
+    pub fn seal_now(&self) -> Result<(), IndexError> {
+        self.store.seal_now()
+    }
+
+    /// Run one compaction pass (merge small segments, rewrite
+    /// stale-width files, seal heads — see
+    /// [`DurableStore::compact_now`]). Returns whether any work
+    /// happened.
+    pub fn compact_now(&self) -> Result<bool, IndexError> {
+        self.store.compact_now(0)
+    }
+
+    /// Spawn the background compactor: one [`IndexServer::compact_now`]
+    /// pass every `interval`, until the returned handle is stopped (or
+    /// dropped). Failures are logged and retried next tick — compaction
+    /// is an optimization, never required for durability.
+    pub fn start_compactor(self: &Arc<IndexServer>, interval: Duration) -> CompactorHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let srv = Arc::clone(self);
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("index-compactor".into())
+            .spawn(move || loop {
+                std::thread::park_timeout(interval);
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Err(e) = srv.store.compact_now(0) {
+                    crate::info!("background compaction failed (will retry): {e}");
+                }
+            })
+            .expect("spawning the index compactor thread");
+        CompactorHandle { stop, thread: Some(thread) }
     }
 
     /// Startup recovery outcome; `None` on ephemeral servers.
     pub fn recovery(&self) -> Option<RecoveryReport> {
-        self.store.lock().unwrap().recovery()
+        self.store.recovery()
     }
 
     /// Two-phase top-k query against one collection (see
-    /// [`crate::index::Collection::query`]).
+    /// [`crate::index::Collection::query`]). Takes only a store read
+    /// lock — queries run concurrently with each other and with
+    /// seal/compaction I/O.
     pub fn query(
         &self,
         name: &str,
@@ -227,44 +278,90 @@ impl IndexServer {
         k: usize,
         rerank_factor: usize,
     ) -> Result<Vec<SearchHit>, IndexError> {
-        let hits = self.store.lock().unwrap().query(name, q, k, rerank_factor, 0)?;
+        let hits = self.store.query(name, q, k, rerank_factor, 0)?;
         self.queries.fetch_add(1, Ordering::Relaxed);
         Ok(hits)
     }
 
     /// Per-collection accounting snapshot, name order.
     pub fn collections(&self) -> Vec<CollectionInfo> {
-        self.store.lock().unwrap().store().infos()
+        self.store.store().infos()
     }
 
     /// Aggregate serving counters + store accounting (+ the recovery
     /// outcome on durable servers).
     pub fn stats(&self) -> IndexServerStats {
-        let durable = self.store.lock().unwrap();
-        let recovery = durable.recovery();
-        let store = durable.store();
+        // engine-side facts first, store read lock second — never both
+        // at once (writers take engine then store; overlapping the
+        // other way here could deadlock)
+        let durable = self.store.is_durable();
+        let read_only = self.store.is_read_only();
+        let recovery = self.store.recovery();
+        let compactions = self.store.compactions();
+        let (collections, rows, code_bytes, segments, head_rows) = {
+            let s = self.store.store();
+            (s.len(), s.rows(), s.code_bytes(), s.segments(), s.head_rows())
+        };
         IndexServerStats {
             embeds: self.embeds.load(Ordering::Relaxed),
             rows_added: self.rows_added.load(Ordering::Relaxed),
             queries: self.queries.load(Ordering::Relaxed),
-            collections: store.len(),
-            rows: store.rows(),
-            code_bytes: store.code_bytes(),
-            durable: durable.is_durable(),
-            read_only: durable.is_read_only(),
+            collections,
+            rows,
+            code_bytes,
+            segments,
+            head_rows,
+            compactions,
+            durable,
+            read_only,
             recovered_rows: recovery.map(|r| r.recovered_rows()),
             dropped_records: recovery.map(|r| r.dropped_records),
         }
     }
 }
 
+/// Handle to the background compactor thread spawned by
+/// [`IndexServer::start_compactor`]. Stopping (or dropping) the handle
+/// wakes the thread and joins it; the in-flight pass, if any, runs to
+/// completion first (compaction commits are atomic — there is no
+/// partial state to interrupt).
+pub struct CompactorHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl CompactorHandle {
+    /// Signal the compactor to exit and wait for it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.thread().unpark();
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for CompactorHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::index::durability::FsyncPolicy;
+    use crate::index::io::{Fault, FaultIo, MemIo};
     use crate::index::{IndexPolicy, Metric};
     use crate::model::synthetic_manifest;
     use crate::quant::{LayerCalib, TrickConfig};
     use crate::runtime::native::native_init;
+    use std::path::PathBuf;
+    use std::time::Instant;
 
     fn embed_fixture(seed: u64) -> IndexServer {
         let manifest = synthetic_manifest("idx-serve", 32, 1, 2, 64, 16, 256, 1);
@@ -311,6 +408,9 @@ mod tests {
         assert_eq!(stats.queries, 1);
         assert_eq!(stats.collections, 1);
         assert_eq!(stats.rows, 3);
+        assert_eq!(stats.head_rows, 3, "nothing sealed on an ephemeral server");
+        assert_eq!(stats.segments, 0);
+        assert_eq!(stats.compactions, 0);
         assert!(stats.code_bytes > 0);
     }
 
@@ -348,8 +448,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_adds_and_queries_are_serialized_safely() {
-        use std::sync::Arc;
+    fn concurrent_adds_and_queries_are_safe() {
         let srv = Arc::new(IndexServer::new(IndexConfig::default()).unwrap());
         let d = 16usize;
         let mut handles = Vec::new();
@@ -368,5 +467,82 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(srv.stats().rows, 32);
+    }
+
+    #[test]
+    fn query_completes_while_a_slow_seal_is_in_flight() {
+        // the PR-8 headline regression: under the old single store
+        // mutex, a query issued during snapshot I/O waited for the
+        // whole write. Delay the seal's segment write (global write
+        // ordinal 3: two WAL appends precede it) and assert a
+        // concurrent query returns promptly anyway.
+        let d = 16usize;
+        let dcfg = DurabilityConfig {
+            data_dir: PathBuf::from("/idx"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 2,
+            segment_rows: 0,
+        };
+        let io = FaultIo::new(MemIo::new(), Fault::SlowWrite { nth: 3, millis: 500 });
+        let store =
+            DurableStore::open_with(IndexConfig::default(), dcfg, Box::new(io)).unwrap();
+        let srv = Arc::new(IndexServer::from_parts(None, store));
+        let v0 = crate::rng::Rng::new(1).gaussian_vec(d);
+        srv.add("a", &v0, d).unwrap(); // write 1: WAL append
+        let s2 = Arc::clone(&srv);
+        let slow_add = std::thread::spawn(move || {
+            let t = Instant::now();
+            // write 2: WAL append; rows cadence fires → seal: write 3
+            // is the segment file, slowed 500 ms
+            s2.add("a", &crate::rng::Rng::new(2).gaussian_vec(d), d).unwrap();
+            t.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(100)); // let the seal start
+        let t = Instant::now();
+        let hits = srv.query("a", &v0, 1, 4).unwrap();
+        let query_elapsed = t.elapsed();
+        assert_eq!(hits[0].id, 0, "self-retrieval mid-seal");
+        let add_elapsed = slow_add.join().unwrap();
+        assert!(
+            add_elapsed >= Duration::from_millis(400),
+            "the seal really was slowed: {add_elapsed:?}"
+        );
+        assert!(
+            query_elapsed < Duration::from_millis(250),
+            "a query must not serialize behind seal I/O: {query_elapsed:?}"
+        );
+        // and the seal completed normally despite the slow write
+        let stats = srv.stats();
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.head_rows, 0);
+    }
+
+    #[test]
+    fn background_compactor_merges_on_its_own() {
+        let d = 8usize;
+        let dcfg = DurabilityConfig {
+            data_dir: PathBuf::from("/idx"),
+            fsync: FsyncPolicy::Never,
+            snapshot_every: 1, // every 1-row add seals its own segment
+            segment_rows: 0,
+        };
+        let store =
+            DurableStore::open_with(IndexConfig::default(), dcfg, Box::new(MemIo::new()))
+                .unwrap();
+        let srv = Arc::new(IndexServer::from_parts(None, store));
+        for seed in 0..4u64 {
+            srv.add("a", &crate::rng::Rng::new(seed).gaussian_vec(d), d).unwrap();
+        }
+        assert_eq!(srv.stats().segments, 4);
+        let compactor = srv.start_compactor(Duration::from_millis(10));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while srv.stats().compactions == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        compactor.stop();
+        let stats = srv.stats();
+        assert_eq!(stats.compactions, 1, "one pass merged everything; later ticks are no-ops");
+        assert_eq!(stats.segments, 1);
+        assert_eq!(stats.rows, 4);
     }
 }

@@ -119,17 +119,19 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// p-th percentile (0..=100) by nearest-rank on a sorted copy. Total
-/// panic-free: empty input yields 0.0 and the sort uses `total_cmp`, so a
-/// stray NaN cannot abort a stats endpoint mid-request.
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy: the value
+/// at rank `ceil(p/100 · n)` (1-based), clamped into `[1, n]` so p = 0
+/// yields the minimum and p = 100 the maximum. Total panic-free: empty
+/// input yields 0.0 and the sort uses `total_cmp`, so a stray NaN cannot
+/// abort a stats endpoint mid-request.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
-    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-    v[idx.min(v.len() - 1)]
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
 }
 
 #[cfg(test)]
@@ -156,6 +158,15 @@ mod tests {
         assert!((mean(&xs) - 2.5).abs() < 1e-12);
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        // true nearest-rank: ceil(50/100·4) = rank 2 ⇒ 2.0 (the rounded
+        // linear index this replaced returned 3.0 here)
+        assert!((percentile(&xs, 50.0) - 2.0).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 3.0).abs() < 1e-12);
+        // rank 5 of 5 needs p strictly past 80, nearest-rank style
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((percentile(&ys, 80.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&ys, 90.0) - 5.0).abs() < 1e-12);
         assert!(std_dev(&xs) > 0.0);
     }
 

@@ -1,0 +1,304 @@
+//! Segment + compaction wall: crash safety of the seal→compact→swap
+//! lifecycle, and the structural properties the segmented layout exists
+//! for (seal cost proportional to the mutable head, not the store).
+//!
+//! The crash wall extends `rust/tests/durability.rs` to compaction:
+//! every fault kind at every write ordinal across a run that seals
+//! several small segments and then compacts them into one. Failed
+//! writes must lose nothing; torn/bit-flipped writes (the
+//! strictly-worse model — StdIo's temp+fsync+rename cannot tear) must
+//! leave recovery equal to a fresh build of SOME exact acknowledged
+//! prefix, never a hybrid. The workload runs under the Uniform policy,
+//! so compaction is purely physical (merge files, swap the manifest)
+//! and the full-workload fresh build is the reference at every
+//! ordinal past the last ack.
+//!
+//! A fixture wall replays `rust/tests/vectors/segments.json` (authored
+//! by `python/tests/gen_vectors.py`, mirrored by
+//! `python/tests/test_segments.py`), pinning the segment + manifest
+//! wire formats — including the stale-width requantize path — across
+//! languages.
+
+use std::path::{Path, PathBuf};
+
+use raana::index::durability::{DurabilityConfig, DurableStore, FsyncPolicy};
+use raana::index::io::{Fault, FaultIo, Io, MemIo};
+use raana::index::snapshot::encode_snapshot;
+use raana::index::{IndexConfig, IndexPolicy, Metric, VectorStore};
+use raana::json::{self, Value};
+use raana::rng::Rng;
+
+const DATA_DIR: &str = "/idx";
+
+fn cfg() -> IndexConfig {
+    IndexConfig { policy: IndexPolicy::Uniform(6), ..Default::default() }
+}
+
+fn dcfg(snapshot_every: usize) -> DurabilityConfig {
+    DurabilityConfig {
+        data_dir: PathBuf::from(DATA_DIR),
+        fsync: FsyncPolicy::Always,
+        snapshot_every,
+        segment_rows: 0,
+    }
+}
+
+#[derive(Clone, Copy)]
+struct AddSpec {
+    seed: u64,
+    rows: usize,
+    d: usize,
+}
+
+fn vectors_of(spec: &AddSpec) -> Vec<f32> {
+    Rng::new(spec.seed).gaussian_vec(spec.rows * spec.d)
+}
+
+fn fresh_prefix(adds: &[AddSpec], prefix: usize) -> VectorStore {
+    let mut store = VectorStore::new(cfg()).unwrap();
+    for spec in &adds[..prefix] {
+        store.add("docs", &vectors_of(spec), spec.d, 1).unwrap();
+    }
+    store
+}
+
+/// Four 1-row adds with `snapshot_every = 1` — each add seals its own
+/// segment (append + segment + manifest = 3 writes), then one
+/// compaction merges all four (merged segment + manifest = 2 writes):
+/// 14 writes in a clean run.
+fn compaction_workload() -> Vec<AddSpec> {
+    (0..4u64).map(|i| AddSpec { seed: 900 + i, rows: 1, d: 16 }).collect()
+}
+
+/// Run the workload + a compaction pass through `fault`, crash, and
+/// recover from whatever survived. Add and compaction errors are
+/// tolerated — the driver models a process that limps on and crashes
+/// later.
+fn crash_and_recover_compacting(adds: &[AddSpec], fault: Fault) -> DurableStore {
+    let io = FaultIo::new(MemIo::new(), fault);
+    let durable = DurableStore::open_with(cfg(), dcfg(1), Box::new(io)).unwrap();
+    for spec in adds {
+        let _ = durable.add("docs", &vectors_of(spec), spec.d, 1);
+    }
+    let _ = durable.compact_now(1);
+    let io = durable.into_io().unwrap();
+    DurableStore::open_with(cfg(), dcfg(1), io).unwrap()
+}
+
+fn assert_some_exact_prefix(recovered: &DurableStore, adds: &[AddSpec], what: &str) -> usize {
+    let got = encode_snapshot(&recovered.store(), 0);
+    for k in (0..=adds.len()).rev() {
+        if got == encode_snapshot(&fresh_prefix(adds, k), 0) {
+            return k;
+        }
+    }
+    panic!("{what}: recovered state matches no exact prefix of the workload");
+}
+
+#[test]
+fn clean_seal_compact_swap_recovers_bit_for_bit() {
+    let adds = compaction_workload();
+    let recovered = crash_and_recover_compacting(&adds, Fault::FailWrite { nth: 10_000 });
+    assert_eq!(
+        encode_snapshot(&recovered.store(), 0),
+        encode_snapshot(&fresh_prefix(&adds, adds.len()), 0),
+        "recovery after a compacted run must equal the fresh build bit-for-bit"
+    );
+    // and the physical layout really was compacted: one merged segment
+    let s = recovered.store();
+    assert_eq!(s.segments(), 1, "four 1-row segments merged into one");
+    assert_eq!(s.head_rows(), 0);
+}
+
+#[test]
+fn failed_write_at_every_ordinal_through_compaction_loses_nothing() {
+    // 14 writes in the clean run (see compaction_workload): wherever
+    // one FailWrite lands — an append (resealed on the spot), a cadence
+    // seal (non-fatal, WAL kept, retried), or either compaction write
+    // (the pass errors out; the pre-compaction generation stands) —
+    // recovery equals the full fresh build and drops nothing.
+    let adds = compaction_workload();
+    for nth in 1..=14 {
+        let recovered = crash_and_recover_compacting(&adds, Fault::FailWrite { nth });
+        assert_eq!(
+            encode_snapshot(&recovered.store(), 0),
+            encode_snapshot(&fresh_prefix(&adds, adds.len()), 0),
+            "FailWrite nth={nth}: nothing acked may be lost"
+        );
+        let rep = recovered.recovery().unwrap();
+        assert_eq!(rep.dropped_records, 0, "FailWrite nth={nth}");
+    }
+}
+
+#[test]
+fn torn_or_flipped_write_at_every_ordinal_recovers_an_exact_prefix() {
+    // the strictly-worse model across the whole lifecycle, including
+    // both compaction writes: a mangled manifest is pruned immediately
+    // (fallback to the kept predecessor); a mangled segment file fails
+    // its generation's CRC at recovery (fallback likewise). Whatever
+    // the ordinal, the recovered state is a fresh build of some exact
+    // acknowledged prefix.
+    let adds = compaction_workload();
+    for nth in 1..=14 {
+        for fault in [
+            Fault::TornWrite { nth, keep: 11 },
+            Fault::FlipBit { nth, byte: 14, bit: 6 },
+        ] {
+            let what = format!("compaction run {fault:?}");
+            let recovered = crash_and_recover_compacting(&adds, fault);
+            assert_some_exact_prefix(&recovered, &adds, &what);
+        }
+    }
+}
+
+#[test]
+fn torn_merged_segment_falls_back_to_the_uncompacted_generation() {
+    // pin the most interesting single case from the sweep: the
+    // compaction's merged-segment write (ordinal 13) lands torn, the
+    // swap manifest (ordinal 14) commits and references it. Recovery
+    // must reject the compacted generation on the segment CRC and fall
+    // back to the kept pre-compaction generation — which still
+    // references all four small segments, so NOTHING is lost.
+    let adds = compaction_workload();
+    let recovered =
+        crash_and_recover_compacting(&adds, Fault::TornWrite { nth: 13, keep: 20 });
+    assert_eq!(
+        encode_snapshot(&recovered.store(), 0),
+        encode_snapshot(&fresh_prefix(&adds, adds.len()), 0),
+        "fallback across a torn compaction must keep every row"
+    );
+    let rep = recovered.recovery().unwrap();
+    assert_eq!(rep.corrupt_snapshots, 1, "the compacted generation must fail its CRC");
+    let s = recovered.store();
+    assert_eq!(s.segments(), 4, "recovered from the four-segment predecessor");
+}
+
+#[test]
+fn seal_cost_scales_with_the_head_not_the_store() {
+    // the headline O(head) property, asserted structurally: eight
+    // cadence seals as the store grows 8x write segment files of
+    // IDENTICAL size, because each seal serializes only its head rows.
+    // (The monolithic snapshot this replaces rewrote the whole store
+    // every time — its encoding of the final state is several times
+    // larger than any one segment.)
+    let adds: Vec<AddSpec> =
+        (0..8u64).map(|i| AddSpec { seed: 300 + i, rows: 4, d: 16 }).collect();
+    let durable = DurableStore::open_with(cfg(), dcfg(4), Box::new(MemIo::new())).unwrap();
+    for spec in &adds {
+        durable.add("docs", &vectors_of(spec), spec.d, 1).unwrap();
+    }
+    let whole_store = encode_snapshot(&durable.store(), 0).len();
+    let mut io = durable.into_io().unwrap();
+    let seg_dir = Path::new(DATA_DIR).join("segments");
+    let files = io.list(&seg_dir).unwrap();
+    assert_eq!(files.len(), 8, "one segment per cadence seal");
+    let sizes: Vec<usize> = files
+        .iter()
+        .map(|f| io.read(&seg_dir.join(f)).unwrap().unwrap().len())
+        .collect();
+    assert!(
+        sizes.iter().all(|&s| s == sizes[0]),
+        "every seal wrote the same few head rows, store size notwithstanding: {sizes:?}"
+    );
+    assert!(
+        whole_store > 4 * sizes[0],
+        "a monolithic snapshot ({whole_store} B) dwarfs one sealed head ({} B)",
+        sizes[0]
+    );
+}
+
+#[test]
+fn recovered_compacted_store_serves_queries() {
+    // end-to-end sanity on the recovered physical layout: scatter-gather
+    // across the merged segment + replayed head must find a stored row
+    let adds = compaction_workload();
+    let recovered = crash_and_recover_compacting(&adds, Fault::FailWrite { nth: 10_000 });
+    // one more add lands in the (empty) head so the query spans both
+    let extra = AddSpec { seed: 990, rows: 1, d: 16 };
+    recovered.add("docs", &vectors_of(&extra), extra.d, 1).unwrap();
+    let q = vectors_of(&adds[2]);
+    let hits = recovered.query("docs", &q, 1, 4, 1).unwrap();
+    assert_eq!(hits[0].id, 2, "a sealed row must retrieve itself after recovery");
+    let q2 = vectors_of(&extra);
+    let hits2 = recovered.query("docs", &q2, 1, 4, 1).unwrap();
+    assert_eq!(hits2[0].id, 4, "a head row must retrieve itself alongside sealed segments");
+}
+
+// ------------------------------------------------- cross-language fixtures
+
+fn load_fixture() -> Value {
+    let path: PathBuf = [env!("CARGO_MANIFEST_DIR"), "rust", "tests", "vectors", "segments.json"]
+        .iter()
+        .collect();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{} unreadable ({e}) — regenerate with python/tests/gen_vectors.py",
+            path.display()
+        )
+    });
+    json::parse(&text).expect("segments fixture must be valid JSON")
+}
+
+fn unhex(s: &str) -> Vec<u8> {
+    assert!(s.len() % 2 == 0, "hex string length must be even");
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).expect("valid hex"))
+        .collect()
+}
+
+fn fixture_cfg(case: &Value) -> IndexConfig {
+    let bits = case.req_usize("bits").unwrap() as u8;
+    let metric = match case.req_str("metric").unwrap() {
+        "ip" => Metric::InnerProduct,
+        "cosine" => Metric::Cosine,
+        m => panic!("unknown metric '{m}' in fixture"),
+    };
+    IndexConfig { policy: IndexPolicy::Uniform(bits), metric, ..Default::default() }
+}
+
+#[test]
+fn recovery_matches_python_segment_fixtures() {
+    let doc = load_fixture();
+    let cases = doc.req("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 4, "expected the segment-format edge cases at least");
+    for case in cases {
+        let name = case.req_str("name").unwrap().to_string();
+        let mut io = MemIo::new();
+        let Value::Obj(files) = case.req("files").unwrap() else {
+            panic!("case '{name}': 'files' must be an object")
+        };
+        for (file, hex) in files {
+            io.put(&Path::new(DATA_DIR).join(file), unhex(hex.as_str().unwrap()));
+        }
+        let store = DurableStore::open_with(fixture_cfg(case), dcfg(0), Box::new(io))
+            .unwrap_or_else(|e| panic!("case '{name}': recovery failed: {e}"));
+        let rep = store.recovery().unwrap();
+        let expect = case.req("expect").unwrap();
+        let want = |k: &str| expect.req_usize(k).unwrap();
+        assert_eq!(rep.snapshot_rows, want("snapshot_rows"), "case '{name}': snapshot_rows");
+        assert_eq!(rep.replayed_rows, want("replayed_rows"), "case '{name}': replayed_rows");
+        assert_eq!(
+            rep.dropped_records,
+            want("dropped_records"),
+            "case '{name}': dropped_records"
+        );
+        assert_eq!(
+            rep.corrupt_snapshots,
+            want("corrupt_snapshots"),
+            "case '{name}': corrupt_snapshots"
+        );
+        assert_eq!(store.next_seq(), want("next_seq") as u64, "case '{name}': next_seq");
+        assert_eq!(store.store().rows(), want("rows"), "case '{name}': rows");
+        assert_eq!(store.store().segments(), want("segments"), "case '{name}': segments");
+        // the decisive check: the canonical re-encoding must match the
+        // bytes Python computed independently — including requantized
+        // codes when the manifest's width differs from the file's
+        let want_snap = unhex(expect.req_str("reencoded_snapshot").unwrap());
+        let got_snap = encode_snapshot(&store.store(), store.next_seq());
+        assert_eq!(
+            got_snap, want_snap,
+            "case '{name}': canonical re-encoding diverged from the Python mirror"
+        );
+    }
+}
