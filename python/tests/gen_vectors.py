@@ -893,6 +893,74 @@ def gen_segments():
     return {"kernel": "segment_recovery", "cases": cases}
 
 
+# ------------------------------------------------------------ cluster merge
+
+def gen_cluster():
+    """Pin the cluster scatter-gather merge pipeline (`cluster::merge`).
+
+    Rows are partitioned round-robin by global id (shard = gid % S,
+    local = gid // S). Phase 1 takes each shard's local top-`take` by
+    estimated score — the same (score desc, index asc) order as
+    `index::top_indices` — phase 1.5 maps local ids back to global and
+    selects the global top-`take` by (est desc, gid asc), and phase 2
+    merges exact scores by (exact desc, gid asc) truncated to k. The
+    committed expectations pin every stage so the Rust router and this
+    mirror can never drift apart silently.
+
+    Scores are distinct f32s with a minimum pairwise gap, so the order
+    is unambiguous (no ties for the index tiebreak to hide in).
+    """
+    rng = random.Random(0xC7A5)
+    n, n_shards, k, rf = 37, 3, 4, 2
+    take = min(max(rf, 1) * k, n)  # 8 < every shard's 12-13 rows: the
+    # local and global truncations are both actually exercised
+
+    def distinct_scores():
+        while True:
+            xs = rand_f32_list(rng, n, scale=1.0)
+            srt = sorted(xs)
+            if all(b - a > 1e-3 for a, b in zip(srt, srt[1:])):
+                return xs
+
+    est = distinct_scores()
+    exact = distinct_scores()
+
+    def shard_rows(s):
+        return n // n_shards + (1 if s < n % n_shards else 0)
+
+    per_shard = []
+    for s in range(n_shards):
+        local_est = [est[l * n_shards + s] for l in range(shard_rows(s))]
+        order = sorted(range(len(local_est)),
+                       key=lambda i: (-local_est[i], i))[:take]
+        per_shard.append([{"id": i, "score": local_est[i]} for i in order])
+
+    cands = []
+    for s, hits in enumerate(per_shard):
+        for h in hits:
+            cands.append((h["score"], h["id"] * n_shards + s))
+    cands.sort(key=lambda t: (-t[0], t[1]))
+    selected_gids = [g for _, g in cands[:take]]
+
+    merged_pairs = sorted(((exact[g], g) for g in selected_gids),
+                          key=lambda t: (-t[0], t[1]))[:k]
+    merged = [{"id": g, "score": sc} for sc, g in merged_pairs]
+
+    return {
+        "kernel": "cluster_merge",
+        "n": n,
+        "n_shards": n_shards,
+        "k": k,
+        "rerank_factor": rf,
+        "take": take,
+        "est": est,
+        "exact": exact,
+        "per_shard_candidates": per_shard,
+        "selected_gids": selected_gids,
+        "merged": merged,
+    }
+
+
 # ----------------------------------------------------------------- harness
 
 GENERATORS = {
@@ -903,6 +971,7 @@ GENERATORS = {
     "index_search.json": gen_index,
     "durability.json": gen_durability,
     "segments.json": gen_segments,
+    "cluster_merge.json": gen_cluster,
 }
 
 

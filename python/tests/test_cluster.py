@@ -1,0 +1,127 @@
+"""Numpy mirror of the cluster scatter-gather merge (``cluster::merge``).
+
+The Rust router's determinism contract: a collection sharded round-robin
+across N workers must answer top-k queries **bit-identically** to a
+single node holding the same rows. The Rust side pins that end to end
+over real sockets (``rust/tests/cluster.rs``); this mirror pins the
+merge *math* against the same committed fixture
+(``rust/tests/vectors/cluster_merge.json``) so the contract is checkable
+from a Python-only container:
+
+1. every pinned stage of the fixture (per-shard local top-take, global
+   candidate selection, exact-score merge) must match an independent
+   recomputation from the raw ``est``/``exact`` arrays;
+2. the distributed pipeline must equal the single-node two-phase query
+   (global top-take by estimated score, exact rerank, top-k) — the
+   bit-identity claim at the ordering level;
+3. the fixture's scores must be f32-exact and tie-free, so the pinned
+   order is unambiguous and survives the f32 wire format.
+
+Needs only numpy (runs in the minimal ``python-tests`` CI flavor).
+"""
+
+import json
+
+import numpy as np
+
+import gen_vectors as gv
+
+FIXTURE = gv.VECTOR_DIR / "cluster_merge.json"
+
+
+def load():
+    assert FIXTURE.exists(), (
+        f"{FIXTURE} missing — run python/tests/gen_vectors.py"
+    )
+    return json.loads(FIXTURE.read_text())
+
+
+def shard_of(gid, n_shards):
+    return gid % n_shards
+
+
+def local_of(gid, n_shards):
+    return gid // n_shards
+
+
+def global_of(shard, local, n_shards):
+    return local * n_shards + shard
+
+
+def shard_rows(shard, n_shards, n):
+    return n // n_shards + (1 if shard < n % n_shards else 0)
+
+
+def top_take(scores, ids, take):
+    """(score desc, id asc) truncated to ``take`` — the one ordering the
+    whole pipeline uses (mirrors ``index::top_indices`` and the router's
+    candidate/merge sorts)."""
+    order = sorted(range(len(ids)), key=lambda i: (-scores[i], ids[i]))
+    return [(ids[i], scores[i]) for i in order[:take]]
+
+
+def test_fixture_stages_match_recomputation():
+    doc = load()
+    n, n_shards = doc["n"], doc["n_shards"]
+    k, rf, take = doc["k"], doc["rerank_factor"], doc["take"]
+    est, exact = doc["est"], doc["exact"]
+    assert len(est) == n and len(exact) == n
+    assert take == min(max(rf, 1) * k, n)
+
+    # stage 1: per-shard local top-take over the shard's est slice
+    selected = []
+    for s, pinned in enumerate(doc["per_shard_candidates"]):
+        rows = shard_rows(s, n_shards, n)
+        local_est = [est[global_of(s, l, n_shards)] for l in range(rows)]
+        got = top_take(local_est, list(range(rows)), take)
+        assert [(h["id"], h["score"]) for h in pinned] == got, f"shard {s}"
+        selected += [(sc, global_of(s, l, n_shards)) for l, sc in got]
+
+    # stage 2: global candidate selection by (est desc, gid asc)
+    gids = [g for g, _ in top_take([sc for sc, _ in selected],
+                                   [g for _, g in selected], take)]
+    assert gids == doc["selected_gids"]
+
+    # stage 3: exact-score merge by (exact desc, gid asc), truncate k
+    merged = top_take([exact[g] for g in gids], gids, k)
+    assert [(h["id"], h["score"]) for h in doc["merged"]] == merged
+
+
+def test_distributed_merge_equals_single_node_two_phase():
+    doc = load()
+    n, k, take = doc["n"], doc["k"], doc["take"]
+    est, exact = doc["est"], doc["exact"]
+
+    # a single node's two-phase query: global top-take by est, exact
+    # rerank of those candidates, top-k by exact score
+    cand = [g for g, _ in top_take(est, list(range(n)), take)]
+    single = top_take([exact[g] for g in cand], cand, k)
+
+    assert [(h["id"], h["score"]) for h in doc["merged"]] == single, (
+        "distributed merge drifted from the single-node two-phase order"
+    )
+
+
+def test_partition_is_a_bijection():
+    doc = load()
+    n, n_shards = doc["n"], doc["n_shards"]
+    seen = set()
+    for s in range(n_shards):
+        for l in range(shard_rows(s, n_shards, n)):
+            g = global_of(s, l, n_shards)
+            assert shard_of(g, n_shards) == s and local_of(g, n_shards) == l
+            seen.add(g)
+    assert seen == set(range(n))
+
+
+def test_scores_are_f32_exact_and_tie_free():
+    doc = load()
+    for key in ("est", "exact"):
+        xs = doc[key]
+        # f32-exact: the committed f64 text must survive an f32 round
+        # trip unchanged, or the wire format would reorder candidates
+        assert all(float(np.float32(x)) == x for x in xs), key
+        # tie-free with a real gap: the pinned order never depends on
+        # how a consumer breaks score ties
+        srt = sorted(xs)
+        assert all(b - a > 1e-3 for a, b in zip(srt, srt[1:])), key

@@ -30,6 +30,12 @@
 //!   deliberately slowed seal is in flight
 //!   (`query_p50_during_seal_us`) — the lock-split acceptance that
 //!   reads never wait on sealing.
+//! * Cluster: two worker nodes behind the consistent-hashing router on
+//!   loopback — the per-request routing tax (`router_overhead_us`:
+//!   routed generate minus direct generate) and two-phase top-10 query
+//!   throughput through the scatter-gather path vs a single node
+//!   holding the same rows (`scatter_gather_qps` / `single_node_qps`
+//!   in §cluster).
 //!
 //! Results print as tables and land in `BENCH_kernels.json` so future PRs
 //! can diff the perf trajectory mechanically. Dimensions honor
@@ -788,6 +794,161 @@ fn main() -> anyhow::Result<()> {
             ("overhead_frac", json::num(overhead_frac)),
         ]),
     ));
+
+    // -------------------------- cluster router tax + scatter-gather QPS
+    // two full worker nodes behind the consistent-hashing router, all on
+    // loopback. Two numbers land in the JSON: `router_overhead_us` (the
+    // per-request tax of the extra hop: routed generate minus direct
+    // generate) and `scatter_gather_qps` (two-phase top-10 queries/s
+    // through the router over a 2-way sharded collection, with the
+    // single-node direct QPS alongside for the fan-out tax).
+    {
+        use raana::cluster::{Router, RouterConfig};
+        use raana::net::{http_request, ClientConfig, HttpConfig, HttpServer};
+        use raana::serve::index::IndexServer;
+        use raana::serve::Server;
+        use std::sync::Arc;
+
+        let mk_worker = |seed: u64| -> anyhow::Result<(Arc<Server>, HttpServer, String)> {
+            let (manifest, params, packed) =
+                raana::experiments::native_demo_packed("bench-cluster", 256, 2, 4, seed)?;
+            let index = Arc::new(IndexServer::with_embedder(
+                raana::index::IndexConfig::default(),
+                None,
+                manifest.clone(),
+                params.clone(),
+                Some(packed.clone()),
+            )?);
+            let server = Arc::new(Server::start_native_packed(manifest, params, packed)?);
+            let http = HttpServer::bind_with_index(
+                Arc::clone(&server),
+                Some(index),
+                "127.0.0.1:0",
+                HttpConfig { workers: 2, ..Default::default() },
+            )?;
+            let addr = format!("127.0.0.1:{}", http.local_addr().port());
+            Ok((server, http, addr))
+        };
+        let (s0, h0, a0) = mk_worker(7)?;
+        let (s1, h1, a1) = mk_worker(7)?;
+        let router = Router::bind(
+            "127.0.0.1:0",
+            RouterConfig {
+                workers: vec![a0.clone(), a1.clone()],
+                client: ClientConfig::timeout_ms(5000),
+                ..Default::default()
+            },
+        )?;
+        let ra = format!("127.0.0.1:{}", router.local_addr().port());
+
+        let gen_body = "{\"prompt\":[1,2,3],\"max_new_tokens\":8}";
+        let direct_r = bench("cluster_gen_direct", 1, 8, || {
+            let resp = http_request(&a0, "POST", "/v1/generate", Some(gen_body)).unwrap();
+            assert_eq!(resp.status, 200);
+            std::hint::black_box(resp.body.len());
+        });
+        let routed_r = bench("cluster_gen_routed", 1, 8, || {
+            let resp = http_request(&ra, "POST", "/v1/generate", Some(gen_body)).unwrap();
+            assert_eq!(resp.status, 200);
+            std::hint::black_box(resp.body.len());
+        });
+        let router_overhead_us = (routed_r.median() - direct_r.median()) * 1e6;
+
+        // sharded collection via the router; identical rows whole on one
+        // worker for the single-node baseline
+        // sized so the one-shot JSON add body stays under MAX_BODY_BYTES
+        let (rows, d) = (1024usize, 32usize);
+        let data = Rng::new(11).gaussian_vec(rows * d);
+        let row_json = |r: &[f32]| {
+            let vals: Vec<String> = r.iter().map(|x| format!("{x}")).collect();
+            format!("[{}]", vals.join(","))
+        };
+        let all: Vec<String> = data.chunks_exact(d).map(row_json).collect();
+        let body = format!("{{\"vectors\":[{}]}}", all.join(","));
+        let resp = http_request(&ra, "POST", "/v1/collections/fleet/add", Some(&body))?;
+        anyhow::ensure!(resp.status == 200, "cluster add failed: {}", resp.status);
+        let resp = http_request(&a0, "POST", "/v1/collections/solo/add", Some(&body))?;
+        anyhow::ensure!(resp.status == 200, "solo add failed: {}", resp.status);
+
+        let q = Rng::new(12).gaussian_vec(d);
+        let sg_body = format!("{{\"vector\":{},\"k\":10}}", row_json(&q));
+        let solo_r = bench("cluster_query_single", 1, 16, || {
+            let resp = http_request(
+                &a0,
+                "POST",
+                "/v1/collections/solo/query",
+                Some(&sg_body),
+            )
+            .unwrap();
+            assert_eq!(resp.status, 200);
+            std::hint::black_box(resp.body.len());
+        });
+        let sg_r = bench("cluster_query_scatter", 1, 16, || {
+            let resp = http_request(
+                &ra,
+                "POST",
+                "/v1/collections/fleet/query",
+                Some(&sg_body),
+            )
+            .unwrap();
+            assert_eq!(resp.status, 200);
+            std::hint::black_box(resp.body.len());
+        });
+        router.shutdown()?;
+        for (s, h) in [(s0, h0), (s1, h1)] {
+            h.shutdown()?;
+            match Arc::try_unwrap(s) {
+                Ok(s) => {
+                    s.shutdown()?;
+                }
+                Err(_) => anyhow::bail!("HTTP layer still holds a cluster worker"),
+            }
+        }
+        let scatter_gather_qps = 1.0 / sg_r.median().max(1e-12);
+        let single_node_qps = 1.0 / solo_r.median().max(1e-12);
+
+        let mut t = Table::new(&[
+            "Cluster (2 workers, loopback)",
+            "median",
+            "throughput",
+        ]);
+        t.row(vec![
+            "generate direct to worker".into(),
+            format!("{:.2} ms", direct_r.median() * 1e3),
+            String::new(),
+        ]);
+        t.row(vec![
+            "generate via router".into(),
+            format!("{:.2} ms", routed_r.median() * 1e3),
+            format!("+{router_overhead_us:.0} us/req"),
+        ]);
+        t.row(vec![
+            format!("top-10 query, single node (n={rows})"),
+            format!("{:.2} ms", solo_r.median() * 1e3),
+            format!("{single_node_qps:.0} qps"),
+        ]);
+        t.row(vec![
+            "top-10 query, scatter-gather (2 shards)".into(),
+            format!("{:.2} ms", sg_r.median() * 1e3),
+            format!("{scatter_gather_qps:.0} qps"),
+        ]);
+        println!("{}", t.render());
+        report.push((
+            "cluster",
+            json::obj(vec![
+                ("workers", json::num(2.0)),
+                ("rows", json::num(rows as f64)),
+                ("d", json::num(d as f64)),
+                ("gen_direct", bench_json(&direct_r)),
+                ("gen_routed", bench_json(&routed_r)),
+                ("router_overhead_us", json::num(router_overhead_us)),
+                ("query_single_node", bench_json(&solo_r)),
+                ("query_scatter_gather", bench_json(&sg_r)),
+                ("scatter_gather_qps", json::num(scatter_gather_qps)),
+                ("single_node_qps", json::num(single_node_qps)),
+            ]),
+        ));
+    }
 
     let out = std::path::Path::new("BENCH_kernels.json");
     write_json_report(out, &json::obj(report))?;

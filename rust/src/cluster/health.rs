@@ -1,0 +1,180 @@
+//! Fleet health: the per-worker failure state machine.
+//!
+//! ```text
+//!            probe/RPC failure                ≥ down_after failures
+//!  Healthy ─────────────────────▶ Suspect ──────────────────────▶ Down
+//!     ▲                             │                              │
+//!     └────────── success ──────────┴────────── success ───────────┘
+//!
+//!  any state ── healthz says "draining" ──▶ Draining ── "ok" ──▶ Healthy
+//! ```
+//!
+//! * **Healthy** — full rotation: takes new generate traffic and
+//!   scatter-gather work.
+//! * **Suspect** — one or more consecutive failures, not yet condemned:
+//!   out of the *generate* rotation (cheap to avoid) but still queried
+//!   in scatter-gather, because its shards' rows exist nowhere else and
+//!   a single dropped probe shouldn't degrade query results.
+//! * **Down** — `down_after` consecutive failures: out of everything;
+//!   scatter-gather over its shards reports `degraded` instead of
+//!   waiting out timeouts. Probes continue — one success re-admits.
+//! * **Draining** — the worker *itself* announced shutdown via
+//!   `healthz` `"state":"draining"`: no new generate traffic, but
+//!   in-flight work and scatter-gather still complete (that is what
+//!   makes a drain lose no requests).
+//!
+//! Transitions are driven by both the background prober and passively by
+//! RPC outcomes, so a worker that dies mid-request is condemned without
+//! waiting for the next probe tick.
+
+use std::sync::Mutex;
+
+/// Default consecutive-failure threshold for Suspect → Down.
+pub const DEFAULT_DOWN_AFTER: u32 = 2;
+
+/// One worker's rotation state (see module docs for the machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// In full rotation.
+    Healthy,
+    /// Failing but not yet condemned; generate avoids it, scatter keeps it.
+    Suspect,
+    /// Condemned: excluded everywhere until a probe succeeds.
+    Down,
+    /// Self-announced shutdown: finishes what it has, gets nothing new.
+    Draining,
+}
+
+impl WorkerState {
+    /// Wire name for `/v1/stats`.
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerState::Healthy => "healthy",
+            WorkerState::Suspect => "suspect",
+            WorkerState::Down => "down",
+            WorkerState::Draining => "draining",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    state: WorkerState,
+    fails: u32,
+}
+
+/// Shared health table for a fixed worker set. All methods take `&self`;
+/// the table is a single mutex because updates are a few words and the
+/// readers (routing decisions) copy out.
+#[derive(Debug)]
+pub struct FleetHealth {
+    slots: Mutex<Vec<Slot>>,
+    down_after: u32,
+}
+
+impl FleetHealth {
+    /// A table of `n` workers, all initially [`WorkerState::Healthy`]
+    /// (optimistic: the first failed probe demotes immediately).
+    pub fn new(n: usize, down_after: u32) -> FleetHealth {
+        FleetHealth {
+            slots: Mutex::new(vec![Slot { state: WorkerState::Healthy, fails: 0 }; n]),
+            down_after: down_after.max(1),
+        }
+    }
+
+    /// A successful probe or RPC: back to full rotation from any state.
+    pub fn record_success(&self, w: usize) {
+        let mut s = self.slots.lock().unwrap();
+        if let Some(slot) = s.get_mut(w) {
+            slot.state = WorkerState::Healthy;
+            slot.fails = 0;
+        }
+    }
+
+    /// The worker's healthz answered `"draining"`. Resets the failure
+    /// count — the worker is alive, just leaving.
+    pub fn record_draining(&self, w: usize) {
+        let mut s = self.slots.lock().unwrap();
+        if let Some(slot) = s.get_mut(w) {
+            slot.state = WorkerState::Draining;
+            slot.fails = 0;
+        }
+    }
+
+    /// A failed probe or RPC: Healthy/Draining → Suspect, and Suspect →
+    /// Down once `down_after` consecutive failures accumulate.
+    pub fn record_failure(&self, w: usize) {
+        let mut s = self.slots.lock().unwrap();
+        if let Some(slot) = s.get_mut(w) {
+            slot.fails = slot.fails.saturating_add(1);
+            slot.state =
+                if slot.fails >= self.down_after { WorkerState::Down } else { WorkerState::Suspect };
+        }
+    }
+
+    /// Current state of worker `w`.
+    pub fn state(&self, w: usize) -> WorkerState {
+        self.slots.lock().unwrap().get(w).map_or(WorkerState::Down, |s| s.state)
+    }
+
+    /// Copy of every worker's state, index-aligned with the worker list.
+    pub fn snapshot(&self) -> Vec<WorkerState> {
+        self.slots.lock().unwrap().iter().map(|s| s.state).collect()
+    }
+
+    /// Workers eligible for **new** generate traffic (Healthy only).
+    pub fn generate_targets(&self) -> Vec<usize> {
+        self.snapshot()
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, st)| st == WorkerState::Healthy)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Whether worker `w` should be asked at all in scatter-gather
+    /// (everything but Down — see module docs).
+    pub fn scatter_eligible(&self, w: usize) -> bool {
+        self.state(w) != WorkerState::Down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_ladder_and_readmission() {
+        let h = FleetHealth::new(2, 2);
+        assert_eq!(h.state(0), WorkerState::Healthy);
+        h.record_failure(0);
+        assert_eq!(h.state(0), WorkerState::Suspect);
+        assert!(h.scatter_eligible(0), "one failure must not drop shards from queries");
+        assert_eq!(h.generate_targets(), vec![1], "suspect leaves the generate rotation");
+        h.record_failure(0);
+        assert_eq!(h.state(0), WorkerState::Down);
+        assert!(!h.scatter_eligible(0));
+        h.record_success(0);
+        assert_eq!(h.state(0), WorkerState::Healthy, "one success re-admits");
+        assert_eq!(h.generate_targets(), vec![0, 1]);
+    }
+
+    #[test]
+    fn draining_blocks_generate_keeps_scatter() {
+        let h = FleetHealth::new(2, 2);
+        h.record_draining(1);
+        assert_eq!(h.state(1), WorkerState::Draining);
+        assert_eq!(h.generate_targets(), vec![0]);
+        assert!(h.scatter_eligible(1), "draining workers still answer queries");
+        // drain cancelled (process kept running): next ok probe restores
+        h.record_success(1);
+        assert_eq!(h.state(1), WorkerState::Healthy);
+    }
+
+    #[test]
+    fn out_of_range_is_down() {
+        let h = FleetHealth::new(1, 2);
+        assert_eq!(h.state(7), WorkerState::Down);
+        h.record_failure(7); // no-op, must not panic
+    }
+}

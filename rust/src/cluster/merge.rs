@@ -1,0 +1,194 @@
+//! Pure shard arithmetic and the deterministic scatter-gather merge.
+//!
+//! Everything here is a total function of its arguments — no sockets, no
+//! locks — so the bit-identical-to-single-node contract can be pinned by
+//! unit tests and golden vectors without standing up a cluster.
+//!
+//! # The partition
+//!
+//! Rows are assigned to shards **round-robin by global id**: row `g`
+//! lives on shard `g % S` at local position `g / S`. Two properties make
+//! the distributed query exact:
+//!
+//! 1. *Local order is a restriction of global order.* Within one shard,
+//!    ascending local position is ascending global id, so a shard's
+//!    (score desc, local id asc) ordering maps to (score desc, global id
+//!    asc) after translation — the exact tie-break
+//!    [`crate::index::top_indices`] uses.
+//! 2. *Rank argument.* A single node picks the global top-`take` rows by
+//!    estimated score. Each of those rows ranks at most `take`-th on its
+//!    own shard (removing rows can only improve a row's rank), so asking
+//!    every shard for its local top-`take` candidates — with `take`
+//!    computed from the **global** row count — is guaranteed to surface
+//!    the full single-node candidate set. [`select_candidates`] then
+//!    re-selects the global top-`take` with the same comparator, which
+//!    discards exactly the rows a single node would never have reranked.
+//!
+//! Phase two reranks the selected rows with exact scores on their owning
+//! shards and [`merge_hits`] reproduces `Collection::query`'s final
+//! (score desc, id asc) sort. Same rows, same rotation seed, same
+//! comparators ⇒ byte-identical results.
+
+use crate::index::SearchHit;
+
+/// Shard owning global row `gid` under `n_shards`-way round-robin.
+pub fn shard_of(gid: usize, n_shards: usize) -> usize {
+    gid % n_shards.max(1)
+}
+
+/// Local position of global row `gid` on its owning shard.
+pub fn local_of(gid: usize, n_shards: usize) -> usize {
+    gid / n_shards.max(1)
+}
+
+/// Global id of local row `local` on shard `shard`.
+pub fn global_of(shard: usize, local: usize, n_shards: usize) -> usize {
+    local * n_shards.max(1) + shard
+}
+
+/// Rows held by `shard` when `n` rows total have been appended —
+/// equivalently, the local row count *before* global row `n` lands, i.e.
+/// the `expect_first_id` a router sends with shard `shard`'s slice of a
+/// batch whose first global id is `n`.
+pub fn shard_rows(shard: usize, n_shards: usize, n: usize) -> usize {
+    let s = n_shards.max(1);
+    n / s + usize::from(shard < n % s)
+}
+
+/// The candidate budget a single node would use: `rerank_factor.max(1) *
+/// k`, capped at the global row count `n`. Mirrors
+/// [`crate::index::Collection::query`]'s `take` exactly — the cluster
+/// must compute it from the *global* `n`, never a shard-local count.
+pub fn global_take(k: usize, rerank_factor: usize, n: usize) -> usize {
+    rerank_factor.max(1).saturating_mul(k).min(n)
+}
+
+/// Split a flat row-major batch into per-shard flat slices under the
+/// round-robin partition, given the global id of the batch's first row.
+/// Returned `slices[s]` holds shard `s`'s rows in ascending global-id
+/// order — which is exactly append order on that shard.
+pub fn split_rows(flat: &[f32], d: usize, n_shards: usize, first_gid: usize) -> Vec<Vec<f32>> {
+    let s = n_shards.max(1);
+    let mut slices = vec![Vec::new(); s];
+    for (i, row) in flat.chunks_exact(d).enumerate() {
+        slices[shard_of(first_gid + i, s)].extend_from_slice(row);
+    }
+    slices
+}
+
+/// Phase-one gather: translate each shard's estimated-score candidates
+/// to global ids and re-select the global top-`take` by (estimated score
+/// desc, global id asc) — the same comparator as
+/// [`crate::index::top_indices`]. `per_shard[s]` is shard `s`'s local
+/// candidate list (local ids); entries whose global id is `>=
+/// acked_rows` are dropped first, so rows from a partially applied batch
+/// can never leak into results.
+pub fn select_candidates(
+    per_shard: &[(usize, Vec<SearchHit>)],
+    n_shards: usize,
+    take: usize,
+    acked_rows: usize,
+) -> Vec<SearchHit> {
+    let mut all: Vec<SearchHit> = Vec::new();
+    for &(shard, ref hits) in per_shard {
+        for h in hits {
+            let gid = global_of(shard, h.id, n_shards);
+            if gid < acked_rows {
+                all.push(SearchHit { id: gid, score: h.score });
+            }
+        }
+    }
+    all.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    all.truncate(take);
+    all
+}
+
+/// Phase-two gather: merge exact-score hits (already translated to
+/// global ids) into the final top-`k`, sorted (score desc, id asc) —
+/// the same final sort as [`crate::index::Collection::query`].
+pub fn merge_hits(mut hits: Vec<SearchHit>, k: usize) -> Vec<SearchHit> {
+    hits.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
+    hits.truncate(k);
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_round_trips() {
+        for s in 1..5usize {
+            for g in 0..40usize {
+                assert_eq!(global_of(shard_of(g, s), local_of(g, s), s), g);
+            }
+            // shard_rows counts exactly the gids below n on each shard
+            for n in 0..40usize {
+                for sh in 0..s {
+                    let count = (0..n).filter(|&g| shard_of(g, s) == sh).count();
+                    assert_eq!(shard_rows(sh, s, n), count, "shard {sh} of {s}, n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows_and_order() {
+        let d = 2;
+        let flat: Vec<f32> = (0..10).map(|x| x as f32).collect(); // 5 rows
+        let slices = split_rows(&flat, d, 3, 4); // gids 4..9
+        // gid 4 -> shard 1, 5 -> 2, 6 -> 0, 7 -> 1, 8 -> 2
+        assert_eq!(slices[0], vec![4.0, 5.0]); // row for gid 6
+        assert_eq!(slices[1], vec![0.0, 1.0, 6.0, 7.0]); // gids 4, 7
+        assert_eq!(slices[2], vec![2.0, 3.0, 8.0, 9.0]); // gids 5, 8
+    }
+
+    #[test]
+    fn global_take_mirrors_single_node() {
+        assert_eq!(global_take(10, 4, 1000), 40);
+        assert_eq!(global_take(10, 0, 1000), 10); // factor clamps to 1
+        assert_eq!(global_take(10, 4, 25), 25); // capped at n
+    }
+
+    #[test]
+    fn select_candidates_orders_filters_and_truncates() {
+        // two shards, S = 2: shard 0 holds even gids, shard 1 odd
+        let per_shard = vec![
+            (0usize, vec![SearchHit { id: 0, score: 3.0 }, SearchHit { id: 1, score: 1.0 }]),
+            (1usize, vec![SearchHit { id: 0, score: 3.0 }, SearchHit { id: 1, score: 2.0 }]),
+        ];
+        // gids: shard0 local0 -> 0 (3.0), local1 -> 2 (1.0);
+        //       shard1 local0 -> 1 (3.0), local1 -> 3 (2.0)
+        let sel = select_candidates(&per_shard, 2, 3, usize::MAX);
+        let got: Vec<(usize, f32)> = sel.iter().map(|h| (h.id, h.score)).collect();
+        // tie at 3.0 breaks by ascending gid: 0 before 1
+        assert_eq!(got, vec![(0, 3.0), (1, 3.0), (3, 2.0)]);
+        // acked watermark drops pending rows before selection
+        let sel = select_candidates(&per_shard, 2, 3, 2);
+        let got: Vec<usize> = sel.iter().map(|h| h.id).collect();
+        assert_eq!(got, vec![0, 1]);
+    }
+
+    #[test]
+    fn merge_matches_query_final_sort() {
+        let hits = vec![
+            SearchHit { id: 7, score: 0.5 },
+            SearchHit { id: 2, score: 0.9 },
+            SearchHit { id: 5, score: 0.9 },
+            SearchHit { id: 1, score: 0.1 },
+        ];
+        let m = merge_hits(hits, 3);
+        let got: Vec<usize> = m.iter().map(|h| h.id).collect();
+        assert_eq!(got, vec![2, 5, 7]); // 0.9-tie breaks by id asc
+    }
+}

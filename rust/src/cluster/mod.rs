@@ -1,0 +1,52 @@
+//! Horizontal scale-out: a sharded router/worker cluster.
+//!
+//! The single-node deployment (`raana serve`) is one batcher + one
+//! vector store behind one HTTP front-end — cheap per node thanks to
+//! RaanA's calibration-light quantization, but a hard ceiling on
+//! concurrent load. This module turns capacity into a flag: `N` worker
+//! processes (each an unmodified single node) behind a thin **router**
+//! that owns placement, health, and merging — and nothing else.
+//!
+//! ```text
+//!                        ┌────────────────────┐
+//!            clients ──▶ │       router       │  raana router
+//!                        │  ring · health ·   │
+//!                        │  scatter-gather    │
+//!                        └──┬──────┬──────┬───┘
+//!                     HTTP/JSON (the public API is the RPC)
+//!                        ┌──▼──┐ ┌─▼───┐ ┌▼────┐
+//!                        │ w0  │ │ w1  │ │ w2  │   raana worker
+//!                        │batch│ │batch│ │batch│
+//!                        │index│ │index│ │index│
+//!                        └─────┘ └─────┘ └─────┘
+//! ```
+//!
+//! * [`ring`] — consistent hashing: which workers hold a collection's
+//!   shards. Stable under worker-list reordering; adding a worker moves
+//!   ~1/n of placements.
+//! * [`merge`] — the pure round-robin row partition and the two-phase
+//!   scatter-gather merge, bit-identical to a single node holding the
+//!   same rows (rank-argument proof in its module docs).
+//! * [`health`] — the Healthy/Suspect/Down/Draining state machine that
+//!   takes workers out of rotation on bounded failures and re-admits
+//!   them on the first successful probe.
+//! * [`router`] — the process: HTTP front-end, background prober,
+//!   generate load-balancing, sharded add with `expect_first_id`
+//!   exactly-once retries, scatter-gather query with explicit
+//!   degradation, fleet-wide stats.
+//!
+//! The determinism contract extends the single-node one: same rows,
+//! same store seed, same query ⇒ the router's merged top-k equals the
+//! single node's bit-for-bit, regardless of shard count — pinned by
+//! `rust/tests/cluster.rs`, the numpy mirror
+//! `python/tests/test_cluster.py`, and the `cluster_merge.json` golden
+//! vectors.
+
+pub mod health;
+pub mod merge;
+pub mod ring;
+pub mod router;
+
+pub use health::{FleetHealth, WorkerState, DEFAULT_DOWN_AFTER};
+pub use ring::Ring;
+pub use router::{Router, RouterConfig, DEFAULT_PROBE_INTERVAL_MS, DEFAULT_RPC_TIMEOUT_MS};

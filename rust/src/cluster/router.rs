@@ -1,0 +1,1093 @@
+//! The router process: one thin HTTP front-end over N workers.
+//!
+//! The router owns no model and no rows — it owns *placement* (the
+//! [`Ring`]), *health* (the [`FleetHealth`] table, fed by a background
+//! prober and passively by every RPC outcome), and the *merge* (the pure
+//! functions in [`super::merge`]). Every worker is a complete single-node
+//! deployment (`raana serve`), reached over the same HTTP/1.1 + JSON
+//! surface clients use — the cluster RPC *is* the public API, so there is
+//! no second protocol to harden.
+//!
+//! Request handling:
+//!
+//! * `POST /v1/generate` — round-robin over Healthy workers, raw byte
+//!   relay. Retries the next worker **only when the chosen worker
+//!   produced zero response bytes** (connect failure, or death before
+//!   the first byte): once a byte has been relayed the request may have
+//!   side effects, so re-sending could duplicate work — a mid-stream
+//!   death closes the connection instead. All candidates dead ⇒ **503 +
+//!   `Retry-After`**.
+//! * `POST /v1/collections/{name}/add` — splits the batch round-robin by
+//!   global row id across the collection's shards and appends each slice
+//!   with `expect_first_id`, making retries idempotent (a **409** on a
+//!   retry proves the earlier attempt landed — it is counted as
+//!   success). A batch that lands on only some shards is kept as
+//!   *pending*: the client sees **503 + `Retry-After`**, queries mask the
+//!   partial rows (see below), and the next add/retry first completes the
+//!   pending slices before accepting new rows — no silent partial state.
+//! * `POST /v1/collections/{name}/query` — two-phase scatter-gather:
+//!   `scan` every live shard for estimated candidates (`take` computed
+//!   from the **global** row count, bumped per shard by any
+//!   pending-but-applied rows), select the global candidate set, `rerank`
+//!   the winners on their owning shards, merge exact scores. Bit-identical
+//!   to a single node holding the same rows (see [`super::merge`]).
+//!   Unreachable shards degrade explicitly: `"degraded": true` +
+//!   `"failed_shards"`, never a hang or a silent subset; all shards
+//!   unreachable ⇒ **503 + `Retry-After`**.
+//! * `GET /v1/stats` — fleet view: per-worker state and queue depth,
+//!   summed counters, and percentiles computed **once** over the
+//!   concatenated per-worker latency windows (averaging per-worker p95s
+//!   would be mathematically wrong).
+//! * `GET /healthz`, `GET /v1/collections` — router-local, no RPC.
+//!
+//! Every RPC uses [`ClientConfig`] connect/read deadlines, so a wedged
+//! worker costs a bounded timeout, never a hung router thread.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::index::{SearchHit, DEFAULT_RERANK_FACTOR};
+use crate::json::{self, Value};
+use crate::net::{
+    hits_json, http_request_retry_with, http_request_with, parse_f32_array, read_request, respond,
+    respond_error, respond_method_not_allowed, ClientConfig,
+};
+use crate::threadpool::{default_threads, Pool};
+use crate::util;
+
+use super::health::{FleetHealth, WorkerState, DEFAULT_DOWN_AFTER};
+use super::merge;
+use super::ring::Ring;
+
+/// Default per-RPC connect/read deadline (see [`RouterConfig::client`]).
+pub const DEFAULT_RPC_TIMEOUT_MS: u64 = 2000;
+
+/// Default health-probe cadence.
+pub const DEFAULT_PROBE_INTERVAL_MS: u64 = 250;
+
+/// Most detached overflow responders alive at once (mirrors the worker
+/// front-end's bound).
+const OVERFLOW_MAX: usize = 32;
+
+/// Socket write timeout towards clients and workers.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Read timeout towards a worker while relaying a generation. Much
+/// longer than [`RouterConfig::client`]'s RPC deadline: a long prefill
+/// legitimately produces no bytes for a while, and a worker that *dies*
+/// is detected by the failed read, not the timeout. This bound only
+/// catches a truly wedged worker.
+const GENERATE_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Router construction options (see [`Router::bind`]).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Worker addresses (`host:port`), index-aligned with every
+    /// per-worker table. Must be non-empty.
+    pub workers: Vec<String>,
+    /// Shards per collection; `0` (default) and anything larger clamp to
+    /// the worker count. `1` places each collection wholly on one worker.
+    pub shards: usize,
+    /// Connection-handler pool size for the router's own listener
+    /// (`0` = [`default_threads`], min 4).
+    pub http_workers: usize,
+    /// Health-probe cadence in milliseconds (`0` =
+    /// [`DEFAULT_PROBE_INTERVAL_MS`]).
+    pub probe_interval_ms: u64,
+    /// Consecutive failures before a worker is condemned Down
+    /// (see [`FleetHealth`]).
+    pub down_after: u32,
+    /// Connect/read deadlines for every worker RPC and probe.
+    pub client: ClientConfig,
+    /// Read timeout for the router's *own* clients in milliseconds
+    /// (`0` = 10 s), the same slow-loris guard the worker front-end has.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            workers: Vec::new(),
+            shards: 0,
+            http_workers: 0,
+            probe_interval_ms: 0,
+            down_after: DEFAULT_DOWN_AFTER,
+            client: ClientConfig::timeout_ms(DEFAULT_RPC_TIMEOUT_MS),
+            read_timeout_ms: 0,
+        }
+    }
+}
+
+/// A batch accepted from a client but not yet acked by every shard.
+#[derive(Debug)]
+struct PendingAdd {
+    /// Global id of the batch's first row.
+    first_gid: usize,
+    /// Rows in the batch.
+    count: usize,
+    /// Per-shard flat row slices (shard-local append order).
+    slices: Vec<Vec<f32>>,
+    /// Which shards have acked their slice (200 or 409-on-retry).
+    applied: Vec<bool>,
+}
+
+/// Routing entry for one collection.
+#[derive(Debug)]
+struct CollectionRoute {
+    /// Worker index per shard; `shards[s]` owns every global row with
+    /// `gid % shards.len() == s`.
+    shards: Vec<usize>,
+    dim: usize,
+    /// Rows acked by **all** shards — the only rows queries may surface.
+    rows: usize,
+    pending: Option<PendingAdd>,
+}
+
+struct RouterState {
+    cfg: RouterConfig,
+    ring: Ring,
+    health: FleetHealth,
+    routes: Mutex<BTreeMap<String, CollectionRoute>>,
+    rr: AtomicUsize,
+}
+
+impl RouterState {
+    fn n_shards(&self) -> usize {
+        let w = self.cfg.workers.len();
+        if self.cfg.shards == 0 { w } else { self.cfg.shards.min(w) }
+    }
+
+    fn addr(&self, w: usize) -> &str {
+        &self.cfg.workers[w]
+    }
+}
+
+/// Handle for a running router front-end (modeled on
+/// [`crate::net::HttpServer`]): bind, serve, graceful [`Router::shutdown`]).
+pub struct Router {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    prober: Option<thread::JoinHandle<()>>,
+    overflow: Arc<AtomicUsize>,
+}
+
+impl Router {
+    /// Bind `addr` (port `0` for ephemeral) and start routing over
+    /// `cfg.workers`.
+    pub fn bind(addr: &str, cfg: RouterConfig) -> Result<Router> {
+        if cfg.workers.is_empty() {
+            bail!("router needs at least one worker address");
+        }
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding router listener on {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
+
+        let state = Arc::new(RouterState {
+            ring: Ring::new(&cfg.workers),
+            health: FleetHealth::new(cfg.workers.len(), cfg.down_after),
+            routes: Mutex::new(BTreeMap::new()),
+            rr: AtomicUsize::new(0),
+            cfg,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let overflow = Arc::new(AtomicUsize::new(0));
+
+        // Background prober: drives Healthy/Suspect/Down/Draining from
+        // each worker's /healthz. Polls the stop flag in small steps so
+        // shutdown never waits out a full probe interval.
+        let prober = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let interval = match state.cfg.probe_interval_ms {
+                    0 => DEFAULT_PROBE_INTERVAL_MS,
+                    ms => ms,
+                };
+                while !stop.load(Ordering::SeqCst) {
+                    for w in 0..state.cfg.workers.len() {
+                        probe_worker(&state, w);
+                    }
+                    let mut slept = 0u64;
+                    while slept < interval && !stop.load(Ordering::SeqCst) {
+                        let step = (interval - slept).min(20);
+                        thread::sleep(Duration::from_millis(step));
+                        slept += step;
+                    }
+                }
+            })
+        };
+
+        let accept = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            let overflow = Arc::clone(&overflow);
+            thread::spawn(move || {
+                let workers =
+                    if state.cfg.http_workers == 0 { default_threads().max(4) } else { state.cfg.http_workers };
+                let pool = Pool::new(workers);
+                let active = Arc::new(AtomicUsize::new(0));
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((conn, _peer)) => {
+                            if active.load(Ordering::SeqCst) < workers {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                let st = Arc::clone(&state);
+                                let act = Arc::clone(&active);
+                                pool.submit(move || {
+                                    handle_router_connection(&st, conn, false);
+                                    act.fetch_sub(1, Ordering::SeqCst);
+                                });
+                            } else if overflow.load(Ordering::SeqCst) < OVERFLOW_MAX {
+                                // bounded detached responders keep healthz
+                                // live and refuse the rest with a real 503
+                                overflow.fetch_add(1, Ordering::SeqCst);
+                                let st = Arc::clone(&state);
+                                let ovf = Arc::clone(&overflow);
+                                thread::spawn(move || {
+                                    handle_router_connection(&st, conn, true);
+                                    drop(st);
+                                    ovf.fetch_sub(1, Ordering::SeqCst);
+                                });
+                            } else {
+                                drop(conn);
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                drop(pool); // joins workers: the graceful drain
+            })
+        };
+
+        Ok(Router { addr: local, stop, accept: Some(accept), prober: Some(prober), overflow })
+    }
+
+    /// The actually-bound address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, finish in-flight connections,
+    /// stop the prober, return.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        let mut out = Ok(());
+        if let Some(h) = self.accept.take() {
+            if h.join().is_err() {
+                out = Err(anyhow!("router accept loop panicked"));
+            }
+        }
+        if let Some(h) = self.prober.take() {
+            if h.join().is_err() {
+                out = Err(anyhow!("router prober panicked"));
+            }
+        }
+        self.drain_overflow();
+        out
+    }
+
+    fn drain_overflow(&self) {
+        for _ in 0..6000 {
+            if self.overflow.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+        self.drain_overflow();
+    }
+}
+
+// ------------------------------------------------------------------ probing
+
+fn probe_worker(state: &RouterState, w: usize) {
+    match http_request_with(state.addr(w), "GET", "/healthz", None, state.cfg.client) {
+        Ok(r) if r.status == 200 => {
+            let draining = r
+                .json()
+                .ok()
+                .and_then(|v| v.get("state").and_then(|s| s.as_str().map(str::to_string)))
+                .is_some_and(|s| s == "draining");
+            if draining {
+                state.health.record_draining(w);
+            } else {
+                state.health.record_success(w);
+            }
+        }
+        _ => state.health.record_failure(w),
+    }
+}
+
+// --------------------------------------------------------------- dispatch
+
+fn handle_router_connection(state: &RouterState, mut stream: TcpStream, overflow: bool) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let read_timeout = match state.cfg.read_timeout_ms {
+        0 => Duration::from_secs(10),
+        ms => Duration::from_millis(ms),
+    };
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let req = match read_request(&stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = respond_error(&mut stream, e.status, &e.msg);
+            return;
+        }
+    };
+    let method = req.method.as_str();
+    match req.path.as_str() {
+        "/healthz" => match method {
+            "GET" => handle_router_healthz(state, &mut stream),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        "/v1/stats" => match method {
+            "GET" if overflow => {
+                let _ =
+                    respond_error(&mut stream, 503, "all router workers busy, retry later");
+            }
+            "GET" => handle_fleet_stats(state, &mut stream),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        "/v1/generate" => match method {
+            "POST" if overflow => {
+                let _ =
+                    respond_error(&mut stream, 503, "all router workers busy, retry later");
+            }
+            "POST" => handle_cluster_generate(state, &mut stream, &req.body),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "POST");
+            }
+        },
+        "/v1/collections" => match method {
+            "GET" => handle_cluster_collections(state, &mut stream),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        p if p.starts_with("/v1/collections/") => {
+            let rest = &p["/v1/collections/".len()..];
+            match (rest.split_once('/'), method) {
+                (Some((_, "add" | "query")), "POST") if overflow => {
+                    let _ = respond_error(
+                        &mut stream,
+                        503,
+                        "all router workers busy, retry later",
+                    );
+                }
+                (Some((name, "add")), "POST") => {
+                    handle_cluster_add(state, name, &mut stream, &req.body)
+                }
+                (Some((name, "query")), "POST") => {
+                    handle_cluster_query(state, name, &mut stream, &req.body)
+                }
+                (Some((_, "add" | "query")), m) => {
+                    let _ = respond_method_not_allowed(&mut stream, m, "POST");
+                }
+                _ => {
+                    let _ = respond_error(&mut stream, 404, &format!("no endpoint {p}"));
+                }
+            }
+        }
+        p => {
+            let _ = respond_error(&mut stream, 404, &format!("no endpoint {p}"));
+        }
+    }
+}
+
+fn handle_router_healthz(state: &RouterState, stream: &mut TcpStream) {
+    let states = state.health.snapshot();
+    let healthy = states.iter().filter(|&&s| s == WorkerState::Healthy).count();
+    let body = json::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("role", json::s("router")),
+        ("workers", json::num(states.len() as f64)),
+        ("workers_healthy", json::num(healthy as f64)),
+    ]);
+    let _ = respond(stream, 200, "OK", &body.to_json());
+}
+
+// ---------------------------------------------------------------- generate
+
+enum RelayOutcome {
+    /// Full (or mid-stream-truncated) response relayed; connection done.
+    Done,
+    /// Worker produced zero response bytes — safe to try another worker.
+    PreResponse,
+}
+
+fn handle_cluster_generate(state: &RouterState, stream: &mut TcpStream, body: &[u8]) {
+    let targets = state.health.generate_targets();
+    if targets.is_empty() {
+        let _ = respond_error(stream, 503, "no healthy workers in rotation");
+        return;
+    }
+    let start = state.rr.fetch_add(1, Ordering::SeqCst);
+    for i in 0..targets.len() {
+        let w = targets[(start + i) % targets.len()];
+        match relay_generate(state, w, stream, body) {
+            RelayOutcome::Done => {
+                state.health.record_success(w);
+                return;
+            }
+            RelayOutcome::PreResponse => state.health.record_failure(w),
+        }
+    }
+    let _ = respond_error(
+        stream,
+        503,
+        "every healthy worker failed before responding, retry later",
+    );
+}
+
+/// Raw byte relay: forward the request, then copy response bytes through
+/// verbatim (status line, headers, chunked framing and all — both sides
+/// speak `Connection: close`, so EOF is the terminator). Returns
+/// [`RelayOutcome::PreResponse`] only while nothing has been written to
+/// the client, which is the retry-safety invariant.
+fn relay_generate(state: &RouterState, w: usize, client: &mut TcpStream, body: &[u8]) -> RelayOutcome {
+    let addr = state.addr(w);
+    let upstream = match state.cfg.client.connect_timeout {
+        Some(t) => addr
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut it| it.next())
+            .and_then(|sa| TcpStream::connect_timeout(&sa, t).ok()),
+        None => TcpStream::connect(addr).ok(),
+    };
+    let Some(mut upstream) = upstream else {
+        return RelayOutcome::PreResponse;
+    };
+    let _ = upstream.set_nodelay(true);
+    let _ = upstream.set_read_timeout(Some(GENERATE_READ_TIMEOUT));
+    let _ = upstream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let head = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    if upstream.write_all(head.as_bytes()).and_then(|()| upstream.write_all(body)).is_err() {
+        return RelayOutcome::PreResponse;
+    }
+    let _ = upstream.flush();
+    let mut buf = [0u8; 16 * 1024];
+    let mut sent_any = false;
+    loop {
+        match upstream.read(&mut buf) {
+            Ok(0) => {
+                if !sent_any {
+                    return RelayOutcome::PreResponse; // died before first byte
+                }
+                let _ = client.flush();
+                return RelayOutcome::Done;
+            }
+            Ok(n) => {
+                if client.write_all(&buf[..n]).is_err() {
+                    return RelayOutcome::Done; // client gone; nothing to retry
+                }
+                // flush per read so streamed tokens reach the client live
+                let _ = client.flush();
+                sent_any = true;
+            }
+            Err(_) => {
+                if !sent_any {
+                    return RelayOutcome::PreResponse;
+                }
+                return RelayOutcome::Done; // mid-stream death: close, never resend
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------- add
+
+/// Parse `{"vectors": [[f32...], ...]}` into a flat row-major batch.
+fn parse_vectors_body(body: &[u8]) -> Result<(Vec<f32>, usize)> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("body is not UTF-8"))?;
+    let v = json::parse(text).map_err(|e| anyhow!("invalid JSON body: {e}"))?;
+    if v.get("texts").is_some() || v.get("tokens").is_some() {
+        bail!("the cluster router accepts 'vectors' only — embed client-side or at a worker");
+    }
+    let rows = v
+        .get("vectors")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("body must carry 'vectors': [[f32...], ...]"))?;
+    if rows.is_empty() {
+        bail!("'vectors' must be non-empty");
+    }
+    let mut flat = Vec::new();
+    let mut d = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        let r = parse_f32_array(row, "vectors[..]")?;
+        if i == 0 {
+            d = r.len();
+            if d == 0 {
+                bail!("'vectors' rows must be non-empty");
+            }
+        } else if r.len() != d {
+            bail!("'vectors' rows must share one dimension (row 0 has {d}, row {i} has {})", r.len());
+        }
+        flat.extend_from_slice(&r);
+    }
+    Ok((flat, d))
+}
+
+fn rows_json(slice: &[f32], d: usize) -> Value {
+    json::arr(
+        slice
+            .chunks_exact(d)
+            .map(|row| json::arr(row.iter().map(|&x| json::num(x as f64)).collect()))
+            .collect(),
+    )
+}
+
+enum PendingOutcome {
+    /// Every shard acked; `route.rows` has advanced.
+    Done,
+    /// Some shard still unreachable; pending kept, client should retry.
+    Incomplete,
+    /// A shard refused permanently (4xx/507) before anything was applied
+    /// anywhere; pending dropped, relay the refusal.
+    Refused(u16, String),
+}
+
+/// Push a route's pending batch to every shard that has not acked it,
+/// with `expect_first_id` making the push idempotent (409 ⇒ an earlier
+/// attempt already landed ⇒ success).
+fn complete_pending(state: &RouterState, name: &str, route: &mut CollectionRoute) -> PendingOutcome {
+    let n_shards = route.shards.len();
+    let dim = route.dim;
+    let mut refusal: Option<(u16, String)> = None;
+    {
+        let Some(p) = route.pending.as_mut() else {
+            return PendingOutcome::Done;
+        };
+        for s in 0..n_shards {
+            if p.applied[s] {
+                continue;
+            }
+            if p.slices[s].is_empty() {
+                p.applied[s] = true;
+                continue;
+            }
+            let w = route.shards[s];
+            let expect = merge::shard_rows(s, n_shards, p.first_gid);
+            let body = json::obj(vec![
+                ("vectors", rows_json(&p.slices[s], dim)),
+                ("expect_first_id", json::num(expect as f64)),
+            ])
+            .to_json();
+            let path = format!("/v1/collections/{name}/add");
+            match http_request_retry_with(
+                state.addr(w),
+                "POST",
+                &path,
+                Some(&body),
+                2,
+                state.cfg.client,
+            ) {
+                // 409 = the slice is already there (an earlier attempt or
+                // a transport-level retry landed): exactly-once achieved
+                Ok(r) if r.status == 200 || r.status == 409 => {
+                    p.applied[s] = true;
+                    state.health.record_success(w);
+                }
+                Ok(r) if (400..500).contains(&r.status) || r.status == 507 => {
+                    // permanent refusal (bad dim, byte budget, ...): if no
+                    // shard holds any of the batch yet, drop it and relay;
+                    // otherwise keep pending so the state stays explicit
+                    if !p.applied.iter().any(|&a| a) {
+                        let msg = r
+                            .json()
+                            .ok()
+                            .and_then(|v| {
+                                v.get("error").and_then(|e| e.as_str().map(str::to_string))
+                            })
+                            .unwrap_or_else(|| {
+                                format!("worker {} refused the add", state.addr(w))
+                            });
+                        refusal = Some((r.status, msg));
+                        break;
+                    }
+                    state.health.record_failure(w);
+                }
+                _ => state.health.record_failure(w),
+            }
+        }
+    }
+    if let Some((status, msg)) = refusal {
+        route.pending = None;
+        return PendingOutcome::Refused(status, msg);
+    }
+    let done = route.pending.as_ref().is_some_and(|p| p.applied.iter().all(|&a| a));
+    if done {
+        let p = route.pending.take().unwrap();
+        route.rows = p.first_gid + p.count;
+        PendingOutcome::Done
+    } else {
+        PendingOutcome::Incomplete
+    }
+}
+
+fn handle_cluster_add(state: &RouterState, name: &str, stream: &mut TcpStream, body: &[u8]) {
+    let (flat, d) = match parse_vectors_body(body) {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    let mut routes = state.routes.lock().unwrap();
+    let route = routes.entry(name.to_string()).or_insert_with(|| CollectionRoute {
+        shards: state.ring.shards_for(name, state.n_shards()),
+        dim: d,
+        rows: 0,
+        pending: None,
+    });
+    if route.dim != d {
+        let _ = respond_error(
+            stream,
+            400,
+            &format!("dimension mismatch on '{name}': collection is {}, rows are {d}", route.dim),
+        );
+        return;
+    }
+    // an earlier partially-applied batch must land before new rows may
+    // take their global ids
+    match complete_pending(state, name, route) {
+        PendingOutcome::Done => {}
+        PendingOutcome::Incomplete => {
+            let _ = respond_error(
+                stream,
+                503,
+                "a previous batch is still partially applied; retry later",
+            );
+            return;
+        }
+        PendingOutcome::Refused(status, msg) => {
+            let _ = respond_error(stream, status, &msg);
+            return;
+        }
+    }
+    let first_gid = route.rows;
+    let count = flat.len() / d;
+    let n_shards = route.shards.len();
+    route.pending = Some(PendingAdd {
+        first_gid,
+        count,
+        slices: merge::split_rows(&flat, d, n_shards, first_gid),
+        applied: vec![false; n_shards],
+    });
+    match complete_pending(state, name, route) {
+        PendingOutcome::Done => {
+            let ids = (first_gid..first_gid + count).map(|g| json::num(g as f64)).collect();
+            let body = json::obj(vec![
+                ("collection", json::s(name)),
+                ("ids", json::arr(ids)),
+                ("count", json::num(count as f64)),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        PendingOutcome::Incomplete => {
+            let _ = respond_error(
+                stream,
+                503,
+                "batch applied on some shards only; rows are masked until a retry completes it",
+            );
+        }
+        PendingOutcome::Refused(status, msg) => {
+            let _ = respond_error(stream, status, &msg);
+        }
+    }
+}
+
+// ------------------------------------------------------------------- query
+
+struct QuerySnapshot {
+    shards: Vec<usize>,
+    dim: usize,
+    rows: usize,
+    /// Pending rows already sitting on shard `s` above the acked
+    /// watermark (its scan `take` is bumped by this so masked rows can
+    /// never crowd acked candidates out of the budget).
+    extra: Vec<usize>,
+}
+
+fn query_snapshot(state: &RouterState, name: &str) -> Option<QuerySnapshot> {
+    let routes = state.routes.lock().unwrap();
+    let route = routes.get(name)?;
+    let n_shards = route.shards.len();
+    let mut extra = vec![0usize; n_shards];
+    if let Some(p) = &route.pending {
+        for s in 0..n_shards {
+            if p.applied[s] {
+                extra[s] = p.slices[s].len() / route.dim.max(1);
+            }
+        }
+    }
+    Some(QuerySnapshot { shards: route.shards.clone(), dim: route.dim, rows: route.rows, extra })
+}
+
+fn parse_query_body(body: &[u8]) -> Result<(Vec<f32>, usize, usize)> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("body is not UTF-8"))?;
+    let v = json::parse(text).map_err(|e| anyhow!("invalid JSON body: {e}"))?;
+    let q = parse_f32_array(
+        v.get("vector").ok_or_else(|| anyhow!("body must carry 'vector' (the router does not embed)"))?,
+        "vector",
+    )?;
+    let k = match v.get("k") {
+        None => 10,
+        Some(x) => x
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && (1.0..=1e9).contains(f))
+            .map(|f| f as usize)
+            .ok_or_else(|| anyhow!("'k' must be an integer in 1..=1e9"))?,
+    };
+    let rf = match v.get("rerank_factor") {
+        None => DEFAULT_RERANK_FACTOR,
+        Some(x) => x
+            .as_f64()
+            .filter(|f| f.fract() == 0.0 && (1.0..=1e9).contains(f))
+            .map(|f| f as usize)
+            .ok_or_else(|| anyhow!("'rerank_factor' must be an integer in 1..=1e9"))?,
+    };
+    Ok((q, k, rf))
+}
+
+/// Parse a worker's `{"id", "score"}` hit list (scan `candidates` or
+/// rerank `results`).
+fn parse_hits(v: &Value, key: &str) -> Option<Vec<SearchHit>> {
+    let arr = v.get(key)?.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for h in arr {
+        let id = h.get("id")?.as_f64()?;
+        let score = h.get("score")?.as_f64()?;
+        if id.fract() != 0.0 || id < 0.0 {
+            return None;
+        }
+        out.push(SearchHit { id: id as usize, score: score as f32 });
+    }
+    Some(out)
+}
+
+fn handle_cluster_query(state: &RouterState, name: &str, stream: &mut TcpStream, body: &[u8]) {
+    let (q, k, rf) = match parse_query_body(body) {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    let Some(snap) = query_snapshot(state, name) else {
+        let _ = respond_error(stream, 404, &format!("no collection '{name}' in the cluster"));
+        return;
+    };
+    if q.len() != snap.dim {
+        let _ = respond_error(
+            stream,
+            400,
+            &format!("dimension mismatch on '{name}': collection is {}, query is {}", snap.dim, q.len()),
+        );
+        return;
+    }
+    let n_shards = snap.shards.len();
+    let n = snap.rows;
+    let take = merge::global_take(k, rf, n);
+    let failed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    if n == 0 {
+        let _ = respond(stream, 200, "OK", &query_response(name, &[], false, &[]).to_json());
+        return;
+    }
+
+    // phase 1: scatter the estimated scan to every shard that holds rows
+    let q_json = json::arr(q.iter().map(|&x| json::num(x as f64)).collect()).to_json();
+    let gathered: Mutex<Vec<(usize, Vec<SearchHit>)>> = Mutex::new(Vec::new());
+    thread::scope(|sc| {
+        for s in 0..n_shards {
+            if merge::shard_rows(s, n_shards, n) == 0 {
+                continue; // no acked rows here: nothing to scan, not a failure
+            }
+            let w = snap.shards[s];
+            if !state.health.scatter_eligible(w) {
+                failed.lock().unwrap().push(s);
+                continue;
+            }
+            // the scan budget: the global `take`, plus this shard's
+            // masked pending rows so they cannot crowd out acked rows
+            let scan_take = take + snap.extra[s];
+            let gathered = &gathered;
+            let failed = &failed;
+            let q_json = &q_json;
+            sc.spawn(move || {
+                let body = format!("{{\"vector\":{q_json},\"take\":{scan_take}}}");
+                let path = format!("/v1/collections/{name}/scan");
+                match http_request_with(state.addr(w), "POST", &path, Some(&body), state.cfg.client)
+                {
+                    Ok(r) if r.status == 200 => {
+                        match r.json().ok().and_then(|v| parse_hits(&v, "candidates")) {
+                            Some(hits) => {
+                                state.health.record_success(w);
+                                gathered.lock().unwrap().push((s, hits));
+                            }
+                            None => failed.lock().unwrap().push(s),
+                        }
+                    }
+                    Ok(r) => {
+                        if r.status >= 500 {
+                            state.health.record_failure(w);
+                        }
+                        failed.lock().unwrap().push(s);
+                    }
+                    Err(_) => {
+                        state.health.record_failure(w);
+                        failed.lock().unwrap().push(s);
+                    }
+                }
+            });
+        }
+    });
+    let gathered = gathered.into_inner().unwrap();
+    if gathered.is_empty() {
+        let _ = respond_error(stream, 503, "no shard of the collection is reachable, retry later");
+        return;
+    }
+    let candidates = merge::select_candidates(&gathered, n_shards, take, n);
+
+    // phase 2: exact rerank of the selected rows on their owning shards
+    let mut by_shard: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for c in &candidates {
+        by_shard.entry(merge::shard_of(c.id, n_shards)).or_default().push(c.id);
+    }
+    let exact: Mutex<Vec<SearchHit>> = Mutex::new(Vec::new());
+    thread::scope(|sc| {
+        for (&s, gids) in &by_shard {
+            let w = snap.shards[s];
+            let exact = &exact;
+            let failed = &failed;
+            let q_json = &q_json;
+            sc.spawn(move || {
+                let ids: Vec<String> =
+                    gids.iter().map(|&g| merge::local_of(g, n_shards).to_string()).collect();
+                let body = format!("{{\"vector\":{q_json},\"ids\":[{}]}}", ids.join(","));
+                let path = format!("/v1/collections/{name}/rerank");
+                match http_request_with(state.addr(w), "POST", &path, Some(&body), state.cfg.client)
+                {
+                    Ok(r) if r.status == 200 => {
+                        match r.json().ok().and_then(|v| parse_hits(&v, "results")) {
+                            Some(hits) if hits.len() == gids.len() => {
+                                state.health.record_success(w);
+                                let mut ex = exact.lock().unwrap();
+                                // results come back in input order: zip to
+                                // recover the global ids
+                                for (g, h) in gids.iter().zip(hits) {
+                                    ex.push(SearchHit { id: *g, score: h.score });
+                                }
+                            }
+                            _ => failed.lock().unwrap().push(s),
+                        }
+                    }
+                    Ok(r) => {
+                        if r.status >= 500 {
+                            state.health.record_failure(w);
+                        }
+                        failed.lock().unwrap().push(s);
+                    }
+                    Err(_) => {
+                        state.health.record_failure(w);
+                        failed.lock().unwrap().push(s);
+                    }
+                }
+            });
+        }
+    });
+    let exact = exact.into_inner().unwrap();
+    let mut failed = failed.into_inner().unwrap();
+    failed.sort_unstable();
+    failed.dedup();
+    if exact.is_empty() && !candidates.is_empty() {
+        let _ = respond_error(stream, 503, "no shard of the collection is reachable, retry later");
+        return;
+    }
+    let hits = merge::merge_hits(exact, k);
+    let degraded = !failed.is_empty();
+    let _ = respond(stream, 200, "OK", &query_response(name, &hits, degraded, &failed).to_json());
+}
+
+fn query_response(name: &str, hits: &[SearchHit], degraded: bool, failed: &[usize]) -> Value {
+    json::obj(vec![
+        ("collection", json::s(name)),
+        ("results", hits_json(hits)),
+        // explicit, always present: a silent partial result is the one
+        // failure mode this response shape forbids
+        ("degraded", Value::Bool(degraded)),
+        ("failed_shards", json::arr(failed.iter().map(|&s| json::num(s as f64)).collect())),
+    ])
+}
+
+// ------------------------------------------------------------------- stats
+
+fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
+    let states = state.health.snapshot();
+    let n = states.len();
+    let per: Mutex<Vec<(usize, Option<Value>)>> = Mutex::new(Vec::new());
+    thread::scope(|sc| {
+        for w in 0..n {
+            if states[w] == WorkerState::Down {
+                per.lock().unwrap().push((w, None));
+                continue; // don't wait out timeouts on condemned workers
+            }
+            let per = &per;
+            sc.spawn(move || {
+                let got = http_request_with(state.addr(w), "GET", "/v1/stats", None, state.cfg.client)
+                    .ok()
+                    .filter(|r| r.status == 200)
+                    .and_then(|r| r.json().ok());
+                per.lock().unwrap().push((w, got));
+            });
+        }
+    });
+    let mut per = per.into_inner().unwrap();
+    per.sort_by_key(|&(w, _)| w);
+
+    let mut completions = 0.0f64;
+    let mut tokens = 0.0f64;
+    let mut queue_depth = 0.0f64;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut per_worker = Vec::with_capacity(n);
+    for (w, stats) in &per {
+        let mut fields = vec![
+            ("addr", json::s(state.addr(*w))),
+            ("state", json::s(states[*w].name())),
+            ("reachable", Value::Bool(stats.is_some())),
+        ];
+        if let Some(v) = stats {
+            let num = |key: &str| v.get(key).and_then(Value::as_f64).unwrap_or(0.0);
+            completions += num("completions");
+            tokens += num("tokens_generated");
+            let qd = num("queue_depth");
+            queue_depth += qd;
+            fields.push(("queue_depth", json::num(qd)));
+            fields.push(("completions", json::num(num("completions"))));
+            if let Some(window) = v.get("latencies_secs").and_then(Value::as_arr) {
+                latencies.extend(window.iter().filter_map(Value::as_f64));
+            }
+        }
+        per_worker.push(json::obj(fields));
+    }
+    let healthy = states.iter().filter(|&&s| s == WorkerState::Healthy).count();
+    // percentiles over the CONCATENATED windows, computed exactly once —
+    // a mean of per-worker p95s is not the fleet p95
+    let body = json::obj(vec![
+        ("workers", json::num(n as f64)),
+        ("workers_healthy", json::num(healthy as f64)),
+        ("completions", json::num(completions)),
+        ("tokens_generated", json::num(tokens)),
+        ("queue_depth", json::num(queue_depth)),
+        ("latency_samples", json::num(latencies.len() as f64)),
+        ("p50_latency_secs", json::num(util::percentile(&latencies, 50.0))),
+        ("p95_latency_secs", json::num(util::percentile(&latencies, 95.0))),
+        ("per_worker", json::arr(per_worker)),
+    ]);
+    let _ = respond(stream, 200, "OK", &body.to_json());
+}
+
+fn handle_cluster_collections(state: &RouterState, stream: &mut TcpStream) {
+    let routes = state.routes.lock().unwrap();
+    let collections = json::arr(
+        routes
+            .iter()
+            .map(|(name, r)| {
+                json::obj(vec![
+                    ("name", json::s(name)),
+                    ("rows", json::num(r.rows as f64)),
+                    ("dim", json::num(r.dim as f64)),
+                    ("shards", json::arr(r.shards.iter().map(|&w| json::num(w as f64)).collect())),
+                    (
+                        "workers",
+                        json::arr(r.shards.iter().map(|&w| json::s(state.addr(w))).collect()),
+                    ),
+                    ("pending", Value::Bool(r.pending.is_some())),
+                ])
+            })
+            .collect(),
+    );
+    let body = json::obj(vec![("collections", collections)]);
+    let _ = respond(stream, 200, "OK", &body.to_json());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_safe() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.client.connect_timeout.is_some(), "RPCs must never hang on connect");
+        assert!(cfg.client.read_timeout.is_some(), "RPCs must never hang on read");
+        assert!(Router::bind("127.0.0.1:0", cfg).is_err(), "no workers must refuse to bind");
+    }
+
+    #[test]
+    fn parse_vectors_body_validates() {
+        let ok = parse_vectors_body(br#"{"vectors": [[1.0, 2.0], [3.0, 4.0]]}"#).unwrap();
+        assert_eq!(ok, (vec![1.0, 2.0, 3.0, 4.0], 2));
+        assert!(parse_vectors_body(br#"{"vectors": []}"#).is_err());
+        assert!(parse_vectors_body(br#"{"vectors": [[1.0], [1.0, 2.0]]}"#).is_err());
+        assert!(parse_vectors_body(br#"{"texts": ["a"]}"#).is_err(), "router cannot embed");
+        assert!(parse_vectors_body(b"nonsense").is_err());
+    }
+
+    #[test]
+    fn parse_query_body_defaults_and_bounds() {
+        let (q, k, rf) = parse_query_body(br#"{"vector": [0.5, 1.5]}"#).unwrap();
+        assert_eq!((q, k, rf), (vec![0.5, 1.5], 10, DEFAULT_RERANK_FACTOR));
+        let (_, k, rf) =
+            parse_query_body(br#"{"vector": [1.0], "k": 3, "rerank_factor": 7}"#).unwrap();
+        assert_eq!((k, rf), (3, 7));
+        assert!(parse_query_body(br#"{"vector": [1.0], "k": 0}"#).is_err());
+        assert!(parse_query_body(br#"{"k": 3}"#).is_err(), "vector is required");
+    }
+
+    #[test]
+    fn parse_hits_round_trips_scores() {
+        let v = json::parse(r#"{"candidates": [{"id": 3, "score": 0.25}, {"id": 0, "score": -1.5}]}"#)
+            .unwrap();
+        let hits = parse_hits(&v, "candidates").unwrap();
+        assert_eq!(hits.len(), 2);
+        assert_eq!((hits[0].id, hits[0].score), (3, 0.25));
+        assert_eq!((hits[1].id, hits[1].score), (0, -1.5));
+        let bad = json::parse(r#"{"candidates": [{"id": -1, "score": 0.0}]}"#).unwrap();
+        assert!(parse_hits(&bad, "candidates").is_none());
+    }
+}

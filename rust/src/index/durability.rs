@@ -493,12 +493,41 @@ impl DurableStore {
         d: usize,
         threads: usize,
     ) -> Result<(usize, usize), IndexError> {
+        self.add_with(name, vecs, d, threads, None)
+    }
+
+    /// [`DurableStore::add`] guarded by an expected first row id (see
+    /// [`VectorStore::add_expect`]): refuses with
+    /// [`IndexError::Conflict`] — before any WAL write — when the
+    /// collection's row count moved. The position check runs inside the
+    /// same store-write critical section as the add (and, on durable
+    /// stores, under the engine lock that serializes acks), so the
+    /// guard cannot race a concurrent add.
+    pub fn add_expect(
+        &self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        threads: usize,
+        expect_first_id: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        self.add_with(name, vecs, d, threads, Some(expect_first_id))
+    }
+
+    fn add_with(
+        &self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        threads: usize,
+        expect_first_id: Option<usize>,
+    ) -> Result<(usize, usize), IndexError> {
+        let apply = |store: &mut VectorStore| match expect_first_id {
+            Some(e) => store.add_expect(name, vecs, d, threads, e),
+            None => store.add(name, vecs, d, threads),
+        };
         let Some(engine_mx) = &self.engine else {
-            return self
-                .store
-                .write()
-                .expect("index store lock poisoned")
-                .add(name, vecs, d, threads);
+            return apply(&mut self.store.write().expect("index store lock poisoned"));
         };
         let mut engine = engine_mx.lock().expect("index engine lock poisoned");
         if engine.read_only {
@@ -508,11 +537,7 @@ impl DurableStore {
                     .into(),
             ));
         }
-        let out = self
-            .store
-            .write()
-            .expect("index store lock poisoned")
-            .add(name, vecs, d, threads)?;
+        let out = apply(&mut self.store.write().expect("index store lock poisoned"))?;
         let rec = WalRecord {
             seq: engine.next_seq,
             name: name.to_string(),
@@ -685,6 +710,35 @@ impl DurableStore {
             .read()
             .expect("index store lock poisoned")
             .query(name, q, k, rerank_factor, threads)
+    }
+
+    /// Phase-1 shard scan (see [`VectorStore::scan_candidates`]); store
+    /// read lock only, like [`DurableStore::query`].
+    pub fn scan_candidates(
+        &self,
+        name: &str,
+        q: &[f32],
+        take: usize,
+        threads: usize,
+    ) -> Result<(usize, Vec<SearchHit>), IndexError> {
+        self.store
+            .read()
+            .expect("index store lock poisoned")
+            .scan_candidates(name, q, take, threads)
+    }
+
+    /// Phase-2 shard rerank (see [`VectorStore::exact_scores`]); store
+    /// read lock only.
+    pub fn exact_scores(
+        &self,
+        name: &str,
+        q: &[f32],
+        ids: &[usize],
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        self.store
+            .read()
+            .expect("index store lock poisoned")
+            .exact_scores(name, q, ids)
     }
 
     /// Hand back the inner [`Io`] (tests recover from what survived a

@@ -148,6 +148,19 @@ pub enum IndexError {
     /// (with `Retry-After` — but a retry is refused, never applied
     /// twice, so there is no duplicate-on-retry hazard).
     ReadOnly(String),
+    /// An add carried `expect_first_id` and the collection's row count
+    /// did not match: the caller's view of the collection is stale (or
+    /// the add was already applied — the cluster router's exactly-once
+    /// retry reads a conflict on its second attempt as success). The
+    /// HTTP layer maps it to 409; nothing mutates.
+    Conflict {
+        /// The collection whose row count was checked.
+        collection: String,
+        /// Row id the caller expected the first appended row to get.
+        expected_first_id: usize,
+        /// Rows actually stored (the id the first row would get).
+        actual_rows: usize,
+    },
 }
 
 impl std::fmt::Display for IndexError {
@@ -174,6 +187,12 @@ impl std::fmt::Display for IndexError {
             IndexError::ReadOnly(msg) => {
                 write!(f, "index store is read-only after a durability failure: {msg}")
             }
+            IndexError::Conflict { collection, expected_first_id, actual_rows } => write!(
+                f,
+                "add conflict on collection '{collection}': expected the first \
+                 appended row to get id {expected_first_id}, but the collection \
+                 holds {actual_rows} rows"
+            ),
         }
     }
 }
@@ -616,18 +635,36 @@ impl Collection {
         if n == 0 {
             return Ok(Vec::new());
         }
-        // phase 1: Alg.-3 estimates straight from the packed codes,
-        // scatter-gathered across sealed segments then the head. The
-        // estimator is per-row, so scanning each part into its global
-        // offset of `est` is bit-identical to one monolithic scan —
-        // the merge order is fixed (seal order, head last), keeping
-        // results deterministic regardless of segment boundaries.
+        let est = self.scan_est(&q_rot, threads);
+        let take = (rerank_factor.max(1).saturating_mul(k)).min(n);
+        let candidates = top_indices(&est, take);
+        // phase 2: exact rerank — the only place residual rows are read
+        let mut hits = self.rerank(q, &candidates);
+        hits.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        hits.truncate(k);
+        Ok(hits)
+    }
+
+    /// Phase-1 estimates for every stored row: Alg.-3 scores straight
+    /// from the packed codes, scatter-gathered across sealed segments
+    /// then the head. The estimator is per-row, so scanning each part
+    /// into its global offset of `est` is bit-identical to one
+    /// monolithic scan — the merge order is fixed (seal order, head
+    /// last), keeping results deterministic regardless of segment
+    /// boundaries.
+    fn scan_est(&self, q_rot: &[f32], threads: usize) -> Vec<f32> {
+        let n = self.len();
         let mut est = vec![0f32; n];
         let mut off = 0usize;
         for s in &self.sealed {
             let rows = s.rows();
             kernels::scan_scores_q(
-                &q_rot,
+                q_rot,
                 &s.codes,
                 self.bits,
                 0,
@@ -641,7 +678,7 @@ impl Collection {
         let head = self.r.len();
         if head > 0 {
             kernels::scan_scores_q(
-                &q_rot,
+                q_rot,
                 &self.codes,
                 self.bits,
                 0,
@@ -651,14 +688,19 @@ impl Collection {
                 &mut est[off..off + head],
             );
         }
-        let take = (rerank_factor.max(1).saturating_mul(k)).min(n);
-        let candidates = top_indices(&est, take);
-        // phase 2: exact rerank — the only place residual rows are read
+        est
+    }
+
+    /// Exact-rerank `candidates` (row ids) against `q`: metric-adjust
+    /// the query, read each candidate's residual row (counted by
+    /// [`rerank_row_reads`]), and score it exactly. Hits come back in
+    /// candidate order, unsorted.
+    fn rerank(&self, q: &[f32], candidates: &[usize]) -> Vec<SearchHit> {
         let mut metric_q = q.to_vec();
         if self.metric == Metric::Cosine {
             l2_normalize(&mut metric_q);
         }
-        let mut hits: Vec<SearchHit> = candidates
+        candidates
             .iter()
             .map(|&i| {
                 RERANK_ROW_READS.fetch_add(1, Ordering::Relaxed);
@@ -669,15 +711,60 @@ impl Collection {
                 }
                 SearchHit { id: i, score: dp }
             })
-            .collect();
-        hits.sort_by(|a, b| {
-            b.score
-                .partial_cmp(&a.score)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.id.cmp(&b.id))
-        });
-        hits.truncate(k);
-        Ok(hits)
+            .collect()
+    }
+
+    /// Phase 1 alone, for a cluster shard: scan every stored row and
+    /// return the local top-`take` **estimated** candidates (Alg.-3
+    /// scores, not exact), ordered like [`top_indices`] — descending
+    /// est, ties toward the lower id. `take` comes from the *global*
+    /// row count (`rerank_factor * k` clamped by the router), so a
+    /// shard's local top-`take` provably contains every local member
+    /// of the global top-`take`: if a local row were missing, `take`
+    /// better-ranked local rows would outrank it globally too. The
+    /// scan reads zero residual rows.
+    pub fn scan_candidates(
+        &self,
+        q: &[f32],
+        take: usize,
+        threads: usize,
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        if take == 0 {
+            return Err(IndexError::BadQuery("take must be >= 1".into()));
+        }
+        let q_rot = self.prepare_query(q)?;
+        if self.len() == 0 {
+            return Ok(Vec::new());
+        }
+        let est = self.scan_est(&q_rot, threads);
+        Ok(top_indices(&est, take)
+            .into_iter()
+            .map(|i| SearchHit { id: i, score: est[i] })
+            .collect())
+    }
+
+    /// Phase 2 alone, for a cluster shard: exact scores of the given
+    /// row ids, in input order (the router merges by score afterwards).
+    /// Same metric handling and residual-row accounting as the rerank
+    /// inside [`Collection::query`] — a distributed two-phase query
+    /// that feeds this the router-selected candidates reranks exactly
+    /// the rows a single-node query would. Unknown ids are a caller
+    /// error (the router only asks for ids a shard reported).
+    pub fn exact_scores(&self, q: &[f32], ids: &[usize]) -> Result<Vec<SearchHit>, IndexError> {
+        if q.len() != self.d {
+            return Err(IndexError::DimMismatch {
+                collection: self.name.clone(),
+                expected: self.d,
+                got: q.len(),
+            });
+        }
+        let n = self.len();
+        if let Some(&bad) = ids.iter().find(|&&i| i >= n) {
+            return Err(IndexError::BadQuery(format!(
+                "rerank id {bad} outside the collection's {n} rows"
+            )));
+        }
+        Ok(self.rerank(q, ids))
     }
 
     /// Brute-force exact top-k over the residual f32 store — the
@@ -1000,6 +1087,33 @@ impl VectorStore {
         Ok((first, rows))
     }
 
+    /// [`VectorStore::add`] guarded by an expected first row id: the add
+    /// applies only when the collection currently holds exactly
+    /// `expect_first_id` rows (for a missing collection that count is
+    /// 0), else it refuses with [`IndexError::Conflict`] and mutates
+    /// nothing. The check and the add happen under the caller's single
+    /// `&mut self` — one critical section — which is what makes a
+    /// cluster router's retry-after-ambiguous-failure exactly-once: a
+    /// conflict on the retry means the first attempt already applied.
+    pub fn add_expect(
+        &mut self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        threads: usize,
+        expect_first_id: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        let actual_rows = self.collections.get(name).map(Collection::len).unwrap_or(0);
+        if actual_rows != expect_first_id {
+            return Err(IndexError::Conflict {
+                collection: name.to_string(),
+                expected_first_id: expect_first_id,
+                actual_rows,
+            });
+        }
+        self.add(name, vecs, d, threads)
+    }
+
     /// Two-phase top-k against one collection (see [`Collection::query`]).
     pub fn query(
         &self,
@@ -1010,6 +1124,30 @@ impl VectorStore {
         threads: usize,
     ) -> Result<Vec<SearchHit>, IndexError> {
         self.get(name)?.query(q, k, rerank_factor, threads)
+    }
+
+    /// Phase-1 shard scan (see [`Collection::scan_candidates`]):
+    /// `(local_rows, local top-take estimated candidates)`.
+    pub fn scan_candidates(
+        &self,
+        name: &str,
+        q: &[f32],
+        take: usize,
+        threads: usize,
+    ) -> Result<(usize, Vec<SearchHit>), IndexError> {
+        let c = self.get(name)?;
+        Ok((c.len(), c.scan_candidates(q, take, threads)?))
+    }
+
+    /// Phase-2 shard rerank (see [`Collection::exact_scores`]): exact
+    /// scores of `ids`, input order.
+    pub fn exact_scores(
+        &self,
+        name: &str,
+        q: &[f32],
+        ids: &[usize],
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        self.get(name)?.exact_scores(q, ids)
     }
 
     /// Measured recall sensitivity of one collection: recall@k of the
@@ -1539,6 +1677,73 @@ mod tests {
         assert_eq!((fc, fr), (mono.codes.clone(), mono.r.clone()));
         let q = Rng::new(5).gaussian_vec(d);
         assert_eq!(seg.query(&q, 8, 4, 1).unwrap(), mono.query(&q, 8, 4, 1).unwrap());
+    }
+
+    #[test]
+    fn scan_candidates_and_exact_scores_compose_to_query() {
+        // the cluster decomposition over ONE shard: phase-1 candidates
+        // (est scores) -> exact rerank -> (score desc, id asc) merge
+        // must reproduce Collection::query bit for bit
+        let (n, d, k) = (96usize, 24usize, 7usize);
+        let mut store = uniform_store(5);
+        store.add("c", &randvecs(n, d, 91), d, 1).unwrap();
+        let q = Rng::new(92).gaussian_vec(d);
+        let take = DEFAULT_RERANK_FACTOR * k;
+        let (rows, cands) = store.scan_candidates("c", &q, take, 1).unwrap();
+        assert_eq!(rows, n);
+        assert_eq!(cands.len(), take.min(n));
+        // candidates are (est desc, id asc) like top_indices
+        for w in cands.windows(2) {
+            assert!(w[0].score > w[1].score || (w[0].score == w[1].score && w[0].id < w[1].id));
+        }
+        let ids: Vec<usize> = cands.iter().map(|h| h.id).collect();
+        let mut hits = store.exact_scores("c", &q, &ids).unwrap();
+        hits.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id.cmp(&b.id))
+        });
+        hits.truncate(k);
+        assert_eq!(hits, store.query("c", &q, k, DEFAULT_RERANK_FACTOR, 1).unwrap());
+        // typed edges
+        assert!(matches!(
+            store.scan_candidates("c", &q, 0, 1),
+            Err(IndexError::BadQuery(_))
+        ));
+        assert!(matches!(
+            store.exact_scores("c", &q, &[n]),
+            Err(IndexError::BadQuery(_))
+        ));
+        assert!(matches!(
+            store.exact_scores("c", &vec![0.0; d + 1], &[0]),
+            Err(IndexError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            store.scan_candidates("missing", &q, take, 1),
+            Err(IndexError::NoSuchCollection(_))
+        ));
+    }
+
+    #[test]
+    fn add_expect_guards_row_position() {
+        let mut store = uniform_store(8);
+        let d = 8usize;
+        // a fresh collection counts as 0 rows for the guard
+        assert!(matches!(
+            store.add_expect("g", &randvecs(2, d, 1), d, 1, 3),
+            Err(IndexError::Conflict { expected_first_id: 3, actual_rows: 0, .. })
+        ));
+        assert_eq!(store.rows(), 0, "refused add must not mutate");
+        store.add_expect("g", &randvecs(2, d, 1), d, 1, 0).unwrap();
+        store.add_expect("g", &randvecs(3, d, 2), d, 1, 2).unwrap();
+        assert_eq!(store.rows(), 5);
+        // a replayed add (same expect) conflicts — the exactly-once seam
+        let err = store.add_expect("g", &randvecs(3, d, 2), d, 1, 2).unwrap_err();
+        assert!(matches!(
+            err,
+            IndexError::Conflict { expected_first_id: 2, actual_rows: 5, .. }
+        ));
     }
 
     #[test]

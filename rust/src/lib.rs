@@ -30,7 +30,9 @@
 //!   estimated-scan + exact-rerank two-phase query, and pick
 //!   per-collection bit-widths with AllocateBits under a byte budget —
 //!   served over HTTP as `/v1/embed` + `/v1/collections/...`
-//!   ([`serve::index::IndexServer`]).
+//!   ([`serve::index::IndexServer`]). For horizontal scale-out, the
+//!   [`cluster`] module runs N such nodes behind a consistent-hashing
+//!   router with bit-identical scatter-gather queries and fleet health.
 //!
 //! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
 //! examples under `examples/`.
@@ -40,6 +42,7 @@ pub mod baselines;
 pub mod benchlib;
 pub mod calib;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod data;
 pub mod eval;

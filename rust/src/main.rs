@@ -24,6 +24,15 @@
 //!                                          stalled peers get a typed 408
 //!   index    [--bits N | --budget BYTES]   vector-index demo: embed docs, add,
 //!            [--docs N --k K --rerank M]   self-retrieve, report recall + bytes
+//!   worker   --http PORT [serve flags]     cluster worker: `serve --http` that
+//!            [--drain-grace-ms MS]         drains gracefully on stdin EOF —
+//!                                          healthz flips to "draining", the router
+//!                                          routes around it, in-flight work finishes
+//!   router   --workers a:p,b:p[,...]       cluster router: consistent-hash
+//!            [--http PORT --shards N]      placement, scatter-gather queries,
+//!            [--probe-ms MS --down-after N] fleet health + stats; see
+//!            [--connect-timeout-ms MS]     ARCHITECTURE §Cluster
+//!            [--rpc-read-timeout-ms MS]
 
 use anyhow::{bail, Result};
 
@@ -44,13 +53,15 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, false),
+        "worker" => cmd_serve(&args, true),
+        "router" => cmd_router(&args),
         "index" => cmd_index(&args),
         "table" => cmd_table(&args),
         "help" | _ => {
             println!(
                 "raana — RaanA post-training quantization (paper reproduction)\n\
-                 usage: raana <info|train|quantize|eval|serve|index> [--options]\n\
+                 usage: raana <info|train|quantize|eval|serve|index|worker|router> [--options]\n\
                  see README.md; tables are regenerated via `cargo bench`"
             );
             Ok(())
@@ -279,22 +290,30 @@ fn kv_from_args(args: &Args) -> Result<(raana::kvq::KvqPolicy, usize)> {
     Ok((policy, budget))
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// `raana serve` and `raana worker` — a worker is a `serve --http` node
+/// that publishes a drain signal on stdin EOF (see [`serve_http`]).
+fn cmd_serve(args: &Args, worker_mode: bool) -> Result<()> {
     let model = args.opt_or("model", "tiny");
     let n_req = args.opt_usize("requests", 16)?;
     let new_tokens = args.opt_usize("tokens", 16)?;
+    // A worker is HTTP-only: default to an ephemeral port when --http is
+    // absent (the bound address is printed).
+    let http_opt: Option<String> = args
+        .opt("http")
+        .map(str::to_string)
+        .or_else(|| worker_mode.then(|| "0".to_string()));
     // Bounded admission queue: HTTP runs default to 64 (backpressure as
     // 429), in-process demo runs stay unbounded as before.
     let (kv, kv_budget_bytes) = kv_from_args(args)?;
     let cfg = raana::serve::ServeConfig {
-        max_queue: args.opt_usize("max-queue", if args.opt("http").is_some() { 64 } else { 0 })?,
+        max_queue: args.opt_usize("max-queue", if http_opt.is_some() { 64 } else { 0 })?,
         kv,
         kv_budget_bytes,
     };
 
     // Index serving rides along on the HTTP front-end unless opted out:
     // the same manifest/params/packed triple backs the embed path.
-    let want_index = args.opt("http").is_some() && !args.flag("no-index");
+    let want_index = http_opt.is_some() && !args.flag("no-index");
 
     // Artifact-free path: serve a native-initialized model straight from
     // packed codes (demonstrates the request path without `make artifacts`).
@@ -307,10 +326,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         build_artifact_server(args, model, cfg, want_index)?
     };
-    match args.opt("http") {
-        Some(port) => serve_http(server, index, port, args),
+    match http_opt {
+        Some(port) => serve_http(server, index, &port, args, worker_mode),
         None => run_requests(server, n_req, new_tokens, batch),
     }
+}
+
+/// `raana router` — front a set of running workers (see
+/// `rust/src/cluster/`): consistent-hash placement, scatter-gather
+/// queries, generate load-balancing, fleet health and stats.
+fn cmd_router(args: &Args) -> Result<()> {
+    use raana::cluster::{Router, RouterConfig, DEFAULT_DOWN_AFTER};
+    let workers: Vec<String> = args
+        .opt("workers")
+        .unwrap_or("")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if workers.is_empty() {
+        bail!("--workers host:port[,host:port...] is required (start them with `raana worker`)");
+    }
+    let port = args.opt_or("http", "0");
+    let addr = if port.contains(':') { port.to_string() } else { format!("127.0.0.1:{port}") };
+    let mut client = raana::net::ClientConfig::timeout_ms(raana::cluster::DEFAULT_RPC_TIMEOUT_MS);
+    let connect_ms = args.opt_usize("connect-timeout-ms", 0)? as u64;
+    if connect_ms > 0 {
+        client.connect_timeout = Some(std::time::Duration::from_millis(connect_ms));
+    }
+    let read_ms = args.opt_usize("rpc-read-timeout-ms", 0)? as u64;
+    if read_ms > 0 {
+        client.read_timeout = Some(std::time::Duration::from_millis(read_ms));
+    }
+    let n_workers = workers.len();
+    let router = Router::bind(
+        &addr,
+        RouterConfig {
+            workers,
+            shards: args.opt_usize("shards", 0)?,
+            http_workers: args.opt_usize("http-workers", 0)?,
+            probe_interval_ms: args.opt_usize("probe-ms", 0)? as u64,
+            down_after: args.opt_usize("down-after", DEFAULT_DOWN_AFTER as usize)? as u32,
+            client,
+            read_timeout_ms: args.opt_usize("http-read-timeout-ms", 0)? as u64,
+        },
+    )?;
+    let bound = router.local_addr();
+    println!(
+        "router on http://{bound} fronting {n_workers} workers  \
+         (close stdin / Ctrl-D for graceful drain)"
+    );
+    println!("  curl -s http://{bound}/healthz");
+    println!("  curl -s http://{bound}/v1/stats");
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match std::io::stdin().read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    info!("stdin closed — draining router connections");
+    router.shutdown()
 }
 
 /// Build the optional index server from clones of the serving triple
@@ -411,15 +488,27 @@ fn build_native_demo_server(
 /// Front the batching server with the HTTP layer until stdin closes, then
 /// drain gracefully (SIGTERM-style: stop accepting, finish in-flight
 /// work, collect final stats).
+///
+/// In `worker_mode` (the `raana worker` subcommand) stdin EOF first
+/// flips the healthz drain signal and holds the node fully serving for
+/// `--drain-grace-ms` (default 1000): the cluster router observes
+/// `"state":"draining"` on its next probe and stops sending *new*
+/// generate traffic, while requests already in flight — and scatter-
+/// gather reads, which need this node's shards — complete normally.
+/// Only then does the listener close. That ordering is what makes a
+/// drain lose no requests.
 fn serve_http(
     server: raana::serve::Server,
     index: Option<raana::serve::index::IndexServer>,
     port: &str,
     args: &Args,
+    worker_mode: bool,
 ) -> Result<()> {
     let server = std::sync::Arc::new(server);
     let index = index.map(std::sync::Arc::new);
     let addr = if port.contains(':') { port.to_string() } else { format!("127.0.0.1:{port}") };
+    let drain = worker_mode
+        .then(|| std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false)));
     let http = raana::net::HttpServer::bind_with_index(
         std::sync::Arc::clone(&server),
         index.clone(),
@@ -428,6 +517,7 @@ fn serve_http(
             workers: args.opt_usize("http-workers", 0)?,
             max_new_tokens_cap: args.opt_usize("http-max-tokens", 0)?,
             read_timeout_ms: args.opt_usize("http-read-timeout-ms", 0)? as u64,
+            drain: drain.clone(),
         },
     )?;
     // Background compactor (durable stores only): merges small sealed
@@ -464,6 +554,12 @@ fn serve_http(
             Ok(0) | Err(_) => break,
             Ok(_) => {}
         }
+    }
+    if let Some(d) = &drain {
+        d.store(true, std::sync::atomic::Ordering::SeqCst);
+        let grace = args.opt_usize("drain-grace-ms", 1000)? as u64;
+        info!("stdin closed — draining (healthz now answers \"draining\", {grace} ms grace)");
+        std::thread::sleep(std::time::Duration::from_millis(grace));
     }
     info!("stdin closed — draining HTTP connections");
     http.shutdown()?;

@@ -19,7 +19,10 @@
 //!   `"done": true` and the full token list. A full admission queue maps
 //!   to **429**, a shut-down server to **503**, an unservable request
 //!   (e.g. out-of-vocab prompt token) to **400**.
-//! * `GET /healthz` — liveness: `{"ok":true,"running":bool}`.
+//! * `GET /healthz` — liveness: `{"ok":true,"running":bool,"state":
+//!   "ok"|"draining"}`. `"draining"` is published when the process is
+//!   winding down ([`HttpConfig::drain`]): the node still answers
+//!   everything, but a cluster router stops sending it *new* work.
 //! * `GET /v1/stats` — live [`ServerStats`] snapshot, readable **while
 //!   generation is in flight**. Includes the admission-queue depth
 //!   (republished per batcher round) and the KV-cache economics:
@@ -41,10 +44,27 @@
 //!   ...]}`, or `{"texts": [...]}` / `{"tokens": [[ints], ...]}` to
 //!   embed server-side; answers `{"collection", "ids", "count"}`. A
 //!   budget-policy store that cannot fit the rows refuses with **507**.
+//!   An optional `"expect_first_id": N` makes the add conditional: if
+//!   the collection does not hold exactly `N` rows the request is
+//!   refused with **409** and nothing is applied — the exactly-once
+//!   handshake a retrying cluster router needs (a 409 on a retry means
+//!   the first attempt landed).
 //! * `POST /v1/collections/{name}/query` — body `{"vector": [f32...]}`
 //!   (or `"text"` / `"tokens"`), optional `"k"` (default 10) and
 //!   `"rerank_factor"` (default 4); answers `{"results": [{"id",
 //!   "score"}, ...]}` — estimated scan over packed codes, exact rerank.
+//! * `POST /v1/collections/{name}/scan` — phase one of a distributed
+//!   query: body `{"vector": [f32...], "take": N}`; answers
+//!   `{"collection", "rows", "take", "candidates": [{"id","score"},
+//!   ...]}` with the top-`take` rows by **estimated** score, ordered
+//!   (score desc, id asc) exactly like the internal candidate
+//!   selection. `rows` is this node's local row count.
+//! * `POST /v1/collections/{name}/rerank` — phase two: body
+//!   `{"vector": [f32...], "ids": [ints]}`; answers `{"collection",
+//!   "results"}` with **exact** scores for precisely those rows, in
+//!   input order. A cluster router scans every shard, merges the
+//!   estimated candidates, and reranks the winners on their owning
+//!   shards — reproducing a single node's query bit-for-bit.
 //! * `GET /v1/collections` — per-collection bits/bytes/row counts plus
 //!   the index serving counters.
 //!
@@ -56,7 +76,7 @@
 //! # Error shape
 //!
 //! Every error response on every path —
-//! 400/404/405/408/413/429/500/503/507 — is the same single-key JSON
+//! 400/404/405/408/409/413/429/500/503/507 — is the same single-key JSON
 //! object `{"error": "..."}` (loopback-tested across all of them),
 //! every 405 names the allowed methods in an `Allow:` header per RFC
 //! 9110, and the transient refusals (429/503) advertise `Retry-After:
@@ -168,11 +188,18 @@ pub struct HttpConfig {
     /// typed **408** and is closed. Tests shrink it to exercise the
     /// guard without waiting out the production default.
     pub read_timeout_ms: u64,
+    /// Optional drain flag for cluster workers: while set, `GET
+    /// /healthz` answers `"state":"draining"` (instead of `"ok"`) so a
+    /// router's next probe routes new generate traffic elsewhere;
+    /// everything else keeps serving — in-flight and already-routed
+    /// requests finish normally, which is what makes a drain lose no
+    /// requests. `None` (the default) always reports `"ok"`.
+    pub drain: Option<Arc<AtomicBool>>,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { workers: 0, max_new_tokens_cap: 0, read_timeout_ms: 0 }
+        HttpConfig { workers: 0, max_new_tokens_cap: 0, read_timeout_ms: 0, drain: None }
     }
 }
 
@@ -238,6 +265,7 @@ impl HttpServer {
         } else {
             Duration::from_millis(cfg.read_timeout_ms)
         };
+        let drain = cfg.drain.clone();
         let accept = thread::spawn(move || {
             let pool = Pool::new(workers);
             // Connection-level backpressure: the pool's submission channel
@@ -258,8 +286,17 @@ impl HttpServer {
                             let srv = Arc::clone(&server);
                             let ix = index.clone();
                             let act = Arc::clone(&active);
+                            let dr = drain.clone();
                             pool.submit(move || {
-                                handle_connection(&srv, ix.as_deref(), conn, cap, read_timeout, false);
+                                handle_connection(
+                                    &srv,
+                                    ix.as_deref(),
+                                    dr.as_deref(),
+                                    conn,
+                                    cap,
+                                    read_timeout,
+                                    false,
+                                );
                                 act.fetch_sub(1, Ordering::SeqCst);
                             });
                         } else if overflow2.load(Ordering::SeqCst) < OVERFLOW_HANDLERS_MAX {
@@ -267,6 +304,7 @@ impl HttpServer {
                             let srv = Arc::clone(&server);
                             let ix = index.clone();
                             let ovf = Arc::clone(&overflow2);
+                            let dr = drain.clone();
                             // detached: lifetime bounded by the socket
                             // read/write timeouts, work bounded to cheap
                             // endpoints + one 503. The Arc<Server> clone
@@ -274,7 +312,15 @@ impl HttpServer {
                             // shutdown uses the counter as the fence for
                             // "no overflow thread still holds the server".
                             thread::spawn(move || {
-                                handle_connection(&srv, ix.as_deref(), conn, cap, read_timeout, true);
+                                handle_connection(
+                                    &srv,
+                                    ix.as_deref(),
+                                    dr.as_deref(),
+                                    conn,
+                                    cap,
+                                    read_timeout,
+                                    true,
+                                );
                                 drop(srv);
                                 drop(ix);
                                 ovf.fetch_sub(1, Ordering::SeqCst);
@@ -344,18 +390,20 @@ impl Drop for HttpServer {
 
 // ------------------------------------------------------------ request path
 
-struct HttpRequest {
-    method: String,
-    path: String,
-    headers: Vec<(String, String)>,
-    body: Vec<u8>,
+/// One parsed request, server side. `pub(crate)` so the cluster router
+/// ([`crate::cluster`]) can serve its own routes on this same stack.
+pub(crate) struct HttpRequest {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) headers: Vec<(String, String)>,
+    pub(crate) body: Vec<u8>,
 }
 
 /// Request-read failure with the HTTP status it maps to (400 for
 /// malformed/truncated requests, 413 for over-cap bodies).
-struct HttpError {
-    status: u16,
-    msg: String,
+pub(crate) struct HttpError {
+    pub(crate) status: u16,
+    pub(crate) msg: String,
 }
 
 impl HttpError {
@@ -364,7 +412,7 @@ impl HttpError {
     }
 }
 
-fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+pub(crate) fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
     headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
 }
 
@@ -402,7 +450,7 @@ fn head_error(e: anyhow::Error) -> HttpError {
     HttpError::bad(e)
 }
 
-fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
+pub(crate) fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
     let mut reader =
         BufReader::new(stream.try_clone().map_err(|e| HttpError::bad(format!("{e}")))?);
     let mut total = 0usize;
@@ -477,6 +525,7 @@ fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError> {
 fn handle_connection(
     server: &Server,
     index: Option<&IndexServer>,
+    drain: Option<&AtomicBool>,
     mut stream: TcpStream,
     cap: usize,
     read_timeout: Duration,
@@ -514,9 +563,11 @@ fn handle_connection(
     match req.path.as_str() {
         "/healthz" => match method {
             "GET" => {
+                let draining = drain.is_some_and(|d| d.load(Ordering::SeqCst));
                 let body = json::obj(vec![
                     ("ok", Value::Bool(true)),
                     ("running", Value::Bool(server.is_running())),
+                    ("state", json::s(if draining { "draining" } else { "ok" })),
                 ]);
                 let _ = respond(&mut stream, 200, "OK", &body.to_json());
             }
@@ -565,7 +616,9 @@ fn handle_connection(
             let rest = &p["/v1/collections/".len()..];
             match (rest.split_once('/'), method) {
                 // same 404-beats-503 rule as /v1/embed
-                (Some((_, "add" | "query")), "POST") if overflow && index.is_some() => {
+                (Some((_, "add" | "query" | "scan" | "rerank")), "POST")
+                    if overflow && index.is_some() =>
+                {
                     let _ = respond_error(
                         &mut stream,
                         503,
@@ -578,7 +631,13 @@ fn handle_connection(
                 (Some((name, "query")), "POST") => {
                     handle_index_query(index, name, &mut stream, &req.body)
                 }
-                (Some((_, "add" | "query")), m) => {
+                (Some((name, "scan")), "POST") => {
+                    handle_index_scan(index, name, &mut stream, &req.body)
+                }
+                (Some((name, "rerank")), "POST") => {
+                    handle_index_rerank(index, name, &mut stream, &req.body)
+                }
+                (Some((_, "add" | "query" | "scan" | "rerank")), m) => {
                     let _ = respond_method_not_allowed(&mut stream, m, "POST");
                 }
                 _ => {
@@ -804,6 +863,7 @@ fn respond_index_error(stream: &mut TcpStream, e: &IndexError) -> std::io::Resul
         IndexError::BudgetTooSmall { .. } => 507,
         IndexError::Io(_) => 500,
         IndexError::ReadOnly(_) => 503,
+        IndexError::Conflict { .. } => 409,
         _ => 400,
     };
     respond_error(stream, status, &e.to_string())
@@ -826,7 +886,7 @@ fn parse_i32_array(x: &Value, field: &str) -> Result<Vec<i32>> {
 
 /// Parse an f32 vector field (the JSON parser already rejected
 /// non-finite numbers).
-fn parse_f32_array(x: &Value, field: &str) -> Result<Vec<f32>> {
+pub(crate) fn parse_f32_array(x: &Value, field: &str) -> Result<Vec<f32>> {
     let arr = x
         .as_arr()
         .ok_or_else(|| anyhow!("'{field}' must be an array of numbers"))?;
@@ -852,7 +912,7 @@ fn parse_tokens_or_text(v: &Value) -> Result<Vec<i32>> {
     bail!("need 'text' (a string) or 'tokens' (an array of token ids)")
 }
 
-fn hits_json(hits: &[crate::index::SearchHit]) -> Value {
+pub(crate) fn hits_json(hits: &[crate::index::SearchHit]) -> Value {
     json::arr(
         hits.iter()
             .map(|h| {
@@ -954,21 +1014,42 @@ fn parse_vectors(ix: &IndexServer, v: &Value) -> Result<(Vec<f32>, usize)> {
     Ok((flat, d))
 }
 
-/// `POST /v1/collections/{name}/add`.
+/// `POST /v1/collections/{name}/add`. An optional integer
+/// `"expect_first_id"` arms the exactly-once guard: the add applies
+/// only if the first appended row would get exactly that id, else
+/// **409** and nothing mutates (the cluster router's shard-add seam —
+/// see [`crate::index::VectorStore::add_expect`]).
 fn handle_index_add(index: Option<&IndexServer>, name: &str, stream: &mut TcpStream, body: &[u8]) {
     let Some(ix) = require_index(index, stream) else { return };
     let parsed = std::str::from_utf8(body)
         .map_err(|_| anyhow!("body is not UTF-8"))
         .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")))
-        .and_then(|v| parse_vectors(ix, &v));
-    let (flat, d) = match parsed {
+        .and_then(|v| {
+            let expect = match v.get("expect_first_id") {
+                None => None,
+                Some(x) => Some(
+                    x.as_f64()
+                        .filter(|f| f.fract() == 0.0 && (0.0..=1e15).contains(f))
+                        .map(|f| f as usize)
+                        .ok_or_else(|| {
+                            anyhow!("'expect_first_id' must be a non-negative integer")
+                        })?,
+                ),
+            };
+            Ok((parse_vectors(ix, &v)?, expect))
+        });
+    let ((flat, d), expect) = match parsed {
         Ok(p) => p,
         Err(e) => {
             let _ = respond_error(stream, 400, &e.to_string());
             return;
         }
     };
-    match ix.add(name, &flat, d) {
+    let added = match expect {
+        Some(e) => ix.add_expect(name, &flat, d, e),
+        None => ix.add(name, &flat, d),
+    };
+    match added {
         Ok((first, count)) => {
             let body = json::obj(vec![
                 ("collection", json::s(name)),
@@ -1058,6 +1139,118 @@ fn handle_index_query(
     }
 }
 
+/// `POST /v1/collections/{name}/scan` — phase 1 of a distributed
+/// two-phase query (the cluster router's scatter RPC): body
+/// `{"vector": [f32...], "take": N}`, answer `{"collection", "rows":
+/// local_row_count, "candidates": [{"id","score"}, ...]}` where the
+/// candidates are the local top-`take` **estimated** scores, `(est
+/// desc, id asc)` like [`crate::index::top_indices`]. `take` is the
+/// router-computed global `rerank_factor * k` — see
+/// [`crate::index::Collection::scan_candidates`] for why the local
+/// top-`take` suffices for a bit-identical global merge.
+fn handle_index_scan(index: Option<&IndexServer>, name: &str, stream: &mut TcpStream, body: &[u8]) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow!("body is not UTF-8"))
+        .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")));
+    let v = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    let q = match v.get("vector").ok_or_else(|| anyhow!("need 'vector'")).and_then(|qv| {
+        parse_f32_array(qv, "vector")
+    }) {
+        Ok(q) => q,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    let take = match v.get("take").and_then(|x| {
+        x.as_f64().filter(|f| f.fract() == 0.0 && (1.0..=1e9).contains(f))
+    }) {
+        Some(f) => f as usize,
+        None => {
+            let _ = respond_error(stream, 400, "'take' must be an integer in 1..=1e9");
+            return;
+        }
+    };
+    match ix.scan_candidates(name, &q, take) {
+        Ok((rows, cands)) => {
+            let body = json::obj(vec![
+                ("collection", json::s(name)),
+                ("rows", json::num(rows as f64)),
+                ("take", json::num(take as f64)),
+                ("candidates", hits_json(&cands)),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        Err(e) => {
+            let _ = respond_index_error(stream, &e);
+        }
+    }
+}
+
+/// `POST /v1/collections/{name}/rerank` — phase 2 of a distributed
+/// two-phase query: body `{"vector": [f32...], "ids": [ints]}`, answer
+/// `{"collection", "results": [{"id","score"}, ...]}` with **exact**
+/// scores in input order (the router merges `(score desc, gid asc)`
+/// afterwards — see [`crate::index::Collection::exact_scores`]).
+fn handle_index_rerank(
+    index: Option<&IndexServer>,
+    name: &str,
+    stream: &mut TcpStream,
+    body: &[u8],
+) {
+    let Some(ix) = require_index(index, stream) else { return };
+    let parsed = std::str::from_utf8(body)
+        .map_err(|_| anyhow!("body is not UTF-8"))
+        .and_then(|t| json::parse(t).map_err(|e| anyhow!("invalid JSON body: {e}")))
+        .and_then(|v| {
+            let q = parse_f32_array(
+                v.get("vector").ok_or_else(|| anyhow!("need 'vector'"))?,
+                "vector",
+            )?;
+            let ids: Vec<usize> = v
+                .get("ids")
+                .ok_or_else(|| anyhow!("need 'ids'"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'ids' must be an array of row ids"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|f| f.fract() == 0.0 && (0.0..=1e15).contains(f))
+                        .map(|f| f as usize)
+                        .ok_or_else(|| anyhow!("'ids' entries must be non-negative integers"))
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(!ids.is_empty(), "'ids' must be non-empty");
+            Ok((q, ids))
+        });
+    let (q, ids) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = respond_error(stream, 400, &e.to_string());
+            return;
+        }
+    };
+    match ix.exact_scores(name, &q, &ids) {
+        Ok(hits) => {
+            let body = json::obj(vec![
+                ("collection", json::s(name)),
+                ("results", hits_json(&hits)),
+            ]);
+            let _ = respond(stream, 200, "OK", &body.to_json());
+        }
+        Err(e) => {
+            let _ = respond_index_error(stream, &e);
+        }
+    }
+}
+
 /// `GET /v1/collections` — the index accounting surface.
 fn handle_collections_list(index: Option<&IndexServer>, stream: &mut TcpStream) {
     let Some(ix) = require_index(index, stream) else { return };
@@ -1133,6 +1326,14 @@ fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
         ("throughput_tok_s", json::num(s.throughput_tok_s())),
         ("p50_latency_secs", json::num(s.p50_latency())),
         ("p95_latency_secs", json::num(s.p95_latency())),
+        // the raw (bounded) completion-latency window, so a cluster
+        // router can concatenate windows across workers and compute
+        // fleet percentiles ONCE — averaging per-worker percentiles is
+        // mathematically wrong (a p95 of p95s is not the fleet p95)
+        (
+            "latencies_secs",
+            json::arr(s.latencies.iter().map(|&x| json::num(x)).collect()),
+        ),
         ("wall_secs", json::num(s.wall_secs)),
     ];
     if let Some(ix) = index {
@@ -1160,12 +1361,17 @@ fn respond_admit_error(stream: &mut TcpStream, e: &AdmitError) -> std::io::Resul
     }
 }
 
-fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
+pub(crate) fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
     respond_with_headers(stream, status, reason, &[], body)
 }
 
 /// [`respond`] with extra response headers (the 405 path's `Allow:`).
-fn respond_with_headers(
+pub(crate) fn respond_with_headers(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
@@ -1189,12 +1395,13 @@ fn respond_with_headers(
     stream.flush()
 }
 
-fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Result<()> {
+pub(crate) fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Result<()> {
     let reason = match status {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         503 => "Service Unavailable",
@@ -1219,7 +1426,7 @@ fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Res
 
 /// 405 with the RFC-9110-required `Allow:` header and the same
 /// `{"error": ...}` body shape as every other error path.
-fn respond_method_not_allowed(
+pub(crate) fn respond_method_not_allowed(
     stream: &mut TcpStream,
     method: &str,
     allow: &str,
@@ -1238,7 +1445,7 @@ fn respond_method_not_allowed(
     )
 }
 
-fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_chunk(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
     write!(stream, "{:x}\r\n", payload.len())?;
     stream.write_all(payload)?;
     stream.write_all(b"\r\n")?;
@@ -1273,6 +1480,35 @@ impl HttpResponse {
     }
 }
 
+/// Client-side socket deadlines for [`http_request_with`] /
+/// [`http_request_retry_with`].
+///
+/// The bare [`http_request`] keeps the historical behavior (no
+/// deadlines), which is fine for loopback tests that own both ends of
+/// the socket. Anything that calls *other processes* — the cluster
+/// router's health probes and scatter-gather RPCs above all — must set
+/// both timeouts: `TcpStream::connect` against a dead-but-routable
+/// address can otherwise block for the kernel's SYN-retry budget
+/// (minutes), and a wedged worker that accepted the connection but
+/// never responds would pin a router thread forever.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientConfig {
+    /// Deadline for the TCP connect; `None` = OS default (unbounded
+    /// for practical purposes).
+    pub connect_timeout: Option<Duration>,
+    /// Per-`read` deadline while parsing the response; `None` = block
+    /// forever.
+    pub read_timeout: Option<Duration>,
+}
+
+impl ClientConfig {
+    /// Both deadlines set to `ms` milliseconds — the common case.
+    pub fn timeout_ms(ms: u64) -> Self {
+        let t = Some(Duration::from_millis(ms));
+        ClientConfig { connect_timeout: t, read_timeout: t }
+    }
+}
+
 /// Minimal blocking HTTP/1.1 client for loopback tests, benches, and the
 /// `http_client` example: one request, whole response (chunked responses
 /// are reassembled and the individual chunks preserved). Not a general
@@ -1283,9 +1519,38 @@ pub fn http_request(
     path: &str,
     body: Option<&str>,
 ) -> Result<HttpResponse> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    http_request_with(addr, method, path, body, ClientConfig::default())
+}
+
+/// [`http_request`] with explicit connect/read deadlines (see
+/// [`ClientConfig`]). `connect_timeout` requires a resolved
+/// `SocketAddr`, so the address is resolved first; the first resolved
+/// address is used, matching `TcpStream::connect`'s happy path for the
+/// `127.0.0.1:port` strings this crate deals in.
+pub fn http_request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    cfg: ClientConfig,
+) -> Result<HttpResponse> {
+    use std::net::ToSocketAddrs;
+    let mut stream = match cfg.connect_timeout {
+        Some(t) => {
+            let sa = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving {addr}"))?
+                .next()
+                .ok_or_else(|| anyhow!("address '{addr}' resolved to nothing"))?;
+            TcpStream::connect_timeout(&sa, t)
+                .with_context(|| format!("connecting to {addr} (timeout {t:?})"))?
+        }
+        None => TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?,
+    };
     stream.set_nodelay(true).ok();
+    if cfg.read_timeout.is_some() {
+        stream.set_read_timeout(cfg.read_timeout).ok();
+    }
     let body_bytes = body.unwrap_or("");
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
@@ -1312,10 +1577,25 @@ pub fn http_request_retry(
     body: Option<&str>,
     attempts: usize,
 ) -> Result<HttpResponse> {
+    http_request_retry_with(addr, method, path, body, attempts, ClientConfig::default())
+}
+
+/// [`http_request_retry`] with per-attempt connect/read deadlines — the
+/// router's RPC primitive. Each attempt gets a fresh socket with the
+/// same [`ClientConfig`], so a hung worker costs at most
+/// `attempts × (connect_timeout + read_timeout)` instead of forever.
+pub fn http_request_retry_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    attempts: usize,
+    cfg: ClientConfig,
+) -> Result<HttpResponse> {
     let attempts = attempts.max(1);
     let mut last_err = None;
     for attempt in 0..attempts {
-        match http_request(addr, method, path, body) {
+        match http_request_with(addr, method, path, body, cfg) {
             Ok(resp) => {
                 if !matches!(resp.status, 429 | 503) || attempt + 1 == attempts {
                     return Ok(resp);

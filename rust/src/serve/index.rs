@@ -224,6 +224,23 @@ impl IndexServer {
         Ok(out)
     }
 
+    /// [`IndexServer::add`] guarded by an expected first row id (the
+    /// cluster router's exactly-once shard add — see
+    /// [`crate::index::VectorStore::add_expect`]): refuses with a typed
+    /// conflict, mutating nothing, when the collection's row count
+    /// moved.
+    pub fn add_expect(
+        &self,
+        name: &str,
+        vecs: &[f32],
+        d: usize,
+        expect_first_id: usize,
+    ) -> Result<(usize, usize), IndexError> {
+        let out = self.store.add_expect(name, vecs, d, 0, expect_first_id)?;
+        self.rows_added.fetch_add(out.1, Ordering::Relaxed);
+        Ok(out)
+    }
+
     /// Seal every non-empty head into an immutable segment and commit a
     /// new manifest generation (no-op on ephemeral servers). Exposed
     /// for orderly shutdown.
@@ -281,6 +298,34 @@ impl IndexServer {
         let hits = self.store.query(name, q, k, rerank_factor, 0)?;
         self.queries.fetch_add(1, Ordering::Relaxed);
         Ok(hits)
+    }
+
+    /// Phase-1 shard scan for the cluster's scatter-gather (see
+    /// [`crate::index::Collection::scan_candidates`]): `(local_rows,
+    /// local top-take estimated candidates)`. Counts as a query — each
+    /// shard's participation in a distributed query shows up in its own
+    /// serving counters.
+    pub fn scan_candidates(
+        &self,
+        name: &str,
+        q: &[f32],
+        take: usize,
+    ) -> Result<(usize, Vec<SearchHit>), IndexError> {
+        let out = self.store.scan_candidates(name, q, take, 0)?;
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Phase-2 shard rerank for the cluster's scatter-gather (see
+    /// [`crate::index::Collection::exact_scores`]): exact scores of
+    /// `ids`, input order.
+    pub fn exact_scores(
+        &self,
+        name: &str,
+        q: &[f32],
+        ids: &[usize],
+    ) -> Result<Vec<SearchHit>, IndexError> {
+        self.store.exact_scores(name, q, ids)
     }
 
     /// Per-collection accounting snapshot, name order.

@@ -1,0 +1,640 @@
+//! Loopback integration tests for the sharded router/worker cluster
+//! (ISSUE 9): a real router over 1–3 real worker nodes — each a full
+//! batcher + index behind its own `TcpListener` — no mocks anywhere.
+//!
+//! The wall, in order:
+//! (a) the pure distributed decomposition — per-shard `scan_candidates`
+//!     → global select → `exact_scores` → merge — equals a single-node
+//!     `VectorStore::query` bit-for-bit, no sockets involved;
+//! (b) the same contract END TO END over HTTP: rows added through the
+//!     router, queries scatter-gathered across 2 workers, results
+//!     byte-compared against a single-node store with the same rows;
+//! (c) `POST /v1/generate` round-robins across healthy workers and
+//!     relays worker responses verbatim;
+//! (d) killing a worker mid-flight degrades explicitly (`degraded`,
+//!     `failed_shards`) — never a hang or silent partial — and an
+//!     all-dead collection answers 503 + `Retry-After`; a restarted
+//!     worker is re-admitted by the prober;
+//! (e) a draining worker keeps serving in-flight work but receives no
+//!     new generate traffic, and nothing is dropped in the handoff;
+//! (f) fleet `/v1/stats` reports per-worker state/queue depth and
+//!     computes percentiles over the CONCATENATED latency windows
+//!     (exactly equal to percentile-of-concatenation, never an average
+//!     of per-worker percentiles);
+//! (g) the committed `cluster_merge.json` golden vectors pin the merge
+//!     order against the numpy mirror (`python/tests/test_cluster.py`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use raana::cluster::{merge, Router, RouterConfig};
+use raana::index::{top_indices, IndexConfig, SearchHit, VectorStore};
+use raana::json::{self, Value};
+use raana::model::synthetic_manifest;
+use raana::net::{http_request, ClientConfig, HttpConfig, HttpServer};
+use raana::quant::{LayerCalib, TrickConfig};
+use raana::rng::Rng;
+use raana::runtime::{native_init, PackedLayers};
+use raana::serve::index::IndexServer;
+use raana::serve::{ServeConfig, Server};
+
+// ------------------------------------------------------------- harness
+
+/// One in-process worker node: batcher + index + HTTP front-end, plus
+/// the drain flag a real `raana worker` would flip on stdin EOF.
+struct WorkerNode {
+    server: Arc<Server>,
+    index: Arc<IndexServer>,
+    http: HttpServer,
+    drain: Arc<AtomicBool>,
+    addr: String,
+}
+
+impl WorkerNode {
+    /// Start a worker on `addr` (use `"127.0.0.1:0"` for ephemeral).
+    /// Every worker uses the SAME model seed and the default store
+    /// config, so any two nodes quantize a given row identically — the
+    /// precondition for bit-identical scatter-gather.
+    fn start(addr: &str) -> WorkerNode {
+        let manifest = synthetic_manifest("cluster-worker", 32, 1, 2, 64, 16, 256, 2);
+        let params = native_init(&manifest, 17);
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; manifest.linears.len()];
+        let packed =
+            PackedLayers::quantize(&manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1)
+                .unwrap();
+        let index = Arc::new(
+            IndexServer::with_embedder(
+                IndexConfig::default(),
+                None,
+                manifest.clone(),
+                params.clone(),
+                Some(packed.clone()),
+            )
+            .unwrap(),
+        );
+        let server = Arc::new(
+            Server::start_native_packed_with(manifest, params, packed, ServeConfig::default())
+                .unwrap(),
+        );
+        let drain = Arc::new(AtomicBool::new(false));
+        let http = HttpServer::bind_with_index(
+            Arc::clone(&server),
+            Some(Arc::clone(&index)),
+            addr,
+            HttpConfig { workers: 2, drain: Some(Arc::clone(&drain)), ..Default::default() },
+        )
+        .unwrap();
+        let addr = format!("127.0.0.1:{}", http.local_addr().port());
+        WorkerNode { server, index, http, drain, addr }
+    }
+
+    fn completions(&self) -> usize {
+        self.server.stats().completions
+    }
+
+    /// Kill the node outright: listener closed, batcher gone — the
+    /// "worker process died" failure the router must degrade around.
+    fn kill(self) {
+        self.http.shutdown().unwrap();
+        drop(self.index);
+        match Arc::try_unwrap(self.server) {
+            Ok(s) => {
+                s.shutdown().unwrap();
+            }
+            Err(_) => panic!("server still referenced after HTTP shutdown"),
+        }
+    }
+}
+
+/// Router over the given workers with test-speed probe/RPC deadlines.
+fn start_router(workers: Vec<String>, shards: usize) -> Router {
+    Router::bind(
+        "127.0.0.1:0",
+        RouterConfig {
+            workers,
+            shards,
+            http_workers: 4,
+            probe_interval_ms: 50,
+            client: ClientConfig::timeout_ms(2000),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn raddr(router: &Router) -> String {
+    format!("127.0.0.1:{}", router.local_addr().port())
+}
+
+/// Reserve an explicit loopback port (bind :0, read it back, release):
+/// lets a test restart a "recovered" worker on the address the router
+/// was configured with.
+fn reserve_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let p = l.local_addr().unwrap().port();
+    drop(l);
+    p
+}
+
+fn vec_json(v: &[f32]) -> Value {
+    json::arr(v.iter().map(|&x| json::num(x as f64)).collect())
+}
+
+fn add_body(rows: &[f32], d: usize) -> String {
+    json::obj(vec![(
+        "vectors",
+        json::arr(rows.chunks_exact(d).map(vec_json).collect()),
+    )])
+    .to_json()
+}
+
+fn query_body(q: &[f32], k: usize, rf: usize) -> String {
+    format!("{{\"vector\":{},\"k\":{k},\"rerank_factor\":{rf}}}", vec_json(q).to_json())
+}
+
+/// Parse a response's `results` into hits (ids exact, scores as the f64
+/// the wire carried — f32 scores round-trip bit-exactly through the
+/// JSON writer/parser, so `as f32` recovers the worker's exact value).
+fn parse_results(v: &Value) -> Vec<SearchHit> {
+    v.get("results")
+        .and_then(Value::as_arr)
+        .expect("results array")
+        .iter()
+        .map(|h| SearchHit {
+            id: h.get("id").unwrap().as_f64().unwrap() as usize,
+            score: h.get("score").unwrap().as_f64().unwrap() as f32,
+        })
+        .collect()
+}
+
+fn deterministic_rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+fn generate_body(prompt: &[i32], max_new_tokens: usize) -> String {
+    format!("{{\"prompt\":{prompt:?},\"max_new_tokens\":{max_new_tokens},\"temperature\":0,\"seed\":0}}")
+}
+
+fn poll_until(what: &str, mut ok: impl FnMut() -> bool) {
+    for _ in 0..400 {
+        if ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+// ------------------------------------------- (a) pure decomposition
+
+/// The distributed two-phase pipeline over real `VectorStore` shards —
+/// no router, no sockets — must reproduce a single node bit-for-bit.
+/// This is the determinism contract in its smallest executable form.
+#[test]
+fn sharded_stores_equal_single_node_bit_for_bit() {
+    let (n, d, n_shards) = (57usize, 24usize, 3usize);
+    let rows = deterministic_rows(n, d, 0xC1A5);
+    let mut single = VectorStore::new(IndexConfig::default()).unwrap();
+    single.add("docs", &rows, d, 1).unwrap();
+    let mut shards: Vec<VectorStore> =
+        (0..n_shards).map(|_| VectorStore::new(IndexConfig::default()).unwrap()).collect();
+    for s in 0..n_shards {
+        let slice: Vec<f32> = rows
+            .chunks_exact(d)
+            .enumerate()
+            .filter(|(g, _)| merge::shard_of(*g, n_shards) == s)
+            .flat_map(|(_, r)| r.iter().copied())
+            .collect();
+        shards[s].add("docs", &slice, d, 1).unwrap();
+    }
+    for (qi, (k, rf)) in [(7usize, 3usize), (1, 1), (12, 4), (60, 2)].iter().enumerate() {
+        let q: Vec<f32> = deterministic_rows(1, d, 0xBEEF + qi as u64);
+        let want = single.query("docs", &q, *k, *rf, 1).unwrap();
+
+        let take = merge::global_take(*k, *rf, n);
+        let per_shard: Vec<(usize, Vec<SearchHit>)> = (0..n_shards)
+            .filter(|&s| merge::shard_rows(s, n_shards, n) > 0)
+            .map(|s| {
+                let (_, hits) = shards[s].scan_candidates("docs", &q, take, 1).unwrap();
+                (s, hits)
+            })
+            .collect();
+        let cands = merge::select_candidates(&per_shard, n_shards, take, n);
+        let mut exact = Vec::new();
+        for s in 0..n_shards {
+            let locals: Vec<usize> = cands
+                .iter()
+                .filter(|c| merge::shard_of(c.id, n_shards) == s)
+                .map(|c| merge::local_of(c.id, n_shards))
+                .collect();
+            if locals.is_empty() {
+                continue;
+            }
+            for (l, h) in locals.iter().zip(shards[s].exact_scores("docs", &q, &locals).unwrap()) {
+                assert_eq!(h.id, *l);
+                exact.push(SearchHit { id: merge::global_of(s, *l, n_shards), score: h.score });
+            }
+        }
+        let got = merge::merge_hits(exact, *k);
+        assert_eq!(got.len(), want.len(), "k={k} rf={rf}");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id, "id mismatch at k={k} rf={rf}");
+            assert_eq!(
+                g.score.to_bits(),
+                w.score.to_bits(),
+                "score bits differ for id {} at k={k} rf={rf}",
+                g.id
+            );
+        }
+    }
+}
+
+// ------------------------------------- (b) end-to-end over the wire
+
+#[test]
+fn scatter_gather_over_http_matches_single_node() {
+    let (n, d) = (40usize, 16usize);
+    let rows = deterministic_rows(n, d, 0x5EED);
+    let mut single = VectorStore::new(IndexConfig::default()).unwrap();
+    single.add("docs", &rows, d, 1).unwrap();
+
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let w1 = WorkerNode::start("127.0.0.1:0");
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    // two batches through the router: exercises expect_first_id append
+    // positions beyond a fresh collection
+    let (a, b) = rows.split_at(n / 2 * d);
+    for batch in [a, b] {
+        let resp =
+            http_request(&ra, "POST", "/v1/collections/docs/add", Some(&add_body(batch, d)))
+                .unwrap();
+        assert_eq!(resp.status, 200, "add: {}", resp.body_str().unwrap_or(""));
+    }
+    for (qi, (k, rf)) in [(7usize, 3usize), (1, 2), (10, 4)].iter().enumerate() {
+        let q = deterministic_rows(1, d, 0xF00D + qi as u64);
+        let resp =
+            http_request(&ra, "POST", "/v1/collections/docs/query", Some(&query_body(&q, *k, *rf)))
+                .unwrap();
+        assert_eq!(resp.status, 200, "query: {}", resp.body_str().unwrap_or(""));
+        let v = resp.json().unwrap();
+        assert_eq!(v.get("degraded").and_then(Value::as_bool), Some(false));
+        let got = parse_results(&v);
+        let want = single.query("docs", &q, *k, *rf, 1).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id, "cluster vs single-node id order (k={k})");
+            assert_eq!(
+                g.score.to_bits(),
+                w.score.to_bits(),
+                "score bits for id {} (k={k})",
+                g.id
+            );
+        }
+    }
+
+    // typed router errors: embedding shapes are a worker affordance
+    let resp = http_request(&ra, "POST", "/v1/collections/docs/add", Some(r#"{"texts":["x"]}"#))
+        .unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(resp.json().unwrap().get("error").is_some(), "uniform error shape");
+    let resp =
+        http_request(&ra, "POST", "/v1/collections/nope/query", Some(&query_body(&[0.0; 16], 3, 2)))
+            .unwrap();
+    assert_eq!(resp.status, 404);
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// --------------------------------------------- (c) generate routing
+
+#[test]
+fn generate_round_robins_and_relays_verbatim() {
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let w1 = WorkerNode::start("127.0.0.1:0");
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    // greedy decode on identical models: every worker produces the same
+    // tokens, so the relayed body must equal a direct worker call
+    let body = generate_body(&[10, 20, 30], 6);
+    let direct = http_request(&w0.addr, "POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(direct.status, 200);
+    let direct_tokens = direct.json().unwrap().get("tokens").unwrap().to_json();
+    for _ in 0..4 {
+        let routed = http_request(&ra, "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(routed.status, 200);
+        let routed_tokens = routed.json().unwrap().get("tokens").unwrap().to_json();
+        assert_eq!(routed_tokens, direct_tokens, "relay must not alter the completion");
+    }
+    assert!(
+        w0.completions() >= 2 && w1.completions() >= 1,
+        "round robin must spread load: w0={} w1={}",
+        w0.completions(),
+        w1.completions()
+    );
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// ---------------------------- (d) degradation, 503, re-admission
+
+#[test]
+fn killed_worker_degrades_explicitly_and_readmits_on_recovery() {
+    let port1 = reserve_port();
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let w1 = WorkerNode::start(&format!("127.0.0.1:{port1}"));
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    let (n, d) = (12usize, 8usize);
+    let rows = deterministic_rows(n, d, 0xDEAD);
+    let resp =
+        http_request(&ra, "POST", "/v1/collections/docs/add", Some(&add_body(&rows, d))).unwrap();
+    assert_eq!(resp.status, 200);
+
+    // healthy baseline
+    let q = deterministic_rows(1, d, 1);
+    let body = query_body(&q, 4, 2);
+    let resp = http_request(&ra, "POST", "/v1/collections/docs/query", Some(&body)).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().unwrap().get("degraded").and_then(Value::as_bool), Some(false));
+
+    // kill one worker: the very next query must degrade EXPLICITLY —
+    // typed flag + failed shard list — not hang, not silently shrink
+    w1.kill();
+    let resp = http_request(&ra, "POST", "/v1/collections/docs/query", Some(&body)).unwrap();
+    assert_eq!(resp.status, 200, "one live shard still answers");
+    let v = resp.json().unwrap();
+    assert_eq!(v.get("degraded").and_then(Value::as_bool), Some(true));
+    let failed = v.get("failed_shards").and_then(Value::as_arr).unwrap();
+    assert_eq!(failed.len(), 1, "exactly the dead worker's shard failed");
+    assert!(!parse_results(&v).is_empty(), "surviving shard's rows still surface");
+
+    // restart the worker on its configured address: the prober must
+    // re-admit it without router intervention
+    let w1b = WorkerNode::start(&format!("127.0.0.1:{port1}"));
+    poll_until("prober re-admission", || {
+        http_request(&ra, "GET", "/healthz", None)
+            .ok()
+            .and_then(|r| r.json().ok())
+            .and_then(|v| v.get("workers_healthy").and_then(Value::as_f64))
+            == Some(2.0)
+    });
+    // and the re-admitted worker takes generate traffic again
+    let before = w1b.completions();
+    for _ in 0..4 {
+        let r = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[5], 2))).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    assert!(w1b.completions() > before, "recovered worker back in rotation");
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1b.kill();
+}
+
+#[test]
+fn all_shards_dead_is_typed_503_with_retry_after() {
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let router = start_router(vec![w0.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    let rows = deterministic_rows(6, 8, 3);
+    let resp =
+        http_request(&ra, "POST", "/v1/collections/docs/add", Some(&add_body(&rows, 8))).unwrap();
+    assert_eq!(resp.status, 200);
+    w0.kill();
+
+    let resp =
+        http_request(&ra, "POST", "/v1/collections/docs/query", Some(&query_body(&[0.5; 8], 3, 2)))
+            .unwrap();
+    assert_eq!(resp.status, 503, "no reachable shard must be a typed refusal");
+    assert!(resp.json().unwrap().get("error").is_some(), "uniform error shape");
+    assert!(
+        resp.headers.iter().any(|(k, v)| k == "retry-after" && !v.is_empty()),
+        "503 must carry Retry-After"
+    );
+
+    // generate with every worker dead: same typed refusal (the prober
+    // condemns the worker after down_after failed probes)
+    poll_until("worker condemned", || {
+        http_request(&ra, "GET", "/healthz", None)
+            .ok()
+            .and_then(|r| r.json().ok())
+            .and_then(|v| v.get("workers_healthy").and_then(Value::as_f64))
+            == Some(0.0)
+    });
+    let resp = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[5], 2))).unwrap();
+    assert_eq!(resp.status, 503);
+    assert!(resp.headers.iter().any(|(k, _)| k == "retry-after"));
+
+    router.shutdown().unwrap();
+}
+
+// ------------------------------------------------- (e) graceful drain
+
+#[test]
+fn draining_worker_gets_no_new_generate_traffic_and_drops_nothing() {
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let w1 = WorkerNode::start("127.0.0.1:0");
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    // worker 0 announces drain (what `raana worker` does on stdin EOF)
+    w0.drain.store(true, Ordering::SeqCst);
+    poll_until("router observes draining", || {
+        http_request(&ra, "GET", "/v1/stats", None)
+            .ok()
+            .and_then(|r| r.json().ok())
+            .and_then(|v| {
+                v.get("per_worker").and_then(Value::as_arr).map(|ws| {
+                    ws.iter()
+                        .any(|w| w.get("state").and_then(Value::as_str) == Some("draining"))
+                })
+            })
+            .unwrap_or(false)
+    });
+    let drained_before = w0.completions();
+    // every request during the drain must still succeed — routed to the
+    // remaining worker, none dropped, none duplicated
+    for _ in 0..5 {
+        let r = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[7], 2))).unwrap();
+        assert_eq!(r.status, 200, "drain must not drop requests");
+    }
+    assert_eq!(w0.completions(), drained_before, "draining worker got new work");
+    assert!(w1.completions() >= 5, "surviving worker took the traffic");
+
+    // drain cancelled: the worker is re-admitted (state machine, not a
+    // one-way door)
+    w0.drain.store(false, Ordering::SeqCst);
+    poll_until("drain cancellation observed", || {
+        http_request(&ra, "GET", "/healthz", None)
+            .ok()
+            .and_then(|r| r.json().ok())
+            .and_then(|v| v.get("workers_healthy").and_then(Value::as_f64))
+            == Some(2.0)
+    });
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// ---------------------------------------------------- (f) fleet stats
+
+#[test]
+fn fleet_stats_concatenate_windows_and_expose_per_worker_depth() {
+    let w0 = WorkerNode::start("127.0.0.1:0");
+    let w1 = WorkerNode::start("127.0.0.1:0");
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()], 0);
+    let ra = raddr(&router);
+
+    for _ in 0..6 {
+        let r = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[9], 2))).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    // traffic has fully completed: worker latency windows are static, so
+    // the fleet percentiles must EXACTLY equal percentile-of-concatenation
+    let mut all: Vec<f64> = Vec::new();
+    for w in [&w0, &w1] {
+        let v = http_request(&w.addr, "GET", "/v1/stats", None).unwrap().json().unwrap();
+        all.extend(
+            v.get("latencies_secs").and_then(Value::as_arr).unwrap().iter().filter_map(Value::as_f64),
+        );
+    }
+    assert_eq!(all.len(), 6, "every completion lands in exactly one worker window");
+
+    let v = http_request(&ra, "GET", "/v1/stats", None).unwrap().json().unwrap();
+    assert_eq!(v.get("workers").and_then(Value::as_f64), Some(2.0));
+    assert_eq!(v.get("workers_healthy").and_then(Value::as_f64), Some(2.0));
+    assert_eq!(v.get("completions").and_then(Value::as_f64), Some(6.0));
+    assert_eq!(v.get("latency_samples").and_then(Value::as_f64), Some(all.len() as f64));
+    assert_eq!(
+        v.get("p50_latency_secs").and_then(Value::as_f64),
+        Some(raana::util::percentile(&all, 50.0)),
+        "fleet p50 must be the percentile of the concatenated windows"
+    );
+    assert_eq!(
+        v.get("p95_latency_secs").and_then(Value::as_f64),
+        Some(raana::util::percentile(&all, 95.0)),
+        "fleet p95 must be the percentile of the concatenated windows"
+    );
+    let per = v.get("per_worker").and_then(Value::as_arr).unwrap();
+    assert_eq!(per.len(), 2);
+    for w in per {
+        assert_eq!(w.get("state").and_then(Value::as_str), Some("healthy"));
+        assert_eq!(w.get("reachable").and_then(Value::as_bool), Some(true));
+        assert!(w.get("queue_depth").and_then(Value::as_f64).is_some(), "per-worker queue depth");
+    }
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// ------------------------------------------------ (g) golden vectors
+
+fn load_golden(name: &str) -> Value {
+    let path: PathBuf =
+        [env!("CARGO_MANIFEST_DIR"), "rust", "tests", "vectors", name].iter().collect();
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("missing golden vectors {} ({e}); regenerate with python/tests/gen_vectors.py", path.display())
+    });
+    json::parse(&text).expect("golden vectors must parse")
+}
+
+fn golden_f32s(v: &Value, key: &str) -> Vec<f32> {
+    v.get(key)
+        .and_then(Value::as_arr)
+        .unwrap_or_else(|| panic!("golden key {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn golden_usizes(v: &Value, key: &str) -> Vec<usize> {
+    v.get(key)
+        .and_then(Value::as_arr)
+        .unwrap_or_else(|| panic!("golden key {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as usize)
+        .collect()
+}
+
+fn golden_hits(v: &Value) -> Vec<SearchHit> {
+    v.as_arr()
+        .expect("hit list")
+        .iter()
+        .map(|h| SearchHit {
+            id: h.get("id").unwrap().as_f64().unwrap() as usize,
+            score: h.get("score").unwrap().as_f64().unwrap() as f32,
+        })
+        .collect()
+}
+
+/// The full merge pipeline over the committed fixture: per-shard local
+/// top-take from the estimated scores (via the SAME `top_indices` the
+/// worker scan uses), global candidate selection, exact-score merge —
+/// each stage compared against the numpy-generated expectation.
+#[test]
+fn golden_cluster_merge_pins_the_pipeline() {
+    let doc = load_golden("cluster_merge.json");
+    let n = doc.get("n").unwrap().as_f64().unwrap() as usize;
+    let n_shards = doc.get("n_shards").unwrap().as_f64().unwrap() as usize;
+    let k = doc.get("k").unwrap().as_f64().unwrap() as usize;
+    let rf = doc.get("rerank_factor").unwrap().as_f64().unwrap() as usize;
+    let est = golden_f32s(&doc, "est");
+    let exact = golden_f32s(&doc, "exact");
+    assert_eq!(est.len(), n);
+    assert_eq!(exact.len(), n);
+
+    let take = merge::global_take(k, rf, n);
+    assert_eq!(take, doc.get("take").unwrap().as_f64().unwrap() as usize);
+
+    // per-shard local top-take over each shard's est slice
+    let expected_shards = doc.get("per_shard_candidates").unwrap().as_arr().unwrap();
+    let mut per_shard: Vec<(usize, Vec<SearchHit>)> = Vec::new();
+    for s in 0..n_shards {
+        let local_est: Vec<f32> = (0..merge::shard_rows(s, n_shards, n))
+            .map(|l| est[merge::global_of(s, l, n_shards)])
+            .collect();
+        let hits: Vec<SearchHit> = top_indices(&local_est, take)
+            .into_iter()
+            .map(|l| SearchHit { id: l, score: local_est[l] })
+            .collect();
+        let want = golden_hits(&expected_shards[s]);
+        assert_eq!(hits.len(), want.len(), "shard {s} candidate count");
+        for (g, w) in hits.iter().zip(&want) {
+            assert_eq!(g.id, w.id, "shard {s} local order");
+            assert_eq!(g.score.to_bits(), w.score.to_bits(), "shard {s} est score bits");
+        }
+        per_shard.push((s, hits));
+    }
+
+    // global candidate selection
+    let cands = merge::select_candidates(&per_shard, n_shards, take, n);
+    let got_gids: Vec<usize> = cands.iter().map(|c| c.id).collect();
+    assert_eq!(got_gids, golden_usizes(&doc, "selected_gids"), "global selection order");
+
+    // exact-score merge
+    let exact_hits: Vec<SearchHit> =
+        cands.iter().map(|c| SearchHit { id: c.id, score: exact[c.id] }).collect();
+    let merged = merge::merge_hits(exact_hits, k);
+    let want = golden_hits(doc.get("merged").unwrap());
+    assert_eq!(merged.len(), want.len());
+    for (g, w) in merged.iter().zip(&want) {
+        assert_eq!(g.id, w.id, "merged order");
+        assert_eq!(g.score.to_bits(), w.score.to_bits(), "merged score bits");
+    }
+}

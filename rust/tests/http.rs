@@ -340,7 +340,12 @@ fn slow_loris_client_gets_typed_408() {
     let http = HttpServer::bind_with(
         Arc::clone(&server),
         "127.0.0.1:0",
-        HttpConfig { workers: 2, max_new_tokens_cap: usize::MAX, read_timeout_ms: 200 },
+        HttpConfig {
+            workers: 2,
+            max_new_tokens_cap: usize::MAX,
+            read_timeout_ms: 200,
+            ..Default::default()
+        },
     )
     .unwrap();
     let addr = http.local_addr().to_string();
