@@ -961,6 +961,187 @@ def gen_cluster():
     }
 
 
+# ------------------------------------------------------ metrics exposition
+
+# Mirror of `obs::LATENCY_BUCKETS_US`: the shared log-spaced 1-2-5 µs
+# bucket ladder every duration histogram uses (last slot at render time
+# is the implicit +Inf overflow).
+METRIC_BUCKETS_US = [
+    1, 2, 5, 10, 20, 50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000,
+    20_000, 50_000, 100_000, 200_000, 500_000, 1_000_000, 2_000_000,
+    5_000_000,
+]
+
+
+def metrics_bucketize(values_us):
+    """Mirror of `obs::bucketize_us` / `Histogram::observe_us` placement:
+    non-cumulative counts, first edge >= v wins (le is inclusive), final
+    slot is the +Inf overflow."""
+    counts = [0] * (len(METRIC_BUCKETS_US) + 1)
+    for v in values_us:
+        idx = next((i for i, e in enumerate(METRIC_BUCKETS_US) if v <= e),
+                   len(METRIC_BUCKETS_US))
+        counts[idx] += 1
+    return counts
+
+
+def metrics_render(families):
+    """Mirror of `obs::Registry::render`: families sorted by (name,
+    registration index), HELP/TYPE once per name (first registration's
+    help and kind win), histograms rendered cumulative with a trailing
+    +Inf bucket then `_sum`/`_count`. Every value is an integer, so the
+    text is byte-deterministic — the property the fixture pins."""
+    order = sorted(range(len(families)), key=lambda i: (families[i]["fname"], i))
+    out = []
+    last = None
+    for i in order:
+        f = families[i]
+        if f["fname"] != last:
+            out.append(f"# HELP {f['fname']} {f['help']}")
+            out.append(f"# TYPE {f['fname']} {f['kind']}")
+            last = f["fname"]
+
+        def labels(extra=None):
+            parts = [f'{k}="{v}"' for k, v in f.get("labels", [])]
+            if extra is not None:
+                parts.append(f'{extra[0]}="{extra[1]}"')
+            return "{" + ",".join(parts) + "}" if parts else ""
+
+        if f["kind"] == "histogram":
+            counts = metrics_bucketize(f["observe_us"])
+            cum = 0
+            for edge, c in zip(METRIC_BUCKETS_US, counts):
+                cum += c
+                out.append(f"{f['fname']}_bucket{labels(('le', edge))} {cum}")
+            cum += counts[-1]
+            out.append(f"{f['fname']}_bucket{labels(('le', '+Inf'))} {cum}")
+            out.append(f"{f['fname']}_sum{labels()} {sum(f['observe_us'])}")
+            out.append(f"{f['fname']}_count{labels()} {len(f['observe_us'])}")
+        else:
+            out.append(f"{f['fname']}{labels()} {f['value']}")
+    return "".join(line + "\n" for line in out)
+
+
+def metrics_relabel(text, key, value):
+    """Mirror of `obs::relabel_exposition`: inject `key="value"` as the
+    FIRST label of every sample line; comment and empty lines pass
+    through untouched."""
+    out = []
+    for line in text.split("\n")[:-1] if text.endswith("\n") else text.split("\n"):
+        if not line or line.startswith("#"):
+            out.append(line)
+            continue
+        sp = line.rfind(" ")
+        if sp == -1:
+            out.append(line)
+            continue
+        series, val = line[:sp], line[sp:]
+        b = series.find("{")
+        if b != -1:
+            series = series[:b + 1] + f'{key}="{value}",' + series[b + 1:]
+        else:
+            series = series + "{" + f'{key}="{value}"' + "}"
+        out.append(series + val)
+    return "".join(line + "\n" for line in out)
+
+
+def gen_metrics():
+    """Registry-state -> rendered-exposition fixtures for the Rust
+    `obs::Registry` (consumed by `rust/tests/golden.rs`, sanity-checked
+    by `python/tests/test_obs.py`). Families carry declarative state
+    (counter/gauge value, or the histogram's raw observations) so both
+    sides construct the same registry and must render the same bytes.
+    Cases cover the edge shapes the format hides bugs in: an empty
+    registry, an empty histogram, all observations in one bucket,
+    exact-edge placement (le is inclusive), +Inf overflow, zero-valued
+    and negative samples, labeled samples sharing a family, and
+    registration order disagreeing with name order."""
+    cases = []
+
+    # 1. empty registry: renders to the empty string, not "\n"
+    cases.append({"name": "empty-registry", "families": []})
+
+    # 2. counters + a negative gauge, registered out of name order (the
+    # render must sort), including a zero-valued counter
+    cases.append({"name": "counters-and-gauge", "families": [
+        {"fname": "raana_tokens_generated_total", "kind": "counter",
+         "help": "Tokens sampled by the batching server.", "value": 1234},
+        {"fname": "raana_completions_total", "kind": "counter",
+         "help": "Generations run to completion.", "value": 0},
+        {"fname": "raana_queue_depth", "kind": "gauge",
+         "help": "Requests admitted but not yet mapped onto a KV lane.",
+         "value": -3},
+    ]})
+
+    # 3. labeled samples sharing one family name: HELP/TYPE once (first
+    # registration wins), samples in registration order
+    cases.append({"name": "labeled-family", "families": [
+        {"fname": "raana_worker_up", "kind": "gauge",
+         "help": "Per-worker liveness.", "labels": [["worker", "0"]],
+         "value": 1},
+        {"fname": "raana_worker_up", "kind": "gauge",
+         "help": "IGNORED: only the first registration's help renders.",
+         "labels": [["worker", "1"]], "value": 0},
+    ]})
+
+    # 4. empty histogram: all-zero cumulative buckets, sum 0, count 0
+    cases.append({"name": "histogram-empty", "families": [
+        {"fname": "raana_prefill_us", "kind": "histogram",
+         "help": "Serve-level prefill, microseconds.", "observe_us": []},
+    ]})
+
+    # 5. every observation in a single bucket (11..=20 -> le="20")
+    cases.append({"name": "histogram-single-bucket", "families": [
+        {"fname": "raana_decode_step_us", "kind": "histogram",
+         "help": "One batched decode step, microseconds.",
+         "observe_us": [15, 12, 20, 11]},
+    ]})
+
+    # 6. edges and overflow: 0 and 1 land in le="1" (inclusive), each
+    # exact edge lands in its own bucket, 5_000_001 overflows to +Inf
+    cases.append({"name": "histogram-edges-and-inf", "families": [
+        {"fname": "raana_queue_wait_us", "kind": "histogram",
+         "help": "Admission-to-KV-lane wait, microseconds.",
+         "observe_us": [0, 1, 2, 3, 5, 5_000_000, 5_000_001, 999_999_999]},
+    ]})
+
+    # 7. mixed kinds with interleaved names: pins the (name, registration
+    # index) sort and the one-histogram-between-counters layout
+    cases.append({"name": "mixed-sorted", "families": [
+        {"fname": "raana_z_total", "kind": "counter", "help": "Last by name.",
+         "value": 7},
+        {"fname": "raana_m_us", "kind": "histogram", "help": "Middle by name.",
+         "observe_us": [4, 40, 400]},
+        {"fname": "raana_a_total", "kind": "counter", "help": "First by name.",
+         "value": 9},
+    ]})
+
+    for c in cases:
+        c["rendered"] = metrics_render(c["families"])
+
+    # fleet aggregation: the router injects worker="<i>" as the first
+    # label of every sample line, comments untouched
+    relabel_cases = []
+    for key, value, src in (
+        ("worker", "0", cases[5]["rendered"]),   # histogram with le labels
+        ("worker", "17", cases[2]["rendered"]),  # already-labeled samples
+        ("worker", "3", cases[1]["rendered"]),   # bare counters + gauge
+    ):
+        relabel_cases.append({
+            "key": key,
+            "value": value,
+            "input": src,
+            "output": metrics_relabel(src, key, value),
+        })
+
+    return {
+        "kernel": "metrics_exposition",
+        "buckets_us": METRIC_BUCKETS_US,
+        "cases": cases,
+        "relabel_cases": relabel_cases,
+    }
+
+
 # ----------------------------------------------------------------- harness
 
 GENERATORS = {
@@ -972,6 +1153,7 @@ GENERATORS = {
     "durability.json": gen_durability,
     "segments.json": gen_segments,
     "cluster_merge.json": gen_cluster,
+    "metrics_exposition.json": gen_metrics,
 }
 
 

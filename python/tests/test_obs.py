@@ -1,0 +1,141 @@
+"""Observability fixture mirror (numpy-only — runs where jax is absent).
+
+The committed ``metrics_exposition.json`` pins the Rust registry's
+Prometheus text rendering byte-for-byte (``rust/tests/golden.rs``
+consumes it). This suite keeps the fixture itself honest from the
+Python side, so a bad generator cannot pin a bad renderer:
+
+1. bucket placement must agree with an independent numpy formulation
+   (``np.digitize`` with right-closed intervals) — the generator's
+   linear scan and the kernel's ``position(v <= edge)`` encode the same
+   inclusive-``le`` semantics;
+2. every rendered histogram must be internally consistent: cumulative
+   buckets monotone, the ``+Inf`` bucket equal to ``_count``, ``_sum``
+   equal to the sum of the raw observations;
+3. the exposition grammar must hold line by line (HELP/TYPE once per
+   family, families name-sorted, every sample value an integer);
+4. the relabel cases must put the injected label FIRST on every sample
+   line and change nothing else — the property that keeps the router's
+   fleet aggregation a pure text rewrite.
+"""
+
+import json
+import re
+
+import numpy as np
+import pytest
+
+import gen_vectors as gv
+
+DOC = json.loads((gv.VECTOR_DIR / "metrics_exposition.json").read_text())
+
+SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})? (?P<value>-?\d+)$'
+)
+
+
+def parse_samples(text):
+    """(name, labels-string, int value) triples of every sample line."""
+    out = []
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        assert m, f"unparseable sample line: {line!r}"
+        out.append((m["name"], m["labels"] or "", int(m["value"])))
+    return out
+
+
+def test_bucket_ladder_matches_rust_constant_shape():
+    edges = DOC["buckets_us"]
+    assert edges == sorted(edges) and len(set(edges)) == len(edges)
+    assert edges[0] == 1 and edges[-1] == 5_000_000
+    assert edges == gv.METRIC_BUCKETS_US
+
+
+def test_bucketize_agrees_with_numpy_digitize():
+    edges = np.asarray(DOC["buckets_us"], dtype=np.uint64)
+    rng = np.random.default_rng(0x0B5)
+    vals = np.concatenate([
+        rng.integers(0, 10_000_000, size=500, dtype=np.uint64),
+        edges,          # every exact edge
+        edges + 1,      # just past every edge
+        np.asarray([0], dtype=np.uint64),
+    ])
+    counts = np.asarray(gv.metrics_bucketize(vals.tolist()))
+    # independent formulation: right-closed interval index per value
+    idx = np.digitize(vals, edges, right=True)
+    want = np.bincount(idx, minlength=len(edges) + 1)
+    np.testing.assert_array_equal(counts, want)
+
+
+@pytest.mark.parametrize("case", DOC["cases"], ids=lambda c: c["name"])
+def test_rendered_histograms_are_consistent(case):
+    text = case["rendered"]
+    for fam in case["families"]:
+        if fam["kind"] != "histogram":
+            continue
+        name = fam["fname"]
+        buckets = []
+        for line in text.splitlines():
+            m = re.match(rf'^{name}_bucket{{.*le="([^"]+)"}} (\d+)$', line)
+            if m:
+                buckets.append((m[1], int(m[2])))
+        assert [b[0] for b in buckets] == [str(e) for e in DOC["buckets_us"]] + ["+Inf"]
+        cum = [b[1] for b in buckets]
+        assert cum == sorted(cum), "cumulative buckets must be monotone"
+        samples = dict((n, v) for n, _, v in parse_samples(text))
+        assert cum[-1] == len(fam["observe_us"]) == samples[f"{name}_count"]
+        assert samples[f"{name}_sum"] == sum(fam["observe_us"])
+
+
+@pytest.mark.parametrize("case", DOC["cases"], ids=lambda c: c["name"])
+def test_exposition_grammar_and_family_order(case):
+    text = case["rendered"]
+    if not case["families"]:
+        assert text == ""
+        return
+    assert text.endswith("\n") and "\n\n" not in text
+    helped, typed, family_order = [], [], []
+    for line in text.splitlines():
+        if line.startswith("# HELP "):
+            helped.append(line.split(" ", 3)[2])
+        elif line.startswith("# TYPE "):
+            name = line.split(" ", 3)[2]
+            typed.append(name)
+            family_order.append(name)
+        else:
+            assert SAMPLE_RE.match(line), f"bad sample line {line!r}"
+    assert helped == typed, "HELP and TYPE must pair up in order"
+    assert len(set(helped)) == len(helped), "HELP/TYPE must appear once per family"
+    assert family_order == sorted(family_order), "families must render name-sorted"
+    # counter/gauge values round-trip exactly
+    samples = parse_samples(text)
+    for fam in case["families"]:
+        if fam["kind"] in ("counter", "gauge"):
+            labels = ",".join(f'{k}="{v}"' for k, v in fam.get("labels", []))
+            assert (fam["fname"], labels, fam["value"]) in samples
+
+
+@pytest.mark.parametrize("rc", DOC["relabel_cases"],
+                         ids=lambda rc: f'{rc["key"]}={rc["value"]}')
+def test_relabel_injects_first_label_and_nothing_else(rc):
+    key, value = rc["key"], rc["value"]
+    in_lines = rc["input"].splitlines()
+    out_lines = rc["output"].splitlines()
+    assert len(in_lines) == len(out_lines)
+    tag = f'{key}="{value}"'
+    for src, dst in zip(in_lines, out_lines):
+        if not src or src.startswith("#"):
+            assert dst == src, "comment/empty lines must pass through"
+            continue
+        m = SAMPLE_RE.match(dst)
+        assert m, f"relabeled line unparseable: {dst!r}"
+        assert m["labels"].split(",")[0] == tag, "injected label must come first"
+        # removing the injected label restores the source line exactly
+        restored = dst.replace(tag + ",", "", 1) if tag + "," in dst \
+            else dst.replace("{" + tag + "}", "", 1)
+        assert restored == src
+    # the mirror reproduces the committed output
+    assert gv.metrics_relabel(rc["input"], key, value) == rc["output"]

@@ -950,6 +950,87 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    // ------------------------------------------- observability tax (obs)
+    // two numbers land in the JSON: `metrics_overhead_us` (the cost of one
+    // pre-registered histogram observation plus a counter bump — the whole
+    // per-step hot-path instrumentation, no string lookups) and
+    // `serve_tokps_traced_ratio` (demo-scale serve throughput with span
+    // tracing enabled over throughput with it disabled; the acceptance
+    // floor is 0.99 — tracing must be free at serving granularity).
+    {
+        use raana::obs::{self, trace};
+        use raana::serve::Server;
+        use std::sync::Arc;
+
+        let m = obs::metrics();
+        const OBS_PER_ITER: usize = 1024;
+        let obs_r = bench("metrics_observe", 2, 64, || {
+            for i in 0..OBS_PER_ITER {
+                m.decode_step_us.observe_us(i as u64);
+                m.tokens_generated.inc();
+            }
+        });
+        let metrics_overhead_us = obs_r.median() * 1e6 / OBS_PER_ITER as f64;
+
+        let (manifest, params, packed) =
+            raana::experiments::native_demo_packed("bench-obs", 256, 2, 4, 7)?;
+        let server = Arc::new(Server::start_native_packed(manifest, params, packed)?);
+        let gen_len = 32usize;
+        let prompt = vec![1i32, 2, 3];
+        let run = || {
+            let (_, rx) = server.submit(prompt.clone(), gen_len, 0.0, 0).unwrap();
+            let done = rx.recv().unwrap();
+            std::hint::black_box(done.tokens.len());
+        };
+        trace::tracer().set_enabled(false);
+        let plain_r = bench("serve_untraced", 1, 8, || run());
+        trace::tracer().set_enabled(true);
+        let traced_r = bench("serve_traced", 1, 8, || run());
+        trace::tracer().set_enabled(false);
+        trace::tracer().clear();
+        match Arc::try_unwrap(server) {
+            Ok(s) => {
+                s.shutdown()?;
+            }
+            Err(_) => anyhow::bail!("bench closure still holds the obs server"),
+        }
+
+        let tokps_plain = gen_len as f64 / plain_r.median().max(1e-12);
+        let tokps_traced = gen_len as f64 / traced_r.median().max(1e-12);
+        let serve_tokps_traced_ratio = tokps_traced / tokps_plain.max(1e-12);
+
+        let mut t = Table::new(&["Observability", "median", "derived"]);
+        t.row(vec![
+            "histogram observe + counter inc".into(),
+            format!("{:.1} ns", metrics_overhead_us * 1e3),
+            format!("{metrics_overhead_us:.4} us/step"),
+        ]);
+        t.row(vec![
+            format!("serve {gen_len} tok, tracing off"),
+            format!("{:.2} ms", plain_r.median() * 1e3),
+            format!("{tokps_plain:.0} tok/s"),
+        ]);
+        t.row(vec![
+            format!("serve {gen_len} tok, tracing on"),
+            format!("{:.2} ms", traced_r.median() * 1e3),
+            format!("{tokps_traced:.0} tok/s (ratio {serve_tokps_traced_ratio:.3})"),
+        ]);
+        println!("{}", t.render());
+        report.push((
+            "obs",
+            json::obj(vec![
+                ("observe_batch", bench_json(&obs_r)),
+                ("metrics_overhead_us", json::num(metrics_overhead_us)),
+                ("gen_len", json::num(gen_len as f64)),
+                ("serve_untraced", bench_json(&plain_r)),
+                ("serve_traced", bench_json(&traced_r)),
+                ("serve_tokps_untraced", json::num(tokps_plain)),
+                ("serve_tokps_traced", json::num(tokps_traced)),
+                ("serve_tokps_traced_ratio", json::num(serve_tokps_traced_ratio)),
+            ]),
+        ));
+    }
+
     let out = std::path::Path::new("BENCH_kernels.json");
     write_json_report(out, &json::obj(report))?;
     println!("wrote {}", out.display());

@@ -84,6 +84,7 @@ impl FleetHealth {
 
     /// A successful probe or RPC: back to full rotation from any state.
     pub fn record_success(&self, w: usize) {
+        crate::obs::metrics().probe_success.inc();
         let mut s = self.slots.lock().unwrap();
         if let Some(slot) = s.get_mut(w) {
             slot.state = WorkerState::Healthy;
@@ -104,6 +105,7 @@ impl FleetHealth {
     /// A failed probe or RPC: Healthy/Draining → Suspect, and Suspect →
     /// Down once `down_after` consecutive failures accumulate.
     pub fn record_failure(&self, w: usize) {
+        crate::obs::metrics().probe_failure.inc();
         let mut s = self.slots.lock().unwrap();
         if let Some(slot) = s.get_mut(w) {
             slot.fails = slot.fails.saturating_add(1);

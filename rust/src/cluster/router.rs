@@ -43,7 +43,7 @@
 //! Every RPC uses [`ClientConfig`] connect/read deadlines, so a wedged
 //! worker costs a bounded timeout, never a hung router thread.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -56,9 +56,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::index::{SearchHit, DEFAULT_RERANK_FACTOR};
 use crate::json::{self, Value};
 use crate::net::{
-    hits_json, http_request_retry_with, http_request_with, parse_f32_array, read_request, respond,
-    respond_error, respond_method_not_allowed, ClientConfig,
+    header, hits_json, http_request_retry_with, http_request_with, parse_f32_array, read_request,
+    respond, respond_error, respond_method_not_allowed, respond_text, ClientConfig,
 };
+use crate::obs::{self, trace};
 use crate::threadpool::{default_threads, Pool};
 use crate::util;
 
@@ -358,14 +359,34 @@ fn handle_router_connection(state: &RouterState, mut stream: TcpStream, overflow
     let req = match read_request(&stream) {
         Ok(r) => r,
         Err(e) => {
+            // unparseable request: echo the inbound id when the head
+            // parsed (read_request installed it), else mint one so the
+            // error echo is still correlatable — same rule as the worker
+            if trace::current_rid().is_none() {
+                trace::set_current_rid(Some(trace::mint_rid()));
+            }
             let _ = respond_error(&mut stream, e.status, &e.msg);
+            trace::set_current_rid(None);
             return;
         }
     };
+    // one id per client request, installed for the whole dispatch: the
+    // in-crate HTTP client forwards it on every router→worker RPC below,
+    // and every response writer echoes it back to the client
+    trace::set_current_rid(Some(trace::admit_rid(header(&req.headers, "x-request-id"))));
+    obs::metrics().http_requests.inc();
     let method = req.method.as_str();
     match req.path.as_str() {
         "/healthz" => match method {
             "GET" => handle_router_healthz(state, &mut stream),
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        // fleet scrape: aggregation is a bounded scatter (deadlined
+        // RPCs), so like /healthz it stays live under overflow
+        "/metrics" => match method {
+            "GET" => handle_fleet_metrics(state, &mut stream),
             _ => {
                 let _ = respond_method_not_allowed(&mut stream, method, "GET");
             }
@@ -424,6 +445,7 @@ fn handle_router_connection(state: &RouterState, mut stream: TcpStream, overflow
             let _ = respond_error(&mut stream, 404, &format!("no endpoint {p}"));
         }
     }
+    trace::set_current_rid(None);
 }
 
 fn handle_router_healthz(state: &RouterState, stream: &mut TcpStream) {
@@ -456,12 +478,22 @@ fn handle_cluster_generate(state: &RouterState, stream: &mut TcpStream, body: &[
     let start = state.rr.fetch_add(1, Ordering::SeqCst);
     for i in 0..targets.len() {
         let w = targets[(start + i) % targets.len()];
-        match relay_generate(state, w, stream, body) {
+        let t0 = trace::tracer().now_us();
+        let outcome = relay_generate(state, w, stream, body);
+        let dur = trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().router_hop_us.observe_us(dur);
+        trace::record_ambient("router_hop", t0, dur, w as i64);
+        match outcome {
             RelayOutcome::Done => {
                 state.health.record_success(w);
                 return;
             }
-            RelayOutcome::PreResponse => state.health.record_failure(w),
+            RelayOutcome::PreResponse => {
+                // zero bytes reached the client, so the loop retries the
+                // next worker with the same request (and the same id)
+                obs::metrics().relay_retries.inc();
+                state.health.record_failure(w);
+            }
         }
     }
     let _ = respond_error(
@@ -492,9 +524,16 @@ fn relay_generate(state: &RouterState, w: usize, client: &mut TcpStream, body: &
     let _ = upstream.set_nodelay(true);
     let _ = upstream.set_read_timeout(Some(GENERATE_READ_TIMEOUT));
     let _ = upstream.set_write_timeout(Some(WRITE_TIMEOUT));
+    // forward the client's request id so the worker's spans and response
+    // carry it (the relay copies bytes verbatim, so the worker's echoed
+    // X-Request-Id header is what the client ultimately sees)
+    let rid_line = match trace::current_rid() {
+        Some(rid) => format!("X-Request-Id: {rid}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
         "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n",
+         {rid_line}Connection: close\r\n\r\n",
         body.len()
     );
     if upstream.write_all(head.as_bytes()).and_then(|()| upstream.write_all(body)).is_err() {
@@ -833,6 +872,7 @@ fn handle_cluster_query(state: &RouterState, name: &str, stream: &mut TcpStream,
     // phase 1: scatter the estimated scan to every shard that holds rows
     let q_json = json::arr(q.iter().map(|&x| json::num(x as f64)).collect()).to_json();
     let gathered: Mutex<Vec<(usize, Vec<SearchHit>)>> = Mutex::new(Vec::new());
+    let rid = trace::current_rid();
     thread::scope(|sc| {
         for s in 0..n_shards {
             if merge::shard_rows(s, n_shards, n) == 0 {
@@ -849,7 +889,11 @@ fn handle_cluster_query(state: &RouterState, name: &str, stream: &mut TcpStream,
             let gathered = &gathered;
             let failed = &failed;
             let q_json = &q_json;
+            let rid = rid.clone();
             sc.spawn(move || {
+                // thread-locals don't inherit: re-install the request id so
+                // the shard RPC carries the client's X-Request-Id
+                trace::set_current_rid(rid);
                 let body = format!("{{\"vector\":{q_json},\"take\":{scan_take}}}");
                 let path = format!("/v1/collections/{name}/scan");
                 match http_request_with(state.addr(w), "POST", &path, Some(&body), state.cfg.client)
@@ -896,7 +940,9 @@ fn handle_cluster_query(state: &RouterState, name: &str, stream: &mut TcpStream,
             let exact = &exact;
             let failed = &failed;
             let q_json = &q_json;
+            let rid = rid.clone();
             sc.spawn(move || {
+                trace::set_current_rid(rid);
                 let ids: Vec<String> =
                     gids.iter().map(|&g| merge::local_of(g, n_shards).to_string()).collect();
                 let body = format!("{{\"vector\":{q_json},\"ids\":[{}]}}", ids.join(","));
@@ -955,11 +1001,93 @@ fn query_response(name: &str, hits: &[SearchHit], degraded: bool, failed: &[usiz
     ])
 }
 
+// ----------------------------------------------------------------- metrics
+
+/// Fleet `GET /metrics`: the router's own registry first, then each
+/// reachable worker's exposition with a `worker="<i>"` label injected
+/// into every sample line ([`obs::relabel_exposition`]) and repeated
+/// `# HELP`/`# TYPE` lines suppressed. No values are parsed or
+/// combined — relabeled histogram `_bucket` lines stay element-wise
+/// summable downstream, which is the whole point of shipping buckets
+/// instead of percentiles (see [`handle_fleet_stats`]).
+fn handle_fleet_metrics(state: &RouterState, stream: &mut TcpStream) {
+    let states = state.health.snapshot();
+    let n = states.len();
+    let rid = trace::current_rid();
+    let per: Mutex<Vec<(usize, Option<String>)>> = Mutex::new(Vec::new());
+    thread::scope(|sc| {
+        for w in 0..n {
+            if states[w] == WorkerState::Down {
+                per.lock().unwrap().push((w, None));
+                continue; // don't wait out timeouts on condemned workers
+            }
+            let per = &per;
+            let rid = rid.clone();
+            sc.spawn(move || {
+                // scoped threads don't inherit the thread-local id;
+                // re-install it so each scrape RPC carries the scrape's id
+                trace::set_current_rid(rid);
+                let got =
+                    http_request_with(state.addr(w), "GET", "/metrics", None, state.cfg.client)
+                        .ok()
+                        .filter(|r| r.status == 200)
+                        .and_then(|r| String::from_utf8(r.body).ok());
+                per.lock().unwrap().push((w, got));
+            });
+        }
+    });
+    let mut per = per.into_inner().unwrap();
+    per.sort_by_key(|&(w, _)| w);
+
+    let mut out = obs::metrics().registry.render();
+    // one HELP/TYPE per family across the whole concatenation, keyed
+    // "(comment kind):(family name)"; the router's own render seeds the set
+    let mut seen: BTreeSet<String> = out
+        .lines()
+        .filter_map(comment_key)
+        .collect();
+    for (w, text) in &per {
+        let Some(text) = text else { continue };
+        let labeled = obs::relabel_exposition(text, "worker", &w.to_string());
+        for line in labeled.lines() {
+            if let Some(key) = comment_key(line) {
+                if !seen.insert(key) {
+                    continue;
+                }
+            }
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    let _ = respond_text(stream, 200, "OK", &out);
+}
+
+/// `"HELP:name"` / `"TYPE:name"` for a `# HELP`/`# TYPE` line, `None`
+/// for sample lines.
+fn comment_key(line: &str) -> Option<String> {
+    let rest = line.strip_prefix("# ")?;
+    let mut it = rest.split_whitespace();
+    let kind = it.next()?;
+    let name = it.next()?;
+    Some(format!("{kind}:{name}"))
+}
+
 // ------------------------------------------------------------------- stats
 
+/// Fleet `GET /v1/stats`.
+///
+/// **Latency-window invariant** (mirrors `net::stats_json`): fleet
+/// percentiles are computed exactly once, over the concatenation of the
+/// per-worker raw windows — never by combining per-worker percentiles.
+/// For dashboards that need to re-aggregate further, the response also
+/// carries the *summable* forms: each worker's `latency_buckets`
+/// (non-cumulative counts over the shared `latency_bucket_le_us` edges)
+/// and their element-wise fleet sum `latency_bucket_counts`. Buckets
+/// may be summed freely; percentiles may not.
 fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
     let states = state.health.snapshot();
     let n = states.len();
+    let rid = trace::current_rid();
     let per: Mutex<Vec<(usize, Option<Value>)>> = Mutex::new(Vec::new());
     thread::scope(|sc| {
         for w in 0..n {
@@ -968,7 +1096,9 @@ fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
                 continue; // don't wait out timeouts on condemned workers
             }
             let per = &per;
+            let rid = rid.clone();
             sc.spawn(move || {
+                trace::set_current_rid(rid);
                 let got = http_request_with(state.addr(w), "GET", "/v1/stats", None, state.cfg.client)
                     .ok()
                     .filter(|r| r.status == 200)
@@ -984,6 +1114,7 @@ fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
     let mut tokens = 0.0f64;
     let mut queue_depth = 0.0f64;
     let mut latencies: Vec<f64> = Vec::new();
+    let mut fleet_buckets = vec![0u64; obs::LATENCY_BUCKETS_US.len() + 1];
     let mut per_worker = Vec::with_capacity(n);
     for (w, stats) in &per {
         let mut fields = vec![
@@ -1002,6 +1133,19 @@ fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
             if let Some(window) = v.get("latencies_secs").and_then(Value::as_arr) {
                 latencies.extend(window.iter().filter_map(Value::as_f64));
             }
+            // pass each worker's bucket counts through verbatim AND sum
+            // them — buckets are the one latency form that aggregates by
+            // plain addition (see this fn's rustdoc)
+            if let Some(counts) = v.get("latency_bucket_counts").and_then(Value::as_arr) {
+                let counts: Vec<f64> = counts.iter().filter_map(Value::as_f64).collect();
+                for (acc, &c) in fleet_buckets.iter_mut().zip(&counts) {
+                    *acc += c as u64;
+                }
+                fields.push((
+                    "latency_buckets",
+                    json::arr(counts.into_iter().map(json::num).collect()),
+                ));
+            }
         }
         per_worker.push(json::obj(fields));
     }
@@ -1017,6 +1161,14 @@ fn handle_fleet_stats(state: &RouterState, stream: &mut TcpStream) {
         ("latency_samples", json::num(latencies.len() as f64)),
         ("p50_latency_secs", json::num(util::percentile(&latencies, 50.0))),
         ("p95_latency_secs", json::num(util::percentile(&latencies, 95.0))),
+        (
+            "latency_bucket_le_us",
+            json::arr(obs::LATENCY_BUCKETS_US.iter().map(|&e| json::num(e as f64)).collect()),
+        ),
+        (
+            "latency_bucket_counts",
+            json::arr(fleet_buckets.into_iter().map(|c| json::num(c as f64)).collect()),
+        ),
         ("per_worker", json::arr(per_worker)),
     ]);
     let _ = respond(stream, 200, "OK", &body.to_json());

@@ -88,6 +88,7 @@ use super::segment::{
 use super::wal::{decode_records, encode_record, wal_path, WalRecord, WalTail, WAL_DIR};
 use super::{Collection, IndexConfig, IndexError, SearchHit, VectorStore};
 use crate::hadamard::PracticalRht;
+use crate::obs;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -549,10 +550,14 @@ impl DurableStore {
         engine.rows_since_seal += out.1;
         let path = wal_path(&engine.data_dir, name);
         let fsync = engine.fsync == FsyncPolicy::Always;
+        let t0 = obs::trace::tracer().now_us();
         let append_result = engine
             .io
             .append(&path, &bytes, fsync)
             .map_err(|e| format!("WAL append to {}: {e}", path.display()));
+        let dur = obs::trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().wal_append_us.observe_us(dur);
+        obs::trace::record_ambient("wal_append", t0, dur, bytes.len() as i64);
         if let Err(append_err) = append_result {
             return match self.seal_locked(&mut engine) {
                 // the reseal covered the consumed seq (and these rows):
@@ -610,6 +615,15 @@ impl DurableStore {
     /// intact), then move the sealed heads in memory under a brief
     /// store write lock.
     pub(super) fn seal_locked(&self, engine: &mut Engine) -> Result<(), IndexError> {
+        let t0 = obs::trace::tracer().now_us();
+        let out = self.seal_inner(engine);
+        let dur = obs::trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().wal_seal_us.observe_us(dur);
+        obs::trace::record_ambient("wal_seal", t0, dur, if out.is_ok() { 0 } else { -1 });
+        out
+    }
+
+    fn seal_inner(&self, engine: &mut Engine) -> Result<(), IndexError> {
         let (writes, manifest_bytes, gen, seals, new_next_id) = {
             let store = self.store.read().expect("index store lock poisoned");
             let mut next_id = engine.next_seg_id;

@@ -39,10 +39,23 @@
 //! bit-for-bit.
 #![deny(missing_docs)]
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::hadamard::PracticalRht;
 use crate::rabitq::{grid_center, PackedCodes, QuantizedMatrix};
 use crate::tensor::Matrix;
 use crate::threadpool;
+
+/// Process-wide count of [`qgemm`] invocations — the packed-code GEMM is
+/// *the* serving hot-path kernel, so this counter (exposed as
+/// `raana_qgemm_calls_total` in the metrics registry) is the live
+/// equivalent of the offline BENCH_kernels.json call counts.
+static QGEMM_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// Read the packed-code GEMM invocation counter.
+pub fn qgemm_calls() -> usize {
+    QGEMM_CALLS.load(Ordering::Relaxed)
+}
 
 /// Output-column block width of [`qgemm`] (accumulator panel width).
 pub const COL_BLOCK: usize = 32;
@@ -219,6 +232,7 @@ fn decode_bits_streaming(data: &[u8], bits: usize, mask: u32, bitpos: usize, out
 /// in `threads` (0 = default).
 pub fn qgemm(x: &Matrix, qm: &QuantizedMatrix, threads: usize) -> Matrix {
     assert_eq!(x.cols, qm.d, "qgemm shape mismatch");
+    QGEMM_CALLS.fetch_add(1, Ordering::Relaxed);
     let (n, c) = (x.rows, qm.c);
     let mut out = Matrix::zeros(n, c);
     if n == 0 || c == 0 {

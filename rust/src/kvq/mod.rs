@@ -556,6 +556,10 @@ impl QuantizedKvStore {
         out: &mut [f32],
     ) {
         debug_assert!(layer < self.n_layers && slot < self.slots && ctx <= self.capacity);
+        // phase timing only: the clock reads bracket the kernel and feed
+        // a histogram/span — nothing here touches the computation, which
+        // is what keeps traced decode bit-identical to untraced
+        let t0 = crate::obs::trace::tracer().now_us();
         let (kb, vb) = self.plan.bits[layer];
         let start = slot * self.capacity * self.d_model;
         let rstart = slot * self.capacity * self.n_heads;
@@ -581,6 +585,9 @@ impl QuantizedKvStore {
             scratch,
             out,
         );
+        let dur = crate::obs::trace::tracer().now_us().saturating_sub(t0);
+        crate::obs::metrics().kvq_attend_us.observe_us(dur);
+        crate::obs::trace::record_ambient("kvq_attend", t0, dur, layer as i64);
     }
 }
 

@@ -33,6 +33,9 @@
 //!   ([`serve::index::IndexServer`]). For horizontal scale-out, the
 //!   [`cluster`] module runs N such nodes behind a consistent-hashing
 //!   router with bit-identical scatter-gather queries and fleet health.
+//!   Cross-cutting telemetry lives in [`obs`]: a std-only metrics
+//!   registry behind `GET /metrics`, per-request tracing with cluster-wide
+//!   id propagation, and phase-level timing of the quantized hot path.
 //!
 //! Entry points: the `raana` binary (see `rust/src/main.rs`) and the
 //! examples under `examples/`.
@@ -54,6 +57,7 @@ pub mod kernels;
 pub mod kvq;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod rabitq;
 pub mod rng;

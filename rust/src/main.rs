@@ -33,6 +33,15 @@
 //!            [--probe-ms MS --down-after N] fleet health + stats; see
 //!            [--connect-timeout-ms MS]     ARCHITECTURE §Cluster
 //!            [--rpc-read-timeout-ms MS]
+//!
+//! Observability flags (any subcommand that serves traffic):
+//!   --trace            enable span tracing into the in-memory ring
+//!                      (inspect via tests/tools; cheap, bounded)
+//!   --trace-log PATH   also append every span as one JSON line to PATH
+//!                      (implies --trace); see ARCHITECTURE §Observability
+//! Every serving node exposes `GET /metrics` (Prometheus text format);
+//! the router's /metrics aggregates all reachable workers' families with
+//! a `worker="i"` label.
 
 use anyhow::{bail, Result};
 
@@ -47,6 +56,7 @@ use raana::{benchlib, info};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    apply_trace_args(&args)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => cmd_info(),
@@ -67,6 +77,23 @@ fn main() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Wire `--trace` / `--trace-log PATH` into the process-wide tracer
+/// before any subcommand starts serving. `--trace-log` implies `--trace`
+/// (the sink enables tracing); `--trace` alone records into the bounded
+/// in-memory ring only.
+fn apply_trace_args(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("trace-log") {
+        raana::obs::trace::tracer()
+            .set_jsonl_sink(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("--trace-log {path}: {e}"))?;
+        info!("tracing enabled, spans appended to {path}");
+    } else if args.flag("trace") {
+        raana::obs::trace::tracer().set_enabled(true);
+        info!("tracing enabled (in-memory ring only)");
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {

@@ -118,6 +118,20 @@
 //! [`Server`] underneath is owned via `Arc` and shut down by the caller
 //! afterwards, so queued work still completes.
 //!
+//! # Observability
+//!
+//! `GET /metrics` renders the process-wide [`crate::obs`] registry as
+//! Prometheus text exposition and — like `/healthz` and `/v1/stats` —
+//! stays live under overflow: a scrape must not fail on a
+//! busy-but-healthy server. Every request carries a request id (inbound
+//! `X-Request-Id` when valid, minted otherwise) that is echoed as an
+//! `X-Request-Id` response header on **every** path, success and error
+//! alike (400/404/405/408/409/413/429/500/503/507 and the streaming
+//! head), and attached by the in-crate HTTP client to outgoing
+//! requests — including every attempt of [`http_request_retry_with`],
+//! which mints one id up front when the caller has none, so all
+//! attempts of one logical request correlate.
+//!
 //! # Limits
 //!
 //! Request heads are capped at [`MAX_HEAD_BYTES`], bodies at
@@ -142,6 +156,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::data::tokenize;
 use crate::index::{IndexError, DEFAULT_RERANK_FACTOR};
 use crate::json::{self, Value};
+use crate::obs::{self, trace};
 use crate::serve::index::IndexServer;
 use crate::serve::{AdmitError, Completion, Server, ServerStats, StreamEvent, StreamHandle};
 use crate::threadpool::{default_threads, Pool};
@@ -477,6 +492,10 @@ pub(crate) fn read_request(stream: &TcpStream) -> Result<HttpRequest, HttpError>
         headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
     }
 
+    // the head parsed: adopt the caller's id NOW, so even refusals decided
+    // below (over-cap 413, body timeout 408) echo it instead of minting
+    trace::set_current_rid(Some(trace::admit_rid(header(&headers, "x-request-id"))));
+
     let content_length = match header(&headers, "content-length") {
         None => 0,
         Some(v) => v
@@ -540,7 +559,14 @@ fn handle_connection(
     let req = match read_request(&stream) {
         Ok(r) => r,
         Err(e) => {
+            // even a request we failed to read gets a correlatable id: if
+            // the head parsed, read_request installed the inbound one and
+            // this refusal echoes it — otherwise mint outright
+            if trace::current_rid().is_none() {
+                trace::set_current_rid(Some(trace::mint_rid()));
+            }
             let _ = respond_error(&mut stream, e.status, &e.msg);
+            trace::set_current_rid(None);
             // The client may still be mid-send (e.g. a 413 refused before
             // its body arrived). Closing with unread bytes in the receive
             // buffer can RST the queued response away, so: FIN our write
@@ -559,6 +585,26 @@ fn handle_connection(
             return;
         }
     };
+    // admission: adopt a valid inbound X-Request-Id or mint one; the
+    // ambient id is echoed by every response writer below and attached
+    // to any RPC this thread issues while serving the request
+    trace::set_current_rid(Some(trace::admit_rid(header(&req.headers, "x-request-id"))));
+    obs::metrics().http_requests.inc();
+    dispatch_request(server, index, drain, &mut stream, cap, overflow, &req);
+    trace::set_current_rid(None);
+}
+
+/// Route one parsed request (the ambient request id is installed).
+fn dispatch_request(
+    server: &Server,
+    index: Option<&IndexServer>,
+    drain: Option<&AtomicBool>,
+    stream: &mut TcpStream,
+    cap: usize,
+    overflow: bool,
+    req: &HttpRequest,
+) {
+    let mut stream = stream;
     let method = req.method.as_str();
     match req.path.as_str() {
         "/healthz" => match method {
@@ -578,6 +624,16 @@ fn handle_connection(
         "/v1/stats" => match method {
             "GET" => {
                 let _ = respond(&mut stream, 200, "OK", &stats_json(server, index).to_json());
+            }
+            _ => {
+                let _ = respond_method_not_allowed(&mut stream, method, "GET");
+            }
+        },
+        // scrape endpoint: like /healthz, stays live under overflow — a
+        // Prometheus scrape must not fail on a busy-but-healthy server
+        "/metrics" => match method {
+            "GET" => {
+                let _ = respond_text(&mut stream, 200, "OK", &obs::metrics().registry.render());
             }
             _ => {
                 let _ = respond_method_not_allowed(&mut stream, method, "GET");
@@ -714,7 +770,13 @@ fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], cap: us
     // a non-streaming response writes nothing until completion, so client
     // disconnects are detected by probing the socket for EOF instead of
     // by a failing chunk write — either way the KV lane is freed.
-    match server.submit_streaming(gen.prompt, max_new_tokens, gen.temperature, gen.seed) {
+    let t0 = trace::tracer().now_us();
+    let submitted = server.submit_streaming(gen.prompt, max_new_tokens, gen.temperature, gen.seed);
+    trace::record_ambient("admission", t0, trace::tracer().now_us() - t0, match &submitted {
+        Ok(_) => 0,
+        Err(_) => -1,
+    });
+    match submitted {
         Ok(handle) if gen.stream => stream_response(stream, handle),
         Ok(handle) => collect_response(stream, handle),
         Err(e) => {
@@ -792,8 +854,16 @@ fn collect_response(stream: &mut TcpStream, handle: StreamHandle) {
 /// write yet) the socket is probed for EOF like the non-streaming path,
 /// so a client that disconnects before its first token cancels too.
 fn stream_response(stream: &mut TcpStream, handle: StreamHandle) {
-    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
-                Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    let mut head = String::from(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n",
+    );
+    if let Some(rid) = trace::current_rid() {
+        head.push_str("X-Request-Id: ");
+        head.push_str(&rid);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     if stream.write_all(head.as_bytes()).and_then(|_| stream.flush()).is_err() {
         handle.cancel.cancel();
         return;
@@ -1304,6 +1374,17 @@ fn completion_json(c: &Completion, done_marker: bool) -> Value {
     json::obj(fields)
 }
 
+/// Build the `/v1/stats` snapshot.
+///
+/// **Latency-window invariant.** Percentiles here are computed over this
+/// node's own bounded window and are *terminal* — they must never be
+/// combined across nodes (a mean of p95s is not a fleet p95). What IS
+/// safe to combine are the two re-aggregatable forms exposed alongside:
+/// `latencies_secs` (the raw window; a router concatenates windows and
+/// computes fleet percentiles ONCE) and `latency_bucket_counts`
+/// (non-cumulative counts over the shared [`obs::LATENCY_BUCKETS_US`]
+/// edges, element-wise summable across workers — the form dashboards
+/// re-aggregate without the averaging-percentiles trap).
 fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
     let s: ServerStats = server.stats();
     let mut fields = vec![
@@ -1333,6 +1414,22 @@ fn stats_json(server: &Server, index: Option<&IndexServer>) -> Value {
         (
             "latencies_secs",
             json::arr(s.latencies.iter().map(|&x| json::num(x)).collect()),
+        ),
+        // the same window as summable histogram buckets (shared µs edge
+        // layout): these MAY be element-wise summed across workers,
+        // unlike the percentile fields above — see this fn's rustdoc
+        (
+            "latency_bucket_le_us",
+            json::arr(obs::LATENCY_BUCKETS_US.iter().map(|&e| json::num(e as f64)).collect()),
+        ),
+        (
+            "latency_bucket_counts",
+            json::arr(
+                obs::bucketize_us(s.latencies.iter().map(|&secs| (secs * 1e6) as u64))
+                    .into_iter()
+                    .map(|c| json::num(c as f64))
+                    .collect(),
+            ),
         ),
         ("wall_secs", json::num(s.wall_secs)),
     ];
@@ -1378,11 +1475,41 @@ pub(crate) fn respond_with_headers(
     extra: &[(&str, &str)],
     body: &str,
 ) -> std::io::Result<()> {
+    respond_full(stream, status, reason, "application/json", extra, body)
+}
+
+/// Plain-text response — the `/metrics` exposition body.
+pub(crate) fn respond_text(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    respond_full(stream, status, reason, "text/plain; version=0.0.4", &[], body)
+}
+
+/// The one response writer every non-streaming path funnels through —
+/// which is what makes the `X-Request-Id` echo universal: whenever the
+/// serving thread has an ambient request id installed, it is emitted
+/// here, on successes and on every error status alike.
+fn respond_full(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    if let Some(rid) = trace::current_rid() {
+        head.push_str("X-Request-Id: ");
+        head.push_str(&rid);
+        head.push_str("\r\n");
+    }
     for (k, v) in extra {
         head.push_str(k);
         head.push_str(": ");
@@ -1396,6 +1523,7 @@ pub(crate) fn respond_with_headers(
 }
 
 pub(crate) fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> std::io::Result<()> {
+    obs::metrics().http_errors.inc();
     let reason = match status {
         400 => "Bad Request",
         404 => "Not Found",
@@ -1431,6 +1559,7 @@ pub(crate) fn respond_method_not_allowed(
     method: &str,
     allow: &str,
 ) -> std::io::Result<()> {
+    obs::metrics().http_errors.inc();
     let body = json::obj(vec![(
         "error",
         json::s(&format!("method {method} not allowed here (allow: {allow})")),
@@ -1552,9 +1681,16 @@ pub fn http_request_with(
         stream.set_read_timeout(cfg.read_timeout).ok();
     }
     let body_bytes = body.unwrap_or("");
+    // propagate the ambient request id: a router thread serving request
+    // R forwards R's id on this RPC, so worker-side spans and response
+    // headers correlate with the client-facing request
+    let rid_line = match trace::current_rid() {
+        Some(rid) => format!("X-Request-Id: {rid}\r\n"),
+        None => String::new(),
+    };
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n{body_bytes}",
+         {rid_line}Connection: close\r\n\r\n{body_bytes}",
         body_bytes.len()
     );
     stream.write_all(req.as_bytes()).context("writing request")?;
@@ -1593,6 +1729,28 @@ pub fn http_request_retry_with(
     cfg: ClientConfig,
 ) -> Result<HttpResponse> {
     let attempts = attempts.max(1);
+    // every attempt of one logical request must carry the same id so
+    // server-side logs/spans correlate the retries; mint one when the
+    // calling thread has none, and restore the ambient state after
+    let installed = trace::current_rid().is_none();
+    if installed {
+        trace::set_current_rid(Some(trace::mint_rid()));
+    }
+    let out = http_request_retry_inner(addr, method, path, body, attempts, cfg);
+    if installed {
+        trace::set_current_rid(None);
+    }
+    out
+}
+
+fn http_request_retry_inner(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    attempts: usize,
+    cfg: ClientConfig,
+) -> Result<HttpResponse> {
     let mut last_err = None;
     for attempt in 0..attempts {
         match http_request_with(addr, method, path, body, cfg) {

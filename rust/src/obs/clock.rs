@@ -1,0 +1,87 @@
+//! The `Clock` seam: where observability gets its notion of time.
+//!
+//! Every duration the metrics registry buckets and every span the tracer
+//! records flows through a [`Clock`] rather than calling
+//! `Instant::now()` inline — the same dependency-inversion move as the
+//! durability layer's `Io` seam (PR 6): production uses [`StdClock`]
+//! (the process-wide monotonic clock), while tests construct a
+//! [`ManualClock`] and advance it explicitly, so histogram bucket
+//! placement and span start/duration values are pinned exactly instead
+//! of asserted with slop.
+//!
+//! Time is a `u64` of **microseconds since an arbitrary epoch** (process
+//! start for [`StdClock`], zero for a fresh [`ManualClock`]). Only
+//! differences are meaningful; nothing here is wall-clock time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Monotonic microsecond clock. Implementations must be cheap — the hot
+/// path reads it around every phase boundary — and never go backwards.
+pub trait Clock: Send + Sync {
+    /// Microseconds since this clock's epoch.
+    fn now_us(&self) -> u64;
+}
+
+/// The production clock: `Instant`-based microseconds since the first
+/// read anywhere in the process (lazily initialized, so the epoch is
+/// shared by every user of [`StdClock`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StdClock;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+impl Clock for StdClock {
+    fn now_us(&self) -> u64 {
+        epoch().elapsed().as_micros() as u64
+    }
+}
+
+/// A hand-cranked clock for tests: starts at an arbitrary value and
+/// moves only when told to. Shared freely across threads.
+#[derive(Debug, Default)]
+pub struct ManualClock(AtomicU64);
+
+impl ManualClock {
+    /// A clock reading `start_us`.
+    pub fn new(start_us: u64) -> ManualClock {
+        ManualClock(AtomicU64::new(start_us))
+    }
+
+    /// Advance by `us` microseconds.
+    pub fn advance(&self, us: u64) {
+        self.0.fetch_add(us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn std_clock_is_monotonic() {
+        let c = StdClock;
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = ManualClock::new(100);
+        assert_eq!(c.now_us(), 100);
+        assert_eq!(c.now_us(), 100);
+        c.advance(37);
+        assert_eq!(c.now_us(), 137);
+    }
+}

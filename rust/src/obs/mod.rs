@@ -1,0 +1,680 @@
+//! Observability: metrics registry, Prometheus exposition, request
+//! tracing, and the `Clock` seam — the cross-cutting telemetry layer
+//! for the serving stack.
+//!
+//! # Registry
+//!
+//! A std-only metrics registry: [`Counter`]s and [`Gauge`]s are single
+//! atomics, [`Histogram`]s are fixed log-spaced microsecond buckets
+//! ([`LATENCY_BUCKETS_US`]) of atomics. Handles are **pre-registered at
+//! startup** and held as `Arc`s by the code that observes into them —
+//! the hot path performs zero string lookups and zero allocation per
+//! observation, the same discipline as the runtime's `ForwardIdx`
+//! (PR 7) that removed per-step name resolution from decode.
+//!
+//! [`Registry::render`] emits Prometheus text exposition (v0.0.4):
+//! families sorted by name, `# HELP`/`# TYPE` once per family,
+//! cumulative `_bucket{le=...}` lines plus `_sum`/`_count` for
+//! histograms. All sample values are integers, so the rendering is
+//! byte-deterministic for a given registry state — pinned by the
+//! committed `metrics_exposition.json` golden fixture and its numpy
+//! mirror (`python/tests/test_obs.py`), like every other subsystem.
+//!
+//! Existing flat counters (dequant calls, name resolutions, rerank row
+//! reads, qgemm calls) join the registry as **read-at-render** functions
+//! ([`Registry::register_fn_counter`]) — their call sites keep the
+//! single relaxed `fetch_add` they already had.
+//!
+//! # Fleet aggregation
+//!
+//! The cluster router's `GET /metrics` concatenates each worker's
+//! exposition with a `worker="<i>"` label injected into every sample
+//! line ([`relabel_exposition`]) and duplicate `# HELP`/`# TYPE` lines
+//! suppressed. Histogram buckets are *summable* across workers, which is
+//! exactly why buckets (not percentiles) are what crosses the wire —
+//! percentiles are still computed once over concatenated windows
+//! (`/v1/stats`), never averaged.
+//!
+//! # Tracing and time
+//!
+//! Per-request tracing lives in [`trace`]; time flows through the
+//! [`clock::Clock`] seam (production [`clock::StdClock`], tests a
+//! [`clock::ManualClock`]) so histogram bucketing and span timelines
+//! are deterministic under test.
+
+pub mod clock;
+pub mod trace;
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Histogram bucket upper bounds in microseconds: a log-spaced 1-2-5
+/// ladder from 1 µs to 5 s, plus the implicit `+Inf` overflow bucket.
+/// One shared layout for every duration histogram keeps fleet
+/// aggregation a plain element-wise sum.
+pub const LATENCY_BUCKETS_US: [u64; 21] = [
+    1, 2, 5, 10, 20, 50, 100, 200, 500, 1_000, 2_000, 5_000, 10_000, 20_000, 50_000, 100_000,
+    200_000, 500_000, 1_000_000, 2_000_000, 5_000_000,
+];
+
+/// Monotonic event counter (rendered with Prometheus `counter` type;
+/// names end in `_total` by convention).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depth, active lanes).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket duration histogram over [`LATENCY_BUCKETS_US`].
+///
+/// Buckets are stored **non-cumulative** (index `i` counts observations
+/// `v <= LATENCY_BUCKETS_US[i]` and greater than the previous edge; the
+/// final slot is the `+Inf` overflow) and rendered cumulative, per the
+/// exposition format. `observe_us` is a short branchless-ish scan over
+/// 21 edges plus two relaxed `fetch_add`s — cheap enough for per-phase
+/// hot-path use.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one duration in microseconds.
+    pub fn observe_us(&self, us: u64) {
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&edge| us <= edge)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Non-cumulative bucket counts (`LATENCY_BUCKETS_US.len() + 1`
+    /// entries; the last is the `+Inf` overflow).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Place `values_us` into the shared bucket layout: non-cumulative
+/// counts, `LATENCY_BUCKETS_US.len() + 1` entries (last = `+Inf`). This
+/// is the helper `/v1/stats` uses to expose the completion-latency
+/// window as summable buckets — see `net::stats_json` for the
+/// aggregation invariant.
+pub fn bucketize_us<I: IntoIterator<Item = u64>>(values_us: I) -> Vec<u64> {
+    let mut counts = vec![0u64; LATENCY_BUCKETS_US.len() + 1];
+    for v in values_us {
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&edge| v <= edge)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        counts[idx] += 1;
+    }
+    counts
+}
+
+enum Sample {
+    C(Arc<Counter>),
+    G(Arc<Gauge>),
+    H(Arc<Histogram>),
+    /// Read-at-render bridge for pre-existing flat counters.
+    F(fn() -> usize),
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: &'static str,
+    labels: Vec<(String, String)>,
+    sample: Sample,
+}
+
+/// Metric registry: registration happens at startup (mutex-guarded,
+/// allocation allowed), observation happens through the returned `Arc`
+/// handles (lock-free), rendering walks the registration list.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    /// An empty registry (tests; production uses [`metrics`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn push(&self, name: &str, help: &str, kind: &'static str, labels: &[(&str, &str)], sample: Sample) {
+        self.families.lock().unwrap_or_else(|e| e.into_inner()).push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            labels: labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+            sample,
+        });
+    }
+
+    /// Register an unlabeled counter and return its handle.
+    pub fn register_counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        self.push(name, help, "counter", &[], Sample::C(Arc::clone(&c)));
+        c
+    }
+
+    /// Register a labeled counter sample under `name` (several samples
+    /// may share a family name with distinct labels).
+    pub fn register_counter_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        self.push(name, help, "counter", labels, Sample::C(Arc::clone(&c)));
+        c
+    }
+
+    /// Register a counter whose value is read at render time from `f` —
+    /// the bridge for pre-existing flat counters (dequant calls, name
+    /// resolutions, rerank row reads) whose increment sites stay as they
+    /// are.
+    pub fn register_fn_counter(&self, name: &str, help: &str, f: fn() -> usize) {
+        self.push(name, help, "counter", &[], Sample::F(f));
+    }
+
+    /// Register an unlabeled gauge and return its handle.
+    pub fn register_gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        self.push(name, help, "gauge", &[], Sample::G(Arc::clone(&g)));
+        g
+    }
+
+    /// Register a labeled gauge sample under `name` (several samples may
+    /// share a family name with distinct labels).
+    pub fn register_gauge_with(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        self.push(name, help, "gauge", labels, Sample::G(Arc::clone(&g)));
+        g
+    }
+
+    /// Register an unlabeled histogram over [`LATENCY_BUCKETS_US`] and
+    /// return its handle.
+    pub fn register_histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::default());
+        self.push(name, help, "histogram", &[], Sample::H(Arc::clone(&h)));
+        h
+    }
+
+    /// Render the registry as Prometheus text exposition: families
+    /// sorted by name; `# HELP`/`# TYPE` emitted once per family name
+    /// (first registration's help wins); samples in registration order
+    /// within a name; histograms as cumulative `_bucket{le="..."}` lines
+    /// plus `_sum` and `_count`. Every value is an integer, so the
+    /// output is byte-deterministic for a given state — the property the
+    /// golden fixture pins.
+    pub fn render(&self) -> String {
+        let fams = self.families.lock().unwrap_or_else(|e| e.into_inner());
+        let mut order: Vec<usize> = (0..fams.len()).collect();
+        order.sort_by(|&a, &b| fams[a].name.cmp(&fams[b].name).then(a.cmp(&b)));
+        let mut out = String::new();
+        let mut last_name: Option<&str> = None;
+        for &i in &order {
+            let f = &fams[i];
+            if last_name != Some(f.name.as_str()) {
+                out.push_str("# HELP ");
+                out.push_str(&f.name);
+                out.push(' ');
+                out.push_str(&f.help);
+                out.push('\n');
+                out.push_str("# TYPE ");
+                out.push_str(&f.name);
+                out.push(' ');
+                out.push_str(f.kind);
+                out.push('\n');
+                last_name = Some(f.name.as_str());
+            }
+            let label_str = |extra: Option<(&str, &str)>| -> String {
+                let mut parts: Vec<String> =
+                    f.labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+                if let Some((k, v)) = extra {
+                    parts.push(format!("{k}=\"{v}\""));
+                }
+                if parts.is_empty() {
+                    String::new()
+                } else {
+                    format!("{{{}}}", parts.join(","))
+                }
+            };
+            match &f.sample {
+                Sample::C(c) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, label_str(None), c.get()));
+                }
+                Sample::F(get) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, label_str(None), get()));
+                }
+                Sample::G(g) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, label_str(None), g.get()));
+                }
+                Sample::H(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (bi, &edge) in LATENCY_BUCKETS_US.iter().enumerate() {
+                        cum += counts[bi];
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            f.name,
+                            label_str(Some(("le", &edge.to_string()))),
+                            cum
+                        ));
+                    }
+                    cum += counts[LATENCY_BUCKETS_US.len()];
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        f.name,
+                        label_str(Some(("le", "+Inf"))),
+                        cum
+                    ));
+                    out.push_str(&format!("{}_sum{} {}\n", f.name, label_str(None), h.sum_us()));
+                    out.push_str(&format!("{}_count{} {}\n", f.name, label_str(None), h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Inject `key="value"` as the **first** label of every sample line in
+/// an exposition text (comment lines pass through; the caller dedupes
+/// those). `name 3` becomes `name{key="value"} 3`; `name{le="5"} 3`
+/// becomes `name{key="value",le="5"} 3`. This is how the router folds N
+/// workers' metrics into one exposition without parsing values.
+pub fn relabel_exposition(text: &str, key: &str, value: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            out.push_str(line);
+            out.push('\n');
+            continue;
+        }
+        let Some(sp) = line.rfind(' ') else {
+            out.push_str(line);
+            out.push('\n');
+            continue;
+        };
+        let (series, val) = line.split_at(sp);
+        match series.find('{') {
+            Some(b) => {
+                out.push_str(&series[..=b]);
+                out.push_str(&format!("{key}=\"{value}\","));
+                out.push_str(&series[b + 1..]);
+            }
+            None => {
+                out.push_str(series);
+                out.push_str(&format!("{{{key}=\"{value}\"}}"));
+            }
+        }
+        out.push_str(val);
+        out.push('\n');
+    }
+    out
+}
+
+/// The pre-registered handle set every subsystem observes into: one
+/// global [`Registry`] plus `Arc` handles resolved **once**, at first
+/// use — never per request, never per token (the `ForwardIdx`
+/// discipline applied to telemetry).
+pub struct Metrics {
+    /// The registry behind `GET /metrics`.
+    pub registry: Registry,
+
+    // ---- HTTP front-end
+    /// Requests dispatched by the HTTP front-end (router or worker).
+    pub http_requests: Arc<Counter>,
+    /// Error responses written (any 4xx/5xx path).
+    pub http_errors: Arc<Counter>,
+
+    // ---- batching server phases
+    /// Admission-to-lane wait per request.
+    pub queue_wait_us: Arc<Histogram>,
+    /// Serve-level prefill (admission or window slide), per request.
+    pub prefill_us: Arc<Histogram>,
+    /// One batched decode step (all active lanes advance one token).
+    pub decode_step_us: Arc<Histogram>,
+    /// Tokens sampled.
+    pub tokens_generated: Arc<Counter>,
+    /// Completed generations.
+    pub completions: Arc<Counter>,
+    /// Abandoned generations (cancel, disconnect, invalid prompt).
+    pub cancelled: Arc<Counter>,
+    /// Full-window re-prefills.
+    pub window_slides: Arc<Counter>,
+    /// Requests admitted but not yet on a KV lane (live gauge).
+    pub queue_depth: Arc<Gauge>,
+    /// KV lanes currently holding an active request (live gauge).
+    pub lanes_active: Arc<Gauge>,
+
+    // ---- model runtime / kernels
+    /// `NativeModel::prefill` body (model work only, no serve overhead).
+    pub native_prefill_us: Arc<Histogram>,
+    /// `NativeModel::decode_step` body.
+    pub native_decode_us: Arc<Histogram>,
+    /// One attention pass over packed KV codes (per layer, per lane).
+    pub kvq_attend_us: Arc<Histogram>,
+
+    // ---- vector index
+    /// Single-node two-phase query (scan + rerank together).
+    pub index_query_us: Arc<Histogram>,
+    /// Phase-1 estimated scan (scatter-gather shard side).
+    pub index_scan_us: Arc<Histogram>,
+    /// Phase-2 exact rerank (scatter-gather shard side).
+    pub index_rerank_us: Arc<Histogram>,
+
+    // ---- durability
+    /// One WAL record append (encode + io append [+ fsync]).
+    pub wal_append_us: Arc<Histogram>,
+    /// One seal: segment writes + manifest commit + WAL pruning.
+    pub wal_seal_us: Arc<Histogram>,
+
+    // ---- cluster
+    /// Successful worker probes / RPC outcomes.
+    pub probe_success: Arc<Counter>,
+    /// Failed worker probes / RPC outcomes.
+    pub probe_failure: Arc<Counter>,
+    /// Generate relays retried on another worker after a pre-response
+    /// failure.
+    pub relay_retries: Arc<Counter>,
+    /// One router→worker generate relay, connect to last byte.
+    pub router_hop_us: Arc<Histogram>,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        let r = Registry::new();
+        let m = Metrics {
+            http_requests: r.register_counter(
+                "raana_http_requests_total",
+                "HTTP requests dispatched (worker front-end or router).",
+            ),
+            http_errors: r.register_counter(
+                "raana_http_errors_total",
+                "HTTP error responses written (4xx/5xx, every error path).",
+            ),
+            queue_wait_us: r.register_histogram(
+                "raana_queue_wait_us",
+                "Admission-to-KV-lane wait per request, microseconds.",
+            ),
+            prefill_us: r.register_histogram(
+                "raana_prefill_us",
+                "Serve-level prefill (admission or window slide), microseconds.",
+            ),
+            decode_step_us: r.register_histogram(
+                "raana_decode_step_us",
+                "One batched decode step across active lanes, microseconds.",
+            ),
+            tokens_generated: r.register_counter(
+                "raana_tokens_generated_total",
+                "Tokens sampled by the batching server.",
+            ),
+            completions: r.register_counter(
+                "raana_completions_total",
+                "Generations run to completion.",
+            ),
+            cancelled: r.register_counter(
+                "raana_cancelled_total",
+                "Generations abandoned mid-flight (cancel, disconnect, invalid prompt).",
+            ),
+            window_slides: r.register_counter(
+                "raana_window_slides_total",
+                "Full-window re-prefills (context outgrew seq_len).",
+            ),
+            queue_depth: r.register_gauge(
+                "raana_queue_depth",
+                "Requests admitted but not yet mapped onto a KV lane.",
+            ),
+            lanes_active: r.register_gauge(
+                "raana_lanes_active",
+                "KV lanes currently holding an active request.",
+            ),
+            native_prefill_us: r.register_histogram(
+                "raana_native_prefill_us",
+                "NativeModel::prefill body (model work only), microseconds.",
+            ),
+            native_decode_us: r.register_histogram(
+                "raana_native_decode_us",
+                "NativeModel::decode_step body (model work only), microseconds.",
+            ),
+            kvq_attend_us: r.register_histogram(
+                "raana_kvq_attend_us",
+                "One attention pass over packed KV codes (per layer, per lane), microseconds.",
+            ),
+            index_query_us: r.register_histogram(
+                "raana_index_query_us",
+                "Single-node two-phase index query (scan + rerank), microseconds.",
+            ),
+            index_scan_us: r.register_histogram(
+                "raana_index_scan_us",
+                "Phase-1 estimated scan over packed codes, microseconds.",
+            ),
+            index_rerank_us: r.register_histogram(
+                "raana_index_rerank_us",
+                "Phase-2 exact rerank of scan candidates, microseconds.",
+            ),
+            wal_append_us: r.register_histogram(
+                "raana_wal_append_us",
+                "One WAL record append (encode + io append [+ fsync]), microseconds.",
+            ),
+            wal_seal_us: r.register_histogram(
+                "raana_wal_seal_us",
+                "One seal: segment writes, manifest commit, WAL pruning, microseconds.",
+            ),
+            probe_success: r.register_counter(
+                "raana_probe_success_total",
+                "Successful worker probes / RPC outcomes recorded by fleet health.",
+            ),
+            probe_failure: r.register_counter(
+                "raana_probe_failure_total",
+                "Failed worker probes / RPC outcomes recorded by fleet health.",
+            ),
+            relay_retries: r.register_counter(
+                "raana_relay_retries_total",
+                "Generate relays retried on another worker after a pre-response failure.",
+            ),
+            router_hop_us: r.register_histogram(
+                "raana_router_hop_us",
+                "One router-to-worker generate relay, connect to last byte, microseconds.",
+            ),
+            registry: r,
+        };
+        // Pre-existing flat counters join as read-at-render bridges; their
+        // increment sites (single relaxed fetch_adds) are untouched.
+        m.registry.register_fn_counter(
+            "raana_dequant_calls_total",
+            "Full-matrix dequantizations (must stay flat on the serving path).",
+            crate::rabitq::dequant_calls,
+        );
+        m.registry.register_fn_counter(
+            "raana_name_resolutions_total",
+            "Tensor name resolutions (must stay flat during decode).",
+            crate::model::name_resolutions,
+        );
+        m.registry.register_fn_counter(
+            "raana_rerank_row_reads_total",
+            "Exact rows decoded for index rerank (bounds rerank I/O).",
+            crate::index::rerank_row_reads,
+        );
+        m.registry.register_fn_counter(
+            "raana_qgemm_calls_total",
+            "Packed-code GEMM invocations on the serving hot path.",
+            crate::kernels::qgemm_calls,
+        );
+        m.registry.register_fn_counter(
+            "raana_trace_spans_dropped_total",
+            "Spans evicted from the bounded in-memory trace ring.",
+            trace::spans_dropped,
+        );
+        m
+    }
+}
+
+/// The process-wide [`Metrics`] handle set (constructed on first use).
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_le_semantics() {
+        let h = Histogram::default();
+        h.observe_us(1); // == first edge: le="1"
+        h.observe_us(2); // == second edge
+        h.observe_us(3); // first edge > 3 is 5
+        h.observe_us(6_000_000); // past the last edge: +Inf
+        let c = h.bucket_counts();
+        assert_eq!(c[0], 1, "le boundary is inclusive");
+        assert_eq!(c[1], 1);
+        assert_eq!(c[2], 1);
+        assert_eq!(c[LATENCY_BUCKETS_US.len()], 1, "overflow lands in +Inf");
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_us(), 1 + 2 + 3 + 6_000_000);
+    }
+
+    #[test]
+    fn bucketize_matches_histogram_placement() {
+        let vals = [0u64, 1, 7, 499, 500, 501, 5_000_000, 5_000_001];
+        let h = Histogram::default();
+        for &v in &vals {
+            h.observe_us(v);
+        }
+        assert_eq!(bucketize_us(vals.iter().copied()), h.bucket_counts());
+    }
+
+    #[test]
+    fn render_is_sorted_deterministic_and_integer_valued() {
+        let r = Registry::new();
+        let b = r.register_counter("raana_b_total", "second by name.");
+        let _a = r.register_counter("raana_a_total", "first by name.");
+        b.add(3);
+        let text = r.render();
+        let a_pos = text.find("raana_a_total").unwrap();
+        let b_pos = text.find("# HELP raana_b_total").unwrap();
+        assert!(a_pos < b_pos, "families must render name-sorted");
+        assert!(text.contains("raana_b_total 3\n"));
+        assert_eq!(text, r.render(), "rendering must be deterministic");
+    }
+
+    #[test]
+    fn render_histogram_is_cumulative_with_inf_sum_count() {
+        let r = Registry::new();
+        let h = r.register_histogram("raana_t_us", "t.");
+        h.observe_us(1);
+        h.observe_us(3);
+        h.observe_us(9_000_000);
+        let text = r.render();
+        assert!(text.contains("raana_t_us_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("raana_t_us_bucket{le=\"5\"} 2\n"), "buckets are cumulative");
+        assert!(text.contains("raana_t_us_bucket{le=\"5000000\"} 2\n"));
+        assert!(text.contains("raana_t_us_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("raana_t_us_sum 9000004\n"));
+        assert!(text.contains("raana_t_us_count 3\n"));
+    }
+
+    #[test]
+    fn fn_counter_reads_at_render_time() {
+        static V: AtomicU64 = AtomicU64::new(0);
+        fn read() -> usize {
+            V.load(Ordering::Relaxed) as usize
+        }
+        let r = Registry::new();
+        r.register_fn_counter("raana_fnc_total", "bridge.", read);
+        V.store(7, Ordering::Relaxed);
+        assert!(r.render().contains("raana_fnc_total 7\n"));
+        V.store(9, Ordering::Relaxed);
+        assert!(r.render().contains("raana_fnc_total 9\n"));
+    }
+
+    #[test]
+    fn relabel_inserts_first_label_everywhere() {
+        let text = "# HELP x h\n# TYPE x counter\nx 3\ny_bucket{le=\"5\"} 2\ny_sum 7\n";
+        let got = relabel_exposition(text, "worker", "1");
+        assert!(got.contains("x{worker=\"1\"} 3\n"));
+        assert!(got.contains("y_bucket{worker=\"1\",le=\"5\"} 2\n"));
+        assert!(got.contains("y_sum{worker=\"1\"} 7\n"));
+        assert!(got.contains("# HELP x h\n"), "comments pass through");
+    }
+
+    #[test]
+    fn global_metrics_render_includes_bridged_counters() {
+        let text = metrics().registry.render();
+        for fam in [
+            "raana_dequant_calls_total",
+            "raana_name_resolutions_total",
+            "raana_rerank_row_reads_total",
+            "raana_qgemm_calls_total",
+            "raana_trace_spans_dropped_total",
+            "raana_decode_step_us_bucket{le=\"+Inf\"}",
+        ] {
+            assert!(text.contains(fam), "missing family {fam}");
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Per-request tracing: request ids and span timelines.
+//!
+//! # Request ids
+//!
+//! Every HTTP request gets a **request id**: either the one the client
+//! sent in an `X-Request-Id` header (accepted when it passes
+//! [`sanitize_rid`]) or one minted here at admission ([`mint_rid`]). The
+//! id is carried in a thread-local for the duration of the connection
+//! ([`set_current_rid`] / [`current_rid`]), which is what makes the
+//! propagation cheap and uniform:
+//!
+//! * every response writer (including every error path) echoes it back
+//!   as `X-Request-Id`,
+//! * the HTTP client attaches it to outgoing requests, so a router
+//!   thread serving a request forwards the *same* id on every
+//!   router→worker RPC — including each attempt of the bounded-retry
+//!   client, which is what makes client retries correlatable,
+//! * library-level submissions ([`crate::serve::Server::submit`]) adopt
+//!   the ambient id so batcher-side spans land under the right request.
+//!
+//! # Spans
+//!
+//! A [`Span`] is one timed phase of one request: queue-wait, prefill,
+//! one decode step, a kvq attend, an index scan/rerank, a WAL
+//! append/seal, a router hop. Spans go to a bounded in-memory ring
+//! (always, while tracing is enabled) and optionally to a JSONL sink
+//! (`--trace-log`): one self-contained JSON object per line, so one
+//! request's full span tree reconstructs offline by grouping lines on
+//! `rid` and ordering by `start_us`.
+//!
+//! Tracing is **off by default** ([`Tracer::enabled`] is a single
+//! relaxed atomic load on the fast path) and recording never perturbs
+//! generation: spans observe time, they never participate in compute —
+//! the bit-determinism suite runs with tracing enabled to pin that.
+//!
+//! Time flows through the [`super::clock::Clock`] seam; the global
+//! tracer uses [`super::clock::StdClock`], tests build a private
+//! [`Tracer::with_clock`] over a manual clock to pin span values.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::clock::{Clock, StdClock};
+
+/// Spans retained in the in-memory ring; older spans are dropped (and
+/// counted in [`spans_dropped`]) once the ring is full.
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// Longest accepted inbound `X-Request-Id`; longer ids are replaced by a
+/// minted one rather than truncated (a truncated id correlates nothing).
+pub const MAX_RID_LEN: usize = 64;
+
+/// One timed phase of one request.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// The request id this span belongs to (`-` when a phase ran outside
+    /// any request context, e.g. batch-level work).
+    pub rid: Arc<str>,
+    /// Phase name (static by design: span names are a closed vocabulary,
+    /// never per-request strings).
+    pub name: &'static str,
+    /// Clock reading at phase start (µs, tracer-clock epoch).
+    pub start_us: u64,
+    /// Phase duration in µs.
+    pub dur_us: u64,
+    /// Phase-specific small integer (token index for `decode`, prompt
+    /// tokens for `prefill`, worker index for `router_hop`); `-1` when
+    /// the phase has nothing to attach.
+    pub note: i64,
+}
+
+impl Span {
+    /// The JSONL line for this span (no trailing newline). Field order
+    /// is fixed so sinks are byte-stable for a given span sequence.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"rid\":\"{}\",\"span\":\"{}\",\"start_us\":{},\"dur_us\":{},\"note\":{}}}",
+            self.rid, self.name, self.start_us, self.dur_us, self.note
+        )
+    }
+}
+
+/// Span recorder: bounded ring + optional JSONL sink, behind one
+/// enable flag. See the module docs for the protocol.
+pub struct Tracer {
+    enabled: AtomicBool,
+    clock: Box<dyn Clock>,
+    ring: Mutex<VecDeque<Span>>,
+    sink: Mutex<Option<std::io::BufWriter<std::fs::File>>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// A disabled tracer over `clock` (tests pass a
+    /// [`super::clock::ManualClock`]).
+    pub fn with_clock(clock: Box<dyn Clock>) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            clock,
+            ring: Mutex::new(VecDeque::with_capacity(64)),
+            sink: Mutex::new(None),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Current tracer-clock reading in µs. Cheap; callers bracket phases
+    /// with two reads and hand the pair to [`Tracer::record`].
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Turn span recording on or off (idempotent).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether spans are currently recorded — the hot path's only cost
+    /// when tracing is off.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Attach a JSONL sink at `path` (append mode) and enable tracing.
+    /// Every recorded span becomes one line, flushed per span so a
+    /// mid-stream disconnect still leaves the request's spans on disk.
+    pub fn set_jsonl_sink(&self, path: &Path) -> std::io::Result<()> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        *self.sink.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(std::io::BufWriter::new(f));
+        self.set_enabled(true);
+        Ok(())
+    }
+
+    /// Detach the JSONL sink (tracing stays in whatever enabled state it
+    /// had; the ring keeps recording if enabled).
+    pub fn clear_jsonl_sink(&self) {
+        *self.sink.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// Record one span. No-op while disabled (one relaxed load).
+    pub fn record(&self, rid: &Arc<str>, name: &'static str, start_us: u64, dur_us: u64, note: i64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let span = Span { rid: Arc::clone(rid), name, start_us, dur_us, note };
+        if let Some(w) = self.sink.lock().unwrap_or_else(|e| e.into_inner()).as_mut() {
+            let _ = writeln!(w, "{}", span.to_jsonl());
+            let _ = w.flush();
+        }
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= TRACE_RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Copy of the current ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect()
+    }
+
+    /// Drop all ring contents (tests isolate themselves with this).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// Spans evicted from the full ring since process start.
+    pub fn dropped(&self) -> usize {
+        self.dropped.load(Ordering::Relaxed) as usize
+    }
+}
+
+/// The process-wide tracer (std clock, disabled until `--trace-log` or a
+/// test enables it).
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer::with_clock(Box::new(StdClock)))
+}
+
+/// Ring evictions of the global tracer — registered in the metrics
+/// registry as `raana_trace_spans_dropped_total`.
+pub fn spans_dropped() -> usize {
+    tracer().dropped()
+}
+
+// ------------------------------------------------------------ request ids
+
+thread_local! {
+    static CURRENT_RID: RefCell<Option<Arc<str>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) the ambient request id for this thread. Connection
+/// handlers set it right after reading a request head and clear it when
+/// the connection is done.
+pub fn set_current_rid(rid: Option<Arc<str>>) {
+    CURRENT_RID.with(|c| *c.borrow_mut() = rid);
+}
+
+/// The ambient request id, if a connection handler installed one.
+pub fn current_rid() -> Option<Arc<str>> {
+    CURRENT_RID.with(|c| c.borrow().clone())
+}
+
+/// Validate an inbound `X-Request-Id`: 1..=[`MAX_RID_LEN`] chars from
+/// `[A-Za-z0-9._-]`. Anything else is rejected (the caller mints
+/// instead) — ids are echoed into response headers and JSONL, so the
+/// accepted alphabet must be header- and JSON-safe by construction.
+pub fn sanitize_rid(s: &str) -> Option<Arc<str>> {
+    let ok = !s.is_empty()
+        && s.len() <= MAX_RID_LEN
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-');
+    ok.then(|| Arc::from(s))
+}
+
+/// Mint a fresh request id: monotonic sequence + µs timestamp, e.g.
+/// `r-0000002a-017b2f3c`. Unique within a process and unlikely to
+/// collide across a small fleet; not a secret and not guessproof.
+pub fn mint_rid() -> Arc<str> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    Arc::from(format!("r-{seq:08x}-{:08x}", StdClock.now_us() & 0xffff_ffff).as_str())
+}
+
+/// The inbound id when valid, else a minted one — the single admission
+/// rule both the worker front-end and the router apply.
+pub fn admit_rid(inbound: Option<&str>) -> Arc<str> {
+    inbound.and_then(sanitize_rid).unwrap_or_else(mint_rid)
+}
+
+/// Record a span attributed to the ambient request id (`-` when none):
+/// the helper for phases that run on request-serving threads (index
+/// scan/rerank, WAL append/seal) or batch-level phases with no single
+/// owner (kvq attend inside a batched decode).
+pub fn record_ambient(name: &'static str, start_us: u64, dur_us: u64, note: i64) {
+    let t = tracer();
+    if !t.is_enabled() {
+        return;
+    }
+    let rid = current_rid().unwrap_or_else(|| Arc::from("-"));
+    t.record(&rid, name, start_us, dur_us, note);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::clock::ManualClock;
+    use super::*;
+
+    #[test]
+    fn sanitize_accepts_header_safe_ids_only() {
+        assert!(sanitize_rid("abc-123_X.z").is_some());
+        assert!(sanitize_rid("").is_none());
+        assert!(sanitize_rid("has space").is_none());
+        assert!(sanitize_rid("quote\"").is_none());
+        assert!(sanitize_rid(&"x".repeat(MAX_RID_LEN)).is_some());
+        assert!(sanitize_rid(&"x".repeat(MAX_RID_LEN + 1)).is_none());
+    }
+
+    #[test]
+    fn minted_ids_are_distinct_and_sanitizable() {
+        let a = mint_rid();
+        let b = mint_rid();
+        assert_ne!(a, b);
+        assert!(sanitize_rid(&a).is_some(), "minted id must round-trip the header filter");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::with_clock(Box::new(ManualClock::new(0)));
+        t.record(&Arc::from("r1"), "prefill", 0, 5, -1);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::with_clock(Box::new(ManualClock::new(0)));
+        t.set_enabled(true);
+        let rid: Arc<str> = Arc::from("r1");
+        for i in 0..(TRACE_RING_CAP + 10) {
+            t.record(&rid, "decode", i as u64, 1, i as i64);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), TRACE_RING_CAP);
+        assert_eq!(t.dropped(), 10);
+        assert_eq!(snap[0].note, 10, "oldest spans evicted first");
+    }
+
+    #[test]
+    fn manual_clock_pins_span_values_exactly() {
+        let clock = ManualClock::new(1_000);
+        // Tracer owns a boxed clock; drive an identical twin for asserts.
+        let t = Tracer::with_clock(Box::new(ManualClock::new(1_000)));
+        t.set_enabled(true);
+        let rid: Arc<str> = Arc::from("req-7");
+        let start = t.now_us();
+        clock.advance(250);
+        // the tracer's own clock did not move (it is a separate manual
+        // clock), so durations are whatever the caller measured
+        t.record(&rid, "queue_wait", start, 250, -1);
+        let snap = t.snapshot();
+        assert_eq!((snap[0].start_us, snap[0].dur_us), (1_000, 250));
+        assert_eq!(
+            snap[0].to_jsonl(),
+            r#"{"rid":"req-7","span":"queue_wait","start_us":1000,"dur_us":250,"note":-1}"#
+        );
+    }
+
+    #[test]
+    fn ambient_rid_is_thread_local() {
+        set_current_rid(Some(Arc::from("outer")));
+        let inner = std::thread::spawn(|| current_rid().is_none()).join().unwrap();
+        assert!(inner, "a fresh thread must not inherit the rid");
+        assert_eq!(current_rid().as_deref(), Some("outer"));
+        set_current_rid(None);
+        assert!(current_rid().is_none());
+    }
+}

@@ -591,6 +591,7 @@ impl NativeModel {
         slot: usize,
         threads: usize,
     ) -> Result<Vec<f32>> {
+        let t0 = crate::obs::trace::tracer().now_us();
         cache.check_model(self)?;
         let l = tokens.len();
         anyhow::ensure!(
@@ -611,7 +612,11 @@ impl NativeModel {
             Some((&mut *cache, slot)),
         )?;
         cache.set_len(slot, l);
-        self.project_rows(params, &hid, &[l - 1], threads)
+        let out = self.project_rows(params, &hid, &[l - 1], threads);
+        crate::obs::metrics()
+            .native_prefill_us
+            .observe_us(crate::obs::trace::tracer().now_us().saturating_sub(t0));
+        out
     }
 
     /// One KV-cached generation step over a batch of active cache slots:
@@ -638,6 +643,7 @@ impl NativeModel {
         tokens: &[i32],
         threads: usize,
     ) -> Result<Vec<f32>> {
+        let t0 = crate::obs::trace::tracer().now_us();
         cache.check_model(self)?;
         let bsz = slots.len();
         anyhow::ensure!(bsz >= 1 && tokens.len() == bsz, "slots/tokens arity mismatch");
@@ -726,7 +732,14 @@ impl NativeModel {
             cache.advance(sl);
         }
         let rows: Vec<usize> = (0..bsz).collect();
-        self.project_rows(params, &hid, &rows, threads)
+        let out = self.project_rows(params, &hid, &rows, threads);
+        // model-only timing (no serve-layer overhead): the histogram pair
+        // native_decode_us vs decode_step_us is what separates kernel
+        // cost from batcher cost in the /metrics breakdown
+        crate::obs::metrics()
+            .native_decode_us
+            .observe_us(crate::obs::trace::tracer().now_us().saturating_sub(t0));
+        out
     }
 }
 

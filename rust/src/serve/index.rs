@@ -32,6 +32,7 @@ use anyhow::Result;
 use crate::index::durability::{DurabilityConfig, DurableStore, RecoveryReport};
 use crate::index::{CollectionInfo, IndexConfig, IndexError, SearchHit};
 use crate::model::{Manifest, ModelParams};
+use crate::obs::{self, trace};
 use crate::runtime::native::{NativeModel, PackedLayers};
 
 /// The model triple an [`IndexServer`] embeds with: manifest + weights
@@ -295,7 +296,11 @@ impl IndexServer {
         k: usize,
         rerank_factor: usize,
     ) -> Result<Vec<SearchHit>, IndexError> {
+        let t0 = trace::tracer().now_us();
         let hits = self.store.query(name, q, k, rerank_factor, 0)?;
+        let dur = trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().index_query_us.observe_us(dur);
+        trace::record_ambient("index_query", t0, dur, hits.len() as i64);
         self.queries.fetch_add(1, Ordering::Relaxed);
         Ok(hits)
     }
@@ -311,7 +316,11 @@ impl IndexServer {
         q: &[f32],
         take: usize,
     ) -> Result<(usize, Vec<SearchHit>), IndexError> {
+        let t0 = trace::tracer().now_us();
         let out = self.store.scan_candidates(name, q, take, 0)?;
+        let dur = trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().index_scan_us.observe_us(dur);
+        trace::record_ambient("index_scan", t0, dur, out.1.len() as i64);
         self.queries.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
@@ -325,7 +334,12 @@ impl IndexServer {
         q: &[f32],
         ids: &[usize],
     ) -> Result<Vec<SearchHit>, IndexError> {
-        self.store.exact_scores(name, q, ids)
+        let t0 = trace::tracer().now_us();
+        let out = self.store.exact_scores(name, q, ids)?;
+        let dur = trace::tracer().now_us().saturating_sub(t0);
+        obs::metrics().index_rerank_us.observe_us(dur);
+        trace::record_ambient("index_rerank", t0, dur, ids.len() as i64);
+        Ok(out)
     }
 
     /// Per-collection accounting snapshot, name order.

@@ -55,6 +55,7 @@ use anyhow::Result;
 
 use crate::kvq::{self, KvSensitivity, KvqError, KvqPlan, KvqPolicy};
 use crate::model::{Manifest, ModelParams};
+use crate::obs::{self, trace};
 use crate::runtime::{KvCache, ModelRuntime, NativeModel, PackedLayers};
 use crate::util::percentile;
 
@@ -349,6 +350,14 @@ struct Active {
     steps: usize,
     cancel: CancelToken,
     sink: Sink,
+    /// Request id for tracing: adopted from the submitting thread's
+    /// ambient id (the HTTP layer installs one per connection) or minted
+    /// at submit, so batcher-side spans always land under the same id
+    /// the client sees in its `X-Request-Id` echo.
+    rid: Arc<str>,
+    /// Tracer-clock reading at admission; the batcher turns it into the
+    /// `queue_wait` span when the request lands on a KV lane.
+    enqueued_us: u64,
 }
 
 struct Shared {
@@ -709,6 +718,8 @@ impl Server {
             steps: 0,
             cancel: CancelToken::new(),
             sink: Sink::Complete(tx),
+            rid: trace::current_rid().unwrap_or_else(trace::mint_rid),
+            enqueued_us: trace::tracer().now_us(),
         })?;
         Ok((id, rx))
     }
@@ -755,6 +766,8 @@ impl Server {
             steps: 0,
             cancel: cancel.clone(),
             sink: Sink::Stream(tx),
+            rid: trace::current_rid().unwrap_or_else(trace::mint_rid),
+            enqueued_us: trace::tracer().now_us(),
         })?;
         Ok(StreamHandle { id, events: rx, cancel })
     }
@@ -854,21 +867,25 @@ fn settle(
     if act.cancel.is_cancelled() {
         cache.reset(slot);
         stats.cancelled += 1;
+        obs::metrics().cancelled.inc();
         return None;
     }
     let tok = softmax_sample(logits, act.req.temperature, act.req.seed, act.steps);
     act.generated.push(tok);
     act.steps += 1;
     stats.tokens_generated += 1;
+    obs::metrics().tokens_generated.inc();
     if !act.sink.token(act.req.id, act.generated.len() - 1, tok) {
         cache.reset(slot);
         stats.cancelled += 1;
+        obs::metrics().cancelled.inc();
         return None;
     }
     if act.generated.len() >= act.req.max_new_tokens {
         let latency = act.submitted.elapsed().as_secs_f64();
         stats.latencies.push(latency);
         stats.completions += 1;
+        obs::metrics().completions.inc();
         act.sink.done(Completion {
             id: act.req.id,
             tokens: act.generated,
@@ -933,6 +950,7 @@ fn batcher_loop(
                 lanes[slot] = None;
                 cache.reset(slot);
                 stats.cancelled += 1;
+                obs::metrics().cancelled.inc();
             }
         }
 
@@ -949,6 +967,7 @@ fn batcher_loop(
                 // cancelled while queued: drop without model work
                 if act.cancel.is_cancelled() {
                     stats.cancelled += 1;
+                    obs::metrics().cancelled.inc();
                     continue;
                 }
                 // Backstop for the race in `Server::admit` before the
@@ -957,10 +976,21 @@ fn batcher_loop(
                 // batcher). Dropping the sink disconnects the receiver.
                 if act.req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
                     stats.cancelled += 1;
+                    obs::metrics().cancelled.inc();
                     continue;
                 }
+                // the admission-to-lane wait ends here; time the prefill
+                // separately so the two phases stay distinguishable
+                let t = trace::tracer();
+                let lane_at = t.now_us();
+                let waited = lane_at.saturating_sub(act.enqueued_us);
+                obs::metrics().queue_wait_us.observe_us(waited);
+                t.record(&act.rid, "queue_wait", act.enqueued_us, waited, -1);
                 let window = context_window(&act, seq);
                 let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
+                let dur = t.now_us().saturating_sub(lane_at);
+                obs::metrics().prefill_us.observe_us(dur);
+                t.record(&act.rid, "prefill", lane_at, dur, window.len() as i64);
                 stats.batch_steps += 1;
                 stats.total_rows += 1;
                 stats.prefill_tokens += window.len();
@@ -1001,18 +1031,25 @@ fn batcher_loop(
             if act.cancel.is_cancelled() {
                 cache.reset(slot);
                 stats.cancelled += 1;
+                obs::metrics().cancelled.inc();
                 continue;
             }
             if !cache.is_full(slot) {
                 lanes[slot] = Some(act);
                 continue;
             }
+            let t = trace::tracer();
+            let t0 = t.now_us();
             let window = context_window(&act, seq);
             let logits = mrt.prefill(&params, &mut cache, slot, &window)?;
+            let dur = t.now_us().saturating_sub(t0);
+            obs::metrics().prefill_us.observe_us(dur);
+            t.record(&act.rid, "prefill", t0, dur, window.len() as i64);
             stats.batch_steps += 1;
             stats.total_rows += 1;
             stats.prefill_tokens += window.len();
             stats.window_slides += 1;
+            obs::metrics().window_slides.inc();
             lanes[slot] = settle(act, &logits, &mut cache, slot, &mut stats);
         }
 
@@ -1025,7 +1062,21 @@ fn batcher_loop(
                 .iter()
                 .map(|&s| *lanes[s].as_ref().unwrap().generated.last().unwrap())
                 .collect();
+            let t = trace::tracer();
+            let t0 = t.now_us();
             let rows = mrt.decode_step(&params, &mut cache, &decode, &tokens)?;
+            let dur = t.now_us().saturating_sub(t0);
+            obs::metrics().decode_step_us.observe_us(dur);
+            if t.is_enabled() {
+                // one span per lane sharing the step's duration (the
+                // step is batched; per-lane attribution is the shape a
+                // request's span tree needs), note = 0-based index of
+                // the token this step samples for that lane
+                for &slot in &decode {
+                    let act = lanes[slot].as_ref().expect("decode lane is active");
+                    t.record(&act.rid, "decode", t0, dur, act.generated.len() as i64);
+                }
+            }
             stats.batch_steps += 1;
             stats.total_rows += decode.len();
             stats.decode_steps += 1;
@@ -1056,6 +1107,8 @@ pub const LIVE_LATENCY_WINDOW: usize = 512;
 fn publish_stats(shared: &Shared, stats: &mut ServerStats, start: Instant) {
     stats.wall_secs = start.elapsed().as_secs_f64();
     stats.queue_depth = shared.queue.lock().unwrap().len();
+    obs::metrics().queue_depth.set(stats.queue_depth as i64);
+    obs::metrics().lanes_active.set(stats.lanes_active as i64);
     let from = stats.latencies.len().saturating_sub(LIVE_LATENCY_WINDOW);
     let snap = ServerStats {
         completions: stats.completions,

@@ -1,0 +1,653 @@
+//! Loopback observability wall (ISSUE 10): real sockets, the packed
+//! native demo model, a real 2-worker cluster — no mocks anywhere.
+//!
+//! The wall, in order:
+//! (a) `GET /metrics` answers Prometheus text on a worker whose whole
+//!     connection pool is pinned by an endless stream — scrapes must
+//!     survive saturation exactly like `/healthz`;
+//! (b) every response echoes `X-Request-Id`: a valid inbound id comes
+//!     back verbatim on 200s AND on the error paths (400/404/405/413),
+//!     a missing or malformed inbound id is replaced by a minted one;
+//! (c) a request id sent to the ROUTER propagates through the
+//!     router→worker relay and back: the client sees its own id, and
+//!     the worker's batcher spans (queue_wait/prefill) plus the
+//!     router's hop span all carry it — one id keys the whole tree;
+//! (d) one streamed generate with a MID-STREAM DISCONNECT leaves a
+//!     reconstructible span timeline in the JSONL sink: admission →
+//!     queue_wait → prefill → N decode steps, grouped by rid, ordered
+//!     by start_us;
+//! (e) bit-determinism: greedy decode with tracing enabled produces
+//!     exactly the tokens it produces with tracing disabled —
+//!     instrumentation observes time, it never participates in compute;
+//! (f) the router's fleet `/metrics` concatenates per-worker families
+//!     under `worker="<i>"` labels with HELP/TYPE deduped;
+//! (g) `/v1/stats` exposes the latency window in its summable form
+//!     (bucket counts over shared edges) on workers, and the fleet
+//!     stats' bucket counts equal the element-wise per-worker sum —
+//!     the aggregation that is safe, unlike averaging percentiles.
+//!
+//! Tests that flip the PROCESS-WIDE tracer (enable, sink, ring asserts)
+//! serialize on `TRACER_LOCK`; everything they assert on is filtered by
+//! request id, so unrelated concurrent test traffic cannot interfere.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use raana::cluster::{Router, RouterConfig};
+use raana::index::IndexConfig;
+use raana::json::{self, Value};
+use raana::model::synthetic_manifest;
+use raana::net::{http_request, read_response, ClientConfig, HttpConfig, HttpServer};
+use raana::obs::{self, trace, LATENCY_BUCKETS_US};
+use raana::quant::{LayerCalib, TrickConfig};
+use raana::runtime::{native_init, PackedLayers};
+use raana::serve::index::IndexServer;
+use raana::serve::{ServeConfig, Server};
+
+/// Serializes tests that mutate global tracer state (enabled flag, JSONL
+/// sink, ring clears). Request-id filtering makes the *assertions* safe
+/// under concurrency; this lock makes the *state flips* safe.
+static TRACER_LOCK: Mutex<()> = Mutex::new(());
+
+// ------------------------------------------------------------- harness
+
+fn packed_server(name: &str, eval_batch: usize, cfg: ServeConfig) -> Arc<Server> {
+    let manifest = synthetic_manifest(name, 32, 1, 2, 64, 8, 256, eval_batch);
+    let params = native_init(&manifest, 17);
+    let stats: Vec<LayerCalib> =
+        manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+    let bits = vec![4u8; manifest.linears.len()];
+    let packed =
+        PackedLayers::quantize(&manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1)
+            .unwrap();
+    Arc::new(Server::start_native_packed_with(manifest, params, packed, cfg).unwrap())
+}
+
+fn bind_uncapped(server: &Arc<Server>, workers: usize) -> HttpServer {
+    HttpServer::bind_with(
+        Arc::clone(server),
+        "127.0.0.1:0",
+        HttpConfig { workers, max_new_tokens_cap: usize::MAX, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn shutdown_all(http: HttpServer, server: Arc<Server>) {
+    http.shutdown().unwrap();
+    match Arc::try_unwrap(server) {
+        Ok(s) => {
+            s.shutdown().unwrap();
+        }
+        Err(_) => panic!("server still referenced after HTTP shutdown"),
+    }
+}
+
+fn generate_body(prompt: &[i32], max_new_tokens: usize, stream: bool) -> String {
+    format!(
+        "{{\"prompt\":{prompt:?},\"max_new_tokens\":{max_new_tokens},\"temperature\":0,\
+         \"seed\":0,\"stream\":{stream}}}"
+    )
+}
+
+/// One raw request with an explicit `X-Request-Id` header (the stock
+/// client attaches the *ambient* id; these tests need full control of
+/// the inbound header, including sending garbage).
+fn request_with_rid(
+    addr: &str,
+    method: &str,
+    path: &str,
+    rid: Option<&str>,
+    body: Option<&str>,
+) -> raana::net::HttpResponse {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = body.unwrap_or("");
+    let rid_line = rid.map(|r| format!("X-Request-Id: {r}\r\n")).unwrap_or_default();
+    write!(
+        &conn,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n{rid_line}\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    read_response(&conn).unwrap()
+}
+
+fn header_of<'a>(resp: &'a raana::net::HttpResponse, name: &str) -> Option<&'a str> {
+    resp.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn rid_of(resp: &raana::net::HttpResponse) -> &str {
+    header_of(resp, "x-request-id").expect("every response must carry X-Request-Id")
+}
+
+fn wait_generating(server: &Server, min_tokens: usize) {
+    for _ in 0..6000 {
+        if server.stats().tokens_generated >= min_tokens {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("server never started generating");
+}
+
+fn poll_until(what: &str, mut ok: impl FnMut() -> bool) {
+    for _ in 0..600 {
+        if ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+fn tokens_of(v: &Value) -> Vec<i32> {
+    v.get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_f64())
+        .map(|f| f as i32)
+        .collect()
+}
+
+// --------------------------------------- (a) /metrics under saturation
+
+#[test]
+fn metrics_endpoint_stays_live_under_saturated_pool() {
+    let server = packed_server("obs-live", 2, ServeConfig::default());
+    let http = bind_uncapped(&server, 1); // ONE connection worker
+    let addr = http.local_addr().to_string();
+
+    // pin the only worker with an endless stream
+    let conn = TcpStream::connect(&addr).unwrap();
+    let body = generate_body(&[2], 1_000_000, true);
+    write!(
+        &conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    wait_generating(&server, 1);
+
+    // generation is refused (the pool really is saturated)...
+    let refused =
+        http_request(&addr, "POST", "/v1/generate", Some(&generate_body(&[4], 2, false)))
+            .unwrap();
+    assert_eq!(refused.status, 503, "pinned pool must refuse generation");
+
+    // ...but the scrape answers, in the exposition content type
+    let scrape = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(scrape.status, 200, "/metrics must survive a pinned pool");
+    assert_eq!(
+        header_of(&scrape, "content-type"),
+        Some("text/plain; version=0.0.4"),
+        "scrapes must carry the exposition content type"
+    );
+    let text = scrape.body_str().unwrap().to_string();
+    for family in [
+        "# TYPE raana_http_requests_total counter",
+        "raana_http_requests_total ",
+        "raana_decode_step_us_bucket{le=\"+Inf\"}",
+        "raana_decode_step_us_count ",
+        "raana_tokens_generated_total ",
+        "raana_lanes_active ",
+        "raana_qgemm_calls_total ",
+        "raana_dequant_calls_total ",
+    ] {
+        assert!(text.contains(family), "scrape missing {family:?}:\n{text}");
+    }
+    // the pinned stream has decoded tokens: the histogram must show them
+    let count_line = text
+        .lines()
+        .find(|l| l.starts_with("raana_decode_step_us_count"))
+        .expect("decode histogram count line");
+    let count: u64 = count_line.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(count > 0, "in-flight decode must land in the step histogram");
+
+    drop(conn);
+    poll_until("lane to free after disconnect", || server.stats().cancelled >= 1);
+    shutdown_all(http, server);
+}
+
+// -------------------------------------------- (b) request-id echo wall
+
+#[test]
+fn request_ids_echo_on_success_and_every_error_path() {
+    let server = packed_server("obs-rid", 1, ServeConfig::default());
+    let http = HttpServer::bind(Arc::clone(&server), "127.0.0.1:0", 2).unwrap();
+    let addr = http.local_addr().to_string();
+
+    // a valid inbound id echoes verbatim on success
+    let ok = request_with_rid(
+        &addr,
+        "POST",
+        "/v1/generate",
+        Some("obs-echo-ok.1"),
+        Some(&generate_body(&[1, 2], 1, false)),
+    );
+    assert_eq!(ok.status, 200, "body: {:?}", ok.body_str());
+    assert_eq!(rid_of(&ok), "obs-echo-ok.1");
+
+    // ...and verbatim on every error shape the front-end can produce
+    for (label, resp) in [
+        ("400 bad json", request_with_rid(&addr, "POST", "/v1/generate", Some("obs-e400"), Some("{not json"))),
+        ("404 route", request_with_rid(&addr, "GET", "/nope", Some("obs-e404"), None)),
+        ("405 method", request_with_rid(&addr, "DELETE", "/v1/generate", Some("obs-e405"), None)),
+    ] {
+        let want = label.split(' ').next().unwrap().parse::<u16>().unwrap();
+        assert_eq!(resp.status, want, "{label}: {:?}", resp.body_str());
+        let inbound = match want {
+            400 => "obs-e400",
+            404 => "obs-e404",
+            _ => "obs-e405",
+        };
+        assert_eq!(rid_of(&resp), inbound, "{label} must echo the inbound id");
+    }
+
+    // 413: the body is refused before it is read, the id still echoes
+    {
+        let conn = TcpStream::connect(&addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            &conn,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 999999999\r\n\
+             X-Request-Id: obs-e413\r\n\r\n"
+        )
+        .unwrap();
+        let resp = read_response(&conn).unwrap();
+        assert_eq!(resp.status, 413);
+        assert_eq!(rid_of(&resp), "obs-e413");
+    }
+
+    // no inbound id: a minted one comes back (and passes the sanitizer)
+    let minted = request_with_rid(&addr, "GET", "/healthz", None, None);
+    assert_eq!(minted.status, 200);
+    let m = rid_of(&minted);
+    assert!(m.starts_with("r-"), "minted ids are r-<seq>-<us>, got {m}");
+    assert!(trace::sanitize_rid(m).is_some(), "minted id must be header-safe");
+
+    // malformed inbound id (space → header-unsafe): replaced, not echoed
+    let replaced =
+        request_with_rid(&addr, "GET", "/healthz", Some("bad id with spaces"), None);
+    assert_eq!(replaced.status, 200);
+    assert_ne!(rid_of(&replaced), "bad id with spaces");
+    assert!(trace::sanitize_rid(rid_of(&replaced)).is_some());
+
+    shutdown_all(http, server);
+}
+
+// -------------------------------------------- cluster harness (c)(f)(g)
+
+struct WorkerNode {
+    server: Arc<Server>,
+    index: Arc<IndexServer>,
+    http: HttpServer,
+    addr: String,
+}
+
+impl WorkerNode {
+    fn start() -> WorkerNode {
+        let manifest = synthetic_manifest("obs-worker", 32, 1, 2, 64, 16, 256, 2);
+        let params = native_init(&manifest, 17);
+        let stats: Vec<LayerCalib> =
+            manifest.linears.iter().map(|l| LayerCalib::zeros(l.d)).collect();
+        let bits = vec![4u8; manifest.linears.len()];
+        let packed =
+            PackedLayers::quantize(&manifest, &params, &bits, &stats, &TrickConfig::none(), 1, 1)
+                .unwrap();
+        let index = Arc::new(
+            IndexServer::with_embedder(
+                IndexConfig::default(),
+                None,
+                manifest.clone(),
+                params.clone(),
+                Some(packed.clone()),
+            )
+            .unwrap(),
+        );
+        let server = Arc::new(
+            Server::start_native_packed_with(manifest, params, packed, ServeConfig::default())
+                .unwrap(),
+        );
+        let drain = Arc::new(AtomicBool::new(false));
+        let http = HttpServer::bind_with_index(
+            Arc::clone(&server),
+            Some(Arc::clone(&index)),
+            "127.0.0.1:0",
+            HttpConfig { workers: 2, drain: Some(drain), ..Default::default() },
+        )
+        .unwrap();
+        let addr = format!("127.0.0.1:{}", http.local_addr().port());
+        WorkerNode { server, index, http, addr }
+    }
+
+    fn kill(self) {
+        self.http.shutdown().unwrap();
+        drop(self.index);
+        match Arc::try_unwrap(self.server) {
+            Ok(s) => {
+                s.shutdown().unwrap();
+            }
+            Err(_) => panic!("server still referenced after HTTP shutdown"),
+        }
+    }
+}
+
+fn start_router(workers: Vec<String>) -> Router {
+    Router::bind(
+        "127.0.0.1:0",
+        RouterConfig {
+            workers,
+            shards: 0,
+            http_workers: 4,
+            probe_interval_ms: 50,
+            client: ClientConfig::timeout_ms(2000),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn raddr(router: &Router) -> String {
+    format!("127.0.0.1:{}", router.local_addr().port())
+}
+
+// ------------------------------ (c) propagation router → worker → back
+
+#[test]
+fn request_id_propagates_router_to_worker_and_back() {
+    let _guard = TRACER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let w0 = WorkerNode::start();
+    let w1 = WorkerNode::start();
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()]);
+    let ra = raddr(&router);
+
+    let t = trace::tracer();
+    t.clear();
+    t.set_enabled(true);
+
+    // the id crosses TWO hops: client → router (header), router → worker
+    // (relayed header), worker → client (echo relayed verbatim)
+    let rid = "obs-cluster-rid-1";
+    let resp = request_with_rid(
+        &ra,
+        "POST",
+        "/v1/generate",
+        Some(rid),
+        Some(&generate_body(&[10, 20, 30], 4, false)),
+    );
+    assert_eq!(resp.status, 200, "body: {:?}", resp.body_str());
+    assert_eq!(
+        rid_of(&resp),
+        rid,
+        "the worker's echoed id must come back through the relay"
+    );
+    assert_eq!(tokens_of(&resp.json().unwrap()).len(), 4);
+
+    // workers and router share this process's tracer: the batcher spans
+    // recorded while serving the relayed request must carry OUR id —
+    // proof the id crossed the relay into the worker's admission path
+    let spans = t.snapshot();
+    let ours: Vec<&str> =
+        spans.iter().filter(|s| &*s.rid == rid).map(|s| s.name).collect();
+    for phase in ["admission", "queue_wait", "prefill", "router_hop"] {
+        assert!(
+            ours.contains(&phase),
+            "span {phase:?} missing under rid {rid}: got {ours:?}"
+        );
+    }
+
+    t.set_enabled(false);
+    t.clear();
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// ----------------------- (d) span tree from the JSONL sink, disconnect
+
+#[test]
+fn span_tree_reconstructs_from_jsonl_sink_after_midstream_disconnect() {
+    let _guard = TRACER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let sink = std::env::temp_dir().join(format!("raana-obs-trace-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&sink);
+
+    let server = packed_server("obs-sink", 1, ServeConfig::default());
+    let http = bind_uncapped(&server, 2);
+    let addr = http.local_addr().to_string();
+
+    let t = trace::tracer();
+    t.clear();
+    t.set_jsonl_sink(&sink).unwrap();
+
+    // one streamed generate, read a few chunks, then VANISH mid-stream
+    let rid = "obs-span-tree-1";
+    let prompt = [7i32, 8, 9];
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = generate_body(&prompt, 1_000_000, true);
+    write!(
+        &conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+         X-Request-Id: {rid}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut some = [0u8; 256];
+    conn.read_exact(&mut some).unwrap();
+    // ≥5 tokens: the first comes from the prefill, so this guarantees at
+    // least 4 decode rounds reached the sink before we vanish
+    wait_generating(&server, 5);
+    drop(conn);
+    poll_until("disconnect to cancel the lane", || server.stats().cancelled >= 1);
+
+    t.clear_jsonl_sink();
+    t.set_enabled(false);
+    t.clear();
+
+    // every span is one self-contained JSON line, flushed at record time:
+    // the tree must reconstruct from the file alone, disconnect and all
+    let text = std::fs::read_to_string(&sink).unwrap();
+    let mut ours: Vec<(String, u64, u64, i64)> = Vec::new();
+    for line in text.lines() {
+        let v = json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e}"));
+        if v.get("rid").and_then(Value::as_str) == Some(rid) {
+            ours.push((
+                v.req_str("span").unwrap().to_string(),
+                v.get("start_us").unwrap().as_f64().unwrap() as u64,
+                v.get("dur_us").unwrap().as_f64().unwrap() as u64,
+                v.get("note").unwrap().as_f64().unwrap() as i64,
+            ));
+        }
+    }
+    ours.sort_by_key(|s| s.1);
+    let names: Vec<&str> = ours.iter().map(|s| s.0.as_str()).collect();
+
+    // the timeline: admission, queue wait, prefill (note = prompt len),
+    // then at least the decode steps we observed before disconnecting
+    assert!(names.contains(&"admission"), "got {names:?}");
+    let qw = ours.iter().position(|s| s.0 == "queue_wait").expect("queue_wait span");
+    let pf = ours.iter().position(|s| s.0 == "prefill").expect("prefill span");
+    assert!(qw < pf, "queue_wait must start before prefill: {names:?}");
+    assert_eq!(ours[pf].3, prompt.len() as i64, "prefill note is the window length");
+    let decodes: Vec<&(String, u64, u64, i64)> =
+        ours.iter().filter(|s| s.0 == "decode").collect();
+    assert!(decodes.len() >= 3, "expected >=3 decode spans, got {}", decodes.len());
+    assert!(
+        ours[pf].1 <= decodes[0].1,
+        "prefill must start before the first decode step"
+    );
+    // decode notes are the generated-length counter: strictly increasing
+    for pair in decodes.windows(2) {
+        assert!(pair[0].3 < pair[1].3, "decode notes must increase: {decodes:?}");
+    }
+
+    shutdown_all(http, server);
+    let _ = std::fs::remove_file(&sink);
+}
+
+// ---------------------------------------- (e) tracing bit-determinism
+
+#[test]
+fn greedy_decode_is_bit_identical_with_tracing_enabled() {
+    let _guard = TRACER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let server = packed_server("obs-det", 1, ServeConfig::default());
+    let prompt = vec![11i32, 22, 33];
+
+    let t = trace::tracer();
+    t.set_enabled(false);
+    let (_, rx) = server.submit(prompt.clone(), 6, 0.0, 0).unwrap();
+    let untraced = rx.recv().unwrap().tokens;
+
+    t.clear();
+    t.set_enabled(true);
+    let (_, rx) = server.submit(prompt.clone(), 6, 0.0, 0).unwrap();
+    let traced = rx.recv().unwrap().tokens;
+    let recorded = t.snapshot().iter().filter(|s| s.name == "decode").count();
+    t.set_enabled(false);
+    t.clear();
+
+    assert_eq!(
+        traced, untraced,
+        "tracing must never perturb generation — spans observe, they don't compute"
+    );
+    // 6 tokens = 1 from the prefill + 5 decode rounds
+    assert!(recorded >= 5, "the traced run must actually have recorded decode spans");
+
+    match Arc::try_unwrap(server) {
+        Ok(s) => {
+            s.shutdown().unwrap();
+        }
+        Err(_) => panic!("server still referenced"),
+    }
+}
+
+// ------------------------------------------ (f) fleet /metrics labels
+
+#[test]
+fn fleet_metrics_concatenates_workers_with_labels_and_deduped_comments() {
+    let w0 = WorkerNode::start();
+    let w1 = WorkerNode::start();
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()]);
+    let ra = raddr(&router);
+
+    // some traffic so the counters are non-trivial on both sides
+    for _ in 0..2 {
+        let r = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[9], 2, false)))
+            .unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let scrape = http_request(&ra, "GET", "/metrics", None).unwrap();
+    assert_eq!(scrape.status, 200);
+    let text = scrape.body_str().unwrap().to_string();
+
+    // NOTE: workers and the router share one process in this test, so
+    // the numeric values overlap — the shape is what's under test: the
+    // router's own unlabeled families plus one relabeled copy per worker
+    for needle in [
+        "\nraana_http_requests_total ",
+        "raana_http_requests_total{worker=\"0\"} ",
+        "raana_http_requests_total{worker=\"1\"} ",
+        "raana_decode_step_us_bucket{worker=\"0\",le=\"+Inf\"}",
+        "raana_decode_step_us_bucket{worker=\"1\",le=\"+Inf\"}",
+        "raana_completions_total{worker=\"0\"}",
+    ] {
+        assert!(text.contains(needle), "fleet scrape missing {needle:?}");
+    }
+    // HELP/TYPE once per family across the whole concatenation
+    let help_lines = text
+        .lines()
+        .filter(|l| l.starts_with("# HELP raana_http_requests_total"))
+        .count();
+    assert_eq!(help_lines, 1, "duplicate HELP lines must be suppressed");
+    let type_lines =
+        text.lines().filter(|l| l.starts_with("# TYPE raana_decode_step_us")).count();
+    assert_eq!(type_lines, 1, "duplicate TYPE lines must be suppressed");
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
+
+// ------------------------- (g) summable latency buckets, worker + fleet
+
+#[test]
+fn stats_expose_summable_latency_buckets_worker_and_fleet() {
+    let w0 = WorkerNode::start();
+    let w1 = WorkerNode::start();
+    let router = start_router(vec![w0.addr.clone(), w1.addr.clone()]);
+    let ra = raddr(&router);
+
+    for _ in 0..6 {
+        let r = http_request(&ra, "POST", "/v1/generate", Some(&generate_body(&[9], 2, false)))
+            .unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let counts_of = |v: &Value, key: &str| -> Vec<u64> {
+        v.get(key)
+            .and_then(Value::as_arr)
+            .unwrap_or_else(|| panic!("{key} missing"))
+            .iter()
+            .map(|c| c.as_f64().unwrap() as u64)
+            .collect()
+    };
+
+    // worker side: edges are the shared ladder, counts cover the window
+    let mut per_worker_counts: Vec<Vec<u64>> = Vec::new();
+    let mut total_samples = 0u64;
+    for w in [&w0, &w1] {
+        let v = http_request(&w.addr, "GET", "/v1/stats", None).unwrap().json().unwrap();
+        let edges = counts_of(&v, "latency_bucket_le_us");
+        assert_eq!(edges, LATENCY_BUCKETS_US.to_vec(), "bucket edges must be the shared ladder");
+        let counts = counts_of(&v, "latency_bucket_counts");
+        assert_eq!(counts.len(), LATENCY_BUCKETS_US.len() + 1, "+Inf slot included");
+        let window =
+            v.get("latencies_secs").and_then(Value::as_arr).map(|a| a.len()).unwrap_or(0);
+        assert_eq!(
+            counts.iter().sum::<u64>(),
+            window as u64,
+            "every windowed completion lands in exactly one bucket"
+        );
+        total_samples += window as u64;
+        per_worker_counts.push(counts);
+    }
+    assert_eq!(total_samples, 6, "all completions must be windowed somewhere");
+
+    // fleet side: bucket counts equal the ELEMENT-WISE SUM of the
+    // per-worker counts — the one latency aggregation that is exact
+    // (percentiles, by contrast, are computed once over concatenation
+    // and must never be combined; cluster.rs pins that half)
+    let v = http_request(&ra, "GET", "/v1/stats", None).unwrap().json().unwrap();
+    assert_eq!(
+        counts_of(&v, "latency_bucket_le_us"),
+        LATENCY_BUCKETS_US.to_vec(),
+        "fleet edges must be the same shared ladder"
+    );
+    let fleet = counts_of(&v, "latency_bucket_counts");
+    let want: Vec<u64> = (0..fleet.len())
+        .map(|i| per_worker_counts.iter().map(|c| c[i]).sum())
+        .collect();
+    assert_eq!(fleet, want, "fleet buckets must be the element-wise worker sum");
+    // and the per-worker passthrough is intact for dashboards
+    let per = v.get("per_worker").and_then(Value::as_arr).unwrap();
+    assert_eq!(per.len(), 2);
+    for (w, entry) in per.iter().enumerate() {
+        assert_eq!(
+            counts_of(entry, "latency_buckets"),
+            per_worker_counts[w],
+            "worker {w} bucket passthrough drifted"
+        );
+    }
+
+    // sanity on the registry constant the whole contract hangs off
+    assert_eq!(obs::bucketize_us([0, 1, 2]).iter().sum::<u64>(), 3);
+
+    router.shutdown().unwrap();
+    w0.kill();
+    w1.kill();
+}
